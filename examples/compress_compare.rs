@@ -1,0 +1,68 @@
+//! Offline-compression deep dive with the pure-rust pipeline mirror:
+//! runs every method (ReCalKV, ablations, Palu) over the trained weights at
+//! several ranks and prints the per-layer data-aware reconstruction errors,
+//! CKA reordering gains and calibration trajectories — the quantities behind
+//! paper Figure 2 / Table 3, straight from the systems language.
+//!
+//!   cargo run --release --example compress_compare
+
+use recalkv::artifacts::{Manifest, TensorArchive};
+use recalkv::compress::{compress_layer, LayerInputs, MethodCfg};
+use recalkv::linalg::Matrix;
+use recalkv::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let man = Manifest::load("artifacts")?;
+    let model = man.model("tiny-mha")?;
+    let cfg = &model.config;
+    let weights = TensorArchive::load(man.root.join("tiny-mha/weights.rtz"))?;
+    let stats = TensorArchive::load(man.root.join("tiny-mha/stats.rtz"))?;
+    let to_m = |a: &TensorArchive, name: &str| -> Matrix {
+        let t = a.get(name).unwrap();
+        Matrix::from_vec(t.dims[0], t.dims[1], t.f32s.clone())
+    };
+
+    let mut table = Table::new(
+        "Rust-mirror compression comparison (layer 1, data-aware errors)",
+        &["method", "key rank/grp", "value rank", "key err", "value err", "within-CKA Δ", "calib Δ%"],
+    );
+    let l = 1; // layer 1: mid-importance, most interesting spectra
+    let w_q = to_m(&weights, &format!("L{l}.wq"));
+    let w_k = to_m(&weights, &format!("L{l}.wk"));
+    let w_v = to_m(&weights, &format!("L{l}.wv"));
+    let w_o = to_m(&weights, &format!("L{l}.wo"));
+    let m = to_m(&stats, &format!("m{l}"));
+    let x = to_m(&stats, &format!("x_sample{l}"));
+
+    for (key_rank, value_rank) in [(16usize, 32usize), (32, 64), (64, 128)] {
+        for method in ["palu", "recal_none", "recal_nohsr", "recal_nocal", "recal"] {
+            let inp = LayerInputs {
+                w_q: &w_q, w_k: &w_k, w_v: &w_v, w_o: &w_o, m: &m, x_sample: &x,
+                n_heads: cfg.n_heads, n_kv_heads: cfg.n_kv_heads, d_head: cfg.d_head,
+                group_size: 4, key_rank, value_rank,
+            };
+            let out = compress_layer(&inp, MethodCfg::from_name(method).unwrap())?;
+            let calib_gain = if out.value_error_pre > 0.0 {
+                100.0 * (out.value_error_pre - out.value_error_post) / out.value_error_pre
+            } else {
+                0.0
+            };
+            table.row(vec![
+                method.into(),
+                format!("{key_rank}"),
+                format!("{value_rank}"),
+                format!("{:.4e}", out.key_error),
+                format!("{:.4e}", out.value_error_post),
+                format!("{:+.3}", out.within_sim_after - out.within_sim_before),
+                format!("{calib_gain:.1}%"),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\nreading the table: HSR shows up as lower *key err* vs recal_nohsr;\n\
+         calibration as lower *value err* vs recal_nocal (calib Δ%% > 0);\n\
+         whitening as recal_none beating palu on key err at equal ranks."
+    );
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! ReCalKV × quantization (paper §4.4 / Table 4): serve the same workload
+//! with the latent cache stored fp32, int4 and int3 (per-token, randomized
+//! Hadamard) and report quality + memory together. The compression ratios
+//! compose multiplicatively: low-rank removes dims, quantization removes
+//! bits.
+//!
+//!   cargo run --release --example quant_integration
+
+use recalkv::artifacts::Manifest;
+use recalkv::coordinator::{tokenizer, Engine, EngineConfig, GenRequest};
+use recalkv::eval::harness;
+use recalkv::eval::tasks;
+use recalkv::quant::QuantKind;
+use recalkv::runtime::Runtime;
+use recalkv::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let man = Manifest::load("artifacts")?;
+    let rt = Runtime::cpu()?;
+    let model = man.model("tiny-mha")?;
+    let full_bpt = 2 * model.config.kv_dim() * model.config.n_layers * 4;
+
+    let mut t = Table::new(
+        "ReCalKV + per-token cache quantization (engine path)",
+        &["variant", "bits", "bytes/token", "vs fp32 full", "wiki ppl↓", "needle acc↑"],
+    );
+    for vname in ["full", "recal@50", "recal@70"] {
+        let variant = model.variant(vname)?;
+        for quant in [QuantKind::F32, QuantKind::Int4, QuantKind::Int3] {
+            if vname == "full" && quant != QuantKind::F32 {
+                continue; // quantize only the compressed latents, like the paper
+            }
+            let ecfg = EngineConfig { quant, ..Default::default() };
+            // perplexity through the quantized cache
+            let mut engine = Engine::new(&rt, model, variant, ecfg.clone())?;
+            let toks = tasks::ppl_split("wiki", man.eval.corpus_seed, 8 * 256);
+            let ppl = harness::ppl_from_engine(&mut engine, &toks, 256, 8)?;
+            let bpt = engine.cache.config.bytes_per_token();
+            // retrieval through the quantized cache
+            let mut engine = Engine::new(&rt, model, variant, ecfg)?;
+            let insts = tasks::gen_long("needle", man.eval.corpus_seed, 8, 200);
+            for (i, inst) in insts.iter().enumerate() {
+                engine.submit(GenRequest::new(i as u64, tokenizer::encode(&inst.prompt), 6));
+            }
+            let res = engine.run_to_completion()?;
+            let acc = insts
+                .iter()
+                .zip(&res)
+                .filter(|(inst, r)| r.text.starts_with(&inst.expected))
+                .count();
+            t.row(vec![
+                vname.into(),
+                format!("{}", if quant == QuantKind::F32 { 32 } else { quant.bits() }),
+                format!("{bpt}"),
+                format!("{:.1}x", full_bpt as f64 / bpt as f64),
+                format!("{ppl:.3}"),
+                format!("{acc}/8"),
+            ]);
+            t.print_last();
+        }
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,353 @@
+"""AOT build: train → compress → lower → artifacts/ (runs once, build time).
+
+Produces everything the rust runtime needs, then python exits the picture:
+
+  artifacts/manifest.json                      models, variants, graphs, eval cfg
+  artifacts/<model>/weights.rtz                trained full-model weights
+  artifacts/<model>/stats.rtz                  calibration second moments
+  artifacts/<model>/goldens.rtz                cross-language test vectors
+  artifacts/<model>/<variant>/factors.rtz      compressed params
+  artifacts/<model>/<variant>/{score,prefill,decode}.hlo.txt
+
+Interchange is HLO *text* — jax ≥ 0.5 serialized HloModuleProto uses 64-bit
+instruction ids which xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data
+from .compress import fisher as fisher_mod
+from .compress import pipeline
+from .kernels import ref
+from .model import (MODELS, CompressionSpec, ModelConfig, decode_compressed,
+                    decode_full, forward_compressed, forward_full,
+                    prefill_compressed, prefill_full)
+from .tio import load_rtz, save_rtz
+from .train import train
+
+# Graph shapes (fixed at lowering; recorded in the manifest).
+SCORE_BATCH, SCORE_SEQ = 4, 256
+PREFILL_BATCH, PREFILL_SEQ = 4, 512
+DECODE_BATCH, CACHE_LEN = 4, 512
+
+RATIOS = (0.5, 0.6, 0.7, 0.9)
+ABLATION_RATIO = 0.8
+ABLATIONS = ("recal_none", "recal_nohsr", "recal_nocal", "recal")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True: with weights as arguments the only sizable
+    # constants left are small tables (RoPE inverse frequencies, f32[16]),
+    # which must survive the text round-trip.
+    return comp.as_hlo_text(True)
+
+
+def param_struct(params) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Weights are *graph arguments* (uploaded once as resident PjRtBuffers
+    by the rust runtime), not closure constants: as_hlo_text elides large
+    constants by default and printing them would bloat HLO text by ~40 MB per
+    graph. jax flattens dicts in sorted-key order, which matches the sorted
+    .rtz archive order the rust loader uses."""
+    return {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in params.items()}
+
+
+def _write(path: str, text: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def lower_full_graphs(params, cfg: ModelConfig, outdir: str,
+                      shapes) -> Dict[str, str]:
+    """Lower score/prefill/decode for the uncompressed baseline."""
+    sb, ss, pb, ps, db, cl = shapes
+    tok_s = jax.ShapeDtypeStruct((sb, ss), jnp.int32)
+    tok_p = jax.ShapeDtypeStruct((pb, ps), jnp.int32)
+    len_p = jax.ShapeDtypeStruct((pb,), jnp.int32)
+    tok_d = jax.ShapeDtypeStruct((db,), jnp.int32)
+    len_d = jax.ShapeDtypeStruct((db,), jnp.int32)
+    kcache = [jax.ShapeDtypeStruct((db, cl, cfg.n_kv_heads, cfg.d_head), jnp.float32)
+              for _ in range(cfg.n_layers)]
+    vcache = [jax.ShapeDtypeStruct((db, cl, cfg.n_kv_heads, cfg.d_head), jnp.float32)
+              for _ in range(cfg.n_layers)]
+
+    graphs = {}
+    ps = param_struct(params)
+
+    def score(p, tokens):
+        return (forward_full(p, cfg, tokens),)
+
+    def prefill(p, tokens, length):
+        logits, ks, vs = prefill_full(p, cfg, tokens, length)
+        return (logits, *ks, *vs)
+
+    def decode(p, token, length, *caches):
+        ks = list(caches[:cfg.n_layers])
+        vs = list(caches[cfg.n_layers:])
+        logits, nk, nv = decode_full(p, cfg, token, length, ks, vs)
+        return (logits, *[k.reshape(db, -1) for k in nk],
+                *[v.reshape(db, -1) for v in nv])
+
+    graphs["score"] = to_hlo_text(jax.jit(score).lower(ps, tok_s))
+    graphs["prefill"] = to_hlo_text(jax.jit(prefill).lower(ps, tok_p, len_p))
+    graphs["decode"] = to_hlo_text(jax.jit(decode).lower(ps, tok_d, len_d, *kcache, *vcache))
+    out = {}
+    for name, text in graphs.items():
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        _write(path, text)
+        out[name] = path
+    return out
+
+
+def lower_compressed_graphs(params, spec: CompressionSpec, cfg: ModelConfig,
+                            outdir: str, shapes) -> Dict[str, str]:
+    sb, ss, pb, ps, db, cl = shapes
+    g = spec.n_groups(cfg)
+    tok_s = jax.ShapeDtypeStruct((sb, ss), jnp.int32)
+    tok_p = jax.ShapeDtypeStruct((pb, ps), jnp.int32)
+    len_p = jax.ShapeDtypeStruct((pb,), jnp.int32)
+    tok_d = jax.ShapeDtypeStruct((db,), jnp.int32)
+    len_d = jax.ShapeDtypeStruct((db,), jnp.int32)
+    zk = [jax.ShapeDtypeStruct((db, cl, g, spec.key_ranks[l]), jnp.float32)
+          for l in range(cfg.n_layers)]
+    zv = [jax.ShapeDtypeStruct((db, cl, spec.value_ranks[l]), jnp.float32)
+          for l in range(cfg.n_layers)]
+
+    ps = param_struct(params)
+
+    def score(p, tokens):
+        return (forward_compressed(p, spec, cfg, tokens),)
+
+    def prefill(p, tokens, length):
+        logits, zks, zvs = prefill_compressed(p, spec, cfg, tokens, length)
+        return (logits, *zks, *zvs)
+
+    def decode(p, token, length, *caches):
+        zks = list(caches[:cfg.n_layers])
+        zvs = list(caches[cfg.n_layers:])
+        logits, nzk, nzv = decode_compressed(p, spec, cfg, token, length,
+                                             zks, zvs, use_pallas=True)
+        return (logits, *nzk, *nzv)
+
+    graphs = {
+        "score": to_hlo_text(jax.jit(score).lower(ps, tok_s)),
+        "prefill": to_hlo_text(jax.jit(prefill).lower(ps, tok_p, len_p)),
+        "decode": to_hlo_text(jax.jit(decode).lower(ps, tok_d, len_d, *zk, *zv)),
+    }
+    out = {}
+    for name, text in graphs.items():
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        _write(path, text)
+        out[name] = path
+    return out
+
+
+def make_goldens(params, cfg: ModelConfig, stats, comp_params, spec,
+                 diag) -> Dict[str, np.ndarray]:
+    """Cross-language test vectors asserted by rust/tests/golden_crosscheck.rs."""
+    g: Dict[str, np.ndarray] = {}
+    rng = np.random.default_rng(1234)
+    # score-path golden: logits for a fixed token batch (full + compressed)
+    toks = rng.integers(32, 127, (2, 64)).astype(np.int32)
+    g["score.tokens"] = toks
+    g["score.full_logits"] = np.asarray(forward_full(params, cfg, jnp.asarray(toks)))
+    g["score.comp_logits"] = np.asarray(
+        forward_compressed(comp_params, spec, cfg, jnp.asarray(toks)))
+    # layer-0 compression golden (rust mirror recomputes from weights+stats)
+    g["w_k0"] = np.asarray(params["L0.wk"])
+    g["w_v0"] = np.asarray(params["L0.wv"])
+    g["w_o0"] = np.asarray(params["L0.wo"])
+    g["w_q0"] = np.asarray(params["L0.wq"])
+    g["m0"] = stats[0].m
+    g["x_sample0"] = stats[0].x_sample
+    g["cka0"] = diag.cka_before[0]
+    g["perm0"] = np.asarray(diag.kv_perms[0], np.int32)
+    g["Lk0"] = np.asarray(comp_params["L0.Lk"])
+    g["Rk0"] = np.asarray(comp_params["L0.Rk"])
+    g["Lv0"] = np.asarray(comp_params["L0.Lv"])
+    g["wo_fused0"] = np.asarray(comp_params["L0.wo_fused"])
+    g["key_ranks"] = np.asarray(spec.key_ranks, np.int32)
+    g["value_ranks"] = np.asarray(spec.value_ranks, np.int32)
+    # quant goldens (blockwise hadamard + per-token int4/int3)
+    x = rng.standard_normal((16, 48)).astype(np.float32)
+    signs = rng.choice([-1.0, 1.0], 48).astype(np.float32)
+    g["quant.x"] = x
+    g["quant.signs"] = signs
+    from .quant_ref import blockwise_hadamard, quant_pertoken
+    y = blockwise_hadamard(x, signs)
+    g["quant.y"] = y
+    for bits in (4, 3):
+        q, sc = quant_pertoken(y, bits)
+        g[f"quant.q{bits}"] = q.astype(np.int32)
+        g[f"quant.scale{bits}"] = sc
+    return g
+
+
+def build_model(name: str, out: str, steps: int, train_batch: int,
+                train_seq: int, quick: bool) -> Dict:
+    cfg = MODELS[name]
+    mdir = os.path.join(out, name)
+    os.makedirs(mdir, exist_ok=True)
+    wpath = os.path.join(mdir, "weights.rtz")
+
+    if os.path.exists(wpath):
+        print(f"[aot] {name}: cached weights found, skipping training")
+        params = {k: jnp.asarray(v) for k, v in load_rtz(wpath).items()}
+        history = {}
+    else:
+        params, history = train(cfg, steps=steps, batch=train_batch, seq=train_seq)
+        save_rtz(wpath, {k: np.asarray(v) for k, v in params.items()})
+        with open(os.path.join(mdir, "train_history.json"), "w") as f:
+            json.dump(history, f)
+
+    # calibration stats + fisher (paper: 256 wikitext-2 samples)
+    n_cal = 4 if quick else 16
+    cal = data.calibration_batch(seed=42, n_seqs=n_cal * 8, seq_len=256)
+    cal_batches = [np.asarray(cal[i * 8:(i + 1) * 8], np.int32) for i in range(n_cal)]
+    print(f"[aot] {name}: collecting calibration stats ({n_cal} batches)")
+    stats = pipeline.collect_stats(params, cfg, cal_batches)
+    fisher_scores = fisher_mod.fisher_info(params, cfg, cal_batches[:max(2, n_cal // 2)])
+    save_rtz(os.path.join(mdir, "stats.rtz"),
+             {f"m{l}": stats[l].m for l in range(cfg.n_layers)} |
+             {f"x_sample{l}": stats[l].x_sample for l in range(cfg.n_layers)} |
+             {"fisher_k": np.asarray([fisher_scores[f"L{l}.wk"] for l in range(cfg.n_layers)], np.float32),
+              "fisher_v": np.asarray([fisher_scores[f"L{l}.wv"] for l in range(cfg.n_layers)], np.float32)})
+
+    shapes = (SCORE_BATCH, SCORE_SEQ, PREFILL_BATCH, PREFILL_SEQ,
+              DECODE_BATCH, CACHE_LEN)
+
+    variants: Dict[str, Dict] = {}
+    t0 = time.time()
+    print(f"[aot] {name}: lowering full graphs")
+    graphs = lower_full_graphs(params, cfg, os.path.join(mdir, "full"), shapes)
+    variants["full"] = {
+        "kind": "full",
+        "weights": os.path.relpath(wpath, out),
+        "weight_order": sorted(params.keys()),
+        "graphs": {k: os.path.relpath(v, out) for k, v in graphs.items()},
+    }
+
+    jobs: List = []
+    if quick:
+        jobs = [("recal", 0.5), ("palu", 0.5)]
+    else:
+        for ratio in RATIOS:
+            jobs += [("palu", ratio), ("recal", ratio)]
+        if name == "tiny-mha":
+            jobs += [(m, ABLATION_RATIO) for m in ABLATIONS]
+
+    golden_saved = False
+    for method, ratio in jobs:
+        vname = f"{method}@{int(ratio * 100)}"
+        vdir = os.path.join(mdir, vname)
+        print(f"[aot] {name}/{vname}: compressing ({time.time()-t0:.0f}s)")
+        comp, spec, diag = pipeline.build_variant(
+            params, cfg, method, ratio, stats, fisher_scores)
+        save_rtz(_ensure(vdir, "factors.rtz"),
+                 {k: np.asarray(v) for k, v in comp.items()})
+        print(f"[aot] {name}/{vname}: lowering graphs")
+        graphs = lower_compressed_graphs(comp, spec, cfg, vdir, shapes)
+        variants[vname] = {
+            "kind": "compressed",
+            "weights": os.path.relpath(os.path.join(vdir, "factors.rtz"), out),
+            "weight_order": sorted(comp.keys()),
+            "method": method, "ratio": ratio,
+            "group_size": spec.group_size,
+            "key_ranks": list(spec.key_ranks),
+            "value_ranks": list(spec.value_ranks),
+            "kv_perms": [list(p) for p in spec.kv_perms],
+            "achieved_ratio": fisher_mod.achieved_ratio(
+                list(spec.key_ranks), list(spec.value_ranks), cfg, spec.group_size),
+            "within_sim_before": diag.within_sim_before,
+            "within_sim_after": diag.within_sim_after,
+            "key_errors": diag.key_errors,
+            "value_errors_pre": diag.value_errors_pre,
+            "value_errors_post": diag.value_errors_post,
+            "graphs": {k: os.path.relpath(v, out) for k, v in graphs.items()},
+        }
+        if method == "recal" and not golden_saved:
+            print(f"[aot] {name}: writing goldens")
+            save_rtz(os.path.join(mdir, "goldens.rtz"),
+                     make_goldens(params, cfg, stats, comp, spec, diag))
+            # CKA matrices for Figure 2
+            save_rtz(os.path.join(mdir, "cka_fig2.rtz"),
+                     {f"before{l}": diag.cka_before[l] for l in range(cfg.n_layers)} |
+                     {f"after{l}": diag.cka_after[l] for l in range(cfg.n_layers)} |
+                     {f"perm{l}": np.asarray(diag.kv_perms[l], np.int32)
+                      for l in range(cfg.n_layers)})
+            golden_saved = True
+
+    return {
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "n_kv_heads": cfg.n_kv_heads,
+            "d_head": cfg.d_head, "d_ff": cfg.d_ff, "max_seq": cfg.max_seq,
+            "rope_theta": cfg.rope_theta,
+        },
+        "shapes": {
+            "score_batch": SCORE_BATCH, "score_seq": SCORE_SEQ,
+            "prefill_batch": PREFILL_BATCH, "prefill_seq": PREFILL_SEQ,
+            "decode_batch": DECODE_BATCH, "cache_len": CACHE_LEN,
+        },
+        "variants": variants,
+    }
+
+
+def _ensure(d: str, fname: str) -> str:
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, fname)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="ReCalKV AOT artifact builder")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="tiny-mha,tiny-gqa")
+    ap.add_argument("--steps", type=int, default=500)
+    ap.add_argument("--train-batch", type=int, default=8)
+    ap.add_argument("--train-seq", type=int, default=256)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny run for CI: few steps, 2 variants")
+    args = ap.parse_args()
+    if args.quick:
+        args.steps = min(args.steps, 30)
+
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+    manifest = {
+        "format": 1,
+        "eval": {
+            "corpus_seed": 42,
+            "ppl_tokens": 4096 if args.quick else 16384,
+            "mc_per_task": 16 if args.quick else 100,
+            "long_per_task": 4 if args.quick else 16,
+            "long_ctx_chars": 200,
+            "long_gen_tokens": 12,
+            "quant_signs_seed": 977,
+        },
+        "models": {},
+    }
+    for name in args.models.split(","):
+        manifest["models"][name] = build_model(
+            name, out, args.steps, args.train_batch, args.train_seq, args.quick)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

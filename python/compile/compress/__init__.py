@@ -1,0 +1,1 @@
+"""Offline ReCalKV compression pipeline (paper Algorithm 1) + Palu baseline."""

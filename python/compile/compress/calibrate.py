@@ -1,0 +1,56 @@
+"""Offline Calibration (paper §3.3, Eq. 6-8).
+
+Alternating closed-form refinement of the value factors L_v, R_v under the
+calibration-data metric E = Σ_x ||x(W - L R)||² = tr((W-LR)ᵀ M (W-LR)) with
+M = XᵀX:
+
+  R-step (Eq. 8, data-aware normal equations):
+      R ← (Lᵀ M L + εI)⁻¹ Lᵀ M W
+  L-step (Eq. 7; the M-dependence cancels when M ≻ 0):
+      L ← W Rᵀ (R Rᵀ + εI)⁻¹
+
+Each step is the exact minimizer of E in its argument, so E is monotonically
+non-increasing — asserted in python/tests/test_calibrate.py and mirrored by
+rust/tests/compress_tests.rs. Iteration stops after `max_iters` or when the
+relative improvement drops below `tol`.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from .svd import recon_error
+
+
+def _ridge_solve(a: np.ndarray, b: np.ndarray, eps_scale: float = 1e-8) -> np.ndarray:
+    """Solve (A + εI) X = B with a trace-scaled ridge for stability."""
+    d = a.shape[0]
+    eps = eps_scale * float(np.trace(a)) / d + 1e-12
+    return np.linalg.solve(a + eps * np.eye(d, dtype=a.dtype), b)
+
+
+def calibrate(w: np.ndarray, l: np.ndarray, r: np.ndarray, m: np.ndarray,
+              max_iters: int = 8, tol: float = 1e-6
+              ) -> Tuple[np.ndarray, np.ndarray, list]:
+    """Refine (L, R) to locally minimize the calibration error (Eq. 6).
+
+    Returns (L', R', history) where history[i] is E after iteration i
+    (history[0] is the pre-calibration error).
+    """
+    err = recon_error(w, l, r, m)
+    history = [err]
+    for _ in range(max_iters):
+        # R-step (Eq. 8): (Lᵀ M L) R = Lᵀ M W
+        lm = l.T @ m
+        r = _ridge_solve(lm @ l, lm @ w)
+        # L-step (Eq. 7): L (R Rᵀ) = W Rᵀ  ⇒ solve on the transposed system
+        rrt = r @ r.T
+        l = _ridge_solve(rrt, r @ w.T).T
+        new_err = recon_error(w, l, r, m)
+        history.append(new_err)
+        if err - new_err <= tol * max(err, 1e-30):
+            break
+        err = new_err
+    return l, r, history

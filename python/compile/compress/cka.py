@@ -1,0 +1,54 @@
+"""Centered Kernel Alignment head-similarity (paper §3.1 Eq. 2-3, §3.2 Eq. 5).
+
+For the linear kernel, HSIC(X, Y) = ||Y_cᵀ X_c||_F² with column-centered
+X_c, Y_c — algebraically identical to Tr(G̃_X G̃_Y) of Eq. 2-3 but O(n·d²)
+instead of O(n²) memory, which matters for thousands of calibration tokens.
+A small-n test asserts equality against the explicit Gram form.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def hsic_linear(x: np.ndarray, y: np.ndarray) -> float:
+    """HSIC with linear kernels; x [n,d1], y [n,d2] (same n)."""
+    xc = x - x.mean(axis=0, keepdims=True)
+    yc = y - y.mean(axis=0, keepdims=True)
+    c = yc.T @ xc
+    return float(np.sum(c * c))
+
+
+def hsic_gram(x: np.ndarray, y: np.ndarray) -> float:
+    """Explicit Gram-matrix HSIC (Eq. 2-3) — O(n²), used only in tests."""
+    n = x.shape[0]
+    h = np.eye(n) - np.ones((n, n)) / n
+    gx = h @ (x @ x.T) @ h
+    gy = h @ (y @ y.T) @ h
+    return float(np.trace(gx @ gy))
+
+
+def cka(x: np.ndarray, y: np.ndarray) -> float:
+    """CKA(X, Y) ∈ [0, 1] (Eq. 3)."""
+    hxy = hsic_linear(x, y)
+    hxx = hsic_linear(x, x)
+    hyy = hsic_linear(y, y)
+    denom = np.sqrt(hxx * hyy)
+    return hxy / denom if denom > 0 else 0.0
+
+
+def head_similarity_matrix(x: np.ndarray, w_k: np.ndarray, n_heads: int) -> np.ndarray:
+    """Pairwise CKA between key-head representations (Eq. 5).
+
+    x [N, d] calibration activations (inputs to the key projection);
+    w_k [d, n_heads*dh]. Head i's representation H_i = x @ w_k[:, i-th block].
+    Returns the symmetric S ∈ [0,1]^{h×h}.
+    """
+    dh = w_k.shape[1] // n_heads
+    heads = [x @ w_k[:, i * dh:(i + 1) * dh] for i in range(n_heads)]
+    s = np.eye(n_heads)
+    for i in range(n_heads):
+        for j in range(i + 1, n_heads):
+            v = cka(heads[i], heads[j])
+            s[i, j] = s[j, i] = v
+    return s

@@ -1,0 +1,115 @@
+"""Fisher information + compression-ratio allocation (paper Alg. 1 l.4-5).
+
+The empirical Fisher information of a projection matrix is the sum of squared
+loss gradients over the calibration set, F(W) = Σ_batch ||∂L/∂W||² — the
+importance proxy both Palu and ReCalKV use to allocate per-layer ranks, and
+the quantity behind the paper's §1 observation that Fisher(W_v) ≫ Fisher(W_k)
+(reproduced by `repro tables --figure fisher`).
+
+Allocation: the target ratio ρ fixes a per-token float budget
+B = (1-ρ) · Σ_l 2·kv_dim. Layer/matrix weights are F^τ (τ=0.5 damping);
+each matrix gets budget B·w/Σw, clamped to [r_min, full] and rounded to a
+multiple of 4, then a redistribution pass nudges ranks until the achieved
+ratio is within half a rounding step of the target.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..model import ModelConfig, Params, loss_full
+
+R_MIN = 4
+R_STEP = 4
+
+
+def fisher_info(params: Params, cfg: ModelConfig,
+                batches: List[np.ndarray]) -> Dict[str, float]:
+    """Empirical Fisher of every K/V projection: {"L{l}.wk": F, "L{l}.wv": F}."""
+    grad_fn = jax.jit(jax.grad(lambda p, t: loss_full(p, cfg, t)))
+    acc: Dict[str, float] = {}
+    for toks in batches:
+        g = grad_fn(params, jnp.asarray(toks, jnp.int32))
+        for l in range(cfg.n_layers):
+            for mat in ("wk", "wv"):
+                key = f"L{l}.{mat}"
+                val = float(jnp.sum(jnp.square(g[key])))
+                acc[key] = acc.get(key, 0.0) + val
+    return acc
+
+
+def _round_clamp(r: float, full: int) -> int:
+    ri = int(round(r / R_STEP)) * R_STEP
+    return max(R_MIN, min(full, ri))
+
+
+def allocate_ranks(fisher: Dict[str, float], cfg: ModelConfig, ratio: float,
+                   group_size: int, tau: float = 0.5
+                   ) -> Tuple[List[int], List[int]]:
+    """Distribute the (1-ρ) budget across layers/matrices by damped Fisher.
+
+    Returns (key_ranks per layer — rank PER GROUP — and value_ranks per
+    layer). Per-token cache cost of layer l is g·rk_l + rv_l; the full cost
+    is 2·kv_dim per layer.
+    """
+    n = cfg.kv_dim
+    g = cfg.n_kv_heads // group_size
+    # Keys and Values each keep a (1-ρ) share of their own axis; Fisher
+    # weights distribute it across *layers* (paper Alg. 1 l.5 allocates
+    # per-layer ratios). A joint K/V pool would starve Keys completely —
+    # Fisher(W_v) ≫ Fisher(W_k) (paper §1 analysis, reproduced in
+    # `repro tables --figure fisher`) — and break attention structure.
+    budget_k = (1.0 - ratio) * cfg.n_layers * n
+    budget_v = (1.0 - ratio) * cfg.n_layers * n
+    budget = budget_k + budget_v
+    w_k = np.array([fisher[f"L{l}.wk"] ** tau for l in range(cfg.n_layers)])
+    w_v = np.array([fisher[f"L{l}.wv"] ** tau for l in range(cfg.n_layers)])
+    key_ranks = [_round_clamp(budget_k * w_k[l] / w_k.sum() / g, group_size * cfg.d_head)
+                 for l in range(cfg.n_layers)]
+    value_ranks = [_round_clamp(budget_v * w_v[l] / w_v.sum(), n)
+                   for l in range(cfg.n_layers)]
+
+    def cost() -> float:
+        return sum(g * key_ranks[l] + value_ranks[l] for l in range(cfg.n_layers))
+
+    # Redistribution: nudge the matrix with the best (worst) Fisher-per-float
+    # until the achieved budget matches the target within one step.
+    guard = 0
+    while cost() > budget + R_STEP * g / 2 and guard < 1000:
+        # shrink the least-important shrinkable matrix
+        cands = [(w_k[l], "k", l) for l in range(cfg.n_layers) if key_ranks[l] > R_MIN]
+        cands += [(w_v[l], "v", l) for l in range(cfg.n_layers) if value_ranks[l] > R_MIN]
+        if not cands:
+            break
+        _, kind, l = min(cands)
+        if kind == "k":
+            key_ranks[l] -= R_STEP
+        else:
+            value_ranks[l] -= R_STEP
+        guard += 1
+    while cost() < budget - R_STEP * g / 2 and guard < 2000:
+        cands = [(w_k[l], "k", l) for l in range(cfg.n_layers)
+                 if key_ranks[l] + R_STEP <= group_size * cfg.d_head]
+        cands += [(w_v[l], "v", l) for l in range(cfg.n_layers)
+                  if value_ranks[l] + R_STEP <= n]
+        if not cands:
+            break
+        _, kind, l = max(cands)
+        if kind == "k":
+            key_ranks[l] += R_STEP
+        else:
+            value_ranks[l] += R_STEP
+        guard += 1
+    return key_ranks, value_ranks
+
+
+def achieved_ratio(key_ranks: List[int], value_ranks: List[int],
+                   cfg: ModelConfig, group_size: int) -> float:
+    """Fraction of per-token KV cache floats removed (the paper's RATIO)."""
+    g = cfg.n_kv_heads // group_size
+    kept = sum(g * rk + rv for rk, rv in zip(key_ranks, value_ranks))
+    return 1.0 - kept / (cfg.n_layers * 2 * cfg.kv_dim)

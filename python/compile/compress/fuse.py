@@ -1,0 +1,75 @@
+"""Matrix Fusion (paper §3.3, Eq. 9-11): fold R_v into the output projection.
+
+With value latents z_v = x L_v shared across heads, the per-head attention
+output is the rank-r_v context c_h = Σ_s p_{h,s} z_v[s]. The uncompressed
+output would be Σ_h (c_h R_v^{(kv(h))}) W_o^{(h)}; fusing gives
+
+    W̃_o[h·r_v block h] = R_v[:, kv(h)·dh : (kv(h)+1)·dh] @ W_o[h·dh block h]
+
+so runtime computes concat_h(c_h) @ W̃_o directly — no reconstruction, no
+extra matmul, which is the paper's "no additional computational overhead"
+claim for the value path.
+
+Head reordering (HSR) is folded here too: the fused W̃_o's row blocks (and
+W_q's column blocks) are laid out in the *reordered* q-head order, which is
+exactly the inverse-reordering of paper Fig. 3 applied at compress time.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+def q_head_order(kv_perm: Sequence[int], n_heads: int, n_kv_heads: int) -> List[int]:
+    """Expand a kv-head permutation to the q-head permutation it induces.
+
+    q-head i belongs to kv-head i // rep (rep = h/kvh); reordered q slot
+    t = p·rep + j maps to original q head kv_perm[p]·rep + j.
+    """
+    rep = n_heads // n_kv_heads
+    return [kv_perm[p] * rep + j for p in range(n_kv_heads) for j in range(rep)]
+
+
+def permute_wq(w_q: np.ndarray, q_order: Sequence[int], d_head: int) -> np.ndarray:
+    """Reorder W_q's head column-blocks into the reordered q layout."""
+    blocks = [w_q[:, i * d_head:(i + 1) * d_head] for i in q_order]
+    return np.concatenate(blocks, axis=1)
+
+
+def fuse_output_blocks(p_heads: Sequence[np.ndarray], w_o: np.ndarray,
+                       q_order: Sequence[int], d_head: int) -> np.ndarray:
+    """Generic fusion: p_heads[i] ∈ R^{rv×dh} maps the flat value latent to
+    original q-head i's value vector (full-SVD: a column slice of R_v;
+    grouped-SVD: block-sparse). Returns W̃_o [h·rv, d] with row blocks in
+    reordered q order."""
+    rv = p_heads[0].shape[0]
+    d = w_o.shape[1]
+    n_heads = len(q_order)
+    out = np.empty((n_heads * rv, d), dtype=w_o.dtype)
+    for t, i in enumerate(q_order):
+        wo_blk = w_o[i * d_head:(i + 1) * d_head, :]
+        out[t * rv:(t + 1) * rv, :] = p_heads[i] @ wo_blk
+    return out
+
+
+def fuse_output(r_v: np.ndarray, w_o: np.ndarray, q_order: Sequence[int],
+                d_head: int, n_kv_heads: int, n_heads: int) -> np.ndarray:
+    """Build W̃_o ∈ R^{h·r_v × d} with row blocks in reordered q order.
+
+    r_v [rv, kvh·dh] — the calibrated right value factor;
+    w_o [h·dh, d]    — original output projection.
+    Block for reordered slot t (original q head i = q_order[t]):
+        R_v[:, kv(i)·dh:(kv(i)+1)·dh] @ W_o[i·dh:(i+1)·dh, :]
+    """
+    rep = n_heads // n_kv_heads
+    rv = r_v.shape[0]
+    d = w_o.shape[1]
+    out = np.empty((n_heads * rv, d), dtype=w_o.dtype)
+    for t, i in enumerate(q_order):
+        kv = i // rep
+        rv_blk = r_v[:, kv * d_head:(kv + 1) * d_head]        # [rv, dh]
+        wo_blk = w_o[i * d_head:(i + 1) * d_head, :]          # [dh, d]
+        out[t * rv:(t + 1) * rv, :] = rv_blk @ wo_blk
+    return out

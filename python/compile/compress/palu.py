@@ -1,0 +1,26 @@
+"""Palu G-LRD baseline (Chang et al., 2024) — the paper's comparator.
+
+Differences from ReCalKV, per the two papers:
+
+  | axis                | Palu G-LRD            | ReCalKV                      |
+  |---------------------|-----------------------|------------------------------|
+  | key decomposition   | grouped SVD, identity | grouped SVD over CKA-reordered
+  |                     | head order            | heads (HSR)                  |
+  | whitening           | none                  | SVD-LLM whitening (keys)     |
+  | value decomposition | grouped SVD (size 4)  | full-matrix SVD              |
+  | value calibration   | none                  | offline alternating LS (OCMF)|
+  | rank allocation     | Fisher-guided         | Fisher-guided (same)         |
+  | output fusion       | R_v folded into W_o   | R_v folded into W_o (same)   |
+
+Both methods share every substrate in this repo (allocation, fusion, runtime
+layout), so measured gaps isolate the paper's two contributions. The grouped
+value factors are laid out as one flat latent of dim r_v with a block-sparse
+fused W̃_o, so Palu variants run through the identical decode graph — no
+runtime advantage or penalty for either method (see DESIGN.md §6).
+"""
+
+# The implementation lives in pipeline.py (build_variant with method="palu");
+# this module documents the mapping and pins the constants.
+
+GROUP_SIZE_MHA = 4  # kv-heads per group for the 8-kv-head MHA model
+GROUP_SIZE_GQA = 2  # for the 4-kv-head GQA model (2 groups, like the paper's 4-of-32)

@@ -1,0 +1,249 @@
+"""End-to-end ReCalKV pipeline (paper Algorithm 1) + baselines/ablations.
+
+    RECALKV(M, X, TR):
+      F  ← Fisher info on calibration data            (fisher.py)
+      R  ← allocate per-layer ranks from F and TR     (fisher.py)
+      for each key projection W_k:
+          S    ← CKA head similarity                  (cka.py)
+          W_k' ← head reorder                         (reorder.py)
+          L,R  ← grouped (whitened) SVD               (svd.py)
+      for each value projection W_v:
+          L,R  ← SVD                                  (svd.py)
+          L,R  ← offline calibration                  (calibrate.py)
+          W̃_o  ← matrix fusion R_v → W_o              (fuse.py)
+
+Methods (ablation axes of paper Table 3):
+  recal        HSR ✓   calibration ✓       (the paper's method)
+  recal_nohsr  HSR ✗   calibration ✓
+  recal_nocal  HSR ✓   calibration ✗
+  recal_none   HSR ✗   calibration ✗
+  palu         Palu G-LRD baseline (plain grouped SVD both K and V,
+               identity order, no whitening, no calibration)
+
+Output params use the compressed layout documented in model.py; the head
+reordering is folded into W_q / W̃_o / factor layout here, at compress time
+("inverse reordering" of Fig. 3), so the runtime never gathers heads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..model import CompressionSpec, ModelConfig, Params, rmsnorm
+from . import calibrate as cal
+from . import cka, fisher, fuse, reorder, svd
+
+
+@dataclasses.dataclass
+class LayerStats:
+    """Calibration statistics for one layer's attention input."""
+    m: np.ndarray        # second moment XᵀX [d, d]
+    x_sample: np.ndarray  # row sample of X for CKA [N, d]
+
+
+@dataclasses.dataclass
+class Diagnostics:
+    """Per-layer diagnostics for figures, goldens and EXPERIMENTS.md."""
+    cka_before: List[np.ndarray]
+    cka_after: List[np.ndarray]
+    kv_perms: List[List[int]]
+    within_sim_before: List[float]
+    within_sim_after: List[float]
+    key_errors: List[float]           # data-aware recon error of W_k
+    value_errors_pre: List[float]     # before calibration
+    value_errors_post: List[float]    # after calibration
+    calib_histories: List[List[float]]
+
+
+def collect_stats(params: Params, cfg: ModelConfig,
+                  batches: List[np.ndarray], sample_rows: int = 512
+                  ) -> List[LayerStats]:
+    """Run the full model over calibration batches, accumulating per-layer
+    M = XᵀX of the attention-input activations (post-ln1) and a row sample."""
+
+    @jax.jit
+    def layer_inputs(p, tokens):
+        b, s_len = tokens.shape
+        x = p["embed"][tokens]
+        from ..model import forward_full  # noqa: F401 (structure mirror)
+        from ..kernels import ref
+        from ..model import rope_tables, _swiglu
+        cos, sin = rope_tables(cfg, s_len)
+        causal = jnp.tril(jnp.ones((s_len, s_len), bool))
+        rep = cfg.n_heads // cfg.n_kv_heads
+        xs = []
+        for l in range(cfg.n_layers):
+            xn = rmsnorm(x, p[f"L{l}.ln1"])
+            xs.append(xn.reshape(-1, cfg.d_model))
+            q = (xn @ p[f"L{l}.wq"]).reshape(b, s_len, cfg.n_heads, cfg.d_head)
+            k = (xn @ p[f"L{l}.wk"]).reshape(b, s_len, cfg.n_kv_heads, cfg.d_head)
+            v = (xn @ p[f"L{l}.wv"]).reshape(b, s_len, cfg.n_kv_heads, cfg.d_head)
+            q = ref.rope_rotate(q, cos[None, :, None, :], sin[None, :, None, :])
+            k = ref.rope_rotate(k, cos[None, :, None, :], sin[None, :, None, :])
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+            sc = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(jnp.float32(cfg.d_head))
+            sc = jnp.where(causal[None, None], sc, -1e30)
+            pr = jax.nn.softmax(sc, axis=-1)
+            ctx = jnp.einsum("bhts,bshd->bthd", pr, v).reshape(b, s_len, cfg.q_dim)
+            x = x + ctx @ p[f"L{l}.wo"]
+            x = x + _swiglu(p, l, rmsnorm(x, p[f"L{l}.ln2"]))
+        return xs
+
+    ms = [np.zeros((cfg.d_model, cfg.d_model), np.float64) for _ in range(cfg.n_layers)]
+    samples: List[List[np.ndarray]] = [[] for _ in range(cfg.n_layers)]
+    rows_kept = [0] * cfg.n_layers
+    for toks in batches:
+        xs = layer_inputs(params, jnp.asarray(toks, jnp.int32))
+        for l, xl in enumerate(xs):
+            xl = np.asarray(xl, np.float64)
+            ms[l] += xl.T @ xl
+            if rows_kept[l] < sample_rows:
+                take = min(sample_rows - rows_kept[l], xl.shape[0])
+                samples[l].append(xl[:take].astype(np.float32))
+                rows_kept[l] += take
+    return [LayerStats(m=ms[l].astype(np.float32),
+                       x_sample=np.concatenate(samples[l], axis=0))
+            for l in range(cfg.n_layers)]
+
+
+def default_group_size(cfg: ModelConfig) -> int:
+    """Group size scaling the paper's 4-of-32 to our head counts (2 groups)."""
+    return max(1, cfg.n_kv_heads // 2)
+
+
+def build_variant(params: Params, cfg: ModelConfig, method: str, ratio: float,
+                  stats: List[LayerStats], fisher_scores: Dict[str, float],
+                  group_size: int | None = None
+                  ) -> Tuple[Params, CompressionSpec, Diagnostics]:
+    """Compress `params` with `method` at target `ratio` (Algorithm 1)."""
+    assert method in ("recal", "recal_nohsr", "recal_nocal", "recal_none", "palu")
+    use_hsr = method in ("recal", "recal_nocal")
+    use_cal = method in ("recal", "recal_nohsr")
+    is_palu = method == "palu"
+    use_whiten = not is_palu
+    gs = group_size or default_group_size(cfg)
+    g = cfg.n_kv_heads // gs
+
+    key_ranks, value_ranks = fisher.allocate_ranks(fisher_scores, cfg, ratio, gs)
+    if is_palu:
+        # grouped value factors need rv divisible by the number of V groups
+        value_ranks = [max(g * 4, rv - rv % g) for rv in value_ranks]
+
+    new_params: Dict[str, np.ndarray] = {
+        k: np.asarray(v) for k, v in params.items()
+        if not any(k.endswith(suf) for suf in (".wk", ".wv", ".wo"))
+    }
+    diag = Diagnostics([], [], [], [], [], [], [], [], [])
+    perms: List[Tuple[int, ...]] = []
+
+    for l in range(cfg.n_layers):
+        w_k = np.asarray(params[f"L{l}.wk"], np.float32)
+        w_v = np.asarray(params[f"L{l}.wv"], np.float32)
+        w_o = np.asarray(params[f"L{l}.wo"], np.float32)
+        w_q = np.asarray(params[f"L{l}.wq"], np.float32)
+        m = stats[l].m
+
+        # ----- Keys: HSR + grouped SVD (paper §3.2) -----
+        sim = cka.head_similarity_matrix(stats[l].x_sample, w_k, cfg.n_kv_heads)
+        perm = (reorder.greedy_group_heads(sim, gs) if use_hsr
+                else list(range(cfg.n_kv_heads)))
+        diag.cka_before.append(sim)
+        diag.cka_after.append(sim[np.ix_(perm, perm)])
+        diag.kv_perms.append(perm)
+        diag.within_sim_before.append(
+            reorder.within_group_similarity(sim, list(range(cfg.n_kv_heads)), gs))
+        diag.within_sim_after.append(reorder.within_group_similarity(sim, perm, gs))
+        l_k, r_k = svd.grouped_svd(w_k, perm, gs, key_ranks[l], cfg.d_head,
+                                   m=m if use_whiten else None)
+        # data-aware reconstruction error of the reordered concatenation
+        w_k_perm = np.concatenate(
+            [w_k[:, c * cfg.d_head:(c + 1) * cfg.d_head] for c in perm], axis=1)
+        r_k_flat = _blockdiag(r_k)
+        diag.key_errors.append(svd.recon_error(w_k_perm, l_k, r_k_flat, m))
+
+        # ----- Values: SVD (+ grouped for palu) + calibration (paper §3.3) -----
+        if is_palu:
+            rv_g = value_ranks[l] // g
+            l_v, r_v_groups = svd.grouped_svd(w_v, list(range(cfg.n_kv_heads)),
+                                              gs, rv_g, cfg.d_head, m=None)
+            p_heads = _grouped_value_maps(r_v_groups, cfg, gs, rv_g)
+            w_v_eval = w_v
+            r_v_flat = _grouped_rv_flat(r_v_groups, cfg, gs)
+            diag.value_errors_pre.append(svd.recon_error(w_v_eval, l_v, r_v_flat, m))
+            diag.value_errors_post.append(diag.value_errors_pre[-1])
+            diag.calib_histories.append([])
+        else:
+            l_v, r_v = svd.svd_lowrank(w_v, value_ranks[l])
+            pre = svd.recon_error(w_v, l_v, r_v, m)
+            hist: List[float] = [pre]
+            if use_cal:
+                l_v, r_v, hist = cal.calibrate(w_v, l_v, r_v, m)
+            diag.value_errors_pre.append(pre)
+            diag.value_errors_post.append(hist[-1])
+            diag.calib_histories.append(hist)
+            rep_h = cfg.n_heads // cfg.n_kv_heads
+            p_heads = [r_v[:, (i // rep_h) * cfg.d_head:(i // rep_h + 1) * cfg.d_head]
+                       for i in range(cfg.n_heads)]
+
+        # ----- Fusion + fold reordering into W_q / W̃_o (paper Fig. 3) -----
+        q_order = fuse.q_head_order(perm, cfg.n_heads, cfg.n_kv_heads)
+        new_params[f"L{l}.wq"] = fuse.permute_wq(w_q, q_order, cfg.d_head)
+        new_params[f"L{l}.Lk"] = l_k
+        new_params[f"L{l}.Rk"] = r_k
+        new_params[f"L{l}.Lv"] = l_v
+        new_params[f"L{l}.wo_fused"] = fuse.fuse_output_blocks(
+            p_heads, w_o, q_order, cfg.d_head)
+        perms.append(tuple(perm))
+
+    spec = CompressionSpec(method=method, ratio=ratio, group_size=gs,
+                           key_ranks=tuple(key_ranks),
+                           value_ranks=tuple(value_ranks),
+                           kv_perms=tuple(perms))
+    jp = {k: jnp.asarray(v) for k, v in new_params.items()}
+    return jp, spec, diag
+
+
+def _blockdiag(r_k: np.ndarray) -> np.ndarray:
+    """[g, rk, s·dh] group factors -> block-diagonal [g·rk, g·s·dh]."""
+    g, rk, sdh = r_k.shape
+    out = np.zeros((g * rk, g * sdh), r_k.dtype)
+    for j in range(g):
+        out[j * rk:(j + 1) * rk, j * sdh:(j + 1) * sdh] = r_k[j]
+    return out
+
+
+def _grouped_value_maps(r_v_groups: np.ndarray, cfg: ModelConfig,
+                        group_size: int, rv_g: int) -> List[np.ndarray]:
+    """Per-q-head latent→value maps for grouped value factors (Palu).
+
+    The flat latent concatenates group latents; head i reads only its group's
+    slice, so P_i is block-sparse: zeros except rows of group(kv(i))."""
+    g = cfg.n_kv_heads // group_size
+    rv_total = g * rv_g
+    rep = cfg.n_heads // cfg.n_kv_heads
+    maps: List[np.ndarray] = []
+    for i in range(cfg.n_heads):
+        kv = i // rep
+        gj = kv // group_size
+        pos = kv % group_size
+        p = np.zeros((rv_total, cfg.d_head), np.float32)
+        p[gj * rv_g:(gj + 1) * rv_g, :] = \
+            r_v_groups[gj][:, pos * cfg.d_head:(pos + 1) * cfg.d_head]
+        maps.append(p)
+    return maps
+
+
+def _grouped_rv_flat(r_v_groups: np.ndarray, cfg: ModelConfig,
+                     group_size: int) -> np.ndarray:
+    """Block-diagonal flat R_v for error accounting of grouped values."""
+    g, rv_g, sdh = r_v_groups.shape
+    out = np.zeros((g * rv_g, g * sdh), np.float32)
+    for j in range(g):
+        out[j * rv_g:(j + 1) * rv_g, j * sdh:(j + 1) * sdh] = r_v_groups[j]
+    return out

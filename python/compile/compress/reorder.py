@@ -1,0 +1,79 @@
+"""Head-wise Similarity-aware Reordering (paper §3.2 "Head Reordering").
+
+Greedy grouping over the CKA similarity matrix: repeatedly take the
+highest-similarity pair, open a group for it (until the group budget g is
+exhausted) or extend an existing group with capacity; leftover heads join the
+group whose members they are most similar to. The returned permutation lists
+groups consecutively, so grouped SVD can slice contiguous head blocks.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+
+def greedy_group_heads(sim: np.ndarray, group_size: int) -> List[int]:
+    """Return a permutation of range(h): reordered position p holds original
+    head perm[p]; heads of group j occupy positions j*s..(j+1)*s-1."""
+    h = sim.shape[0]
+    assert h % group_size == 0, "heads must divide evenly into groups"
+    n_groups = h // group_size
+    # all unordered pairs sorted by similarity, descending; ties broken by
+    # index for determinism across python/rust.
+    pairs = [(i, j) for i in range(h) for j in range(i + 1, h)]
+    pairs.sort(key=lambda p: (-sim[p[0], p[1]], p[0], p[1]))
+    groups: List[List[int]] = []
+    assigned = [-1] * h  # head -> group index
+
+    for i, j in pairs:
+        ai, aj = assigned[i], assigned[j]
+        if ai == -1 and aj == -1:
+            if len(groups) < n_groups:
+                groups.append([i, j])
+                assigned[i] = assigned[j] = len(groups) - 1
+        elif ai == -1 and aj != -1:
+            if len(groups[aj]) < group_size:
+                groups[aj].append(i)
+                assigned[i] = aj
+        elif aj == -1 and ai != -1:
+            if len(groups[ai]) < group_size:
+                groups[ai].append(j)
+                assigned[j] = ai
+
+    # Any stragglers (possible when n_groups filled before everyone paired):
+    for head in range(h):
+        if assigned[head] != -1:
+            continue
+        best, best_sim = -1, -np.inf
+        for gi, members in enumerate(groups):
+            if len(members) >= group_size:
+                continue
+            avg = float(np.mean([sim[head, m] for m in members]))
+            if avg > best_sim:
+                best, best_sim = gi, avg
+        if best == -1:  # no open group yet (e.g. h == group_size)
+            groups.append([head])
+            assigned[head] = len(groups) - 1
+        else:
+            groups[best].append(head)
+            assigned[head] = best
+
+    perm = [m for g in groups for m in g]
+    assert sorted(perm) == list(range(h))
+    return perm
+
+
+def within_group_similarity(sim: np.ndarray, perm: List[int], group_size: int) -> float:
+    """Mean pairwise CKA inside groups — the quantity Fig. 2 visualizes
+    (higher after reordering)."""
+    h = len(perm)
+    total, count = 0.0, 0
+    for g0 in range(0, h, group_size):
+        members = perm[g0:g0 + group_size]
+        for a in range(len(members)):
+            for b in range(a + 1, len(members)):
+                total += sim[members[a], members[b]]
+                count += 1
+    return total / max(count, 1)

@@ -1,0 +1,87 @@
+"""Low-rank decomposition primitives: truncated SVD, data-whitened SVD
+(SVD-LLM style, paper §4.1 "Implementation Details"), grouped-head SVD
+(paper §3.2 "Group-head Low-rank Decomposition").
+
+Orientation: activations are row vectors, y = x W with W ∈ R^{m×n}; the
+cacheable latent is z = x L ∈ R^r and the reconstruction is y ≈ z R.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def svd_lowrank(w: np.ndarray, r: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Plain truncated SVD (Eq. 1): W ≈ L R, L = U_r Σ_r^½, R = Σ_r^½ V_rᵀ."""
+    u, s, vt = np.linalg.svd(w, full_matrices=False)
+    sq = np.sqrt(s[:r])
+    return u[:, :r] * sq[None, :], sq[:, None] * vt[:r]
+
+
+def whiten_factor(m: np.ndarray, ridge: float = 1e-4) -> Tuple[np.ndarray, np.ndarray]:
+    """Cholesky whitening of the calibration second moment M = XᵀX.
+
+    Returns (S, S_inv_t) with M + εI = S Sᵀ (S lower-triangular) so that the
+    error metric ||X(W-Ŵ)||_F² equals ||Sᵀ(W-Ŵ)||_F² in expectation.
+    """
+    d = m.shape[0]
+    eps = ridge * float(np.trace(m)) / d + 1e-12
+    s = np.linalg.cholesky(m + eps * np.eye(d, dtype=m.dtype))
+    s_inv_t = np.linalg.inv(s).T  # S⁻ᵀ
+    return s, s_inv_t
+
+
+def whitened_svd_lowrank(w: np.ndarray, r: int, m: np.ndarray,
+                         ridge: float = 1e-4) -> Tuple[np.ndarray, np.ndarray]:
+    """Data-aware truncated SVD minimizing ||X(W - LR)||_F² (SVD-LLM).
+
+    SVD(Sᵀ W) = U Σ Vᵀ, keep rank r: L = S⁻ᵀ U_r Σ_r^½, R = Σ_r^½ V_rᵀ.
+    """
+    s, s_inv_t = whiten_factor(m, ridge)
+    a = s.T @ w
+    u, sv, vt = np.linalg.svd(a, full_matrices=False)
+    sq = np.sqrt(sv[:r])
+    return s_inv_t @ (u[:, :r] * sq[None, :]), sq[:, None] * vt[:r]
+
+
+def grouped_svd(w: np.ndarray, perm: List[int], group_size: int, rank: int,
+                d_head: int, m: np.ndarray | None = None,
+                ridge: float = 1e-4) -> Tuple[np.ndarray, np.ndarray]:
+    """Grouped-head low-rank decomposition over a (possibly reordered) head
+    permutation.
+
+    w [d, h*dh] is split head-wise; group j concatenates heads
+    perm[j*s .. (j+1)*s-1] into W_gj [d, s*dh] and decomposes it at `rank`
+    (whitened when M is given, plain otherwise — the Palu baseline passes
+    M=None). Returns (L [d, g*rank] — group latents concatenated — and
+    R [g, rank, s*dh]).  Head layout inside R follows `perm`, i.e. the
+    reordered order; the inverse reordering of paper Fig. 3 is applied by the
+    caller when fusing (see pipeline.py), never at runtime.
+    """
+    d, n = w.shape
+    h = n // d_head
+    assert len(perm) == h and h % group_size == 0
+    g = h // group_size
+    ls, rs = [], []
+    for j in range(g):
+        members = perm[j * group_size:(j + 1) * group_size]
+        wg = np.concatenate([w[:, c * d_head:(c + 1) * d_head] for c in members], axis=1)
+        if m is None:
+            lg, rg = svd_lowrank(wg, rank)
+        else:
+            lg, rg = whitened_svd_lowrank(wg, rank, m, ridge)
+        ls.append(lg)
+        rs.append(rg)
+    return np.concatenate(ls, axis=1), np.stack(rs, axis=0)
+
+
+def recon_error(w: np.ndarray, l: np.ndarray, r: np.ndarray,
+                m: np.ndarray | None = None) -> float:
+    """Approximation error: ||W - LR||_F² or, with M, the data-aware
+    tr((W-LR)ᵀ M (W-LR)) = E ||x(W-LR)||² (paper Eq. 6)."""
+    delta = w - l @ r
+    if m is None:
+        return float(np.sum(delta * delta))
+    return float(np.sum(delta * (m @ delta)))

@@ -1,0 +1,47 @@
+"""Emit cross-language corpus/task goldens: the rust eval harness
+(rust/src/eval/tasks.rs) must regenerate byte-identical instances from the
+same seeds. Run after aot.py:  python -m compile.corpus_goldens --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+from . import data
+from .tio import save_rtz
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--ctx-chars", type=int, default=200)
+    args = ap.parse_args()
+
+    g = {}
+    for split in ("wiki", "ptb", "c4"):
+        g[f"split.{split}"] = np.asarray(data.ppl_split(split, args.seed, 1024), np.int32)
+    for task in data.MC_TASKS:
+        for i, inst in enumerate(data.gen_mc(task, args.seed, 3)):
+            g[f"mc.{task}.{i}.context"] = np.frombuffer(
+                inst.context.encode(), np.uint8).astype(np.int32)
+            g[f"mc.{task}.{i}.choices"] = np.frombuffer(
+                "|".join(inst.choices).encode(), np.uint8).astype(np.int32)
+            g[f"mc.{task}.{i}.answer"] = np.asarray([inst.answer], np.int32)
+    for task in data.LONG_TASKS:
+        inst = data.gen_long(task, args.seed, 1, args.ctx_chars)[0]
+        g[f"long.{task}.prompt"] = np.frombuffer(
+            inst.prompt.encode(), np.uint8).astype(np.int32)
+        g[f"long.{task}.expected"] = np.frombuffer(
+            inst.expected.encode(), np.uint8).astype(np.int32)
+
+    path = os.path.join(args.out, "corpus_goldens.rtz")
+    save_rtz(path, g)
+    print(f"wrote {path} ({len(g)} tensors)")
+
+
+if __name__ == "__main__":
+    main()

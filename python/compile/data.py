@@ -1,0 +1,400 @@
+"""Synthetic corpus + evaluation task generators.
+
+The paper evaluates on WikiText-2 / PTB / C4 (perplexity), six zero-shot QA
+suites (choice log-likelihood accuracy) and LongBench (long-context tasks).
+None of those are available offline, so this module builds a *structured
+synthetic language* with learnable regularities:
+
+  - fixed world knowledge (animal→sound, thing→color, name→city maps),
+  - in-context facts ("bob has a red key ."),
+  - copy / repetition / alternation patterns,
+  - counting sequences,
+  - key-value and needle statements for long-context recall.
+
+A ~4M-param byte-level transformer trained on this corpus learns the
+regularities well enough that KV-cache compression quality differences are
+measurable — which is the quantity every paper table reports (relative
+degradation vs. compression ratio), not absolute perplexity.
+
+Three held-out perplexity splits with distinct sentence-type mixtures stand in
+for Wiki2/PTB/C4; six multiple-choice generators stand in for
+OBQA/Hella/PIQA/ARC-e/ARC-c/Wino; eight long-context generation tasks stand in
+for the LongBench subset. Everything is deterministic given a seed; the same
+seeds are recorded in artifacts/manifest.json so the rust eval harness
+regenerates byte-identical task instances (see rust/src/eval/tasks.rs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Deterministic RNG shared with rust (rust/src/util/rng.rs implements the same
+# xorshift64* generator so task instances match across languages).
+# ---------------------------------------------------------------------------
+
+
+class Rng:
+    """xorshift64* — tiny, fast, identical in python and rust."""
+
+    def __init__(self, seed: int):
+        self.state = (seed | 1) & 0xFFFFFFFFFFFFFFFF
+
+    def next_u64(self) -> int:
+        x = self.state
+        x ^= (x >> 12) & 0xFFFFFFFFFFFFFFFF
+        x = (x ^ (x << 25)) & 0xFFFFFFFFFFFFFFFF
+        x ^= x >> 27
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & 0xFFFFFFFFFFFFFFFF
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+    def choice(self, seq: Sequence):
+        return seq[self.below(len(seq))]
+
+    def shuffle(self, xs: list) -> list:
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+        return xs
+
+
+# ---------------------------------------------------------------------------
+# Vocabulary of the synthetic language (short ASCII words; byte tokenizer).
+# ---------------------------------------------------------------------------
+
+NAMES = ["bob", "ana", "tim", "eva", "sam", "lia", "max", "zoe", "ned", "ivy"]
+COLORS = ["red", "blue", "green", "gold", "gray", "pink"]
+OBJECTS = ["key", "cup", "hat", "map", "pen", "box", "bag", "jar"]
+FOODS = ["tea", "pie", "jam", "rice", "corn", "soup"]
+ANIMAL_SOUND = {
+    "dog": "barks", "cat": "purrs", "cow": "moos", "owl": "hoots",
+    "bee": "buzzes", "pig": "oinks", "hen": "clucks", "fox": "yips",
+}
+THING_COLOR = {
+    "sky": "blue", "grass": "green", "sun": "gold", "snow": "white",
+    "coal": "black", "rose": "red", "sea": "blue", "ash": "gray",
+}
+NAME_CITY = {
+    "bob": "rome", "ana": "oslo", "tim": "lima", "eva": "cairo",
+    "sam": "kyoto", "lia": "paris", "max": "quito", "zoe": "delhi",
+}
+DIGITS = ["zero", "one", "two", "three", "four", "five", "six", "seven", "eight", "nine"]
+COUNT_CYCLE = DIGITS[1:]  # one..nine
+PATTERN_WORDS = ["da", "po", "ki", "lu", "mo", "ta", "re", "su"]
+FILLER = [
+    "the day was calm and long", "rain fell on the old roof",
+    "a small wind moved the leaves", "people walked along the road",
+    "the market opened at dawn", "boats came back to the shore",
+    "clouds drifted over the hills", "lamps glowed in the street",
+]
+
+VOCAB_SIZE = 256  # byte-level
+
+
+def encode(text: str) -> List[int]:
+    return list(text.encode("utf-8"))
+
+
+def decode(toks: Sequence[int]) -> str:
+    return bytes(int(t) & 0xFF for t in toks).decode("utf-8", errors="replace")
+
+
+# ---------------------------------------------------------------------------
+# Sentence generators. Each returns a plain string ending in " ."
+# ---------------------------------------------------------------------------
+
+
+def s_fact(r: Rng) -> str:
+    return f"{r.choice(NAMES)} has a {r.choice(COLORS)} {r.choice(OBJECTS)} ."
+
+
+def s_likes(r: Rng) -> str:
+    return f"{r.choice(NAMES)} likes {r.choice(COLORS)} {r.choice(FOODS)} ."
+
+
+def s_agreement(r: Rng) -> str:
+    a = r.choice(list(ANIMAL_SOUND))
+    return f"the {a} {ANIMAL_SOUND[a]} ."
+
+
+def s_world(r: Rng) -> str:
+    t = r.choice(list(THING_COLOR))
+    return f"q color of {t} ? a {THING_COLOR[t]} ."
+
+
+def s_city(r: Rng) -> str:
+    n = r.choice(list(NAME_CITY))
+    return f"{n} lives in {NAME_CITY[n]} ."
+
+
+def s_count(r: Rng) -> str:
+    i = r.below(len(COUNT_CYCLE) - 3)
+    return "count " + " ".join(COUNT_CYCLE[i:i + 4]) + " ."
+
+
+def s_pattern(r: Rng) -> str:
+    a, b = r.choice(PATTERN_WORDS), r.choice(PATTERN_WORDS)
+    while b == a:
+        b = r.choice(PATTERN_WORDS)
+    return f"pattern {a} {b} {a} {b} {a} {b} ."
+
+
+def s_copy(r: Rng) -> str:
+    ws = [r.choice(PATTERN_WORDS + COLORS) for _ in range(3)]
+    seg = " ".join(ws)
+    return f"say {seg} ; say {seg} ."
+
+
+def s_code(r: Rng) -> str:
+    n = r.choice(NAMES)
+    ds = " ".join(r.choice(DIGITS) for _ in range(3))
+    return f"code {n} is {ds} . {n} code again {ds} ."
+
+
+def s_kv(r: Rng) -> str:
+    k = r.choice(OBJECTS)
+    v = r.choice(COLORS)
+    return f"item {k} maps to {v} . item {k} maps to {v} ."
+
+
+def s_magic(r: Rng) -> str:
+    w = r.choice(PATTERN_WORDS) + r.choice(["na", "to", "mi", "ra"])
+    return f"the magic word is {w} . remember the magic word {w} ."
+
+
+def s_filler(r: Rng) -> str:
+    return r.choice(FILLER) + " ."
+
+
+# Style mixtures: three distinct distributions standing in for Wiki2/PTB/C4.
+STYLES: Dict[str, List] = {
+    "wiki": [s_fact, s_likes, s_city, s_world, s_filler, s_agreement],
+    "ptb": [s_count, s_pattern, s_copy, s_agreement, s_filler],
+    "c4": [s_fact, s_code, s_kv, s_magic, s_pattern, s_likes, s_world, s_filler],
+}
+TRAIN_MIX = [
+    s_fact, s_likes, s_agreement, s_world, s_city, s_count, s_pattern,
+    s_copy, s_code, s_kv, s_magic, s_filler,
+]
+
+
+def gen_text(r: Rng, n_tokens: int, sentences: List) -> List[int]:
+    """Concatenate sentences until at least n_tokens bytes, then truncate."""
+    toks: List[int] = []
+    while len(toks) < n_tokens:
+        toks.extend(encode(r.choice(sentences)(r) + " "))
+    return toks[:n_tokens]
+
+
+def train_stream(seed: int, n_tokens: int) -> List[int]:
+    return gen_text(Rng(seed), n_tokens, TRAIN_MIX)
+
+
+def ppl_split(name: str, seed: int, n_tokens: int) -> List[int]:
+    return gen_text(Rng(seed + {"wiki": 11, "ptb": 23, "c4": 37}[name]), n_tokens, STYLES[name])
+
+
+# ---------------------------------------------------------------------------
+# Zero-shot multiple-choice tasks (paper: OBQA, Hella, PIQA, ARC-e/c, Wino).
+# Each instance: (context string, choices list, answer index). Scored by
+# summed token log-likelihood of each choice continuation, lm-eval style.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MCInstance:
+    context: str
+    choices: List[str]
+    answer: int
+
+
+def mc_cloze(r: Rng) -> MCInstance:
+    """Grammar cloze: object after 'has a <color>' must be an OBJECT."""
+    n, c, o = r.choice(NAMES), r.choice(COLORS), r.choice(OBJECTS)
+    ctx = f"{n} has a {c} "
+    wrong = [r.choice(FOODS), r.choice(list(ANIMAL_SOUND)), r.choice(DIGITS)]
+    choices = [o] + wrong[:3]
+    idx = list(range(len(choices)))
+    r.shuffle(idx)
+    return MCInstance(ctx, [choices[i] for i in idx], idx.index(0))
+
+
+def mc_recall(r: Rng) -> MCInstance:
+    """In-context fact recall: restate a color fact stated two sentences ago."""
+    n, c, o = r.choice(NAMES), r.choice(COLORS), r.choice(OBJECTS)
+    mid = s_filler(r)
+    ctx = f"{n} has a {c} {o} . {mid} {n} has a "
+    wrong = [x for x in COLORS if x != c]
+    choices = [c, wrong[r.below(len(wrong))], wrong[(r.below(len(wrong) - 1) + 1) % len(wrong)]]
+    idx = list(range(3))
+    r.shuffle(idx)
+    return MCInstance(ctx, [choices[i] for i in idx], idx.index(0))
+
+
+def mc_agreement(r: Rng) -> MCInstance:
+    a = r.choice(list(ANIMAL_SOUND))
+    ctx = f"the {a} "
+    wrong = [v for k, v in ANIMAL_SOUND.items() if k != a]
+    choices = [ANIMAL_SOUND[a], wrong[r.below(len(wrong))], wrong[(r.below(len(wrong) - 1) + 1) % len(wrong)]]
+    idx = list(range(3))
+    r.shuffle(idx)
+    return MCInstance(ctx, [choices[i] for i in idx], idx.index(0))
+
+
+def mc_world(r: Rng) -> MCInstance:
+    t = r.choice(list(THING_COLOR))
+    ctx = f"q color of {t} ? a "
+    truth = THING_COLOR[t]
+    # sorted() pins the order: set iteration depends on hash randomization,
+    # which would break both determinism and python↔rust parity.
+    wrong = [c for c in sorted(set(THING_COLOR.values())) if c != truth]
+    choices = [truth, wrong[r.below(len(wrong))], wrong[(r.below(len(wrong) - 1) + 1) % len(wrong)]]
+    idx = list(range(3))
+    r.shuffle(idx)
+    return MCInstance(ctx, [choices[i] for i in idx], idx.index(0))
+
+
+def mc_order(r: Rng) -> MCInstance:
+    i = r.below(len(COUNT_CYCLE) - 3)
+    ctx = "count " + " ".join(COUNT_CYCLE[i:i + 3]) + " "
+    truth = COUNT_CYCLE[i + 3]
+    wrong = [w for w in COUNT_CYCLE if w != truth]
+    choices = [truth, wrong[r.below(len(wrong))], wrong[(r.below(len(wrong) - 1) + 1) % len(wrong)]]
+    idx = list(range(3))
+    r.shuffle(idx)
+    return MCInstance(ctx, [choices[i] for i in idx], idx.index(0))
+
+
+def mc_parity(r: Rng) -> MCInstance:
+    a, b = r.choice(PATTERN_WORDS), r.choice(PATTERN_WORDS)
+    while b == a:
+        b = r.choice(PATTERN_WORDS)
+    ctx = f"pattern {a} {b} {a} {b} {a} "
+    wrong = [w for w in PATTERN_WORDS if w != b]
+    choices = [b, wrong[r.below(len(wrong))], wrong[(r.below(len(wrong) - 1) + 1) % len(wrong)]]
+    idx = list(range(3))
+    r.shuffle(idx)
+    return MCInstance(ctx, [choices[i] for i in idx], idx.index(0))
+
+
+MC_TASKS = {
+    "cloze": mc_cloze,       # ~OBQA
+    "recall": mc_recall,     # ~Hella
+    "agree": mc_agreement,   # ~PIQA
+    "world": mc_world,       # ~ARC-e
+    "order": mc_order,       # ~ARC-c
+    "parity": mc_parity,     # ~Wino
+}
+
+
+def gen_mc(task: str, seed: int, n: int) -> List[MCInstance]:
+    r = Rng(seed * 7919 + sum(map(ord, task)))
+    return [MC_TASKS[task](r) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Long-context generation tasks (paper: LongBench 8-task subset). Each
+# instance: (prompt string, expected continuation string). Metric: prefix
+# exact-match rate of the greedy continuation, decoded through the serving
+# engine (rust) or the jax reference (python tests).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LongInstance:
+    prompt: str
+    expected: str
+
+
+def _filler_tokens(r: Rng, n_chars: int) -> str:
+    parts = []
+    total = 0
+    while total < n_chars:
+        s = r.choice(TRAIN_MIX[:8])(r) + " "
+        parts.append(s)
+        total += len(s)
+    return "".join(parts)
+
+
+def lt_needle(r: Rng, ctx_chars: int) -> LongInstance:
+    w = r.choice(PATTERN_WORDS) + r.choice(["na", "to", "mi", "ra"])
+    pre = _filler_tokens(r, ctx_chars // 2)
+    post = _filler_tokens(r, ctx_chars // 2 - 40)
+    return LongInstance(
+        f"{pre}the magic word is {w} . remember the magic word {w} . {post}the magic word is ", w)
+
+
+def lt_kvrecall(r: Rng, ctx_chars: int) -> LongInstance:
+    pairs = [(r.choice(OBJECTS), r.choice(COLORS)) for _ in range(6)]
+    body = " ".join(f"item {k} maps to {v} . item {k} maps to {v} ." for k, v in pairs)
+    fill = _filler_tokens(r, max(0, ctx_chars - len(body) - 40))
+    k, v = pairs[r.below(len(pairs))]
+    return LongInstance(f"{body} {fill}item {k} maps to ", v)
+
+
+def lt_code(r: Rng, ctx_chars: int) -> LongInstance:
+    n = r.choice(NAMES)
+    ds = " ".join(r.choice(DIGITS) for _ in range(3))
+    pre = _filler_tokens(r, ctx_chars // 3)
+    post = _filler_tokens(r, ctx_chars // 3)
+    return LongInstance(f"{pre}code {n} is {ds} . {n} code again {ds} . {post}code {n} is ", ds)
+
+
+def lt_copy(r: Rng, ctx_chars: int) -> LongInstance:
+    ws = [r.choice(PATTERN_WORDS + COLORS) for _ in range(3)]
+    seg = " ".join(ws)
+    fill = _filler_tokens(r, max(0, ctx_chars - len(seg) * 2 - 20))
+    return LongInstance(f"{fill}say {seg} ; say ", seg)
+
+
+def lt_lastname(r: Rng, ctx_chars: int) -> LongInstance:
+    fill = _filler_tokens(r, ctx_chars - 60)
+    n = r.choice(list(NAME_CITY))
+    return LongInstance(f"{fill}{n} lives in ", NAME_CITY[n])
+
+
+def lt_pattern(r: Rng, ctx_chars: int) -> LongInstance:
+    a, b = r.choice(PATTERN_WORDS), r.choice(PATTERN_WORDS)
+    while b == a:
+        b = r.choice(PATTERN_WORDS)
+    fill = _filler_tokens(r, ctx_chars - 50)
+    return LongInstance(f"{fill}pattern {a} {b} {a} {b} {a} ", b)
+
+
+def lt_world(r: Rng, ctx_chars: int) -> LongInstance:
+    fill = _filler_tokens(r, ctx_chars - 40)
+    t = r.choice(list(THING_COLOR))
+    return LongInstance(f"{fill}q color of {t} ? a ", THING_COLOR[t])
+
+
+def lt_agree(r: Rng, ctx_chars: int) -> LongInstance:
+    fill = _filler_tokens(r, ctx_chars - 30)
+    a = r.choice(list(ANIMAL_SOUND))
+    return LongInstance(f"{fill}the {a} ", ANIMAL_SOUND[a])
+
+
+LONG_TASKS = {
+    "needle": lt_needle,     # ~Qasper (find buried info)
+    "kvrecall": lt_kvrecall, # ~TREC (classification by stated mapping)
+    "code": lt_code,         # ~TriviaQA
+    "copy": lt_copy,         # ~LCC (code/segment completion)
+    "lastname": lt_lastname, # ~SAMSum
+    "pattern": lt_pattern,   # ~RepoBench-P
+    "world": lt_world,       # ~QMSum
+    "agree": lt_agree,       # ~MultiNews
+}
+
+
+def gen_long(task: str, seed: int, n: int, ctx_chars: int) -> List[LongInstance]:
+    r = Rng(seed * 104729 + sum(map(ord, task)))
+    return [LONG_TASKS[task](r, ctx_chars) for _ in range(n)]
+
+
+def calibration_batch(seed: int, n_seqs: int, seq_len: int) -> List[List[int]]:
+    """Calibration sequences (paper: 256 samples of WikiText-2)."""
+    r = Rng(seed + 777)
+    return [gen_text(r, seq_len, TRAIN_MIX) for _ in range(n_seqs)]

@@ -1,0 +1,94 @@
+"""Pallas kernel: grouped key reconstruction + RoPE + QKᵀ scores (HSR decode).
+
+This is the decode hot-spot of ReCalKV's key path (paper Fig. 3): the cached
+per-group latents z_g are expanded through the group's right factor R_g,
+rotary embedding is applied to the reconstructed keys, and the current-step
+queries are scored against them — all in one kernel so the reconstructed keys
+never round-trip to HBM.
+
+TPU mapping (paper targets CUDA; see DESIGN.md §7): the grid is
+(batch, group, seq-block). For each grid step the group's factor R_g
+(rk × s·dh, ≤64 KiB fp32 at our sizes) stays resident in VMEM while
+seq-blocks of latents stream through the MXU (`z_blk @ R_g` is a plain
+matmul); RoPE and the scaled QKᵀ contraction run on the reconstructed block
+in VMEM. BlockSpecs express the HBM↔VMEM schedule the CUDA version expresses
+with threadblocks.
+
+interpret=True always: the CPU PJRT client cannot execute Mosaic
+custom-calls; the interpreted kernel lowers to plain HLO inside the same
+decode graph the rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scores_kernel(q_ref, zk_ref, rk_ref, cos_ref, sin_ref, o_ref, *, rep: int):
+    """One (batch, group, seq-block) tile.
+
+    q_ref   [1, hg, dh]      queries of this group's q-heads (RoPE'd)
+    zk_ref  [1, Sb, 1, rk]   key latents of this group, one seq block
+    rk_ref  [1, rk, s*dh]    group right factor (resident across seq blocks)
+    cos/sin [Sb, dh2]        RoPE tables for the block's positions
+    o_ref   [1, hg, Sb]      output scores
+    """
+    z = zk_ref[0, :, 0, :]                       # [Sb, rk]
+    r = rk_ref[0]                                # [rk, s*dh]
+    k = jnp.dot(z, r, preferred_element_type=jnp.float32)  # MXU: [Sb, s*dh]
+    sb = k.shape[0]
+    dh2 = cos_ref.shape[-1]
+    dh = 2 * dh2
+    s_heads = k.shape[-1] // dh
+    k = k.reshape(sb, s_heads, dh)
+    cos = cos_ref[...][:, None, :]
+    sin = sin_ref[...][:, None, :]
+    k1, k2 = k[..., :dh2], k[..., dh2:]
+    k = jnp.concatenate([k1 * cos - k2 * sin, k1 * sin + k2 * cos], axis=-1)
+    # GQA: q-heads per kv-head = rep; repeat kv-heads along the head axis.
+    k = jnp.repeat(k, rep, axis=1)               # [Sb, hg, dh]
+    q = q_ref[0, 0]                              # [hg, dh]
+    scores = jnp.einsum("hd,shd->hs", q, k) / jnp.sqrt(jnp.float32(dh))
+    o_ref[0, 0] = scores
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def grouped_key_scores(q: jnp.ndarray, z_k: jnp.ndarray, r_k: jnp.ndarray,
+                       cos: jnp.ndarray, sin: jnp.ndarray,
+                       block_s: int = 512) -> jnp.ndarray:
+    """Pallas entry point. Shapes as in kernels/ref.py; returns [B,h,S].
+
+    Head layout is the *reordered* layout produced by compress/pipeline.py —
+    the inverse reordering of paper Fig. 3 is folded into the factors and
+    W_q/W̃_o offline, so no runtime gather is needed.
+    """
+    b, h, dh = q.shape
+    _, s_len, g, rk = z_k.shape
+    sdh = r_k.shape[-1]
+    s_heads = sdh // dh
+    kvh = g * s_heads
+    rep = h // kvh
+    hg = s_heads * rep  # q-heads per group
+    bs = min(block_s, s_len)
+    assert s_len % bs == 0, f"cache len {s_len} not divisible by block {bs}"
+    q_g = q.reshape(b, g, hg, dh)
+
+    out = pl.pallas_call(
+        functools.partial(_scores_kernel, rep=rep),
+        grid=(b, g, s_len // bs),
+        in_specs=[
+            pl.BlockSpec((1, 1, hg, dh), lambda bi, gi, si: (bi, gi, 0, 0)),
+            pl.BlockSpec((1, bs, 1, rk), lambda bi, gi, si: (bi, si, gi, 0)),
+            pl.BlockSpec((1, rk, sdh), lambda bi, gi, si: (gi, 0, 0)),
+            pl.BlockSpec((bs, dh // 2), lambda bi, gi, si: (si, 0)),
+            pl.BlockSpec((bs, dh // 2), lambda bi, gi, si: (si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hg, bs), lambda bi, gi, si: (bi, gi, 0, si)),
+        out_shape=jax.ShapeDtypeStruct((b, g, hg, bs * (s_len // bs)), jnp.float32),
+        interpret=True,
+    )(q_g, z_k, r_k, cos, sin)
+    return out.reshape(b, h, s_len)

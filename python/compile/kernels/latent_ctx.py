@@ -1,0 +1,56 @@
+"""Pallas kernel: latent-value attention context (OCMF decode path).
+
+Computes ctx[b,h,:] = Σ_s probs[b,h,s] · z_v[b,s,:] — attention weights
+applied directly to the *latent* value cache. Because OCMF fuses R_v into the
+output projection (W̃_o = R_v W_o, precomputed offline), this rank-rv context
+is the final per-head attention output; no value reconstruction ever happens
+at runtime, which is the paper's "no extra computational overhead" claim for
+the value path.
+
+TPU mapping: grid (batch, seq-block); each step loads one [Sb, rv] latent
+block and the matching [h, Sb] probability slab into VMEM and accumulates
+`probs_blk @ z_blk` (MXU matmul) into the [h, rv] output tile, which stays
+resident across the seq-block loop (revisited output block ⇒ accumulation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ctx_kernel(p_ref, zv_ref, o_ref):
+    """One (batch, seq-block) tile: accumulate probs @ z_v into o_ref."""
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    p = p_ref[0]        # [h, Sb]
+    z = zv_ref[0]       # [Sb, rv]
+    o_ref[0] += jnp.dot(p, z, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def latent_ctx(probs: jnp.ndarray, z_v: jnp.ndarray,
+               block_s: int = 512) -> jnp.ndarray:
+    """probs [B,h,S] @ z_v [B,S,rv] -> [B,h,rv] (see kernels/ref.py oracle)."""
+    b, h, s_len = probs.shape
+    rv = z_v.shape[-1]
+    bs = min(block_s, s_len)
+    assert s_len % bs == 0, f"cache len {s_len} not divisible by block {bs}"
+    return pl.pallas_call(
+        _ctx_kernel,
+        grid=(b, s_len // bs),
+        in_specs=[
+            pl.BlockSpec((1, h, bs), lambda bi, si: (bi, 0, si)),
+            pl.BlockSpec((1, bs, rv), lambda bi, si: (bi, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, rv), lambda bi, si: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, rv), jnp.float32),
+        interpret=True,
+    )(probs, z_v)

@@ -1,0 +1,97 @@
+"""Pallas kernels: randomized-Hadamard transform + per-token quantization.
+
+Paper §4.4 integrates ReCalKV with per-token KV-cache quantization, applying
+a randomized Hadamard transform before quantizing to spread outliers
+(following Palu). At serving time the rust cache does this on the latent
+vectors it stores (rust/src/quant/); these kernels are the build-time
+counterpart used (a) to validate the rust implementation bit-for-bit through
+goldens and (b) to emulate quantized caches inside jax graphs for tests.
+
+TPU mapping: the Walsh-Hadamard butterfly runs entirely in VMEM registers on
+a [T_blk, n] tile (n = latent dim, power of two); quantization is a per-row
+reduce + scale. Grid is (token-blocks,).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwht(y: jnp.ndarray) -> jnp.ndarray:
+    """In-register Walsh-Hadamard transform over the last dim (Sylvester)."""
+    n = y.shape[-1]
+    h = 1
+    while h < n:
+        y = y.reshape(*y.shape[:-1], n // (2 * h), 2, h)
+        a, b = y[..., 0, :], y[..., 1, :]
+        y = jnp.concatenate([a + b, a - b], axis=-1).reshape(*y.shape[:-3], n)
+        h *= 2
+    return y
+
+
+def _had_quant_kernel(x_ref, sign_ref, q_ref, scale_ref, *, bits: int):
+    x = x_ref[...] * sign_ref[...][None, :]
+    y = _fwht(x) / jnp.sqrt(jnp.float32(x.shape[-1]))
+    qmax = (1 << (bits - 1)) - 1
+    amax = jnp.max(jnp.abs(y), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q_ref[...] = jnp.clip(jnp.round(y / scale), -qmax, qmax).astype(jnp.int32)
+    scale_ref[...] = scale[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_t"))
+def hadamard_quant(x: jnp.ndarray, signs: jnp.ndarray, bits: int = 4,
+                   block_t: int = 64):
+    """x [T, n] -> (q int32 [T, n], scale [T]). n must be a power of two."""
+    t, n = x.shape
+    bt = min(block_t, t)
+    assert t % bt == 0, f"token count {t} not divisible by block {bt}"
+    q, scale = pl.pallas_call(
+        functools.partial(_had_quant_kernel, bits=bits),
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda ti: (ti, 0)),
+            pl.BlockSpec((n,), lambda ti: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, n), lambda ti: (ti, 0)),
+            pl.BlockSpec((bt,), lambda ti: (ti,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, n), jnp.int32),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, signs)
+    return q, scale
+
+
+def _had_dequant_kernel(q_ref, scale_ref, sign_ref, x_ref):
+    y = q_ref[...].astype(jnp.float32) * scale_ref[...][:, None]
+    x = _fwht(y) / jnp.sqrt(jnp.float32(y.shape[-1]))
+    x_ref[...] = x * sign_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def hadamard_dequant(q: jnp.ndarray, scale: jnp.ndarray, signs: jnp.ndarray,
+                     block_t: int = 64) -> jnp.ndarray:
+    """Inverse of hadamard_quant (up to quantization error)."""
+    t, n = q.shape
+    bt = min(block_t, t)
+    assert t % bt == 0
+    return pl.pallas_call(
+        _had_dequant_kernel,
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda ti: (ti, 0)),
+            pl.BlockSpec((bt,), lambda ti: (ti,)),
+            pl.BlockSpec((n,), lambda ti: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, n), lambda ti: (ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=True,
+    )(q, scale, signs)

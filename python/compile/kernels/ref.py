@@ -1,0 +1,132 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Conventions (decode step):
+  B   batch, S   max cache length, h  q-heads, kvh kv-heads, dh head dim,
+  g   key groups, s = kvh/g kv-heads per group, rk per-group key rank,
+  rv  value latent rank.
+
+Shapes:
+  q       [B, h, dh]        query for the current step, RoPE already applied
+  z_k     [B, S, g, rk]     grouped key latents (cache)
+  R_k     [g, rk, s*dh]     per-group right factors (reordered head layout)
+  cos/sin [S, dh/2]         RoPE tables for the *cached* positions
+  probs   [B, h, S]         post-softmax attention weights
+  z_v     [B, S, rv]        value latents (cache)
+
+The "inverse reordering" of paper Fig. 3 is folded offline into the factor
+layout (see compress/pipeline.py), so kernels never gather heads; an explicit
+gather reference is ref_scores_with_explicit_reorder, used only in tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_rotate(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Apply rotary embedding. x [..., dh]; cos/sin broadcastable [..., dh/2]."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def ref_key_reconstruct(z_k: jnp.ndarray, r_k: jnp.ndarray,
+                        cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct RoPE'd keys from grouped latents.
+
+    z_k [B,S,g,rk], r_k [g,rk,s*dh] -> k [B,S,kvh,dh] (reordered head order).
+    """
+    b, s_len, g, rk = z_k.shape
+    sdh = r_k.shape[-1]
+    k = jnp.einsum("bsgr,grd->bsgd", z_k, r_k)  # [B,S,g,s*dh]
+    dh = 2 * cos.shape[-1]
+    sh = sdh // dh
+    k = k.reshape(b, s_len, g * sh, dh)
+    return rope_rotate(k, cos[None, :, None, :], sin[None, :, None, :])
+
+
+def ref_grouped_key_scores(q: jnp.ndarray, z_k: jnp.ndarray, r_k: jnp.ndarray,
+                           cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Scores for one decode step: q [B,h,dh] vs reconstructed keys.
+
+    Returns [B,h,S], scaled by 1/sqrt(dh) (masking/softmax done by caller).
+    q-heads map to kv-heads contiguously: kv(i) = i // (h/kvh).
+    """
+    k = ref_key_reconstruct(z_k, r_k, cos, sin)  # [B,S,kvh,dh]
+    b, s_len, kvh, dh = k.shape
+    h = q.shape[1]
+    rep = h // kvh
+    kq = jnp.repeat(k, rep, axis=2)  # [B,S,h,dh]
+    return jnp.einsum("bhd,bshd->bhs", q, kq) / jnp.sqrt(jnp.float32(dh))
+
+
+def ref_latent_ctx(probs: jnp.ndarray, z_v: jnp.ndarray) -> jnp.ndarray:
+    """Latent-value context: probs [B,h,S] @ z_v [B,S,rv] -> [B,h,rv].
+
+    This is the OCMF fused path: the per-head context stays rank-rv and is
+    consumed directly by the fused output projection W̃_o = R_v W_o.
+    """
+    return jnp.einsum("bhs,bsr->bhr", probs, z_v)
+
+
+def ref_hadamard(x: jnp.ndarray, signs: jnp.ndarray) -> jnp.ndarray:
+    """Randomized Hadamard transform over the last dim (power of two).
+
+    y = (x * signs) H / sqrt(n) with H the Walsh-Hadamard matrix (Sylvester
+    order). Orthonormal, so per-token max values shrink and int4/int3
+    quantization error drops (paper §4.4 follows Palu here).
+    """
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, "hadamard dim must be a power of two"
+    y = x * signs
+    h = 1
+    while h < n:
+        y = y.reshape(*y.shape[:-1], n // (2 * h), 2, h)
+        a = y[..., 0, :]
+        bb = y[..., 1, :]
+        y = jnp.concatenate([a + bb, a - bb], axis=-1)
+        y = y.reshape(*y.shape[:-2], n)
+        h *= 2
+    return y / jnp.sqrt(jnp.float32(n))
+
+
+def ref_hadamard_inverse(y: jnp.ndarray, signs: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of ref_hadamard ((1/sqrt(n))·H is symmetric orthogonal)."""
+    x = ref_hadamard(y, jnp.ones_like(signs))
+    return x * signs
+
+
+def ref_quant_pertoken(x: jnp.ndarray, bits: int):
+    """Symmetric per-token quantization over the last dim.
+
+    Returns (q int32 in [-qmax, qmax], scale per token). Matches
+    rust/src/quant/pertoken.rs bit-for-bit given identical inputs.
+    """
+    qmax = (1 << (bits - 1)) - 1
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    return q, scale
+
+
+def ref_dequant_pertoken(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ref_scores_with_explicit_reorder(q_orig: jnp.ndarray, z_k: jnp.ndarray,
+                                     r_k: jnp.ndarray, cos: jnp.ndarray,
+                                     sin: jnp.ndarray, kv_perm) -> jnp.ndarray:
+    """Reference for the *unfolded* path of paper Fig. 3: reconstruct keys in
+    reordered order, inverse-reorder back to original head order, then score
+    against original-order queries. Tests assert this equals the folded path
+    (kernels on reordered layout + offline-permuted W_q)."""
+    k_re = ref_key_reconstruct(z_k, r_k, cos, sin)  # reordered kv-head order
+    kv_perm = jnp.asarray(kv_perm)
+    # reordered position p holds original head kv_perm[p]; invert the gather.
+    inv = jnp.zeros_like(kv_perm).at[kv_perm].set(jnp.arange(kv_perm.shape[0]))
+    k_orig = jnp.take(k_re, inv, axis=2)
+    b, s_len, kvh, dh = k_orig.shape
+    h = q_orig.shape[1]
+    rep = h // kvh
+    kq = jnp.repeat(k_orig, rep, axis=2)
+    return jnp.einsum("bhd,bshd->bhs", q_orig, kq) / jnp.sqrt(jnp.float32(dh))

@@ -1,0 +1,371 @@
+"""L2: LLaMA-style decoder-only transformer in JAX, full + ReCalKV-compressed.
+
+Three graph entry points per (model, variant), AOT-lowered by aot.py and
+executed from rust:
+
+  score(tokens)            -> logits [B,S,V]            (ppl + MC tasks)
+  prefill(tokens, length)  -> per-layer caches + last logits
+  decode(token, caches, length) -> logits + new cache entries (one step)
+
+The *compressed* decode path calls the L1 Pallas kernels
+(grouped_key_scores, latent_ctx) so they lower into the HLO the rust
+coordinator executes on every step. score/prefill use the pure-jnp oracles
+(identical math — asserted by python/tests/test_model.py) because pallas
+interpret-mode lowering of long-sequence grids is wasteful at build time.
+
+Weight layout (dict of f32 arrays, also the .rtz archive layout):
+  embed [V,d]                         tied output head
+  L{l}.ln1 / L{l}.ln2 [d]             RMSNorm gains
+  L{l}.wq [d, h*dh]   L{l}.wk [d, kvh*dh]   L{l}.wv [d, kvh*dh]
+  L{l}.wo [h*dh, d]
+  L{l}.w1 / L{l}.w3 [d, ff]  L{l}.w2 [ff, d]   (SwiGLU)
+  norm_f [d]
+
+Compressed variants replace, per layer (built by compress/pipeline.py):
+  L{l}.wq      -> columns permuted to the reordered q-head layout
+  L{l}.wk/wv   -> L{l}.Lk [d, g*rk], L{l}.Rk [g, rk, s*dh], L{l}.Lv [d, rv]
+  L{l}.wo      -> L{l}.wo_fused [h*rv, d]   (= blockwise R_v·W_o, reordered)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.grouped_key_attn import grouped_key_scores
+from .kernels.latent_ctx import latent_ctx
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny-mha"
+    vocab: int = 256
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    d_head: int = 32
+    d_ff: int = 640
+    max_seq: int = 1024
+    rope_theta: float = 10000.0
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.d_head
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.d_head
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    """Per-model compression description (shapes only; factors live in params).
+
+    group_size: kv-heads per key group (paper: 4 for h=32; we scale to 4 for
+    kvh=8 MHA and 2 for kvh=4 GQA so g=2 groups in both).
+    key_ranks[l]: per-group key rank of layer l.
+    value_ranks[l]: value latent rank of layer l.
+    kv_perms[l]: reordered kv-head order (position p holds original head
+    kv_perms[l][p]); already folded into factor layout, kept for tests/eval.
+    """
+    method: str                 # "recal" | "palu" | ablation tags
+    ratio: float                # target compression ratio (paper's RATIO)
+    group_size: int
+    key_ranks: Tuple[int, ...]
+    value_ranks: Tuple[int, ...]
+    kv_perms: Tuple[Tuple[int, ...], ...]
+
+    def n_groups(self, cfg: ModelConfig) -> int:
+        return cfg.n_kv_heads // self.group_size
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """LLaMA-style init: normal(0, 0.02), w2/wo scaled by 1/sqrt(2*L)."""
+    rng = np.random.default_rng(seed)
+    p: Dict[str, np.ndarray] = {}
+
+    def w(shape, scale=0.02):
+        return rng.standard_normal(shape, dtype=np.float32) * scale
+
+    p["embed"] = w((cfg.vocab, cfg.d_model))
+    out_scale = 0.02 / np.sqrt(2 * cfg.n_layers)
+    for l in range(cfg.n_layers):
+        p[f"L{l}.ln1"] = np.ones(cfg.d_model, np.float32)
+        p[f"L{l}.ln2"] = np.ones(cfg.d_model, np.float32)
+        p[f"L{l}.wq"] = w((cfg.d_model, cfg.q_dim))
+        p[f"L{l}.wk"] = w((cfg.d_model, cfg.kv_dim))
+        p[f"L{l}.wv"] = w((cfg.d_model, cfg.kv_dim))
+        p[f"L{l}.wo"] = w((cfg.q_dim, cfg.d_model), out_scale)
+        p[f"L{l}.w1"] = w((cfg.d_model, cfg.d_ff))
+        p[f"L{l}.w3"] = w((cfg.d_model, cfg.d_ff))
+        p[f"L{l}.w2"] = w((cfg.d_ff, cfg.d_model), out_scale)
+    p["norm_f"] = np.ones(cfg.d_model, np.float32)
+    return {k: jnp.asarray(v) for k, v in p.items()}
+
+
+def rmsnorm(x: jnp.ndarray, gain: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def rope_tables(cfg: ModelConfig, s_len: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    pos = jnp.arange(s_len, dtype=jnp.float32)
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, cfg.d_head, 2, dtype=jnp.float32) / cfg.d_head))
+    ang = pos[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _swiglu(p: Params, l: int, x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ p[f"L{l}.w1"]) * (x @ p[f"L{l}.w3"])) @ p[f"L{l}.w2"]
+
+
+# ---------------------------------------------------------------------------
+# Full (uncompressed) model.
+# ---------------------------------------------------------------------------
+
+
+def forward_full(p: Params, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens [B,S] int32 -> logits [B,S,V]. Causal, teacher-forced."""
+    b, s_len = tokens.shape
+    x = p["embed"][tokens]
+    cos, sin = rope_tables(cfg, s_len)
+    causal = jnp.tril(jnp.ones((s_len, s_len), bool))
+    rep = cfg.n_heads // cfg.n_kv_heads
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(x, p[f"L{l}.ln1"])
+        q = (xn @ p[f"L{l}.wq"]).reshape(b, s_len, cfg.n_heads, cfg.d_head)
+        k = (xn @ p[f"L{l}.wk"]).reshape(b, s_len, cfg.n_kv_heads, cfg.d_head)
+        v = (xn @ p[f"L{l}.wv"]).reshape(b, s_len, cfg.n_kv_heads, cfg.d_head)
+        q = ref.rope_rotate(q, cos[None, :, None, :], sin[None, :, None, :])
+        k = ref.rope_rotate(k, cos[None, :, None, :], sin[None, :, None, :])
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        scores = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(jnp.float32(cfg.d_head))
+        scores = jnp.where(causal[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhts,bshd->bthd", probs, v).reshape(b, s_len, cfg.q_dim)
+        x = x + ctx @ p[f"L{l}.wo"]
+        x = x + _swiglu(p, l, rmsnorm(x, p[f"L{l}.ln2"]))
+    x = rmsnorm(x, p["norm_f"])
+    return x @ p["embed"].T
+
+
+def loss_full(p: Params, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Next-token cross-entropy, mean over all positions."""
+    logits = forward_full(p, cfg, tokens)[:, :-1]
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def prefill_full(p: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                 length: jnp.ndarray):
+    """Full-cache prefill: returns (logits_last [B,V], ks, vs) where ks/vs are
+    per-layer [B,S,kvh,dh] (RoPE'd keys). Positions >= length are zeroed."""
+    b, s_len = tokens.shape
+    x = p["embed"][tokens]
+    cos, sin = rope_tables(cfg, s_len)
+    causal = jnp.tril(jnp.ones((s_len, s_len), bool))
+    lmask = jnp.arange(s_len)[None] < length[:, None]          # [B,S]
+    att_ok = causal[None] & lmask[:, None, :]                  # [B,T,S]
+    rep = cfg.n_heads // cfg.n_kv_heads
+    ks: List[jnp.ndarray] = []
+    vs: List[jnp.ndarray] = []
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(x, p[f"L{l}.ln1"])
+        q = (xn @ p[f"L{l}.wq"]).reshape(b, s_len, cfg.n_heads, cfg.d_head)
+        k = (xn @ p[f"L{l}.wk"]).reshape(b, s_len, cfg.n_kv_heads, cfg.d_head)
+        v = (xn @ p[f"L{l}.wv"]).reshape(b, s_len, cfg.n_kv_heads, cfg.d_head)
+        q = ref.rope_rotate(q, cos[None, :, None, :], sin[None, :, None, :])
+        k = ref.rope_rotate(k, cos[None, :, None, :], sin[None, :, None, :])
+        zero = lmask[..., None, None]
+        ks.append(jnp.where(zero, k, 0.0))
+        vs.append(jnp.where(zero, v, 0.0))
+        kq = jnp.repeat(k, rep, axis=2)
+        vq = jnp.repeat(v, rep, axis=2)
+        scores = jnp.einsum("bthd,bshd->bhts", q, kq) / jnp.sqrt(jnp.float32(cfg.d_head))
+        scores = jnp.where(att_ok[:, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhts,bshd->bthd", probs, vq).reshape(b, s_len, cfg.q_dim)
+        x = x + ctx @ p[f"L{l}.wo"]
+        x = x + _swiglu(p, l, rmsnorm(x, p[f"L{l}.ln2"]))
+    x = rmsnorm(x, p["norm_f"])
+    last = jnp.take_along_axis(x, (length - 1)[:, None, None], axis=1)[:, 0]
+    return last @ p["embed"].T, ks, vs
+
+
+def decode_full(p: Params, cfg: ModelConfig, token: jnp.ndarray,
+                length: jnp.ndarray, ks: List[jnp.ndarray], vs: List[jnp.ndarray]):
+    """One decode step against full caches.
+
+    token [B] int32; length [B] = number of cached tokens (new token goes at
+    position length). Returns (logits [B,V], new_k per layer [B,kvh,dh],
+    new_v per layer).
+    """
+    b = token.shape[0]
+    s_len = ks[0].shape[1]
+    x = p["embed"][token]                                      # [B,d]
+    cos_t, sin_t = rope_tables(cfg, cfg.max_seq)
+    cos_p = cos_t[length]                                      # [B,dh/2]
+    sin_p = sin_t[length]
+    rep = cfg.n_heads // cfg.n_kv_heads
+    valid = jnp.arange(s_len)[None] <= length[:, None]         # includes self
+    new_ks: List[jnp.ndarray] = []
+    new_vs: List[jnp.ndarray] = []
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(x, p[f"L{l}.ln1"])
+        q = (xn @ p[f"L{l}.wq"]).reshape(b, cfg.n_heads, cfg.d_head)
+        k = (xn @ p[f"L{l}.wk"]).reshape(b, cfg.n_kv_heads, cfg.d_head)
+        v = (xn @ p[f"L{l}.wv"]).reshape(b, cfg.n_kv_heads, cfg.d_head)
+        q = ref.rope_rotate(q, cos_p[:, None, :], sin_p[:, None, :])
+        k = ref.rope_rotate(k, cos_p[:, None, :], sin_p[:, None, :])
+        new_ks.append(k)
+        new_vs.append(v)
+        # cache with the new entry written at position `length` per batch row
+        kc = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n[None], (i, 0, 0)))(
+            ks[l], k, length)
+        vc = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n[None], (i, 0, 0)))(
+            vs[l], v, length)
+        kq = jnp.repeat(kc, rep, axis=2)
+        vq = jnp.repeat(vc, rep, axis=2)
+        scores = jnp.einsum("bhd,bshd->bhs", q, kq) / jnp.sqrt(jnp.float32(cfg.d_head))
+        scores = jnp.where(valid[:, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhs,bshd->bhd", probs, vq).reshape(b, cfg.q_dim)
+        x = x + ctx @ p[f"L{l}.wo"]
+        x = x + _swiglu(p, l, rmsnorm(x, p[f"L{l}.ln2"]))
+    x = rmsnorm(x, p["norm_f"])
+    return x @ p["embed"].T, new_ks, new_vs
+
+
+# ---------------------------------------------------------------------------
+# Compressed model (ReCalKV / Palu variants; factors built offline).
+# ---------------------------------------------------------------------------
+
+
+def _compressed_attn_seq(p: Params, spec: CompressionSpec, cfg: ModelConfig,
+                         l: int, xn: jnp.ndarray, cos, sin, att_ok):
+    """Shared full-sequence compressed attention (score + prefill paths).
+
+    Returns (attn_out [B,T,d], z_k [B,T,g,rk], z_v [B,T,rv]). Pure jnp —
+    math identical to the pallas decode kernels (tested)."""
+    b, s_len, _ = xn.shape
+    g = spec.n_groups(cfg)
+    rk = spec.key_ranks[l]
+    rv = spec.value_ranks[l]
+    z_k = (xn @ p[f"L{l}.Lk"]).reshape(b, s_len, g, rk)
+    z_v = xn @ p[f"L{l}.Lv"]                                   # [B,T,rv]
+    q = (xn @ p[f"L{l}.wq"]).reshape(b, s_len, cfg.n_heads, cfg.d_head)
+    q = ref.rope_rotate(q, cos[None, :, None, :], sin[None, :, None, :])
+    k = ref.ref_key_reconstruct(z_k, p[f"L{l}.Rk"], cos, sin)  # [B,T,kvh,dh]
+    rep = cfg.n_heads // cfg.n_kv_heads
+    kq = jnp.repeat(k, rep, axis=2)
+    scores = jnp.einsum("bthd,bshd->bhts", q, kq) / jnp.sqrt(jnp.float32(cfg.d_head))
+    scores = jnp.where(att_ok[:, None] if att_ok.ndim == 3 else att_ok[None, None],
+                       scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhts,bsr->bthr", probs, z_v)             # [B,T,h,rv]
+    out = ctx.reshape(b, s_len, cfg.n_heads * rv) @ p[f"L{l}.wo_fused"]
+    return out, z_k, z_v
+
+
+def forward_compressed(p: Params, spec: CompressionSpec, cfg: ModelConfig,
+                       tokens: jnp.ndarray) -> jnp.ndarray:
+    """Compressed score path: tokens [B,S] -> logits [B,S,V]."""
+    b, s_len = tokens.shape
+    x = p["embed"][tokens]
+    cos, sin = rope_tables(cfg, s_len)
+    causal = jnp.tril(jnp.ones((s_len, s_len), bool))
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(x, p[f"L{l}.ln1"])
+        out, _, _ = _compressed_attn_seq(p, spec, cfg, l, xn, cos, sin, causal)
+        x = x + out
+        x = x + _swiglu(p, l, rmsnorm(x, p[f"L{l}.ln2"]))
+    x = rmsnorm(x, p["norm_f"])
+    return x @ p["embed"].T
+
+
+def prefill_compressed(p: Params, spec: CompressionSpec, cfg: ModelConfig,
+                       tokens: jnp.ndarray, length: jnp.ndarray):
+    """Compressed prefill: returns (logits_last [B,V], zks, zvs); zks[l] is
+    [B,S,g,rk_l], zvs[l] is [B,S,rv_l]; positions >= length zeroed."""
+    b, s_len = tokens.shape
+    x = p["embed"][tokens]
+    cos, sin = rope_tables(cfg, s_len)
+    causal = jnp.tril(jnp.ones((s_len, s_len), bool))
+    lmask = jnp.arange(s_len)[None] < length[:, None]
+    att_ok = causal[None] & lmask[:, None, :]
+    zks: List[jnp.ndarray] = []
+    zvs: List[jnp.ndarray] = []
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(x, p[f"L{l}.ln1"])
+        out, z_k, z_v = _compressed_attn_seq(p, spec, cfg, l, xn, cos, sin, att_ok)
+        zks.append(jnp.where(lmask[..., None, None], z_k, 0.0))
+        zvs.append(jnp.where(lmask[..., None], z_v, 0.0))
+        x = x + out
+        x = x + _swiglu(p, l, rmsnorm(x, p[f"L{l}.ln2"]))
+    x = rmsnorm(x, p["norm_f"])
+    last = jnp.take_along_axis(x, (length - 1)[:, None, None], axis=1)[:, 0]
+    return last @ p["embed"].T, zks, zvs
+
+
+def decode_compressed(p: Params, spec: CompressionSpec, cfg: ModelConfig,
+                      token: jnp.ndarray, length: jnp.ndarray,
+                      zks: List[jnp.ndarray], zvs: List[jnp.ndarray],
+                      use_pallas: bool = True):
+    """One compressed decode step — the serving hot path.
+
+    token [B]; length [B] (cached tokens; the new token sits at `length`).
+    zks[l] [B,S,g,rk], zvs[l] [B,S,rv] are read-only caches assembled by the
+    rust kvcache; the new entries are *returned* (rust appends them).
+    Calls the L1 pallas kernels when use_pallas (the AOT decode graph does).
+    """
+    b = token.shape[0]
+    s_len = zks[0].shape[1]
+    x = p["embed"][token]
+    cos_t, sin_t = rope_tables(cfg, cfg.max_seq)
+    cos_p, sin_p = cos_t[length], sin_t[length]
+    cos_c, sin_c = cos_t[:s_len], sin_t[:s_len]
+    valid = jnp.arange(s_len)[None] <= length[:, None]
+    new_zks: List[jnp.ndarray] = []
+    new_zvs: List[jnp.ndarray] = []
+    for l in range(cfg.n_layers):
+        g = spec.n_groups(cfg)
+        rk = spec.key_ranks[l]
+        xn = rmsnorm(x, p[f"L{l}.ln1"])
+        q = (xn @ p[f"L{l}.wq"]).reshape(b, cfg.n_heads, cfg.d_head)
+        q = ref.rope_rotate(q, cos_p[:, None, :], sin_p[:, None, :])
+        zk_new = (xn @ p[f"L{l}.Lk"]).reshape(b, g, rk)
+        zv_new = xn @ p[f"L{l}.Lv"]
+        new_zks.append(zk_new.reshape(b, g * rk))
+        new_zvs.append(zv_new)
+        zk = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n[None], (i, 0, 0)))(
+            zks[l], zk_new, length)
+        zv = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n[None], (i, 0)))(
+            zvs[l], zv_new, length)
+        if use_pallas:
+            scores = grouped_key_scores(q, zk, p[f"L{l}.Rk"], cos_c, sin_c)
+        else:
+            scores = ref.ref_grouped_key_scores(q, zk, p[f"L{l}.Rk"], cos_c, sin_c)
+        scores = jnp.where(valid[:, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = latent_ctx(probs, zv) if use_pallas else ref.ref_latent_ctx(probs, zv)
+        x = x + ctx.reshape(b, cfg.n_heads * spec.value_ranks[l]) @ p[f"L{l}.wo_fused"]
+        x = x + _swiglu(p, l, rmsnorm(x, p[f"L{l}.ln2"]))
+    x = rmsnorm(x, p["norm_f"])
+    return x @ p["embed"].T, new_zks, new_zvs
+
+
+MODELS: Dict[str, ModelConfig] = {
+    "tiny-mha": ModelConfig(name="tiny-mha", n_heads=8, n_kv_heads=8),
+    "tiny-gqa": ModelConfig(name="tiny-gqa", n_heads=8, n_kv_heads=4),
+}

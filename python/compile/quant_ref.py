@@ -1,0 +1,71 @@
+"""NumPy reference for the runtime latent-cache quantization (paper §4.4).
+
+The rust cache (rust/src/quant/) quantizes stored latents per token with a
+randomized *blockwise* Walsh-Hadamard transform first. Latent dims are
+multiples of 4 but rarely powers of two (e.g. g·rk = 48), so the transform
+runs on chunks of size 2^k where 2^k is the largest power of two dividing n
+(capped at 64): outlier energy is still spread within each chunk, the
+transform stays orthonormal and exactly invertible, and no padding distorts
+the memory accounting. rust/tests + goldens assert bit-identical behaviour.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+MAX_BLOCK = 64
+
+
+def hadamard_block_size(n: int) -> int:
+    b = n & (-n)  # largest power of two dividing n
+    return min(b, MAX_BLOCK)
+
+
+def blockwise_hadamard(x: np.ndarray, signs: np.ndarray) -> np.ndarray:
+    """y = (x·diag(signs)) (I ⊗ H_b)/√b over the last dim."""
+    n = x.shape[-1]
+    b = hadamard_block_size(n)
+    # iterative FWHT per chunk
+    y = (x * signs).reshape(-1, b).copy()
+    h = 1
+    while h < b:
+        for start in range(0, b, 2 * h):
+            a = y[:, start:start + h].copy()
+            c = y[:, start + h:start + 2 * h].copy()
+            y[:, start:start + h] = a + c
+            y[:, start + h:start + 2 * h] = a - c
+        h *= 2
+    y = y / np.sqrt(np.float32(b))
+    return y.reshape(*x.shape[:-1], n).astype(np.float32)
+
+
+def blockwise_hadamard_inverse(y: np.ndarray, signs: np.ndarray) -> np.ndarray:
+    """Inverse: (1/√b)(I⊗H_b) is symmetric orthogonal, then undo the signs."""
+    x = blockwise_hadamard(y, np.ones_like(signs))
+    return (x * signs).astype(np.float32)
+
+
+def quant_pertoken(x: np.ndarray, bits: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-token quantization (round-half-away like rust's
+    f32::round). Returns (q int32, scale [tokens])."""
+    qmax = (1 << (bits - 1)) - 1
+    amax = np.max(np.abs(x), axis=-1)
+    scale = np.where(amax > 0, amax / qmax, 1.0).astype(np.float32)
+    # np.round is banker's rounding; emulate rust round-half-away-from-zero
+    z = x / scale[..., None]
+    q = np.sign(z) * np.floor(np.abs(z) + 0.5)
+    q = np.clip(q, -qmax, qmax).astype(np.int32)
+    return q, scale
+
+
+def dequant_pertoken(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    return (q.astype(np.float32) * scale[..., None]).astype(np.float32)
+
+
+def quant_roundtrip(x: np.ndarray, signs: np.ndarray, bits: int) -> np.ndarray:
+    """Full cache-storage roundtrip: hadamard → quant → dequant → inverse."""
+    y = blockwise_hadamard(x, signs)
+    q, s = quant_pertoken(y, bits)
+    return blockwise_hadamard_inverse(dequant_pertoken(q, s), signs)

@@ -1,0 +1,65 @@
+"""Tensor archive I/O (.rtz) — the python↔rust weight interchange format.
+
+Layout (all little-endian):
+    magic   b"RTZ1"
+    u32     n_tensors
+    per tensor:
+        u32     name_len, then name bytes (utf-8)
+        u8      dtype   (0 = f32, 1 = i32, 2 = f16)
+        u8      ndim
+        u32[ndim] dims
+        u64     nbytes, then raw row-major bytes
+
+The rust reader lives in rust/src/artifacts/tensors.rs and must stay in
+lockstep with this writer; `golden_crosscheck.rs` asserts a round trip.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"RTZ1"
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.float16}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.float16): 2}
+
+
+def save_rtz(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    """Write a named-tensor archive. Keys are sorted for determinism."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name])
+            if arr.dtype not in _CODES:
+                arr = arr.astype(np.float32)
+            code = _CODES[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def load_rtz(path: str) -> Dict[str, np.ndarray]:
+    """Read a named-tensor archive written by save_rtz (or the rust writer)."""
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic, not an RTZ1 archive")
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            raw = f.read(nbytes)
+            out[name] = np.frombuffer(raw, dtype=_DTYPES[code]).reshape(dims).copy()
+    return out

@@ -1,0 +1,90 @@
+"""Build-time training of the tiny evaluation models (no optax available —
+AdamW implemented from scratch).
+
+The paper compresses *pre-trained* LLMs; offline we must produce our own
+(DESIGN.md §2): a LLaMA-style byte-level LM trained on the synthetic corpus
+until it has clearly learned the corpus regularities (loss ≪ log(vocab)),
+so that compression-induced degradation is measurable. Weights are cached in
+artifacts/<model>/weights.rtz; `make artifacts` skips training when the cache
+exists.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .model import ModelConfig, Params, init_params, loss_full
+
+
+def adamw_init(params: Params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_step(params: Params, grads: Params, state, lr: float,
+               b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+               wd: float = 0.01):
+    t = state["t"] + 1
+    new_m, new_v, new_p = {}, {}, {}
+    bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+    for k, g in grads.items():
+        m = b1 * state["m"][k] + (1 - b1) * g
+        v = b2 * state["v"][k] + (1 - b2) * jnp.square(g)
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        decay = 0.0 if k.endswith((".ln1", ".ln2")) or k == "norm_f" else wd
+        new_p[k] = params[k] - lr * (upd + decay * params[k])
+        new_m[k], new_v[k] = m, v
+    return new_p, {"m": new_m, "v": new_v, "t": t}
+
+
+def cosine_lr(step: int, total: int, peak: float = 3e-3, warmup: int = 40) -> float:
+    if step < warmup:
+        return peak * (step + 1) / warmup
+    frac = (step - warmup) / max(1, total - warmup)
+    return 0.1 * peak + 0.45 * peak * (1 + np.cos(np.pi * frac))
+
+
+def batches(seed: int, n_steps: int, batch: int, seq: int):
+    """Deterministic stream of token batches from the synthetic corpus."""
+    stream = data.train_stream(seed, n_steps * batch * seq + 1)
+    arr = np.asarray(stream, np.int32)
+    for i in range(n_steps):
+        chunk = arr[i * batch * seq:(i + 1) * batch * seq].reshape(batch, seq)
+        yield chunk
+
+
+def train(cfg: ModelConfig, steps: int = 600, batch: int = 16, seq: int = 256,
+          seed: int = 0, log_every: int = 50) -> Tuple[Params, Dict[str, list]]:
+    """Train from scratch; returns (params, history). Logged to stdout so the
+    E2E run in EXPERIMENTS.md records the loss curve."""
+    params = init_params(cfg, seed)
+    state = adamw_init(params)
+    loss_grad = jax.jit(jax.value_and_grad(lambda p, t: loss_full(p, cfg, t)))
+
+    @jax.jit
+    def opt_step(p, g, s, lr):
+        return adamw_step(p, g, s, lr)
+
+    history = {"step": [], "loss": [], "lr": []}
+    t0 = time.time()
+    for step, toks in enumerate(batches(seed, steps, batch, seq)):
+        lr = cosine_lr(step, steps)
+        loss, grads = loss_grad(params, jnp.asarray(toks))
+        params, state = opt_step(params, grads, state, lr)
+        if step % log_every == 0 or step == steps - 1:
+            lv = float(loss)
+            history["step"].append(step)
+            history["loss"].append(lv)
+            history["lr"].append(lr)
+            print(f"[train:{cfg.name}] step {step:4d}/{steps} "
+                  f"loss {lv:.4f} lr {lr:.2e} ({time.time()-t0:.0f}s)",
+                  flush=True)
+    return params, history

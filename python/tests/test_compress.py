@@ -1,0 +1,195 @@
+"""Compression-pipeline invariants: SVD/whitening optimality, calibration
+monotonicity, CKA properties, reordering validity, fusion equivalence."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.compress import calibrate, cka, fuse, reorder, svd
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+class TestSvd:
+    def test_lowrank_eckart_young_exact(self):
+        rng = np.random.default_rng(0)
+        w = rand(rng, 12, 3) @ rand(rng, 3, 16)
+        l, r = svd.svd_lowrank(w, 3)
+        np.testing.assert_allclose(l @ r, w, atol=1e-4)
+
+    def test_whitened_optimal_under_data_metric(self):
+        """Whitened SVD must beat plain SVD in the X-weighted norm when the
+        calibration distribution is anisotropic (the SVD-LLM claim)."""
+        rng = np.random.default_rng(1)
+        d, n, r = 24, 32, 6
+        w = rand(rng, d, n)
+        x = rand(rng, 400, d) * 0.1
+        x[:, :4] += rand(rng, 400, 4) * 3.0
+        m = (x.T @ x).astype(np.float32)
+        lp, rp = svd.svd_lowrank(w, r)
+        lw, rw = svd.whitened_svd_lowrank(w, r, m)
+        e_plain = svd.recon_error(w, lp, rp, m)
+        e_white = svd.recon_error(w, lw, rw, m)
+        assert e_white <= e_plain * 1.001
+
+    @settings(max_examples=10, deadline=None)
+    @given(r=st.integers(2, 8))
+    def test_error_decreases_with_rank(self, r):
+        rng = np.random.default_rng(r)
+        w = rand(rng, 16, 20)
+        l1, r1 = svd.svd_lowrank(w, r)
+        l2, r2 = svd.svd_lowrank(w, r + 2)
+        assert svd.recon_error(w, l2, r2) <= svd.recon_error(w, l1, r1) + 1e-5
+
+    def test_grouped_svd_shapes_and_blockstructure(self):
+        rng = np.random.default_rng(3)
+        d, h, dh = 16, 8, 4
+        w = rand(rng, d, h * dh)
+        perm = list(range(h))
+        l, r = svd.grouped_svd(w, perm, 4, 5, dh)
+        assert l.shape == (d, 2 * 5)
+        assert r.shape == (2, 5, 4 * dh)
+
+
+class TestCalibration:
+    def test_monotone_nonincreasing(self):
+        rng = np.random.default_rng(4)
+        w = rand(rng, 20, 24)
+        x = rand(rng, 200, 20)
+        m = (x.T @ x).astype(np.float32)
+        l, r = svd.svd_lowrank(w, 8)
+        _, _, hist = calibrate.calibrate(w, l, r, m)
+        tol = 1e-6 * max(abs(hist[0]), 1.0)
+        assert all(b <= a * 1.000001 + tol for a, b in zip(hist, hist[1:])), hist
+        assert hist[-1] < hist[0]
+
+    def test_improves_plain_svd_toward_whitened(self):
+        """Calibration of plain-SVD factors should approach the whitened
+        optimum under the same metric (paper §3.3's motivation)."""
+        rng = np.random.default_rng(5)
+        d, n, r = 20, 24, 5
+        w = rand(rng, d, n)
+        x = rand(rng, 300, d) * 0.1
+        x[:, :3] += rand(rng, 300, 3) * 4.0
+        m = (x.T @ x).astype(np.float32)
+        l0, r0 = svd.svd_lowrank(w, r)
+        lw, rw = svd.whitened_svd_lowrank(w, r, m)
+        lc, rc, hist = calibrate.calibrate(w, l0, r0, m, max_iters=25)
+        e_cal = hist[-1]
+        e_white = svd.recon_error(w, lw, rw, m)
+        e_plain = hist[0]
+        assert e_cal < e_plain
+        # within 25% of the data-optimal solution (ALS is a local method)
+        assert e_cal <= e_white * 1.25 + 1e-6
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_never_increases_error(self, seed):
+        rng = np.random.default_rng(seed)
+        w = rand(rng, 10, 12)
+        x = rand(rng, 50, 10)
+        m = (x.T @ x).astype(np.float32)
+        l, r = svd.svd_lowrank(w, 4)
+        _, _, hist = calibrate.calibrate(w, l, r, m, max_iters=4)
+        assert hist[-1] <= hist[0] * 1.000001
+
+
+class TestCka:
+    def test_linear_hsic_matches_gram_form(self):
+        rng = np.random.default_rng(6)
+        x, y = rand(rng, 30, 5), rand(rng, 30, 7)
+        np.testing.assert_allclose(
+            cka.hsic_linear(x, y), cka.hsic_gram(x, y), rtol=1e-3)
+
+    def test_self_similarity(self):
+        rng = np.random.default_rng(7)
+        x = rand(rng, 40, 6)
+        assert cka.cka(x, x) == pytest.approx(1.0, abs=1e-6)
+
+    def test_orthogonal_invariance(self):
+        rng = np.random.default_rng(8)
+        x = rand(rng, 50, 4)
+        q, _ = np.linalg.qr(rand(rng, 4, 4))
+        assert cka.cka(x, x @ q) == pytest.approx(1.0, abs=1e-5)
+
+    def test_similarity_matrix_symmetric_unit_diag(self):
+        rng = np.random.default_rng(9)
+        x = rand(rng, 64, 16)
+        wk = rand(rng, 16, 4 * 4)
+        s = cka.head_similarity_matrix(x, wk, 4)
+        np.testing.assert_allclose(s, s.T, atol=1e-7)
+        np.testing.assert_allclose(np.diag(s), 1.0)
+        assert (s >= -1e-7).all() and (s <= 1 + 1e-7).all()
+
+
+class TestReorder:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000), h=st.sampled_from([4, 8]), gs=st.sampled_from([2, 4]))
+    def test_valid_permutation(self, seed, h, gs):
+        if h % gs:
+            return
+        rng = np.random.default_rng(seed)
+        s = rng.uniform(0, 1, (h, h)).astype(np.float32)
+        s = (s + s.T) / 2
+        np.fill_diagonal(s, 1.0)
+        perm = reorder.greedy_group_heads(s, gs)
+        assert sorted(perm) == list(range(h))
+
+    def test_reordering_improves_within_group_similarity(self):
+        rng = np.random.default_rng(11)
+        # planted structure: blocks {0,4}, {1,5}, {2,6}, {3,7} similar
+        h = 8
+        s = np.full((h, h), 0.1, np.float32)
+        for i in range(4):
+            s[i, i + 4] = s[i + 4, i] = 0.9
+        np.fill_diagonal(s, 1.0)
+        perm = reorder.greedy_group_heads(s, 2)
+        before = reorder.within_group_similarity(s, list(range(h)), 2)
+        after = reorder.within_group_similarity(s, perm, 2)
+        assert after > before
+        assert after == pytest.approx(0.9, abs=1e-6)
+
+
+class TestFusion:
+    def test_fused_output_equals_unfused(self):
+        """Eq. 9-11: Attention(...)·W_o == latent-ctx·W̃_o exactly."""
+        rng = np.random.default_rng(12)
+        d, h, kvh, dh, rv, s = 16, 4, 4, 4, 6, 10
+        w_v = rand(rng, d, kvh * dh)
+        w_o = rand(rng, h * dh, d)
+        l_v, r_v = svd.svd_lowrank(w_v, rv)
+        x = rand(rng, s, d)
+        probs = np.abs(rand(rng, h, s))
+        probs /= probs.sum(-1, keepdims=True)
+        # unfused: reconstruct values, attend, project
+        v_full = x @ l_v @ r_v  # [s, kvh*dh]
+        ctx_full = np.concatenate(
+            [probs[i] @ v_full[:, i * dh:(i + 1) * dh] for i in range(h)])
+        out_ref = ctx_full @ w_o
+        # fused: latent ctx through W̃_o
+        q_order = fuse.q_head_order(list(range(kvh)), h, kvh)
+        w_tilde = fuse.fuse_output(r_v, w_o, q_order, dh, kvh, h)
+        z_v = x @ l_v
+        ctx_lat = np.concatenate([probs[i] @ z_v for i in range(h)])
+        out_fused = ctx_lat @ w_tilde
+        np.testing.assert_allclose(out_fused, out_ref, rtol=1e-4, atol=1e-4)
+
+    def test_gqa_fusion_maps_heads_correctly(self):
+        rng = np.random.default_rng(13)
+        d, h, kvh, dh, rv = 16, 8, 4, 4, 6
+        w_v = rand(rng, d, kvh * dh)
+        w_o = rand(rng, h * dh, d)
+        l_v, r_v = svd.svd_lowrank(w_v, rv)
+        q_order = fuse.q_head_order(list(range(kvh)), h, kvh)
+        w_tilde = fuse.fuse_output(r_v, w_o, q_order, dh, kvh, h)
+        assert w_tilde.shape == (h * rv, d)
+        # q-heads 0,1 share kv-head 0: their blocks use the same R_v slice
+        blk0 = w_tilde[0 * rv:1 * rv]
+        expect0 = r_v[:, 0:dh] @ w_o[0 * dh:1 * dh]
+        np.testing.assert_allclose(blk0, expect0, atol=1e-6)
+
+    def test_q_head_order_with_reordering(self):
+        order = fuse.q_head_order([2, 0, 3, 1], 8, 4)
+        assert order == [4, 5, 0, 1, 6, 7, 2, 3]

@@ -1,0 +1,99 @@
+"""Corpus/task generator determinism + structure (the rust side mirrors
+these generators byte-for-byte; see rust/tests/golden_crosscheck.rs)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import data
+
+
+class TestRng:
+    def test_known_stream(self):
+        r = data.Rng(42)
+        a = [r.next_u64() for _ in range(4)]
+        r2 = data.Rng(42)
+        assert a == [r2.next_u64() for _ in range(4)]
+
+    @settings(max_examples=20)
+    @given(seed=st.integers(1, 2**63), n=st.integers(1, 1000))
+    def test_below_in_range(self, seed, n):
+        r = data.Rng(seed)
+        assert all(r.below(n) < n for _ in range(20))
+
+    def test_shuffle_is_permutation(self):
+        r = data.Rng(7)
+        xs = list(range(20))
+        r.shuffle(xs)
+        assert sorted(xs) == list(range(20))
+
+
+class TestCorpus:
+    def test_splits_deterministic(self):
+        a = data.ppl_split("wiki", 42, 512)
+        b = data.ppl_split("wiki", 42, 512)
+        assert a == b
+
+    def test_splits_distinct(self):
+        assert data.ppl_split("wiki", 42, 512) != data.ppl_split("c4", 42, 512)
+
+    def test_all_bytes_ascii(self):
+        toks = data.train_stream(1, 2048)
+        assert all(0 < t < 128 for t in toks)
+
+    def test_train_stream_contains_all_patterns(self):
+        text = data.decode(data.train_stream(3, 20000))
+        for marker in ["has a", "likes", "count", "pattern", "say", "code",
+                       "maps to", "magic word", "lives in", "q color of"]:
+            assert marker in text, marker
+
+
+class TestMcTasks:
+    @settings(max_examples=12)
+    @given(task=st.sampled_from(list(data.MC_TASKS)), seed=st.integers(1, 10_000))
+    def test_instances_valid(self, task, seed):
+        for inst in data.gen_mc(task, seed, 5):
+            assert 0 <= inst.answer < len(inst.choices)
+            assert len(set(i for i in range(len(inst.choices)))) == len(inst.choices)
+            assert inst.context
+
+    def test_answer_distribution_not_degenerate(self):
+        """Shuffling must spread the gold index across positions."""
+        for task in data.MC_TASKS:
+            answers = [i.answer for i in data.gen_mc(task, 42, 60)]
+            assert len(set(answers)) >= 2, task
+
+    def test_correct_choice_is_semantically_right(self):
+        for inst in data.gen_mc("agree", 42, 20):
+            animal = inst.context.split()[1]
+            assert inst.choices[inst.answer] == data.ANIMAL_SOUND[animal]
+        for inst in data.gen_mc("world", 42, 20):
+            thing = inst.context.split()[3]
+            assert inst.choices[inst.answer] == data.THING_COLOR[thing]
+
+
+class TestLongTasks:
+    @settings(max_examples=10, deadline=None)
+    @given(task=st.sampled_from(list(data.LONG_TASKS)), seed=st.integers(1, 1000))
+    def test_instances_valid(self, task, seed):
+        for inst in data.gen_long(task, seed, 2, 200):
+            assert inst.expected
+            assert inst.prompt.endswith(" ")
+            assert len(inst.prompt) >= 100
+
+    def test_needle_contains_needle(self):
+        for inst in data.gen_long("needle", 42, 8, 200):
+            assert f"the magic word is {inst.expected} ." in inst.prompt
+
+    def test_kvrecall_answer_stated_in_context(self):
+        for inst in data.gen_long("kvrecall", 42, 8, 300):
+            key = inst.prompt.rsplit("item ", 1)[1].split()[0]
+            assert f"item {key} maps to {inst.expected} ." in inst.prompt
+
+
+class TestCalibration:
+    def test_calibration_batch_shapes(self):
+        cal = data.calibration_batch(42, 16, 128)
+        assert len(cal) == 16
+        assert all(len(s) == 128 for s in cal)
+        arr = np.asarray(cal)
+        assert (arr >= 0).all() and (arr < 256).all()

@@ -1,0 +1,171 @@
+"""L2 model graph consistency: full vs compressed shapes, prefill/decode
+equivalence against the score path, GQA coverage."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import data
+from compile.compress import fisher as F, pipeline
+from compile.model import (MODELS, ModelConfig, decode_compressed, decode_full,
+                           forward_compressed, forward_full, init_params,
+                           loss_full, prefill_compressed, prefill_full)
+
+TINY = ModelConfig(name="test", d_model=64, n_layers=2, n_heads=4,
+                   n_kv_heads=4, d_head=16, d_ff=96, max_seq=256)
+TINY_GQA = ModelConfig(name="test-gqa", d_model=64, n_layers=2, n_heads=4,
+                       n_kv_heads=2, d_head=16, d_ff=96, max_seq=256)
+
+
+@pytest.fixture(scope="module", params=["mha", "gqa"])
+def setup(request):
+    cfg = TINY if request.param == "mha" else TINY_GQA
+    params = init_params(cfg, seed=1)
+    cal = data.calibration_batch(5, 8, 64)
+    batches = [np.asarray(cal[:4], np.int32), np.asarray(cal[4:], np.int32)]
+    stats = pipeline.collect_stats(params, cfg, batches, sample_rows=128)
+    fs = F.fisher_info(params, cfg, batches[:1])
+    comp, spec, diag = pipeline.build_variant(params, cfg, "recal", 0.5, stats, fs)
+    return cfg, params, comp, spec
+
+
+class TestFullModel:
+    def test_forward_shapes(self, setup):
+        cfg, params, _, _ = setup
+        toks = jnp.zeros((2, 16), jnp.int32)
+        logits = forward_full(params, cfg, toks)
+        assert logits.shape == (2, 16, cfg.vocab)
+
+    def test_loss_finite_and_near_uniform_at_init(self, setup):
+        cfg, params, _, _ = setup
+        toks = jnp.asarray(np.random.default_rng(0).integers(0, 255, (2, 32)), jnp.int32)
+        loss = float(loss_full(params, cfg, toks))
+        assert np.isfinite(loss)
+        assert abs(loss - np.log(cfg.vocab)) < 1.0
+
+    def test_causality(self, setup):
+        """Changing a future token must not change past logits."""
+        cfg, params, _, _ = setup
+        rng = np.random.default_rng(1)
+        toks = rng.integers(32, 127, (1, 24)).astype(np.int32)
+        l1 = forward_full(params, cfg, jnp.asarray(toks))
+        toks2 = toks.copy()
+        toks2[0, 20] = 65
+        l2 = forward_full(params, cfg, jnp.asarray(toks2))
+        np.testing.assert_allclose(l1[0, :20], l2[0, :20], atol=1e-5)
+
+    def test_prefill_decode_match_score(self, setup):
+        cfg, params, _, _ = setup
+        rng = np.random.default_rng(2)
+        B, S, L = 2, 64, 17
+        toks = rng.integers(32, 127, (B, S)).astype(np.int32)
+        length = jnp.asarray([L, L - 5], jnp.int32)
+        _, ks, vs = prefill_full(params, cfg, jnp.asarray(toks), length)
+        nxt = jnp.asarray([66, 67], jnp.int32)
+        logits, _, _ = decode_full(params, cfg, nxt, length, ks, vs)
+        for b in range(B):
+            seq = list(toks[b][: int(length[b])]) + [int(nxt[b])]
+            ref = forward_full(params, cfg,
+                               jnp.asarray([seq + [0] * (S - len(seq))], jnp.int32))
+            np.testing.assert_allclose(
+                logits[b], ref[0, len(seq) - 1], rtol=1e-3, atol=1e-3)
+
+
+class TestCompressedModel:
+    def test_score_shapes(self, setup):
+        cfg, _, comp, spec = setup
+        toks = jnp.zeros((2, 16), jnp.int32)
+        logits = forward_compressed(comp, spec, cfg, toks)
+        assert logits.shape == (2, 16, cfg.vocab)
+
+    def test_compression_close_to_full_at_50pct(self, setup):
+        cfg, params, comp, spec = setup
+        rng = np.random.default_rng(3)
+        toks = jnp.asarray(rng.integers(32, 127, (2, 32)), jnp.int32)
+        lf = forward_full(params, cfg, toks)
+        lc = forward_compressed(comp, spec, cfg, toks)
+        # compressed logits track the full model (untrained weights, 50%)
+        rel = float(jnp.abs(lf - lc).max() / (jnp.abs(lf).max() + 1e-9))
+        assert rel < 0.5, rel
+
+    def test_prefill_decode_match_score_pallas(self, setup):
+        """The serving-path decode (with pallas kernels) must equal the
+        teacher-forced score path — the core runtime correctness claim."""
+        cfg, _, comp, spec = setup
+        rng = np.random.default_rng(4)
+        B, S, L = 2, 128, 21
+        toks = rng.integers(32, 127, (B, S)).astype(np.int32)
+        length = jnp.asarray([L, L - 7], jnp.int32)
+        _, zks, zvs = prefill_compressed(comp, spec, cfg, jnp.asarray(toks), length)
+        nxt = jnp.asarray([65, 66], jnp.int32)
+        logits, nzk, nzv = decode_compressed(comp, spec, cfg, nxt, length, zks, zvs,
+                                             use_pallas=True)
+        for b in range(B):
+            seq = list(toks[b][: int(length[b])]) + [int(nxt[b])]
+            ref = forward_compressed(comp, spec, cfg,
+                                     jnp.asarray([seq + [0] * (S - len(seq))], jnp.int32))
+            np.testing.assert_allclose(
+                logits[b], ref[0, len(seq) - 1], rtol=2e-3, atol=2e-3)
+
+    def test_new_latents_match_prefill_row(self, setup):
+        """Latents returned by decode equal what prefill would produce at
+        that position (cache-append correctness)."""
+        cfg, _, comp, spec = setup
+        rng = np.random.default_rng(5)
+        B, S, L = 2, 128, 30
+        toks = rng.integers(32, 127, (B, S)).astype(np.int32)
+        length = jnp.asarray([L, L], jnp.int32)
+        _, zks, zvs = prefill_compressed(comp, spec, cfg, jnp.asarray(toks), length)
+        nxt = jnp.asarray([int(toks[0, L]), int(toks[1, L])], jnp.int32)
+        _, nzk, nzv = decode_compressed(comp, spec, cfg, nxt, length, zks, zvs,
+                                        use_pallas=False)
+        length2 = jnp.asarray([L + 1, L + 1], jnp.int32)
+        _, zks2, zvs2 = prefill_compressed(comp, spec, cfg, jnp.asarray(toks), length2)
+        for l in range(cfg.n_layers):
+            want_k = np.asarray(zks2[l][:, L].reshape(B, -1))
+            np.testing.assert_allclose(np.asarray(nzk[l]), want_k, rtol=2e-3, atol=2e-3)
+            want_v = np.asarray(zvs2[l][:, L])
+            np.testing.assert_allclose(np.asarray(nzv[l]), want_v, rtol=2e-3, atol=2e-3)
+
+
+class TestPipelineVariants:
+    @pytest.mark.parametrize("method", ["palu", "recal_nohsr", "recal_nocal", "recal_none"])
+    def test_all_methods_produce_runnable_models(self, setup, method):
+        cfg, params, _, _ = setup
+        cal = data.calibration_batch(5, 4, 64)
+        batches = [np.asarray(cal, np.int32)]
+        stats = pipeline.collect_stats(params, cfg, batches, sample_rows=64)
+        fs = F.fisher_info(params, cfg, batches)
+        comp, spec, diag = pipeline.build_variant(params, cfg, method, 0.6, stats, fs)
+        toks = jnp.zeros((1, 8), jnp.int32)
+        logits = forward_compressed(comp, spec, cfg, toks)
+        assert np.isfinite(np.asarray(logits)).all()
+        assert spec.method == method
+
+    def test_achieved_ratio_near_target(self, setup):
+        cfg, params, _, spec = setup
+        ar = F.achieved_ratio(list(spec.key_ranks), list(spec.value_ranks), cfg,
+                              spec.group_size)
+        assert abs(ar - 0.5) < 0.06
+
+    def test_hsr_within_group_similarity_never_decreases(self, setup):
+        cfg, params, comp, spec = setup
+        cal = data.calibration_batch(5, 4, 64)
+        stats = pipeline.collect_stats(params, cfg, [np.asarray(cal, np.int32)],
+                                       sample_rows=64)
+        fs = F.fisher_info(params, cfg, [np.asarray(cal, np.int32)])
+        _, _, diag = pipeline.build_variant(params, cfg, "recal", 0.5, stats, fs)
+        for b, a in zip(diag.within_sim_before, diag.within_sim_after):
+            assert a >= b - 1e-9
+
+    def test_calibration_histories_monotone(self, setup):
+        cfg, params, _, _ = setup
+        cal = data.calibration_batch(5, 4, 64)
+        stats = pipeline.collect_stats(params, cfg, [np.asarray(cal, np.int32)],
+                                       sample_rows=64)
+        fs = F.fisher_info(params, cfg, [np.asarray(cal, np.int32)])
+        _, _, diag = pipeline.build_variant(params, cfg, "recal", 0.5, stats, fs)
+        for hist in diag.calib_histories:
+            tol = 1e-6 * max(abs(hist[0]), 1.0)  # f32 noise near exact rank
+            assert all(b <= a * 1.00001 + tol for a, b in zip(hist, hist[1:])), hist

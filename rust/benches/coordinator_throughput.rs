@@ -1,0 +1,97 @@
+//! L3 hot-path benchmark: end-to-end decode throughput through the engine,
+//! batching-policy ablation, and the staging (gather + dequant) micro-path.
+//! This is the §Perf harness for the coordinator layer.
+//!
+//!   cargo bench --bench coordinator_throughput -- --requests 16
+
+use recalkv::artifacts::Manifest;
+use recalkv::coordinator::{Engine, EngineConfig, GenRequest};
+use recalkv::kvcache::{CacheConfig, KvCache};
+use recalkv::quant::QuantKind;
+use recalkv::runtime::Runtime;
+use recalkv::util::bench::{bench, Table};
+use recalkv::util::cli::Args;
+use recalkv::util::rng::Rng;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"), &[]);
+    staging_microbench();
+
+    let man = match Manifest::load(args.opt_or("artifacts", "artifacts")) {
+        Ok(m) => m,
+        Err(_) => {
+            println!("[skip] artifacts/ not built — staging microbench only");
+            return Ok(());
+        }
+    };
+    let rt = Runtime::cpu()?;
+    let model = man.model("tiny-mha")?;
+    let n_req = args.usize_or("requests", 8);
+    let max_new = args.usize_or("max-new", 12);
+
+    let mut t = Table::new(
+        "Coordinator throughput (end-to-end serving)",
+        &["variant", "quant", "decode ms/step", "decode tok/s", "prefill ms", "ttft ms", "occupancy"],
+    );
+    for (vname, quant) in [
+        ("full", QuantKind::F32),
+        ("recal@50", QuantKind::F32),
+        ("recal@50", QuantKind::Int4),
+        ("recal@70", QuantKind::F32),
+    ] {
+        let variant = model.variant(vname)?;
+        let mut engine = Engine::new(&rt, model, variant,
+                                     EngineConfig { quant, ..Default::default() })?;
+        let insts = recalkv::eval::tasks::gen_long("needle", 42, n_req, 200);
+        for (i, inst) in insts.iter().enumerate() {
+            let prompt = recalkv::coordinator::tokenizer::encode(&inst.prompt);
+            engine.submit(GenRequest::new(i as u64, prompt, max_new));
+        }
+        engine.run_to_completion()?;
+        let m = &engine.metrics;
+        t.row(vec![
+            vname.into(),
+            format!("{quant:?}"),
+            format!("{:.2}", m.decode_time.as_secs_f64() * 1e3 / m.decode_calls.max(1) as f64),
+            format!("{:.1}", m.decode_tokens_per_s()),
+            format!("{:.1}", m.prefill_time.as_secs_f64() * 1e3 / m.prefill_calls.max(1) as f64),
+            format!("{:.1}", m.mean_ttft_ms()),
+            format!("{:.2}", m.mean_batch_occupancy()),
+        ]);
+        t.print_last();
+    }
+    t.print();
+    t.save_tsv("artifacts/tables/coordinator_throughput.tsv");
+    Ok(())
+}
+
+/// Cache staging (gather + dequant) without XLA — the pure-rust hot loop.
+fn staging_microbench() {
+    let mut rng = Rng::new(3);
+    for (quant, label) in [(QuantKind::F32, "stage f32"), (QuantKind::Int4, "stage int4")] {
+        let widths = vec![(96usize, 128usize); 4];
+        let mut cache = KvCache::new(CacheConfig {
+            n_layers: 4,
+            widths,
+            cache_len: 512,
+            tokens_per_block: 32,
+            capacity_tokens: 1 << 15,
+            quant,
+            signs_seed: 7,
+        });
+        let seq = cache.new_seq();
+        let k: Vec<f32> = (0..96).map(|_| rng.normal()).collect();
+        let v: Vec<f32> = (0..128).map(|_| rng.normal()).collect();
+        for _ in 0..400 {
+            let rows: Vec<(&[f32], &[f32])> = (0..4).map(|_| (&k[..], &v[..])).collect();
+            cache.append(seq, &rows).unwrap();
+        }
+        let mut out = vec![0.0f32; 512 * 128];
+        bench(&format!("{label} 400tok x4L"), Duration::from_millis(600), || {
+            for l in 0..4 {
+                cache.stage(seq, l, 1, &mut out, 512).unwrap();
+            }
+        });
+    }
+}

@@ -1,0 +1,32 @@
+//! Regenerates paper Figure 2 (CKA similarity before/after head reordering,
+//! ASCII heatmaps + within-group similarity) and the §1 Fisher-information
+//! analysis figure.
+//!
+//!   cargo bench --bench fig2_cka
+
+use recalkv::artifacts::Manifest;
+use recalkv::eval::report;
+use recalkv::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"), &[]);
+    let man = Manifest::load(args.opt_or("artifacts", "artifacts"))?;
+    let model = args.opt_or("model", "tiny-mha");
+    let fig = report::figure2(&man, model)?;
+    println!("{fig}");
+    std::fs::create_dir_all("artifacts/tables").ok();
+    std::fs::write("artifacts/tables/figure2.txt", &fig)?;
+
+    // within-group similarity deltas recorded at compress time
+    let m = man.model(model)?;
+    for (vname, v) in &m.variants {
+        if v.method == "recal" {
+            println!("{vname}: kv_perms = {:?}", v.kv_perms);
+        }
+    }
+
+    let t = report::fisher_figure(&man, model)?;
+    t.print();
+    t.save_tsv("artifacts/tables/fisher.tsv");
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Micro-benchmarks for the linalg substrate used by the offline mirror and
+//! the quantized cache: matmul, Jacobi SVD, Cholesky, Hadamard transforms.
+
+use recalkv::linalg::hadamard::{forward, inverse, signs_from_seed};
+use recalkv::linalg::{cholesky, svd, Matrix};
+use recalkv::quant::{dequantize, quantize, QuantKind};
+use recalkv::util::bench::bench;
+use recalkv::util::rng::Rng;
+use std::time::Duration;
+
+fn rand_matrix(rng: &mut Rng, m: usize, n: usize) -> Matrix {
+    Matrix::from_fn(m, n, |_, _| rng.normal())
+}
+
+fn main() {
+    let mut rng = Rng::new(5);
+    let budget = Duration::from_millis(700);
+
+    let a = rand_matrix(&mut rng, 256, 256);
+    let b = rand_matrix(&mut rng, 256, 256);
+    let r = bench("matmul 256x256x256", budget, || {
+        std::hint::black_box(a.matmul(&b));
+    });
+    println!(
+        "  -> {:.2} GFLOP/s",
+        2.0 * 256f64.powi(3) / r.median_ns
+    );
+
+    let w = rand_matrix(&mut rng, 256, 128);
+    bench("jacobi svd 256x128", Duration::from_secs(3), || {
+        std::hint::black_box(svd(&w));
+    });
+
+    let g = rand_matrix(&mut rng, 300, 256).gram().add(&Matrix::eye(256).scale(0.5));
+    bench("cholesky 256", budget, || {
+        std::hint::black_box(cholesky(&g).unwrap());
+    });
+
+    let signs = signs_from_seed(9, 128);
+    let mut x: Vec<f32> = (0..512 * 128).map(|_| rng.normal()).collect();
+    let r = bench("hadamard fwd+inv 512x128", budget, || {
+        forward(&mut x, &signs);
+        inverse(&mut x, &signs);
+    });
+    println!(
+        "  -> {:.1} Mtok/s (128-dim rows)",
+        2.0 * 512.0 / (r.median_ns / 1e3)
+    );
+
+    let row: Vec<f32> = (0..128).map(|_| rng.normal()).collect();
+    let mut out = vec![0.0f32; 128];
+    for kind in [QuantKind::Int4, QuantKind::Int3] {
+        let r = bench(&format!("quant+dequant {kind:?} 128-dim"), budget, || {
+            let q = quantize(&row, &signs, kind);
+            dequantize(&q, &signs, &mut out);
+        });
+        println!("  -> {:.1} Mtok/s", 1.0 / (r.median_ns / 1e3));
+    }
+}

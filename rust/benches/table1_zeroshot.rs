@@ -1,0 +1,30 @@
+//! Regenerates paper Table 1: perplexity (3 splits) + six zero-shot tasks,
+//! Palu vs ReCalKV at 50/60/70(/90)% on both models.
+//!
+//! Bench defaults are CI-sized; the full-size run is recorded in
+//! artifacts/tables/e2e_run.txt (via `repro tables`). Override with e.g.
+//!   cargo bench --bench table1_zeroshot -- --mc 32 --ppl-tokens 4096
+
+use recalkv::artifacts::Manifest;
+use recalkv::eval::report::{self, EvalSizes};
+use recalkv::runtime::Runtime;
+use recalkv::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"), &[]);
+    let man = Manifest::load(args.opt_or("artifacts", "artifacts"))?;
+    let mut sizes = EvalSizes::from_manifest(&man);
+    sizes.ppl_tokens = args.usize_or("ppl-tokens", 2048);
+    sizes.mc_per_task = args.usize_or("mc", 16);
+    let models: Vec<String> = args
+        .opt_or("models", "tiny-mha,tiny-gqa")
+        .split(',')
+        .map(String::from)
+        .collect();
+    let refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+    let rt = Runtime::cpu()?;
+    let t = report::table1(&rt, &man, &refs, &sizes)?;
+    t.print();
+    t.save_tsv("artifacts/tables/table1.tsv");
+    Ok(())
+}

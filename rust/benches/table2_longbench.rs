@@ -1,0 +1,29 @@
+//! Regenerates paper Table 2: eight long-context tasks decoded greedily
+//! through the serving engine (prefill + paged latent cache + decode).
+//!
+//! Bench defaults are CI-sized; the full-size run is recorded in
+//! artifacts/tables/e2e_run.txt (via `repro tables`). Override with e.g.
+//!   cargo bench --bench table2_longbench -- --long 8
+
+use recalkv::artifacts::Manifest;
+use recalkv::eval::report::{self, EvalSizes};
+use recalkv::runtime::Runtime;
+use recalkv::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"), &[]);
+    let man = Manifest::load(args.opt_or("artifacts", "artifacts"))?;
+    let mut sizes = EvalSizes::from_manifest(&man);
+    sizes.long_per_task = args.usize_or("long", 4);
+    let models: Vec<String> = args
+        .opt_or("models", "tiny-mha,tiny-gqa")
+        .split(',')
+        .map(String::from)
+        .collect();
+    let refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+    let rt = Runtime::cpu()?;
+    let t = report::table2(&rt, &man, &refs, &sizes)?;
+    t.print();
+    t.save_tsv("artifacts/tables/table2.tsv");
+    Ok(())
+}

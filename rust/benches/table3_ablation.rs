@@ -1,0 +1,25 @@
+//! Regenerates paper Table 3: the HSR × offline-calibration ablation at a
+//! fixed 80% compression ratio on tiny-mha.
+//!
+//! Bench defaults are CI-sized; the full-size run is recorded in
+//! artifacts/tables/e2e_run.txt (via `repro tables`). Override with e.g.
+//!   cargo bench --bench table3_ablation
+
+use recalkv::artifacts::Manifest;
+use recalkv::eval::report::{self, EvalSizes};
+use recalkv::runtime::Runtime;
+use recalkv::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"), &[]);
+    let man = Manifest::load(args.opt_or("artifacts", "artifacts"))?;
+    let mut sizes = EvalSizes::from_manifest(&man);
+    sizes.ppl_tokens = args.usize_or("ppl-tokens", 2048);
+    sizes.mc_per_task = args.usize_or("mc", 16);
+    sizes.long_per_task = args.usize_or("long", 4);
+    let rt = Runtime::cpu()?;
+    let t = report::table3(&rt, &man, &sizes)?;
+    t.print();
+    t.save_tsv("artifacts/tables/table3.tsv");
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Regenerates paper Table 4: low-rank compression combined with per-token
+//! int4/int3 cache quantization (randomized Hadamard), with perplexity
+//! measured through the *serving* path so the quantized paged cache is the
+//! thing under test.
+//!
+//! Bench defaults are CI-sized; the full-size run is recorded in
+//! artifacts/tables/e2e_run.txt (via `repro tables`). Override with e.g.
+//!   cargo bench --bench table4_quant -- --docs 8
+
+use recalkv::artifacts::Manifest;
+use recalkv::eval::report::{self, EvalSizes};
+use recalkv::runtime::Runtime;
+use recalkv::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"), &[]);
+    let man = Manifest::load(args.opt_or("artifacts", "artifacts"))?;
+    let mut sizes = EvalSizes::from_manifest(&man);
+    sizes.engine_ppl_docs = args.usize_or("docs", 4);
+    let rt = Runtime::cpu()?;
+    let t = report::table4(&rt, &man, &sizes)?;
+    t.print();
+    t.save_tsv("artifacts/tables/table4.tsv");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Offline calibration (paper Eq. 6-8) — alternating closed-form updates,
+//! mirror of python/compile/compress/calibrate.py.
+
+use super::svdc::recon_error;
+use crate::linalg::{ridge_solve, Matrix};
+use anyhow::Result;
+
+/// Refine (L, R) to locally minimize tr((W-LR)ᵀ M (W-LR)).
+/// Returns (L', R', error history with history[0] = pre-calibration error).
+pub fn calibrate(w: &Matrix, l0: &Matrix, r0: &Matrix, m: &Matrix,
+                 max_iters: usize, tol: f64) -> Result<(Matrix, Matrix, Vec<f64>)> {
+    let mut l = l0.clone();
+    let mut r = r0.clone();
+    let mut err = recon_error(w, &l, &r, Some(m));
+    let mut history = vec![err];
+    for _ in 0..max_iters {
+        // R-step (Eq. 8): (Lᵀ M L) R = Lᵀ M W
+        let lm = l.t().matmul(m);
+        r = ridge_solve(&lm.matmul(&l), &lm.matmul(w), 1e-8)?;
+        // L-step (Eq. 7): L (R Rᵀ) = W Rᵀ  — solve transposed system
+        let rrt = r.matmul(&r.t());
+        l = ridge_solve(&rrt, &r.matmul(&w.t()), 1e-8)?.t();
+        let new_err = recon_error(w, &l, &r, Some(m));
+        history.push(new_err);
+        if err - new_err <= tol * err.max(1e-30) {
+            break;
+        }
+        err = new_err;
+    }
+    Ok((l, r, history))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::svdc::svd_lowrank;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn error_monotonically_nonincreasing() {
+        let mut rng = Rng::new(41);
+        let w = Matrix::from_fn(10, 14, |_, _| rng.normal());
+        let x = Matrix::from_fn(60, 10, |i, j| rng.normal() * (1.0 + (i + j) as f32 * 0.01));
+        let m = x.gram();
+        let (l, r) = svd_lowrank(&w, 5);
+        let (_, _, hist) = calibrate(&w, &l, &r, &m, 8, 1e-9).unwrap();
+        for win in hist.windows(2) {
+            assert!(win[1] <= win[0] * 1.000001, "history not monotone: {hist:?}");
+        }
+        assert!(hist.last().unwrap() < &hist[0], "calibration should reduce error");
+    }
+
+    #[test]
+    fn exact_rank_recovers_zero_error() {
+        let mut rng = Rng::new(43);
+        let b = Matrix::from_fn(8, 3, |_, _| rng.normal());
+        let c = Matrix::from_fn(3, 10, |_, _| rng.normal());
+        let w = b.matmul(&c);
+        let x = Matrix::from_fn(40, 8, |_, _| rng.normal());
+        let m = x.gram();
+        let (l, r) = svd_lowrank(&w, 3);
+        let (_, _, hist) = calibrate(&w, &l, &r, &m, 4, 1e-12).unwrap();
+        assert!(*hist.last().unwrap() < 1e-3, "{hist:?}");
+    }
+}

@@ -1,0 +1,83 @@
+//! Centered Kernel Alignment head similarity (paper Eq. 2-5) — mirror of
+//! python/compile/compress/cka.py using the linear-kernel HSIC identity
+//! HSIC(X,Y) = ||Y_cᵀ X_c||_F².
+
+use crate::linalg::Matrix;
+
+fn center_cols(x: &Matrix) -> Matrix {
+    let mut out = x.clone();
+    for j in 0..x.cols {
+        let mean: f64 = (0..x.rows).map(|i| x[(i, j)] as f64).sum::<f64>() / x.rows as f64;
+        for i in 0..x.rows {
+            out[(i, j)] -= mean as f32;
+        }
+    }
+    out
+}
+
+pub fn hsic_linear(x: &Matrix, y: &Matrix) -> f64 {
+    debug_assert_eq!(x.rows, y.rows);
+    let xc = center_cols(x);
+    let yc = center_cols(y);
+    yc.t().matmul(&xc).frob_sq()
+}
+
+pub fn cka(x: &Matrix, y: &Matrix) -> f64 {
+    let hxy = hsic_linear(x, y);
+    let denom = (hsic_linear(x, x) * hsic_linear(y, y)).sqrt();
+    if denom > 0.0 {
+        hxy / denom
+    } else {
+        0.0
+    }
+}
+
+/// Pairwise CKA between key-head representations H_i = X·W_k[:, i-th block].
+/// Returns the symmetric h×h similarity matrix.
+pub fn head_similarity(x: &Matrix, w_k: &Matrix, n_heads: usize) -> Matrix {
+    let dh = w_k.cols / n_heads;
+    let heads: Vec<Matrix> = (0..n_heads)
+        .map(|i| x.matmul(&w_k.cols_slice(i * dh, (i + 1) * dh)))
+        .collect();
+    let mut s = Matrix::eye(n_heads);
+    for i in 0..n_heads {
+        for j in (i + 1)..n_heads {
+            let v = cka(&heads[i], &heads[j]) as f32;
+            s[(i, j)] = v;
+            s[(j, i)] = v;
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn self_similarity_is_one() {
+        let mut rng = Rng::new(2);
+        let x = Matrix::from_fn(20, 6, |_, _| rng.normal());
+        assert!((cka(&x, &x) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn invariant_to_orthogonal_transform() {
+        // CKA(X, XQ) == 1 for orthogonal Q (rotation of the same subspace)
+        let mut rng = Rng::new(4);
+        let x = Matrix::from_fn(30, 2, |_, _| rng.normal());
+        let th = 0.7f32;
+        let q = Matrix::from_vec(2, 2, vec![th.cos(), -th.sin(), th.sin(), th.cos()]);
+        let y = x.matmul(&q);
+        assert!((cka(&x, &y) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn independent_is_small() {
+        let mut rng = Rng::new(6);
+        let x = Matrix::from_fn(400, 4, |_, _| rng.normal());
+        let y = Matrix::from_fn(400, 4, |_, _| rng.normal());
+        assert!(cka(&x, &y) < 0.15);
+    }
+}

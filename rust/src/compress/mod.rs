@@ -1,0 +1,17 @@
+//! Pure-rust mirror of the offline ReCalKV pipeline (paper Algorithm 1) —
+//! CKA head similarity, greedy reordering, whitened/grouped SVD, offline
+//! calibration and matrix fusion — over the in-tree linalg substrate.
+//!
+//! The python implementation is authoritative for artifact generation; this
+//! mirror (a) proves the algorithm end-to-end in the systems language,
+//! (b) powers `repro compress` for weights-only experimentation without
+//! python, and (c) is cross-checked against python goldens in
+//! rust/tests/golden_crosscheck.rs.
+
+pub mod calibrate;
+pub mod cka;
+pub mod pipeline;
+pub mod reorder;
+pub mod svdc;
+
+pub use pipeline::{compress_layer, CompressedLayer, LayerInputs, MethodCfg};

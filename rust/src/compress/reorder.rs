@@ -1,0 +1,130 @@
+//! Greedy head reordering (HSR, paper §3.2) — mirror of
+//! python/compile/compress/reorder.py with identical tie-breaking so the
+//! permutations match the python goldens exactly.
+
+use crate::linalg::Matrix;
+
+pub fn greedy_group_heads(sim: &Matrix, group_size: usize) -> Vec<usize> {
+    let h = sim.rows;
+    assert_eq!(h % group_size, 0, "heads must divide into groups");
+    let n_groups = h / group_size;
+
+    let mut pairs: Vec<(usize, usize)> = (0..h)
+        .flat_map(|i| ((i + 1)..h).map(move |j| (i, j)))
+        .collect();
+    pairs.sort_by(|a, b| {
+        sim[(b.0, b.1)]
+            .partial_cmp(&sim[(a.0, a.1)])
+            .unwrap()
+            .then(a.0.cmp(&b.0))
+            .then(a.1.cmp(&b.1))
+    });
+
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut assigned = vec![usize::MAX; h];
+
+    for (i, j) in pairs {
+        let (ai, aj) = (assigned[i], assigned[j]);
+        if ai == usize::MAX && aj == usize::MAX {
+            if groups.len() < n_groups {
+                assigned[i] = groups.len();
+                assigned[j] = groups.len();
+                groups.push(vec![i, j]);
+            }
+        } else if ai == usize::MAX && groups[aj].len() < group_size {
+            groups[aj].push(i);
+            assigned[i] = aj;
+        } else if aj == usize::MAX && ai != usize::MAX && groups[ai].len() < group_size {
+            groups[ai].push(j);
+            assigned[j] = ai;
+        }
+    }
+
+    for head in 0..h {
+        if assigned[head] != usize::MAX {
+            continue;
+        }
+        let mut best = usize::MAX;
+        let mut best_sim = f64::NEG_INFINITY;
+        for (gi, members) in groups.iter().enumerate() {
+            if members.len() >= group_size {
+                continue;
+            }
+            let avg: f64 = members.iter().map(|m| sim[(head, *m)] as f64).sum::<f64>()
+                / members.len() as f64;
+            if avg > best_sim {
+                best = gi;
+                best_sim = avg;
+            }
+        }
+        if best == usize::MAX {
+            assigned[head] = groups.len();
+            groups.push(vec![head]);
+        } else {
+            groups[best].push(head);
+            assigned[head] = best;
+        }
+    }
+
+    let perm: Vec<usize> = groups.into_iter().flatten().collect();
+    debug_assert_eq!({ let mut s = perm.clone(); s.sort(); s }, (0..h).collect::<Vec<_>>());
+    perm
+}
+
+/// Mean pairwise similarity inside groups (the Fig. 2 quantity).
+pub fn within_group_similarity(sim: &Matrix, perm: &[usize], group_size: usize) -> f64 {
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for g0 in (0..perm.len()).step_by(group_size) {
+        let members = &perm[g0..(g0 + group_size).min(perm.len())];
+        for a in 0..members.len() {
+            for b in (a + 1)..members.len() {
+                total += sim[(members[a], members[b])] as f64;
+                count += 1;
+            }
+        }
+    }
+    total / count.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_obvious_block_structure() {
+        // two clusters {0,1} and {2,3} with high intra-similarity
+        let mut s = Matrix::eye(4);
+        s[(0, 1)] = 0.9; s[(1, 0)] = 0.9;
+        s[(2, 3)] = 0.8; s[(3, 2)] = 0.8;
+        s[(0, 2)] = 0.1; s[(2, 0)] = 0.1;
+        s[(1, 3)] = 0.1; s[(3, 1)] = 0.1;
+        let perm = greedy_group_heads(&s, 2);
+        assert_eq!(perm.len(), 4);
+        // first group must be {0,1}, second {2,3} (order inside preserved)
+        assert_eq!(&perm[..2], &[0, 1]);
+        assert_eq!(&perm[2..], &[2, 3]);
+        assert!(within_group_similarity(&s, &perm, 2)
+            > within_group_similarity(&s, &[0, 2, 1, 3], 2));
+    }
+
+    #[test]
+    fn permutation_is_valid_for_any_sim() {
+        let mut rng = crate::util::rng::Rng::new(17);
+        for _ in 0..20 {
+            let h = 8;
+            let mut s = Matrix::eye(h);
+            for i in 0..h {
+                for j in (i + 1)..h {
+                    let v = rng.uniform();
+                    s[(i, j)] = v;
+                    s[(j, i)] = v;
+                }
+            }
+            let perm = greedy_group_heads(&s, 4);
+            let mut sorted = perm.clone();
+            sorted.sort();
+            assert_eq!(sorted, (0..h).collect::<Vec<_>>());
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Whitened / grouped SVD compression (mirror of compress/svd.py).
+
+use crate::linalg::{cholesky, invert_lower, svd, Matrix};
+use anyhow::Result;
+
+/// Plain truncated factorization (paper Eq. 1).
+pub fn svd_lowrank(w: &Matrix, r: usize) -> (Matrix, Matrix) {
+    crate::linalg::svd_lowrank(w, r)
+}
+
+/// Cholesky whitening factors of M + εI: returns (S, S⁻ᵀ).
+pub fn whiten_factor(m: &Matrix, ridge: f32) -> Result<(Matrix, Matrix)> {
+    let d = m.rows;
+    let trace: f64 = (0..d).map(|i| m[(i, i)] as f64).sum();
+    let eps = (ridge as f64 * trace / d as f64 + 1e-12) as f32;
+    let mut reg = m.clone();
+    for i in 0..d {
+        reg[(i, i)] += eps;
+    }
+    let s = cholesky(&reg)?;
+    let s_inv_t = invert_lower(&s).t();
+    Ok((s, s_inv_t))
+}
+
+/// Data-aware truncated SVD (SVD-LLM whitening): minimizes ||X(W-LR)||²_F.
+pub fn whitened_svd_lowrank(w: &Matrix, r: usize, m: &Matrix, ridge: f32)
+    -> Result<(Matrix, Matrix)> {
+    let (s, s_inv_t) = whiten_factor(m, ridge)?;
+    let a = s.t().matmul(w);
+    let d = svd(&a);
+    let r = r.min(d.s.len());
+    let mut ur = Matrix::zeros(a.rows, r);
+    let mut rm = Matrix::zeros(r, w.cols);
+    for k in 0..r {
+        let sq = d.s[k].max(0.0).sqrt();
+        for i in 0..a.rows {
+            ur[(i, k)] = d.u[(i, k)] * sq;
+        }
+        for j in 0..w.cols {
+            rm[(k, j)] = sq * d.vt[(k, j)];
+        }
+    }
+    Ok((s_inv_t.matmul(&ur), rm))
+}
+
+/// Grouped-head decomposition over a head permutation (paper §3.2).
+/// Returns (L [d, g·rank] concatenated, R per group [rank, s·dh]).
+pub fn grouped_svd(w: &Matrix, perm: &[usize], group_size: usize, rank: usize,
+                   d_head: usize, m: Option<&Matrix>, ridge: f32)
+    -> Result<(Matrix, Vec<Matrix>)> {
+    let h = w.cols / d_head;
+    assert_eq!(perm.len(), h);
+    assert_eq!(h % group_size, 0);
+    let g = h / group_size;
+    let mut ls: Vec<Matrix> = Vec::with_capacity(g);
+    let mut rs: Vec<Matrix> = Vec::with_capacity(g);
+    for j in 0..g {
+        let members = &perm[j * group_size..(j + 1) * group_size];
+        let cols: Vec<Matrix> = members
+            .iter()
+            .map(|c| w.cols_slice(c * d_head, (c + 1) * d_head))
+            .collect();
+        let refs: Vec<&Matrix> = cols.iter().collect();
+        let wg = Matrix::hcat(&refs);
+        let (lg, rg) = match m {
+            Some(m) => whitened_svd_lowrank(&wg, rank, m, ridge)?,
+            None => svd_lowrank(&wg, rank),
+        };
+        ls.push(lg);
+        rs.push(rg);
+    }
+    let lrefs: Vec<&Matrix> = ls.iter().collect();
+    Ok((Matrix::hcat(&lrefs), rs))
+}
+
+/// Data-aware reconstruction error tr((W-LR)ᵀ M (W-LR)) (paper Eq. 6), or
+/// plain Frobenius when m is None.
+pub fn recon_error(w: &Matrix, l: &Matrix, r: &Matrix, m: Option<&Matrix>) -> f64 {
+    let delta = w.sub(&l.matmul(r));
+    match m {
+        None => delta.frob_sq(),
+        Some(m) => {
+            let md = m.matmul(&delta);
+            delta
+                .data
+                .iter()
+                .zip(&md.data)
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn whitened_beats_plain_on_skewed_data() {
+        // When calibration data is strongly anisotropic, the whitened SVD
+        // must achieve no worse data-aware error than plain SVD.
+        let mut rng = Rng::new(31);
+        let d = 12;
+        let n = 16;
+        let w = Matrix::from_fn(d, n, |_, _| rng.normal());
+        // skewed second moment: one dominant direction
+        let x = {
+            let mut x = Matrix::from_fn(100, d, |_, _| rng.normal() * 0.1);
+            for i in 0..x.rows {
+                x[(i, 0)] += rng.normal() * 3.0;
+            }
+            x
+        };
+        let m = x.gram();
+        let r = 4;
+        let (lp, rp) = svd_lowrank(&w, r);
+        let (lw, rw) = whitened_svd_lowrank(&w, r, &m, 1e-4).unwrap();
+        let e_plain = recon_error(&w, &lp, &rp, Some(&m));
+        let e_white = recon_error(&w, &lw, &rw, Some(&m));
+        assert!(e_white <= e_plain * 1.001, "white {e_white} vs plain {e_plain}");
+    }
+
+    #[test]
+    fn grouped_shapes() {
+        let mut rng = Rng::new(33);
+        let d = 16;
+        let dh = 4;
+        let h = 8;
+        let w = Matrix::from_fn(d, h * dh, |_, _| rng.normal());
+        let perm: Vec<usize> = (0..h).collect();
+        let (l, rs) = grouped_svd(&w, &perm, 4, 3, dh, None, 0.0).unwrap();
+        assert_eq!((l.rows, l.cols), (d, 2 * 3));
+        assert_eq!(rs.len(), 2);
+        assert_eq!((rs[0].rows, rs[0].cols), (3, 16));
+    }
+}

@@ -1,0 +1,63 @@
+//! Batching policy: decides when to run prefill vs decode and how many
+//! waiting requests to admit, given slot occupancy and queue depth.
+//!
+//! The engine's default policy (prefill whenever a slot is free) maximizes
+//! occupancy; this module adds tunable alternatives used by the ablation
+//! bench `coordinator_throughput --policy=...`:
+//!   - `Eager`: admit as soon as a slot frees (default, lowest TTFT)
+//!   - `Full`: wait until all slots are free, then admit a full batch
+//!     (fewer prefill calls, higher TTFT — the "static batching" baseline)
+//!   - `Threshold(k)`: admit when ≥k slots are free.
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BatchPolicy {
+    Eager,
+    Full,
+    Threshold(usize),
+}
+
+impl BatchPolicy {
+    pub fn parse(s: &str) -> Option<BatchPolicy> {
+        match s {
+            "eager" => Some(BatchPolicy::Eager),
+            "full" => Some(BatchPolicy::Full),
+            _ => s.strip_prefix("threshold").and_then(|k| k.parse().ok().map(BatchPolicy::Threshold)),
+        }
+    }
+
+    /// Should the scheduler run a prefill now?
+    pub fn should_prefill(&self, free_slots: usize, total_slots: usize, waiting: usize) -> bool {
+        if waiting == 0 || free_slots == 0 {
+            return false;
+        }
+        match self {
+            BatchPolicy::Eager => true,
+            BatchPolicy::Full => free_slots == total_slots,
+            BatchPolicy::Threshold(k) => free_slots >= *k || waiting >= free_slots,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eager_admits_immediately() {
+        assert!(BatchPolicy::Eager.should_prefill(1, 4, 3));
+        assert!(!BatchPolicy::Eager.should_prefill(0, 4, 3));
+        assert!(!BatchPolicy::Eager.should_prefill(2, 4, 0));
+    }
+
+    #[test]
+    fn full_waits_for_drain() {
+        assert!(!BatchPolicy::Full.should_prefill(2, 4, 5));
+        assert!(BatchPolicy::Full.should_prefill(4, 4, 5));
+    }
+
+    #[test]
+    fn threshold_parses() {
+        assert_eq!(BatchPolicy::parse("threshold2"), Some(BatchPolicy::Threshold(2)));
+        assert_eq!(BatchPolicy::parse("eager"), Some(BatchPolicy::Eager));
+    }
+}

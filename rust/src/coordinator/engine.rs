@@ -1,0 +1,410 @@
+//! The serving engine: continuous batching over the AOT decode graph with
+//! the paged latent cache.
+//!
+//! Slots (≤ decode_batch) hold active sequences. Each decode step:
+//!   1. stage: gather every active slot's latent pages into contiguous
+//!      per-layer batch buffers (dequantizing if the cache is quantized),
+//!   2. execute the decode graph (token, length, caches -> logits + new
+//!      latents),
+//!   3. append the returned latents to each slot's pages and sample/force
+//!      the next token.
+//! Prefill runs the prefill graph on up to prefill_batch waiting requests
+//! and seeds their pages from the returned full-sequence latents.
+
+use super::metrics::Metrics;
+use super::request::{GenRequest, GenResult, Tracked};
+use super::sampler::{log_prob, Sampler};
+use crate::artifacts::{ModelEntry, VariantEntry};
+use crate::kvcache::{CacheConfig, KvCache, SeqId};
+use crate::quant::QuantKind;
+use crate::runtime::engine_graphs::ActivationArg;
+use crate::runtime::{GraphSet, Runtime, VariantRuntime};
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub quant: QuantKind,
+    pub tokens_per_block: usize,
+    pub capacity_tokens: usize,
+    pub signs_seed: u64,
+    pub policy: super::batcher::BatchPolicy,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            quant: QuantKind::F32,
+            tokens_per_block: 32,
+            capacity_tokens: 1 << 16,
+            signs_seed: 977,
+            policy: super::batcher::BatchPolicy::Eager,
+        }
+    }
+}
+
+struct Slot {
+    tracked: Tracked,
+    seq: SeqId,
+    /// Next token to feed (the one whose latents are not yet cached).
+    pending_token: i32,
+}
+
+pub struct Engine {
+    pub vr: VariantRuntime,
+    pub cache: KvCache,
+    pub metrics: Metrics,
+    cfg_model: crate::artifacts::manifest::ModelConfig,
+    shapes: crate::artifacts::manifest::Shapes,
+    widths: Vec<(usize, usize)>,
+    /// dims of each cache plane as the decode graph expects them
+    key_dims: Vec<Vec<usize>>,
+    val_dims: Vec<Vec<usize>>,
+    policy: super::batcher::BatchPolicy,
+    slots: Vec<Option<Slot>>,
+    waiting: std::collections::VecDeque<Tracked>,
+    finished: Vec<GenResult>,
+    samplers: std::collections::BTreeMap<u64, Sampler>,
+    // reusable staging buffers (hot path; see EXPERIMENTS.md §Perf)
+    stage_k: Vec<Vec<f32>>,
+    stage_v: Vec<Vec<f32>>,
+}
+
+impl Engine {
+    pub fn new(rt: &Runtime, model: &ModelEntry, variant: &VariantEntry,
+               ecfg: EngineConfig) -> Result<Self> {
+        let vr = VariantRuntime::load(rt, variant, GraphSet::ServingOnly)?;
+        let cfg = model.config.clone();
+        let shapes = model.shapes;
+        let widths = variant.layer_widths(&cfg);
+        let (key_dims, val_dims) = plane_dims(&cfg, variant, &shapes);
+        let cache = KvCache::new(CacheConfig {
+            n_layers: cfg.n_layers,
+            widths: widths.clone(),
+            cache_len: shapes.cache_len,
+            tokens_per_block: ecfg.tokens_per_block,
+            capacity_tokens: ecfg.capacity_tokens,
+            quant: ecfg.quant,
+            signs_seed: ecfg.signs_seed,
+        });
+        let b = shapes.decode_batch;
+        let s = shapes.cache_len;
+        let stage_k = widths.iter().map(|(k, _)| vec![0.0; b * s * k]).collect();
+        let stage_v = widths.iter().map(|(_, v)| vec![0.0; b * s * v]).collect();
+        let policy = ecfg.policy;
+        Ok(Engine {
+            vr,
+            cache,
+            metrics: Metrics::default(),
+            cfg_model: cfg,
+            shapes,
+            widths,
+            key_dims,
+            val_dims,
+            policy,
+            slots: (0..b).map(|_| None).collect(),
+            waiting: Default::default(),
+            finished: Vec::new(),
+            samplers: Default::default(),
+            stage_k,
+            stage_v,
+        })
+    }
+
+    pub fn submit(&mut self, req: GenRequest) {
+        self.samplers.insert(req.id, Sampler::new(req.sampling));
+        self.waiting.push_back(Tracked::new(req));
+    }
+
+    pub fn take_finished(&mut self) -> Vec<GenResult> {
+        std::mem::take(&mut self.finished)
+    }
+
+    pub fn max_prompt_len(&self) -> usize {
+        self.shapes.prefill_seq
+    }
+
+    pub fn idle(&self) -> bool {
+        self.waiting.is_empty() && self.slots.iter().all(|s| s.is_none())
+    }
+
+    /// Drive the engine until all submitted requests finish.
+    pub fn run_to_completion(&mut self) -> Result<Vec<GenResult>> {
+        while !self.idle() {
+            self.step()?;
+        }
+        Ok(self.take_finished())
+    }
+
+    /// One scheduling step: prefill when the batching policy admits new
+    /// requests, otherwise one decode step over active slots.
+    pub fn step(&mut self) -> Result<()> {
+        let free = self.slots.iter().filter(|s| s.is_none()).count();
+        let any_active = self.slots.iter().any(|s| s.is_some());
+        if self.policy.should_prefill(free, self.slots.len(), self.waiting.len())
+            || (!any_active && !self.waiting.is_empty())
+        {
+            self.prefill_waiting()?;
+            return Ok(());
+        }
+        if any_active {
+            self.decode_step()?;
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    fn prefill_waiting(&mut self) -> Result<()> {
+        let free_slots: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_none())
+            .map(|(i, _)| i)
+            .collect();
+        let n = free_slots
+            .len()
+            .min(self.waiting.len())
+            .min(self.shapes.prefill_batch);
+        if n == 0 {
+            return Ok(());
+        }
+        let mut batch: Vec<Tracked> = (0..n).map(|_| self.waiting.pop_front().unwrap()).collect();
+
+        let pb = self.shapes.prefill_batch;
+        let ps = self.shapes.prefill_seq;
+        let mut tokens = vec![0i32; pb * ps];
+        let mut lengths = vec![1i32; pb];
+        for (i, t) in batch.iter().enumerate() {
+            let p = &t.req.prompt;
+            if p.is_empty() {
+                bail!("empty prompt for request {}", t.req.id);
+            }
+            if p.len() > ps {
+                bail!("prompt {} longer than prefill_seq {}", p.len(), ps);
+            }
+            tokens[i * ps..i * ps + p.len()].copy_from_slice(p);
+            lengths[i] = p.len() as i32;
+        }
+
+        let t0 = Instant::now();
+        let outs = self.vr.run(
+            self.vr.prefill_exe()?,
+            &[
+                ActivationArg::I32(&tokens, &[pb, ps]),
+                ActivationArg::I32(&lengths, &[pb]),
+            ],
+        )?;
+        self.metrics.prefill_time += t0.elapsed();
+        self.metrics.prefill_calls += 1;
+
+        // outputs: logits_last [pb, V], then per-layer zk [pb, ps, ...],
+        // then per-layer zv [pb, ps, ...]
+        let nl = self.cfg_model.n_layers;
+        let logits = outs[0].to_vec::<f32>()?;
+        let v = self.cfg_model.vocab;
+        let zk: Vec<Vec<f32>> = (0..nl)
+            .map(|l| outs[1 + l].to_vec::<f32>())
+            .collect::<std::result::Result<_, _>>()?;
+        let zv: Vec<Vec<f32>> = (0..nl)
+            .map(|l| outs[1 + nl + l].to_vec::<f32>())
+            .collect::<std::result::Result<_, _>>()?;
+
+        let append_t = Instant::now();
+        for (i, mut tracked) in batch.drain(..).enumerate() {
+            let plen = tracked.req.prompt.len();
+            let seq = self.cache.new_seq();
+            for t in 0..plen {
+                let rows: Vec<(&[f32], &[f32])> = (0..nl)
+                    .map(|l| {
+                        let (wk, wv) = self.widths[l];
+                        let ko = (i * self.shapes.prefill_seq + t) * wk;
+                        let vo = (i * self.shapes.prefill_seq + t) * wv;
+                        (&zk[l][ko..ko + wk], &zv[l][vo..vo + wv])
+                    })
+                    .collect();
+                self.cache.append(seq, &rows).context("prefill append")?;
+            }
+            // first generated token from the prefill logits
+            let row = logits[i * v..(i + 1) * v].to_vec();
+            let next = self.next_token(&mut tracked, &row, plen);
+            tracked.first_token = Some(Instant::now());
+            self.metrics.prompt_tokens += plen as u64;
+            let si = self
+                .slots
+                .iter()
+                .position(|s| s.is_none())
+                .expect("free slot disappeared");
+            self.slots[si] = Some(Slot { tracked, seq, pending_token: next });
+        }
+        self.metrics.append_time += append_t.elapsed();
+        self.retire_done();
+        Ok(())
+    }
+
+    /// Choose the next token: forced (teacher forcing) or sampled; records
+    /// log-probs of forced tokens. `pos` is the index of the token being
+    /// predicted (prompt_len + generated so far).
+    fn next_token(&mut self, tracked: &mut Tracked, logits_row: &[f32], _pos: usize) -> i32 {
+        let gen_idx = tracked.generated.len();
+        let forced = tracked
+            .req
+            .forced_tokens
+            .as_ref()
+            .and_then(|f| f.get(gen_idx).copied());
+        let tok = match forced {
+            Some(t) => {
+                tracked.forced_logprob += log_prob(logits_row, t);
+                tracked.forced_count += 1;
+                t
+            }
+            None => self
+                .samplers
+                .get_mut(&tracked.req.id)
+                .map(|s| s.sample(logits_row))
+                .unwrap_or_else(|| super::sampler::argmax(logits_row)),
+        };
+        tracked.generated.push(tok);
+        tok
+    }
+
+    // ------------------------------------------------------------------
+    fn decode_step(&mut self) -> Result<()> {
+        let b = self.shapes.decode_batch;
+        let s = self.shapes.cache_len;
+        let nl = self.cfg_model.n_layers;
+
+        let mut token = vec![0i32; b];
+        let mut length = vec![0i32; b];
+        let mut active = 0usize;
+        for (i, slot) in self.slots.iter().enumerate() {
+            if let Some(sl) = slot {
+                token[i] = sl.pending_token;
+                length[i] = self.cache.seq_len(sl.seq) as i32;
+                active += 1;
+            }
+        }
+        self.metrics.batch_occupancy_sum += active as f64 / b as f64;
+
+        // stage caches
+        let t0 = Instant::now();
+        for l in 0..nl {
+            let (wk, wv) = self.widths[l];
+            for (i, slot) in self.slots.iter().enumerate() {
+                let (kbuf, vbuf) = (&mut self.stage_k[l], &mut self.stage_v[l]);
+                match slot {
+                    Some(sl) => {
+                        self.cache.stage(sl.seq, l, 0, &mut kbuf[i * s * wk..(i + 1) * s * wk], s)?;
+                        self.cache.stage(sl.seq, l, 1, &mut vbuf[i * s * wv..(i + 1) * s * wv], s)?;
+                    }
+                    None => {
+                        kbuf[i * s * wk..(i + 1) * s * wk].fill(0.0);
+                        vbuf[i * s * wv..(i + 1) * s * wv].fill(0.0);
+                    }
+                }
+            }
+        }
+        self.metrics.stage_time += t0.elapsed();
+
+        let bdims = [b];
+        let mut args: Vec<ActivationArg> = vec![
+            ActivationArg::I32(&token, &bdims),
+            ActivationArg::I32(&length, &bdims),
+        ];
+        for l in 0..nl {
+            args.push(ActivationArg::F32(&self.stage_k[l], &self.key_dims[l]));
+        }
+        for l in 0..nl {
+            args.push(ActivationArg::F32(&self.stage_v[l], &self.val_dims[l]));
+        }
+
+        let t1 = Instant::now();
+        let outs = self.vr.run(self.vr.decode_exe()?, &args)?;
+        self.metrics.decode_time += t1.elapsed();
+        self.metrics.decode_calls += 1;
+
+        let v = self.cfg_model.vocab;
+        let logits = outs[0].to_vec::<f32>()?;
+        let nzk: Vec<Vec<f32>> = (0..nl)
+            .map(|l| outs[1 + l].to_vec::<f32>())
+            .collect::<std::result::Result<_, _>>()?;
+        let nzv: Vec<Vec<f32>> = (0..nl)
+            .map(|l| outs[1 + nl + l].to_vec::<f32>())
+            .collect::<std::result::Result<_, _>>()?;
+
+        let t2 = Instant::now();
+        for i in 0..b {
+            let Some(sl) = self.slots[i].as_mut() else { continue };
+            // append the latents of the token we just fed
+            let rows: Vec<(&[f32], &[f32])> = (0..nl)
+                .map(|l| {
+                    let (wk, wv) = self.widths[l];
+                    (&nzk[l][i * wk..(i + 1) * wk], &nzv[l][i * wv..(i + 1) * wv])
+                })
+                .collect();
+            self.cache.append(sl.seq, &rows)?;
+            self.metrics.generated_tokens += 1;
+            let row = &logits[i * v..(i + 1) * v];
+            let pos = self.cache.seq_len(sl.seq);
+            let mut tracked = std::mem::replace(&mut sl.tracked, Tracked::new(GenRequest::new(0, vec![0], 0)));
+            let next = self.next_token(&mut tracked, row, pos);
+            let sl = self.slots[i].as_mut().unwrap();
+            sl.tracked = tracked;
+            sl.pending_token = next;
+        }
+        self.metrics.append_time += t2.elapsed();
+        self.retire_done();
+        Ok(())
+    }
+
+    fn retire_done(&mut self) {
+        for slot in self.slots.iter_mut() {
+            let done = slot.as_ref().map(|s| s.tracked.done()).unwrap_or(false)
+                || slot
+                    .as_ref()
+                    .map(|s| self.cache.seq_len(s.seq) + 1 >= self.shapes.cache_len)
+                    .unwrap_or(false);
+            if done {
+                let s = slot.take().unwrap();
+                self.cache.free_seq(s.seq);
+                self.samplers.remove(&s.tracked.req.id);
+                self.metrics.requests_completed += 1;
+                self.metrics.ttft_ms_sum += s
+                    .tracked
+                    .first_token
+                    .map(|t| (t - s.tracked.arrived).as_secs_f64() * 1e3)
+                    .unwrap_or(0.0);
+                self.finished.push(s.tracked.finish());
+            }
+        }
+    }
+}
+
+/// Decode-graph cache dims per layer: full variants use [B,S,kvh,dh]; the
+/// compressed key plane is [B,S,g,rk] and value plane [B,S,rv].
+fn plane_dims(cfg: &crate::artifacts::manifest::ModelConfig, variant: &VariantEntry,
+              shapes: &crate::artifacts::manifest::Shapes)
+              -> (Vec<Vec<usize>>, Vec<Vec<usize>>) {
+    let b = shapes.decode_batch;
+    let s = shapes.cache_len;
+    if variant.is_compressed() {
+        let g = cfg.n_kv_heads / variant.group_size;
+        (
+            (0..cfg.n_layers)
+                .map(|l| vec![b, s, g, variant.key_ranks[l]])
+                .collect(),
+            (0..cfg.n_layers)
+                .map(|l| vec![b, s, variant.value_ranks[l]])
+                .collect(),
+        )
+    } else {
+        (
+            (0..cfg.n_layers)
+                .map(|_| vec![b, s, cfg.n_kv_heads, cfg.d_head])
+                .collect(),
+            (0..cfg.n_layers)
+                .map(|_| vec![b, s, cfg.n_kv_heads, cfg.d_head])
+                .collect(),
+        )
+    }
+}

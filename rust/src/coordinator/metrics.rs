@@ -1,0 +1,74 @@
+//! Serving metrics: counters and latency accumulators, printed by the CLI
+//! and consumed by the throughput benches.
+
+use std::time::Duration;
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests_completed: u64,
+    pub prompt_tokens: u64,
+    pub generated_tokens: u64,
+    pub prefill_calls: u64,
+    pub decode_calls: u64,
+    pub prefill_time: Duration,
+    pub decode_time: Duration,
+    pub stage_time: Duration,
+    pub append_time: Duration,
+    pub ttft_ms_sum: f64,
+    pub batch_occupancy_sum: f64,
+}
+
+impl Metrics {
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        let s = self.decode_time.as_secs_f64();
+        if s > 0.0 {
+            self.generated_tokens as f64 / s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_ttft_ms(&self) -> f64 {
+        if self.requests_completed > 0 {
+            self.ttft_ms_sum / self.requests_completed as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.decode_calls > 0 {
+            self.batch_occupancy_sum / self.decode_calls as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} prompt_toks={} gen_toks={} | prefill: {} calls {:.1}ms avg | \
+             decode: {} calls {:.2}ms avg, {:.1} tok/s, occupancy {:.2} | \
+             stage {:.1}ms total, append {:.1}ms total | ttft {:.1}ms avg",
+            self.requests_completed,
+            self.prompt_tokens,
+            self.generated_tokens,
+            self.prefill_calls,
+            if self.prefill_calls > 0 {
+                self.prefill_time.as_secs_f64() * 1e3 / self.prefill_calls as f64
+            } else {
+                0.0
+            },
+            self.decode_calls,
+            if self.decode_calls > 0 {
+                self.decode_time.as_secs_f64() * 1e3 / self.decode_calls as f64
+            } else {
+                0.0
+            },
+            self.decode_tokens_per_s(),
+            self.mean_batch_occupancy(),
+            self.stage_time.as_secs_f64() * 1e3,
+            self.append_time.as_secs_f64() * 1e3,
+            self.mean_ttft_ms(),
+        )
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator: request router, dynamic batcher, prefill/decode scheduler
+//! and the serving engine executing AOT graphs against the paged latent
+//! cache. Threads + channels (tokio is unavailable offline); python never
+//! runs here.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod sampler;
+pub mod tokenizer;
+
+pub use engine::{Engine, EngineConfig};
+pub use request::{GenRequest, GenResult, SamplingParams};
+pub use router::Coordinator;

@@ -1,0 +1,110 @@
+//! Generation request/response types shared by the router, batcher and
+//! engine.
+
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingParams {
+    /// 0.0 = greedy.
+    pub temperature: f32,
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 0.0, top_k: 0, seed: 0 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+    /// Optional byte that terminates generation early (e.g. b'.').
+    pub stop_token: Option<i32>,
+    /// Teacher forcing: when set, the engine feeds these tokens instead of
+    /// sampled ones and records their log-probs (perplexity through the
+    /// *serving* path — used by the Table 4 quantized-cache evaluation).
+    pub forced_tokens: Option<Vec<i32>>,
+}
+
+impl GenRequest {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        GenRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            sampling: SamplingParams::default(),
+            stop_token: None,
+            forced_tokens: None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GenResult {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub text: String,
+    /// Sum of log-probs of forced tokens (teacher-forcing mode).
+    pub forced_logprob: f64,
+    pub forced_count: usize,
+    pub prompt_len: usize,
+    pub ttft_ms: f64,
+    pub total_ms: f64,
+}
+
+/// Internal: a request being tracked by the scheduler.
+pub struct Tracked {
+    pub req: GenRequest,
+    pub arrived: Instant,
+    pub first_token: Option<Instant>,
+    pub generated: Vec<i32>,
+    pub forced_logprob: f64,
+    pub forced_count: usize,
+}
+
+impl Tracked {
+    pub fn new(req: GenRequest) -> Self {
+        Tracked {
+            req,
+            arrived: Instant::now(),
+            first_token: None,
+            generated: Vec::new(),
+            forced_logprob: 0.0,
+            forced_count: 0,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        if self.generated.len() >= self.req.max_new_tokens {
+            return true;
+        }
+        if let (Some(stop), Some(last)) = (self.req.stop_token, self.generated.last()) {
+            if *last == stop {
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn finish(&self) -> GenResult {
+        let now = Instant::now();
+        GenResult {
+            id: self.req.id,
+            tokens: self.generated.clone(),
+            text: super::tokenizer::decode(&self.generated),
+            forced_logprob: self.forced_logprob,
+            forced_count: self.forced_count,
+            prompt_len: self.req.prompt.len(),
+            ttft_ms: self
+                .first_token
+                .map(|t| (t - self.arrived).as_secs_f64() * 1e3)
+                .unwrap_or(0.0),
+            total_ms: (now - self.arrived).as_secs_f64() * 1e3,
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Request router: a threaded front-end over the engine (vLLM-router
+//! style). Clients submit `GenRequest`s from any thread; a worker thread
+//! owns the engine, runs the continuous-batching loop, and delivers
+//! `GenResult`s back over a channel.
+
+use super::engine::Engine;
+use super::request::{GenRequest, GenResult};
+use anyhow::Result;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+
+enum Cmd {
+    Submit(GenRequest),
+    Shutdown,
+}
+
+pub struct Coordinator {
+    tx: Sender<Cmd>,
+    results: Receiver<GenResult>,
+    worker: Option<JoinHandle<Result<String>>>,
+}
+
+impl Coordinator {
+    /// Spawn a worker thread that *constructs* and owns the engine.
+    ///
+    /// PJRT handles are not `Send` (the `xla` crate wraps `Rc` + raw
+    /// pointers), so the engine must be built inside its owning thread; the
+    /// factory captures only `Send` data (paths, configs).
+    pub fn spawn<F>(factory: F) -> Self
+    where
+        F: FnOnce() -> Result<Engine> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Cmd>();
+        let (res_tx, results) = channel::<GenResult>();
+        let worker = std::thread::spawn(move || -> Result<String> {
+            let mut engine = factory()?;
+            let mut shutdown = false;
+            loop {
+                // drain incoming commands without blocking while busy
+                loop {
+                    match rx.try_recv() {
+                        Ok(Cmd::Submit(r)) => engine.submit(r),
+                        Ok(Cmd::Shutdown) => shutdown = true,
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            shutdown = true;
+                            break;
+                        }
+                    }
+                }
+                if engine.idle() {
+                    if shutdown {
+                        break;
+                    }
+                    // block for the next command
+                    match rx.recv() {
+                        Ok(Cmd::Submit(r)) => engine.submit(r),
+                        Ok(Cmd::Shutdown) | Err(_) => break,
+                    }
+                    continue;
+                }
+                engine.step()?;
+                for r in engine.take_finished() {
+                    let _ = res_tx.send(r);
+                }
+            }
+            Ok(engine.metrics.report())
+        });
+        Coordinator { tx, results, worker: Some(worker) }
+    }
+
+    pub fn submit(&self, req: GenRequest) {
+        let _ = self.tx.send(Cmd::Submit(req));
+    }
+
+    /// Blockingly collect `n` results.
+    pub fn collect(&self, n: usize) -> Vec<GenResult> {
+        (0..n).filter_map(|_| self.results.recv().ok()).collect()
+    }
+
+    /// Shut down and return the worker's final metrics report.
+    pub fn shutdown(mut self) -> Result<String> {
+        let _ = self.tx.send(Cmd::Shutdown);
+        match self.worker.take() {
+            Some(h) => h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?,
+            None => Ok(String::new()),
+        }
+    }
+}

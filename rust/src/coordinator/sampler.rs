@@ -1,0 +1,87 @@
+//! Token sampling: greedy, temperature and top-k, with a deterministic RNG
+//! per request so serving runs are reproducible.
+
+use super::request::SamplingParams;
+use crate::util::rng::Rng;
+
+pub struct Sampler {
+    rng: Rng,
+    params: SamplingParams,
+}
+
+impl Sampler {
+    pub fn new(params: SamplingParams) -> Self {
+        Sampler { rng: Rng::new(params.seed | 1), params }
+    }
+
+    /// Pick the next token from a logits row.
+    pub fn sample(&mut self, logits: &[f32]) -> i32 {
+        if self.params.temperature <= 0.0 {
+            return argmax(logits);
+        }
+        // temperature + optional top-k
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        if self.params.top_k > 0 && self.params.top_k < logits.len() {
+            idx.sort_by(|a, b| logits[*b].partial_cmp(&logits[*a]).unwrap());
+            idx.truncate(self.params.top_k);
+        }
+        let inv_t = 1.0 / self.params.temperature;
+        let mx = idx.iter().map(|i| logits[*i]).fold(f32::NEG_INFINITY, f32::max);
+        let weights: Vec<f32> = idx.iter().map(|i| ((logits[*i] - mx) * inv_t).exp()).collect();
+        let total: f32 = weights.iter().sum();
+        let mut u = self.rng.uniform() * total;
+        for (k, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return idx[k] as i32;
+            }
+        }
+        idx[idx.len() - 1] as i32
+    }
+}
+
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, v) in logits.iter().enumerate() {
+        if *v > bv {
+            bv = *v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// log softmax probability of `token` under `logits`.
+pub fn log_prob(logits: &[f32], token: i32) -> f64 {
+    let mx = logits.iter().fold(f32::NEG_INFINITY, |m, v| m.max(*v)) as f64;
+    let logz: f64 = logits.iter().map(|v| ((*v as f64) - mx).exp()).sum::<f64>().ln() + mx;
+    logits[token as usize] as f64 - logz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut s = Sampler::new(SamplingParams::default());
+        assert_eq!(s.sample(&[0.1, 2.0, -1.0]), 1);
+    }
+
+    #[test]
+    fn topk_restricts_support() {
+        let mut s = Sampler::new(SamplingParams { temperature: 1.0, top_k: 2, seed: 9 });
+        for _ in 0..50 {
+            let t = s.sample(&[5.0, 4.0, -100.0, -100.0]);
+            assert!(t == 0 || t == 1);
+        }
+    }
+
+    #[test]
+    fn log_prob_normalizes() {
+        let logits = vec![1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|t| log_prob(&logits, t).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

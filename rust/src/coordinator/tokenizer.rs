@@ -1,0 +1,31 @@
+//! Byte-level tokenizer (vocab 256) — matches the python training corpus
+//! (data.py encodes UTF-8 bytes directly).
+
+pub const VOCAB: usize = 256;
+
+pub fn encode(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| b as i32).collect()
+}
+
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|t| (*t & 0xff) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "bob has a red key .";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn non_ascii_lossy() {
+        let toks = encode("héllo");
+        assert_eq!(toks.len(), 6); // é is 2 bytes
+        assert_eq!(decode(&toks), "héllo");
+    }
+}

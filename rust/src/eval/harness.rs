@@ -1,0 +1,170 @@
+//! Evaluators: perplexity (score graph & engine paths), multiple-choice
+//! accuracy, and long-context generation accuracy through the serving
+//! engine.
+
+use super::tasks;
+use crate::artifacts::{EvalConfig, ModelEntry};
+use crate::coordinator::request::GenRequest;
+use crate::coordinator::sampler::log_prob;
+use crate::coordinator::tokenizer;
+use crate::coordinator::Engine;
+use crate::runtime::engine_graphs::ActivationArg;
+use crate::runtime::VariantRuntime;
+use anyhow::Result;
+
+/// Teacher-forced perplexity over one corpus split via the *score* graph
+/// (full-sequence logits, like HF evaluate): tokens are chunked into
+/// [score_batch, score_seq] documents.
+pub fn ppl_from_score(vr: &VariantRuntime, model: &ModelEntry, tokens: &[i32]) -> Result<f64> {
+    let b = model.shapes.score_batch;
+    let s = model.shapes.score_seq;
+    let v = model.config.vocab;
+    let n_docs = tokens.len() / s;
+    let mut total_nll = 0.0f64;
+    let mut count = 0usize;
+    let exe = vr.score_exe()?;
+    let mut doc = 0;
+    while doc < n_docs {
+        let take = b.min(n_docs - doc);
+        let mut batch = vec![0i32; b * s];
+        for i in 0..take {
+            batch[i * s..(i + 1) * s].copy_from_slice(&tokens[(doc + i) * s..(doc + i + 1) * s]);
+        }
+        let outs = vr.run(exe, &[ActivationArg::I32(&batch, &[b, s])])?;
+        let logits = outs[0].to_vec::<f32>()?;
+        for i in 0..take {
+            for t in 0..s - 1 {
+                let row = &logits[(i * s + t) * v..(i * s + t + 1) * v];
+                total_nll -= log_prob(row, batch[i * s + t + 1]);
+                count += 1;
+            }
+        }
+        doc += take;
+    }
+    Ok((total_nll / count as f64).exp())
+}
+
+/// Multiple-choice accuracy (lm-eval style): the choice with the highest
+/// summed token log-likelihood given the context wins.
+pub fn run_mc_tasks(vr: &VariantRuntime, model: &ModelEntry, eval: &EvalConfig)
+    -> Result<Vec<(String, f64)>> {
+    let b = model.shapes.score_batch;
+    let s = model.shapes.score_seq;
+    let v = model.config.vocab;
+    let exe = vr.score_exe()?;
+    let mut results = Vec::new();
+    for task in tasks::MC_TASKS {
+        let instances = tasks::gen_mc(task, eval.corpus_seed, eval.mc_per_task);
+        // flatten all (instance, choice) rows and batch them
+        struct Row {
+            inst: usize,
+            choice: usize,
+            ctx_len: usize,
+            toks: Vec<i32>,
+        }
+        let mut rows: Vec<Row> = Vec::new();
+        for (qi, inst) in instances.iter().enumerate() {
+            let ctx = tokenizer::encode(&inst.context);
+            for (ci, ch) in inst.choices.iter().enumerate() {
+                let mut toks = ctx.clone();
+                toks.extend(tokenizer::encode(ch));
+                toks.truncate(s);
+                rows.push(Row { inst: qi, choice: ci, ctx_len: ctx.len().min(s), toks });
+            }
+        }
+        let mut scores = vec![vec![f64::NEG_INFINITY; 4]; instances.len()];
+        let mut r0 = 0;
+        while r0 < rows.len() {
+            let take = b.min(rows.len() - r0);
+            let mut batch = vec![0i32; b * s];
+            for i in 0..take {
+                let t = &rows[r0 + i].toks;
+                batch[i * s..i * s + t.len()].copy_from_slice(t);
+            }
+            let outs = vr.run(exe, &[ActivationArg::I32(&batch, &[b, s])])?;
+            let logits = outs[0].to_vec::<f32>()?;
+            for i in 0..take {
+                let row = &rows[r0 + i];
+                let mut lp = 0.0f64;
+                for t in row.ctx_len - 1..row.toks.len() - 1 {
+                    let lr = &logits[(i * s + t) * v..(i * s + t + 1) * v];
+                    lp += log_prob(lr, row.toks[t + 1]);
+                }
+                scores[row.inst][row.choice] = lp;
+            }
+            r0 += take;
+        }
+        let mut correct = 0usize;
+        for (qi, inst) in instances.iter().enumerate() {
+            let pred = (0..inst.choices.len())
+                .max_by(|a, b| scores[qi][*a].partial_cmp(&scores[qi][*b]).unwrap())
+                .unwrap();
+            if pred == inst.answer {
+                correct += 1;
+            }
+        }
+        results.push((task.to_string(), 100.0 * correct as f64 / instances.len() as f64));
+    }
+    Ok(results)
+}
+
+/// Long-context generation accuracy *through the serving engine* (greedy):
+/// score = longest-common-prefix ratio of the generated text vs expected.
+pub fn run_long_tasks(engine: &mut Engine, eval: &EvalConfig)
+    -> Result<Vec<(String, f64)>> {
+    let mut results = Vec::new();
+    let mut next_id = 1u64;
+    for task in tasks::LONG_TASKS {
+        let instances = tasks::gen_long(task, eval.corpus_seed, eval.long_per_task,
+                                        eval.long_ctx_chars);
+        let mut total = 0.0f64;
+        let n = instances.len();
+        for inst in &instances {
+            let mut prompt = tokenizer::encode(&inst.prompt);
+            // keep the TAIL if the prompt exceeds prefill capacity: the
+            // question is at the end (matches LongBench truncation).
+            let cap = engine.max_prompt_len();
+            if prompt.len() > cap {
+                prompt.drain(..prompt.len() - cap);
+            }
+            let gen_len = inst.expected.len().max(1).min(eval.long_gen_tokens.max(4));
+            let req = GenRequest::new(next_id, prompt, gen_len);
+            next_id += 1;
+            engine.submit(req);
+        }
+        let finished = engine.run_to_completion()?;
+        for (inst, res) in instances.iter().zip(&finished) {
+            let expected = inst.expected.as_bytes();
+            let got = res.text.as_bytes();
+            let lcp = expected.iter().zip(got).take_while(|(a, b)| a == b).count();
+            total += lcp as f64 / expected.len() as f64;
+        }
+        results.push((task.to_string(), 100.0 * total / n as f64));
+    }
+    Ok(results)
+}
+
+/// Teacher-forced perplexity through the *serving* path: prefill a short
+/// prompt, then force the document tokens one decode step at a time. This
+/// exercises the real cache (including quantized storage) and is the Table 4
+/// evaluator.
+pub fn ppl_from_engine(engine: &mut Engine, tokens: &[i32], doc_len: usize,
+                       prompt_len: usize) -> Result<f64> {
+    let n_docs = tokens.len() / doc_len;
+    let mut id = 1u64;
+    for d in 0..n_docs {
+        let doc = &tokens[d * doc_len..(d + 1) * doc_len];
+        let mut req = GenRequest::new(id, doc[..prompt_len].to_vec(), doc_len - prompt_len);
+        req.forced_tokens = Some(doc[prompt_len..].to_vec());
+        engine.submit(req);
+        id += 1;
+    }
+    let finished = engine.run_to_completion()?;
+    let mut nll = 0.0;
+    let mut count = 0usize;
+    for r in finished {
+        nll -= r.forced_logprob;
+        count += r.forced_count;
+    }
+    Ok((nll / count as f64).exp())
+}

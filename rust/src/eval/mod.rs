@@ -1,0 +1,15 @@
+//! Evaluation harness regenerating the paper's tables: perplexity over the
+//! three corpus splits (Table 1 left), six multiple-choice tasks (Table 1
+//! right), eight long-context generation tasks through the serving engine
+//! (Table 2), ablations (Table 3) and quantized-cache perplexity (Table 4).
+//!
+//! tasks.rs is a byte-exact port of python/compile/data.py (same xorshift64*
+//! RNG, same call order), so both languages generate identical instances —
+//! asserted against corpus goldens in rust/tests/golden_crosscheck.rs.
+
+pub mod harness;
+pub mod report;
+pub mod tasks;
+
+pub use harness::{ppl_from_engine, ppl_from_score, run_long_tasks, run_mc_tasks};
+pub use tasks::{LongInstance, McInstance, TaskGen};

@@ -1,0 +1,275 @@
+//! Paper-table generation: every table and figure of the evaluation section,
+//! shared by the `repro tables` CLI and the `cargo bench` targets.
+//!
+//! | paper artifact | function  | bench target             |
+//! |----------------|-----------|--------------------------|
+//! | Table 1        | table1    | table1_zeroshot          |
+//! | Table 2        | table2    | table2_longbench         |
+//! | Table 3        | table3    | table3_ablation          |
+//! | Table 4        | table4    | table4_quant             |
+//! | Figure 2       | figure2   | fig2_cka                 |
+//! | §1 Fisher      | fisher_figure | fig2_cka --fisher    |
+
+use super::harness;
+use super::tasks;
+use crate::artifacts::{Manifest, ModelEntry, TensorArchive};
+use crate::coordinator::{Engine, EngineConfig};
+use crate::quant::QuantKind;
+use crate::runtime::{GraphSet, Runtime, VariantRuntime};
+use crate::util::bench::Table;
+use anyhow::Result;
+
+pub const PPL_SPLITS: [&str; 3] = ["wiki", "ptb", "c4"];
+
+/// Evaluation sizes (overridable from the CLI for faster runs).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalSizes {
+    pub ppl_tokens: usize,
+    pub mc_per_task: usize,
+    pub long_per_task: usize,
+    pub engine_ppl_docs: usize,
+}
+
+impl EvalSizes {
+    pub fn from_manifest(man: &Manifest) -> Self {
+        EvalSizes {
+            ppl_tokens: man.eval.ppl_tokens,
+            mc_per_task: man.eval.mc_per_task,
+            long_per_task: man.eval.long_per_task,
+            engine_ppl_docs: 8,
+        }
+    }
+}
+
+fn table1_variants(model: &ModelEntry) -> Vec<String> {
+    let mut out = vec!["full".to_string()];
+    // 90% is the added stress ratio (DESIGN.md §9): the tiny models only
+    // show the paper's degradation knee beyond the paper's 50-70% range.
+    for ratio in [50, 60, 70, 90] {
+        for method in ["palu", "recal"] {
+            let name = format!("{method}@{ratio}");
+            if model.variants.contains_key(&name) {
+                out.push(name);
+            }
+        }
+    }
+    out
+}
+
+/// One Table-1 row: perplexities + per-task MC accuracy + average.
+pub fn table1_row(rt: &Runtime, man: &Manifest, model: &ModelEntry, vname: &str,
+                  sizes: &EvalSizes) -> Result<Vec<String>> {
+    let variant = model.variant(vname)?;
+    let vr = VariantRuntime::load(rt, variant, GraphSet::ScoreOnly)?;
+    let mut row = vec![
+        model.name.clone(),
+        format!("{}%", (variant.ratio * 100.0) as u32),
+        vname.to_string(),
+    ];
+    for split in PPL_SPLITS {
+        let toks = tasks::ppl_split(split, man.eval.corpus_seed, sizes.ppl_tokens);
+        let ppl = harness::ppl_from_score(&vr, model, &toks)?;
+        row.push(format!("{ppl:.3}"));
+    }
+    let mut eval = man.eval.clone();
+    eval.mc_per_task = sizes.mc_per_task;
+    let mc = harness::run_mc_tasks(&vr, model, &eval)?;
+    let avg: f64 = mc.iter().map(|(_, a)| a).sum::<f64>() / mc.len() as f64;
+    for (_, acc) in &mc {
+        row.push(format!("{acc:.1}"));
+    }
+    row.push(format!("{avg:.2}"));
+    Ok(row)
+}
+
+/// Table 1: language modeling + zero-shot accuracy, Palu vs ReCalKV.
+pub fn table1(rt: &Runtime, man: &Manifest, models: &[&str], sizes: &EvalSizes)
+    -> Result<Table> {
+    let mut t = Table::new(
+        "Table 1 — perplexity (wiki/ptb/c4, ↓) and zero-shot accuracy (↑)",
+        &["model", "ratio", "variant", "wiki↓", "ptb↓", "c4↓",
+          "cloze", "recall", "agree", "world", "order", "parity", "Avg↑"],
+    );
+    for mname in models {
+        let model = man.model(mname)?;
+        for vname in table1_variants(model) {
+            t.row(table1_row(rt, man, model, &vname, sizes)?);
+            t.print_last();
+        }
+    }
+    Ok(t)
+}
+
+/// Table 2: long-context tasks through the serving engine.
+pub fn table2(rt: &Runtime, man: &Manifest, models: &[&str], sizes: &EvalSizes)
+    -> Result<Table> {
+    let mut headers = vec!["model".into(), "ratio".into(), "variant".into()];
+    headers.extend(tasks::LONG_TASKS.iter().map(|s| s.to_string()));
+    headers.push("Avg↑".into());
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Table 2 — long-context accuracy through the engine (↑)", &hdr_refs);
+    for mname in models {
+        let model = man.model(mname)?;
+        for vname in table1_variants(model) {
+            let variant = model.variant(&vname)?;
+            let mut engine = Engine::new(rt, model, variant, EngineConfig::default())?;
+            let mut eval = man.eval.clone();
+            eval.long_per_task = sizes.long_per_task;
+            let res = harness::run_long_tasks(&mut engine, &eval)?;
+            let avg: f64 = res.iter().map(|(_, a)| a).sum::<f64>() / res.len() as f64;
+            let mut row = vec![
+                model.name.clone(),
+                format!("{}%", (variant.ratio * 100.0) as u32),
+                vname.clone(),
+            ];
+            row.extend(res.iter().map(|(_, a)| format!("{a:.1}")));
+            row.push(format!("{avg:.2}"));
+            t.row(row);
+            t.print_last();
+        }
+    }
+    Ok(t)
+}
+
+/// Table 3: HSR × calibration ablation at 80% on tiny-mha.
+pub fn table3(rt: &Runtime, man: &Manifest, sizes: &EvalSizes) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 3 — ablation at 80% compression (tiny-mha)",
+        &["HSR", "Calib", "variant", "wiki↓", "ptb↓", "c4↓", "zs Avg↑", "long Avg↑"],
+    );
+    let model = man.model("tiny-mha")?;
+    let combos = [
+        ("recal_none@80", "x", "x"),
+        ("recal_nohsr@80", "x", "v"),
+        ("recal_nocal@80", "v", "x"),
+        ("recal@80", "v", "v"),
+    ];
+    for (vname, hsr, cal) in combos {
+        if !model.variants.contains_key(vname) {
+            continue;
+        }
+        let variant = model.variant(vname)?;
+        let vr = VariantRuntime::load(rt, variant, GraphSet::ScoreOnly)?;
+        let mut row = vec![hsr.to_string(), cal.to_string(), vname.to_string()];
+        for split in PPL_SPLITS {
+            let toks = tasks::ppl_split(split, man.eval.corpus_seed, sizes.ppl_tokens);
+            row.push(format!("{:.3}", harness::ppl_from_score(&vr, model, &toks)?));
+        }
+        let mut eval = man.eval.clone();
+        eval.mc_per_task = sizes.mc_per_task;
+        let mc = harness::run_mc_tasks(&vr, model, &eval)?;
+        row.push(format!(
+            "{:.2}",
+            mc.iter().map(|(_, a)| a).sum::<f64>() / mc.len() as f64
+        ));
+        drop(vr);
+        let mut engine = Engine::new(rt, model, variant, EngineConfig::default())?;
+        let mut eval2 = man.eval.clone();
+        eval2.long_per_task = sizes.long_per_task;
+        let long = harness::run_long_tasks(&mut engine, &eval2)?;
+        row.push(format!(
+            "{:.2}",
+            long.iter().map(|(_, a)| a).sum::<f64>() / long.len() as f64
+        ));
+        t.row(row);
+        t.print_last();
+    }
+    Ok(t)
+}
+
+/// Table 4: ReCalKV/Palu + per-token int4/int3 cache quantization, evaluated
+/// through the serving path (quantized paged cache).
+pub fn table4(rt: &Runtime, man: &Manifest, sizes: &EvalSizes) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 4 — low-rank + per-token quantized cache (engine-path ppl)",
+        &["ratio", "variant", "bits", "wiki↓", "c4↓", "bytes/token"],
+    );
+    let model = man.model("tiny-mha")?;
+    let doc_len = model.shapes.score_seq.min(256);
+    let prompt_len = 8;
+    let mut jobs: Vec<(String, QuantKind)> = vec![("full".into(), QuantKind::F32)];
+    for ratio in [50, 60, 70] {
+        for method in ["palu", "recal"] {
+            for q in [QuantKind::Int4, QuantKind::Int3] {
+                jobs.push((format!("{method}@{ratio}"), q));
+            }
+        }
+    }
+    for (vname, quant) in jobs {
+        if !model.variants.contains_key(&vname) {
+            continue;
+        }
+        let variant = model.variant(&vname)?;
+        let ecfg = EngineConfig { quant, ..EngineConfig::default() };
+        let mut row = vec![
+            format!("{}%", (variant.ratio * 100.0) as u32),
+            vname.clone(),
+            format!("{}", if quant == QuantKind::F32 { 32 } else { quant.bits() }),
+        ];
+        let mut bpt = 0usize;
+        for split in ["wiki", "c4"] {
+            let mut engine = Engine::new(rt, model, variant, ecfg.clone())?;
+            let toks = tasks::ppl_split(split, man.eval.corpus_seed,
+                                        sizes.engine_ppl_docs * doc_len);
+            let ppl = harness::ppl_from_engine(&mut engine, &toks, doc_len, prompt_len)?;
+            row.push(format!("{ppl:.3}"));
+            bpt = engine.cache.config.bytes_per_token();
+        }
+        row.push(format!("{bpt}"));
+        t.row(row);
+        t.print_last();
+    }
+    Ok(t)
+}
+
+/// Figure 2: CKA similarity matrices before/after reordering (ASCII heatmap
+/// + within-group similarity deltas from the build diagnostics).
+pub fn figure2(man: &Manifest, model_name: &str) -> Result<String> {
+    let model = man.model(model_name)?;
+    let arch = TensorArchive::load(man.root.join(model_name).join("cka_fig2.rtz"))?;
+    let mut out = String::new();
+    out.push_str(&format!("=== Figure 2 — CKA head similarity, {model_name} ===\n"));
+    for l in 0..model.config.n_layers {
+        let before = arch.get(&format!("before{l}"))?;
+        let after = arch.get(&format!("after{l}"))?;
+        let perm = arch.get(&format!("perm{l}"))?;
+        let h = before.dims[0];
+        out.push_str(&format!(
+            "\nlayer {l}  perm={:?}\n  before reorder          after reorder\n",
+            perm.i32s
+        ));
+        for i in 0..h {
+            let render = |t: &crate::artifacts::Tensor| -> String {
+                (0..h)
+                    .map(|j| {
+                        let v = t.f32s[i * h + j];
+                        let shades = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+                        shades[((v.clamp(0.0, 1.0)) * 9.0).round() as usize]
+                    })
+                    .collect()
+            };
+            out.push_str(&format!("  |{}|      |{}|\n", render(before), render(after)));
+        }
+    }
+    Ok(out)
+}
+
+/// §1 analysis: Fisher information of W_k vs W_v per layer.
+pub fn fisher_figure(man: &Manifest, model_name: &str) -> Result<Table> {
+    let arch = TensorArchive::load(man.root.join(model_name).join("stats.rtz"))?;
+    let fk = arch.f32s("fisher_k")?;
+    let fv = arch.f32s("fisher_v")?;
+    let mut t = Table::new(
+        &format!("§1 analysis — Fisher information, {model_name} (paper: F(W_v) ≫ F(W_k))"),
+        &["layer", "Fisher(W_k)", "Fisher(W_v)", "ratio V/K"],
+    );
+    for l in 0..fk.len() {
+        t.row(vec![
+            format!("{l}"),
+            format!("{:.4e}", fk[l]),
+            format!("{:.4e}", fv[l]),
+            format!("{:.1}x", fv[l] / fk[l].max(1e-12)),
+        ]);
+    }
+    Ok(t)
+}

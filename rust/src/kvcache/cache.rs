@@ -1,0 +1,292 @@
+//! The paged latent KV cache manager.
+//!
+//! Layout: per layer, two planes — key latents (width g·rk_l) and value
+//! latents (width rv_l). Each (sequence, layer, plane) owns a list of pages
+//! from that plane's BlockPool. Quantized mode stores packed rows + scales
+//! in a parallel byte arena (fp32 pools are then unused for payloads but
+//! retained for staging scratch).
+
+use super::pool::{BlockId, BlockPool};
+use crate::linalg::hadamard::signs_from_seed;
+use crate::quant::{dequantize, quantize, QuantKind, QuantizedRow};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+pub type SeqId = u64;
+
+#[derive(Clone, Debug)]
+pub struct CacheConfig {
+    pub n_layers: usize,
+    /// (key width g·rk, value width rv) per layer.
+    pub widths: Vec<(usize, usize)>,
+    pub cache_len: usize,
+    pub tokens_per_block: usize,
+    pub capacity_tokens: usize,
+    pub quant: QuantKind,
+    pub signs_seed: u64,
+}
+
+impl CacheConfig {
+    /// Stored bytes per cached token across all layers (memory accounting
+    /// for the paper's compression-ratio columns).
+    pub fn bytes_per_token(&self) -> usize {
+        self.widths
+            .iter()
+            .map(|(k, v)| self.quant.stored_bytes(*k) + self.quant.stored_bytes(*v))
+            .sum()
+    }
+}
+
+struct SeqState {
+    len: usize,
+    /// blocks[layer][plane] -> page list (plane 0 = keys, 1 = values).
+    blocks: Vec<[Vec<BlockId>; 2]>,
+}
+
+/// One plane (layer × kind): fp32 pool or quantized row arena.
+struct Plane {
+    pool: BlockPool,
+    /// Quantized rows indexed like the pool: [block][slot].
+    qrows: Vec<Option<QuantizedRow>>,
+    signs: Vec<f32>,
+}
+
+pub struct KvCache {
+    pub config: CacheConfig,
+    planes: Vec<Plane>, // 2 * n_layers, [layer*2 + plane]
+    seqs: BTreeMap<SeqId, SeqState>,
+    next_id: SeqId,
+    pub peak_tokens: usize,
+}
+
+impl KvCache {
+    pub fn new(config: CacheConfig) -> Self {
+        let blocks_per_plane =
+            config.capacity_tokens.div_ceil(config.tokens_per_block).max(1);
+        let mut planes = Vec::with_capacity(config.n_layers * 2);
+        for l in 0..config.n_layers {
+            for plane in 0..2 {
+                let width = if plane == 0 { config.widths[l].0 } else { config.widths[l].1 };
+                let quantized = config.quant != QuantKind::F32;
+                planes.push(Plane {
+                    pool: BlockPool::new(blocks_per_plane, config.tokens_per_block, width),
+                    qrows: if quantized {
+                        vec![None; blocks_per_plane * config.tokens_per_block]
+                    } else {
+                        Vec::new()
+                    },
+                    signs: signs_from_seed(
+                        config.signs_seed ^ ((l as u64) << 8) ^ plane as u64,
+                        width,
+                    ),
+                });
+            }
+        }
+        KvCache { config, planes, seqs: BTreeMap::new(), next_id: 1, peak_tokens: 0 }
+    }
+
+    pub fn new_seq(&mut self) -> SeqId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.seqs.insert(
+            id,
+            SeqState { len: 0, blocks: (0..self.config.n_layers).map(|_| [Vec::new(), Vec::new()]).collect() },
+        );
+        id
+    }
+
+    pub fn free_seq(&mut self, id: SeqId) {
+        if let Some(st) = self.seqs.remove(&id) {
+            for (l, planes) in st.blocks.iter().enumerate() {
+                for (p, blocks) in planes.iter().enumerate() {
+                    let plane = &mut self.planes[l * 2 + p];
+                    for b in blocks {
+                        if !plane.qrows.is_empty() {
+                            let base = *b as usize * self.config.tokens_per_block;
+                            for s in 0..self.config.tokens_per_block {
+                                plane.qrows[base + s] = None;
+                            }
+                        }
+                        plane.pool.release(*b);
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn seq_len(&self, id: SeqId) -> usize {
+        self.seqs.get(&id).map(|s| s.len).unwrap_or(0)
+    }
+
+    pub fn live_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Append one token's latents for every layer at once.
+    /// `rows[l] = (key_latent_row, value_latent_row)`.
+    pub fn append(&mut self, id: SeqId, rows: &[(&[f32], &[f32])]) -> Result<()> {
+        let tpb = self.config.tokens_per_block;
+        let quant = self.config.quant;
+        let st = match self.seqs.get_mut(&id) {
+            Some(s) => s,
+            None => bail!("unknown sequence {id}"),
+        };
+        if st.len >= self.config.cache_len {
+            bail!("sequence {id} exceeds cache_len {}", self.config.cache_len);
+        }
+        let slot = st.len % tpb;
+        for (l, (krow, vrow)) in rows.iter().enumerate() {
+            for (p, row) in [(0usize, *krow), (1usize, *vrow)] {
+                let plane = &mut self.planes[l * 2 + p];
+                debug_assert_eq!(row.len(), plane.pool.width);
+                if slot == 0 {
+                    let b = plane.pool.alloc()?;
+                    st.blocks[l][p].push(b);
+                }
+                let block = *st.blocks[l][p].last().unwrap();
+                if quant == QuantKind::F32 {
+                    plane.pool.row_mut(block, slot).copy_from_slice(row);
+                } else {
+                    let q = quantize(row, &plane.signs, quant);
+                    plane.qrows[block as usize * tpb + slot] = Some(q);
+                }
+            }
+        }
+        st.len += 1;
+        let total: usize = self.seqs.values().map(|s| s.len).sum();
+        self.peak_tokens = self.peak_tokens.max(total);
+        Ok(())
+    }
+
+    /// Gather one sequence's plane into a contiguous staging slice
+    /// (`out.len() == pad_to * width`), dequantizing as needed; positions
+    /// past the sequence length are zero-filled.
+    pub fn stage(&self, id: SeqId, layer: usize, plane: usize, out: &mut [f32],
+                 pad_to: usize) -> Result<usize> {
+        let st = match self.seqs.get(&id) {
+            Some(s) => s,
+            None => bail!("unknown sequence {id}"),
+        };
+        let pl = &self.planes[layer * 2 + plane];
+        let w = pl.pool.width;
+        debug_assert_eq!(out.len(), pad_to * w);
+        let tpb = self.config.tokens_per_block;
+        let len = st.len.min(pad_to);
+        if self.config.quant == QuantKind::F32 {
+            // fast path: copy whole-block contiguous runs
+            let mut t = 0;
+            for b in &st.blocks[layer][plane] {
+                if t >= len {
+                    break;
+                }
+                let take = tpb.min(len - t);
+                out[t * w..(t + take) * w].copy_from_slice(pl.pool.rows(*b, 0, take));
+                t += take;
+            }
+        } else {
+            for t in 0..len {
+                let b = st.blocks[layer][plane][t / tpb];
+                let q = pl.qrows[b as usize * tpb + t % tpb]
+                    .as_ref()
+                    .expect("missing quantized row");
+                dequantize(q, &pl.signs, &mut out[t * w..(t + 1) * w]);
+            }
+        }
+        for v in &mut out[len * w..] {
+            *v = 0.0;
+        }
+        Ok(len)
+    }
+
+    /// Tokens currently cached across all sequences.
+    pub fn total_tokens(&self) -> usize {
+        self.seqs.values().map(|s| s.len).sum()
+    }
+
+    /// Stored bytes currently used (paper-accounting, payload only).
+    pub fn stored_bytes(&self) -> usize {
+        self.total_tokens() * self.config.bytes_per_token()
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.planes.iter().map(|p| p.pool.in_use()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(quant: QuantKind) -> CacheConfig {
+        CacheConfig {
+            n_layers: 2,
+            widths: vec![(8, 12), (8, 12)],
+            cache_len: 64,
+            tokens_per_block: 4,
+            capacity_tokens: 64,
+            quant,
+            signs_seed: 7,
+        }
+    }
+
+    #[test]
+    fn append_stage_roundtrip_f32() {
+        let mut c = KvCache::new(cfg(QuantKind::F32));
+        let s = c.new_seq();
+        for t in 0..10 {
+            let k: Vec<f32> = (0..8).map(|i| (t * 8 + i) as f32).collect();
+            let v: Vec<f32> = (0..12).map(|i| -((t * 12 + i) as f32)).collect();
+            c.append(s, &[(&k, &v), (&k, &v)]).unwrap();
+        }
+        let mut out = vec![0.0; 16 * 8];
+        let len = c.stage(s, 1, 0, &mut out, 16).unwrap();
+        assert_eq!(len, 10);
+        assert_eq!(&out[9 * 8..10 * 8], &(0..8).map(|i| (72 + i) as f32).collect::<Vec<_>>()[..]);
+        assert_eq!(&out[10 * 8..], &[0.0; 48][..]);
+    }
+
+    #[test]
+    fn quantized_roundtrip_close() {
+        let mut c = KvCache::new(cfg(QuantKind::Int4));
+        let s = c.new_seq();
+        let k: Vec<f32> = (0..8).map(|i| (i as f32 - 4.0) * 0.3).collect();
+        let v: Vec<f32> = (0..12).map(|i| (i as f32 - 6.0) * 0.2).collect();
+        c.append(s, &[(&k, &v), (&k, &v)]).unwrap();
+        let mut out = vec![0.0; 4 * 8];
+        c.stage(s, 0, 0, &mut out, 4).unwrap();
+        for (a, b) in k.iter().zip(&out[..8]) {
+            assert!((a - b).abs() < 0.25, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn free_releases_blocks() {
+        let mut c = KvCache::new(cfg(QuantKind::F32));
+        let s = c.new_seq();
+        let k = vec![0.0; 8];
+        let v = vec![0.0; 12];
+        for _ in 0..8 {
+            c.append(s, &[(&k, &v), (&k, &v)]).unwrap();
+        }
+        assert!(c.blocks_in_use() > 0);
+        c.free_seq(s);
+        assert_eq!(c.blocks_in_use(), 0);
+        assert_eq!(c.total_tokens(), 0);
+    }
+
+    #[test]
+    fn capacity_exhaustion_errors() {
+        let mut c = KvCache::new(CacheConfig { capacity_tokens: 8, ..cfg(QuantKind::F32) });
+        let s = c.new_seq();
+        let k = vec![0.0; 8];
+        let v = vec![0.0; 12];
+        let mut failed = false;
+        for _ in 0..64 {
+            if c.append(s, &[(&k, &v), (&k, &v)]).is_err() {
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed, "pool should exhaust");
+    }
+}

@@ -1,0 +1,14 @@
+//! Paged compressed-latent KV cache.
+//!
+//! The ReCalKV serving point: the cache stores per-token *latents* —
+//! grouped key latents z_k (g·rk floats) and value latents z_v (rv floats)
+//! per layer — instead of full K/V rows (2·kvh·dh floats), optionally
+//! int4/int3-quantized (paper §4.4). A block allocator hands out fixed-size
+//! pages per (sequence, layer); the engine gathers pages into contiguous
+//! batch staging buffers for the decode graph.
+
+pub mod cache;
+pub mod pool;
+
+pub use cache::{CacheConfig, KvCache, SeqId};
+pub use pool::{BlockId, BlockPool};

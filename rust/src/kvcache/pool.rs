@@ -1,0 +1,95 @@
+//! Fixed-size block pool with a free list — the allocation substrate of the
+//! paged cache (one pool per layer-tensor kind so widths stay uniform).
+
+use anyhow::{bail, Result};
+
+pub type BlockId = u32;
+
+/// Pool of `capacity` blocks, each holding `tokens_per_block` rows of
+/// `width` f32s (quantized storage wraps rows separately in cache.rs).
+pub struct BlockPool {
+    pub width: usize,
+    pub tokens_per_block: usize,
+    data: Vec<f32>,
+    free: Vec<BlockId>,
+    pub capacity: usize,
+}
+
+impl BlockPool {
+    pub fn new(capacity: usize, tokens_per_block: usize, width: usize) -> Self {
+        BlockPool {
+            width,
+            tokens_per_block,
+            data: vec![0.0; capacity * tokens_per_block * width],
+            free: (0..capacity as BlockId).rev().collect(),
+            capacity,
+        }
+    }
+
+    pub fn alloc(&mut self) -> Result<BlockId> {
+        match self.free.pop() {
+            Some(id) => Ok(id),
+            None => bail!("block pool exhausted ({} blocks)", self.capacity),
+        }
+    }
+
+    pub fn release(&mut self, id: BlockId) {
+        debug_assert!((id as usize) < self.capacity);
+        self.free.push(id);
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.capacity - self.free.len()
+    }
+
+    #[inline]
+    pub fn row(&self, block: BlockId, slot: usize) -> &[f32] {
+        let base = (block as usize * self.tokens_per_block + slot) * self.width;
+        &self.data[base..base + self.width]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, block: BlockId, slot: usize) -> &mut [f32] {
+        let base = (block as usize * self.tokens_per_block + slot) * self.width;
+        &mut self.data[base..base + self.width]
+    }
+
+    /// Contiguous rows [slot0, slot1) of one block (the staging fast path).
+    #[inline]
+    pub fn rows(&self, block: BlockId, slot0: usize, slot1: usize) -> &[f32] {
+        let base = (block as usize * self.tokens_per_block + slot0) * self.width;
+        &self.data[base..base + (slot1 - slot0) * self.width]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut p = BlockPool::new(2, 4, 8);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert!(p.alloc().is_err());
+        assert_eq!(p.in_use(), 2);
+        p.release(a);
+        let c = p.alloc().unwrap();
+        assert_eq!(c, a);
+        p.release(b);
+        p.release(c);
+        assert_eq!(p.in_use(), 0);
+    }
+
+    #[test]
+    fn rows_are_disjoint() {
+        let mut p = BlockPool::new(2, 2, 3);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        p.row_mut(a, 0).copy_from_slice(&[1.0, 2.0, 3.0]);
+        p.row_mut(b, 1).copy_from_slice(&[4.0, 5.0, 6.0]);
+        assert_eq!(p.row(a, 0), &[1.0, 2.0, 3.0]);
+        assert_eq!(p.row(a, 1), &[0.0; 3]);
+        assert_eq!(p.row(b, 1), &[4.0, 5.0, 6.0]);
+    }
+}

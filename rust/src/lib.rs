@@ -1,0 +1,22 @@
+//! ReCalKV — low-rank KV cache compression via head reordering and offline
+//! calibration (Yan et al., 2025), reproduced as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! Layer 3 (this crate) is the runtime coordinator: it loads AOT-lowered XLA
+//! graphs (HLO text produced by `python/compile/aot.py`), manages a paged
+//! compressed-latent KV cache (optionally int4/int3 per-token quantized), and
+//! serves batched generation requests through a prefill/decode scheduler.
+//! It also contains a complete from-scratch Rust mirror of the offline
+//! compression pipeline (Fisher allocation, CKA head reordering, grouped SVD,
+//! offline calibration, matrix fusion) over a small dense linear-algebra
+//! substrate, cross-checked against the Python implementation.
+
+pub mod artifacts;
+pub mod compress;
+pub mod coordinator;
+pub mod eval;
+pub mod kvcache;
+pub mod linalg;
+pub mod quant;
+pub mod runtime;
+pub mod util;

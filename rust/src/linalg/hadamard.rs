@@ -1,0 +1,114 @@
+//! Blockwise randomized Walsh-Hadamard transform — lockstep with
+//! python/compile/quant_ref.py (see there for why blockwise: latent dims are
+//! multiples of 4 but rarely powers of two; chunking by the largest
+//! power-of-two divisor keeps the transform orthonormal, invertible and
+//! padding-free).
+
+pub const MAX_BLOCK: usize = 64;
+
+/// Largest power of two dividing n, capped at MAX_BLOCK.
+pub fn block_size(n: usize) -> usize {
+    let b = n & n.wrapping_neg();
+    b.min(MAX_BLOCK)
+}
+
+/// In-place FWHT of one chunk (Sylvester ordering), unnormalized.
+fn fwht(chunk: &mut [f32]) {
+    let n = chunk.len();
+    let mut h = 1;
+    while h < n {
+        let mut start = 0;
+        while start < n {
+            for i in start..start + h {
+                let a = chunk[i];
+                let c = chunk[i + h];
+                chunk[i] = a + c;
+                chunk[i + h] = a - c;
+            }
+            start += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// y = (x ⊙ signs)(I ⊗ H_b)/√b over the last dim, in place.
+pub fn forward(x: &mut [f32], signs: &[f32]) {
+    let n = signs.len();
+    debug_assert_eq!(x.len() % n, 0);
+    let b = block_size(n);
+    let norm = 1.0 / (b as f32).sqrt();
+    for row in x.chunks_exact_mut(n) {
+        for (v, s) in row.iter_mut().zip(signs) {
+            *v *= s;
+        }
+        for chunk in row.chunks_exact_mut(b) {
+            fwht(chunk);
+            for v in chunk.iter_mut() {
+                *v *= norm;
+            }
+        }
+    }
+}
+
+/// Inverse of `forward`: (1/√b)(I⊗H_b) is symmetric orthogonal, then signs.
+pub fn inverse(y: &mut [f32], signs: &[f32]) {
+    let n = signs.len();
+    let b = block_size(n);
+    let norm = 1.0 / (b as f32).sqrt();
+    for row in y.chunks_exact_mut(n) {
+        for chunk in row.chunks_exact_mut(b) {
+            fwht(chunk);
+            for v in chunk.iter_mut() {
+                *v *= norm;
+            }
+        }
+        for (v, s) in row.iter_mut().zip(signs) {
+            *v *= s;
+        }
+    }
+}
+
+/// Deterministic ±1 sign vector from a seed (shared with the python side via
+/// the identical xorshift64* RNG).
+pub fn signs_from_seed(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    (0..n).map(|_| if rng.below(2) == 0 { 1.0 } else { -1.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_non_pow2() {
+        let mut rng = Rng::new(21);
+        for n in [48usize, 20, 64, 12] {
+            let signs = signs_from_seed(7, n);
+            let orig: Vec<f32> = (0..3 * n).map(|_| rng.normal()).collect();
+            let mut x = orig.clone();
+            forward(&mut x, &signs);
+            inverse(&mut x, &signs);
+            let err = orig
+                .iter()
+                .zip(&x)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err < 1e-5, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn orthonormal() {
+        // energy preserved
+        let n = 48;
+        let signs = signs_from_seed(3, n);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let e0: f32 = x.iter().map(|v| v * v).sum();
+        let mut y = x.clone();
+        forward(&mut y, &signs);
+        let e1: f32 = y.iter().map(|v| v * v).sum();
+        assert!((e0 - e1).abs() < 1e-3 * e0);
+    }
+}

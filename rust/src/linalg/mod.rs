@@ -1,0 +1,12 @@
+//! Dense linear algebra substrate, from scratch (no BLAS/LAPACK offline):
+//! row-major f32 matrices, one-sided Jacobi SVD, Cholesky solves and the
+//! blockwise randomized Hadamard transform used by cache quantization.
+
+pub mod hadamard;
+pub mod matrix;
+pub mod solve;
+pub mod svd;
+
+pub use matrix::Matrix;
+pub use solve::{cholesky, invert_lower, ridge_solve, solve_lower, solve_lower_t};
+pub use svd::{svd, svd_lowrank, Svd};

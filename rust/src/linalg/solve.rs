@@ -1,0 +1,121 @@
+//! Cholesky factorization and linear solves (from scratch; used for
+//! whitening and the offline-calibration normal equations).
+
+use super::matrix::Matrix;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor: M = L·Lᵀ. M must be symmetric positive
+/// definite (callers add a trace-scaled ridge first, like the python side).
+pub fn cholesky(m: &Matrix) -> Result<Matrix> {
+    assert_eq!(m.rows, m.cols);
+    let n = m.rows;
+    let mut l = Matrix::zeros(n, n);
+    // f64 accumulation: the second moments span ~6 orders of magnitude.
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = m[(i, j)] as f64;
+            for k in 0..j {
+                s -= l[(i, k)] as f64 * l[(j, k)] as f64;
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("cholesky: matrix not positive definite at {i} (s={s})");
+                }
+                l[(i, j)] = s.sqrt() as f32;
+            } else {
+                l[(i, j)] = (s / l[(j, j)] as f64) as f32;
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L·x = b with L lower-triangular (forward substitution), column-wise
+/// over B: returns X with L·X = B.
+pub fn solve_lower(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows;
+    let mut x = b.clone();
+    for col in 0..b.cols {
+        for i in 0..n {
+            let mut s = x[(i, col)] as f64;
+            for k in 0..i {
+                s -= l[(i, k)] as f64 * x[(k, col)] as f64;
+            }
+            x[(i, col)] = (s / l[(i, i)] as f64) as f32;
+        }
+    }
+    x
+}
+
+/// Solve Lᵀ·x = b with L lower-triangular (back substitution).
+pub fn solve_lower_t(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows;
+    let mut x = b.clone();
+    for col in 0..b.cols {
+        for i in (0..n).rev() {
+            let mut s = x[(i, col)] as f64;
+            for k in (i + 1)..n {
+                s -= l[(k, i)] as f64 * x[(k, col)] as f64;
+            }
+            x[(i, col)] = (s / l[(i, i)] as f64) as f32;
+        }
+    }
+    x
+}
+
+/// Solve (A + εI)·X = B for symmetric positive semidefinite A, with the same
+/// trace-scaled ridge as python compress/calibrate.py::_ridge_solve.
+/// A should be PSD up to f32 rounding; if the Cholesky still finds a
+/// negative pivot (high-dynamic-range second moments), the ridge is
+/// escalated ×100 up to three times before giving up.
+pub fn ridge_solve(a: &Matrix, b: &Matrix, eps_scale: f32) -> Result<Matrix> {
+    let n = a.rows;
+    let trace: f64 = (0..n).map(|i| a[(i, i)] as f64).sum();
+    let mut scale = eps_scale.max(1e-10) as f64;
+    let mut last_err = None;
+    for _ in 0..4 {
+        let eps = (scale * trace / n as f64 + 1e-12) as f32;
+        let mut reg = a.clone();
+        for i in 0..n {
+            reg[(i, i)] += eps;
+        }
+        match cholesky(&reg) {
+            Ok(l) => return Ok(solve_lower_t(&l, &solve_lower(&l, b))),
+            Err(e) => last_err = Some(e),
+        }
+        scale *= 100.0;
+    }
+    Err(last_err.unwrap())
+}
+
+/// Inverse of a lower-triangular matrix (for whitening S⁻ᵀ).
+pub fn invert_lower(l: &Matrix) -> Matrix {
+    solve_lower(l, &Matrix::eye(l.rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let mut rng = Rng::new(11);
+        let a = Matrix::from_fn(6, 4, |_, _| rng.normal());
+        let m = a.gram().add(&Matrix::eye(4).scale(0.5));
+        let l = cholesky(&m).unwrap();
+        let rec = l.matmul(&l.t());
+        assert!(rec.max_abs_diff(&m) < 1e-4);
+    }
+
+    #[test]
+    fn solves() {
+        let mut rng = Rng::new(13);
+        let a = Matrix::from_fn(8, 5, |_, _| rng.normal());
+        let m = a.gram().add(&Matrix::eye(5).scale(0.1));
+        let b = Matrix::from_fn(5, 3, |_, _| rng.normal());
+        let x = ridge_solve(&m, &b, 0.0).unwrap();
+        let back = m.matmul(&x);
+        assert!(back.max_abs_diff(&b) < 1e-3);
+    }
+}

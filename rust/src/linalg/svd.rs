@@ -1,0 +1,180 @@
+//! Singular value decomposition via one-sided Jacobi rotations —
+//! from scratch, no LAPACK offline.
+//!
+//! One-sided Jacobi orthogonalizes the columns of A by Givens rotations on
+//! column pairs until convergence; column norms become the singular values,
+//! normalized columns the left vectors, and the accumulated rotations the
+//! right vectors. Accuracy is excellent for the well-conditioned projection
+//! matrices we decompose (d ≤ 640), and convergence is quadratic.
+
+use super::matrix::Matrix;
+
+pub struct Svd {
+    /// Left singular vectors, [m, k].
+    pub u: Matrix,
+    /// Singular values, descending, length k = min(m, n).
+    pub s: Vec<f32>,
+    /// Right singular vectors transposed, [k, n].
+    pub vt: Matrix,
+}
+
+/// Full (thin) SVD of `a` [m, n]. Internally works on the transpose when
+/// m < n so the Jacobi sweep always sees tall matrices.
+pub fn svd(a: &Matrix) -> Svd {
+    if a.rows >= a.cols {
+        svd_tall(a)
+    } else {
+        // A = U Σ Vᵀ  ⇔  Aᵀ = V Σ Uᵀ
+        let t = svd_tall(&a.t());
+        Svd { u: t.vt.t(), s: t.s, vt: t.u.t() }
+    }
+}
+
+fn svd_tall(a: &Matrix) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    debug_assert!(m >= n);
+    // Work in f64 for the rotations: the compression factors feed long
+    // matmul chains and f32 Jacobi loses ~2 digits.
+    let mut w: Vec<f64> = a.data.iter().map(|v| *v as f64).collect(); // [m, n] row-major
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let col_dot = |w: &[f64], p: usize, q: usize| -> f64 {
+        let mut s = 0.0;
+        for i in 0..m {
+            s += w[i * n + p] * w[i * n + q];
+        }
+        s
+    };
+
+    let eps = 1e-12;
+    for _sweep in 0..60 {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let app = col_dot(&w, p, p);
+                let aqq = col_dot(&w, q, q);
+                let apq = col_dot(&w, p, q);
+                off += apq * apq;
+                if apq.abs() <= eps * (app * aqq).sqrt() + 1e-300 {
+                    continue;
+                }
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wp = w[i * n + p];
+                    let wq = w[i * n + q];
+                    w[i * n + p] = c * wp - s * wq;
+                    w[i * n + q] = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v[i * n + p];
+                    let vq = v[i * n + q];
+                    v[i * n + p] = c * vp - s * vq;
+                    v[i * n + q] = s * vp + c * vq;
+                }
+            }
+        }
+        if off.sqrt() < 1e-14 * (m as f64) {
+            break;
+        }
+    }
+
+    // singular values = column norms; sort descending
+    let mut sv: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let mut s = 0.0;
+            for i in 0..m {
+                s += w[i * n + j] * w[i * n + j];
+            }
+            (s.sqrt(), j)
+        })
+        .collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut u = Matrix::zeros(m, n);
+    let mut vt = Matrix::zeros(n, n);
+    let mut s_out = Vec::with_capacity(n);
+    for (k, (sval, j)) in sv.iter().enumerate() {
+        s_out.push(*sval as f32);
+        let inv = if *sval > 1e-30 { 1.0 / sval } else { 0.0 };
+        for i in 0..m {
+            u[(i, k)] = (w[i * n + j] * inv) as f32;
+        }
+        for i in 0..n {
+            vt[(k, i)] = v[i * n + j] as f32;
+        }
+    }
+    Svd { u, s: s_out, vt }
+}
+
+/// Truncated factorization W ≈ L·R with L = U_r Σ_r^½, R = Σ_r^½ V_rᵀ
+/// (paper Eq. 1). Mirrors python compress/svd.py::svd_lowrank.
+pub fn svd_lowrank(w: &Matrix, r: usize) -> (Matrix, Matrix) {
+    let d = svd(w);
+    let r = r.min(d.s.len());
+    let mut l = Matrix::zeros(w.rows, r);
+    let mut rm = Matrix::zeros(r, w.cols);
+    for k in 0..r {
+        let sq = d.s[k].max(0.0).sqrt();
+        for i in 0..w.rows {
+            l[(i, k)] = d.u[(i, k)] * sq;
+        }
+        for j in 0..w.cols {
+            rm[(k, j)] = sq * d.vt[(k, j)];
+        }
+    }
+    (l, rm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_matrix(rng: &mut Rng, m: usize, n: usize) -> Matrix {
+        Matrix::from_fn(m, n, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn reconstructs() {
+        let mut rng = Rng::new(3);
+        for (m, n) in [(8, 5), (5, 8), (12, 12)] {
+            let a = rand_matrix(&mut rng, m, n);
+            let d = svd(&a);
+            // U Σ Vᵀ == A
+            let mut us = d.u.clone();
+            for i in 0..us.rows {
+                for k in 0..d.s.len() {
+                    us[(i, k)] *= d.s[k];
+                }
+            }
+            let rec = us.matmul(&d.vt);
+            assert!(rec.max_abs_diff(&a) < 1e-4, "{}x{}: {}", m, n, rec.max_abs_diff(&a));
+        }
+    }
+
+    #[test]
+    fn orthogonal_u() {
+        let mut rng = Rng::new(9);
+        let a = rand_matrix(&mut rng, 10, 6);
+        let d = svd(&a);
+        let utu = d.u.t().matmul(&d.u);
+        assert!(utu.max_abs_diff(&Matrix::eye(6)) < 1e-4);
+    }
+
+    #[test]
+    fn lowrank_eckart_young() {
+        // rank-2 matrix recovered exactly at r=2
+        let mut rng = Rng::new(5);
+        let b = rand_matrix(&mut rng, 8, 2);
+        let c = rand_matrix(&mut rng, 2, 6);
+        let a = b.matmul(&c);
+        let (l, r) = svd_lowrank(&a, 2);
+        assert!(l.matmul(&r).max_abs_diff(&a) < 1e-4);
+    }
+}

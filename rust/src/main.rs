@@ -1,0 +1,236 @@
+//! `repro` — the ReCalKV leader binary.
+//!
+//! Subcommands:
+//!   serve     demo serving run: batched generation through the coordinator
+//!   eval      evaluate one variant (ppl + zero-shot tasks)
+//!   tables    regenerate the paper's tables/figures (--table N | --figure F)
+//!   compress  run the pure-rust compression mirror over an .rtz archive
+//!   info      list models/variants in the artifact manifest
+//!
+//! Examples:
+//!   repro info
+//!   repro serve --model tiny-mha --variant recal@50 --requests 16
+//!   repro tables --table 1 --models tiny-mha --mc 32 --ppl-tokens 4096
+//!   repro tables --figure 2
+//!   repro compress --model tiny-mha --method recal --ratio 0.6
+
+use anyhow::{bail, Context, Result};
+use recalkv::artifacts::{Manifest, TensorArchive};
+use recalkv::coordinator::{Engine, EngineConfig, GenRequest};
+use recalkv::eval::report::{self, EvalSizes};
+use recalkv::eval::tasks;
+use recalkv::quant::QuantKind;
+use recalkv::runtime::Runtime;
+use recalkv::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["quick", "fisher", "quiet"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    let dir = args.opt_or("artifacts", "artifacts");
+    match cmd {
+        "info" => info(dir),
+        "serve" => serve(dir, &args),
+        "eval" => eval_variant(dir, &args),
+        "tables" => tables(dir, &args),
+        "compress" => compress(dir, &args),
+        other => bail!("unknown command '{other}' (try: info serve eval tables compress)"),
+    }
+}
+
+fn info(dir: &str) -> Result<()> {
+    let man = Manifest::load(dir)?;
+    println!("artifacts: {}", man.root.display());
+    for (name, m) in &man.models {
+        println!(
+            "model {name}: d={} L={} h={}/{} dh={} (vocab {})",
+            m.config.d_model, m.config.n_layers, m.config.n_heads,
+            m.config.n_kv_heads, m.config.d_head, m.config.vocab
+        );
+        for vname in m.variant_names() {
+            let v = &m.variants[&vname];
+            if v.is_compressed() {
+                println!(
+                    "  {vname:<16} ratio={:.0}% achieved={:.1}% key_ranks={:?} value_ranks={:?}",
+                    v.ratio * 100.0,
+                    v.achieved_ratio * 100.0,
+                    v.key_ranks,
+                    v.value_ranks
+                );
+            } else {
+                println!("  {vname:<16} (uncompressed baseline)");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn serve(dir: &str, args: &Args) -> Result<()> {
+    let man = Manifest::load(dir)?;
+    let rt = Runtime::cpu()?;
+    let mname = args.opt_or("model", "tiny-mha");
+    let vname = args.opt_or("variant", "recal@50");
+    let n_req = args.usize_or("requests", 8);
+    let max_new = args.usize_or("max-new", 24);
+    let quant = QuantKind::parse(args.opt_or("bits", "f32"))
+        .context("bad --bits (f32|4|3)")?;
+    let model = man.model(mname)?;
+    let variant = model.variant(vname)?;
+    println!("serving {mname}/{vname} quant={quant:?}");
+    let mut engine = Engine::new(&rt, model, variant,
+                                 EngineConfig { quant, ..Default::default() })?;
+
+    // demo workload: long-context task prompts (real use of the cache)
+    let insts = tasks::gen_long("needle", man.eval.corpus_seed, n_req,
+                                man.eval.long_ctx_chars);
+    for (i, inst) in insts.iter().enumerate() {
+        let mut prompt = recalkv::coordinator::tokenizer::encode(&inst.prompt);
+        let cap = engine.max_prompt_len();
+        if prompt.len() > cap {
+            prompt.drain(..prompt.len() - cap);
+        }
+        engine.submit(GenRequest::new(i as u64 + 1, prompt, max_new));
+    }
+    let t0 = std::time::Instant::now();
+    let results = engine.run_to_completion()?;
+    let dt = t0.elapsed();
+    for r in &results {
+        println!(
+            "req {:>3}: ttft {:>7.1}ms total {:>8.1}ms  '{}'",
+            r.id, r.ttft_ms, r.total_ms,
+            r.text.chars().take(32).collect::<String>()
+        );
+    }
+    println!("\n{}", engine.metrics.report());
+    println!(
+        "wall {:.2}s | {:.1} generated tok/s end-to-end | cache bytes/token {}",
+        dt.as_secs_f64(),
+        results.iter().map(|r| r.tokens.len()).sum::<usize>() as f64 / dt.as_secs_f64(),
+        engine.cache.config.bytes_per_token(),
+    );
+    Ok(())
+}
+
+fn eval_variant(dir: &str, args: &Args) -> Result<()> {
+    let man = Manifest::load(dir)?;
+    let rt = Runtime::cpu()?;
+    let mname = args.opt_or("model", "tiny-mha");
+    let vname = args.opt_or("variant", "recal@50");
+    let model = man.model(mname)?;
+    let mut sizes = EvalSizes::from_manifest(&man);
+    sizes.ppl_tokens = args.usize_or("ppl-tokens", sizes.ppl_tokens);
+    sizes.mc_per_task = args.usize_or("mc", sizes.mc_per_task);
+    sizes.long_per_task = args.usize_or("long", sizes.long_per_task);
+    let row = report::table1_row(&rt, &man, model, vname, &sizes)?;
+    println!("model ratio variant wiki ptb c4 | 6 tasks | avg");
+    println!("{}", row.join(" "));
+    Ok(())
+}
+
+fn tables(dir: &str, args: &Args) -> Result<()> {
+    let man = Manifest::load(dir)?;
+    let mut sizes = EvalSizes::from_manifest(&man);
+    sizes.ppl_tokens = args.usize_or("ppl-tokens", sizes.ppl_tokens);
+    sizes.mc_per_task = args.usize_or("mc", sizes.mc_per_task);
+    sizes.long_per_task = args.usize_or("long", sizes.long_per_task);
+    sizes.engine_ppl_docs = args.usize_or("docs", sizes.engine_ppl_docs);
+    let models: Vec<String> = args
+        .opt_or("models", "tiny-mha,tiny-gqa")
+        .split(',')
+        .map(String::from)
+        .collect();
+    let model_refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+
+    if let Some(fig) = args.opt("figure") {
+        match fig {
+            "2" => println!("{}", report::figure2(&man, model_refs[0])?),
+            "fisher" => report::fisher_figure(&man, model_refs[0])?.print(),
+            other => bail!("unknown figure '{other}' (2 | fisher)"),
+        }
+        return Ok(());
+    }
+    let rt = Runtime::cpu()?;
+    let which = args.opt_or("table", "1");
+    let t = match which {
+        "1" => report::table1(&rt, &man, &model_refs, &sizes)?,
+        "2" => report::table2(&rt, &man, &model_refs, &sizes)?,
+        "3" => report::table3(&rt, &man, &sizes)?,
+        "4" => report::table4(&rt, &man, &sizes)?,
+        other => bail!("unknown table '{other}' (1|2|3|4)"),
+    };
+    t.print();
+    t.save_tsv(&format!("{dir}/tables/table{which}.tsv"));
+    Ok(())
+}
+
+/// Pure-rust compression over exported weights — proves the Algorithm-1
+/// mirror end-to-end without python.
+fn compress(dir: &str, args: &Args) -> Result<()> {
+    use recalkv::compress::{compress_layer, LayerInputs, MethodCfg};
+    use recalkv::linalg::Matrix;
+    let man = Manifest::load(dir)?;
+    let mname = args.opt_or("model", "tiny-mha");
+    let method = args.opt_or("method", "recal");
+    let ratio = args.f64_or("ratio", 0.5);
+    let model = man.model(mname)?;
+    let cfg = &model.config;
+    let weights = TensorArchive::load(man.root.join(mname).join("weights.rtz"))?;
+    let stats = TensorArchive::load(man.root.join(mname).join("stats.rtz"))?;
+    let mcfg = MethodCfg::from_name(method).context("bad --method")?;
+    let group_size = cfg.n_kv_heads / 2;
+    let g = cfg.n_kv_heads / group_size;
+    // simple uniform allocation for the CLI tool (Fisher allocation lives in
+    // the python pipeline and the manifest)
+    let keep = 1.0 - ratio;
+    let key_rank = (((cfg.kv_dim() as f64 * keep) / g as f64) as usize / 4 * 4).max(4);
+    let value_rank = ((cfg.kv_dim() as f64 * keep) as usize / 4 * 4).max(4);
+    println!("rust-mirror compressing {mname} method={method} ratio={ratio} \
+              key_rank/group={key_rank} value_rank={value_rank}");
+    let to_m = |name: &str| -> Result<Matrix> {
+        let t = weights.get(name)?;
+        Ok(Matrix::from_vec(t.dims[0], t.dims[1], t.f32s.clone()))
+    };
+    let mut out = TensorArchive::default();
+    for l in 0..cfg.n_layers {
+        let w_q = to_m(&format!("L{l}.wq"))?;
+        let w_k = to_m(&format!("L{l}.wk"))?;
+        let w_v = to_m(&format!("L{l}.wv"))?;
+        let w_o = to_m(&format!("L{l}.wo"))?;
+        let mt = stats.get(&format!("m{l}"))?;
+        let m = Matrix::from_vec(mt.dims[0], mt.dims[1], mt.f32s.clone());
+        let xt = stats.get(&format!("x_sample{l}"))?;
+        let x = Matrix::from_vec(xt.dims[0], xt.dims[1], xt.f32s.clone());
+        let inp = LayerInputs {
+            w_q: &w_q, w_k: &w_k, w_v: &w_v, w_o: &w_o, m: &m, x_sample: &x,
+            n_heads: cfg.n_heads, n_kv_heads: cfg.n_kv_heads, d_head: cfg.d_head,
+            group_size, key_rank, value_rank,
+        };
+        let t0 = std::time::Instant::now();
+        let cl = compress_layer(&inp, mcfg)?;
+        println!(
+            "  L{l}: perm={:?} key_err={:.4e} value_err {:.4e} -> {:.4e} \
+             within-sim {:.3} -> {:.3} ({:.1}s)",
+            cl.kv_perm, cl.key_error, cl.value_error_pre, cl.value_error_post,
+            cl.within_sim_before, cl.within_sim_after,
+            t0.elapsed().as_secs_f64()
+        );
+        out.tensors.insert(
+            format!("L{l}.Lk"),
+            recalkv::artifacts::Tensor::from_f32(
+                vec![cl.l_k.rows, cl.l_k.cols], cl.l_k.data.clone()),
+        );
+        out.tensors.insert(
+            format!("L{l}.Lv"),
+            recalkv::artifacts::Tensor::from_f32(
+                vec![cl.l_v.rows, cl.l_v.cols], cl.l_v.data.clone()),
+        );
+        out.tensors.insert(
+            format!("L{l}.wo_fused"),
+            recalkv::artifacts::Tensor::from_f32(
+                vec![cl.wo_fused.rows, cl.wo_fused.cols], cl.wo_fused.data.clone()),
+        );
+    }
+    let path = man.root.join(mname).join(format!("rust_{method}_{}.rtz", (ratio * 100.0) as u32));
+    out.save(&path)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

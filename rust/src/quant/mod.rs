@@ -1,0 +1,11 @@
+//! Per-token latent quantization for the KV cache (paper §4.4).
+//!
+//! The rust cache can store latent vectors int4/int3-quantized: a seeded
+//! randomized blockwise Hadamard transform spreads outliers, then each token
+//! vector is symmetrically quantized with its own fp32 scale. Packing is
+//! nibble-wise for int4 and 3-bits-in-16 for int3 so the *measured* bytes
+//! match the paper's compression accounting.
+
+pub mod pertoken;
+
+pub use pertoken::{dequantize, quantize, QuantKind, QuantizedRow};

@@ -1,0 +1,206 @@
+//! Symmetric per-token quantization with randomized Hadamard preprocessing —
+//! bit-identical to python/compile/quant_ref.py (asserted via goldens).
+
+use crate::linalg::hadamard;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantKind {
+    F32,
+    Int4,
+    Int3,
+}
+
+impl QuantKind {
+    pub fn bits(&self) -> u32 {
+        match self {
+            QuantKind::F32 => 32,
+            QuantKind::Int4 => 4,
+            QuantKind::Int3 => 3,
+        }
+    }
+
+    pub fn qmax(&self) -> i32 {
+        (1 << (self.bits() - 1)) - 1
+    }
+
+    pub fn parse(s: &str) -> Option<QuantKind> {
+        match s {
+            "f32" | "16" | "fp" => Some(QuantKind::F32),
+            "4" | "int4" => Some(QuantKind::Int4),
+            "3" | "int3" => Some(QuantKind::Int3),
+            _ => None,
+        }
+    }
+
+    /// Stored bytes for one n-dim token vector (packed payload + fp32 scale).
+    pub fn stored_bytes(&self, n: usize) -> usize {
+        match self {
+            QuantKind::F32 => 4 * n,
+            QuantKind::Int4 => n.div_ceil(2) + 4,
+            // 5 codes of 3 bits per u16 (3·5=15 used of 16)
+            QuantKind::Int3 => n.div_ceil(5) * 2 + 4,
+        }
+    }
+}
+
+/// One quantized token vector: packed codes + scale.
+#[derive(Clone, Debug)]
+pub struct QuantizedRow {
+    pub kind: QuantKind,
+    pub n: usize,
+    pub scale: f32,
+    pub packed: Vec<u8>,
+}
+
+fn pack_int4(codes: &[i32]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len().div_ceil(2)];
+    for (i, c) in codes.iter().enumerate() {
+        let nib = (*c as i8 as u8) & 0x0f;
+        if i % 2 == 0 {
+            out[i / 2] = nib;
+        } else {
+            out[i / 2] |= nib << 4;
+        }
+    }
+    out
+}
+
+fn unpack_int4(packed: &[u8], n: usize) -> Vec<i32> {
+    (0..n)
+        .map(|i| {
+            let nib = if i % 2 == 0 { packed[i / 2] & 0x0f } else { packed[i / 2] >> 4 };
+            // sign-extend 4-bit
+            ((nib as i8) << 4 >> 4) as i32
+        })
+        .collect()
+}
+
+fn pack_int3(codes: &[i32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(codes.len().div_ceil(5) * 2);
+    for chunk in codes.chunks(5) {
+        let mut word: u16 = 0;
+        for (k, c) in chunk.iter().enumerate() {
+            word |= (((*c + 4) as u16) & 0x7) << (3 * k);
+        }
+        out.extend_from_slice(&word.to_le_bytes());
+    }
+    out
+}
+
+fn unpack_int3(packed: &[u8], n: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(n);
+    for (w, base) in packed.chunks_exact(2).zip((0..n).step_by(5)) {
+        let word = u16::from_le_bytes([w[0], w[1]]);
+        for k in 0..5.min(n - base) {
+            out.push((((word >> (3 * k)) & 0x7) as i32) - 4);
+        }
+    }
+    out
+}
+
+/// Quantize one token vector (applies the Hadamard transform internally).
+pub fn quantize(x: &[f32], signs: &[f32], kind: QuantKind) -> QuantizedRow {
+    debug_assert_eq!(x.len(), signs.len());
+    let n = x.len();
+    if kind == QuantKind::F32 {
+        let mut packed = Vec::with_capacity(4 * n);
+        for v in x {
+            packed.extend_from_slice(&v.to_le_bytes());
+        }
+        return QuantizedRow { kind, n, scale: 1.0, packed };
+    }
+    let mut y = x.to_vec();
+    hadamard::forward(&mut y, signs);
+    let qmax = kind.qmax();
+    let amax = y.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let scale = if amax > 0.0 { amax / qmax as f32 } else { 1.0 };
+    let codes: Vec<i32> = y
+        .iter()
+        .map(|v| {
+            let z = v / scale;
+            // round half away from zero, like f32::round and quant_ref.py
+            (z.signum() * (z.abs() + 0.5).floor()).clamp(-(qmax as f32), qmax as f32) as i32
+        })
+        .collect();
+    let packed = match kind {
+        QuantKind::Int4 => pack_int4(&codes),
+        QuantKind::Int3 => pack_int3(&codes),
+        QuantKind::F32 => unreachable!(),
+    };
+    QuantizedRow { kind, n, scale, packed }
+}
+
+/// Dequantize back to the original latent space (inverse Hadamard included).
+pub fn dequantize(row: &QuantizedRow, signs: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), row.n);
+    match row.kind {
+        QuantKind::F32 => {
+            for (o, b) in out.iter_mut().zip(row.packed.chunks_exact(4)) {
+                *o = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            }
+        }
+        QuantKind::Int4 | QuantKind::Int3 => {
+            let codes = match row.kind {
+                QuantKind::Int4 => unpack_int4(&row.packed, row.n),
+                _ => unpack_int3(&row.packed, row.n),
+            };
+            for (o, c) in out.iter_mut().zip(codes) {
+                *o = c as f32 * row.scale;
+            }
+            hadamard::inverse(out, signs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::hadamard::signs_from_seed;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn int4_roundtrip_error_bounded() {
+        let mut rng = Rng::new(8);
+        let n = 48;
+        let signs = signs_from_seed(5, n);
+        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let q = quantize(&x, &signs, QuantKind::Int4);
+        assert_eq!(q.packed.len(), 24);
+        let mut back = vec![0.0; n];
+        dequantize(&q, &signs, &mut back);
+        let max_err = x.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        // half-step bound in the rotated space, loosened for rotation spread
+        assert!(max_err < 1.5 * q.scale, "err {max_err} scale {}", q.scale);
+    }
+
+    #[test]
+    fn int3_pack_unpack_exact() {
+        let codes: Vec<i32> = vec![-4, -1, 0, 3, 2, 1, -3, 3];
+        let packed = pack_int3(&codes);
+        assert_eq!(unpack_int3(&packed, 8), codes);
+    }
+
+    #[test]
+    fn int4_pack_unpack_exact() {
+        let codes: Vec<i32> = vec![-7, -1, 0, 7, 3, -5, 2];
+        let packed = pack_int4(&codes);
+        assert_eq!(unpack_int4(&packed, 7), codes);
+    }
+
+    #[test]
+    fn f32_passthrough() {
+        let x = vec![1.5f32, -2.25, 0.0];
+        let signs = vec![1.0; 3];
+        let q = quantize(&x, &signs, QuantKind::F32);
+        let mut back = vec![0.0; 3];
+        dequantize(&q, &signs, &mut back);
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn stored_bytes_accounting() {
+        assert_eq!(QuantKind::Int4.stored_bytes(48), 28); // 24 payload + 4 scale
+        assert_eq!(QuantKind::Int3.stored_bytes(48), 24); // 10 words + 4
+        assert_eq!(QuantKind::F32.stored_bytes(48), 192);
+    }
+}

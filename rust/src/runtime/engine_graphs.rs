@@ -1,0 +1,100 @@
+//! Per-variant runtime state: compiled score/prefill/decode graphs plus the
+//! variant's weights resident on device.
+//!
+//! Weight argument order is the sorted tensor-name order (jax flattens dict
+//! pytrees sorted by key; tio.py writes archives sorted by key; the manifest
+//! records the order explicitly and we assert against it).
+
+use super::executable::{Executable, Runtime};
+use crate::artifacts::{TensorArchive, VariantEntry};
+use anyhow::{bail, Context, Result};
+use xla::PjRtBuffer;
+
+/// Which graphs to load for a variant (evaluation may skip `score` etc.).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GraphSet {
+    All,
+    ServingOnly, // prefill + decode
+    ScoreOnly,
+}
+
+/// A variant ready to execute: weights uploaded once, graphs compiled once.
+pub struct VariantRuntime {
+    pub name: String,
+    rt: Runtime,
+    weights: Vec<PjRtBuffer>,
+    pub score: Option<Executable>,
+    pub prefill: Option<Executable>,
+    pub decode: Option<Executable>,
+}
+
+impl VariantRuntime {
+    pub fn load(rt: &Runtime, variant: &VariantEntry, set: GraphSet) -> Result<Self> {
+        let archive = TensorArchive::load(&variant.weights)?;
+        let names: Vec<&String> = archive.tensors.keys().collect();
+        if !variant.weight_order.is_empty() {
+            let expect: Vec<&String> = variant.weight_order.iter().collect();
+            if names != expect {
+                bail!(
+                    "weight order mismatch for {}: archive {:?} vs manifest {:?}",
+                    variant.name,
+                    &names[..names.len().min(4)],
+                    &expect[..expect.len().min(4)]
+                );
+            }
+        }
+        let mut weights = Vec::with_capacity(archive.tensors.len());
+        for (name, t) in &archive.tensors {
+            weights.push(
+                rt.upload_f32(&t.f32s, &t.dims)
+                    .with_context(|| format!("uploading weight {name}"))?,
+            );
+        }
+        let load = |key: &str| -> Result<Option<Executable>> {
+            match variant.graphs.get(key) {
+                Some(p) => Ok(Some(rt.load_hlo(p)?)),
+                None => Ok(None),
+            }
+        };
+        let (score, prefill, decode) = match set {
+            GraphSet::All => (load("score")?, load("prefill")?, load("decode")?),
+            GraphSet::ServingOnly => (None, load("prefill")?, load("decode")?),
+            GraphSet::ScoreOnly => (load("score")?, None, None),
+        };
+        Ok(VariantRuntime { name: variant.name.clone(), rt: rt.clone(), weights, score, prefill, decode })
+    }
+
+    /// Run a graph: activation args are uploaded, weight buffers appended
+    /// (weights are the *first* jax argument, hence first in the arg list).
+    pub fn run(&self, exe: &Executable, activations: &[ActivationArg]) -> Result<Vec<xla::Literal>> {
+        let mut uploaded: Vec<PjRtBuffer> = Vec::with_capacity(activations.len());
+        for a in activations {
+            uploaded.push(match a {
+                ActivationArg::F32(data, dims) => self.rt.upload_f32(data, dims)?,
+                ActivationArg::I32(data, dims) => self.rt.upload_i32(data, dims)?,
+            });
+        }
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.weights.len() + uploaded.len());
+        args.extend(self.weights.iter());
+        args.extend(uploaded.iter());
+        exe.run(&args)
+    }
+
+    pub fn score_exe(&self) -> Result<&Executable> {
+        self.score.as_ref().context("score graph not loaded")
+    }
+
+    pub fn prefill_exe(&self) -> Result<&Executable> {
+        self.prefill.as_ref().context("prefill graph not loaded")
+    }
+
+    pub fn decode_exe(&self) -> Result<&Executable> {
+        self.decode.as_ref().context("decode graph not loaded")
+    }
+}
+
+/// Host-side activation argument (uploaded per call).
+pub enum ActivationArg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}

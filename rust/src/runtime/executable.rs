@@ -1,0 +1,80 @@
+//! PJRT client + compiled-executable wrappers.
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO text → `HloModuleProto` →
+//! `XlaComputation` → `PjRtLoadedExecutable`. Text is the interchange format
+//! because jax ≥ 0.5 emits protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Shared PJRT CPU client. Cloneable handle; one per process is plenty.
+#[derive(Clone)]
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client: Arc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load HLO text from `path` and compile it.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe: Arc::new(exe), name: path.display().to_string() })
+    }
+
+    /// Upload an f32 tensor as a resident device buffer (weights).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading f32 buffer")
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading i32 buffer")
+    }
+}
+
+/// A compiled computation plus its name (for error context).
+#[derive(Clone)]
+pub struct Executable {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with device buffers and return the decomposed output tuple
+    /// (all graphs are lowered with `return_tuple=True`).
+    pub fn run(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of {}", self.name))?;
+        lit.to_tuple().context("decomposing output tuple")
+    }
+}
+
+/// Host-side helpers for output literals.
+pub fn literal_f32s(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal to f32 vec")
+}

@@ -1,0 +1,12 @@
+//! Runtime: PJRT CPU client wrapper executing the AOT artifacts.
+//!
+//! `python/compile/aot.py` lowers each (model, variant) to HLO *text*;
+//! this module loads the text, compiles it once on the PJRT CPU client, and
+//! keeps the variant's weights resident as device buffers so the per-request
+//! hot path only uploads activations (tokens, lengths, cache tensors).
+
+pub mod engine_graphs;
+pub mod executable;
+
+pub use engine_graphs::{GraphSet, VariantRuntime};
+pub use executable::{Executable, Runtime};

@@ -1,0 +1,151 @@
+//! Criterion-style micro-bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs each `[[bench]]` target's `main()`; this harness
+//! provides warmup, adaptive iteration counts, and median/p10/p90 reporting,
+//! plus a `Table` printer used by the paper-table benches to emit the same
+//! rows the paper reports.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.median_ns / 1e9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark a closure: warm up, then sample until ~`budget` elapsed.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed().as_nanos() as f64;
+    let target_samples = 30usize;
+    let per_sample = (budget.as_nanos() as f64 / target_samples as f64).max(1.0);
+    let iters_per_sample = (per_sample / first.max(1.0)).clamp(1.0, 1e6) as u64;
+
+    let mut samples = Vec::with_capacity(target_samples);
+    let start = Instant::now();
+    while samples.len() < target_samples && start.elapsed() < budget {
+        let t = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+    }
+    if samples.is_empty() {
+        samples.push(first);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: iters_per_sample * samples.len() as u64,
+        median_ns: pct(0.5),
+        p10_ns: pct(0.1),
+        p90_ns: pct(0.9),
+    };
+    println!(
+        "bench {:<44} median {:>10}   p10 {:>10}   p90 {:>10}   ({} iters)",
+        r.name,
+        fmt_ns(r.median_ns),
+        fmt_ns(r.p10_ns),
+        fmt_ns(r.p90_ns),
+        r.iters
+    );
+    r
+}
+
+/// Paper-style table printer.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    /// Progress output for slow table builds: print the row just added.
+    pub fn print_last(&self) {
+        if let Some(row) = self.rows.last() {
+            println!("  -> {}", row.join(" | "));
+        }
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        println!("\n=== {} ===", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$} | ", c, w = widths.get(i).copied().unwrap_or(8)));
+            }
+            println!("{s}");
+        };
+        line(&self.headers);
+        println!(
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Write as TSV next to stdout for EXPERIMENTS.md ingestion.
+    pub fn save_tsv(&self, path: &str) {
+        let mut out = String::new();
+        out.push_str(&self.headers.join("\t"));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join("\t"));
+            out.push('\n');
+        }
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path, out).ok();
+        println!("[table saved to {path}]");
+    }
+}
+
+pub fn fmt_f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}

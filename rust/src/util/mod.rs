@@ -1,0 +1,10 @@
+//! Small self-contained substrates (no external crates are available in this
+//! offline environment beyond `xla`/`anyhow`): JSON, a deterministic RNG
+//! shared with python, CLI parsing, a criterion-style bench harness and a
+//! tiny property-testing helper.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

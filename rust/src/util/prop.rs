@@ -1,0 +1,72 @@
+//! Tiny property-testing helper (proptest is unavailable offline).
+//!
+//! `check(cases, gen, prop)` runs `prop` on `cases` generated inputs with a
+//! deterministic seed sequence; on failure it performs a simple halving
+//! shrink when the generator supports resizing, and always reports the
+//! failing seed so the case can be replayed.
+
+use super::rng::Rng;
+
+pub struct PropCtx {
+    pub rng: Rng,
+    pub seed: u64,
+    /// Size hint in [0,1]: generators should scale their output size by it.
+    pub size: f64,
+}
+
+impl PropCtx {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let span = ((hi - lo) as f64 * self.size).max(1.0) as usize;
+        lo + self.rng.below(span.min(hi - lo) + 1)
+    }
+
+    pub fn f32_vec(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal() * scale).collect()
+    }
+}
+
+/// Run `prop` over `cases` deterministic random cases. Panics with the seed
+/// of the first failing case (after trying smaller sizes).
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut PropCtx) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let seed = 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i + 1) ^ 0xD1B5;
+        let mut ctx = PropCtx { rng: Rng::new(seed), seed, size: 1.0 };
+        if let Err(msg) = prop(&mut ctx) {
+            // shrink: retry the same seed with smaller sizes to find a
+            // minimal-ish failing configuration for the report.
+            let mut min_fail = (1.0, msg.clone());
+            for step in 1..=4 {
+                let size = 1.0 / f64::powi(2.0, step);
+                let mut sctx = PropCtx { rng: Rng::new(seed), seed, size };
+                if let Err(m) = prop(&mut sctx) {
+                    min_fail = (size, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {i}, seed {seed:#x}, size {}): {}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+/// Assert helper producing Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+pub fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}

@@ -1,0 +1,172 @@
+//! Algorithmic invariants of the rust compression mirror + JSON substrate.
+
+use recalkv::compress::{cka, compress_layer, reorder, svdc, LayerInputs, MethodCfg};
+use recalkv::linalg::Matrix;
+use recalkv::prop_assert;
+use recalkv::util::json::Json;
+use recalkv::util::prop::check;
+use recalkv::util::rng::Rng;
+
+fn layer_inputs(rng: &mut Rng, d: usize, h: usize, dh: usize)
+    -> (Matrix, Matrix, Matrix, Matrix, Matrix, Matrix) {
+    let wq = Matrix::from_fn(d, h * dh, |_, _| rng.normal() * 0.1);
+    let wk = Matrix::from_fn(d, h * dh, |_, _| rng.normal() * 0.1);
+    let wv = Matrix::from_fn(d, h * dh, |_, _| rng.normal() * 0.1);
+    let wo = Matrix::from_fn(h * dh, d, |_, _| rng.normal() * 0.1);
+    let x = Matrix::from_fn(3 * d, d, |_, _| rng.normal());
+    let m = x.gram();
+    (wq, wk, wv, wo, x, m)
+}
+
+#[test]
+fn hsr_improves_grouped_svd_error() {
+    // Planted structure: heads {0,2} and {1,3} share subspaces. Reordering
+    // must group them and reduce the grouped-SVD reconstruction error vs the
+    // identity order — the core claim of paper §3.2.
+    let mut rng = Rng::new(71);
+    let d = 24;
+    let dh = 6;
+    let base_a = Matrix::from_fn(d, dh, |_, _| rng.normal());
+    let base_b = Matrix::from_fn(d, dh, |_, _| rng.normal());
+    let noise = |rng: &mut Rng| Matrix::from_fn(d, dh, |_, _| rng.normal() * 0.05);
+    let h0 = base_a.add(&noise(&mut rng));
+    let h1 = base_b.add(&noise(&mut rng));
+    let h2 = base_a.scale(0.9).add(&noise(&mut rng));
+    let h3 = base_b.scale(1.1).add(&noise(&mut rng));
+    let wk = Matrix::hcat(&[&h0, &h1, &h2, &h3]);
+    let x = Matrix::from_fn(128, d, |_, _| rng.normal());
+    let sim = cka::head_similarity(&x, &wk, 4);
+    let perm = reorder::greedy_group_heads(&sim, 2);
+    // similar heads must land together
+    let find = |h: usize| perm.iter().position(|p| *p == h).unwrap() / 2;
+    assert_eq!(find(0), find(2), "heads 0,2 should share a group: {perm:?}");
+    assert_eq!(find(1), find(3), "heads 1,3 should share a group: {perm:?}");
+
+    let rank = 5;
+    let ident: Vec<usize> = (0..4).collect();
+    let err = |p: &[usize]| {
+        let (l, rs) = svdc::grouped_svd(&wk, p, 2, rank, dh, None, 0.0).unwrap();
+        let mut total = 0.0;
+        for (j, r) in rs.iter().enumerate() {
+            let lg = l.cols_slice(j * rank, (j + 1) * rank);
+            let cols: Vec<Matrix> = p[j * 2..(j + 1) * 2]
+                .iter()
+                .map(|c| wk.cols_slice(c * dh, (c + 1) * dh))
+                .collect();
+            let refs: Vec<&Matrix> = cols.iter().collect();
+            let wg = Matrix::hcat(&refs);
+            total += wg.sub(&lg.matmul(r)).frob_sq();
+        }
+        total
+    };
+    let e_reordered = err(&perm);
+    let e_identity = err(&ident);
+    assert!(
+        e_reordered < e_identity,
+        "HSR should reduce error: {e_reordered} vs {e_identity}"
+    );
+}
+
+#[test]
+fn calibration_never_hurts_property() {
+    check("calibration_monotone", 10, |ctx| {
+        let mut rng = Rng::new(ctx.seed);
+        let d = 8 + ctx.usize_in(0, 8);
+        let n = d + 4;
+        let w = Matrix::from_fn(d, n, |_, _| rng.normal());
+        let x = Matrix::from_fn(4 * d, d, |_, _| rng.normal());
+        let m = x.gram();
+        let r = (d / 2).max(2);
+        let (l0, r0) = svdc::svd_lowrank(&w, r);
+        let (_, _, hist) =
+            recalkv::compress::calibrate::calibrate(&w, &l0, &r0, &m, 6, 1e-9)
+                .map_err(|e| e.to_string())?;
+        for win in hist.windows(2) {
+            prop_assert!(win[1] <= win[0] * 1.00001, "error increased: {hist:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn whitening_never_hurts_in_data_metric() {
+    check("whitening_optimal", 8, |ctx| {
+        let mut rng = Rng::new(ctx.seed);
+        let d = 10;
+        let n = 14;
+        let w = Matrix::from_fn(d, n, |_, _| rng.normal());
+        // anisotropic data
+        let mut x = Matrix::from_fn(80, d, |_, _| rng.normal() * 0.2);
+        for i in 0..x.rows {
+            x[(i, 0)] += rng.normal() * 3.0;
+        }
+        let m = x.gram();
+        let r = 4;
+        let (lp, rp) = svdc::svd_lowrank(&w, r);
+        let (lw, rw) = svdc::whitened_svd_lowrank(&w, r, &m, 1e-4).map_err(|e| e.to_string())?;
+        let ep = svdc::recon_error(&w, &lp, &rp, Some(&m));
+        let ew = svdc::recon_error(&w, &lw, &rw, Some(&m));
+        prop_assert!(ew <= ep * 1.01, "whitened {ew} worse than plain {ep}");
+        Ok(())
+    });
+}
+
+#[test]
+fn methods_ordering_on_synthetic_layer() {
+    // End-to-end layer compression: recal must beat palu in data-aware
+    // value error (its whole point), on anisotropic calibration data.
+    let mut rng = Rng::new(77);
+    let (wq, wk, wv, wo, _x, _) = layer_inputs(&mut rng, 24, 4, 6);
+    let mut x = Matrix::from_fn(200, 24, |_, _| rng.normal() * 0.3);
+    for i in 0..x.rows {
+        x[(i, 1)] += rng.normal() * 2.5;
+    }
+    let m = x.gram();
+    let inp = |key_rank, value_rank| LayerInputs {
+        w_q: &wq, w_k: &wk, w_v: &wv, w_o: &wo, m: &m, x_sample: &x,
+        n_heads: 4, n_kv_heads: 4, d_head: 6, group_size: 2,
+        key_rank, value_rank,
+    };
+    let recal = compress_layer(&inp(4, 8), MethodCfg::from_name("recal").unwrap()).unwrap();
+    let palu = compress_layer(&inp(4, 8), MethodCfg::from_name("palu").unwrap()).unwrap();
+    assert!(
+        recal.value_error_post <= palu.value_error_post,
+        "recal value error {} should be <= palu {}",
+        recal.value_error_post,
+        palu.value_error_post
+    );
+    assert!(
+        recal.key_error <= palu.key_error * 1.05,
+        "recal key error {} should be <= palu-ish {}",
+        recal.key_error,
+        palu.key_error
+    );
+}
+
+#[test]
+fn json_roundtrip_property() {
+    check("json_roundtrip", 40, |ctx| {
+        // build a random JSON value and round-trip it
+        fn build(ctx: &mut recalkv::util::prop::PropCtx, depth: usize) -> Json {
+            match if depth == 0 { ctx.rng.below(4) } else { ctx.rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(ctx.rng.below(2) == 0),
+                2 => Json::Num((ctx.rng.below(100000) as f64) / 8.0 - 1000.0),
+                3 => Json::Str(format!("s{}\n\"x\"{}", ctx.rng.below(100), ctx.rng.below(10))),
+                4 => Json::Arr((0..ctx.rng.below(4)).map(|_| build(ctx, depth - 1)).collect()),
+                _ => {
+                    let mut m = std::collections::BTreeMap::new();
+                    for i in 0..ctx.rng.below(4) {
+                        m.insert(format!("k{i}"), build(ctx, depth - 1));
+                    }
+                    Json::Obj(m)
+                }
+            }
+        }
+        let v = build(ctx, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).map_err(|e| e)?;
+        prop_assert!(back == v, "roundtrip mismatch: {text}");
+        Ok(())
+    });
+}

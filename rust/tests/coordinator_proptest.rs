@@ -1,0 +1,110 @@
+//! Coordinator invariants that don't need the XLA runtime: batching policy,
+//! sampler, request lifecycle, tokenizer, metrics.
+
+use recalkv::coordinator::batcher::BatchPolicy;
+use recalkv::coordinator::request::{GenRequest, SamplingParams, Tracked};
+use recalkv::coordinator::sampler::{log_prob, Sampler};
+use recalkv::coordinator::tokenizer;
+use recalkv::prop_assert;
+use recalkv::util::prop::check;
+
+#[test]
+fn tokenizer_roundtrip_property() {
+    check("tokenizer_roundtrip", 30, |ctx| {
+        // printable ascii strings
+        let len = ctx.usize_in(0, 64);
+        let s: String = (0..len)
+            .map(|_| (32 + ctx.rng.below(95)) as u8 as char)
+            .collect();
+        let toks = tokenizer::encode(&s);
+        prop_assert!(toks.len() == s.len(), "ascii length mismatch");
+        prop_assert!(tokenizer::decode(&toks) == s, "roundtrip mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn sampler_greedy_deterministic_topk_bounded() {
+    check("sampler_props", 25, |ctx| {
+        let v = 8 + ctx.usize_in(0, 56);
+        let logits = ctx.f32_vec(v, 2.0);
+        let mut greedy = Sampler::new(SamplingParams::default());
+        let a = greedy.sample(&logits);
+        let b = greedy.sample(&logits);
+        prop_assert!(a == b, "greedy not deterministic");
+        prop_assert!(logits[a as usize] >= logits.iter().fold(f32::MIN, |m, v| m.max(*v)) - 1e-6,
+                     "greedy not argmax");
+        let k = 1 + ctx.usize_in(0, 4);
+        let mut topk = Sampler::new(SamplingParams { temperature: 0.8, top_k: k, seed: ctx.seed });
+        // the sampled token must be among the k largest
+        let mut sorted: Vec<usize> = (0..v).collect();
+        sorted.sort_by(|x, y| logits[*y].partial_cmp(&logits[*x]).unwrap());
+        let allowed = &sorted[..k];
+        for _ in 0..20 {
+            let t = topk.sample(&logits) as usize;
+            prop_assert!(allowed.contains(&t), "top-k violated: {t} not in {allowed:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn log_prob_is_normalized_distribution() {
+    check("logprob_norm", 20, |ctx| {
+        let v = 4 + ctx.usize_in(0, 28);
+        let logits = ctx.f32_vec(v, 3.0);
+        let total: f64 = (0..v as i32).map(|t| log_prob(&logits, t).exp()).sum();
+        prop_assert!((total - 1.0).abs() < 1e-6, "Σp = {total}");
+        Ok(())
+    });
+}
+
+#[test]
+fn tracked_lifecycle_stop_conditions() {
+    // max_new_tokens
+    let mut t = Tracked::new(GenRequest::new(1, vec![65], 3));
+    assert!(!t.done());
+    t.generated.extend([1, 2, 3]);
+    assert!(t.done());
+    // stop token
+    let mut req = GenRequest::new(2, vec![65], 100);
+    req.stop_token = Some(46);
+    let mut t = Tracked::new(req);
+    t.generated.push(70);
+    assert!(!t.done());
+    t.generated.push(46);
+    assert!(t.done());
+    let res = t.finish();
+    assert_eq!(res.tokens, vec![70, 46]);
+    assert_eq!(res.text, "F.");
+}
+
+#[test]
+fn batch_policies_safety_and_liveness() {
+    check("batch_policy", 40, |ctx| {
+        let total = 1 + ctx.usize_in(0, 7);
+        let free = ctx.usize_in(0, total);
+        let waiting = ctx.usize_in(0, 12);
+        for policy in [BatchPolicy::Eager, BatchPolicy::Full, BatchPolicy::Threshold(2)] {
+            let go = policy.should_prefill(free, total, waiting);
+            // safety: never prefill without capacity or demand
+            if free == 0 || waiting == 0 {
+                prop_assert!(!go, "{policy:?} fired with free={free} waiting={waiting}");
+            }
+            // liveness: when fully drained and work exists, every policy fires
+            if free == total && waiting > 0 {
+                prop_assert!(go, "{policy:?} stalled with full capacity");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn forced_tokens_drive_teacher_forcing_bookkeeping() {
+    let mut req = GenRequest::new(3, vec![65, 66], 4);
+    req.forced_tokens = Some(vec![10, 11, 12, 13]);
+    let t = Tracked::new(req);
+    assert_eq!(t.forced_count, 0);
+    assert!(!t.done());
+}

@@ -1,0 +1,175 @@
+//! Integration tests over the full runtime: artifacts → PJRT → engine.
+//! Skipped gracefully when artifacts/ is absent.
+
+use recalkv::artifacts::{Manifest, TensorArchive};
+use recalkv::coordinator::{Engine, EngineConfig, GenRequest};
+use recalkv::quant::QuantKind;
+use recalkv::runtime::engine_graphs::ActivationArg;
+use recalkv::runtime::{GraphSet, Runtime, VariantRuntime};
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("[skip] artifacts/ not built");
+        return None;
+    }
+    Some(Manifest::load(dir).unwrap())
+}
+
+#[test]
+fn score_graph_matches_python_golden_logits() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("tiny-mha").unwrap();
+    let g = TensorArchive::load(man.root.join("tiny-mha/goldens.rtz")).unwrap();
+    let toks_t = g.get("score.tokens").unwrap();
+    let (b_g, s_g) = (toks_t.dims[0], toks_t.dims[1]);
+
+    // run through the *score* graph with the golden tokens padded into the
+    // fixed [score_batch, score_seq] shape; causality makes the first s_g
+    // positions independent of the padding.
+    let sb = model.shapes.score_batch;
+    let ss = model.shapes.score_seq;
+    let mut toks = vec![0i32; sb * ss];
+    for i in 0..b_g {
+        toks[i * ss..i * ss + s_g].copy_from_slice(&toks_t.i32s[i * s_g..(i + 1) * s_g]);
+    }
+    let v = model.config.vocab;
+    for (variant, key) in [("full", "score.full_logits"), ("recal@50", "score.comp_logits")] {
+        let vr = VariantRuntime::load(&rt, model.variant(variant).unwrap(), GraphSet::ScoreOnly)
+            .unwrap();
+        let outs = vr
+            .run(vr.score_exe().unwrap(), &[ActivationArg::I32(&toks, &[sb, ss])])
+            .unwrap();
+        let logits = outs[0].to_vec::<f32>().unwrap();
+        let want = g.f32s(key).unwrap();
+        let mut max_err = 0.0f32;
+        for i in 0..b_g {
+            for t in 0..s_g {
+                for c in 0..v {
+                    let a = logits[(i * ss + t) * v + c];
+                    let b = want[(i * s_g + t) * v + c];
+                    max_err = max_err.max((a - b).abs());
+                }
+            }
+        }
+        assert!(max_err < 2e-3, "{variant}: rust-vs-python logits diverge by {max_err}");
+    }
+}
+
+#[test]
+fn engine_decode_consistent_with_score_graph() {
+    // Teacher-forced continuation through the ENGINE must assign the same
+    // logprobs as the score graph on the same tokens (decode==score math).
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("tiny-mha").unwrap();
+    let variant = model.variant("recal@50").unwrap();
+
+    let text = "bob has a red key . the dog barks . count one two three four .";
+    let toks = recalkv::coordinator::tokenizer::encode(text);
+    let prompt_len = 8;
+
+    // engine path
+    let mut engine = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
+    let mut req = GenRequest::new(1, toks[..prompt_len].to_vec(), toks.len() - prompt_len);
+    req.forced_tokens = Some(toks[prompt_len..].to_vec());
+    engine.submit(req);
+    let res = engine.run_to_completion().unwrap();
+    let engine_lp = res[0].forced_logprob;
+
+    // score path
+    let vr = VariantRuntime::load(&rt, variant, GraphSet::ScoreOnly).unwrap();
+    let sb = model.shapes.score_batch;
+    let ss = model.shapes.score_seq;
+    let mut batch = vec![0i32; sb * ss];
+    batch[..toks.len()].copy_from_slice(&toks);
+    let outs = vr
+        .run(vr.score_exe().unwrap(), &[ActivationArg::I32(&batch, &[sb, ss])])
+        .unwrap();
+    let logits = outs[0].to_vec::<f32>().unwrap();
+    let v = model.config.vocab;
+    let mut score_lp = 0.0f64;
+    for t in prompt_len - 1..toks.len() - 1 {
+        let row = &logits[t * v..(t + 1) * v];
+        score_lp += recalkv::coordinator::sampler::log_prob(row, toks[t + 1]);
+    }
+    let diff = (engine_lp - score_lp).abs();
+    assert!(
+        diff < 0.02 * score_lp.abs().max(1.0),
+        "engine {engine_lp} vs score {score_lp} (diff {diff})"
+    );
+}
+
+#[test]
+fn engine_serves_batched_requests_all_variants_kinds() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("tiny-mha").unwrap();
+    for vname in ["full", "recal@50"] {
+        let variant = model.variant(vname).unwrap();
+        let mut engine = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
+        for i in 0..6 {
+            let prompt = recalkv::coordinator::tokenizer::encode("the dog ");
+            engine.submit(GenRequest::new(i, prompt, 5));
+        }
+        let results = engine.run_to_completion().unwrap();
+        assert_eq!(results.len(), 6, "{vname}: all requests must finish");
+        for r in &results {
+            assert_eq!(r.tokens.len(), 5, "{vname}: wrong generation length");
+        }
+        assert!(engine.cache.blocks_in_use() == 0, "{vname}: cache leak");
+        assert!(engine.metrics.mean_batch_occupancy() > 0.5, "{vname}: poor batching");
+    }
+}
+
+#[test]
+fn quantized_engine_still_generates_sensibly() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("tiny-mha").unwrap();
+    let variant = model.variant("recal@50").unwrap();
+    for quant in [QuantKind::Int4, QuantKind::Int3] {
+        let mut engine =
+            Engine::new(&rt, model, variant, EngineConfig { quant, ..Default::default() })
+                .unwrap();
+        // strongly-learned pattern (with in-distribution leading context):
+        // "... . the dog " -> "barks"
+        engine.submit(GenRequest::new(
+            1,
+            recalkv::coordinator::tokenizer::encode("rain fell on the old roof . the dog "),
+            5,
+        ));
+        let res = engine.run_to_completion().unwrap();
+        // int4/int3 latents perturb the greedy path after a couple of
+        // characters (Table 4 quantifies the ppl cost); the prediction must
+        // still start like the learned continuation and stay text-like.
+        assert!(
+            res[0].text.starts_with('b'),
+            "{quant:?} broke a strongly-learned pattern: {:?}",
+            res[0].text
+        );
+        assert!(
+            res[0].text.bytes().all(|b| b.is_ascii_lowercase() || b == b' ' || b == b'.'),
+            "{quant:?} produced non-text bytes: {:?}",
+            res[0].text
+        );
+    }
+}
+
+#[test]
+fn gqa_model_serves() {
+    let Some(man) = manifest() else { return };
+    if !man.models.contains_key("tiny-gqa") {
+        eprintln!("[skip] tiny-gqa not built");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("tiny-gqa").unwrap();
+    let variant = model.variant("recal@50").unwrap();
+    let mut engine = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
+    engine.submit(GenRequest::new(1, recalkv::coordinator::tokenizer::encode("the cat "), 5));
+    let res = engine.run_to_completion().unwrap();
+    assert_eq!(res.len(), 1);
+    assert_eq!(res[0].tokens.len(), 5);
+}

@@ -1,0 +1,130 @@
+//! Paged-cache invariants under randomized workloads (property-style).
+
+use recalkv::kvcache::{CacheConfig, KvCache};
+use recalkv::prop_assert;
+use recalkv::quant::QuantKind;
+use recalkv::util::prop::check;
+
+fn cfg(quant: QuantKind, widths: Vec<(usize, usize)>, cap: usize) -> CacheConfig {
+    CacheConfig {
+        n_layers: widths.len(),
+        widths,
+        cache_len: 128,
+        tokens_per_block: 8,
+        capacity_tokens: cap,
+        quant,
+        signs_seed: 13,
+    }
+}
+
+#[test]
+fn random_append_stage_consistency() {
+    check("cache_append_stage", 10, |ctx| {
+        let widths = vec![(8usize, 12usize), (16, 4)];
+        let mut cache = KvCache::new(cfg(QuantKind::F32, widths.clone(), 4096));
+        let n_seqs = 1 + ctx.usize_in(1, 4);
+        let seqs: Vec<_> = (0..n_seqs).map(|_| cache.new_seq()).collect();
+        let mut mirror: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n_seqs]; // [seq][token] k-plane L0
+        for _ in 0..ctx.usize_in(5, 60) {
+            let si = ctx.rng.below(n_seqs);
+            let k0 = ctx.f32_vec(8, 1.0);
+            let v0 = ctx.f32_vec(12, 1.0);
+            let k1 = ctx.f32_vec(16, 1.0);
+            let v1 = ctx.f32_vec(4, 1.0);
+            if cache.seq_len(seqs[si]) >= 128 {
+                continue;
+            }
+            cache
+                .append(seqs[si], &[(&k0, &v0), (&k1, &v1)])
+                .map_err(|e| e.to_string())?;
+            mirror[si].push(k0);
+        }
+        for si in 0..n_seqs {
+            let len = cache.seq_len(seqs[si]);
+            prop_assert!(len == mirror[si].len(), "length mismatch");
+            let mut out = vec![0.0; 128 * 8];
+            cache.stage(seqs[si], 0, 0, &mut out, 128).map_err(|e| e.to_string())?;
+            for (t, want) in mirror[si].iter().enumerate() {
+                let got = &out[t * 8..(t + 1) * 8];
+                prop_assert!(got == &want[..], "row {t} differs for seq {si}");
+            }
+            for v in &out[len * 8..] {
+                prop_assert!(*v == 0.0, "padding not zeroed");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn free_always_returns_all_blocks() {
+    check("cache_free_blocks", 10, |ctx| {
+        let mut cache = KvCache::new(cfg(QuantKind::F32, vec![(4, 4)], 2048));
+        let mut live = Vec::new();
+        for _ in 0..ctx.usize_in(2, 20) {
+            let s = cache.new_seq();
+            let n = ctx.usize_in(1, 30);
+            for _ in 0..n {
+                let k = ctx.f32_vec(4, 1.0);
+                let v = ctx.f32_vec(4, 1.0);
+                cache.append(s, &[(&k, &v)]).map_err(|e| e.to_string())?;
+            }
+            live.push(s);
+            // randomly free one
+            if ctx.rng.below(3) == 0 && !live.is_empty() {
+                let i = ctx.rng.below(live.len());
+                cache.free_seq(live.swap_remove(i));
+            }
+        }
+        for s in live {
+            cache.free_seq(s);
+        }
+        prop_assert!(cache.blocks_in_use() == 0, "leaked blocks");
+        prop_assert!(cache.total_tokens() == 0, "leaked tokens");
+        Ok(())
+    });
+}
+
+#[test]
+fn quantized_stage_error_bounded() {
+    check("cache_quant_error", 8, |ctx| {
+        for quant in [QuantKind::Int4, QuantKind::Int3] {
+            let mut cache = KvCache::new(cfg(quant, vec![(16, 16)], 1024));
+            let s = cache.new_seq();
+            let mut rows = Vec::new();
+            for _ in 0..10 {
+                let k = ctx.f32_vec(16, 1.0);
+                cache.append(s, &[(&k, &k)]).map_err(|e| e.to_string())?;
+                rows.push(k);
+            }
+            let mut out = vec![0.0; 128 * 16];
+            cache.stage(s, 0, 0, &mut out, 128).map_err(|e| e.to_string())?;
+            // error bounded by ~2·amax/qmax per element in rotated space
+            let qmax = quant.qmax() as f32;
+            for (t, want) in rows.iter().enumerate() {
+                let amax = want.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                let bound = 3.0 * amax / qmax + 1e-3;
+                for (a, b) in want.iter().zip(&out[t * 16..(t + 1) * 16]) {
+                    prop_assert!(
+                        (a - b).abs() <= bound,
+                        "{quant:?} err {} > bound {bound}",
+                        (a - b).abs()
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bytes_per_token_accounting() {
+    // the paper's memory claim: compressed+quantized cache is dramatically
+    // smaller than the full fp32 cache
+    let full = cfg(QuantKind::F32, vec![(256, 256); 4], 16).bytes_per_token();
+    let low = cfg(QuantKind::F32, vec![(64, 96); 4], 16).bytes_per_token();
+    let low4 = cfg(QuantKind::Int4, vec![(64, 96); 4], 16).bytes_per_token();
+    assert_eq!(full, 4 * (256 + 256) * 4);
+    assert_eq!(low, 4 * (64 + 96) * 4);
+    assert!(low4 < low / 6, "int4 should be ~8x smaller: {low4} vs {low}");
+}

@@ -1,0 +1,114 @@
+//! Property-style tests of the linear-algebra substrate (in-tree prop
+//! helper; proptest is unavailable offline).
+
+use recalkv::linalg::{cholesky, ridge_solve, svd, svd_lowrank, Matrix};
+use recalkv::prop_assert;
+use recalkv::util::prop::{check, max_abs_diff};
+
+#[test]
+fn svd_reconstructs_random_matrices() {
+    check("svd_reconstruct", 25, |ctx| {
+        let m = ctx.usize_in(2, 24);
+        let n = ctx.usize_in(2, 24);
+        let a = Matrix::from_vec(m, n, ctx.f32_vec(m * n, 1.0));
+        let d = svd(&a);
+        let k = d.s.len();
+        let mut us = d.u.clone();
+        for i in 0..m {
+            for j in 0..k {
+                us[(i, j)] *= d.s[j];
+            }
+        }
+        let rec = us.matmul(&d.vt);
+        let err = rec.max_abs_diff(&a);
+        prop_assert!(err < 1e-3, "recon err {err} for {m}x{n}");
+        // singular values sorted desc and non-negative
+        for w in d.s.windows(2) {
+            prop_assert!(w[0] >= w[1] - 1e-6, "singular values not sorted");
+        }
+        prop_assert!(d.s.iter().all(|s| *s >= 0.0), "negative singular value");
+        Ok(())
+    });
+}
+
+#[test]
+fn svd_u_columns_orthonormal() {
+    check("svd_orthonormal", 15, |ctx| {
+        let m = ctx.usize_in(4, 20);
+        let n = ctx.usize_in(2, m);
+        let a = Matrix::from_vec(m, n, ctx.f32_vec(m * n, 1.0));
+        let d = svd(&a);
+        let utu = d.u.t().matmul(&d.u);
+        let err = utu.max_abs_diff(&Matrix::eye(n));
+        prop_assert!(err < 1e-3, "UᵀU far from I: {err}");
+        Ok(())
+    });
+}
+
+#[test]
+fn lowrank_error_never_increases_with_rank() {
+    check("rank_monotone", 15, |ctx| {
+        let a = Matrix::from_vec(12, 16, ctx.f32_vec(12 * 16, 1.0));
+        let mut prev = f64::INFINITY;
+        for r in [2usize, 4, 8, 12] {
+            let (l, rm) = svd_lowrank(&a, r);
+            let err = a.sub(&l.matmul(&rm)).frob_sq();
+            prop_assert!(err <= prev + 1e-4, "rank {r}: {err} > {prev}");
+            prev = err;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cholesky_solve_roundtrip() {
+    check("cholesky_solve", 20, |ctx| {
+        let d = ctx.usize_in(2, 16);
+        let a = Matrix::from_vec(d + 4, d, ctx.f32_vec((d + 4) * d, 1.0));
+        let m = a.gram().add(&Matrix::eye(d).scale(0.2));
+        let l = cholesky(&m).map_err(|e| e.to_string())?;
+        let rec = l.matmul(&l.t());
+        prop_assert!(rec.max_abs_diff(&m) < 1e-3, "LLᵀ != M");
+        let b = Matrix::from_vec(d, 3, ctx.f32_vec(d * 3, 1.0));
+        let x = ridge_solve(&m, &b, 0.0).map_err(|e| e.to_string())?;
+        let back = m.matmul(&x);
+        prop_assert!(back.max_abs_diff(&b) < 1e-2, "solve residual too big");
+        Ok(())
+    });
+}
+
+#[test]
+fn hadamard_roundtrip_property() {
+    use recalkv::linalg::hadamard::{forward, inverse, signs_from_seed};
+    check("hadamard_roundtrip", 30, |ctx| {
+        let n = 4 * ctx.usize_in(1, 24); // any multiple of 4
+        let signs = signs_from_seed(ctx.seed, n);
+        let orig = ctx.f32_vec(3 * n, 2.0);
+        let mut x = orig.clone();
+        forward(&mut x, &signs);
+        // energy preserved per row
+        for (ro, rx) in orig.chunks(n).zip(x.chunks(n)) {
+            let e0: f32 = ro.iter().map(|v| v * v).sum();
+            let e1: f32 = rx.iter().map(|v| v * v).sum();
+            prop_assert!((e0 - e1).abs() <= 1e-3 * e0.max(1.0), "energy changed");
+        }
+        inverse(&mut x, &signs);
+        let err = max_abs_diff(&orig, &x);
+        prop_assert!(err < 1e-4, "roundtrip err {err} (n={n})");
+        Ok(())
+    });
+}
+
+#[test]
+fn matmul_associativity() {
+    check("matmul_assoc", 10, |ctx| {
+        let (m, k, n, p) = (5, 7, 6, 4);
+        let a = Matrix::from_vec(m, k, ctx.f32_vec(m * k, 1.0));
+        let b = Matrix::from_vec(k, n, ctx.f32_vec(k * n, 1.0));
+        let c = Matrix::from_vec(n, p, ctx.f32_vec(n * p, 1.0));
+        let left = a.matmul(&b).matmul(&c);
+        let right = a.matmul(&b.matmul(&c));
+        prop_assert!(left.max_abs_diff(&right) < 1e-3, "associativity violated");
+        Ok(())
+    });
+}
