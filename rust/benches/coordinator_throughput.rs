@@ -3,6 +3,10 @@
 //! This is the §Perf harness for the coordinator layer.
 //!
 //!   cargo bench --bench coordinator_throughput -- --requests 16
+//!
+//! `stage full` counts the one O(S·w) gather per admitted request; `stage
+//! incr` counts the per-token O(w) tail writes of the incremental decode
+//! path (see rust/benches/decode_staging.rs for the isolated comparison).
 
 use recalkv::artifacts::Manifest;
 use recalkv::coordinator::{Engine, EngineConfig, GenRequest};
@@ -32,7 +36,10 @@ fn main() -> anyhow::Result<()> {
 
     let mut t = Table::new(
         "Coordinator throughput (end-to-end serving)",
-        &["variant", "quant", "decode ms/step", "decode tok/s", "prefill ms", "ttft ms", "occupancy"],
+        &[
+            "variant", "quant", "decode ms/step", "decode tok/s", "prefill ms",
+            "stage full ms", "stage incr ms", "ttft ms", "occupancy",
+        ],
     );
     for (vname, quant) in [
         ("full", QuantKind::F32),
@@ -48,7 +55,15 @@ fn main() -> anyhow::Result<()> {
             let prompt = recalkv::coordinator::tokenizer::encode(&inst.prompt);
             engine.submit(GenRequest::new(i as u64, prompt, max_new));
         }
-        engine.run_to_completion()?;
+        let results = engine.run_to_completion()?;
+        if let Some(r) = results.iter().find(|r| r.error.is_some()) {
+            anyhow::bail!(
+                "{vname} {quant:?}: request {} failed ({}) — refusing to record a \
+                 partially-failed run",
+                r.id,
+                r.error.as_deref().unwrap_or("")
+            );
+        }
         let m = &engine.metrics;
         t.row(vec![
             vname.into(),
@@ -56,6 +71,8 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}", m.decode_time.as_secs_f64() * 1e3 / m.decode_calls.max(1) as f64),
             format!("{:.1}", m.decode_tokens_per_s()),
             format!("{:.1}", m.prefill_time.as_secs_f64() * 1e3 / m.prefill_calls.max(1) as f64),
+            format!("{:.2}", m.stage_full_time.as_secs_f64() * 1e3),
+            format!("{:.2}", m.stage_incr_time.as_secs_f64() * 1e3),
             format!("{:.1}", m.mean_ttft_ms()),
             format!("{:.2}", m.mean_batch_occupancy()),
         ]);
@@ -67,9 +84,11 @@ fn main() -> anyhow::Result<()> {
 }
 
 /// Cache staging (gather + dequant) without XLA — the pure-rust hot loop.
+/// Contrasts the old per-step full gather with the incremental tail write
+/// (append one row + stage it) at the engine's default shapes.
 fn staging_microbench() {
     let mut rng = Rng::new(3);
-    for (quant, label) in [(QuantKind::F32, "stage f32"), (QuantKind::Int4, "stage int4")] {
+    for (quant, label) in [(QuantKind::F32, "f32"), (QuantKind::Int4, "int4")] {
         let widths = vec![(96usize, 128usize); 4];
         let mut cache = KvCache::new(CacheConfig {
             n_layers: 4,
@@ -88,9 +107,14 @@ fn staging_microbench() {
             cache.append(seq, &rows).unwrap();
         }
         let mut out = vec![0.0f32; 512 * 128];
-        bench(&format!("{label} 400tok x4L"), Duration::from_millis(600), || {
+        bench(&format!("stage {label} full 400tok x4L"), Duration::from_millis(600), || {
             for l in 0..4 {
                 cache.stage(seq, l, 1, &mut out, 512).unwrap();
+            }
+        });
+        bench(&format!("stage {label} incr 1tok x4L"), Duration::from_millis(600), || {
+            for l in 0..4 {
+                cache.stage_rows(seq, l, 1, 399, 400, &mut out[..128]).unwrap();
             }
         });
     }

@@ -1,0 +1,121 @@
+//! Decode-staging microbench: per-step staging cost of the old full
+//! re-gather (O(S·w) per layer per token) vs the incremental path the
+//! engine now uses (one O(w) row per layer per token), at context lengths
+//! S ∈ {512, 2048, 8192}, in both f32 and int4 cache modes.
+//!
+//! The full path re-runs `KvCache::stage` over every cached position the
+//! way the pre-incremental engine did on every decode step; the incremental
+//! path stages exactly the one-row suffix a decode step adds
+//! (`KvCache::stage_rows`, the same per-row work `append_and_stage` does
+//! when it extends a slot's staging tail). Appending itself costs the same
+//! in both designs and is excluded from both measurements.
+//!
+//! Writes a machine-readable summary (per-step times and speedups) to
+//! `BENCH_decode_staging.json` (override with `--out`), so successive PRs
+//! have a staging-perf trajectory to compare against:
+//!
+//!   cargo bench --bench decode_staging -- --out ../BENCH_decode_staging.json
+
+use recalkv::kvcache::{CacheConfig, KvCache};
+use recalkv::quant::QuantKind;
+use recalkv::util::bench::{bench, Table};
+use recalkv::util::cli::Args;
+use recalkv::util::json::Json;
+use recalkv::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+const N_LAYERS: usize = 4;
+const WK: usize = 96; // g·rk
+const WV: usize = 128; // rv
+const TPB: usize = 32;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"), &["quick"]);
+    let out_path = args.opt_or("out", "BENCH_decode_staging.json").to_string();
+    let budget = Duration::from_millis(if args.has("quick") { 150 } else { 500 });
+    let lens: Vec<usize> =
+        if args.has("quick") { vec![512, 2048] } else { vec![512, 2048, 8192] };
+
+    let mut table = Table::new(
+        "Decode staging: full re-gather vs incremental tail (per step, all layers)",
+        &["S", "quant", "full/step", "incr/step", "speedup"],
+    );
+    let mut results = Vec::new();
+    for &s in &lens {
+        for quant in [QuantKind::F32, QuantKind::Int4] {
+            let mut rng = Rng::new(0x5eed ^ s as u64);
+            let mut cache = KvCache::new(CacheConfig {
+                n_layers: N_LAYERS,
+                widths: vec![(WK, WV); N_LAYERS],
+                cache_len: s,
+                tokens_per_block: TPB,
+                capacity_tokens: s + TPB,
+                quant,
+                signs_seed: 7,
+            });
+            let seq = cache.new_seq();
+            let k: Vec<f32> = (0..WK).map(|_| rng.normal()).collect();
+            let v: Vec<f32> = (0..WV).map(|_| rng.normal()).collect();
+            for _ in 0..s {
+                let rows: Vec<(&[f32], &[f32])> =
+                    (0..N_LAYERS).map(|_| (&k[..], &v[..])).collect();
+                cache.append(seq, &rows)?;
+            }
+
+            let mut kbuf = vec![0.0f32; s * WK];
+            let mut vbuf = vec![0.0f32; s * WV];
+            let label = format!("{quant:?}").to_lowercase();
+            let full = bench(&format!("stage full  S={s} {label}"), budget, || {
+                for l in 0..N_LAYERS {
+                    cache.stage(seq, l, 0, &mut kbuf, s).unwrap();
+                    cache.stage(seq, l, 1, &mut vbuf, s).unwrap();
+                }
+            });
+            let incr = bench(&format!("stage incr  S={s} {label}"), budget, || {
+                for l in 0..N_LAYERS {
+                    cache.stage_rows(seq, l, 0, s - 1, s, &mut kbuf[..WK]).unwrap();
+                    cache.stage_rows(seq, l, 1, s - 1, s, &mut vbuf[..WV]).unwrap();
+                }
+            });
+            let speedup = full.median_ns / incr.median_ns.max(1.0);
+            table.row(vec![
+                s.to_string(),
+                label.clone(),
+                format!("{:.1} µs", full.median_ns / 1e3),
+                format!("{:.2} µs", incr.median_ns / 1e3),
+                format!("{speedup:.0}x"),
+            ]);
+            table.print_last();
+            results.push(obj(vec![
+                ("s", Json::Num(s as f64)),
+                ("quant", Json::Str(label)),
+                ("full_ns_per_step", Json::Num(full.median_ns)),
+                ("incr_ns_per_step", Json::Num(incr.median_ns)),
+                ("speedup", Json::Num(speedup)),
+            ]));
+        }
+    }
+    table.print();
+
+    let report = obj(vec![
+        ("bench", Json::Str("decode_staging".into())),
+        (
+            "config",
+            obj(vec![
+                ("n_layers", Json::Num(N_LAYERS as f64)),
+                ("key_width", Json::Num(WK as f64)),
+                ("value_width", Json::Num(WV as f64)),
+                ("tokens_per_block", Json::Num(TPB as f64)),
+            ]),
+        ),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write(&out_path, report.to_string())?;
+    println!("[report saved to {out_path}]");
+    Ok(())
+}

@@ -1,15 +1,33 @@
 //! The serving engine: continuous batching over the AOT decode graph with
 //! the paged latent cache.
 //!
-//! Slots (≤ decode_batch) hold active sequences. Each decode step:
-//!   1. stage: gather every active slot's latent pages into contiguous
-//!      per-layer batch buffers (dequantizing if the cache is quantized),
-//!   2. execute the decode graph (token, length, caches -> logits + new
-//!      latents),
-//!   3. append the returned latents to each slot's pages and sample/force
-//!      the next token.
-//! Prefill runs the prefill graph on up to prefill_batch waiting requests
-//! and seeds their pages from the returned full-sequence latents.
+//! Slots (≤ decode_batch) hold active sequences. Each slot owns a persistent
+//! per-layer staging region inside the engine's batch buffers, maintained
+//! incrementally:
+//!   * prefill admission gathers the whole admitted prompt into the slot's
+//!     region **once** (`KvCache::stage`, O(S·w) per layer) and zero-fills
+//!     the padding tail,
+//!   * every decode step transactionally appends the latents returned by
+//!     the decode graph to the paged cache and writes the same staged row
+//!     into the region's tail (`KvCache::append` + a one-row
+//!     `KvCache::stage_rows`, O(w) per layer; `KvCache::append_and_stage`
+//!     is the fused equivalent) — so per-step staging cost no longer
+//!     scales with context length,
+//!   * a slot's buffer is validated against `KvCache::seq_generation` before
+//!     each decode batch: a mismatch (slot reused by a new sequence, freed
+//!     seq) forces a full re-gather, while a buffer that merely lags the
+//!     cache (`staged_len < seq_len`, e.g. quantized rows written without
+//!     staging) is caught up by re-dequantizing only the missing suffix
+//!     (`KvCache::stage_rows`),
+//!   * retiring a slot marks its region dirty; it is zeroed lazily before
+//!     the next decode batch that runs with the slot empty.
+//! Decode steps then: execute the decode graph (token, length, caches ->
+//! logits + new latents), append-and-stage the returned latents, and
+//! sample/force the next token. Prefill runs the prefill graph on up to
+//! prefill_batch waiting requests; a request that fails admission (bad
+//! prompt, cache exhaustion) is failed individually with a `GenResult`
+//! error — its partial sequence is freed and the rest of the batch
+//! proceeds.
 
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResult, Tracked};
@@ -19,7 +37,7 @@ use crate::kvcache::{CacheConfig, KvCache, SeqId};
 use crate::quant::QuantKind;
 use crate::runtime::engine_graphs::ActivationArg;
 use crate::runtime::{GraphSet, Runtime, VariantRuntime};
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 use std::time::Instant;
 
 #[derive(Clone, Debug)]
@@ -50,6 +68,21 @@ struct Slot {
     pending_token: i32,
 }
 
+/// Staging bookkeeping for one slot index (parallel to `slots`): which
+/// sequence the region was written for, how many rows it holds, and whether
+/// it still carries rows of a retired sequence.
+#[derive(Clone, Copy, Debug, Default)]
+struct StageState {
+    seq: SeqId,
+    /// `KvCache::seq_generation` stamp at staging time; 0 = never staged.
+    generation: u64,
+    /// Rows currently materialized in the slot's staging region.
+    staged_len: usize,
+    /// Region holds stale rows (retired/failed sequence) and must be zeroed
+    /// before the next decode batch that includes this slot while empty.
+    dirty: bool,
+}
+
 pub struct Engine {
     pub vr: VariantRuntime,
     pub cache: KvCache,
@@ -65,9 +98,12 @@ pub struct Engine {
     waiting: std::collections::VecDeque<Tracked>,
     finished: Vec<GenResult>,
     samplers: std::collections::BTreeMap<u64, Sampler>,
-    // reusable staging buffers (hot path; see EXPERIMENTS.md §Perf)
+    // persistent per-slot staging regions (hot path; see EXPERIMENTS.md
+    // §Perf): stage_k[l][slot*S*wk ..] is written once at prefill and
+    // extended one row per decode step
     stage_k: Vec<Vec<f32>>,
     stage_v: Vec<Vec<f32>>,
+    stage_state: Vec<StageState>,
 }
 
 impl Engine {
@@ -108,6 +144,7 @@ impl Engine {
             samplers: Default::default(),
             stage_k,
             stage_v,
+            stage_state: vec![StageState::default(); b],
         })
     }
 
@@ -155,34 +192,35 @@ impl Engine {
 
     // ------------------------------------------------------------------
     fn prefill_waiting(&mut self) -> Result<()> {
-        let free_slots: Vec<usize> = self
-            .slots
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| s.is_none())
-            .map(|(i, _)| i)
-            .collect();
-        let n = free_slots
-            .len()
-            .min(self.waiting.len())
-            .min(self.shapes.prefill_batch);
-        if n == 0 {
+        let free = self.slots.iter().filter(|s| s.is_none()).count();
+        let limit = free.min(self.shapes.prefill_batch);
+        if limit == 0 || self.waiting.is_empty() {
             return Ok(());
         }
-        let mut batch: Vec<Tracked> = (0..n).map(|_| self.waiting.pop_front().unwrap()).collect();
+        let ps = self.shapes.prefill_seq;
+        // Validate while draining: a malformed prompt fails its own request
+        // instead of poisoning the whole batch.
+        let mut batch: Vec<Tracked> = Vec::new();
+        while batch.len() < limit {
+            let Some(t) = self.waiting.pop_front() else { break };
+            if t.req.prompt.is_empty() {
+                self.fail_request(t, "empty prompt");
+            } else if t.req.prompt.len() > ps {
+                let plen = t.req.prompt.len();
+                self.fail_request(t, format!("prompt {plen} longer than prefill_seq {ps}"));
+            } else {
+                batch.push(t);
+            }
+        }
+        if batch.is_empty() {
+            return Ok(());
+        }
 
         let pb = self.shapes.prefill_batch;
-        let ps = self.shapes.prefill_seq;
         let mut tokens = vec![0i32; pb * ps];
         let mut lengths = vec![1i32; pb];
         for (i, t) in batch.iter().enumerate() {
             let p = &t.req.prompt;
-            if p.is_empty() {
-                bail!("empty prompt for request {}", t.req.id);
-            }
-            if p.len() > ps {
-                bail!("prompt {} longer than prefill_seq {}", p.len(), ps);
-            }
             tokens[i * ps..i * ps + p.len()].copy_from_slice(p);
             lengths[i] = p.len() as i32;
         }
@@ -210,10 +248,13 @@ impl Engine {
             .map(|l| outs[1 + nl + l].to_vec::<f32>())
             .collect::<std::result::Result<_, _>>()?;
 
-        let append_t = Instant::now();
-        for (i, mut tracked) in batch.drain(..).enumerate() {
+        for (i, mut tracked) in batch.into_iter().enumerate() {
             let plen = tracked.req.prompt.len();
             let seq = self.cache.new_seq();
+            // appends timed separately from the full gather below so
+            // append_time and stage_full_time stay disjoint windows
+            let append_t = Instant::now();
+            let mut admit_err: Option<anyhow::Error> = None;
             for t in 0..plen {
                 let rows: Vec<(&[f32], &[f32])> = (0..nl)
                     .map(|l| {
@@ -223,21 +264,34 @@ impl Engine {
                         (&zk[l][ko..ko + wk], &zv[l][vo..vo + wv])
                     })
                     .collect();
-                self.cache.append(seq, &rows).context("prefill append")?;
+                if let Err(e) = self.cache.append(seq, &rows) {
+                    admit_err = Some(e.context("prefill append"));
+                    break;
+                }
             }
-            // first generated token from the prefill logits
-            let row = logits[i * v..(i + 1) * v].to_vec();
-            let next = self.next_token(&mut tracked, &row, plen);
-            tracked.first_token = Some(Instant::now());
-            self.metrics.prompt_tokens += plen as u64;
+            self.metrics.append_time += append_t.elapsed();
+            if let Some(e) = admit_err {
+                // Admission failed mid-prompt: free the partial sequence and
+                // fail only this request; the rest of the batch proceeds.
+                self.cache.free_seq(seq);
+                self.fail_request(tracked, format!("admission failed: {e:#}"));
+                continue;
+            }
             let si = self
                 .slots
                 .iter()
                 .position(|s| s.is_none())
                 .expect("free slot disappeared");
+            // One full gather per admitted request; decode extends the
+            // region incrementally from here on.
+            self.stage_full_slot(si, seq)?;
+            // first generated token from the prefill logits
+            let row = logits[i * v..(i + 1) * v].to_vec();
+            let next = self.next_token(&mut tracked, &row, plen);
+            tracked.first_token = Some(Instant::now());
+            self.metrics.prompt_tokens += plen as u64;
             self.slots[si] = Some(Slot { tracked, seq, pending_token: next });
         }
-        self.metrics.append_time += append_t.elapsed();
         self.retire_done();
         Ok(())
     }
@@ -271,7 +325,6 @@ impl Engine {
     // ------------------------------------------------------------------
     fn decode_step(&mut self) -> Result<()> {
         let b = self.shapes.decode_batch;
-        let s = self.shapes.cache_len;
         let nl = self.cfg_model.n_layers;
 
         let mut token = vec![0i32; b];
@@ -286,25 +339,20 @@ impl Engine {
         }
         self.metrics.batch_occupancy_sum += active as f64 / b as f64;
 
-        // stage caches
-        let t0 = Instant::now();
-        for l in 0..nl {
-            let (wk, wv) = self.widths[l];
-            for (i, slot) in self.slots.iter().enumerate() {
-                let (kbuf, vbuf) = (&mut self.stage_k[l], &mut self.stage_v[l]);
-                match slot {
-                    Some(sl) => {
-                        self.cache.stage(sl.seq, l, 0, &mut kbuf[i * s * wk..(i + 1) * s * wk], s)?;
-                        self.cache.stage(sl.seq, l, 1, &mut vbuf[i * s * wv..(i + 1) * s * wv], s)?;
-                    }
-                    None => {
-                        kbuf[i * s * wk..(i + 1) * s * wk].fill(0.0);
-                        vbuf[i * s * wv..(i + 1) * s * wv].fill(0.0);
+        // Staging: steady-state slots are already materialized (prefill
+        // gather + per-token tail writes), so this loop normally only
+        // validates generations and zeroes regions of retired slots.
+        for i in 0..b {
+            let seq = self.slots[i].as_ref().map(|sl| sl.seq);
+            match seq {
+                Some(seq) => self.ensure_staged(i, seq)?,
+                None => {
+                    if self.stage_state[i].dirty {
+                        self.zero_slot_region(i);
                     }
                 }
             }
         }
-        self.metrics.stage_time += t0.elapsed();
 
         let bdims = [b];
         let mut args: Vec<ActivationArg> = vec![
@@ -332,40 +380,199 @@ impl Engine {
             .map(|l| outs[1 + nl + l].to_vec::<f32>())
             .collect::<std::result::Result<_, _>>()?;
 
-        let t2 = Instant::now();
         for i in 0..b {
-            let Some(sl) = self.slots[i].as_mut() else { continue };
-            // append the latents of the token we just fed
-            let rows: Vec<(&[f32], &[f32])> = (0..nl)
-                .map(|l| {
-                    let (wk, wv) = self.widths[l];
-                    (&nzk[l][i * wk..(i + 1) * wk], &nzv[l][i * wv..(i + 1) * wv])
-                })
-                .collect();
-            self.cache.append(sl.seq, &rows)?;
-            self.metrics.generated_tokens += 1;
-            let row = &logits[i * v..(i + 1) * v];
-            let pos = self.cache.seq_len(sl.seq);
-            let mut tracked = std::mem::replace(&mut sl.tracked, Tracked::new(GenRequest::new(0, vec![0], 0)));
-            let next = self.next_token(&mut tracked, row, pos);
-            let sl = self.slots[i].as_mut().unwrap();
-            sl.tracked = tracked;
-            sl.pending_token = next;
+            let Some(sl) = self.slots[i].as_ref() else { continue };
+            let seq = sl.seq;
+            let t = self.cache.seq_len(seq);
+            // transactional append of the latents of the token we just fed
+            let ta = Instant::now();
+            let appended = {
+                let rows: Vec<(&[f32], &[f32])> = (0..nl)
+                    .map(|l| {
+                        let (wk, wv) = self.widths[l];
+                        (&nzk[l][i * wk..(i + 1) * wk], &nzv[l][i * wv..(i + 1) * wv])
+                    })
+                    .collect();
+                self.cache.append(seq, &rows)
+            };
+            self.metrics.append_time += ta.elapsed();
+            match appended {
+                Ok(()) => {
+                    // extend the slot's staging tail by the appended row:
+                    // O(w) per layer, staged from the stored rows so the
+                    // buffer stays bit-identical to a full gather
+                    self.stage_suffix_slot(i, seq, t, t + 1)?;
+                    self.metrics.generated_tokens += 1;
+                    let row = &logits[i * v..(i + 1) * v];
+                    let pos = self.cache.seq_len(seq);
+                    let mut tracked = std::mem::replace(
+                        &mut self.slots[i].as_mut().unwrap().tracked,
+                        Tracked::new(GenRequest::new(0, vec![0], 0)),
+                    );
+                    let next = self.next_token(&mut tracked, row, pos);
+                    let sl = self.slots[i].as_mut().unwrap();
+                    sl.tracked = tracked;
+                    sl.pending_token = next;
+                }
+                Err(e) => self.fail_slot(i, &format!("decode append failed: {e:#}")),
+            }
         }
-        self.metrics.append_time += t2.elapsed();
         self.retire_done();
         Ok(())
     }
 
+    // ------------------------------------------------------------------
+    // staging-region lifecycle
+
+    /// Full O(S·w) gather of `seq` into slot `si`'s region (zero-padded
+    /// tail), stamping the slot's staging state. Used at prefill admission
+    /// and as the recovery path for stale buffers.
+    fn stage_full_slot(&mut self, si: usize, seq: SeqId) -> Result<()> {
+        let s = self.shapes.cache_len;
+        let t0 = Instant::now();
+        let mut staged_rows = 0usize;
+        for l in 0..self.cfg_model.n_layers {
+            let (wk, wv) = self.widths[l];
+            let kbuf = &mut self.stage_k[l];
+            let vbuf = &mut self.stage_v[l];
+            let len =
+                self.cache.stage(seq, l, 0, &mut kbuf[si * s * wk..(si + 1) * s * wk], s)?;
+            self.cache.stage(seq, l, 1, &mut vbuf[si * s * wv..(si + 1) * s * wv], s)?;
+            staged_rows += len;
+        }
+        self.metrics.stage_full_time += t0.elapsed();
+        self.metrics.rows_staged_full += staged_rows as u64;
+        self.stage_state[si] = StageState {
+            seq,
+            generation: self.cache.seq_generation(seq),
+            staged_len: self.cache.seq_len(seq),
+            dirty: false,
+        };
+        Ok(())
+    }
+
+    /// Bring slot `si`'s region up to date before a decode batch. Steady
+    /// state is a no-op. A generation mismatch forces a full re-gather; a
+    /// buffer that merely lags the cache is caught up by staging only the
+    /// missing row suffix (the quantized-mode fallback re-dequantizes just
+    /// the tokens written since the last stage).
+    fn ensure_staged(&mut self, si: usize, seq: SeqId) -> Result<()> {
+        let st = self.stage_state[si];
+        let generation = self.cache.seq_generation(seq);
+        let len = self.cache.seq_len(seq);
+        if st.seq != seq || st.generation != generation || generation == 0 || st.staged_len > len
+        {
+            return self.stage_full_slot(si, seq);
+        }
+        self.stage_suffix_slot(si, seq, st.staged_len, len)
+    }
+
+    /// Incrementally stage rows `[t0, t1)` of `seq` into slot `si`'s region
+    /// tail, updating the incremental-staging accounting and `staged_len`.
+    /// Shared by the per-token decode tail write (`t1 = t0 + 1`) and the
+    /// `ensure_staged` suffix catch-up.
+    fn stage_suffix_slot(&mut self, si: usize, seq: SeqId, t0: usize, t1: usize) -> Result<()> {
+        if t0 >= t1 {
+            return Ok(());
+        }
+        let s = self.shapes.cache_len;
+        let start = Instant::now();
+        {
+            let widths = &self.widths;
+            for (l, (kb, vb)) in
+                self.stage_k.iter_mut().zip(self.stage_v.iter_mut()).enumerate()
+            {
+                let (wk, wv) = widths[l];
+                self.cache.stage_rows(
+                    seq, l, 0, t0, t1,
+                    &mut kb[(si * s + t0) * wk..(si * s + t1) * wk],
+                )?;
+                self.cache.stage_rows(
+                    seq, l, 1, t0, t1,
+                    &mut vb[(si * s + t0) * wv..(si * s + t1) * wv],
+                )?;
+            }
+        }
+        self.metrics.stage_incr_time += start.elapsed();
+        self.metrics.rows_staged_incr += ((t1 - t0) * self.cfg_model.n_layers) as u64;
+        self.stage_state[si].staged_len = t1;
+        Ok(())
+    }
+
+    /// Zero slot `si`'s staging region (it held rows of a retired sequence)
+    /// and reset its staging state.
+    fn zero_slot_region(&mut self, si: usize) {
+        let s = self.shapes.cache_len;
+        for l in 0..self.cfg_model.n_layers {
+            let (wk, wv) = self.widths[l];
+            self.stage_k[l][si * s * wk..(si + 1) * s * wk].fill(0.0);
+            self.stage_v[l][si * s * wv..(si + 1) * s * wv].fill(0.0);
+        }
+        self.stage_state[si] = StageState::default();
+    }
+
+    /// Test/debug hook: every active slot's incrementally-maintained region
+    /// must be bit-identical to a fresh full gather from the paged cache.
+    /// O(B·S·w·L) — not for the hot path.
+    pub fn check_staging_equivalence(&self) -> Result<()> {
+        let s = self.shapes.cache_len;
+        for (i, slot) in self.slots.iter().enumerate() {
+            let Some(sl) = slot else { continue };
+            for l in 0..self.cfg_model.n_layers {
+                let (wk, wv) = self.widths[l];
+                for (plane, w, buf) in
+                    [(0usize, wk, &self.stage_k[l]), (1, wv, &self.stage_v[l])]
+                {
+                    let mut fresh = vec![0.0f32; s * w];
+                    self.cache.stage(sl.seq, l, plane, &mut fresh, s)?;
+                    let got = &buf[i * s * w..(i + 1) * s * w];
+                    for (j, (a, bb)) in got.iter().zip(&fresh).enumerate() {
+                        if a.to_bits() != bb.to_bits() {
+                            bail!(
+                                "slot {i} layer {l} plane {plane} diverges at elem {j}: \
+                                 staged {a} vs fresh {bb}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // failure + retirement
+
+    /// Fail a request that never reached a slot (validation or admission).
+    fn fail_request(&mut self, tracked: Tracked, msg: impl Into<String>) {
+        self.samplers.remove(&tracked.req.id);
+        self.metrics.requests_failed += 1;
+        self.finished.push(tracked.fail(msg));
+    }
+
+    /// Abort the request in slot `i` with an error result, freeing its
+    /// sequence and marking the staging region dirty.
+    fn fail_slot(&mut self, i: usize, msg: &str) {
+        if let Some(s) = self.slots[i].take() {
+            self.cache.free_seq(s.seq);
+            self.samplers.remove(&s.tracked.req.id);
+            self.metrics.requests_failed += 1;
+            self.finished.push(s.tracked.fail(msg));
+        }
+        self.stage_state[i] = StageState { dirty: true, ..StageState::default() };
+    }
+
     fn retire_done(&mut self) {
-        for slot in self.slots.iter_mut() {
-            let done = slot.as_ref().map(|s| s.tracked.done()).unwrap_or(false)
-                || slot
-                    .as_ref()
-                    .map(|s| self.cache.seq_len(s.seq) + 1 >= self.shapes.cache_len)
-                    .unwrap_or(false);
+        for i in 0..self.slots.len() {
+            // A sequence is done when its request says so, or when the cache
+            // is exactly full: the pending token still has a free row at
+            // cache_len - 1, so retirement waits for seq_len == cache_len.
+            let done = self.slots[i]
+                .as_ref()
+                .map(|s| s.tracked.done() || self.cache.seq_len(s.seq) >= self.shapes.cache_len)
+                .unwrap_or(false);
             if done {
-                let s = slot.take().unwrap();
+                let s = self.slots[i].take().unwrap();
                 self.cache.free_seq(s.seq);
                 self.samplers.remove(&s.tracked.req.id);
                 self.metrics.requests_completed += 1;
@@ -375,6 +582,7 @@ impl Engine {
                     .map(|t| (t - s.tracked.arrived).as_secs_f64() * 1e3)
                     .unwrap_or(0.0);
                 self.finished.push(s.tracked.finish());
+                self.stage_state[i] = StageState { dirty: true, ..StageState::default() };
             }
         }
     }

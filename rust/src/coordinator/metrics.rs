@@ -1,18 +1,36 @@
 //! Serving metrics: counters and latency accumulators, printed by the CLI
 //! and consumed by the throughput benches.
+//!
+//! Staging cost is split by path: `stage_full_*` counts the O(S·w) gathers
+//! (prefill admission and stale-buffer recovery), `stage_incr_*` counts the
+//! O(w) per-token tail writes and range catch-ups of the incremental decode
+//! path. A healthy engine shows full-stage work proportional to admissions
+//! and incremental work proportional to generated tokens — if
+//! `rows_staged_full` grows with decode steps, slots are being invalidated
+//! too often.
 
 use std::time::Duration;
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     pub requests_completed: u64,
+    /// Requests that ended with an error result (admission or decode
+    /// failure) instead of a completed generation.
+    pub requests_failed: u64,
     pub prompt_tokens: u64,
     pub generated_tokens: u64,
     pub prefill_calls: u64,
     pub decode_calls: u64,
     pub prefill_time: Duration,
     pub decode_time: Duration,
-    pub stage_time: Duration,
+    /// Full O(S·w) gathers: prefill admission + stale-slot recovery.
+    pub stage_full_time: Duration,
+    /// Incremental staging: per-token tail writes + suffix catch-ups.
+    pub stage_incr_time: Duration,
+    /// Token-rows staged by full gathers (counted per token × layer).
+    pub rows_staged_full: u64,
+    /// Token-rows staged incrementally (counted per token × layer).
+    pub rows_staged_incr: u64,
     pub append_time: Duration,
     pub ttft_ms_sum: f64,
     pub batch_occupancy_sum: f64,
@@ -46,10 +64,12 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} prompt_toks={} gen_toks={} | prefill: {} calls {:.1}ms avg | \
+            "requests={} failed={} prompt_toks={} gen_toks={} | prefill: {} calls {:.1}ms avg | \
              decode: {} calls {:.2}ms avg, {:.1} tok/s, occupancy {:.2} | \
-             stage {:.1}ms total, append {:.1}ms total | ttft {:.1}ms avg",
+             stage full {:.1}ms/{} rows, incr {:.1}ms/{} rows, append {:.1}ms total | \
+             ttft {:.1}ms avg",
             self.requests_completed,
+            self.requests_failed,
             self.prompt_tokens,
             self.generated_tokens,
             self.prefill_calls,
@@ -66,7 +86,10 @@ impl Metrics {
             },
             self.decode_tokens_per_s(),
             self.mean_batch_occupancy(),
-            self.stage_time.as_secs_f64() * 1e3,
+            self.stage_full_time.as_secs_f64() * 1e3,
+            self.rows_staged_full,
+            self.stage_incr_time.as_secs_f64() * 1e3,
+            self.rows_staged_incr,
             self.append_time.as_secs_f64() * 1e3,
             self.mean_ttft_ms(),
         )

@@ -55,6 +55,10 @@ pub struct GenResult {
     pub prompt_len: usize,
     pub ttft_ms: f64,
     pub total_ms: f64,
+    /// Set when the request could not be served (admission or decode
+    /// failure); `tokens`/`text` then hold whatever was generated before the
+    /// failure. `None` for a normally completed generation.
+    pub error: Option<String>,
 }
 
 /// Internal: a request being tracked by the scheduler.
@@ -105,6 +109,16 @@ impl Tracked {
                 .map(|t| (t - self.arrived).as_secs_f64() * 1e3)
                 .unwrap_or(0.0),
             total_ms: (now - self.arrived).as_secs_f64() * 1e3,
+            error: None,
         }
+    }
+
+    /// Terminate this request with an error result, preserving whatever was
+    /// generated before the failure (the engine uses this to fail one
+    /// request without dropping the rest of its batch).
+    pub fn fail(&self, msg: impl Into<String>) -> GenResult {
+        let mut res = self.finish();
+        res.error = Some(msg.into());
+        res
     }
 }

@@ -10,7 +10,7 @@ use crate::coordinator::tokenizer;
 use crate::coordinator::Engine;
 use crate::runtime::engine_graphs::ActivationArg;
 use crate::runtime::VariantRuntime;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Teacher-forced perplexity over one corpus split via the *score* graph
 /// (full-sequence logits, like HF evaluate): tokens are chunked into
@@ -132,8 +132,13 @@ pub fn run_long_tasks(engine: &mut Engine, eval: &EvalConfig)
             next_id += 1;
             engine.submit(req);
         }
-        let finished = engine.run_to_completion()?;
+        let mut finished = engine.run_to_completion()?;
+        // results arrive in completion order; re-align with submission order
+        finished.sort_by_key(|r| r.id);
         for (inst, res) in instances.iter().zip(&finished) {
+            if let Some(e) = &res.error {
+                bail!("engine failed request {}: {e}", res.id);
+            }
             let expected = inst.expected.as_bytes();
             let got = res.text.as_bytes();
             let lcp = expected.iter().zip(got).take_while(|(a, b)| a == b).count();
@@ -163,6 +168,9 @@ pub fn ppl_from_engine(engine: &mut Engine, tokens: &[i32], doc_len: usize,
     let mut nll = 0.0;
     let mut count = 0usize;
     for r in finished {
+        if let Some(e) = &r.error {
+            bail!("engine failed request {}: {e}", r.id);
+        }
         nll -= r.forced_logprob;
         count += r.forced_count;
     }

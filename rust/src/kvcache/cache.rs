@@ -5,6 +5,45 @@
 //! from that plane's BlockPool. Quantized mode stores packed rows + scales
 //! in a parallel byte arena (fp32 pools are then unused for payloads but
 //! retained for staging scratch).
+//!
+//! # Staging lifecycle
+//!
+//! The engine keeps a persistent per-slot staging region per layer/plane and
+//! drives it through three cache entry points:
+//!
+//! * [`KvCache::stage`] — full gather of one sequence's plane into a padded
+//!   contiguous buffer. Used **once** per sequence, at prefill admission
+//!   (and as a recovery path when the engine detects a stale buffer).
+//! * [`KvCache::stage_rows`] — gather of a half-open token range `[t0, t1)`.
+//!   Used to catch a staging buffer up to the cache when only a suffix of
+//!   rows is missing (e.g. quantized mode re-dequantizing the tokens written
+//!   since the last stage).
+//! * [`KvCache::append_and_stage`] — fused decode-path form: transactionally
+//!   append one token's latents for every layer *and* write the staged
+//!   (dequantize-after-quantize) image of each row into caller-provided
+//!   slices, so an up-to-date staging buffer is extended by one row in O(w)
+//!   instead of re-gathered in O(S·w). Returns the appended row's position.
+//!   (The engine composes `append` + a one-row `stage_rows` instead so its
+//!   append/staging metrics stay disjoint; the staged bits are identical.)
+//!
+//! Staged images are defined so that an incrementally-maintained buffer is
+//! bit-identical to a fresh [`KvCache::stage`] gather: in f32 mode the raw
+//! row is copied, in quantized mode the row is quantized into the arena and
+//! the staged copy is the dequantized round-trip of the stored codes.
+//!
+//! Invalidation: every sequence carries a monotonically increasing
+//! [`KvCache::seq_generation`] stamp assigned at [`KvCache::new_seq`]. An
+//! engine slot records the `(SeqId, generation)` pair its buffer was staged
+//! for; any mismatch (freed sequence, id reuse across engines, slot handed
+//! to a new sequence) means the buffer is stale and must be re-gathered.
+//!
+//! # Transactionality
+//!
+//! [`KvCache::append`] either caches the token in **every** layer/plane or
+//! leaves the cache untouched: all pages the token needs are allocated up
+//! front, and if any plane's pool is exhausted the pages already taken for
+//! the token are released before the error returns. Payload writes are
+//! infallible, so `st.len` and `st.blocks` can never disagree.
 
 use super::pool::{BlockId, BlockPool};
 use crate::linalg::hadamard::signs_from_seed;
@@ -39,6 +78,8 @@ impl CacheConfig {
 
 struct SeqState {
     len: usize,
+    /// Monotonic stamp assigned at creation; never reused within a cache.
+    generation: u64,
     /// blocks[layer][plane] -> page list (plane 0 = keys, 1 = values).
     blocks: Vec<[Vec<BlockId>; 2]>,
 }
@@ -56,6 +97,9 @@ pub struct KvCache {
     planes: Vec<Plane>, // 2 * n_layers, [layer*2 + plane]
     seqs: BTreeMap<SeqId, SeqState>,
     next_id: SeqId,
+    next_generation: u64,
+    /// Running total of cached tokens (kept in O(1) by append/free).
+    total: usize,
     pub peak_tokens: usize,
 }
 
@@ -82,21 +126,36 @@ impl KvCache {
                 });
             }
         }
-        KvCache { config, planes, seqs: BTreeMap::new(), next_id: 1, peak_tokens: 0 }
+        KvCache {
+            config,
+            planes,
+            seqs: BTreeMap::new(),
+            next_id: 1,
+            next_generation: 1,
+            total: 0,
+            peak_tokens: 0,
+        }
     }
 
     pub fn new_seq(&mut self) -> SeqId {
         let id = self.next_id;
         self.next_id += 1;
+        let generation = self.next_generation;
+        self.next_generation += 1;
         self.seqs.insert(
             id,
-            SeqState { len: 0, blocks: (0..self.config.n_layers).map(|_| [Vec::new(), Vec::new()]).collect() },
+            SeqState {
+                len: 0,
+                generation,
+                blocks: (0..self.config.n_layers).map(|_| [Vec::new(), Vec::new()]).collect(),
+            },
         );
         id
     }
 
     pub fn free_seq(&mut self, id: SeqId) {
         if let Some(st) = self.seqs.remove(&id) {
+            self.total -= st.len;
             for (l, planes) in st.blocks.iter().enumerate() {
                 for (p, blocks) in planes.iter().enumerate() {
                     let plane = &mut self.planes[l * 2 + p];
@@ -118,13 +177,30 @@ impl KvCache {
         self.seqs.get(&id).map(|s| s.len).unwrap_or(0)
     }
 
+    /// Staleness stamp for a sequence's cached data: a monotonic counter
+    /// assigned at `new_seq`, 0 for unknown/freed sequences. An engine slot
+    /// whose recorded stamp differs from the current one holds a stale
+    /// staging buffer and must re-gather.
+    pub fn seq_generation(&self, id: SeqId) -> u64 {
+        self.seqs.get(&id).map(|s| s.generation).unwrap_or(0)
+    }
+
     pub fn live_seqs(&self) -> usize {
         self.seqs.len()
     }
 
     /// Append one token's latents for every layer at once.
     /// `rows[l] = (key_latent_row, value_latent_row)`.
+    ///
+    /// Transactional: on any allocation failure the cache is left exactly as
+    /// it was before the call (no partial pages, `len` unchanged).
     pub fn append(&mut self, id: SeqId, rows: &[(&[f32], &[f32])]) -> Result<()> {
+        self.append_token(id, rows).map(|_| ())
+    }
+
+    /// Transactional append; returns the position (row index) the token
+    /// landed at, which is also its offset in any up-to-date staging buffer.
+    fn append_token(&mut self, id: SeqId, rows: &[(&[f32], &[f32])]) -> Result<usize> {
         let tpb = self.config.tokens_per_block;
         let quant = self.config.quant;
         let st = match self.seqs.get_mut(&id) {
@@ -134,15 +210,41 @@ impl KvCache {
         if st.len >= self.config.cache_len {
             bail!("sequence {id} exceeds cache_len {}", self.config.cache_len);
         }
-        let slot = st.len % tpb;
+        if rows.len() != self.config.n_layers {
+            bail!("append expects {} layer rows, got {}", self.config.n_layers, rows.len());
+        }
+        let t = st.len;
+        let slot = t % tpb;
+        // Phase 1: allocate every page this token needs (one per plane when a
+        // block boundary is crossed), rolling back on partial failure so a
+        // pool-exhaustion error leaves `st.blocks`/`st.len` consistent.
+        if slot == 0 {
+            let mut allocated: Vec<(usize, usize, BlockId)> =
+                Vec::with_capacity(rows.len() * 2);
+            for l in 0..rows.len() {
+                for p in 0..2 {
+                    match self.planes[l * 2 + p].pool.alloc() {
+                        Ok(b) => allocated.push((l, p, b)),
+                        Err(e) => {
+                            for (l2, p2, b2) in allocated {
+                                self.planes[l2 * 2 + p2].pool.release(b2);
+                            }
+                            return Err(e.context(format!(
+                                "allocating page for seq {id} layer {l} plane {p}"
+                            )));
+                        }
+                    }
+                }
+            }
+            for (l, p, b) in allocated {
+                st.blocks[l][p].push(b);
+            }
+        }
+        // Phase 2: payload writes — infallible.
         for (l, (krow, vrow)) in rows.iter().enumerate() {
             for (p, row) in [(0usize, *krow), (1usize, *vrow)] {
                 let plane = &mut self.planes[l * 2 + p];
                 debug_assert_eq!(row.len(), plane.pool.width);
-                if slot == 0 {
-                    let b = plane.pool.alloc()?;
-                    st.blocks[l][p].push(b);
-                }
                 let block = *st.blocks[l][p].last().unwrap();
                 if quant == QuantKind::F32 {
                     plane.pool.row_mut(block, slot).copy_from_slice(row);
@@ -153,9 +255,36 @@ impl KvCache {
             }
         }
         st.len += 1;
-        let total: usize = self.seqs.values().map(|s| s.len).sum();
-        self.peak_tokens = self.peak_tokens.max(total);
-        Ok(())
+        self.total += 1;
+        self.peak_tokens = self.peak_tokens.max(self.total);
+        Ok(t)
+    }
+
+    /// Decode hot path: transactionally append one token's latents for every
+    /// layer *and* write each row's staged image into `dst[l] = (k_dst,
+    /// v_dst)` (slices of exactly the layer's key/value width). The staged
+    /// image is what a fresh `stage()` would produce for that row — the raw
+    /// f32s, or the dequantized round-trip in quantized mode — so an
+    /// up-to-date staging buffer extended this way stays bit-identical to a
+    /// full gather. Returns the appended row's position (its staging offset
+    /// in tokens).
+    pub fn append_and_stage(
+        &mut self,
+        id: SeqId,
+        rows: &[(&[f32], &[f32])],
+        dst: &mut [(&mut [f32], &mut [f32])],
+    ) -> Result<usize> {
+        if dst.len() != rows.len() {
+            bail!("append_and_stage expects {} dst pairs, got {}", rows.len(), dst.len());
+        }
+        let t = self.append_token(id, rows)?;
+        // stage straight from the stored rows so the staged image is defined
+        // in exactly one place (stage_range) for both paths
+        for (l, (kdst, vdst)) in dst.iter_mut().enumerate() {
+            self.stage_rows(id, l, 0, t, t + 1, kdst)?;
+            self.stage_rows(id, l, 1, t, t + 1, vdst)?;
+        }
+        Ok(t)
     }
 
     /// Gather one sequence's plane into a contiguous staging slice
@@ -167,40 +296,68 @@ impl KvCache {
             Some(s) => s,
             None => bail!("unknown sequence {id}"),
         };
-        let pl = &self.planes[layer * 2 + plane];
-        let w = pl.pool.width;
+        let w = self.planes[layer * 2 + plane].pool.width;
         debug_assert_eq!(out.len(), pad_to * w);
-        let tpb = self.config.tokens_per_block;
         let len = st.len.min(pad_to);
-        if self.config.quant == QuantKind::F32 {
-            // fast path: copy whole-block contiguous runs
-            let mut t = 0;
-            for b in &st.blocks[layer][plane] {
-                if t >= len {
-                    break;
-                }
-                let take = tpb.min(len - t);
-                out[t * w..(t + take) * w].copy_from_slice(pl.pool.rows(*b, 0, take));
-                t += take;
-            }
-        } else {
-            for t in 0..len {
-                let b = st.blocks[layer][plane][t / tpb];
-                let q = pl.qrows[b as usize * tpb + t % tpb]
-                    .as_ref()
-                    .expect("missing quantized row");
-                dequantize(q, &pl.signs, &mut out[t * w..(t + 1) * w]);
-            }
-        }
+        self.stage_range(st, layer, plane, 0, len, &mut out[..len * w]);
         for v in &mut out[len * w..] {
             *v = 0.0;
         }
         Ok(len)
     }
 
+    /// Gather only rows `[t0, t1)` of one sequence's plane into `out`
+    /// (`out.len() == (t1 - t0) * width`), dequantizing as needed. This is
+    /// the incremental catch-up path: an engine whose staging buffer holds
+    /// the first `t0` rows brings it up to date in O((t1-t0)·w) instead of
+    /// re-gathering the whole plane.
+    pub fn stage_rows(&self, id: SeqId, layer: usize, plane: usize, t0: usize, t1: usize,
+                      out: &mut [f32]) -> Result<()> {
+        let st = match self.seqs.get(&id) {
+            Some(s) => s,
+            None => bail!("unknown sequence {id}"),
+        };
+        if t0 > t1 || t1 > st.len {
+            bail!("stage_rows range {t0}..{t1} out of bounds for seq {id} (len {})", st.len);
+        }
+        let w = self.planes[layer * 2 + plane].pool.width;
+        debug_assert_eq!(out.len(), (t1 - t0) * w);
+        self.stage_range(st, layer, plane, t0, t1, out);
+        Ok(())
+    }
+
+    /// Shared gather kernel for `stage`/`stage_rows`: rows `[t0, t1)` into
+    /// `out` (already sized `(t1-t0)*w`). F32 copies whole-block runs;
+    /// quantized dequantizes row by row.
+    fn stage_range(&self, st: &SeqState, layer: usize, plane: usize, t0: usize, t1: usize,
+                   out: &mut [f32]) {
+        let pl = &self.planes[layer * 2 + plane];
+        let w = pl.pool.width;
+        let tpb = self.config.tokens_per_block;
+        if self.config.quant == QuantKind::F32 {
+            let mut t = t0;
+            while t < t1 {
+                let b = st.blocks[layer][plane][t / tpb];
+                let slot0 = t % tpb;
+                let take = (tpb - slot0).min(t1 - t);
+                out[(t - t0) * w..(t - t0 + take) * w]
+                    .copy_from_slice(pl.pool.rows(b, slot0, slot0 + take));
+                t += take;
+            }
+        } else {
+            for t in t0..t1 {
+                let b = st.blocks[layer][plane][t / tpb];
+                let q = pl.qrows[b as usize * tpb + t % tpb]
+                    .as_ref()
+                    .expect("missing quantized row");
+                dequantize(q, &pl.signs, &mut out[(t - t0) * w..(t - t0 + 1) * w]);
+            }
+        }
+    }
+
     /// Tokens currently cached across all sequences.
     pub fn total_tokens(&self) -> usize {
-        self.seqs.values().map(|s| s.len).sum()
+        self.total
     }
 
     /// Stored bytes currently used (paper-accounting, payload only).
@@ -288,5 +445,132 @@ mod tests {
             }
         }
         assert!(failed, "pool should exhaust");
+    }
+
+    #[test]
+    fn seq_generation_is_monotonic_and_zero_after_free() {
+        let mut c = KvCache::new(cfg(QuantKind::F32));
+        let a = c.new_seq();
+        let b = c.new_seq();
+        let ga = c.seq_generation(a);
+        let gb = c.seq_generation(b);
+        assert!(ga > 0 && gb > ga, "generations must be positive and increasing");
+        c.free_seq(a);
+        assert_eq!(c.seq_generation(a), 0, "freed sequence must read as stale");
+        let d = c.new_seq();
+        assert!(c.seq_generation(d) > gb, "stamps never reused");
+    }
+
+    /// Exhaust a *later* plane's pool directly (only reachable through
+    /// internals — the public API drains planes in lockstep) so a mid-token
+    /// allocation fails after earlier planes already got their pages, then
+    /// verify the rollback leaves the cache consistent and later appends
+    /// stay row-aligned.
+    #[test]
+    fn append_rolls_back_partial_allocation() {
+        let mut c = KvCache::new(CacheConfig { capacity_tokens: 16, ..cfg(QuantKind::F32) });
+        let s = c.new_seq();
+        // Drain layer 1's value plane (index 1*2 + 1 = 3) to one free block
+        // short of what the next boundary-crossing append needs.
+        let hostages: Vec<BlockId> =
+            (0..c.planes[3].pool.capacity).map(|_| c.planes[3].pool.alloc().unwrap()).collect();
+        let before_in_use = c.blocks_in_use();
+
+        let k: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..12).map(|i| i as f32 + 100.0).collect();
+        let err = c.append(s, &[(&k, &v), (&k, &v)]).unwrap_err();
+        assert!(err.to_string().contains("layer 1"), "unexpected error: {err:#}");
+
+        // Rollback: no token cached, no pages retained beyond the hostages.
+        assert_eq!(c.seq_len(s), 0);
+        assert_eq!(c.total_tokens(), 0);
+        assert_eq!(c.blocks_in_use(), before_in_use, "partial pages leaked");
+
+        // Release the hostages; the same append must now succeed and every
+        // plane must read back aligned rows.
+        for b in hostages {
+            c.planes[3].pool.release(b);
+        }
+        for t in 0..3 {
+            let kt: Vec<f32> = (0..8).map(|i| (t * 8 + i) as f32).collect();
+            let vt: Vec<f32> = (0..12).map(|i| (t * 12 + i) as f32 - 50.0).collect();
+            c.append(s, &[(&kt, &vt), (&kt, &vt)]).unwrap();
+        }
+        assert_eq!(c.seq_len(s), 3);
+        for (layer, plane, w) in [(0, 0, 8), (1, 0, 8), (0, 1, 12), (1, 1, 12)] {
+            let mut out = vec![0.0; 4 * w];
+            c.stage(s, layer, plane, &mut out, 4).unwrap();
+            for t in 0..3 {
+                let want: Vec<f32> = if plane == 0 {
+                    (0..w).map(|i| (t * 8 + i) as f32).collect()
+                } else {
+                    (0..w).map(|i| (t * 12 + i) as f32 - 50.0).collect()
+                };
+                assert_eq!(&out[t * w..(t + 1) * w], &want[..],
+                           "misaligned row t={t} layer={layer} plane={plane}");
+            }
+        }
+    }
+
+    #[test]
+    fn stage_rows_matches_full_stage_slices() {
+        for quant in [QuantKind::F32, QuantKind::Int4] {
+            let mut c = KvCache::new(cfg(quant));
+            let s = c.new_seq();
+            for t in 0..11 {
+                let k: Vec<f32> = (0..8).map(|i| ((t * 8 + i) as f32).sin()).collect();
+                let v: Vec<f32> = (0..12).map(|i| ((t * 12 + i) as f32).cos()).collect();
+                c.append(s, &[(&k, &v), (&k, &v)]).unwrap();
+            }
+            for (layer, plane, w) in [(0usize, 0usize, 8usize), (1, 1, 12)] {
+                let mut full = vec![0.0; 16 * w];
+                c.stage(s, layer, plane, &mut full, 16).unwrap();
+                for (t0, t1) in [(0usize, 11usize), (3, 9), (5, 5), (10, 11)] {
+                    let mut part = vec![f32::NAN; (t1 - t0) * w];
+                    c.stage_rows(s, layer, plane, t0, t1, &mut part).unwrap();
+                    assert_eq!(&part[..], &full[t0 * w..t1 * w],
+                               "{quant:?} rows {t0}..{t1} differ");
+                }
+            }
+            assert!(c.stage_rows(s, 0, 0, 5, 12, &mut vec![0.0; 7 * 8]).is_err(),
+                    "out-of-range stage_rows must error");
+        }
+    }
+
+    #[test]
+    fn append_and_stage_extends_buffer_bit_identically() {
+        for quant in [QuantKind::F32, QuantKind::Int4] {
+            let mut c = KvCache::new(cfg(quant));
+            let s = c.new_seq();
+            // Incrementally-maintained buffers, one per (layer, plane).
+            let mut inc: Vec<Vec<f32>> =
+                vec![vec![0.0; 16 * 8], vec![0.0; 16 * 12], vec![0.0; 16 * 8], vec![0.0; 16 * 12]];
+            for t in 0..13 {
+                let k: Vec<f32> = (0..8).map(|i| ((t * 3 + i) as f32 * 0.17).sin()).collect();
+                let v: Vec<f32> = (0..12).map(|i| ((t * 5 + i) as f32 * 0.13).cos()).collect();
+                let rows = [(&k[..], &v[..]), (&k[..], &v[..])];
+                let (head, tail) = inc.split_at_mut(2);
+                let (k0, v0) = head.split_at_mut(1);
+                let (k1, v1) = tail.split_at_mut(1);
+                let mut dst = [
+                    (&mut k0[0][t * 8..(t + 1) * 8], &mut v0[0][t * 12..(t + 1) * 12]),
+                    (&mut k1[0][t * 8..(t + 1) * 8], &mut v1[0][t * 12..(t + 1) * 12]),
+                ];
+                let pos = c.append_and_stage(s, &rows, &mut dst).unwrap();
+                assert_eq!(pos, t, "staging offset must equal the row index");
+                // After every step the incremental buffers must be
+                // bit-identical to a fresh full gather (both modes: the
+                // staged image is the dequantized round-trip).
+                for (layer, plane, w, buf) in
+                    [(0usize, 0usize, 8usize, &inc[0]), (0, 1, 12, &inc[1]),
+                     (1, 0, 8, &inc[2]), (1, 1, 12, &inc[3])]
+                {
+                    let mut fresh = vec![0.0; 16 * w];
+                    c.stage(s, layer, plane, &mut fresh, 16).unwrap();
+                    assert!(buf.iter().zip(&fresh).all(|(a, b)| a.to_bits() == b.to_bits()),
+                            "{quant:?} step {t}: layer {layer} plane {plane} diverged");
+                }
+            }
+        }
     }
 }

@@ -6,6 +6,15 @@
 //! int4/int3-quantized (paper §4.4). A block allocator hands out fixed-size
 //! pages per (sequence, layer); the engine gathers pages into contiguous
 //! batch staging buffers for the decode graph.
+//!
+//! Staging is incremental: one full gather per sequence at prefill
+//! admission ([`cache::KvCache::stage`]), then one O(w) staged row per
+//! decode step ([`cache::KvCache::append_and_stage`]), with
+//! [`cache::KvCache::stage_rows`] as the suffix catch-up path and
+//! [`cache::KvCache::seq_generation`] as the staleness stamp buffers are
+//! validated against. Appends are transactional: a mid-token pool
+//! exhaustion rolls back every page taken for that token. See the
+//! `cache` module docs for the full lifecycle and invalidation rules.
 
 pub mod cache;
 pub mod pool;

@@ -93,20 +93,35 @@ fn serve(dir: &str, args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let results = engine.run_to_completion()?;
     let dt = t0.elapsed();
+    let mut failed = 0usize;
     for r in &results {
-        println!(
-            "req {:>3}: ttft {:>7.1}ms total {:>8.1}ms  '{}'",
-            r.id, r.ttft_ms, r.total_ms,
-            r.text.chars().take(32).collect::<String>()
-        );
+        match &r.error {
+            Some(e) => {
+                failed += 1;
+                println!("req {:>3}: FAILED after {:>8.1}ms — {e}", r.id, r.total_ms);
+            }
+            None => println!(
+                "req {:>3}: ttft {:>7.1}ms total {:>8.1}ms  '{}'",
+                r.id, r.ttft_ms, r.total_ms,
+                r.text.chars().take(32).collect::<String>()
+            ),
+        }
     }
     println!("\n{}", engine.metrics.report());
     println!(
         "wall {:.2}s | {:.1} generated tok/s end-to-end | cache bytes/token {}",
         dt.as_secs_f64(),
-        results.iter().map(|r| r.tokens.len()).sum::<usize>() as f64 / dt.as_secs_f64(),
+        results
+            .iter()
+            .filter(|r| r.error.is_none())
+            .map(|r| r.tokens.len())
+            .sum::<usize>() as f64
+            / dt.as_secs_f64(),
         engine.cache.config.bytes_per_token(),
     );
+    if failed > 0 {
+        anyhow::bail!("{failed}/{} requests failed", results.len());
+    }
     Ok(())
 }
 

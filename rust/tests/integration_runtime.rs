@@ -158,6 +158,120 @@ fn quantized_engine_still_generates_sensibly() {
 }
 
 #[test]
+fn engine_incremental_staging_matches_full_gather_every_step() {
+    // The tentpole invariant: after every scheduling step, each active
+    // slot's incrementally-maintained staging region must be bit-identical
+    // to a fresh full gather from the paged cache — in f32 and int4 modes.
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("tiny-mha").unwrap();
+    let variant = model.variant("recal@50").unwrap();
+    for quant in [QuantKind::F32, QuantKind::Int4] {
+        let mut engine =
+            Engine::new(&rt, model, variant, EngineConfig { quant, ..Default::default() })
+                .unwrap();
+        for i in 0..4 {
+            let prompt = recalkv::coordinator::tokenizer::encode("the dog barks . ");
+            engine.submit(GenRequest::new(i, prompt, 6));
+        }
+        let mut steps = 0usize;
+        while !engine.idle() {
+            engine.step().unwrap();
+            engine.check_staging_equivalence().unwrap();
+            steps += 1;
+            assert!(steps < 10_000, "{quant:?}: engine failed to make progress");
+        }
+        let results = engine.take_finished();
+        assert_eq!(results.len(), 4, "{quant:?}: all requests must finish");
+        assert!(results.iter().all(|r| r.error.is_none()), "{quant:?}: unexpected failure");
+        // decode staging must be incremental: full gathers happen only at
+        // admission, not per decode step
+        assert!(
+            engine.metrics.rows_staged_incr > 0,
+            "{quant:?}: no incremental staging recorded"
+        );
+    }
+}
+
+#[test]
+fn prefill_admission_failure_fails_request_and_frees() {
+    // A prompt larger than the whole block pool can never be admitted: its
+    // partial sequence must be freed, the request must come back as an
+    // error result, and other requests in the batch must still be served.
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("tiny-mha").unwrap();
+    let variant = model.variant("recal@50").unwrap();
+    let mut engine = Engine::new(
+        &rt,
+        model,
+        variant,
+        EngineConfig { tokens_per_block: 4, capacity_tokens: 8, ..Default::default() },
+    )
+    .unwrap();
+    // 16 tokens > 8-token pool: admission always fails mid-prompt.
+    let doomed = recalkv::coordinator::tokenizer::encode("the dog barks . ");
+    assert!(doomed.len() > 8);
+    // 4 tokens (+1 decode row) fit comfortably.
+    let viable = recalkv::coordinator::tokenizer::encode("dog ");
+    engine.submit(GenRequest::new(1, doomed, 4));
+    engine.submit(GenRequest::new(2, viable, 2));
+    let mut results = engine.run_to_completion().unwrap();
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results.len(), 2, "every submitted request must get a result");
+    let err = results[0].error.as_deref().expect("oversized request must fail admission");
+    assert!(err.contains("admission"), "unexpected error text: {err}");
+    assert!(results[1].error.is_none(), "viable request poisoned by batchmate: {:?}",
+            results[1].error);
+    assert_eq!(results[1].tokens.len(), 2);
+    assert_eq!(engine.cache.blocks_in_use(), 0, "admission failure leaked blocks");
+    assert_eq!(engine.cache.live_seqs(), 0, "admission failure leaked sequences");
+}
+
+#[test]
+fn invalid_prompt_fails_only_its_own_request() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("tiny-mha").unwrap();
+    let variant = model.variant("recal@50").unwrap();
+    let mut engine = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
+    engine.submit(GenRequest::new(1, vec![], 3)); // empty prompt
+    engine.submit(GenRequest::new(2, recalkv::coordinator::tokenizer::encode("the dog "), 3));
+    let mut results = engine.run_to_completion().unwrap();
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results.len(), 2);
+    assert!(results[0].error.as_deref().unwrap_or("").contains("empty prompt"));
+    assert!(results[1].error.is_none());
+    assert_eq!(results[1].tokens.len(), 3);
+    assert_eq!(engine.cache.live_seqs(), 0);
+}
+
+#[test]
+fn request_can_fill_cache_exactly() {
+    // Off-by-one regression: the pending token still has a free row at
+    // cache_len - 1, so a request must be able to generate until the cache
+    // is exactly full — cache_len - prompt_len + 1 tokens (the final
+    // sampled token is never cached).
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("tiny-mha").unwrap();
+    let variant = model.variant("recal@50").unwrap();
+    let s = model.shapes.cache_len;
+    let prompt = recalkv::coordinator::tokenizer::encode("the dog ");
+    let plen = prompt.len();
+    let mut engine = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
+    engine.submit(GenRequest::new(1, prompt, s)); // more than can ever fit
+    let results = engine.run_to_completion().unwrap();
+    assert!(results[0].error.is_none(), "unexpected failure: {:?}", results[0].error);
+    assert_eq!(
+        results[0].tokens.len(),
+        s - plen + 1,
+        "generation must run to exact cache capacity"
+    );
+    assert_eq!(engine.cache.blocks_in_use(), 0);
+}
+
+#[test]
 fn gqa_model_serves() {
     let Some(man) = manifest() else { return };
     if !man.models.contains_key("tiny-gqa") {

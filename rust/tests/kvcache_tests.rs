@@ -117,6 +117,156 @@ fn quantized_stage_error_bounded() {
     });
 }
 
+/// The engine's incremental staging protocol, replayed at the cache level:
+/// per-(layer, plane) buffers are written by `append_and_stage` tail writes
+/// (with occasional plain `append`s caught up via `stage_rows`, the
+/// quantized-mode fallback) and must stay bit-identical to a fresh full
+/// `stage()` gather after every step — in both F32 and Int4 modes.
+#[test]
+fn incremental_staging_protocol_equivalence() {
+    fn compare(cache: &KvCache, seq: u64, layer: usize, plane: usize, w: usize,
+               buf: &[f32], quant: QuantKind, step: usize) -> Result<(), String> {
+        let mut fresh = vec![0.0f32; 128 * w];
+        cache.stage(seq, layer, plane, &mut fresh, 128).map_err(|e| e.to_string())?;
+        prop_assert!(
+            buf.iter().zip(&fresh).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{quant:?} step {step}: layer {layer} plane {plane} not bit-identical"
+        );
+        Ok(())
+    }
+
+    check("incremental_staging_equiv", 8, |ctx| {
+        for quant in [QuantKind::F32, QuantKind::Int4] {
+            let widths = vec![(8usize, 12usize), (16, 4)];
+            let mut cache = KvCache::new(cfg(quant, widths, 4096));
+            let seq = cache.new_seq();
+            let mut b00 = vec![0.0f32; 128 * 8];
+            let mut b01 = vec![0.0f32; 128 * 12];
+            let mut b10 = vec![0.0f32; 128 * 16];
+            let mut b11 = vec![0.0f32; 128 * 4];
+            let mut staged_len = 0usize;
+            let steps = ctx.usize_in(10, 60);
+            for step in 0..steps {
+                let t = cache.seq_len(seq);
+                if t >= 128 {
+                    break;
+                }
+                let k0 = ctx.f32_vec(8, 1.0);
+                let v0 = ctx.f32_vec(12, 1.0);
+                let k1 = ctx.f32_vec(16, 1.0);
+                let v1 = ctx.f32_vec(4, 1.0);
+                let rows = [(&k0[..], &v0[..]), (&k1[..], &v1[..])];
+                if ctx.rng.below(4) == 0 {
+                    // plain append: buffer lags the cache until caught up
+                    cache.append(seq, &rows).map_err(|e| e.to_string())?;
+                } else {
+                    let mut dst = [
+                        (&mut b00[t * 8..(t + 1) * 8], &mut b01[t * 12..(t + 1) * 12]),
+                        (&mut b10[t * 16..(t + 1) * 16], &mut b11[t * 4..(t + 1) * 4]),
+                    ];
+                    let pos = cache
+                        .append_and_stage(seq, &rows, &mut dst)
+                        .map_err(|e| e.to_string())?;
+                    prop_assert!(pos == t, "staging offset {pos} != row {t}");
+                    // append_and_stage only extends an up-to-date buffer
+                    if staged_len == t {
+                        staged_len = t + 1;
+                    }
+                }
+                // catch-up: stage only the rows written since the last stage
+                let len = cache.seq_len(seq);
+                if staged_len < len {
+                    for (layer, plane, w, buf) in [
+                        (0usize, 0usize, 8usize, &mut b00),
+                        (0, 1, 12, &mut b01),
+                        (1, 0, 16, &mut b10),
+                        (1, 1, 4, &mut b11),
+                    ] {
+                        cache
+                            .stage_rows(seq, layer, plane, staged_len, len,
+                                        &mut buf[staged_len * w..len * w])
+                            .map_err(|e| e.to_string())?;
+                    }
+                    staged_len = len;
+                }
+                compare(&cache, seq, 0, 0, 8, &b00, quant, step)?;
+                compare(&cache, seq, 0, 1, 12, &b01, quant, step)?;
+                compare(&cache, seq, 1, 0, 16, &b10, quant, step)?;
+                compare(&cache, seq, 1, 1, 4, &b11, quant, step)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Pool exhaustion must leave the cache transactionally consistent: the
+/// failing token takes no pages, accounting stays exact, and rows appended
+/// after space frees up are read back aligned.
+#[test]
+fn append_failure_keeps_cache_consistent() {
+    check("append_rollback_consistency", 10, |ctx| {
+        let cap = 32;
+        let mut cache = KvCache::new(cfg(QuantKind::F32, vec![(8, 12), (16, 4)], cap));
+        let hog = cache.new_seq();
+        let victim = cache.new_seq();
+        // hog grabs most of the pool
+        let hog_tokens = ctx.usize_in(cap - 8, cap);
+        for t in 0..hog_tokens {
+            let rows = (ctx.f32_vec(8, 1.0), ctx.f32_vec(12, 1.0),
+                        ctx.f32_vec(16, 1.0), ctx.f32_vec(4, 1.0));
+            if cache.append(hog, &[(&rows.0, &rows.1), (&rows.2, &rows.3)]).is_err() {
+                prop_assert!(t > 0, "pool exhausted before any append");
+                break;
+            }
+        }
+        // drive the victim into exhaustion
+        let mut victim_rows: Vec<Vec<f32>> = Vec::new();
+        let mut failed = false;
+        for _ in 0..cap {
+            let k0 = ctx.f32_vec(8, 1.0);
+            let v0 = ctx.f32_vec(12, 1.0);
+            let k1 = ctx.f32_vec(16, 1.0);
+            let v1 = ctx.f32_vec(4, 1.0);
+            let before_blocks = cache.blocks_in_use();
+            let before_tokens = cache.total_tokens();
+            let before_len = cache.seq_len(victim);
+            match cache.append(victim, &[(&k0, &v0), (&k1, &v1)]) {
+                Ok(()) => victim_rows.push(k0),
+                Err(_) => {
+                    failed = true;
+                    // rollback: nothing changed
+                    prop_assert!(cache.blocks_in_use() == before_blocks,
+                                 "blocks_in_use changed across failed append");
+                    prop_assert!(cache.total_tokens() == before_tokens,
+                                 "total_tokens changed across failed append");
+                    prop_assert!(cache.seq_len(victim) == before_len,
+                                 "seq_len changed across failed append");
+                    break;
+                }
+            }
+        }
+        prop_assert!(failed, "expected the pool to exhaust");
+        // free the hog; the victim must append and stage aligned rows
+        cache.free_seq(hog);
+        let k0 = ctx.f32_vec(8, 1.0);
+        let v0 = ctx.f32_vec(12, 1.0);
+        let k1 = ctx.f32_vec(16, 1.0);
+        let v1 = ctx.f32_vec(4, 1.0);
+        cache.append(victim, &[(&k0, &v0), (&k1, &v1)]).map_err(|e| e.to_string())?;
+        victim_rows.push(k0);
+        let mut out = vec![0.0; 128 * 8];
+        cache.stage(victim, 0, 0, &mut out, 128).map_err(|e| e.to_string())?;
+        for (t, want) in victim_rows.iter().enumerate() {
+            prop_assert!(&out[t * 8..(t + 1) * 8] == &want[..],
+                         "row {t} misaligned after rollback + recovery");
+        }
+        cache.free_seq(victim);
+        prop_assert!(cache.blocks_in_use() == 0, "blocks leaked after rollback cycle");
+        prop_assert!(cache.total_tokens() == 0, "tokens leaked after rollback cycle");
+        Ok(())
+    });
+}
+
 #[test]
 fn bytes_per_token_accounting() {
     // the paper's memory claim: compressed+quantized cache is dramatically

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Bench smoke: a few quick iterations of the coordinator throughput bench
+# plus the decode-staging microbench, leaving BENCH_decode_staging.json at
+# the repo root so successive PRs have a perf trajectory to compare against.
+set -euo pipefail
+
+REPO_ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+cd "$REPO_ROOT/rust"
+
+# End-to-end serving path, few requests (skips gracefully without artifacts/).
+cargo bench --bench coordinator_throughput -- --requests 2 --max-new 4
+
+# Full-vs-incremental staging comparison; the JSON records per-step times
+# and speedups at S in {512, 2048, 8192} (f32 + int4).
+cargo bench --bench decode_staging -- --out "$REPO_ROOT/BENCH_decode_staging.json"
+
+echo "bench_smoke.sh: wrote $REPO_ROOT/BENCH_decode_staging.json"

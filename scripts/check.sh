@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build, test, and format-check the rust crate.
+# Run from anywhere; operates on the repo this script lives in.
+#
+#   scripts/check.sh            # build + test + fmt
+#   scripts/check.sh --bench    # also run the bench smoke (see bench_smoke.sh)
+set -euo pipefail
+
+REPO_ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+cd "$REPO_ROOT/rust"
+
+cargo build --release
+cargo test -q
+cargo fmt --check
+
+if [[ "${1:-}" == "--bench" ]]; then
+    "$REPO_ROOT/scripts/bench_smoke.sh"
+fi
+
+echo "check.sh: OK"
