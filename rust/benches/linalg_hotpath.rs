@@ -1,31 +1,181 @@
 //! Micro-benchmarks for the linalg substrate used by the offline mirror and
-//! the quantized cache: matmul, Jacobi SVD, Cholesky, Hadamard transforms.
+//! the quantized cache — GEMM (seed scalar loop vs packed register-tiled
+//! kernel, single- and multi-threaded), Jacobi SVD, Cholesky, Hadamard and
+//! per-token quant — plus the end-to-end per-layer compression pipeline at
+//! 1/2/N pool threads against the seed-matmul single-thread baseline.
+//!
+//! Writes a machine-readable summary to `BENCH_linalg.json` (override with
+//! `--out`) so successive PRs have an offline-compression perf trajectory
+//! next to `BENCH_decode_staging.json`:
+//!
+//!   cargo bench --bench linalg_hotpath -- --out ../BENCH_linalg.json
 
+use recalkv::compress::{compress_layer, LayerInputs, MethodCfg};
+use recalkv::linalg::gemm::{gemm, set_force_naive};
 use recalkv::linalg::hadamard::{forward, inverse, signs_from_seed};
 use recalkv::linalg::{cholesky, svd, Matrix};
 use recalkv::quant::{dequantize, quantize, QuantKind};
-use recalkv::util::bench::bench;
+use recalkv::util::bench::{bench, Table};
+use recalkv::util::cli::Args;
+use recalkv::util::json::Json;
+use recalkv::util::pool;
 use recalkv::util::rng::Rng;
-use std::time::Duration;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
 
 fn rand_matrix(rng: &mut Rng, m: usize, n: usize) -> Matrix {
     Matrix::from_fn(m, n, |_, _| rng.normal())
 }
 
-fn main() {
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+/// Synthetic layer shaped like the tiny-mha goldens (scaled by `--quick`).
+struct LayerFixture {
+    w_q: Matrix,
+    w_k: Matrix,
+    w_v: Matrix,
+    w_o: Matrix,
+    m: Matrix,
+    x: Matrix,
+    d: usize,
+    n_heads: usize,
+    d_head: usize,
+}
+
+fn layer_fixture(quick: bool) -> LayerFixture {
+    let (d, n_heads, d_head, x_rows) = if quick { (128, 8, 16, 192) } else { (256, 8, 32, 320) };
+    let mut rng = Rng::new(0xbe9c);
+    let w_q = Matrix::from_fn(d, n_heads * d_head, |_, _| rng.normal() * 0.1);
+    let w_k = Matrix::from_fn(d, n_heads * d_head, |_, _| rng.normal() * 0.1);
+    let w_v = Matrix::from_fn(d, n_heads * d_head, |_, _| rng.normal() * 0.1);
+    let w_o = Matrix::from_fn(n_heads * d_head, d, |_, _| rng.normal() * 0.1);
+    let x = Matrix::from_fn(x_rows, d, |_, _| rng.normal());
+    let m = x.gram();
+    LayerFixture { w_q, w_k, w_v, w_o, m, x, d, n_heads, d_head }
+}
+
+/// Full `compress_layer` runs at a pinned thread count; returns the best
+/// wall seconds of `reps` runs (single samples are too noisy to persist —
+/// the min discards scheduler and cold-cache outliers).
+fn run_layer(fx: &LayerFixture, threads: usize, naive: bool, reps: usize) -> f64 {
+    pool::set_threads(threads);
+    set_force_naive(naive);
+    let inp = LayerInputs {
+        w_q: &fx.w_q,
+        w_k: &fx.w_k,
+        w_v: &fx.w_v,
+        w_o: &fx.w_o,
+        m: &fx.m,
+        x_sample: &fx.x,
+        n_heads: fx.n_heads,
+        n_kv_heads: fx.n_heads,
+        d_head: fx.d_head,
+        group_size: 4,
+        key_rank: fx.d_head * 2,
+        value_rank: fx.d / 2,
+    };
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        let out = compress_layer(&inp, MethodCfg::from_name("recal").unwrap()).unwrap();
+        best = best.min(t0.elapsed().as_secs_f64());
+        std::hint::black_box(out.wo_fused.frob_sq());
+    }
+    pool::set_threads(0);
+    set_force_naive(false);
+    best
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"), &["quick"]);
+    let quick = args.has("quick");
+    let out_path = args.opt_or("out", "BENCH_linalg.json").to_string();
+    let budget = Duration::from_millis(if quick { 200 } else { 500 });
     let mut rng = Rng::new(5);
-    let budget = Duration::from_millis(700);
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
 
-    let a = rand_matrix(&mut rng, 256, 256);
-    let b = rand_matrix(&mut rng, 256, 256);
-    let r = bench("matmul 256x256x256", budget, || {
-        std::hint::black_box(a.matmul(&b));
-    });
-    println!(
-        "  -> {:.2} GFLOP/s",
-        2.0 * 256f64.powi(3) / r.median_ns
+    // --- GEMM: seed loop vs tiled kernel, 1 thread and all threads -------
+    let sizes: Vec<usize> = if quick { vec![128, 256] } else { vec![128, 256, 512] };
+    let mut gemm_rows = Vec::new();
+    let nt_header = format!("tiled {avail}t");
+    let mut gemm_table = Table::new(
+        "GEMM GFLOP/s (f32, square)",
+        &["n", "seed naive", "tiled 1t", nt_header.as_str(), "speedup 1t"],
     );
+    for &n in &sizes {
+        let a = rand_matrix(&mut rng, n, n);
+        let b = rand_matrix(&mut rng, n, n);
+        let flops = 2.0 * (n as f64).powi(3);
+        set_force_naive(true);
+        let naive = bench(&format!("matmul naive {n}"), budget, || {
+            std::hint::black_box(a.matmul(&b));
+        });
+        set_force_naive(false);
+        pool::set_threads(1);
+        let tiled1 = bench(&format!("matmul tiled {n} 1t"), budget, || {
+            std::hint::black_box(gemm(&a, &b));
+        });
+        pool::set_threads(0);
+        let tiled_n = bench(&format!("matmul tiled {n} {avail}t"), budget, || {
+            std::hint::black_box(gemm(&a, &b));
+        });
+        let gf = |r: &recalkv::util::bench::BenchResult| flops / r.median_ns;
+        gemm_table.row(vec![
+            n.to_string(),
+            format!("{:.2}", gf(&naive)),
+            format!("{:.2}", gf(&tiled1)),
+            format!("{:.2}", gf(&tiled_n)),
+            format!("{:.1}x", naive.median_ns / tiled1.median_ns),
+        ]);
+        gemm_table.print_last();
+        gemm_rows.push(obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("naive_gflops", Json::Num(gf(&naive))),
+            ("tiled_1t_gflops", Json::Num(gf(&tiled1))),
+            ("tiled_nt_gflops", Json::Num(gf(&tiled_n))),
+            ("tiled_vs_naive_1t", Json::Num(naive.median_ns / tiled1.median_ns)),
+        ]));
+    }
+    gemm_table.print();
 
+    // --- end-to-end per-layer pipeline at 1/2/N threads ------------------
+    let fx = layer_fixture(quick);
+    println!(
+        "\nper-layer pipeline d={} h={} dh={} x_rows={} (recal: CKA + HSR + \
+         whitened grouped SVD + calibration + fusion)",
+        fx.d, fx.n_heads, fx.d_head, fx.x.rows
+    );
+    let reps = if quick { 2 } else { 3 };
+    let baseline = run_layer(&fx, 1, true, reps);
+    println!("  seed baseline (naive matmul, 1 thread): {baseline:.2}s (best of {reps})");
+    let mut counts: Vec<usize> = vec![1, 2, avail];
+    counts.sort_unstable();
+    counts.dedup();
+    let mut pipe_rows = Vec::new();
+    let mut pipe_table = Table::new(
+        "Per-layer compression wall time (tiled GEMM + work pool)",
+        &["threads", "wall", "speedup vs seed"],
+    );
+    for &t in &counts {
+        let dt = run_layer(&fx, t, false, reps);
+        let speedup = baseline / dt.max(1e-12);
+        pipe_table.row(vec![
+            t.to_string(),
+            format!("{dt:.2}s"),
+            format!("{speedup:.1}x"),
+        ]);
+        pipe_table.print_last();
+        pipe_rows.push(obj(vec![
+            ("threads", Json::Num(t as f64)),
+            ("wall_s", Json::Num(dt)),
+            ("speedup_vs_seed", Json::Num(speedup)),
+        ]));
+    }
+    pipe_table.print();
+
+    // --- the seed's remaining hot kernels, unchanged numerics ------------
     let w = rand_matrix(&mut rng, 256, 128);
     bench("jacobi svd 256x128", Duration::from_secs(3), || {
         std::hint::black_box(svd(&w));
@@ -42,10 +192,7 @@ fn main() {
         forward(&mut x, &signs);
         inverse(&mut x, &signs);
     });
-    println!(
-        "  -> {:.1} Mtok/s (128-dim rows)",
-        2.0 * 512.0 / (r.median_ns / 1e3)
-    );
+    println!("  -> {:.1} Mtok/s (128-dim rows)", 2.0 * 512.0 / (r.median_ns / 1e3));
 
     let row: Vec<f32> = (0..128).map(|_| rng.normal()).collect();
     let mut out = vec![0.0f32; 128];
@@ -56,4 +203,24 @@ fn main() {
         });
         println!("  -> {:.1} Mtok/s", 1.0 / (r.median_ns / 1e3));
     }
+
+    let report = obj(vec![
+        ("bench", Json::Str("linalg_hotpath".into())),
+        ("threads_available", Json::Num(avail as f64)),
+        (
+            "pipeline_shape",
+            obj(vec![
+                ("d", Json::Num(fx.d as f64)),
+                ("n_heads", Json::Num(fx.n_heads as f64)),
+                ("d_head", Json::Num(fx.d_head as f64)),
+                ("x_rows", Json::Num(fx.x.rows as f64)),
+            ]),
+        ),
+        ("gemm", Json::Arr(gemm_rows)),
+        ("pipeline_seed_baseline_s", Json::Num(baseline)),
+        ("pipeline", Json::Arr(pipe_rows)),
+    ]);
+    std::fs::write(&out_path, report.to_string())?;
+    println!("[report saved to {out_path}]");
+    Ok(())
 }

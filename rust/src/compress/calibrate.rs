@@ -1,5 +1,13 @@
 //! Offline calibration (paper Eq. 6-8) — alternating closed-form updates,
 //! mirror of python/compile/compress/calibrate.py.
+//!
+//! The alternating iterations are inherently sequential (each L-step
+//! consumes the R-step before it), so calibration parallelizes *inside*
+//! each step instead: the four matmuls per iteration run on the tiled GEMM
+//! and the two normal-equation solves split across right-hand-side columns
+//! (`linalg::solve`). Both are bit-preserving, so the error history — and
+//! the convergence decisions taken from it — match the seed exactly at any
+//! `PALLAS_THREADS`.
 
 use super::svdc::recon_error;
 use crate::linalg::{ridge_solve, Matrix};

@@ -1,15 +1,33 @@
 //! Centered Kernel Alignment head similarity (paper Eq. 2-5) — mirror of
 //! python/compile/compress/cka.py using the linear-kernel HSIC identity
 //! HSIC(X,Y) = ||Y_cᵀ X_c||_F².
+//!
+//! [`head_similarity`] is one of the pipeline's parallel axes: the h
+//! per-head projections and the O(h²) CKA pair loop both fan out over
+//! [`crate::util::pool`]. Each pair's arithmetic is the untouched serial
+//! expression (self-HSIC terms are computed once per head instead of once
+//! per pair, but by the identical formula), so the similarity matrix is
+//! bit-identical to the seed's serial double loop at any thread count.
 
 use crate::linalg::Matrix;
+use crate::util::pool;
 
 fn center_cols(x: &Matrix) -> Matrix {
+    // Column means in one row-major pass (the seed strode down each column
+    // in turn — one cache line touched per element). Per-column accumulation
+    // order is still ascending row index, so the means — and the centered
+    // output — keep the seed's exact bits.
+    let mut sums = vec![0.0f64; x.cols];
+    for i in 0..x.rows {
+        for (s, v) in sums.iter_mut().zip(x.row(i)) {
+            *s += *v as f64;
+        }
+    }
+    let means: Vec<f32> = sums.iter().map(|s| (*s / x.rows as f64) as f32).collect();
     let mut out = x.clone();
-    for j in 0..x.cols {
-        let mean: f64 = (0..x.rows).map(|i| x[(i, j)] as f64).sum::<f64>() / x.rows as f64;
-        for i in 0..x.rows {
-            out[(i, j)] -= mean as f32;
+    for i in 0..x.rows {
+        for (v, m) in out.row_mut(i).iter_mut().zip(&means) {
+            *v -= *m;
         }
     }
     out
@@ -34,18 +52,41 @@ pub fn cka(x: &Matrix, y: &Matrix) -> f64 {
 
 /// Pairwise CKA between key-head representations H_i = X·W_k[:, i-th block].
 /// Returns the symmetric h×h similarity matrix.
+///
+/// Projections, per-head self-HSIC terms and the h·(h-1)/2 cross terms are
+/// all embarrassingly parallel and run on the work pool; see the module
+/// docs for why the result is bit-identical to the serial pair loop.
 pub fn head_similarity(x: &Matrix, w_k: &Matrix, n_heads: usize) -> Matrix {
     let dh = w_k.cols / n_heads;
-    let heads: Vec<Matrix> = (0..n_heads)
-        .map(|i| x.matmul(&w_k.cols_slice(i * dh, (i + 1) * dh)))
+    // Centered projections: hsic_linear centers both inputs, so centering
+    // once up front feeds every pair the same matrices it would build.
+    let heads: Vec<Matrix> = pool::parallel_map(n_heads, |i| {
+        center_cols(&x.matmul(&w_k.cols_slice(i * dh, (i + 1) * dh)))
+    });
+    // One transpose per head, shared by the selfs pass and every pair
+    // (transposition just moves values, so reuse cannot change bits).
+    let heads_t: Vec<Matrix> = pool::parallel_map(n_heads, |i| heads[i].t());
+    // HSIC(H_i, H_i), shared by every pair involving head i (the seed
+    // recomputed it per pair — identical expression, identical bits).
+    let selfs: Vec<f64> =
+        pool::parallel_map(n_heads, |i| heads_t[i].matmul(&heads[i]).frob_sq());
+    let pairs: Vec<(usize, usize)> = (0..n_heads)
+        .flat_map(|i| ((i + 1)..n_heads).map(move |j| (i, j)))
         .collect();
-    let mut s = Matrix::eye(n_heads);
-    for i in 0..n_heads {
-        for j in (i + 1)..n_heads {
-            let v = cka(&heads[i], &heads[j]) as f32;
-            s[(i, j)] = v;
-            s[(j, i)] = v;
+    let vals = pool::parallel_map(pairs.len(), |p| {
+        let (i, j) = pairs[p];
+        let hxy = heads_t[j].matmul(&heads[i]).frob_sq();
+        let denom = (selfs[i] * selfs[j]).sqrt();
+        if denom > 0.0 {
+            (hxy / denom) as f32
+        } else {
+            0.0
         }
+    });
+    let mut s = Matrix::eye(n_heads);
+    for (&(i, j), &v) in pairs.iter().zip(&vals) {
+        s[(i, j)] = v;
+        s[(j, i)] = v;
     }
     s
 }

@@ -7,6 +7,14 @@
 //! (b) powers `repro compress` for weights-only experimentation without
 //! python, and (c) is cross-checked against python goldens in
 //! rust/tests/golden_crosscheck.rs.
+//!
+//! The whole offline pipeline is multithreaded (`PALLAS_THREADS`, default
+//! all cores) with a bit-identity guarantee: layers, CKA pairs, SVD
+//! groups, fusion blocks, solve columns and GEMM tiles parallelize without
+//! touching any slot's arithmetic, so every output matches a
+//! single-threaded run — and the seed's serial kernels — exactly. See
+//! `pipeline` for the threading model and
+//! `rust/tests/parallel_determinism.rs` for the assertions.
 
 pub mod calibrate;
 pub mod cka;
@@ -14,4 +22,4 @@ pub mod pipeline;
 pub mod reorder;
 pub mod svdc;
 
-pub use pipeline::{compress_layer, CompressedLayer, LayerInputs, MethodCfg};
+pub use pipeline::{compress_layer, compress_layers, CompressedLayer, LayerInputs, MethodCfg};

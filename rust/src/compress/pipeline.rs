@@ -1,9 +1,26 @@
 //! Per-layer compression pipeline (Algorithm 1 body) in rust — mirror of
 //! python compress/pipeline.py::build_variant for one layer, used by
 //! `repro compress` and the golden cross-check.
+//!
+//! # Threading model
+//!
+//! Layers are fully independent (LoRC-style per-layer decisions), so
+//! [`compress_layers`] is the outermost parallel axis: one pool worker per
+//! layer, sized by `PALLAS_THREADS` (default: all cores). Inside a layer
+//! the CKA pair loop, the per-group SVDs, the per-q-head W̃_o fusion, the
+//! solve columns and the GEMM row tiles are further parallel axes; the
+//! pool's nesting guard runs whichever axis is reached first in parallel
+//! and everything beneath it serially, so the machine is saturated without
+//! oversubscription whether you compress one layer or eighty.
+//!
+//! Every axis splits work into slots whose serial arithmetic is untouched,
+//! so compressed factors are **bit-identical** to a `PALLAS_THREADS=1` run
+//! and to the pre-tiling seed (asserted by
+//! `rust/tests/parallel_determinism.rs` and the golden cross-check).
 
 use super::{calibrate, cka, reorder, svdc};
 use crate::linalg::Matrix;
+use crate::util::pool;
 use anyhow::Result;
 
 /// Method switches (ablation axes of paper Table 3).
@@ -67,6 +84,15 @@ pub fn q_head_order(kv_perm: &[usize], n_heads: usize, n_kv_heads: usize) -> Vec
     kv_perm
         .iter()
         .flat_map(|p| (0..rep).map(move |j| p * rep + j))
+        .collect()
+}
+
+/// Compress every layer of a model concurrently (one pool worker per
+/// layer; each layer runs the unmodified [`compress_layer`] body, so the
+/// outputs are bit-identical to a serial loop over layers).
+pub fn compress_layers(inputs: &[LayerInputs], cfg: MethodCfg) -> Result<Vec<CompressedLayer>> {
+    pool::parallel_map(inputs.len(), |l| compress_layer(&inputs[l], cfg))
+        .into_iter()
         .collect()
 }
 
@@ -152,10 +178,15 @@ pub fn compress_layer(inp: &LayerInputs, cfg: MethodCfg) -> Result<CompressedLay
     let wq_reordered = Matrix::hcat(&refs);
     let rv_dim = l_v.cols;
     let d = inp.w_o.cols;
-    let mut wo_fused = Matrix::zeros(inp.n_heads * rv_dim, d);
-    for (t, i) in q_order.iter().enumerate() {
+    // Per-q-head fusion products are independent; fan them out and stitch
+    // the blocks back in q_order (identical products, identical placement).
+    let fused_blocks: Vec<Matrix> = pool::parallel_map(q_order.len(), |t| {
+        let i = q_order[t];
         let wo_blk = rows_slice(inp.w_o, i * inp.d_head, (i + 1) * inp.d_head);
-        let fused = p_heads[*i].matmul(&wo_blk);
+        p_heads[i].matmul(&wo_blk)
+    });
+    let mut wo_fused = Matrix::zeros(inp.n_heads * rv_dim, d);
+    for (t, fused) in fused_blocks.iter().enumerate() {
         for r in 0..rv_dim {
             wo_fused
                 .row_mut(t * rv_dim + r)

@@ -1,6 +1,13 @@
 //! Whitened / grouped SVD compression (mirror of compress/svd.py).
+//!
+//! [`grouped_svd`] decomposes each head group independently, so the g
+//! per-group (whitened) SVDs fan out over [`crate::util::pool`] — the
+//! second of the pipeline's parallel axes. Group results are reassembled
+//! in group order and each group's arithmetic is untouched, so the factors
+//! are bit-identical to the serial loop at any thread count.
 
 use crate::linalg::{cholesky, invert_lower, svd, Matrix};
+use crate::util::pool;
 use anyhow::Result;
 
 /// Plain truncated factorization (paper Eq. 1).
@@ -52,9 +59,7 @@ pub fn grouped_svd(w: &Matrix, perm: &[usize], group_size: usize, rank: usize,
     assert_eq!(perm.len(), h);
     assert_eq!(h % group_size, 0);
     let g = h / group_size;
-    let mut ls: Vec<Matrix> = Vec::with_capacity(g);
-    let mut rs: Vec<Matrix> = Vec::with_capacity(g);
-    for j in 0..g {
+    let groups = pool::parallel_map(g, |j| -> Result<(Matrix, Matrix)> {
         let members = &perm[j * group_size..(j + 1) * group_size];
         let cols: Vec<Matrix> = members
             .iter()
@@ -62,10 +67,15 @@ pub fn grouped_svd(w: &Matrix, perm: &[usize], group_size: usize, rank: usize,
             .collect();
         let refs: Vec<&Matrix> = cols.iter().collect();
         let wg = Matrix::hcat(&refs);
-        let (lg, rg) = match m {
-            Some(m) => whitened_svd_lowrank(&wg, rank, m, ridge)?,
-            None => svd_lowrank(&wg, rank),
-        };
+        match m {
+            Some(m) => whitened_svd_lowrank(&wg, rank, m, ridge),
+            None => Ok(svd_lowrank(&wg, rank)),
+        }
+    });
+    let mut ls: Vec<Matrix> = Vec::with_capacity(g);
+    let mut rs: Vec<Matrix> = Vec::with_capacity(g);
+    for group in groups {
+        let (lg, rg) = group?;
         ls.push(lg);
         rs.push(rg);
     }

@@ -328,7 +328,10 @@ impl KvCache {
 
     /// Shared gather kernel for `stage`/`stage_rows`: rows `[t0, t1)` into
     /// `out` (already sized `(t1-t0)*w`). F32 copies whole-block runs;
-    /// quantized dequantizes row by row.
+    /// quantized dequantizes row by row, allocation-free — `dequantize`
+    /// decodes packed codes straight into the staging slice (no per-row
+    /// scratch `Vec`), which matters on the decode hot path where this
+    /// runs once per token per layer per plane.
     fn stage_range(&self, st: &SeqState, layer: usize, plane: usize, t0: usize, t1: usize,
                    out: &mut [f32]) {
         let pl = &self.planes[layer * 2 + plane];

@@ -1,0 +1,176 @@
+//! Packed, register-tiled f32 GEMM — the backend behind [`Matrix::matmul`]
+//! and [`Matrix::gram`].
+//!
+//! # Bit-identity contract
+//!
+//! The seed's scalar matmul defines the numerics the goldens in
+//! `rust/tests/golden_crosscheck.rs` were recorded against, so this kernel
+//! is built to produce the **same bits**, not merely close values:
+//!
+//! * each output element accumulates its `k` terms in ascending-`k` order,
+//!   starting from `0.0`, one `mul` + one `add` per term (Rust never
+//!   contracts to FMA without explicit intrinsics, so the operation
+//!   sequence fixes the rounding);
+//! * terms whose A-element is exactly `0.0` are skipped, exactly like the
+//!   seed loop's `if a == 0.0 { continue }` (this matters for signed zeros
+//!   and non-finite B entries, not just speed);
+//! * a whole MR×NR accumulator tile lives in registers across the **full**
+//!   `k` range — there is no k-blocking with partial write-backs, because
+//!   summing per-block partials would re-associate the reduction.
+//!
+//! `rust/tests/parallel_determinism.rs` asserts `gemm_tiled == matmul_naive`
+//! bit-for-bit over random shapes (including `k = 0` and `1×1`).
+//!
+//! # Layout
+//!
+//! B is packed once into `⌈n/NR⌉` column panels laid out `[k][NR]` so the
+//! micro-kernel streams both operands unit-stride; each MR-row tile of A is
+//! packed `[k][MR]` on demand. Tail tiles are zero-padded — padded A rows
+//! are skipped by the zero-test and padded B columns are never stored.
+//!
+//! # Threading
+//!
+//! Row tiles are independent, so for large products the tile loop fans out
+//! over [`crate::util::pool`] (`PALLAS_THREADS` sizing, serial inside an
+//! outer pool worker). Each element is still produced by exactly one worker
+//! running the identical scalar sequence, so threading never changes bits.
+
+use super::matrix::Matrix;
+use crate::util::pool;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Rows per register tile.
+const MR: usize = 8;
+/// Columns per register tile (one cache line of f32).
+const NR: usize = 8;
+
+/// Below this `m·k·n`, packing costs more than it saves — use the seed loop.
+const SMALL_MKN: usize = 32 * 32 * 32;
+/// Below this `m·k·n`, a single thread is faster than spawning a pool.
+const PAR_MIN_MKN: usize = 128 * 128 * 128;
+
+/// Benchmark hook: route every product through the seed scalar loop so the
+/// pre-tiling baseline stays measurable (`benches/linalg_hotpath.rs`).
+static FORCE_NAIVE: AtomicBool = AtomicBool::new(false);
+
+pub fn set_force_naive(on: bool) {
+    FORCE_NAIVE.store(on, Ordering::SeqCst);
+}
+
+/// C = A · B. Dispatches between the seed scalar loop (tiny shapes) and the
+/// packed tiled kernel; both produce identical bits for every shape.
+pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    if FORCE_NAIVE.load(Ordering::Relaxed) || m < MR / 2 || n < NR || m * k * n < SMALL_MKN {
+        return a.matmul_naive(b);
+    }
+    gemm_tiled(a, b)
+}
+
+/// The packed register-tiled path, exposed so the equivalence proptest can
+/// exercise it on shapes the [`gemm`] dispatcher would send to the seed
+/// loop. Prefer [`gemm`].
+pub fn gemm_tiled(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Matrix::zeros(m, n);
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let np = n.div_ceil(NR);
+    // Pack B once: panel jp holds columns [jp·NR, jp·NR+NR) in [k][NR]
+    // layout, tail columns zero-padded.
+    let mut bp = vec![0.0f32; np * k * NR];
+    for jp in 0..np {
+        let j0 = jp * NR;
+        let jw = NR.min(n - j0);
+        let panel = &mut bp[jp * k * NR..(jp + 1) * k * NR];
+        for kk in 0..k {
+            panel[kk * NR..kk * NR + jw].copy_from_slice(&b.row(kk)[j0..j0 + jw]);
+        }
+    }
+    let threads = if m * k * n >= PAR_MIN_MKN { pool::num_threads() } else { 1 };
+    pool::parallel_chunks(threads, &mut out.data, MR * n, |ti, chunk| {
+        let i0 = ti * MR;
+        let iw = chunk.len() / n;
+        // Pack the A tile [k][MR]; tail rows stay 0.0 so the kernel's
+        // zero-skip ignores them.
+        let mut ap = vec![0.0f32; k * MR];
+        for r in 0..iw {
+            let arow = a.row(i0 + r);
+            for kk in 0..k {
+                ap[kk * MR + r] = arow[kk];
+            }
+        }
+        for jp in 0..np {
+            let panel = &bp[jp * k * NR..(jp + 1) * k * NR];
+            let j0 = jp * NR;
+            let jw = NR.min(n - j0);
+            let mut acc = [[0.0f32; NR]; MR];
+            for kk in 0..k {
+                let av = &ap[kk * MR..kk * MR + MR];
+                let bv = &panel[kk * NR..kk * NR + NR];
+                for r in 0..MR {
+                    let x = av[r];
+                    if x == 0.0 {
+                        continue;
+                    }
+                    let accr = &mut acc[r];
+                    for c in 0..NR {
+                        accr[c] += x * bv[c];
+                    }
+                }
+            }
+            for r in 0..iw {
+                chunk[r * n + j0..r * n + j0 + jw].copy_from_slice(&acc[r][..jw]);
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn bits_equal(a: &Matrix, b: &Matrix) -> bool {
+        a.rows == b.rows
+            && a.cols == b.cols
+            && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn tiled_matches_naive_across_tile_boundaries() {
+        let mut rng = Rng::new(19);
+        for (m, k, n) in [(8, 8, 8), (9, 7, 17), (16, 33, 24), (3, 40, 11), (40, 1, 40)] {
+            let mut a = Matrix::from_fn(m, k, |_, _| rng.normal());
+            // plant exact zeros to exercise the skip path
+            for i in 0..m {
+                for j in 0..k {
+                    if rng.below(4) == 0 {
+                        a[(i, j)] = 0.0;
+                    }
+                }
+            }
+            let b = Matrix::from_fn(k, n, |_, _| rng.normal());
+            let naive = a.matmul_naive(&b);
+            let tiled = gemm_tiled(&a, &b);
+            assert!(bits_equal(&naive, &tiled), "{m}x{k}x{n} diverged");
+            assert!(bits_equal(&naive, &gemm(&a, &b)), "{m}x{k}x{n} dispatch diverged");
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let a = Matrix::zeros(3, 0);
+        let b = Matrix::zeros(0, 5);
+        let c = gemm_tiled(&a, &b);
+        assert_eq!((c.rows, c.cols), (3, 5));
+        assert!(c.data.iter().all(|v| *v == 0.0));
+        let one = Matrix::from_vec(1, 1, vec![2.5]);
+        let two = Matrix::from_vec(1, 1, vec![-4.0]);
+        assert_eq!(gemm_tiled(&one, &two).data, vec![-10.0]);
+    }
+}

@@ -1,6 +1,9 @@
 //! Dense row-major f32 matrix with the operations the compression mirror
-//! needs. Written from scratch (no BLAS offline); the matmul is blocked and
-//! unrolled enough to stay off the profile for our sizes (d ≤ 640).
+//! needs. Written from scratch (no BLAS offline). Products dispatch to the
+//! packed register-tiled kernel in [`crate::linalg::gemm`], which is
+//! bit-identical to the seed scalar loop kept here as
+//! [`Matrix::matmul_naive`] (the reference the goldens were recorded
+//! against and the equivalence proptests compare to).
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
@@ -57,8 +60,17 @@ impl Matrix {
         out
     }
 
-    /// C = A · B, blocked over k for cache friendliness.
+    /// C = A · B via the packed register-tiled GEMM (bit-identical to
+    /// [`Matrix::matmul_naive`] for every shape — k-sequential accumulation
+    /// and the zero-skip are preserved, see `linalg::gemm`).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
+        super::gemm::gemm(self, other)
+    }
+
+    /// The seed's blocked scalar matmul, kept verbatim as the bit-exact
+    /// numerical reference for the tiled kernel (tests and the
+    /// pre-tiling baseline in `benches/linalg_hotpath.rs`).
+    pub fn matmul_naive(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
@@ -83,24 +95,13 @@ impl Matrix {
         out
     }
 
-    /// C = Aᵀ · A (used for second moments / gram matrices).
+    /// C = Aᵀ · A (second moments / gram matrices). Routed through the
+    /// tiled GEMM on the explicit transpose: the seed loop accumulated
+    /// `out[a][b] += A[i][a]·A[i][b]` over ascending rows `i`, skipping
+    /// `A[i][a] == 0` — exactly the GEMM's ascending-k, left-operand
+    /// zero-skip semantics on `Aᵀ·A`, so bits are unchanged.
     pub fn gram(&self) -> Matrix {
-        let n = self.cols;
-        let mut out = Matrix::zeros(n, n);
-        for i in 0..self.rows {
-            let r = self.row(i);
-            for a in 0..n {
-                let ra = r[a];
-                if ra == 0.0 {
-                    continue;
-                }
-                let orow = out.row_mut(a);
-                for b in 0..n {
-                    orow[b] += ra * r[b];
-                }
-            }
-        }
-        out
+        super::gemm::gemm(&self.t(), self)
     }
 
     pub fn scale(&self, s: f32) -> Matrix {
@@ -200,6 +201,17 @@ mod tests {
         let b = Matrix::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
         let c = a.matmul(&b);
         assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_reference_bitwise() {
+        // Shape chosen above the gemm dispatcher's small-product fallback
+        // (m·k·n ≥ SMALL_MKN, n ≥ NR) so the tiled kernel really runs.
+        let a = Matrix::from_fn(40, 36, |i, j| ((i * 36 + j) as f32).sin());
+        let b = Matrix::from_fn(36, 33, |i, j| ((i * 33 + j) as f32).cos());
+        let c1 = a.matmul(&b);
+        let c2 = a.matmul_naive(&b);
+        assert!(c1.data.iter().zip(&c2.data).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]

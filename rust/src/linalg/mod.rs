@@ -1,7 +1,21 @@
 //! Dense linear algebra substrate, from scratch (no BLAS/LAPACK offline):
-//! row-major f32 matrices, one-sided Jacobi SVD, Cholesky solves and the
-//! blockwise randomized Hadamard transform used by cache quantization.
+//! row-major f32 matrices over a packed register-tiled GEMM, one-sided
+//! Jacobi SVD, Cholesky solves and the blockwise randomized Hadamard
+//! transform used by cache quantization.
+//!
+//! # Threading and bit-identity
+//!
+//! Heavy products ([`Matrix::matmul`]/[`Matrix::gram`] → [`gemm`]) and the
+//! triangular solves ([`solve_lower`]/[`solve_lower_t`], hence
+//! [`ridge_solve`]) fan out over the scoped-thread pool in
+//! [`crate::util::pool`] (sized by `PALLAS_THREADS`, default all cores).
+//! Every parallel split is over slots whose serial computation is left
+//! untouched — GEMM row tiles, independent right-hand-side columns — so
+//! results are bit-identical at any thread count, and bit-identical to the
+//! pre-tiling seed kernels (`rust/tests/parallel_determinism.rs` and the
+//! goldens assert both).
 
+pub mod gemm;
 pub mod hadamard;
 pub mod matrix;
 pub mod solve;

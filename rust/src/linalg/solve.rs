@@ -1,8 +1,19 @@
 //! Cholesky factorization and linear solves (from scratch; used for
 //! whitening and the offline-calibration normal equations).
+//!
+//! The triangular solves treat each right-hand-side column independently,
+//! so wide systems (the calibration normal equations solve for every
+//! output column of R/L at once) split into contiguous column blocks
+//! across the work pool. Per-column substitution is byte-for-byte the
+//! seed loop, so the assembled result is bit-identical at any thread
+//! count.
 
 use super::matrix::Matrix;
+use crate::util::pool;
 use anyhow::{bail, Result};
+
+/// Don't bother slicing/reassembling below this many RHS columns.
+const PAR_MIN_COLS: usize = 16;
 
 /// Lower-triangular Cholesky factor: M = L·Lᵀ. M must be symmetric positive
 /// definite (callers add a trace-scaled ridge first, like the python side).
@@ -30,12 +41,10 @@ pub fn cholesky(m: &Matrix) -> Result<Matrix> {
     Ok(l)
 }
 
-/// Solve L·x = b with L lower-triangular (forward substitution), column-wise
-/// over B: returns X with L·X = B.
-pub fn solve_lower(l: &Matrix, b: &Matrix) -> Matrix {
+/// In-place forward substitution over every column of `x` (seed loop).
+fn forward_substitute(l: &Matrix, x: &mut Matrix) {
     let n = l.rows;
-    let mut x = b.clone();
-    for col in 0..b.cols {
+    for col in 0..x.cols {
         for i in 0..n {
             let mut s = x[(i, col)] as f64;
             for k in 0..i {
@@ -44,14 +53,12 @@ pub fn solve_lower(l: &Matrix, b: &Matrix) -> Matrix {
             x[(i, col)] = (s / l[(i, i)] as f64) as f32;
         }
     }
-    x
 }
 
-/// Solve Lᵀ·x = b with L lower-triangular (back substitution).
-pub fn solve_lower_t(l: &Matrix, b: &Matrix) -> Matrix {
+/// In-place back substitution over every column of `x` (seed loop).
+fn back_substitute(l: &Matrix, x: &mut Matrix) {
     let n = l.rows;
-    let mut x = b.clone();
-    for col in 0..b.cols {
+    for col in 0..x.cols {
         for i in (0..n).rev() {
             let mut s = x[(i, col)] as f64;
             for k in (i + 1)..n {
@@ -60,7 +67,37 @@ pub fn solve_lower_t(l: &Matrix, b: &Matrix) -> Matrix {
             x[(i, col)] = (s / l[(i, i)] as f64) as f32;
         }
     }
-    x
+}
+
+/// Shared driver: substitute columns of `b` in parallel blocks (each
+/// column's arithmetic is the untouched serial loop ⇒ bit-identical).
+fn solve_blocked(l: &Matrix, b: &Matrix, substitute: fn(&Matrix, &mut Matrix)) -> Matrix {
+    let threads = pool::num_threads().min(b.cols.div_ceil(PAR_MIN_COLS));
+    if threads <= 1 {
+        let mut x = b.clone();
+        substitute(l, &mut x);
+        return x;
+    }
+    let ranges = pool::chunk_ranges(b.cols, threads);
+    let parts = pool::parallel_map(ranges.len(), |bi| {
+        let (c0, c1) = ranges[bi];
+        let mut x = b.cols_slice(c0, c1);
+        substitute(l, &mut x);
+        x
+    });
+    let refs: Vec<&Matrix> = parts.iter().collect();
+    Matrix::hcat(&refs)
+}
+
+/// Solve L·x = b with L lower-triangular (forward substitution), column-wise
+/// over B: returns X with L·X = B.
+pub fn solve_lower(l: &Matrix, b: &Matrix) -> Matrix {
+    solve_blocked(l, b, forward_substitute)
+}
+
+/// Solve Lᵀ·x = b with L lower-triangular (back substitution).
+pub fn solve_lower_t(l: &Matrix, b: &Matrix) -> Matrix {
+    solve_blocked(l, b, back_substitute)
 }
 
 /// Solve (A + εI)·X = B for symmetric positive semidefinite A, with the same
@@ -106,6 +143,28 @@ mod tests {
         let l = cholesky(&m).unwrap();
         let rec = l.matmul(&l.t());
         assert!(rec.max_abs_diff(&m) < 1e-4);
+    }
+
+    #[test]
+    fn blocked_solves_bitwise_match_serial_substitution() {
+        let mut rng = Rng::new(15);
+        let a = Matrix::from_fn(40, 12, |_, _| rng.normal());
+        let m = a.gram().add(&Matrix::eye(12).scale(0.3));
+        let l = cholesky(&m).unwrap();
+        let b = Matrix::from_fn(12, 64, |_, _| rng.normal());
+        type Solver = fn(&Matrix, &Matrix) -> Matrix;
+        type Subst = fn(&Matrix, &mut Matrix);
+        let cases: [(Solver, Subst); 2] =
+            [(solve_lower, forward_substitute), (solve_lower_t, back_substitute)];
+        for (solver, reference) in cases {
+            let mut serial = b.clone();
+            reference(&l, &mut serial);
+            let blocked = solver(&l, &b);
+            assert!(
+                blocked.data.iter().zip(&serial.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "column-blocked solve diverged from the serial loop"
+            );
+        }
     }
 
     #[test]

@@ -178,14 +178,24 @@ fn tables(dir: &str, args: &Args) -> Result<()> {
 }
 
 /// Pure-rust compression over exported weights — proves the Algorithm-1
-/// mirror end-to-end without python.
+/// mirror end-to-end without python. Layers run concurrently on the work
+/// pool (`--threads N` or `PALLAS_THREADS=N` to pin; outputs are
+/// bit-identical at any thread count).
 fn compress(dir: &str, args: &Args) -> Result<()> {
-    use recalkv::compress::{compress_layer, LayerInputs, MethodCfg};
+    use recalkv::compress::{compress_layers, LayerInputs, MethodCfg};
     use recalkv::linalg::Matrix;
+    use recalkv::util::pool;
     let man = Manifest::load(dir)?;
     let mname = args.opt_or("model", "tiny-mha");
     let method = args.opt_or("method", "recal");
     let ratio = args.f64_or("ratio", 0.5);
+    if let Some(t) = args.opt("threads") {
+        let t: usize = t.parse().context("bad --threads")?;
+        if t == 0 {
+            bail!("--threads must be >= 1");
+        }
+        pool::set_threads(t);
+    }
     let model = man.model(mname)?;
     let cfg = &model.config;
     let weights = TensorArchive::load(man.root.join(mname).join("weights.rtz"))?;
@@ -199,34 +209,53 @@ fn compress(dir: &str, args: &Args) -> Result<()> {
     let key_rank = (((cfg.kv_dim() as f64 * keep) / g as f64) as usize / 4 * 4).max(4);
     let value_rank = ((cfg.kv_dim() as f64 * keep) as usize / 4 * 4).max(4);
     println!("rust-mirror compressing {mname} method={method} ratio={ratio} \
-              key_rank/group={key_rank} value_rank={value_rank}");
+              key_rank/group={key_rank} value_rank={value_rank} \
+              threads={}", pool::num_threads());
     let to_m = |name: &str| -> Result<Matrix> {
         let t = weights.get(name)?;
         Ok(Matrix::from_vec(t.dims[0], t.dims[1], t.f32s.clone()))
     };
-    let mut out = TensorArchive::default();
+    // Load every layer's inputs up front so the per-layer pipeline runs can
+    // fan out over the pool.
+    struct Raw {
+        w_q: Matrix,
+        w_k: Matrix,
+        w_v: Matrix,
+        w_o: Matrix,
+        m: Matrix,
+        x: Matrix,
+    }
+    let mut raw: Vec<Raw> = Vec::with_capacity(cfg.n_layers);
     for l in 0..cfg.n_layers {
-        let w_q = to_m(&format!("L{l}.wq"))?;
-        let w_k = to_m(&format!("L{l}.wk"))?;
-        let w_v = to_m(&format!("L{l}.wv"))?;
-        let w_o = to_m(&format!("L{l}.wo"))?;
         let mt = stats.get(&format!("m{l}"))?;
-        let m = Matrix::from_vec(mt.dims[0], mt.dims[1], mt.f32s.clone());
         let xt = stats.get(&format!("x_sample{l}"))?;
-        let x = Matrix::from_vec(xt.dims[0], xt.dims[1], xt.f32s.clone());
-        let inp = LayerInputs {
-            w_q: &w_q, w_k: &w_k, w_v: &w_v, w_o: &w_o, m: &m, x_sample: &x,
+        raw.push(Raw {
+            w_q: to_m(&format!("L{l}.wq"))?,
+            w_k: to_m(&format!("L{l}.wk"))?,
+            w_v: to_m(&format!("L{l}.wv"))?,
+            w_o: to_m(&format!("L{l}.wo"))?,
+            m: Matrix::from_vec(mt.dims[0], mt.dims[1], mt.f32s.clone()),
+            x: Matrix::from_vec(xt.dims[0], xt.dims[1], xt.f32s.clone()),
+        });
+    }
+    let inputs: Vec<LayerInputs> = raw
+        .iter()
+        .map(|r| LayerInputs {
+            w_q: &r.w_q, w_k: &r.w_k, w_v: &r.w_v, w_o: &r.w_o, m: &r.m, x_sample: &r.x,
             n_heads: cfg.n_heads, n_kv_heads: cfg.n_kv_heads, d_head: cfg.d_head,
             group_size, key_rank, value_rank,
-        };
-        let t0 = std::time::Instant::now();
-        let cl = compress_layer(&inp, mcfg)?;
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let layers = compress_layers(&inputs, mcfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut out = TensorArchive::default();
+    for (l, cl) in layers.iter().enumerate() {
         println!(
             "  L{l}: perm={:?} key_err={:.4e} value_err {:.4e} -> {:.4e} \
-             within-sim {:.3} -> {:.3} ({:.1}s)",
+             within-sim {:.3} -> {:.3}",
             cl.kv_perm, cl.key_error, cl.value_error_pre, cl.value_error_post,
             cl.within_sim_before, cl.within_sim_after,
-            t0.elapsed().as_secs_f64()
         );
         out.tensors.insert(
             format!("L{l}.Lk"),
@@ -244,6 +273,12 @@ fn compress(dir: &str, args: &Args) -> Result<()> {
                 vec![cl.wo_fused.rows, cl.wo_fused.cols], cl.wo_fused.data.clone()),
         );
     }
+    println!(
+        "compressed {} layers in {wall:.1}s ({:.2}s/layer) on {} threads",
+        layers.len(),
+        wall / layers.len().max(1) as f64,
+        pool::num_threads()
+    );
     let path = man.root.join(mname).join(format!("rust_{method}_{}.rtz", (ratio * 100.0) as u32));
     out.save(&path)?;
     println!("wrote {}", path.display());

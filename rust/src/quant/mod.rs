@@ -8,4 +8,6 @@
 
 pub mod pertoken;
 
-pub use pertoken::{dequantize, quantize, QuantKind, QuantizedRow};
+pub use pertoken::{
+    dequantize, quantize, unpack_int3_into, unpack_int4_into, QuantKind, QuantizedRow,
+};

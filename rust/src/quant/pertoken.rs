@@ -65,14 +65,29 @@ fn pack_int4(codes: &[i32]) -> Vec<u8> {
     out
 }
 
-fn unpack_int4(packed: &[u8], n: usize) -> Vec<i32> {
-    (0..n)
-        .map(|i| {
-            let nib = if i % 2 == 0 { packed[i / 2] & 0x0f } else { packed[i / 2] >> 4 };
-            // sign-extend 4-bit
-            ((nib as i8) << 4 >> 4) as i32
-        })
-        .collect()
+/// Sign-extended int4 code at position `i` of a nibble-packed buffer —
+/// the one place the int4 layout is decoded (unpack and fused dequant
+/// both go through it).
+#[inline]
+fn int4_code(packed: &[u8], i: usize) -> i32 {
+    let nib = if i % 2 == 0 { packed[i / 2] & 0x0f } else { packed[i / 2] >> 4 };
+    // sign-extend 4-bit
+    ((nib as i8) << 4 >> 4) as i32
+}
+
+/// Int3 code at slot `k` (0..5) of one packed little-endian u16 word — the
+/// one place the 3-bits-in-16 layout is decoded.
+#[inline]
+fn int3_code(word: u16, k: usize) -> i32 {
+    (((word >> (3 * k)) & 0x7) as i32) - 4
+}
+
+/// Unpack int4 codes into a caller-provided slice — the allocation-free
+/// path the decode-hot staging gather relies on (`out.len()` codes).
+pub fn unpack_int4_into(packed: &[u8], out: &mut [i32]) {
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = int4_code(packed, i);
+    }
 }
 
 fn pack_int3(codes: &[i32]) -> Vec<u8> {
@@ -87,15 +102,16 @@ fn pack_int3(codes: &[i32]) -> Vec<u8> {
     out
 }
 
-fn unpack_int3(packed: &[u8], n: usize) -> Vec<i32> {
-    let mut out = Vec::with_capacity(n);
+/// Unpack int3 codes into a caller-provided slice (allocation-free twin of
+/// [`unpack_int4_into`]; `out.len()` codes).
+pub fn unpack_int3_into(packed: &[u8], out: &mut [i32]) {
+    let n = out.len();
     for (w, base) in packed.chunks_exact(2).zip((0..n).step_by(5)) {
         let word = u16::from_le_bytes([w[0], w[1]]);
         for k in 0..5.min(n - base) {
-            out.push((((word >> (3 * k)) & 0x7) as i32) - 4);
+            out[base + k] = int3_code(word, k);
         }
     }
-    out
 }
 
 /// Quantize one token vector (applies the Hadamard transform internally).
@@ -130,7 +146,11 @@ pub fn quantize(x: &[f32], signs: &[f32], kind: QuantKind) -> QuantizedRow {
     QuantizedRow { kind, n, scale, packed }
 }
 
-/// Dequantize back to the original latent space (inverse Hadamard included).
+/// Dequantize back to the original latent space (inverse Hadamard
+/// included). Allocation-free: codes are decoded straight into `out` as
+/// scaled f32s (`code as f32 * scale`, exactly the old two-step path), so
+/// the per-token staging gather on the decode hot path
+/// (`KvCache::stage_rows`) no longer heap-allocates per row.
 pub fn dequantize(row: &QuantizedRow, signs: &[f32], out: &mut [f32]) {
     debug_assert_eq!(out.len(), row.n);
     match row.kind {
@@ -139,13 +159,19 @@ pub fn dequantize(row: &QuantizedRow, signs: &[f32], out: &mut [f32]) {
                 *o = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
             }
         }
-        QuantKind::Int4 | QuantKind::Int3 => {
-            let codes = match row.kind {
-                QuantKind::Int4 => unpack_int4(&row.packed, row.n),
-                _ => unpack_int3(&row.packed, row.n),
-            };
-            for (o, c) in out.iter_mut().zip(codes) {
-                *o = c as f32 * row.scale;
+        QuantKind::Int4 => {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = int4_code(&row.packed, i) as f32 * row.scale;
+            }
+            hadamard::inverse(out, signs);
+        }
+        QuantKind::Int3 => {
+            let n = row.n;
+            for (w, base) in row.packed.chunks_exact(2).zip((0..n).step_by(5)) {
+                let word = u16::from_le_bytes([w[0], w[1]]);
+                for k in 0..5.min(n - base) {
+                    out[base + k] = int3_code(word, k) as f32 * row.scale;
+                }
             }
             hadamard::inverse(out, signs);
         }
@@ -177,14 +203,47 @@ mod tests {
     fn int3_pack_unpack_exact() {
         let codes: Vec<i32> = vec![-4, -1, 0, 3, 2, 1, -3, 3];
         let packed = pack_int3(&codes);
-        assert_eq!(unpack_int3(&packed, 8), codes);
+        let mut back = vec![0i32; 8];
+        unpack_int3_into(&packed, &mut back);
+        assert_eq!(back, codes);
     }
 
     #[test]
     fn int4_pack_unpack_exact() {
         let codes: Vec<i32> = vec![-7, -1, 0, 7, 3, -5, 2];
         let packed = pack_int4(&codes);
-        assert_eq!(unpack_int4(&packed, 7), codes);
+        let mut back = vec![0i32; 7];
+        unpack_int4_into(&packed, &mut back);
+        assert_eq!(back, codes);
+    }
+
+    /// The fused decode (codes → scaled f32 in place) must match the
+    /// two-step unpack-then-scale path bit for bit — this is what keeps the
+    /// staged cache image identical to the pre-refactor one.
+    #[test]
+    fn fused_dequant_matches_two_step_bitwise() {
+        let mut rng = Rng::new(12);
+        for kind in [QuantKind::Int4, QuantKind::Int3] {
+            for n in [4usize, 5, 48, 63] {
+                let signs = signs_from_seed(3, n);
+                let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+                let q = quantize(&x, &signs, kind);
+                let mut fused = vec![0.0f32; n];
+                dequantize(&q, &signs, &mut fused);
+                let mut codes = vec![0i32; n];
+                match kind {
+                    QuantKind::Int4 => unpack_int4_into(&q.packed, &mut codes),
+                    _ => unpack_int3_into(&q.packed, &mut codes),
+                }
+                let mut two_step: Vec<f32> =
+                    codes.iter().map(|c| *c as f32 * q.scale).collect();
+                hadamard::inverse(&mut two_step, &signs);
+                assert!(
+                    fused.iter().zip(&two_step).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{kind:?} n={n} diverged"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Small self-contained substrates (no external crates are available in this
 //! offline environment beyond `xla`/`anyhow`): JSON, a deterministic RNG
-//! shared with python, CLI parsing, a criterion-style bench harness and a
-//! tiny property-testing helper.
+//! shared with python, CLI parsing, a criterion-style bench harness, a
+//! tiny property-testing helper, and the scoped-thread work pool the
+//! offline compression pipeline fans out on.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;

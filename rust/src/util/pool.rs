@@ -1,0 +1,228 @@
+//! Scoped-thread work pool for the offline compression pipeline.
+//!
+//! No external crates (rayon is unavailable offline): workers are
+//! `std::thread::scope` threads that pull indices off a shared atomic
+//! counter, so a pool lives exactly as long as one `parallel_map` /
+//! `parallel_chunks` call and nothing outlives the borrowed inputs.
+//!
+//! # Thread count
+//!
+//! The pool size comes from, in priority order:
+//! 1. [`set_threads`] — a process-global runtime override (benches and the
+//!    determinism tests use it; `0` clears the override),
+//! 2. the `PALLAS_THREADS` environment variable (read once per process),
+//! 3. `std::thread::available_parallelism()`.
+//!
+//! # Determinism
+//!
+//! Every helper here assigns each output slot to exactly one worker and
+//! performs the same per-slot computation the serial path would, so results
+//! are **bit-identical for every thread count** — the invariant the golden
+//! cross-checks and `rust/tests/parallel_determinism.rs` assert. Work
+//! *scheduling* (which worker runs which index) is nondeterministic; work
+//! *content* is not.
+//!
+//! # Nesting
+//!
+//! The parallel axes of the pipeline nest (per-layer → per-group SVDs →
+//! per-column solves → GEMM row tiles). To bound the thread count at one
+//! pool's worth instead of the product, every worker marks itself with a
+//! thread-local flag and [`num_threads`] reports `1` inside a worker, so
+//! nested calls run serially on the worker that reached them.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+thread_local! {
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Runtime override; 0 means "no override" (fall back to env / hardware).
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the pool size for this process (benches, determinism tests,
+/// `repro compress --threads`). `0` restores the `PALLAS_THREADS` /
+/// hardware default.
+pub fn set_threads(n: usize) {
+    OVERRIDE.store(n, Ordering::SeqCst);
+}
+
+fn env_or_hardware() -> usize {
+    static CONF: OnceLock<usize> = OnceLock::new();
+    *CONF.get_or_init(|| {
+        match std::env::var("PALLAS_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+            Some(n) if n >= 1 => n,
+            _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    })
+}
+
+/// Effective pool size for a parallel call made *here*: 1 inside a pool
+/// worker (nested parallelism runs serial), otherwise the configured count.
+pub fn num_threads() -> usize {
+    if IN_POOL.with(|f| f.get()) {
+        1
+    } else {
+        match OVERRIDE.load(Ordering::SeqCst) {
+            0 => env_or_hardware(),
+            n => n,
+        }
+    }
+}
+
+/// `(0..n).map(f)` with the closure fanned out across the pool. Results come
+/// back in index order; `f` must be pure per index (it may run on any
+/// worker, but index `i`'s slot always holds `f(i)`).
+pub fn parallel_map<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    parallel_map_threads(num_threads(), n, f)
+}
+
+/// `parallel_map` with an explicit worker count (used by unit tests; most
+/// callers want [`parallel_map`], which respects the pool configuration and
+/// the nesting guard).
+pub fn parallel_map_threads<R, F>(threads: usize, n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = threads.min(n);
+    if threads <= 1 || IN_POOL.with(|g| g.get()) {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                IN_POOL.with(|g| g.set(true));
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i)));
+                }
+                done.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let mut items = done.into_inner().unwrap();
+    items.sort_by_key(|(i, _)| *i);
+    debug_assert_eq!(items.len(), n);
+    items.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Run `f(chunk_index, chunk)` over consecutive `chunk_len`-sized pieces of
+/// `data` (last piece may be short), spread round-robin over `threads`
+/// workers. Chunks are disjoint `&mut` regions, so each output element is
+/// written by exactly one worker. Used by the GEMM row-tile loop.
+pub fn parallel_chunks<T, F>(threads: usize, data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let chunk_len = chunk_len.max(1);
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let threads = threads.min(n_chunks);
+    if threads <= 1 || IN_POOL.with(|g| g.get()) {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let mut per: Vec<Vec<(usize, &mut [T])>> = (0..threads).map(|_| Vec::new()).collect();
+    for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+        per[i % threads].push((i, chunk));
+    }
+    let fr = &f;
+    std::thread::scope(|s| {
+        for part in per {
+            s.spawn(move || {
+                IN_POOL.with(|g| g.set(true));
+                for (i, chunk) in part {
+                    fr(i, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Split `0..n` into `parts` contiguous ranges whose lengths differ by at
+/// most one (for column-block parallelism in the triangular solves).
+pub fn chunk_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, n.max(1));
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let got = parallel_map_threads(4, 100, |i| i * i);
+        let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn map_empty_and_single() {
+        assert_eq!(parallel_map_threads(4, 0, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map_threads(4, 1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn nested_maps_run_serially_and_stay_correct() {
+        let got = parallel_map_threads(4, 8, |i| {
+            // inner call observes the worker flag and degrades to serial
+            let inner = parallel_map(4, |j| i * 10 + j);
+            inner.iter().sum::<usize>()
+        });
+        let want: Vec<usize> = (0..8).map(|i| (0..4).map(|j| i * 10 + j).sum()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn chunks_cover_all_data_once() {
+        let mut data = vec![0u32; 37];
+        parallel_chunks(4, &mut data, 5, |i, chunk| {
+            for v in chunk.iter_mut() {
+                *v += 1 + i as u32 * 100;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            let want = 1 + (i / 5) as u32 * 100;
+            assert_eq!(*v, want, "element {i}");
+        }
+    }
+
+    #[test]
+    fn ranges_partition_exactly() {
+        for (n, parts) in [(10, 3), (3, 10), (0, 4), (16, 4), (1, 1)] {
+            let r = chunk_ranges(n, parts);
+            let mut expect = 0;
+            for (a, b) in &r {
+                assert_eq!(*a, expect);
+                assert!(b >= a);
+                expect = *b;
+            }
+            assert_eq!(expect, n, "n={n} parts={parts}");
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Bit-identity guarantees of the parallel offline pipeline.
+//!
+//! The work pool (`util::pool`) and the tiled GEMM (`linalg::gemm`) promise
+//! that thread count and kernel choice never change output bits. These
+//! tests pin that promise: the tiled kernel against the seed scalar loop
+//! over random shapes (including k = 0 and 1×1), and the parallel
+//! pipeline / CKA / grouped-SVD paths against forced single-thread runs
+//! (`PALLAS_THREADS=1` equivalent via `pool::set_threads(1)`), in f32 and
+//! quantized cache configurations.
+
+use recalkv::compress::{cka, compress_layer, compress_layers, svdc, LayerInputs, MethodCfg};
+use recalkv::kvcache::{CacheConfig, KvCache};
+use recalkv::linalg::gemm::gemm_tiled;
+use recalkv::linalg::Matrix;
+use recalkv::prop_assert;
+use recalkv::quant::QuantKind;
+use recalkv::util::pool;
+use recalkv::util::prop::check;
+use recalkv::util::rng::Rng;
+use std::sync::Mutex;
+
+/// Serializes tests that touch the process-global pool override. (Thread
+/// count never changes results — that is what these tests prove — but the
+/// forced single-thread halves of the comparisons must not race another
+/// test's override.)
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn bits_equal(a: &Matrix, b: &Matrix) -> bool {
+    a.rows == b.rows
+        && a.cols == b.cols
+        && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn gemm_tiled_matches_naive_over_random_shapes() {
+    check("gemm_equivalence", 30, |ctx| {
+        let m = ctx.usize_in(1, 40);
+        let k = ctx.usize_in(1, 40);
+        let n = ctx.usize_in(1, 40);
+        let mut a = Matrix::from_vec(m, k, ctx.f32_vec(m * k, 1.0));
+        // plant exact zeros so the kernel's zero-skip path is exercised
+        for v in a.data.iter_mut() {
+            if ctx.rng.below(5) == 0 {
+                *v = 0.0;
+            }
+        }
+        let b = Matrix::from_vec(k, n, ctx.f32_vec(k * n, 1.0));
+        let naive = a.matmul_naive(&b);
+        let tiled = gemm_tiled(&a, &b);
+        prop_assert!(bits_equal(&naive, &tiled), "{m}x{k}x{n}: tiled != naive");
+        prop_assert!(bits_equal(&naive, &a.matmul(&b)), "{m}x{k}x{n}: dispatch != naive");
+        Ok(())
+    });
+}
+
+#[test]
+fn gemm_edge_shapes_match_naive() {
+    // k = 0 (empty inner dimension) and 1×1
+    let a = Matrix::zeros(4, 0);
+    let b = Matrix::zeros(0, 6);
+    assert!(bits_equal(&a.matmul_naive(&b), &gemm_tiled(&a, &b)));
+    let one = Matrix::from_vec(1, 1, vec![3.25]);
+    let two = Matrix::from_vec(1, 1, vec![-0.5]);
+    assert!(bits_equal(&one.matmul_naive(&two), &gemm_tiled(&one, &two)));
+}
+
+#[test]
+fn gemm_multithreaded_matches_naive() {
+    let _g = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let mut rng = Rng::new(23);
+    // big enough to cross the kernel's parallel threshold
+    let a = Matrix::from_fn(130, 150, |_, _| rng.normal());
+    let b = Matrix::from_fn(150, 140, |_, _| rng.normal());
+    let naive = a.matmul_naive(&b);
+    for threads in [1usize, 4] {
+        pool::set_threads(threads);
+        assert!(bits_equal(&naive, &a.matmul(&b)), "threads={threads}");
+    }
+    pool::set_threads(0);
+}
+
+fn layer_fixture(seed: u64) -> (Matrix, Matrix, Matrix, Matrix, Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let d = 16;
+    let h = 4;
+    let dh = 4;
+    let wq = Matrix::from_fn(d, h * dh, |_, _| rng.normal() * 0.1);
+    let wk = Matrix::from_fn(d, h * dh, |_, _| rng.normal() * 0.1);
+    let wv = Matrix::from_fn(d, h * dh, |_, _| rng.normal() * 0.1);
+    let wo = Matrix::from_fn(h * dh, d, |_, _| rng.normal() * 0.1);
+    let x = Matrix::from_fn(64, d, |_, _| rng.normal());
+    let m = x.gram();
+    (wq, wk, wv, wo, x, m)
+}
+
+#[test]
+fn head_similarity_parallel_matches_serial_pair_loop() {
+    let _g = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let (_, wk, _, _, x, _) = layer_fixture(101);
+    // serial reference: the seed's literal double loop over cka()
+    pool::set_threads(1);
+    let dh = wk.cols / 4;
+    let heads: Vec<Matrix> =
+        (0..4).map(|i| x.matmul(&wk.cols_slice(i * dh, (i + 1) * dh))).collect();
+    let mut want = Matrix::eye(4);
+    for i in 0..4 {
+        for j in (i + 1)..4 {
+            let v = cka::cka(&heads[i], &heads[j]) as f32;
+            want[(i, j)] = v;
+            want[(j, i)] = v;
+        }
+    }
+    for threads in [1usize, 4] {
+        pool::set_threads(threads);
+        let got = cka::head_similarity(&x, &wk, 4);
+        assert!(bits_equal(&want, &got), "threads={threads}: similarity diverged");
+    }
+    pool::set_threads(0);
+}
+
+#[test]
+fn grouped_svd_parallel_matches_single_thread() {
+    let _g = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let (_, wk, _, _, _, m) = layer_fixture(103);
+    let perm: Vec<usize> = vec![2, 0, 3, 1];
+    for whiten in [None, Some(&m)] {
+        pool::set_threads(1);
+        let (l1, r1) = svdc::grouped_svd(&wk, &perm, 2, 3, 4, whiten, 1e-4).unwrap();
+        pool::set_threads(4);
+        let (l4, r4) = svdc::grouped_svd(&wk, &perm, 2, 3, 4, whiten, 1e-4).unwrap();
+        assert!(bits_equal(&l1, &l4), "whiten={}: L diverged", whiten.is_some());
+        assert_eq!(r1.len(), r4.len());
+        for (a, b) in r1.iter().zip(&r4) {
+            assert!(bits_equal(a, b), "whiten={}: R diverged", whiten.is_some());
+        }
+    }
+    pool::set_threads(0);
+}
+
+/// Full per-layer pipeline: parallel run bit-identical to the forced
+/// single-thread run, for the f32 ablations and the grouped (palu) path,
+/// and the staged cache image built from the factors is bit-identical in
+/// both f32 and int4 cache modes.
+#[test]
+fn pipeline_parallel_matches_single_thread_f32_and_quantized() {
+    let _g = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let (wq, wk, wv, wo, x, m) = layer_fixture(107);
+    let inp = || LayerInputs {
+        w_q: &wq, w_k: &wk, w_v: &wv, w_o: &wo, m: &m, x_sample: &x,
+        n_heads: 4, n_kv_heads: 4, d_head: 4, group_size: 2,
+        key_rank: 6, value_rank: 8,
+    };
+    for method in ["recal", "palu"] {
+        let cfg = MethodCfg::from_name(method).unwrap();
+        pool::set_threads(1);
+        let serial = compress_layer(&inp(), cfg).unwrap();
+        pool::set_threads(4);
+        let inputs = vec![inp(), inp()];
+        let par = compress_layers(&inputs, cfg).unwrap();
+        for (li, p) in par.iter().enumerate() {
+            assert_eq!(serial.kv_perm, p.kv_perm, "{method} L{li}: perm diverged");
+            for (name, a, b) in [
+                ("wq", &serial.wq_reordered, &p.wq_reordered),
+                ("l_k", &serial.l_k, &p.l_k),
+                ("l_v", &serial.l_v, &p.l_v),
+                ("wo_fused", &serial.wo_fused, &p.wo_fused),
+                ("cka", &serial.cka, &p.cka),
+            ] {
+                assert!(bits_equal(a, b), "{method} L{li}: {name} diverged");
+            }
+            for (a, b) in serial.r_k.iter().zip(&p.r_k) {
+                assert!(bits_equal(a, b), "{method} L{li}: r_k diverged");
+            }
+            assert_eq!(serial.key_error.to_bits(), p.key_error.to_bits(), "{method} L{li}");
+            assert_eq!(
+                serial.value_error_post.to_bits(),
+                p.value_error_post.to_bits(),
+                "{method} L{li}"
+            );
+        }
+        // Stage the two runs' latents through the quantized cache: equal
+        // factors must produce bit-identical staged images in every mode.
+        let lat = |cl: &recalkv::compress::CompressedLayer| {
+            (x.matmul(&cl.l_k), x.matmul(&cl.l_v))
+        };
+        let (k1, v1) = lat(&serial);
+        let (k2, v2) = lat(&par[0]);
+        for quant in [QuantKind::F32, QuantKind::Int4] {
+            let mut staged = Vec::new();
+            for (klat, vlat) in [(&k1, &v1), (&k2, &v2)] {
+                let mut c = KvCache::new(CacheConfig {
+                    n_layers: 1,
+                    widths: vec![(klat.cols, vlat.cols)],
+                    cache_len: 16,
+                    tokens_per_block: 4,
+                    capacity_tokens: 16,
+                    quant,
+                    signs_seed: 11,
+                });
+                let s = c.new_seq();
+                for t in 0..8 {
+                    c.append(s, &[(klat.row(t), vlat.row(t))]).unwrap();
+                }
+                let mut out = vec![0.0f32; 8 * klat.cols];
+                c.stage_rows(s, 0, 0, 0, 8, &mut out).unwrap();
+                let mut vout = vec![0.0f32; 8 * vlat.cols];
+                c.stage_rows(s, 0, 1, 0, 8, &mut vout).unwrap();
+                out.extend(vout);
+                staged.push(out);
+            }
+            assert!(
+                staged[0].iter().zip(&staged[1]).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{method} {quant:?}: staged images diverged"
+            );
+        }
+    }
+    pool::set_threads(0);
+}

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Bench smoke: a few quick iterations of the coordinator throughput bench
-# plus the decode-staging microbench, leaving BENCH_decode_staging.json at
-# the repo root so successive PRs have a perf trajectory to compare against.
+# plus the decode-staging and linalg-hotpath microbenches, leaving
+# BENCH_decode_staging.json and BENCH_linalg.json at the repo root so
+# successive PRs have a perf trajectory to compare against.
 set -euo pipefail
 
 REPO_ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
@@ -14,4 +15,8 @@ cargo bench --bench coordinator_throughput -- --requests 2 --max-new 4
 # and speedups at S in {512, 2048, 8192} (f32 + int4).
 cargo bench --bench decode_staging -- --out "$REPO_ROOT/BENCH_decode_staging.json"
 
-echo "bench_smoke.sh: wrote $REPO_ROOT/BENCH_decode_staging.json"
+# Offline-compression substrate: GEMM GFLOP/s (seed loop vs tiled kernel)
+# and the per-layer pipeline wall time at 1/2/N pool threads.
+cargo bench --bench linalg_hotpath -- --quick --out "$REPO_ROOT/BENCH_linalg.json"
+
+echo "bench_smoke.sh: wrote $REPO_ROOT/BENCH_decode_staging.json and $REPO_ROOT/BENCH_linalg.json"

@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
-# Tier-1 verification: build, test, and format-check the rust crate.
+# Tier-1 verification: build, test, lint, and format-check the rust crate.
 # Run from anywhere; operates on the repo this script lives in.
 #
-#   scripts/check.sh            # build + test + fmt
+#   scripts/check.sh            # build + test + clippy + fmt
 #   scripts/check.sh --bench    # also run the bench smoke (see bench_smoke.sh)
 set -euo pipefail
 
@@ -11,6 +11,7 @@ cd "$REPO_ROOT/rust"
 
 cargo build --release
 cargo test -q
+cargo clippy --all-targets -- -D warnings
 cargo fmt --check
 
 if [[ "${1:-}" == "--bench" ]]; then
