@@ -1,8 +1,9 @@
 //! Micro-benchmarks for the linalg substrate used by the offline mirror and
 //! the quantized cache — GEMM (seed scalar loop vs packed register-tiled
-//! kernel, single- and multi-threaded), Jacobi SVD, Cholesky, Hadamard and
-//! per-token quant — plus the end-to-end per-layer compression pipeline at
-//! 1/2/N pool threads against the seed-matmul single-thread baseline.
+//! kernel, scalar twin vs SIMD micro-kernel, single- and multi-threaded),
+//! Jacobi SVD, Cholesky, Hadamard and per-token quant — plus the
+//! end-to-end per-layer compression pipeline at 1/2/N pool threads (SIMD
+//! on and forced off) against the seed-matmul single-thread baseline.
 //!
 //! Writes a machine-readable summary to `BENCH_linalg.json` (override with
 //! `--out`) so successive PRs have an offline-compression perf trajectory
@@ -15,11 +16,12 @@ use recalkv::linalg::gemm::{gemm, set_force_naive};
 use recalkv::linalg::hadamard::{forward, inverse, signs_from_seed};
 use recalkv::linalg::{cholesky, svd, Matrix};
 use recalkv::quant::{dequantize, quantize, QuantKind};
-use recalkv::util::bench::{bench, Table};
+use recalkv::util::bench::{bench, BenchResult, Table};
 use recalkv::util::cli::Args;
 use recalkv::util::json::Json;
 use recalkv::util::pool;
 use recalkv::util::rng::Rng;
+use recalkv::util::simd;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
@@ -56,12 +58,13 @@ fn layer_fixture(quick: bool) -> LayerFixture {
     LayerFixture { w_q, w_k, w_v, w_o, m, x, d, n_heads, d_head }
 }
 
-/// Full `compress_layer` runs at a pinned thread count; returns the best
-/// wall seconds of `reps` runs (single samples are too noisy to persist —
-/// the min discards scheduler and cold-cache outliers).
-fn run_layer(fx: &LayerFixture, threads: usize, naive: bool, reps: usize) -> f64 {
+/// Full `compress_layer` runs at a pinned thread count and SIMD policy;
+/// returns the best wall seconds of `reps` runs (single samples are too
+/// noisy to persist — the min discards scheduler and cold-cache outliers).
+fn run_layer(fx: &LayerFixture, threads: usize, naive: bool, scalar: bool, reps: usize) -> f64 {
     pool::set_threads(threads);
     set_force_naive(naive);
+    simd::set_force_scalar(scalar);
     let inp = LayerInputs {
         w_q: &fx.w_q,
         w_k: &fx.w_k,
@@ -85,6 +88,7 @@ fn run_layer(fx: &LayerFixture, threads: usize, naive: bool, reps: usize) -> f64
     }
     pool::set_threads(0);
     set_force_naive(false);
+    simd::set_force_scalar(false);
     best
 }
 
@@ -95,52 +99,135 @@ fn main() -> anyhow::Result<()> {
     let budget = Duration::from_millis(if quick { 200 } else { 500 });
     let mut rng = Rng::new(5);
     let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let tier = simd::tier();
+    println!("SIMD tier: {} (PALLAS_SIMD / util::simd dispatch)", tier.name());
 
-    // --- GEMM: seed loop vs tiled kernel, 1 thread and all threads -------
+    // --- GEMM: seed loop vs tiled kernel, scalar twin vs SIMD ------------
     let sizes: Vec<usize> = if quick { vec![128, 256] } else { vec![128, 256, 512] };
     let mut gemm_rows = Vec::new();
-    let nt_header = format!("tiled {avail}t");
+    let nt_header = format!("simd {avail}t");
     let mut gemm_table = Table::new(
         "GEMM GFLOP/s (f32, square)",
-        &["n", "seed naive", "tiled 1t", nt_header.as_str(), "speedup 1t"],
+        &["n", "seed naive", "scalar 1t", "simd 1t", nt_header.as_str(), "simd/scalar 1t"],
     );
     for &n in &sizes {
         let a = rand_matrix(&mut rng, n, n);
         let b = rand_matrix(&mut rng, n, n);
         let flops = 2.0 * (n as f64).powi(3);
         set_force_naive(true);
+        simd::set_force_scalar(true);
         let naive = bench(&format!("matmul naive {n}"), budget, || {
             std::hint::black_box(a.matmul(&b));
         });
         set_force_naive(false);
         pool::set_threads(1);
-        let tiled1 = bench(&format!("matmul tiled {n} 1t"), budget, || {
+        let scalar1 = bench(&format!("matmul tiled-scalar {n} 1t"), budget, || {
+            std::hint::black_box(gemm(&a, &b));
+        });
+        simd::set_force_scalar(false);
+        let simd1 = bench(&format!("matmul tiled-simd {n} 1t"), budget, || {
             std::hint::black_box(gemm(&a, &b));
         });
         pool::set_threads(0);
-        let tiled_n = bench(&format!("matmul tiled {n} {avail}t"), budget, || {
+        let simd_n = bench(&format!("matmul tiled-simd {n} {avail}t"), budget, || {
             std::hint::black_box(gemm(&a, &b));
         });
-        let gf = |r: &recalkv::util::bench::BenchResult| flops / r.median_ns;
+        let gf = |r: &BenchResult| flops / r.median_ns;
         gemm_table.row(vec![
             n.to_string(),
             format!("{:.2}", gf(&naive)),
-            format!("{:.2}", gf(&tiled1)),
-            format!("{:.2}", gf(&tiled_n)),
-            format!("{:.1}x", naive.median_ns / tiled1.median_ns),
+            format!("{:.2}", gf(&scalar1)),
+            format!("{:.2}", gf(&simd1)),
+            format!("{:.2}", gf(&simd_n)),
+            format!("{:.1}x", scalar1.median_ns / simd1.median_ns),
         ]);
         gemm_table.print_last();
         gemm_rows.push(obj(vec![
             ("n", Json::Num(n as f64)),
             ("naive_gflops", Json::Num(gf(&naive))),
-            ("tiled_1t_gflops", Json::Num(gf(&tiled1))),
-            ("tiled_nt_gflops", Json::Num(gf(&tiled_n))),
-            ("tiled_vs_naive_1t", Json::Num(naive.median_ns / tiled1.median_ns)),
+            ("tiled_scalar_1t_gflops", Json::Num(gf(&scalar1))),
+            ("tiled_simd_1t_gflops", Json::Num(gf(&simd1))),
+            ("tiled_simd_nt_gflops", Json::Num(gf(&simd_n))),
+            ("simd_vs_scalar_1t", Json::Num(scalar1.median_ns / simd1.median_ns)),
+            ("tiled_scalar_vs_naive_1t", Json::Num(naive.median_ns / scalar1.median_ns)),
         ]));
     }
     gemm_table.print();
 
-    // --- end-to-end per-layer pipeline at 1/2/N threads ------------------
+    // --- FWHT + int4 dequant: scalar twins vs SIMD, GB/s -----------------
+    let hn = 128usize;
+    let hrows = 512usize;
+    let signs = signs_from_seed(9, hn);
+    let mut x: Vec<f32> = (0..hrows * hn).map(|_| rng.normal()).collect();
+    // Memory traffic per direction: log2(b) butterfly stages (each reads
+    // and writes every element) plus the sign-multiply and normalization
+    // passes (read+write each); forward+inverse doubles it.
+    let stages = recalkv::linalg::hadamard::block_size(hn).trailing_zeros() as usize;
+    let fwht_bytes = (hrows * hn * 4) as f64 * 2.0 * (stages as f64 * 2.0 + 4.0);
+    simd::set_force_scalar(true);
+    let fwht_s = bench(&format!("hadamard fwd+inv {hrows}x{hn} scalar"), budget, || {
+        forward(&mut x, &signs);
+        inverse(&mut x, &signs);
+    });
+    simd::set_force_scalar(false);
+    let fwht_v = bench(&format!("hadamard fwd+inv {hrows}x{hn} simd"), budget, || {
+        forward(&mut x, &signs);
+        inverse(&mut x, &signs);
+    });
+    let gbps = |bytes: f64, r: &BenchResult| bytes / r.median_ns; // B/ns == GB/s
+    println!(
+        "  -> fwht {:.2} GB/s scalar, {:.2} GB/s {} ({:.1}x)",
+        gbps(fwht_bytes, &fwht_s),
+        gbps(fwht_bytes, &fwht_v),
+        tier.name(),
+        fwht_s.median_ns / fwht_v.median_ns
+    );
+
+    let row: Vec<f32> = (0..hn).map(|_| rng.normal()).collect();
+    let mut out = vec![0.0f32; hn];
+    let q4 = quantize(&row, &signs, QuantKind::Int4);
+    // Full staging dequant (nibble decode + scale + inverse Hadamard) —
+    // the decode-hot op itself. The FWHT dominates at this width, so the
+    // isolated nibble decode is measured separately below.
+    let dq_bytes = (hn * 4) as f64; // staged f32 output per token row
+    simd::set_force_scalar(true);
+    let dq_s = bench(&format!("dequant int4 row {hn}-dim scalar"), budget, || {
+        dequantize(&q4, &signs, &mut out);
+    });
+    simd::set_force_scalar(false);
+    let dq_v = bench(&format!("dequant int4 row {hn}-dim simd"), budget, || {
+        dequantize(&q4, &signs, &mut out);
+    });
+    println!(
+        "  -> int4 row dequant {:.2} GB/s scalar, {:.2} GB/s {} ({:.1}x), {:.1} Mtok/s",
+        gbps(dq_bytes, &dq_s),
+        gbps(dq_bytes, &dq_v),
+        tier.name(),
+        dq_s.median_ns / dq_v.median_ns,
+        1.0 / (dq_v.median_ns / 1e3)
+    );
+    // Isolated nibble decode (no Hadamard) so decode16 regressions can't
+    // hide behind the butterfly kernel.
+    let mut codes = vec![0i32; hn];
+    simd::set_force_scalar(true);
+    let up_s = bench(&format!("unpack int4 {hn}-dim scalar"), budget, || {
+        recalkv::quant::unpack_int4_into(&q4.packed, &mut codes);
+        std::hint::black_box(codes[0]);
+    });
+    simd::set_force_scalar(false);
+    let up_v = bench(&format!("unpack int4 {hn}-dim simd"), budget, || {
+        recalkv::quant::unpack_int4_into(&q4.packed, &mut codes);
+        std::hint::black_box(codes[0]);
+    });
+    println!(
+        "  -> int4 unpack {:.2} GB/s scalar, {:.2} GB/s {} ({:.1}x)",
+        gbps(dq_bytes, &up_s),
+        gbps(dq_bytes, &up_v),
+        tier.name(),
+        up_s.median_ns / up_v.median_ns
+    );
+
+    // --- end-to-end per-layer pipeline at 1/2/N threads, SIMD on/off -----
     let fx = layer_fixture(quick);
     println!(
         "\nper-layer pipeline d={} h={} dh={} x_rows={} (recal: CKA + HSR + \
@@ -148,34 +235,39 @@ fn main() -> anyhow::Result<()> {
         fx.d, fx.n_heads, fx.d_head, fx.x.rows
     );
     let reps = if quick { 2 } else { 3 };
-    let baseline = run_layer(&fx, 1, true, reps);
-    println!("  seed baseline (naive matmul, 1 thread): {baseline:.2}s (best of {reps})");
+    let baseline = run_layer(&fx, 1, true, true, reps);
+    println!("  seed baseline (naive matmul, scalar, 1 thread): {baseline:.2}s (best of {reps})");
     let mut counts: Vec<usize> = vec![1, 2, avail];
     counts.sort_unstable();
     counts.dedup();
     let mut pipe_rows = Vec::new();
     let mut pipe_table = Table::new(
-        "Per-layer compression wall time (tiled GEMM + work pool)",
-        &["threads", "wall", "speedup vs seed"],
+        "Per-layer compression wall time (tiled GEMM + work pool + SIMD)",
+        &["threads", "scalar wall", "simd wall", "simd speedup", "speedup vs seed"],
     );
     for &t in &counts {
-        let dt = run_layer(&fx, t, false, reps);
+        let dt_scalar = run_layer(&fx, t, false, true, reps);
+        let dt = run_layer(&fx, t, false, false, reps);
         let speedup = baseline / dt.max(1e-12);
         pipe_table.row(vec![
             t.to_string(),
+            format!("{dt_scalar:.2}s"),
             format!("{dt:.2}s"),
+            format!("{:.1}x", dt_scalar / dt.max(1e-12)),
             format!("{speedup:.1}x"),
         ]);
         pipe_table.print_last();
         pipe_rows.push(obj(vec![
             ("threads", Json::Num(t as f64)),
+            ("wall_scalar_s", Json::Num(dt_scalar)),
             ("wall_s", Json::Num(dt)),
+            ("simd_speedup", Json::Num(dt_scalar / dt.max(1e-12))),
             ("speedup_vs_seed", Json::Num(speedup)),
         ]));
     }
     pipe_table.print();
 
-    // --- the seed's remaining hot kernels, unchanged numerics ------------
+    // --- the seed's remaining hot kernels ---------------------------------
     let w = rand_matrix(&mut rng, 256, 128);
     bench("jacobi svd 256x128", Duration::from_secs(3), || {
         std::hint::black_box(svd(&w));
@@ -186,18 +278,8 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(cholesky(&g).unwrap());
     });
 
-    let signs = signs_from_seed(9, 128);
-    let mut x: Vec<f32> = (0..512 * 128).map(|_| rng.normal()).collect();
-    let r = bench("hadamard fwd+inv 512x128", budget, || {
-        forward(&mut x, &signs);
-        inverse(&mut x, &signs);
-    });
-    println!("  -> {:.1} Mtok/s (128-dim rows)", 2.0 * 512.0 / (r.median_ns / 1e3));
-
-    let row: Vec<f32> = (0..128).map(|_| rng.normal()).collect();
-    let mut out = vec![0.0f32; 128];
     for kind in [QuantKind::Int4, QuantKind::Int3] {
-        let r = bench(&format!("quant+dequant {kind:?} 128-dim"), budget, || {
+        let r = bench(&format!("quant+dequant {kind:?} {hn}-dim"), budget, || {
             let q = quantize(&row, &signs, kind);
             dequantize(&q, &signs, &mut out);
         });
@@ -207,6 +289,7 @@ fn main() -> anyhow::Result<()> {
     let report = obj(vec![
         ("bench", Json::Str("linalg_hotpath".into())),
         ("threads_available", Json::Num(avail as f64)),
+        ("simd_tier", Json::Str(tier.name().into())),
         (
             "pipeline_shape",
             obj(vec![
@@ -217,6 +300,34 @@ fn main() -> anyhow::Result<()> {
             ]),
         ),
         ("gemm", Json::Arr(gemm_rows)),
+        (
+            "fwht",
+            obj(vec![
+                ("rows", Json::Num(hrows as f64)),
+                ("dim", Json::Num(hn as f64)),
+                ("gbps_scalar", Json::Num(gbps(fwht_bytes, &fwht_s))),
+                ("gbps_simd", Json::Num(gbps(fwht_bytes, &fwht_v))),
+                ("simd_vs_scalar", Json::Num(fwht_s.median_ns / fwht_v.median_ns)),
+            ]),
+        ),
+        (
+            "dequant_int4_row",
+            obj(vec![
+                ("dim", Json::Num(hn as f64)),
+                ("gbps_scalar", Json::Num(gbps(dq_bytes, &dq_s))),
+                ("gbps_simd", Json::Num(gbps(dq_bytes, &dq_v))),
+                ("simd_vs_scalar", Json::Num(dq_s.median_ns / dq_v.median_ns)),
+            ]),
+        ),
+        (
+            "unpack_int4",
+            obj(vec![
+                ("dim", Json::Num(hn as f64)),
+                ("gbps_scalar", Json::Num(gbps(dq_bytes, &up_s))),
+                ("gbps_simd", Json::Num(gbps(dq_bytes, &up_v))),
+                ("simd_vs_scalar", Json::Num(up_s.median_ns / up_v.median_ns)),
+            ]),
+        ),
         ("pipeline_seed_baseline_s", Json::Num(baseline)),
         ("pipeline", Json::Arr(pipe_rows)),
     ]);

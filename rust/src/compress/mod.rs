@@ -22,4 +22,7 @@ pub mod pipeline;
 pub mod reorder;
 pub mod svdc;
 
-pub use pipeline::{compress_layer, compress_layers, CompressedLayer, LayerInputs, MethodCfg};
+pub use pipeline::{
+    compress_layer, compress_layer_ranks, compress_layers, compress_layers_sweep,
+    CompressedLayer, LayerInputs, MethodCfg,
+};

@@ -96,122 +96,184 @@ pub fn compress_layers(inputs: &[LayerInputs], cfg: MethodCfg) -> Result<Vec<Com
         .collect()
 }
 
+/// Rank-sweep over every layer concurrently: for each layer, one
+/// calibration/CKA pass and one set of SVDs are shared across all
+/// `(key_rank, value_rank)` entries (see [`compress_layer_ranks`]).
+/// `out[layer][rank_index]` is bit-identical to running
+/// [`compress_layer`] at that rank alone.
+///
+/// Each entry is a self-contained [`CompressedLayer`], so the
+/// rank-independent matrices (`wq_reordered`, `cka`) are duplicated
+/// across a layer's entries (the last takes them by move). That is noise
+/// at the d ≤ 640 scales this mirror targets; a sweep over much larger
+/// models should either consume entries incrementally or share them
+/// behind `Arc` (an API change deferred until needed).
+pub fn compress_layers_sweep(inputs: &[LayerInputs], cfg: MethodCfg, ranks: &[(usize, usize)])
+    -> Result<Vec<Vec<CompressedLayer>>> {
+    pool::parallel_map(inputs.len(), |l| compress_layer_ranks(&inputs[l], cfg, ranks))
+        .into_iter()
+        .collect()
+}
+
 pub fn compress_layer(inp: &LayerInputs, cfg: MethodCfg) -> Result<CompressedLayer> {
+    let mut out = compress_layer_ranks(inp, cfg, &[(inp.key_rank, inp.value_rank)])?;
+    Ok(out.pop().expect("one rank in, one layer out"))
+}
+
+/// One layer at several `(key_rank, value_rank)` points, reusing every
+/// rank-independent stage: the CKA similarity + HSR permutation, the
+/// per-group key SVDs (and whitening factor), the value SVD, and the
+/// reordered W_q. Only truncation, calibration, the error traces and the
+/// W̃_o fusion run per rank — the rank never reaches the Jacobi sweeps, so
+/// each entry is bit-identical to a standalone [`compress_layer`] run at
+/// that rank (`inp.key_rank`/`inp.value_rank` are ignored in favor of
+/// `ranks`).
+pub fn compress_layer_ranks(inp: &LayerInputs, cfg: MethodCfg, ranks: &[(usize, usize)])
+    -> Result<Vec<CompressedLayer>> {
     let ridge = 1e-4;
     let g = inp.n_kv_heads / inp.group_size;
 
     // --- Keys: CKA → (optional) reorder → grouped SVD (paper §3.2) ---
-    let sim = cka::head_similarity(inp.x_sample, inp.w_k, inp.n_kv_heads);
-    let kv_perm = if cfg.use_hsr {
+    let mut sim = cka::head_similarity(inp.x_sample, inp.w_k, inp.n_kv_heads);
+    let mut kv_perm: Vec<usize> = if cfg.use_hsr {
         reorder::greedy_group_heads(&sim, inp.group_size)
     } else {
         (0..inp.n_kv_heads).collect()
     };
     let m_opt = if cfg.use_whitening { Some(inp.m) } else { None };
-    let (l_k, r_k) = svdc::grouped_svd(inp.w_k, &kv_perm, inp.group_size,
-                                       inp.key_rank, inp.d_head, m_opt, ridge)?;
-    // data-aware error over the permuted concatenation
+    let key_decomp =
+        svdc::grouped_decompose(inp.w_k, &kv_perm, inp.group_size, inp.d_head, m_opt, ridge)?;
+    // data-aware error is taken over the permuted concatenation
     let wk_cols: Vec<Matrix> = kv_perm
         .iter()
         .map(|c| inp.w_k.cols_slice(c * inp.d_head, (c + 1) * inp.d_head))
         .collect();
     let refs: Vec<&Matrix> = wk_cols.iter().collect();
     let wk_perm = Matrix::hcat(&refs);
-    let rk_flat = block_diag(&r_k);
-    let key_error = svdc::recon_error(&wk_perm, &l_k, &rk_flat, Some(inp.m));
 
-    // --- Values: SVD (+grouping for palu) → calibration (paper §3.3) ---
+    // --- Values: rank-independent decompositions (paper §3.3) ---
     let rep = inp.n_heads / inp.n_kv_heads;
-    let (l_v, p_heads, value_error_pre, value_error_post);
-    if cfg.grouped_values {
-        let rv_g = inp.value_rank / g;
-        let ident: Vec<usize> = (0..inp.n_kv_heads).collect();
-        let (lv, rv_groups) = svdc::grouped_svd(inp.w_v, &ident, inp.group_size,
-                                                rv_g, inp.d_head, None, ridge)?;
-        let rv_total = g * rv_g;
-        let mut maps = Vec::with_capacity(inp.n_heads);
-        for i in 0..inp.n_heads {
-            let kv = i / rep;
-            let gj = kv / inp.group_size;
-            let pos = kv % inp.group_size;
-            let mut p = Matrix::zeros(rv_total, inp.d_head);
-            let src = rv_groups[gj].cols_slice(pos * inp.d_head, (pos + 1) * inp.d_head);
-            for r in 0..rv_g {
-                for c in 0..inp.d_head {
-                    p[(gj * rv_g + r, c)] = src[(r, c)];
-                }
-            }
-            maps.push(p);
-        }
-        let rv_flat = block_diag(&rv_groups);
-        let err = svdc::recon_error(inp.w_v, &lv, &rv_flat, Some(inp.m));
-        l_v = lv;
-        p_heads = maps;
-        value_error_pre = err;
-        value_error_post = err;
+    let ident: Vec<usize> = (0..inp.n_kv_heads).collect();
+    let value_grouped = if cfg.grouped_values {
+        Some(svdc::grouped_decompose(inp.w_v, &ident, inp.group_size, inp.d_head, None, ridge)?)
     } else {
-        let (mut lv, mut rv) = svdc::svd_lowrank(inp.w_v, inp.value_rank);
-        let pre = svdc::recon_error(inp.w_v, &lv, &rv, Some(inp.m));
-        let mut post = pre;
-        if cfg.use_calibration {
-            let (l2, r2, hist) = calibrate::calibrate(inp.w_v, &lv, &rv, inp.m, 8, 1e-6)?;
-            lv = l2;
-            rv = r2;
-            post = *hist.last().unwrap();
-        }
-        let maps = (0..inp.n_heads)
-            .map(|i| rv.cols_slice((i / rep) * inp.d_head, (i / rep + 1) * inp.d_head))
-            .collect();
-        l_v = lv;
-        p_heads = maps;
-        value_error_pre = pre;
-        value_error_post = post;
-    }
+        None
+    };
+    let value_svd = if cfg.grouped_values { None } else { Some(crate::linalg::svd(inp.w_v)) };
 
-    // --- Fusion + fold reordering into W_q / W̃_o (paper Eq. 9-11, Fig. 3) ---
+    // --- Reordering folded into W_q (paper Eq. 9-11, Fig. 3) ---
     let q_order = q_head_order(&kv_perm, inp.n_heads, inp.n_kv_heads);
     let wq_blocks: Vec<Matrix> = q_order
         .iter()
         .map(|i| inp.w_q.cols_slice(i * inp.d_head, (i + 1) * inp.d_head))
         .collect();
     let refs: Vec<&Matrix> = wq_blocks.iter().collect();
-    let wq_reordered = Matrix::hcat(&refs);
-    let rv_dim = l_v.cols;
-    let d = inp.w_o.cols;
-    // Per-q-head fusion products are independent; fan them out and stitch
-    // the blocks back in q_order (identical products, identical placement).
-    let fused_blocks: Vec<Matrix> = pool::parallel_map(q_order.len(), |t| {
-        let i = q_order[t];
-        let wo_blk = rows_slice(inp.w_o, i * inp.d_head, (i + 1) * inp.d_head);
-        p_heads[i].matmul(&wo_blk)
-    });
-    let mut wo_fused = Matrix::zeros(inp.n_heads * rv_dim, d);
-    for (t, fused) in fused_blocks.iter().enumerate() {
-        for r in 0..rv_dim {
-            wo_fused
-                .row_mut(t * rv_dim + r)
-                .copy_from_slice(fused.row(r));
-        }
-    }
+    let mut wq_reordered = Matrix::hcat(&refs);
 
     let within_before = reorder::within_group_similarity(
-        &sim, &(0..inp.n_kv_heads).collect::<Vec<_>>(), inp.group_size);
+        &sim, &ident, inp.group_size);
     let within_after = reorder::within_group_similarity(&sim, &kv_perm, inp.group_size);
 
-    Ok(CompressedLayer {
-        wq_reordered,
-        l_k,
-        r_k,
-        l_v,
-        wo_fused,
-        kv_perm,
-        cka: sim,
-        key_error,
-        value_error_pre,
-        value_error_post,
-        within_sim_before: within_before,
-        within_sim_after: within_after,
-    })
+    let mut out = Vec::with_capacity(ranks.len());
+    for (ri, &(key_rank, value_rank)) in ranks.iter().enumerate() {
+        // The shared matrices are cloned into every entry except the last,
+        // which takes them by move — the common single-rank path stays
+        // copy-free, like the pre-sweep code.
+        let last = ri + 1 == ranks.len();
+        let (l_k, r_k) = key_decomp.truncate(key_rank);
+        let rk_flat = block_diag(&r_k);
+        let key_error = svdc::recon_error(&wk_perm, &l_k, &rk_flat, Some(inp.m));
+
+        // --- Values: truncate (+grouping for palu) → calibration ---
+        let (l_v, p_heads, value_error_pre, value_error_post);
+        if let Some(decomp) = &value_grouped {
+            let rv_g = value_rank / g;
+            let (lv, rv_groups) = decomp.truncate(rv_g);
+            let rv_total = g * rv_g;
+            let mut maps = Vec::with_capacity(inp.n_heads);
+            for i in 0..inp.n_heads {
+                let kv = i / rep;
+                let gj = kv / inp.group_size;
+                let pos = kv % inp.group_size;
+                let mut p = Matrix::zeros(rv_total, inp.d_head);
+                let src = rv_groups[gj].cols_slice(pos * inp.d_head, (pos + 1) * inp.d_head);
+                for r in 0..rv_g {
+                    for c in 0..inp.d_head {
+                        p[(gj * rv_g + r, c)] = src[(r, c)];
+                    }
+                }
+                maps.push(p);
+            }
+            let rv_flat = block_diag(&rv_groups);
+            let err = svdc::recon_error(inp.w_v, &lv, &rv_flat, Some(inp.m));
+            l_v = lv;
+            p_heads = maps;
+            value_error_pre = err;
+            value_error_post = err;
+        } else {
+            let (mut lv, mut rv) =
+                crate::linalg::svd_truncate(value_svd.as_ref().unwrap(), value_rank);
+            let pre = svdc::recon_error(inp.w_v, &lv, &rv, Some(inp.m));
+            let mut post = pre;
+            if cfg.use_calibration {
+                let (l2, r2, hist) = calibrate::calibrate(inp.w_v, &lv, &rv, inp.m, 8, 1e-6)?;
+                lv = l2;
+                rv = r2;
+                post = *hist.last().unwrap();
+            }
+            let maps = (0..inp.n_heads)
+                .map(|i| rv.cols_slice((i / rep) * inp.d_head, (i / rep + 1) * inp.d_head))
+                .collect();
+            l_v = lv;
+            p_heads = maps;
+            value_error_pre = pre;
+            value_error_post = post;
+        }
+
+        // --- Fusion into W̃_o (paper Eq. 9-11, Fig. 3) ---
+        let rv_dim = l_v.cols;
+        let d = inp.w_o.cols;
+        // Per-q-head fusion products are independent; fan them out and
+        // stitch the blocks back in q_order (identical products, identical
+        // placement).
+        let fused_blocks: Vec<Matrix> = pool::parallel_map(q_order.len(), |t| {
+            let i = q_order[t];
+            let wo_blk = rows_slice(inp.w_o, i * inp.d_head, (i + 1) * inp.d_head);
+            p_heads[i].matmul(&wo_blk)
+        });
+        let mut wo_fused = Matrix::zeros(inp.n_heads * rv_dim, d);
+        for (t, fused) in fused_blocks.iter().enumerate() {
+            for r in 0..rv_dim {
+                wo_fused
+                    .row_mut(t * rv_dim + r)
+                    .copy_from_slice(fused.row(r));
+            }
+        }
+
+        out.push(CompressedLayer {
+            wq_reordered: if last {
+                std::mem::replace(&mut wq_reordered, Matrix::zeros(0, 0))
+            } else {
+                wq_reordered.clone()
+            },
+            l_k,
+            r_k,
+            l_v,
+            wo_fused,
+            kv_perm: if last { std::mem::take(&mut kv_perm) } else { kv_perm.clone() },
+            cka: if last {
+                std::mem::replace(&mut sim, Matrix::zeros(0, 0))
+            } else {
+                sim.clone()
+            },
+            key_error,
+            value_error_pre,
+            value_error_post,
+            within_sim_before: within_before,
+            within_sim_after: within_after,
+        });
+    }
+    Ok(out)
 }
 
 fn rows_slice(m: &Matrix, r0: usize, r1: usize) -> Matrix {

@@ -6,7 +6,7 @@
 //! in group order and each group's arithmetic is untouched, so the factors
 //! are bit-identical to the serial loop at any thread count.
 
-use crate::linalg::{cholesky, invert_lower, svd, Matrix};
+use crate::linalg::{cholesky, invert_lower, svd, svd_truncate, Matrix, Svd};
 use crate::util::pool;
 use anyhow::Result;
 
@@ -33,33 +33,41 @@ pub fn whiten_factor(m: &Matrix, ridge: f32) -> Result<(Matrix, Matrix)> {
 pub fn whitened_svd_lowrank(w: &Matrix, r: usize, m: &Matrix, ridge: f32)
     -> Result<(Matrix, Matrix)> {
     let (s, s_inv_t) = whiten_factor(m, ridge)?;
-    let a = s.t().matmul(w);
-    let d = svd(&a);
-    let r = r.min(d.s.len());
-    let mut ur = Matrix::zeros(a.rows, r);
-    let mut rm = Matrix::zeros(r, w.cols);
-    for k in 0..r {
-        let sq = d.s[k].max(0.0).sqrt();
-        for i in 0..a.rows {
-            ur[(i, k)] = d.u[(i, k)] * sq;
-        }
-        for j in 0..w.cols {
-            rm[(k, j)] = sq * d.vt[(k, j)];
-        }
-    }
+    let (ur, rm) = svd_truncate(&svd(&s.t().matmul(w)), r);
     Ok((s_inv_t.matmul(&ur), rm))
 }
 
-/// Grouped-head decomposition over a head permutation (paper §3.2).
-/// Returns (L [d, g·rank] concatenated, R per group [rank, s·dh]).
-pub fn grouped_svd(w: &Matrix, perm: &[usize], group_size: usize, rank: usize,
-                   d_head: usize, m: Option<&Matrix>, ridge: f32)
-    -> Result<(Matrix, Vec<Matrix>)> {
+/// Rank-independent part of a grouped decomposition: per-group SVDs of the
+/// (optionally whitened) permuted head blocks, plus the un-whitening
+/// factor. Truncating this at any rank via [`GroupedDecomp::truncate`] is
+/// bit-identical to running [`grouped_svd`] at that rank directly — the
+/// Jacobi sweep never sees the rank, only the truncation loop does — which
+/// is what makes `repro compress --sweep-keep` cheap: one decomposition,
+/// many keep-ratios.
+pub struct GroupedDecomp {
+    /// S⁻ᵀ of the whitening factor, when whitening was requested.
+    s_inv_t: Option<Matrix>,
+    /// One full SVD per head group, in group order.
+    svds: Vec<Svd>,
+}
+
+/// Decompose each head group of `w` over the permutation (paper §3.2),
+/// without committing to a rank. The per-group SVDs fan out over the pool;
+/// the whitening factor is computed once instead of per group (same
+/// inputs, same bits, g× less Cholesky work than the pre-sweep code).
+pub fn grouped_decompose(w: &Matrix, perm: &[usize], group_size: usize,
+                         d_head: usize, m: Option<&Matrix>, ridge: f32)
+    -> Result<GroupedDecomp> {
     let h = w.cols / d_head;
     assert_eq!(perm.len(), h);
     assert_eq!(h % group_size, 0);
     let g = h / group_size;
-    let groups = pool::parallel_map(g, |j| -> Result<(Matrix, Matrix)> {
+    let wf = match m {
+        Some(m) => Some(whiten_factor(m, ridge)?),
+        None => None,
+    };
+    let s_t = wf.as_ref().map(|(s, _)| s.t());
+    let svds = pool::parallel_map(g, |j| {
         let members = &perm[j * group_size..(j + 1) * group_size];
         let cols: Vec<Matrix> = members
             .iter()
@@ -67,20 +75,40 @@ pub fn grouped_svd(w: &Matrix, perm: &[usize], group_size: usize, rank: usize,
             .collect();
         let refs: Vec<&Matrix> = cols.iter().collect();
         let wg = Matrix::hcat(&refs);
-        match m {
-            Some(m) => whitened_svd_lowrank(&wg, rank, m, ridge),
-            None => Ok(svd_lowrank(&wg, rank)),
+        match &s_t {
+            Some(st) => svd(&st.matmul(&wg)),
+            None => svd(&wg),
         }
     });
-    let mut ls: Vec<Matrix> = Vec::with_capacity(g);
-    let mut rs: Vec<Matrix> = Vec::with_capacity(g);
-    for group in groups {
-        let (lg, rg) = group?;
-        ls.push(lg);
-        rs.push(rg);
+    Ok(GroupedDecomp { s_inv_t: wf.map(|(_, s_inv_t)| s_inv_t), svds })
+}
+
+impl GroupedDecomp {
+    /// Truncate every group at `rank` and reassemble (L concatenated,
+    /// R per group) — the same Σ^½ split and un-whitening product
+    /// [`grouped_svd`] has always produced.
+    pub fn truncate(&self, rank: usize) -> (Matrix, Vec<Matrix>) {
+        let mut ls: Vec<Matrix> = Vec::with_capacity(self.svds.len());
+        let mut rs: Vec<Matrix> = Vec::with_capacity(self.svds.len());
+        for d in &self.svds {
+            let (l, r) = svd_truncate(d, rank);
+            ls.push(match &self.s_inv_t {
+                Some(s_inv_t) => s_inv_t.matmul(&l),
+                None => l,
+            });
+            rs.push(r);
+        }
+        let lrefs: Vec<&Matrix> = ls.iter().collect();
+        (Matrix::hcat(&lrefs), rs)
     }
-    let lrefs: Vec<&Matrix> = ls.iter().collect();
-    Ok((Matrix::hcat(&lrefs), rs))
+}
+
+/// Grouped-head decomposition over a head permutation (paper §3.2).
+/// Returns (L [d, g·rank] concatenated, R per group [rank, s·dh]).
+pub fn grouped_svd(w: &Matrix, perm: &[usize], group_size: usize, rank: usize,
+                   d_head: usize, m: Option<&Matrix>, ridge: f32)
+    -> Result<(Matrix, Vec<Matrix>)> {
+    Ok(grouped_decompose(w, perm, group_size, d_head, m, ridge)?.truncate(rank))
 }
 
 /// Data-aware reconstruction error tr((W-LR)ᵀ M (W-LR)) (paper Eq. 6), or

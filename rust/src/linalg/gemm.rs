@@ -34,15 +34,25 @@
 //! over [`crate::util::pool`] (`PALLAS_THREADS` sizing, serial inside an
 //! outer pool worker). Each element is still produced by exactly one worker
 //! running the identical scalar sequence, so threading never changes bits.
+//!
+//! # SIMD
+//!
+//! The MR×NR micro-kernel dispatches through [`super::simd::gemm_8x8`]
+//! (AVX2 / NEON / scalar, chosen at runtime — `PALLAS_SIMD=off` or
+//! `util::simd::set_force_scalar` pin the scalar twin). The vector path
+//! keeps one lane per output column: every lane runs the same ascending-`k`
+//! `mul`+`add` chain and the zero-skip tests the broadcast A scalar, so the
+//! kernel choice never changes bits either.
 
 use super::matrix::Matrix;
+use super::simd;
 use crate::util::pool;
 use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Rows per register tile.
-const MR: usize = 8;
+const MR: usize = simd::MR;
 /// Columns per register tile (one cache line of f32).
-const NR: usize = 8;
+const NR: usize = simd::NR;
 
 /// Below this `m·k·n`, packing costs more than it saves — use the seed loop.
 const SMALL_MKN: usize = 32 * 32 * 32;
@@ -107,21 +117,11 @@ pub fn gemm_tiled(a: &Matrix, b: &Matrix) -> Matrix {
             let panel = &bp[jp * k * NR..(jp + 1) * k * NR];
             let j0 = jp * NR;
             let jw = NR.min(n - j0);
+            // Micro-kernel: SIMD when the CPU tier allows it, the seed
+            // scalar loop otherwise — bit-identical either way (see
+            // `linalg::simd`).
             let mut acc = [[0.0f32; NR]; MR];
-            for kk in 0..k {
-                let av = &ap[kk * MR..kk * MR + MR];
-                let bv = &panel[kk * NR..kk * NR + NR];
-                for r in 0..MR {
-                    let x = av[r];
-                    if x == 0.0 {
-                        continue;
-                    }
-                    let accr = &mut acc[r];
-                    for c in 0..NR {
-                        accr[c] += x * bv[c];
-                    }
-                }
-            }
+            simd::gemm_8x8(&ap, panel, k, &mut acc);
             for r in 0..iw {
                 chunk[r * n + j0..r * n + j0 + jw].copy_from_slice(&acc[r][..jw]);
             }

@@ -4,6 +4,8 @@
 //! power-of-two divisor keeps the transform orthonormal, invertible and
 //! padding-free).
 
+use super::simd;
+
 pub const MAX_BLOCK: usize = 64;
 
 /// Largest power of two dividing n, capped at MAX_BLOCK.
@@ -13,18 +15,19 @@ pub fn block_size(n: usize) -> usize {
 }
 
 /// In-place FWHT of one chunk (Sylvester ordering), unnormalized.
+///
+/// Each stage's butterfly `(a, b) ← (a + b, a − b)` pairs element `i` with
+/// element `i + h` — independent lanes, so the pair loop dispatches through
+/// [`simd::butterfly`] (bit-identical to the seed scalar loop; wide stages
+/// run 8 f32 lanes per instruction on AVX2, 4 on NEON).
 fn fwht(chunk: &mut [f32]) {
     let n = chunk.len();
     let mut h = 1;
     while h < n {
         let mut start = 0;
         while start < n {
-            for i in start..start + h {
-                let a = chunk[i];
-                let c = chunk[i + h];
-                chunk[i] = a + c;
-                chunk[i + h] = a - c;
-            }
+            let (a, b) = chunk[start..start + 2 * h].split_at_mut(h);
+            simd::butterfly(a, b);
             start += 2 * h;
         }
         h *= 2;
@@ -38,14 +41,10 @@ pub fn forward(x: &mut [f32], signs: &[f32]) {
     let b = block_size(n);
     let norm = 1.0 / (b as f32).sqrt();
     for row in x.chunks_exact_mut(n) {
-        for (v, s) in row.iter_mut().zip(signs) {
-            *v *= s;
-        }
+        simd::mul_assign(row, signs);
         for chunk in row.chunks_exact_mut(b) {
             fwht(chunk);
-            for v in chunk.iter_mut() {
-                *v *= norm;
-            }
+            simd::scale_assign(chunk, norm);
         }
     }
 }
@@ -58,13 +57,9 @@ pub fn inverse(y: &mut [f32], signs: &[f32]) {
     for row in y.chunks_exact_mut(n) {
         for chunk in row.chunks_exact_mut(b) {
             fwht(chunk);
-            for v in chunk.iter_mut() {
-                *v *= norm;
-            }
+            simd::scale_assign(chunk, norm);
         }
-        for (v, s) in row.iter_mut().zip(signs) {
-            *v *= s;
-        }
+        simd::mul_assign(row, signs);
     }
 }
 

@@ -14,13 +14,37 @@
 //! results are bit-identical at any thread count, and bit-identical to the
 //! pre-tiling seed kernels (`rust/tests/parallel_determinism.rs` and the
 //! goldens assert both).
+//!
+//! # SIMD dispatch and bit-identity
+//!
+//! The innermost loops — the GEMM micro-kernel, the Jacobi rotation
+//! application, the FWHT butterfly and the Hadamard sign/normalization
+//! passes — route through the micro-kernels in [`simd`], which dispatch at
+//! runtime between three tiers (see [`crate::util::simd`]):
+//!
+//! * **avx2** — 256-bit lanes, detected via `is_x86_feature_detected!` on
+//!   x86_64;
+//! * **neon** — 128-bit lanes, always available on aarch64;
+//! * **scalar** — the seed loops, used on other hardware and whenever
+//!   `PALLAS_SIMD=off` (or `util::simd::set_force_scalar(true)`) pins them.
+//!
+//! The tier never changes results, by construction: the vector kernels
+//! only vectorize across **independent output lanes** (GEMM output
+//! columns, matrix rows under a rotation, butterfly pairs), each lane
+//! executing the seed's exact scalar operation sequence — separate `mul`
+//! and `add` (no FMA contraction), reductions kept serial per accumulator,
+//! and data-dependent skips tested on the same scalar the seed tests.
+//! `rust/tests/parallel_determinism.rs` pins SIMD == scalar == seed
+//! bitwise, and `scripts/check.sh` runs the whole suite a second time
+//! under `PALLAS_SIMD=off` so the scalar twins stay honest.
 
 pub mod gemm;
 pub mod hadamard;
 pub mod matrix;
+pub mod simd;
 pub mod solve;
 pub mod svd;
 
 pub use matrix::Matrix;
 pub use solve::{cholesky, invert_lower, ridge_solve, solve_lower, solve_lower_t};
-pub use svd::{svd, svd_lowrank, Svd};
+pub use svd::{svd, svd_lowrank, svd_truncate, Svd};

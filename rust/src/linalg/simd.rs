@@ -1,0 +1,506 @@
+//! Runtime-dispatched SIMD micro-kernels for the linalg hot loops, under
+//! the bit-identity contract.
+//!
+//! Every function here has a **scalar twin** (`*_scalar`) that is the
+//! literal seed loop, and a dispatching entry point that routes to an AVX2
+//! (x86_64) or NEON (aarch64) implementation when
+//! [`crate::util::simd::tier`] allows it. The vector implementations are
+//! restricted to *lane-independent* operations:
+//!
+//! * each output lane is produced by the same scalar IEEE-754 operation
+//!   sequence the twin runs (same order, same `mul`/`add`/`sub` split — no
+//!   FMA contraction, which would change rounding);
+//! * there are no horizontal reductions — anything that sums across lanes
+//!   (GEMM's `k` chain, the Jacobi column moments) keeps its serial
+//!   per-accumulator order and only ever vectorizes *across independent
+//!   outputs*;
+//! * data-dependent control flow (the GEMM zero-skip) tests the same
+//!   scalar the twin tests, and skips whole lane-rows, never lane subsets.
+//!
+//! Hence SIMD == scalar == seed, bit for bit, on every input including
+//! signed zeros and non-finite values — pinned by the in-module tests and
+//! the proptests in `rust/tests/parallel_determinism.rs`, and kept honest
+//! by `scripts/check.sh` running the suite under `PALLAS_SIMD=off`.
+//!
+//! Kernels:
+//!
+//! * [`gemm_8x8`] — the MR×NR=8×8 register-tile micro-kernel behind
+//!   [`super::gemm`]: one 8-lane vector per output row, broadcast A scalar,
+//!   ascending-`k` `mul`+`add` chain per lane, zero-skip on the broadcast
+//!   scalar. (Widening to NR=16 with two vectors per row was measured out:
+//!   with MR=8 it needs 16 accumulator vectors and evicts the broadcast /
+//!   B-panel registers on AVX2's 16-register file; 8×8 with one vector per
+//!   row is the sweet spot, so NR stays 8.)
+//! * [`rotate_f64`] — the Jacobi rotation applied to a contiguous column
+//!   pair (f64 lanes over rows; see `linalg::svd` for the transposed
+//!   layout that makes the columns contiguous).
+//! * [`butterfly`] — one FWHT stage over a split block half.
+//! * [`mul_assign`] / [`scale_assign`] — elementwise sign-multiply and
+//!   normalization used by the Hadamard transform and dequantization.
+
+use crate::util::simd::{tier, Tier};
+
+/// Micro-tile rows (must match `linalg::gemm::MR`).
+pub const MR: usize = 8;
+/// Micro-tile columns (must match `linalg::gemm::NR`).
+pub const NR: usize = 8;
+
+/// Below this slice length the per-call dispatch (tier load + match) and
+/// the vector-width check cost more than the lanes can recover, so the
+/// slice-taking dispatchers short-circuit to their scalar twins before
+/// consulting the tier (matters on the decode hot path, where the narrow
+/// FWHT stages issue many 1-4 element butterflies per token row).
+const DISPATCH_MIN: usize = 8;
+
+// ---------------------------------------------------------------- GEMM --
+
+/// Compute one MR×NR register tile: `acc[r][c] = Σ_k ap[k][r]·panel[k][c]`
+/// with the ascending-`k` chain and the seed's `a == 0.0` skip.
+///
+/// `ap` is the packed A tile `[k][MR]`, `panel` the packed B panel
+/// `[k][NR]`. `acc` is **overwritten** — every lane chain starts from
+/// `+0.0` regardless of `acc`'s contents, in both the vector paths and
+/// the scalar twin, so the tiers cannot diverge on a reused buffer.
+pub fn gemm_8x8(ap: &[f32], panel: &[f32], k: usize, acc: &mut [[f32; NR]; MR]) {
+    assert!(ap.len() >= k * MR && panel.len() >= k * NR, "packed operands too short");
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier() returns Avx2 only after is_x86_feature_detected!.
+        Tier::Avx2 => unsafe { avx2::gemm_8x8(ap, panel, k, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is mandatory on aarch64.
+        Tier::Neon => unsafe { neon::gemm_8x8(ap, panel, k, acc) },
+        _ => gemm_8x8_scalar(ap, panel, k, acc),
+    }
+}
+
+/// Scalar twin of [`gemm_8x8`] — the seed register-tile loop, preceded by
+/// the same zeroing the vector paths get from their zeroed accumulators.
+pub fn gemm_8x8_scalar(ap: &[f32], panel: &[f32], k: usize, acc: &mut [[f32; NR]; MR]) {
+    for row in acc.iter_mut() {
+        *row = [0.0; NR];
+    }
+    for kk in 0..k {
+        let av = &ap[kk * MR..kk * MR + MR];
+        let bv = &panel[kk * NR..kk * NR + NR];
+        for r in 0..MR {
+            let x = av[r];
+            if x == 0.0 {
+                continue;
+            }
+            let accr = &mut acc[r];
+            for c in 0..NR {
+                accr[c] += x * bv[c];
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------- Jacobi rotate --
+
+/// Apply the Givens rotation `(p, q) ← (c·p − s·q, s·p + c·q)` lane-wise
+/// over two equal-length contiguous columns.
+pub fn rotate_f64(p: &mut [f64], q: &mut [f64], c: f64, s: f64) {
+    // real assert: the vector paths trust the lengths (unlike the zip'd
+    // scalar twin, which would silently truncate)
+    assert_eq!(p.len(), q.len(), "rotate_f64: column length mismatch");
+    if p.len() < DISPATCH_MIN {
+        return rotate_f64_scalar(p, q, c, s);
+    }
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier() returns Avx2 only after is_x86_feature_detected!.
+        Tier::Avx2 => unsafe { avx2::rotate_f64(p, q, c, s) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is mandatory on aarch64.
+        Tier::Neon => unsafe { neon::rotate_f64(p, q, c, s) },
+        _ => rotate_f64_scalar(p, q, c, s),
+    }
+}
+
+/// Scalar twin of [`rotate_f64`] — the seed rotation body per element.
+pub fn rotate_f64_scalar(p: &mut [f64], q: &mut [f64], c: f64, s: f64) {
+    for (vp, vq) in p.iter_mut().zip(q.iter_mut()) {
+        let wp = *vp;
+        let wq = *vq;
+        *vp = c * wp - s * wq;
+        *vq = s * wp + c * wq;
+    }
+}
+
+// ------------------------------------------------------- FWHT butterfly --
+
+/// One FWHT stage over a block split in half: `(a, b) ← (a + b, a − b)`
+/// lane-wise.
+pub fn butterfly(a: &mut [f32], b: &mut [f32]) {
+    // real assert: the vector paths trust the lengths (unlike the zip'd
+    // scalar twin, which would silently truncate)
+    assert_eq!(a.len(), b.len(), "butterfly: half length mismatch");
+    if a.len() < DISPATCH_MIN {
+        return butterfly_scalar(a, b);
+    }
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier() returns Avx2 only after is_x86_feature_detected!.
+        Tier::Avx2 => unsafe { avx2::butterfly(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is mandatory on aarch64.
+        Tier::Neon => unsafe { neon::butterfly(a, b) },
+        _ => butterfly_scalar(a, b),
+    }
+}
+
+/// Scalar twin of [`butterfly`] — the seed butterfly per element pair.
+pub fn butterfly_scalar(a: &mut [f32], b: &mut [f32]) {
+    for (va, vb) in a.iter_mut().zip(b.iter_mut()) {
+        let x = *va;
+        let y = *vb;
+        *va = x + y;
+        *vb = x - y;
+    }
+}
+
+// -------------------------------------------------- elementwise helpers --
+
+/// `x[i] *= y[i]` lane-wise (Hadamard sign multiply).
+pub fn mul_assign(x: &mut [f32], y: &[f32]) {
+    // real assert: the vector paths trust the lengths (unlike the zip'd
+    // scalar twin, which would silently truncate)
+    assert_eq!(x.len(), y.len(), "mul_assign: length mismatch");
+    if x.len() < DISPATCH_MIN {
+        return mul_assign_scalar(x, y);
+    }
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier() returns Avx2 only after is_x86_feature_detected!.
+        Tier::Avx2 => unsafe { avx2::mul_assign(x, y) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is mandatory on aarch64.
+        Tier::Neon => unsafe { neon::mul_assign(x, y) },
+        _ => mul_assign_scalar(x, y),
+    }
+}
+
+/// Scalar twin of [`mul_assign`].
+pub fn mul_assign_scalar(x: &mut [f32], y: &[f32]) {
+    for (v, s) in x.iter_mut().zip(y) {
+        *v *= s;
+    }
+}
+
+/// `x[i] *= s` lane-wise (FWHT normalization, dequant scaling).
+pub fn scale_assign(x: &mut [f32], s: f32) {
+    if x.len() < DISPATCH_MIN {
+        return scale_assign_scalar(x, s);
+    }
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier() returns Avx2 only after is_x86_feature_detected!.
+        Tier::Avx2 => unsafe { avx2::scale_assign(x, s) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is mandatory on aarch64.
+        Tier::Neon => unsafe { neon::scale_assign(x, s) },
+        _ => scale_assign_scalar(x, s),
+    }
+}
+
+/// Scalar twin of [`scale_assign`].
+pub fn scale_assign_scalar(x: &mut [f32], s: f32) {
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+// -------------------------------------------------------- AVX2 kernels --
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    /// SAFETY: caller checked AVX2; `ap`/`panel` hold ≥ k·8 elements
+    /// (asserted by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_8x8(ap: &[f32], panel: &[f32], k: usize, acc: &mut [[f32; NR]; MR]) {
+        // One 8-lane accumulator per output row; lane c of row r runs the
+        // identical ascending-k mul+add chain the scalar twin runs for
+        // acc[r][c] (separate vmulps + vaddps — never FMA).
+        let mut accv = [_mm256_setzero_ps(); MR];
+        let bp = panel.as_ptr();
+        let apt = ap.as_ptr();
+        for kk in 0..k {
+            let bv = _mm256_loadu_ps(bp.add(kk * NR));
+            for (r, accr) in accv.iter_mut().enumerate() {
+                let x = *apt.add(kk * MR + r);
+                // Same skip the scalar twin takes: tests the broadcast A
+                // scalar, so whole lane-rows are skipped, never subsets.
+                if x == 0.0 {
+                    continue;
+                }
+                *accr = _mm256_add_ps(*accr, _mm256_mul_ps(_mm256_set1_ps(x), bv));
+            }
+        }
+        for (row, v) in acc.iter_mut().zip(accv) {
+            _mm256_storeu_ps(row.as_mut_ptr(), v);
+        }
+    }
+
+    /// SAFETY: caller checked AVX2; `p.len() == q.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn rotate_f64(p: &mut [f64], q: &mut [f64], c: f64, s: f64) {
+        let n = p.len();
+        let cv = _mm256_set1_pd(c);
+        let sv = _mm256_set1_pd(s);
+        let pp = p.as_mut_ptr();
+        let qp = q.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let wp = _mm256_loadu_pd(pp.add(i));
+            let wq = _mm256_loadu_pd(qp.add(i));
+            // lane-wise c·wp − s·wq and s·wp + c·wq, the exact scalar tree
+            let np = _mm256_sub_pd(_mm256_mul_pd(cv, wp), _mm256_mul_pd(sv, wq));
+            let nq = _mm256_add_pd(_mm256_mul_pd(sv, wp), _mm256_mul_pd(cv, wq));
+            _mm256_storeu_pd(pp.add(i), np);
+            _mm256_storeu_pd(qp.add(i), nq);
+            i += 4;
+        }
+        super::rotate_f64_scalar(&mut p[i..], &mut q[i..], c, s);
+    }
+
+    /// SAFETY: caller checked AVX2; `a.len() == b.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn butterfly(a: &mut [f32], b: &mut [f32]) {
+        let n = a.len();
+        let ap = a.as_mut_ptr();
+        let bp = b.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(ap.add(i));
+            let y = _mm256_loadu_ps(bp.add(i));
+            _mm256_storeu_ps(ap.add(i), _mm256_add_ps(x, y));
+            _mm256_storeu_ps(bp.add(i), _mm256_sub_ps(x, y));
+            i += 8;
+        }
+        super::butterfly_scalar(&mut a[i..], &mut b[i..]);
+    }
+
+    /// SAFETY: caller checked AVX2; `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul_assign(x: &mut [f32], y: &[f32]) {
+        let n = x.len();
+        let xp = x.as_mut_ptr();
+        let yp = y.as_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_mul_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+            _mm256_storeu_ps(xp.add(i), v);
+            i += 8;
+        }
+        super::mul_assign_scalar(&mut x[i..], &y[i..]);
+    }
+
+    /// SAFETY: caller checked AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_assign(x: &mut [f32], s: f32) {
+        let n = x.len();
+        let sv = _mm256_set1_ps(s);
+        let xp = x.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            _mm256_storeu_ps(xp.add(i), _mm256_mul_ps(_mm256_loadu_ps(xp.add(i)), sv));
+            i += 8;
+        }
+        super::scale_assign_scalar(&mut x[i..], s);
+    }
+}
+
+// -------------------------------------------------------- NEON kernels --
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{MR, NR};
+    use std::arch::aarch64::*;
+
+    /// SAFETY: NEON is mandatory on aarch64; `ap`/`panel` hold ≥ k·8
+    /// elements (asserted by the dispatcher).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gemm_8x8(ap: &[f32], panel: &[f32], k: usize, acc: &mut [[f32; NR]; MR]) {
+        // Two 4-lane accumulators per output row (aarch64 has 32 vector
+        // registers, so 16 accumulators + operands all stay resident).
+        let mut lo = [vdupq_n_f32(0.0); MR];
+        let mut hi = [vdupq_n_f32(0.0); MR];
+        let bp = panel.as_ptr();
+        let apt = ap.as_ptr();
+        for kk in 0..k {
+            let b0 = vld1q_f32(bp.add(kk * NR));
+            let b1 = vld1q_f32(bp.add(kk * NR + 4));
+            for r in 0..MR {
+                let x = *apt.add(kk * MR + r);
+                if x == 0.0 {
+                    continue;
+                }
+                let xv = vdupq_n_f32(x);
+                // separate mul + add — vfmaq would change rounding
+                lo[r] = vaddq_f32(lo[r], vmulq_f32(xv, b0));
+                hi[r] = vaddq_f32(hi[r], vmulq_f32(xv, b1));
+            }
+        }
+        for r in 0..MR {
+            vst1q_f32(acc[r].as_mut_ptr(), lo[r]);
+            vst1q_f32(acc[r].as_mut_ptr().add(4), hi[r]);
+        }
+    }
+
+    /// SAFETY: NEON is mandatory on aarch64; `p.len() == q.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn rotate_f64(p: &mut [f64], q: &mut [f64], c: f64, s: f64) {
+        let n = p.len();
+        let cv = vdupq_n_f64(c);
+        let sv = vdupq_n_f64(s);
+        let pp = p.as_mut_ptr();
+        let qp = q.as_mut_ptr();
+        let mut i = 0;
+        while i + 2 <= n {
+            let wp = vld1q_f64(pp.add(i));
+            let wq = vld1q_f64(qp.add(i));
+            let np = vsubq_f64(vmulq_f64(cv, wp), vmulq_f64(sv, wq));
+            let nq = vaddq_f64(vmulq_f64(sv, wp), vmulq_f64(cv, wq));
+            vst1q_f64(pp.add(i), np);
+            vst1q_f64(qp.add(i), nq);
+            i += 2;
+        }
+        super::rotate_f64_scalar(&mut p[i..], &mut q[i..], c, s);
+    }
+
+    /// SAFETY: NEON is mandatory on aarch64; `a.len() == b.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn butterfly(a: &mut [f32], b: &mut [f32]) {
+        let n = a.len();
+        let ap = a.as_mut_ptr();
+        let bp = b.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let x = vld1q_f32(ap.add(i));
+            let y = vld1q_f32(bp.add(i));
+            vst1q_f32(ap.add(i), vaddq_f32(x, y));
+            vst1q_f32(bp.add(i), vsubq_f32(x, y));
+            i += 4;
+        }
+        super::butterfly_scalar(&mut a[i..], &mut b[i..]);
+    }
+
+    /// SAFETY: NEON is mandatory on aarch64; `x.len() == y.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn mul_assign(x: &mut [f32], y: &[f32]) {
+        let n = x.len();
+        let xp = x.as_mut_ptr();
+        let yp = y.as_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            vst1q_f32(xp.add(i), vmulq_f32(vld1q_f32(xp.add(i)), vld1q_f32(yp.add(i))));
+            i += 4;
+        }
+        super::mul_assign_scalar(&mut x[i..], &y[i..]);
+    }
+
+    /// SAFETY: NEON is mandatory on aarch64.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale_assign(x: &mut [f32], s: f32) {
+        let n = x.len();
+        let sv = vdupq_n_f32(s);
+        let xp = x.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            vst1q_f32(xp.add(i), vmulq_f32(vld1q_f32(xp.add(i)), sv));
+            i += 4;
+        }
+        super::scale_assign_scalar(&mut x[i..], s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn bits_eq_f32(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    fn bits_eq_f64(a: &[f64], b: &[f64]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    /// Whatever tier is active, the dispatched kernels must match the
+    /// scalar twins bit for bit — including signed zeros and non-finites.
+    #[test]
+    fn gemm_tile_matches_scalar_twin_bitwise() {
+        let mut rng = Rng::new(71);
+        for k in [0usize, 1, 3, 17, 64] {
+            let mut ap: Vec<f32> = (0..k * MR).map(|_| rng.normal()).collect();
+            let mut panel: Vec<f32> = (0..k * NR).map(|_| rng.normal()).collect();
+            for v in ap.iter_mut() {
+                match rng.below(8) {
+                    0 => *v = 0.0,
+                    1 => *v = -0.0,
+                    _ => {}
+                }
+            }
+            for v in panel.iter_mut() {
+                match rng.below(16) {
+                    0 => *v = f32::NAN,
+                    1 => *v = f32::INFINITY,
+                    _ => {}
+                }
+            }
+            let mut want = [[0.0f32; NR]; MR];
+            gemm_8x8_scalar(&ap, &panel, k, &mut want);
+            let mut got = [[0.0f32; NR]; MR];
+            gemm_8x8(&ap, &panel, k, &mut got);
+            for r in 0..MR {
+                assert!(bits_eq_f32(&want[r], &got[r]), "k={k} row {r} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn rotate_matches_scalar_twin_bitwise() {
+        let mut rng = Rng::new(73);
+        for n in [0usize, 1, 2, 5, 16, 33] {
+            let p0: Vec<f64> = (0..n).map(|_| rng.normal() as f64).collect();
+            let q0: Vec<f64> = (0..n).map(|_| rng.normal() as f64).collect();
+            let (c, s) = (0.8f64, -0.6f64);
+            let (mut p1, mut q1) = (p0.clone(), q0.clone());
+            rotate_f64_scalar(&mut p1, &mut q1, c, s);
+            let (mut p2, mut q2) = (p0, q0);
+            rotate_f64(&mut p2, &mut q2, c, s);
+            assert!(bits_eq_f64(&p1, &p2) && bits_eq_f64(&q1, &q2), "n={n} diverged");
+        }
+    }
+
+    #[test]
+    fn butterfly_and_elementwise_match_scalar_twins_bitwise() {
+        let mut rng = Rng::new(79);
+        for n in [0usize, 1, 4, 8, 11, 32, 63] {
+            let a0: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let b0: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let (mut a1, mut b1) = (a0.clone(), b0.clone());
+            butterfly_scalar(&mut a1, &mut b1);
+            let (mut a2, mut b2) = (a0.clone(), b0.clone());
+            butterfly(&mut a2, &mut b2);
+            assert!(bits_eq_f32(&a1, &a2) && bits_eq_f32(&b1, &b2), "butterfly n={n}");
+
+            let mut m1 = a0.clone();
+            mul_assign_scalar(&mut m1, &b0);
+            let mut m2 = a0.clone();
+            mul_assign(&mut m2, &b0);
+            assert!(bits_eq_f32(&m1, &m2), "mul_assign n={n}");
+
+            let mut s1 = a0.clone();
+            scale_assign_scalar(&mut s1, 0.372);
+            let mut s2 = a0.clone();
+            scale_assign(&mut s2, 0.372);
+            assert!(bits_eq_f32(&s1, &s2), "scale_assign n={n}");
+        }
+    }
+}

@@ -6,8 +6,31 @@
 //! normalized columns the left vectors, and the accumulated rotations the
 //! right vectors. Accuracy is excellent for the well-conditioned projection
 //! matrices we decompose (d ≤ 640), and convergence is quadratic.
+//!
+//! # Layout and bit-identity
+//!
+//! The sweep works on the **transpose** of the seed's row-major buffer:
+//! row `j` of the working array is column `j` of A. That is a pure storage
+//! change — every arithmetic operation keeps the seed's order — but it
+//! turns both hot loops into contiguous passes:
+//!
+//! * the three column moments per pair (a_pp, a_qq, a_pq) fuse into one
+//!   pass over two contiguous rows with three accumulators (each keeps its
+//!   own ascending-`i` chain, so bits match the seed's three separate
+//!   `col_dot` passes; memory traffic drops 3×, and from stride-`n`
+//!   pick-outs to unit stride on top);
+//! * the rotation application is a lane-independent map over the same two
+//!   contiguous rows, dispatched through [`super::simd::rotate_f64`]
+//!   (f64 lanes over rows; each lane runs the seed's exact
+//!   `c·wp − s·wq` / `s·wp + c·wq` expression tree, so SIMD == scalar).
+//!
+//! The moment accumulations are *reductions* and therefore never
+//! vectorized — splitting them across lanes would re-associate the sums
+//! and change the rotation angles. Only the lane-independent application
+//! is SIMD.
 
 use super::matrix::Matrix;
+use super::simd;
 
 pub struct Svd {
     /// Left singular vectors, [m, k].
@@ -30,33 +53,54 @@ pub fn svd(a: &Matrix) -> Svd {
     }
 }
 
+/// Fused column moments: (Σ wp², Σ wq², Σ wp·wq) in one pass. Each
+/// accumulator keeps the seed `col_dot`'s ascending-`i` mul-then-add
+/// chain, so the fusion is bit-identical to three separate passes.
+fn col_moments(wp: &[f64], wq: &[f64]) -> (f64, f64, f64) {
+    let mut app = 0.0f64;
+    let mut aqq = 0.0f64;
+    let mut apq = 0.0f64;
+    for (a, b) in wp.iter().zip(wq) {
+        app += a * a;
+        aqq += b * b;
+        apq += a * b;
+    }
+    (app, aqq, apq)
+}
+
+/// Disjoint mutable rows `p < q` of a flat `[rows][len]` buffer.
+fn row_pair_mut(buf: &mut [f64], len: usize, p: usize, q: usize) -> (&mut [f64], &mut [f64]) {
+    debug_assert!(p < q);
+    let (head, tail) = buf.split_at_mut(q * len);
+    (&mut head[p * len..p * len + len], &mut tail[..len])
+}
+
 fn svd_tall(a: &Matrix) -> Svd {
     let (m, n) = (a.rows, a.cols);
     debug_assert!(m >= n);
     // Work in f64 for the rotations: the compression factors feed long
-    // matmul chains and f32 Jacobi loses ~2 digits.
-    let mut w: Vec<f64> = a.data.iter().map(|v| *v as f64).collect(); // [m, n] row-major
-    let mut v = vec![0.0f64; n * n];
-    for i in 0..n {
-        v[i * n + i] = 1.0;
-    }
-
-    let col_dot = |w: &[f64], p: usize, q: usize| -> f64 {
-        let mut s = 0.0;
-        for i in 0..m {
-            s += w[i * n + p] * w[i * n + q];
+    // matmul chains and f32 Jacobi loses ~2 digits. Row j of `wt` holds
+    // column j of A (see module docs).
+    let mut wt = vec![0.0f64; n * m];
+    for i in 0..m {
+        let arow = a.row(i);
+        for j in 0..n {
+            wt[j * m + i] = arow[j] as f64;
         }
-        s
-    };
+    }
+    // Row j of `vw` holds column j of the accumulated V.
+    let mut vw = vec![0.0f64; n * n];
+    for i in 0..n {
+        vw[i * n + i] = 1.0;
+    }
 
     let eps = 1e-12;
     for _sweep in 0..60 {
         let mut off = 0.0f64;
         for p in 0..n {
             for q in (p + 1)..n {
-                let app = col_dot(&w, p, p);
-                let aqq = col_dot(&w, q, q);
-                let apq = col_dot(&w, p, q);
+                let (wp, wq) = row_pair_mut(&mut wt, m, p, q);
+                let (app, aqq, apq) = col_moments(wp, wq);
                 off += apq * apq;
                 if apq.abs() <= eps * (app * aqq).sqrt() + 1e-300 {
                     continue;
@@ -65,18 +109,9 @@ fn svd_tall(a: &Matrix) -> Svd {
                 let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
                 let c = 1.0 / (1.0 + t * t).sqrt();
                 let s = c * t;
-                for i in 0..m {
-                    let wp = w[i * n + p];
-                    let wq = w[i * n + q];
-                    w[i * n + p] = c * wp - s * wq;
-                    w[i * n + q] = s * wp + c * wq;
-                }
-                for i in 0..n {
-                    let vp = v[i * n + p];
-                    let vq = v[i * n + q];
-                    v[i * n + p] = c * vp - s * vq;
-                    v[i * n + q] = s * vp + c * vq;
-                }
+                simd::rotate_f64(wp, wq, c, s);
+                let (vp, vq) = row_pair_mut(&mut vw, n, p, q);
+                simd::rotate_f64(vp, vq, c, s);
             }
         }
         if off.sqrt() < 1e-14 * (m as f64) {
@@ -87,9 +122,10 @@ fn svd_tall(a: &Matrix) -> Svd {
     // singular values = column norms; sort descending
     let mut sv: Vec<(f64, usize)> = (0..n)
         .map(|j| {
+            let col = &wt[j * m..(j + 1) * m];
             let mut s = 0.0;
-            for i in 0..m {
-                s += w[i * n + j] * w[i * n + j];
+            for v in col {
+                s += v * v;
             }
             (s.sqrt(), j)
         })
@@ -102,33 +138,42 @@ fn svd_tall(a: &Matrix) -> Svd {
     for (k, (sval, j)) in sv.iter().enumerate() {
         s_out.push(*sval as f32);
         let inv = if *sval > 1e-30 { 1.0 / sval } else { 0.0 };
-        for i in 0..m {
-            u[(i, k)] = (w[i * n + j] * inv) as f32;
+        let col = &wt[j * m..(j + 1) * m];
+        for (i, v) in col.iter().enumerate() {
+            u[(i, k)] = (v * inv) as f32;
         }
-        for i in 0..n {
-            vt[(k, i)] = v[i * n + j] as f32;
+        let vcol = &vw[j * n..(j + 1) * n];
+        for (i, v) in vcol.iter().enumerate() {
+            vt[(k, i)] = *v as f32;
         }
     }
     Svd { u, s: s_out, vt }
 }
 
-/// Truncated factorization W ≈ L·R with L = U_r Σ_r^½, R = Σ_r^½ V_rᵀ
-/// (paper Eq. 1). Mirrors python compress/svd.py::svd_lowrank.
-pub fn svd_lowrank(w: &Matrix, r: usize) -> (Matrix, Matrix) {
-    let d = svd(w);
+/// Truncate a computed decomposition to rank `r` with the Σ^½ split:
+/// L = U_r Σ_r^½, R = Σ_r^½ V_rᵀ. Shared by [`svd_lowrank`] and the
+/// rank-sweep path in `compress` (same loop either way, so sweeping ranks
+/// over one SVD is bit-identical to decomposing per rank).
+pub fn svd_truncate(d: &Svd, r: usize) -> (Matrix, Matrix) {
     let r = r.min(d.s.len());
-    let mut l = Matrix::zeros(w.rows, r);
-    let mut rm = Matrix::zeros(r, w.cols);
+    let mut l = Matrix::zeros(d.u.rows, r);
+    let mut rm = Matrix::zeros(r, d.vt.cols);
     for k in 0..r {
         let sq = d.s[k].max(0.0).sqrt();
-        for i in 0..w.rows {
+        for i in 0..d.u.rows {
             l[(i, k)] = d.u[(i, k)] * sq;
         }
-        for j in 0..w.cols {
+        for j in 0..d.vt.cols {
             rm[(k, j)] = sq * d.vt[(k, j)];
         }
     }
     (l, rm)
+}
+
+/// Truncated factorization W ≈ L·R with L = U_r Σ_r^½, R = Σ_r^½ V_rᵀ
+/// (paper Eq. 1). Mirrors python compress/svd.py::svd_lowrank.
+pub fn svd_lowrank(w: &Matrix, r: usize) -> (Matrix, Matrix) {
+    svd_truncate(&svd(w), r)
 }
 
 #[cfg(test)]
@@ -176,5 +221,100 @@ mod tests {
         let a = b.matmul(&c);
         let (l, r) = svd_lowrank(&a, 2);
         assert!(l.matmul(&r).max_abs_diff(&a) < 1e-4);
+    }
+
+    /// The fused-moment + SIMD-rotation sweep must match a literal port of
+    /// the seed's three-pass, strided implementation bit for bit.
+    #[test]
+    fn matches_seed_three_pass_implementation_bitwise() {
+        fn svd_tall_seed(a: &Matrix) -> Svd {
+            let (m, n) = (a.rows, a.cols);
+            let mut w: Vec<f64> = a.data.iter().map(|v| *v as f64).collect();
+            let mut v = vec![0.0f64; n * n];
+            for i in 0..n {
+                v[i * n + i] = 1.0;
+            }
+            let col_dot = |w: &[f64], p: usize, q: usize| -> f64 {
+                let mut s = 0.0;
+                for i in 0..m {
+                    s += w[i * n + p] * w[i * n + q];
+                }
+                s
+            };
+            let eps = 1e-12;
+            for _sweep in 0..60 {
+                let mut off = 0.0f64;
+                for p in 0..n {
+                    for q in (p + 1)..n {
+                        let app = col_dot(&w, p, p);
+                        let aqq = col_dot(&w, q, q);
+                        let apq = col_dot(&w, p, q);
+                        off += apq * apq;
+                        if apq.abs() <= eps * (app * aqq).sqrt() + 1e-300 {
+                            continue;
+                        }
+                        let tau = (aqq - app) / (2.0 * apq);
+                        let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                        let c = 1.0 / (1.0 + t * t).sqrt();
+                        let s = c * t;
+                        for i in 0..m {
+                            let wp = w[i * n + p];
+                            let wq = w[i * n + q];
+                            w[i * n + p] = c * wp - s * wq;
+                            w[i * n + q] = s * wp + c * wq;
+                        }
+                        for i in 0..n {
+                            let vp = v[i * n + p];
+                            let vq = v[i * n + q];
+                            v[i * n + p] = c * vp - s * vq;
+                            v[i * n + q] = s * vp + c * vq;
+                        }
+                    }
+                }
+                if off.sqrt() < 1e-14 * (m as f64) {
+                    break;
+                }
+            }
+            let mut sv: Vec<(f64, usize)> = (0..n)
+                .map(|j| {
+                    let mut s = 0.0;
+                    for i in 0..m {
+                        s += w[i * n + j] * w[i * n + j];
+                    }
+                    (s.sqrt(), j)
+                })
+                .collect();
+            sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            let mut u = Matrix::zeros(m, n);
+            let mut vt = Matrix::zeros(n, n);
+            let mut s_out = Vec::with_capacity(n);
+            for (k, (sval, j)) in sv.iter().enumerate() {
+                s_out.push(*sval as f32);
+                let inv = if *sval > 1e-30 { 1.0 / sval } else { 0.0 };
+                for i in 0..m {
+                    u[(i, k)] = (w[i * n + j] * inv) as f32;
+                }
+                for i in 0..n {
+                    vt[(k, i)] = v[i * n + j] as f32;
+                }
+            }
+            Svd { u, s: s_out, vt }
+        }
+
+        let bits_equal = |a: &Matrix, b: &Matrix| {
+            a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+        };
+        let mut rng = Rng::new(17);
+        for (m, n) in [(6, 4), (12, 12), (20, 7), (9, 1)] {
+            let a = rand_matrix(&mut rng, m, n);
+            let want = svd_tall_seed(&a);
+            let got = svd(&a);
+            assert!(
+                want.s.iter().zip(&got.s).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{m}x{n}: singular values diverged"
+            );
+            assert!(bits_equal(&want.u, &got.u), "{m}x{n}: U diverged");
+            assert!(bits_equal(&want.vt, &got.vt), "{m}x{n}: Vᵀ diverged");
+        }
     }
 }

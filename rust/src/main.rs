@@ -13,6 +13,7 @@
 //!   repro tables --table 1 --models tiny-mha --mc 32 --ppl-tokens 4096
 //!   repro tables --figure 2
 //!   repro compress --model tiny-mha --method recal --ratio 0.6
+//!   repro compress --model tiny-mha --method recal --sweep-keep 0.25,0.5,0.75
 
 use anyhow::{bail, Context, Result};
 use recalkv::artifacts::{Manifest, TensorArchive};
@@ -180,9 +181,11 @@ fn tables(dir: &str, args: &Args) -> Result<()> {
 /// Pure-rust compression over exported weights — proves the Algorithm-1
 /// mirror end-to-end without python. Layers run concurrently on the work
 /// pool (`--threads N` or `PALLAS_THREADS=N` to pin; outputs are
-/// bit-identical at any thread count).
+/// bit-identical at any thread count). `--sweep-keep a,b,c` sweeps several
+/// keep-ratios over ONE calibration/CKA/SVD pass per layer and prints a
+/// per-ratio summary table instead of writing an archive.
 fn compress(dir: &str, args: &Args) -> Result<()> {
-    use recalkv::compress::{compress_layers, LayerInputs, MethodCfg};
+    use recalkv::compress::{compress_layers, compress_layers_sweep, LayerInputs, MethodCfg};
     use recalkv::linalg::Matrix;
     use recalkv::util::pool;
     let man = Manifest::load(dir)?;
@@ -205,12 +208,23 @@ fn compress(dir: &str, args: &Args) -> Result<()> {
     let g = cfg.n_kv_heads / group_size;
     // simple uniform allocation for the CLI tool (Fisher allocation lives in
     // the python pipeline and the manifest)
+    let ranks_for_keep = |keep: f64| -> (usize, usize) {
+        let key_rank = (((cfg.kv_dim() as f64 * keep) / g as f64) as usize / 4 * 4).max(4);
+        let value_rank = ((cfg.kv_dim() as f64 * keep) as usize / 4 * 4).max(4);
+        (key_rank, value_rank)
+    };
     let keep = 1.0 - ratio;
-    let key_rank = (((cfg.kv_dim() as f64 * keep) / g as f64) as usize / 4 * 4).max(4);
-    let value_rank = ((cfg.kv_dim() as f64 * keep) as usize / 4 * 4).max(4);
-    println!("rust-mirror compressing {mname} method={method} ratio={ratio} \
-              key_rank/group={key_rank} value_rank={value_rank} \
-              threads={}", pool::num_threads());
+    let (key_rank, value_rank) = ranks_for_keep(keep);
+    match args.opt("sweep-keep") {
+        // the sweep ignores --ratio; don't print ranks it won't use
+        Some(s) => println!(
+            "rust-mirror compressing {mname} method={method} sweep-keep={s} \
+             threads={}", pool::num_threads()),
+        None => println!(
+            "rust-mirror compressing {mname} method={method} ratio={ratio} \
+             key_rank/group={key_rank} value_rank={value_rank} \
+             threads={}", pool::num_threads()),
+    }
     let to_m = |name: &str| -> Result<Matrix> {
         let t = weights.get(name)?;
         Ok(Matrix::from_vec(t.dims[0], t.dims[1], t.f32s.clone()))
@@ -246,6 +260,54 @@ fn compress(dir: &str, args: &Args) -> Result<()> {
             group_size, key_rank, value_rank,
         })
         .collect();
+    if let Some(sweep) = args.opt("sweep-keep") {
+        let keeps: Vec<f64> = sweep
+            .split(',')
+            .map(|s| s.trim().parse::<f64>())
+            .collect::<std::result::Result<_, _>>()
+            .context("bad --sweep-keep (expected comma-separated keep ratios)")?;
+        if keeps.is_empty() || keeps.iter().any(|k| !(*k > 0.0 && *k <= 1.0)) {
+            bail!("--sweep-keep ratios must be in (0, 1], got {sweep}");
+        }
+        let ranks: Vec<(usize, usize)> = keeps.iter().map(|&k| ranks_for_keep(k)).collect();
+        let t0 = std::time::Instant::now();
+        let per_layer = compress_layers_sweep(&inputs, mcfg, &ranks)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let mut table = recalkv::util::bench::Table::new(
+            &format!(
+                "{mname} {method} rank sweep ({} layers, one calibration pass)",
+                per_layer.len()
+            ),
+            &["keep", "key_rank", "value_rank", "mean key_err", "mean value_err pre",
+              "mean value_err post", "latent bytes/token (f32)"],
+        );
+        for (ri, &k) in keeps.iter().enumerate() {
+            let n = per_layer.len().max(1) as f64;
+            let key_err = per_layer.iter().map(|l| l[ri].key_error).sum::<f64>() / n;
+            let pre = per_layer.iter().map(|l| l[ri].value_error_pre).sum::<f64>() / n;
+            let post = per_layer.iter().map(|l| l[ri].value_error_post).sum::<f64>() / n;
+            let (kr, vr) = ranks[ri];
+            let bytes = 4 * (g * kr + vr) * per_layer.len();
+            table.row(vec![
+                format!("{k:.2}"),
+                kr.to_string(),
+                vr.to_string(),
+                format!("{key_err:.4e}"),
+                format!("{pre:.4e}"),
+                format!("{post:.4e}"),
+                bytes.to_string(),
+            ]);
+        }
+        table.print();
+        println!(
+            "swept {} keep-ratios over {} layers in {wall:.1}s on {} threads \
+             (CKA/whitening/SVD passes shared across ratios)",
+            keeps.len(),
+            per_layer.len(),
+            pool::num_threads()
+        );
+        return Ok(());
+    }
     let t0 = std::time::Instant::now();
     let layers = compress_layers(&inputs, mcfg)?;
     let wall = t0.elapsed().as_secs_f64();

@@ -1,7 +1,17 @@
 //! Symmetric per-token quantization with randomized Hadamard preprocessing —
 //! bit-identical to python/compile/quant_ref.py (asserted via goldens).
+//!
+//! The int4 unpack and the fused dequantize that feed decode staging
+//! (`KvCache::stage_rows`) dispatch through [`crate::util::simd`]: AVX2 /
+//! NEON decode 16 nibbles per step into sign-extended i32 lanes and scale
+//! them in-register. Every lane runs the scalar path's exact sequence
+//! (exact int→f32 conversion, one `mul` by the broadcast scale), so the
+//! tier never changes bits; `PALLAS_SIMD=off` pins the scalar loops. Int3
+//! packs 5 codes per u16 word — that layout has no clean lane mapping, so
+//! it stays scalar (it is also the minority cache format).
 
 use crate::linalg::hadamard;
+use crate::util::simd::{tier, Tier};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum QuantKind {
@@ -85,8 +95,51 @@ fn int3_code(word: u16, k: usize) -> i32 {
 /// Unpack int4 codes into a caller-provided slice — the allocation-free
 /// path the decode-hot staging gather relies on (`out.len()` codes).
 pub fn unpack_int4_into(packed: &[u8], out: &mut [i32]) {
+    assert!(packed.len() >= out.len().div_ceil(2), "packed int4 buffer too short");
+    if out.len() < 16 {
+        // below one 16-code vector step the dispatch is pure overhead
+        return unpack_int4_into_scalar(packed, out);
+    }
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier() returns Avx2 only after is_x86_feature_detected!.
+        Tier::Avx2 => unsafe { int4_avx2::unpack(packed, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is mandatory on aarch64.
+        Tier::Neon => unsafe { int4_neon::unpack(packed, out) },
+        _ => unpack_int4_into_scalar(packed, out),
+    }
+}
+
+/// Scalar twin of [`unpack_int4_into`] — the seed loop.
+pub fn unpack_int4_into_scalar(packed: &[u8], out: &mut [i32]) {
     for (i, o) in out.iter_mut().enumerate() {
         *o = int4_code(packed, i);
+    }
+}
+
+/// Fused int4 decode: codes → `code as f32 * scale`, straight into `out`.
+fn dequant_int4_into(packed: &[u8], scale: f32, out: &mut [f32]) {
+    assert!(packed.len() >= out.len().div_ceil(2), "packed int4 buffer too short");
+    if out.len() < 16 {
+        // below one 16-code vector step the dispatch is pure overhead
+        return dequant_int4_scalar(packed, scale, out);
+    }
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier() returns Avx2 only after is_x86_feature_detected!.
+        Tier::Avx2 => unsafe { int4_avx2::dequant(packed, scale, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is mandatory on aarch64.
+        Tier::Neon => unsafe { int4_neon::dequant(packed, scale, out) },
+        _ => dequant_int4_scalar(packed, scale, out),
+    }
+}
+
+/// Scalar twin of [`dequant_int4_into`] — the seed fused-dequant loop.
+fn dequant_int4_scalar(packed: &[u8], scale: f32, out: &mut [f32]) {
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = int4_code(packed, i) as f32 * scale;
     }
 }
 
@@ -160,9 +213,7 @@ pub fn dequantize(row: &QuantizedRow, signs: &[f32], out: &mut [f32]) {
             }
         }
         QuantKind::Int4 => {
-            for (i, o) in out.iter_mut().enumerate() {
-                *o = int4_code(&row.packed, i) as f32 * row.scale;
-            }
+            dequant_int4_into(&row.packed, row.scale, out);
             hadamard::inverse(out, signs);
         }
         QuantKind::Int3 => {
@@ -174,6 +225,134 @@ pub fn dequantize(row: &QuantizedRow, signs: &[f32], out: &mut [f32]) {
                 }
             }
             hadamard::inverse(out, signs);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod int4_avx2 {
+    use std::arch::x86_64::*;
+
+    /// Decode 16 consecutive int4 codes (8 bytes at `packed`) into two
+    /// i32×8 vectors in code order, sign-extended.
+    ///
+    /// SAFETY: caller checked AVX2 and that 8 bytes are readable.
+    #[target_feature(enable = "avx2")]
+    unsafe fn decode16(packed: *const u8) -> (__m256i, __m256i) {
+        let bytes = _mm_loadl_epi64(packed as *const __m128i);
+        let x = _mm256_cvtepu8_epi32(bytes); // lane j = byte j (codes 2j, 2j+1)
+        // low nibble → bits 28..31, arithmetic shift back = sign-extend
+        let lo = _mm256_srai_epi32::<28>(_mm256_slli_epi32::<28>(x));
+        // high nibble: bits 4..7 → 28..31 (the low nibble falls off the top)
+        let hi = _mm256_srai_epi32::<28>(_mm256_slli_epi32::<24>(x));
+        // interleave even (lo) and odd (hi) codes back into code order
+        let ab = _mm256_unpacklo_epi32(lo, hi);
+        let cd = _mm256_unpackhi_epi32(lo, hi);
+        let first = _mm256_permute2x128_si256::<0x20>(ab, cd);
+        let second = _mm256_permute2x128_si256::<0x31>(ab, cd);
+        (first, second)
+    }
+
+    /// SAFETY: caller checked AVX2 and `packed.len() ≥ ⌈out.len()/2⌉`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant(packed: &[u8], scale: f32, out: &mut [f32]) {
+        let n = out.len();
+        let sv = _mm256_set1_ps(scale);
+        let op = out.as_mut_ptr();
+        let mut i = 0;
+        while i + 16 <= n {
+            let (a, b) = decode16(packed.as_ptr().add(i / 2));
+            // exact int→f32 conversion then one mul — the scalar sequence
+            _mm256_storeu_ps(op.add(i), _mm256_mul_ps(_mm256_cvtepi32_ps(a), sv));
+            _mm256_storeu_ps(op.add(i + 8), _mm256_mul_ps(_mm256_cvtepi32_ps(b), sv));
+            i += 16;
+        }
+        for (j, o) in out[i..].iter_mut().enumerate() {
+            *o = super::int4_code(packed, i + j) as f32 * scale;
+        }
+    }
+
+    /// SAFETY: caller checked AVX2 and `packed.len() ≥ ⌈out.len()/2⌉`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack(packed: &[u8], out: &mut [i32]) {
+        let n = out.len();
+        let op = out.as_mut_ptr();
+        let mut i = 0;
+        while i + 16 <= n {
+            let (a, b) = decode16(packed.as_ptr().add(i / 2));
+            _mm256_storeu_si256(op.add(i) as *mut __m256i, a);
+            _mm256_storeu_si256(op.add(i + 8) as *mut __m256i, b);
+            i += 16;
+        }
+        for (j, o) in out[i..].iter_mut().enumerate() {
+            *o = super::int4_code(packed, i + j);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod int4_neon {
+    use std::arch::aarch64::*;
+
+    /// Decode 16 consecutive int4 codes (8 bytes at `packed`) into four
+    /// i32×4 vectors in code order, sign-extended.
+    ///
+    /// SAFETY: caller guarantees 8 bytes are readable.
+    #[target_feature(enable = "neon")]
+    unsafe fn decode16(packed: *const u8) -> (int32x4_t, int32x4_t, int32x4_t, int32x4_t) {
+        let w = vreinterpretq_s16_u16(vmovl_u8(vld1_u8(packed))); // 8 lanes, one byte each
+        let lo = vandq_s16(w, vdupq_n_s16(0xF));
+        let hi = vandq_s16(vshrq_n_s16::<4>(w), vdupq_n_s16(0xF));
+        // sign-extend 4-bit values: bits 0..3 → 12..15, arithmetic back
+        let lo = vshrq_n_s16::<12>(vshlq_n_s16::<12>(lo));
+        let hi = vshrq_n_s16::<12>(vshlq_n_s16::<12>(hi));
+        // interleave even (lo) and odd (hi) codes back into code order
+        let a = vzip1q_s16(lo, hi); // codes 0..7
+        let b = vzip2q_s16(lo, hi); // codes 8..15
+        (
+            vmovl_s16(vget_low_s16(a)),
+            vmovl_s16(vget_high_s16(a)),
+            vmovl_s16(vget_low_s16(b)),
+            vmovl_s16(vget_high_s16(b)),
+        )
+    }
+
+    /// SAFETY: `packed.len() ≥ ⌈out.len()/2⌉`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dequant(packed: &[u8], scale: f32, out: &mut [f32]) {
+        let n = out.len();
+        let sv = vdupq_n_f32(scale);
+        let op = out.as_mut_ptr();
+        let mut i = 0;
+        while i + 16 <= n {
+            let (a, b, c, d) = decode16(packed.as_ptr().add(i / 2));
+            vst1q_f32(op.add(i), vmulq_f32(vcvtq_f32_s32(a), sv));
+            vst1q_f32(op.add(i + 4), vmulq_f32(vcvtq_f32_s32(b), sv));
+            vst1q_f32(op.add(i + 8), vmulq_f32(vcvtq_f32_s32(c), sv));
+            vst1q_f32(op.add(i + 12), vmulq_f32(vcvtq_f32_s32(d), sv));
+            i += 16;
+        }
+        for (j, o) in out[i..].iter_mut().enumerate() {
+            *o = super::int4_code(packed, i + j) as f32 * scale;
+        }
+    }
+
+    /// SAFETY: `packed.len() ≥ ⌈out.len()/2⌉`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn unpack(packed: &[u8], out: &mut [i32]) {
+        let n = out.len();
+        let op = out.as_mut_ptr();
+        let mut i = 0;
+        while i + 16 <= n {
+            let (a, b, c, d) = decode16(packed.as_ptr().add(i / 2));
+            vst1q_s32(op.add(i), a);
+            vst1q_s32(op.add(i + 4), b);
+            vst1q_s32(op.add(i + 8), c);
+            vst1q_s32(op.add(i + 12), d);
+            i += 16;
+        }
+        for (j, o) in out[i..].iter_mut().enumerate() {
+            *o = super::int4_code(packed, i + j);
         }
     }
 }
@@ -241,6 +420,35 @@ mod tests {
                 assert!(
                     fused.iter().zip(&two_step).all(|(a, b)| a.to_bits() == b.to_bits()),
                     "{kind:?} n={n} diverged"
+                );
+            }
+        }
+    }
+
+    /// Whatever tier is active, the dispatched int4 decode must match the
+    /// scalar twins bit for bit — across vector-width tails and every
+    /// nibble value (both sign cases).
+    #[test]
+    fn int4_lanes_match_scalar_twin_bitwise() {
+        let mut rng = Rng::new(41);
+        for n in [1usize, 7, 15, 16, 17, 31, 48, 63, 128] {
+            // full nibble range incl. -8 (0x8), the most-negative
+            // sign-extension case quantize itself never emits
+            let codes: Vec<i32> = (0..n).map(|_| rng.below(16) as i32 - 8).collect();
+            let packed = pack_int4(&codes);
+            let mut want_i = vec![0i32; n];
+            unpack_int4_into_scalar(&packed, &mut want_i);
+            let mut got_i = vec![0i32; n];
+            unpack_int4_into(&packed, &mut got_i);
+            assert_eq!(want_i, got_i, "unpack n={n}");
+            for scale in [0.0317f32, 1.0, f32::NAN] {
+                let mut want_f = vec![0.0f32; n];
+                dequant_int4_scalar(&packed, scale, &mut want_f);
+                let mut got_f = vec![0.0f32; n];
+                dequant_int4_into(&packed, scale, &mut got_f);
+                assert!(
+                    want_f.iter().zip(&got_f).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "dequant n={n} scale={scale}"
                 );
             }
         }

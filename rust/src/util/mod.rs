@@ -1,8 +1,9 @@
 //! Small self-contained substrates (no external crates are available in this
 //! offline environment beyond `xla`/`anyhow`): JSON, a deterministic RNG
 //! shared with python, CLI parsing, a criterion-style bench harness, a
-//! tiny property-testing helper, and the scoped-thread work pool the
-//! offline compression pipeline fans out on.
+//! tiny property-testing helper, the scoped-thread work pool the offline
+//! compression pipeline fans out on, and the runtime CPU-feature dispatch
+//! behind the SIMD micro-kernels.
 
 pub mod bench;
 pub mod cli;
@@ -10,3 +11,4 @@ pub mod json;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod simd;

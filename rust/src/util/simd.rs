@@ -1,0 +1,156 @@
+//! Runtime CPU-feature dispatch for the SIMD micro-kernels in
+//! [`crate::linalg::simd`] and the int4 lane decoder in
+//! [`crate::quant::pertoken`].
+//!
+//! The kernels themselves live next to the code they accelerate; this
+//! module only answers one question — *which tier may run right now* —
+//! from, in priority order:
+//!
+//! 1. [`set_force_scalar`] — a process-global runtime override mirroring
+//!    `linalg::gemm::set_force_naive` (benches and the bitwise
+//!    SIMD-vs-scalar tests use it; `false` restores dispatch),
+//! 2. the `PALLAS_SIMD` environment variable, read once per process:
+//!    `off` / `0` / `scalar` / `none` pin the scalar twins, anything else
+//!    (including unset / `auto`) enables detection,
+//! 3. hardware detection: AVX2 on x86_64 (via `is_x86_feature_detected!`),
+//!    NEON on aarch64 (mandatory in the base ISA, so always available),
+//!    scalar everywhere else.
+//!
+//! # Why dispatch never changes results
+//!
+//! Every SIMD kernel behind this switch is built from *lane-independent*
+//! operations only — each output element is produced by the same scalar
+//! IEEE-754 operation sequence the scalar twin runs, just with several
+//! independent elements in flight per instruction. There are no horizontal
+//! reductions, no FMA contraction, and no re-association, so the tier
+//! choice (and therefore the host CPU) never changes output bits. The
+//! scalar twins are not a degraded approximation; they are the same
+//! function. `rust/tests/parallel_determinism.rs` pins this bitwise, and
+//! `scripts/check.sh` runs the whole suite under `PALLAS_SIMD=off` so the
+//! scalar paths cannot rot on machines where AVX2/NEON masks them.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// Instruction-set tier the dispatching kernels may use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Scalar twins only (also the fallback on unsupported hardware).
+    Scalar,
+    /// 256-bit AVX2 lanes on x86_64.
+    Avx2,
+    /// 128-bit NEON lanes on aarch64.
+    Neon,
+}
+
+impl Tier {
+    /// Stable name for logs and the bench JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Avx2 => "avx2",
+            Tier::Neon => "neon",
+        }
+    }
+}
+
+/// Runtime override: `true` routes every kernel to its scalar twin, exactly
+/// like `PALLAS_SIMD=off`, but togglable mid-process (benches, tests).
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Force (or un-force, with `false`) the scalar twins for this process.
+pub fn set_force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::SeqCst);
+}
+
+/// Tier from environment + hardware, ignoring the runtime override.
+fn detected() -> Tier {
+    static T: OnceLock<Tier> = OnceLock::new();
+    *T.get_or_init(|| {
+        let env = std::env::var("PALLAS_SIMD").ok();
+        resolve(env.as_deref(), hardware_tier())
+    })
+}
+
+/// Pure dispatch decision (exposed so tests can pin the routing without
+/// racing the process-wide `PALLAS_SIMD` cache): the tier that results
+/// from a given env value on hardware supporting `hw`.
+pub fn resolve(env: Option<&str>, hw: Tier) -> Tier {
+    match env {
+        Some(v) if env_means_off(v) => Tier::Scalar,
+        _ => hw,
+    }
+}
+
+/// `PALLAS_SIMD` values that pin the scalar twins.
+pub fn env_means_off(v: &str) -> bool {
+    matches!(v.trim().to_ascii_lowercase().as_str(), "off" | "0" | "scalar" | "none")
+}
+
+/// What the host CPU supports (no env / override consulted).
+pub fn hardware_tier() -> Tier {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            Tier::Avx2
+        } else {
+            Tier::Scalar
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON (ASIMD) is a mandatory part of AArch64; no runtime probe
+        // needed.
+        Tier::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Tier::Scalar
+    }
+}
+
+/// The tier kernels must use *right now* (override > env > hardware).
+pub fn tier() -> Tier {
+    if FORCE_SCALAR.load(Ordering::Relaxed) {
+        Tier::Scalar
+    } else {
+        detected()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_values_parse() {
+        for v in ["off", "0", "scalar", "none", " OFF ", "Scalar"] {
+            assert!(env_means_off(v), "{v:?} should mean off");
+        }
+        for v in ["auto", "", "on", "avx2", "1"] {
+            assert!(!env_means_off(v), "{v:?} should not mean off");
+        }
+    }
+
+    // NOTE: no test in the lib binary toggles FORCE_SCALAR — the lib
+    // crate's SIMD-vs-scalar equivalence tests run concurrently in this
+    // process and a mid-flight toggle would silently turn them into
+    // scalar-vs-scalar comparisons. The override routing is pinned by
+    // `pallas_simd_off_routes_to_scalar_twins` in
+    // rust/tests/parallel_determinism.rs, which serializes every toggle
+    // behind its POOL_LOCK (a separate test process).
+
+    #[test]
+    fn resolve_prefers_env_off_over_hardware() {
+        for hw in [Tier::Scalar, Tier::Avx2, Tier::Neon] {
+            assert_eq!(resolve(Some("off"), hw), Tier::Scalar);
+            assert_eq!(resolve(None, hw), hw);
+            assert_eq!(resolve(Some("auto"), hw), hw);
+        }
+    }
+
+    #[test]
+    fn hardware_tier_is_stable() {
+        assert_eq!(hardware_tier(), hardware_tier());
+    }
+}

@@ -1,28 +1,35 @@
 //! Bit-identity guarantees of the parallel offline pipeline.
 //!
-//! The work pool (`util::pool`) and the tiled GEMM (`linalg::gemm`) promise
+//! The work pool (`util::pool`), the tiled GEMM (`linalg::gemm`) and the
+//! SIMD micro-kernels (`linalg::simd`, dispatched by `util::simd`) promise
 //! that thread count and kernel choice never change output bits. These
 //! tests pin that promise: the tiled kernel against the seed scalar loop
-//! over random shapes (including k = 0 and 1×1), and the parallel
-//! pipeline / CKA / grouped-SVD paths against forced single-thread runs
+//! over random shapes (including k = 0 and 1×1), SIMD dispatch against the
+//! forced-scalar twins over GEMM / FWHT / quantization (tile tails, signed
+//! zeros, non-finite values included), and the parallel pipeline / CKA /
+//! grouped-SVD paths against forced single-thread runs
 //! (`PALLAS_THREADS=1` equivalent via `pool::set_threads(1)`), in f32 and
 //! quantized cache configurations.
 
-use recalkv::compress::{cka, compress_layer, compress_layers, svdc, LayerInputs, MethodCfg};
+use recalkv::compress::{
+    cka, compress_layer, compress_layer_ranks, compress_layers, svdc, LayerInputs, MethodCfg,
+};
 use recalkv::kvcache::{CacheConfig, KvCache};
 use recalkv::linalg::gemm::gemm_tiled;
+use recalkv::linalg::hadamard::{forward, inverse, signs_from_seed};
 use recalkv::linalg::Matrix;
 use recalkv::prop_assert;
-use recalkv::quant::QuantKind;
+use recalkv::quant::{dequantize, quantize, QuantKind};
 use recalkv::util::pool;
 use recalkv::util::prop::check;
 use recalkv::util::rng::Rng;
+use recalkv::util::simd;
 use std::sync::Mutex;
 
-/// Serializes tests that touch the process-global pool override. (Thread
-/// count never changes results — that is what these tests prove — but the
-/// forced single-thread halves of the comparisons must not race another
-/// test's override.)
+/// Serializes tests that touch the process-global pool or SIMD overrides.
+/// (Neither override changes results — that is what these tests prove —
+/// but the forced halves of the comparisons must not race another test's
+/// override.)
 static POOL_LOCK: Mutex<()> = Mutex::new(());
 
 fn bits_equal(a: &Matrix, b: &Matrix) -> bool {
@@ -211,6 +218,165 @@ fn pipeline_parallel_matches_single_thread_f32_and_quantized() {
             assert!(
                 staged[0].iter().zip(&staged[1]).all(|(a, b)| a.to_bits() == b.to_bits()),
                 "{method} {quant:?}: staged images diverged"
+            );
+        }
+    }
+    pool::set_threads(0);
+}
+
+// ----------------------------- SIMD vs scalar ----------------------------
+
+fn bits_equal_slice(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// GEMM over random shapes (tile tails included), with planted signed
+/// zeros in A and non-finite values in B: the SIMD dispatch, the
+/// forced-scalar twin and the seed naive loop must agree bit for bit —
+/// the zero-skip tests the broadcast A scalar and NaN/inf propagate
+/// per lane, so even the pathological inputs cannot diverge.
+#[test]
+fn simd_gemm_matches_scalar_and_naive_bitwise() {
+    let _g = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    check("simd_gemm_equivalence", 30, |ctx| {
+        let m = ctx.usize_in(1, 40);
+        let k = ctx.usize_in(1, 40);
+        let n = ctx.usize_in(1, 40);
+        let mut a = Matrix::from_vec(m, k, ctx.f32_vec(m * k, 1.0));
+        for v in a.data.iter_mut() {
+            match ctx.rng.below(8) {
+                0 => *v = 0.0,
+                1 => *v = -0.0,
+                _ => {}
+            }
+        }
+        let mut b = Matrix::from_vec(k, n, ctx.f32_vec(k * n, 1.0));
+        for v in b.data.iter_mut() {
+            match ctx.rng.below(24) {
+                0 => *v = f32::NAN,
+                1 => *v = f32::INFINITY,
+                2 => *v = f32::NEG_INFINITY,
+                _ => {}
+            }
+        }
+        let naive = a.matmul_naive(&b);
+        simd::set_force_scalar(true);
+        let scalar = gemm_tiled(&a, &b);
+        simd::set_force_scalar(false);
+        let vector = gemm_tiled(&a, &b);
+        prop_assert!(bits_equal_slice(&naive.data, &scalar.data), "{m}x{k}x{n}: scalar != naive");
+        prop_assert!(bits_equal_slice(&scalar.data, &vector.data), "{m}x{k}x{n}: simd != scalar");
+        Ok(())
+    });
+}
+
+/// FWHT forward/inverse and the full quantize→dequantize round (which runs
+/// the Hadamard, the int4 lane decode and the scale multiply through the
+/// dispatch layer): SIMD on vs forced scalar, bit for bit, over block
+/// sizes with and without vector-width tails.
+#[test]
+fn simd_fwht_and_dequant_match_scalar_bitwise() {
+    let _g = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    check("simd_fwht_dequant_equivalence", 25, |ctx| {
+        let n = 4 * ctx.usize_in(1, 32); // multiples of 4, FWHT blocks 4..64
+        let signs = signs_from_seed(ctx.seed, n);
+        let rows = ctx.f32_vec(3 * n, 1.5);
+
+        simd::set_force_scalar(true);
+        let mut fwd_s = rows.clone();
+        forward(&mut fwd_s, &signs);
+        let mut inv_s = fwd_s.clone();
+        inverse(&mut inv_s, &signs);
+        simd::set_force_scalar(false);
+        let mut fwd_v = rows.clone();
+        forward(&mut fwd_v, &signs);
+        let mut inv_v = fwd_v.clone();
+        inverse(&mut inv_v, &signs);
+        prop_assert!(bits_equal_slice(&fwd_s, &fwd_v), "n={n}: forward diverged");
+        prop_assert!(bits_equal_slice(&inv_s, &inv_v), "n={n}: inverse diverged");
+
+        for kind in [QuantKind::Int4, QuantKind::Int3] {
+            let x = &rows[..n];
+            simd::set_force_scalar(true);
+            let q_s = quantize(x, &signs, kind);
+            let mut d_s = vec![0.0f32; n];
+            dequantize(&q_s, &signs, &mut d_s);
+            simd::set_force_scalar(false);
+            let q_v = quantize(x, &signs, kind);
+            let mut d_v = vec![0.0f32; n];
+            dequantize(&q_v, &signs, &mut d_v);
+            prop_assert!(
+                q_s.packed == q_v.packed && q_s.scale.to_bits() == q_v.scale.to_bits(),
+                "{kind:?} n={n}: quantized codes diverged"
+            );
+            prop_assert!(bits_equal_slice(&d_s, &d_v), "{kind:?} n={n}: dequant diverged");
+        }
+        Ok(())
+    });
+}
+
+/// The dispatch policy itself: every documented `PALLAS_SIMD=off` spelling
+/// routes to the scalar tier regardless of hardware, anything else falls
+/// through to detection, and the runtime override used by benches and the
+/// tests above forces scalar mid-process.
+#[test]
+fn pallas_simd_off_routes_to_scalar_twins() {
+    use recalkv::util::simd::{hardware_tier, resolve, set_force_scalar, tier, Tier};
+    for v in ["off", "0", "scalar", "none", "OFF"] {
+        for hw in [Tier::Scalar, Tier::Avx2, Tier::Neon] {
+            assert_eq!(resolve(Some(v), hw), Tier::Scalar, "PALLAS_SIMD={v} on {hw:?}");
+        }
+    }
+    for v in [None, Some("auto"), Some("on"), Some("")] {
+        assert_eq!(resolve(v, hardware_tier()), hardware_tier(), "PALLAS_SIMD={v:?}");
+    }
+    let _g = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    set_force_scalar(true);
+    assert_eq!(tier(), Tier::Scalar, "runtime override ignored");
+    set_force_scalar(false);
+    assert_eq!(tier(), resolve(std::env::var("PALLAS_SIMD").ok().as_deref(), hardware_tier()));
+}
+
+/// `compress_layer_ranks` (the sweep path) must reproduce standalone
+/// `compress_layer` runs bit for bit at every rank in the sweep — the
+/// shared CKA/SVD pass never sees the rank.
+#[test]
+fn rank_sweep_matches_standalone_runs_bitwise() {
+    let _g = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    pool::set_threads(2);
+    let (wq, wk, wv, wo, x, m) = layer_fixture(109);
+    let mk_inp = |key_rank: usize, value_rank: usize| LayerInputs {
+        w_q: &wq, w_k: &wk, w_v: &wv, w_o: &wo, m: &m, x_sample: &x,
+        n_heads: 4, n_kv_heads: 4, d_head: 4, group_size: 2,
+        key_rank, value_rank,
+    };
+    let ranks = [(2usize, 4usize), (4, 8), (6, 12)];
+    for method in ["recal", "palu"] {
+        let cfg = MethodCfg::from_name(method).unwrap();
+        let swept = compress_layer_ranks(&mk_inp(0, 0), cfg, &ranks).unwrap();
+        assert_eq!(swept.len(), ranks.len());
+        for (s, &(kr, vr)) in swept.iter().zip(&ranks) {
+            let solo = compress_layer(&mk_inp(kr, vr), cfg).unwrap();
+            assert_eq!(solo.kv_perm, s.kv_perm, "{method} r=({kr},{vr}): perm");
+            for (name, a, b) in [
+                ("l_k", &solo.l_k, &s.l_k),
+                ("l_v", &solo.l_v, &s.l_v),
+                ("wo_fused", &solo.wo_fused, &s.wo_fused),
+                ("wq_reordered", &solo.wq_reordered, &s.wq_reordered),
+            ] {
+                assert!(
+                    bits_equal(a, b),
+                    "{method} r=({kr},{vr}): {name} diverged between sweep and solo"
+                );
+            }
+            for (a, b) in solo.r_k.iter().zip(&s.r_k) {
+                assert!(bits_equal(a, b), "{method} r=({kr},{vr}): r_k diverged");
+            }
+            assert_eq!(solo.key_error.to_bits(), s.key_error.to_bits(), "{method} ({kr},{vr})");
+            assert_eq!(
+                solo.value_error_post.to_bits(),
+                s.value_error_post.to_bits(),
+                "{method} ({kr},{vr})"
             );
         }
     }

@@ -15,8 +15,9 @@ cargo bench --bench coordinator_throughput -- --requests 2 --max-new 4
 # and speedups at S in {512, 2048, 8192} (f32 + int4).
 cargo bench --bench decode_staging -- --out "$REPO_ROOT/BENCH_decode_staging.json"
 
-# Offline-compression substrate: GEMM GFLOP/s (seed loop vs tiled kernel)
-# and the per-layer pipeline wall time at 1/2/N pool threads.
+# Offline-compression substrate: GEMM GFLOP/s (seed loop vs tiled kernel,
+# scalar twin vs SIMD micro-kernel), FWHT + int4-dequant GB/s, and the
+# per-layer pipeline wall time at 1/2/N pool threads with SIMD on/off.
 cargo bench --bench linalg_hotpath -- --quick --out "$REPO_ROOT/BENCH_linalg.json"
 
 echo "bench_smoke.sh: wrote $REPO_ROOT/BENCH_decode_staging.json and $REPO_ROOT/BENCH_linalg.json"

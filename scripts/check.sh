@@ -11,6 +11,10 @@ cd "$REPO_ROOT/rust"
 
 cargo build --release
 cargo test -q
+# Second pass with SIMD dispatch pinned to the scalar twins: on machines
+# where AVX2/NEON masks them, the scalar fallback paths must not rot (and
+# the suite's bitwise assertions prove scalar == SIMD == seed).
+PALLAS_SIMD=off cargo test -q
 cargo clippy --all-targets -- -D warnings
 cargo fmt --check
 
