@@ -1,13 +1,16 @@
 //! Long-context serving — the paper's motivating workload (§1): many
 //! concurrent requests whose prompts bury a fact in filler text; the engine
 //! must batch them, keep per-sequence latent caches, and retrieve the fact
-//! at decode time. Compares the full cache against ReCalKV variants and the
-//! multithreaded router front-end.
+//! at decode time. Compares the full cache against ReCalKV variants, then
+//! demonstrates the session API on the threaded router front-end: streamed
+//! token events, mid-flight cancellation, and a per-request deadline.
 //!
 //!   cargo run --release --example long_context_serving -- --requests 12
 
 use recalkv::artifacts::Manifest;
-use recalkv::coordinator::{tokenizer, Coordinator, Engine, EngineConfig, GenRequest};
+use recalkv::coordinator::{
+    tokenizer, Coordinator, Engine, EngineConfig, GenEvent, GenRequest,
+};
 use recalkv::eval::tasks;
 use recalkv::runtime::Runtime;
 use recalkv::util::cli::Args;
@@ -27,9 +30,18 @@ fn main() -> anyhow::Result<()> {
         let insts = tasks::gen_long("kvrecall", man.eval.corpus_seed, n_req, 200);
         let t0 = std::time::Instant::now();
         for (i, inst) in insts.iter().enumerate() {
-            engine.submit(GenRequest::new(i as u64, tokenizer::encode(&inst.prompt), 6));
+            engine
+                .submit(GenRequest::new(i as u64, tokenizer::encode(&inst.prompt), 6))
+                .expect("unbounded queue");
         }
-        let results = engine.run_to_completion()?;
+        // single-threaded event-loop driver: step + poll_events, folding
+        // terminal events into results (what run_to_completion wraps)
+        let mut results = Vec::new();
+        while !engine.idle() {
+            engine.step()?;
+            results.extend(engine.poll_events().into_iter().filter_map(GenEvent::into_result));
+        }
+        results.sort_by_key(|r| r.id);
         let correct = insts
             .iter()
             .zip(&results)
@@ -45,10 +57,10 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // The threaded router: clients submit from the main thread; a worker
+    // The threaded router: clients hold per-request event streams; a worker
     // thread owns the engine (PJRT handles are not Send, so the factory
     // builds it inside the worker).
-    println!("\nrouter front-end (threaded):");
+    println!("\nrouter front-end (threaded, streaming):");
     let dir = man_dir.clone();
     let coord = Coordinator::spawn(move || {
         let man = Manifest::load(&dir)?;
@@ -57,12 +69,46 @@ fn main() -> anyhow::Result<()> {
         Engine::new(&rt, model, model.variant("recal@50")?, EngineConfig::default())
     });
     let insts = tasks::gen_long("needle", 42, 6, 200);
+    let mut streams = Vec::new();
     for (i, inst) in insts.iter().enumerate() {
-        coord.submit(GenRequest::new(i as u64, tokenizer::encode(&inst.prompt), 6));
+        let mut req = GenRequest::new(i as u64, tokenizer::encode(&inst.prompt), 6);
+        if i == 1 {
+            // session control demo: this request gets a generous deadline
+            req = req.with_deadline_ms(60_000);
+        }
+        streams.push(coord.submit(req));
     }
-    let results = coord.collect(6);
-    for r in &results {
-        println!("  req {}: '{}' ({:.1}ms)", r.id, r.text.trim_end(), r.total_ms);
+    // cancel one request mid-flight: its stream terminates with Cancelled
+    // and its pages are reclaimed without disturbing its batch-mates
+    streams[0].cancel();
+    for s in streams {
+        let id = s.id();
+        let mut text = String::new();
+        let mut verdict = "lost";
+        while let Some(ev) = s.recv() {
+            match ev {
+                GenEvent::Token { text_delta, .. } => text.push_str(&text_delta),
+                GenEvent::Finished(r) => {
+                    println!(
+                        "  req {id}: finished '{}' (ttft {:.1}ms, queue {:.1}ms)",
+                        r.text.trim_end(),
+                        r.ttft_ms,
+                        r.queue_wait_ms
+                    );
+                    verdict = "done";
+                }
+                GenEvent::Cancelled(_) => {
+                    println!("  req {id}: cancelled after '{}'", text.trim_end());
+                    verdict = "done";
+                }
+                GenEvent::Failed(r) | GenEvent::DeadlineExceeded(r) => {
+                    println!("  req {id}: {:?} — {:?}", r.reason, r.error);
+                    verdict = "done";
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(verdict, "done", "req {id}: stream closed without a terminal event");
     }
     println!("{}", coord.shutdown()?);
     Ok(())

@@ -40,7 +40,9 @@ fn main() -> anyhow::Result<()> {
             let mut engine = Engine::new(&rt, model, variant, ecfg)?;
             let insts = tasks::gen_long("needle", man.eval.corpus_seed, 8, 200);
             for (i, inst) in insts.iter().enumerate() {
-                engine.submit(GenRequest::new(i as u64, tokenizer::encode(&inst.prompt), 6));
+                engine
+                    .submit(GenRequest::new(i as u64, tokenizer::encode(&inst.prompt), 6))
+                    .expect("unbounded queue");
             }
             let res = engine.run_to_completion()?;
             let acc = insts

@@ -36,7 +36,11 @@ fn main() -> anyhow::Result<()> {
         "lamps glowed in the street . count one two three ",
     ];
     for (i, p) in prompts.iter().enumerate() {
-        engine.submit(GenRequest::new(i as u64, tokenizer::encode(p), 8));
+        // submit opens a session: the handle's id correlates poll_events
+        // streams and cancel(); the default queue is unbounded so the demo
+        // just unwraps
+        let handle = engine.submit(GenRequest::new(i as u64, tokenizer::encode(p), 8))?;
+        assert_eq!(handle.id, i as u64);
     }
 
     // 5. run the continuous-batching loop to completion

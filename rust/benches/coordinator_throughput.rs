@@ -53,7 +53,9 @@ fn main() -> anyhow::Result<()> {
         let insts = recalkv::eval::tasks::gen_long("needle", 42, n_req, 200);
         for (i, inst) in insts.iter().enumerate() {
             let prompt = recalkv::coordinator::tokenizer::encode(&inst.prompt);
-            engine.submit(GenRequest::new(i as u64, prompt, max_new));
+            engine
+                .submit(GenRequest::new(i as u64, prompt, max_new))
+                .expect("unbounded queue");
         }
         let results = engine.run_to_completion()?;
         if let Some(r) = results.iter().find(|r| r.error.is_some()) {

@@ -1,0 +1,277 @@
+//! Serving-lifecycle benchmark: the session API under a mixed
+//! cancel/deadline workload at every batching policy, plus runtime-free
+//! micro-paths (admission-queue ops, cancellation page reclaim).
+//!
+//! Emits `BENCH_serving.json` so successive PRs have a lifecycle-perf
+//! trajectory: decode tok/s, mean TTFT, queue-wait p50/p95, streamed
+//! token-latency p50/p95, cancellation reclaim latency (p50 of
+//! `Engine::cancel` wall time), and cancelled/expired/rejected counts, at
+//! `eager` / `full` / `threshold2`. The engine section needs artifacts/
+//! (skipped gracefully without them); the micro section always runs.
+//!
+//!   cargo bench --bench serving_lifecycle -- --out ../BENCH_serving.json
+
+use recalkv::artifacts::Manifest;
+use recalkv::coordinator::batcher::{BatchPolicy, WaitQueue};
+use recalkv::coordinator::metrics::Metrics;
+use recalkv::coordinator::{Engine, EngineConfig, GenEvent, GenRequest, SubmitError};
+use recalkv::kvcache::{CacheConfig, KvCache};
+use recalkv::quant::QuantKind;
+use recalkv::runtime::Runtime;
+use recalkv::util::bench::{bench, Table};
+use recalkv::util::cli::Args;
+use recalkv::util::json::Json;
+use recalkv::util::rng::Rng;
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+/// Cancellation reclaim without XLA: fill one sequence to S tokens, then
+/// time `free_seq` (the exact page-release path `Engine::cancel` takes).
+/// Destructive, so sampled by refilling between timings instead of through
+/// the steady-state `bench` harness.
+fn reclaim_microbench(results: &mut Vec<Json>, quick: bool) {
+    let lens: &[usize] = if quick { &[512] } else { &[512, 4096] };
+    for &s in lens {
+        for quant in [QuantKind::F32, QuantKind::Int4] {
+            let mut rng = Rng::new(0xca ^ s as u64);
+            let mut cache = KvCache::new(CacheConfig {
+                n_layers: 4,
+                widths: vec![(96, 128); 4],
+                cache_len: s,
+                tokens_per_block: 32,
+                capacity_tokens: s + 32,
+                quant,
+                signs_seed: 7,
+            });
+            let k: Vec<f32> = (0..96).map(|_| rng.normal()).collect();
+            let v: Vec<f32> = (0..128).map(|_| rng.normal()).collect();
+            let mut samples = Vec::new();
+            let mut pages = 0usize;
+            for _ in 0..if quick { 5 } else { 15 } {
+                let seq = cache.new_seq();
+                for _ in 0..s {
+                    let rows: Vec<(&[f32], &[f32])> = (0..4).map(|_| (&k[..], &v[..])).collect();
+                    cache.append(seq, &rows).unwrap();
+                }
+                let t0 = Instant::now();
+                pages = cache.free_seq(seq);
+                samples.push(t0.elapsed().as_secs_f64() * 1e6);
+            }
+            let p50 = Metrics::percentile(&samples, 0.5);
+            println!(
+                "reclaim S={s:<5} {quant:?}: p50 {p50:.1}µs for {pages} pages \
+                 ({:.2}µs/page)",
+                p50 / pages.max(1) as f64
+            );
+            results.push(obj(vec![
+                ("s", Json::Num(s as f64)),
+                ("quant", Json::Str(format!("{quant:?}").to_lowercase())),
+                ("pages", Json::Num(pages as f64)),
+                ("free_us_p50", Json::Num(p50)),
+            ]));
+        }
+    }
+}
+
+/// Admission-queue ops under mixed priorities/deadlines (runtime-free).
+fn wait_queue_microbench(budget: Duration) -> Json {
+    let n = 256usize;
+    let mut rng = Rng::new(0x9a11);
+    let reqs: Vec<GenRequest> = (0..n)
+        .map(|i| {
+            let mut r = GenRequest::new(i as u64, vec![1], 1);
+            r.priority = rng.below(3) as i32 - 1;
+            if rng.below(2) == 0 {
+                r.deadline_ms = Some(1_000 + rng.below(100_000) as u64);
+            }
+            r
+        })
+        .collect();
+    let res = bench(&format!("wait_queue push+pop_next n={n}"), budget, || {
+        let mut q = WaitQueue::new(usize::MAX);
+        for r in &reqs {
+            q.push(r.clone()).unwrap();
+        }
+        while q.pop_next().is_some() {}
+    });
+    obj(vec![
+        ("n", Json::Num(n as f64)),
+        ("push_pop_all_ns", Json::Num(res.median_ns)),
+        ("ops_per_s", Json::Num(res.throughput(2.0 * n as f64))),
+    ])
+}
+
+/// Mixed cancel/deadline workload through the real engine at one policy.
+///
+/// Per-request roles are disjoint by `i % 4` (ids are `i + 1`): `i%4==1`
+/// carries a deadline, `i%4==3` is priority-boosted, `i%4==0` is cancelled
+/// after its second streamed token, `i%4==2` is plain — so each measured
+/// dimension (deadline shedding, priority queue-wait, cancellation
+/// reclaim) is observed on requests that do nothing else.
+///
+/// The admission queue is bounded at half the load: submission runs
+/// through a retry loop that steps the engine on every `QueueFull` bounce,
+/// so the backpressure path is genuinely exercised (`rejected` below
+/// counts bounces, from the engine's own counter).
+fn engine_lifecycle(man: &Manifest, rt: &Runtime, policy: BatchPolicy, n_req: usize,
+                    max_new: usize) -> anyhow::Result<Json> {
+    let model = man.model("tiny-mha")?;
+    let variant = model.variant("recal@50")?;
+    let mut engine = Engine::new(
+        rt,
+        model,
+        variant,
+        EngineConfig { policy, queue_cap: (n_req / 2).max(2), ..Default::default() },
+    )?;
+    let insts = recalkv::eval::tasks::gen_long("needle", 42, n_req, 200);
+    let mut backlog: VecDeque<GenRequest> = insts
+        .iter()
+        .enumerate()
+        .map(|(i, inst)| {
+            let mut req = GenRequest::new(
+                i as u64 + 1,
+                recalkv::coordinator::tokenizer::encode(&inst.prompt),
+                max_new,
+            );
+            if i % 4 == 1 {
+                // a latency bound loose enough to usually finish but tight
+                // enough to shed under Full batching
+                req.deadline_ms = Some(2_000);
+            }
+            if i % 4 == 3 {
+                req.priority = 1;
+            }
+            req
+        })
+        .collect();
+    // single driver loop: feed the bounded queue under backpressure, stream
+    // events, cancel the `i%4==0` cohort (ids ≡ 1 mod 4) after two tokens
+    let mut tokens_seen: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut cancel_us: Vec<f64> = Vec::new();
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    while !backlog.is_empty() || !engine.idle() {
+        while let Some(req) = backlog.pop_front() {
+            match engine.submit(req) {
+                Ok(_) => {}
+                Err(SubmitError::QueueFull { req, .. }) => {
+                    backlog.push_front(req);
+                    break;
+                }
+            }
+        }
+        engine.step()?;
+        let mut to_cancel = Vec::new();
+        for ev in engine.poll_events() {
+            match ev {
+                GenEvent::Token { id, .. } => {
+                    let c = tokens_seen.entry(id).or_insert(0);
+                    *c += 1;
+                    if *c == 2 && id % 4 == 1 {
+                        to_cancel.push(id);
+                    }
+                }
+                ev if ev.is_terminal() => done += 1,
+                _ => {}
+            }
+        }
+        for id in to_cancel {
+            let t = Instant::now();
+            engine.cancel(id);
+            cancel_us.push(t.elapsed().as_secs_f64() * 1e6);
+        }
+        done += engine.poll_events().iter().filter(|e| e.is_terminal()).count();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = engine.metrics.clone();
+    println!(
+        "{:<11} {:>5.1} tok/s | ttft {:>6.1}ms | queue p50/p95 {:>6.1}/{:>6.1}ms | \
+         cancelled {} (reclaim p50 {:.1}µs) expired {} rejected {} | {done} terminal",
+        policy.name(),
+        m.decode_tokens_per_s(),
+        m.mean_ttft_ms(),
+        m.queue_wait_pctile(0.5),
+        m.queue_wait_pctile(0.95),
+        m.requests_cancelled,
+        Metrics::percentile(&cancel_us, 0.5),
+        m.requests_expired,
+        m.requests_rejected,
+    );
+    Ok(obj(vec![
+        ("policy", Json::Str(policy.name())),
+        ("requests", Json::Num(n_req as f64)),
+        ("wall_s", Json::Num(wall)),
+        ("decode_tok_per_s", Json::Num(m.decode_tokens_per_s())),
+        ("ttft_ms_mean", Json::Num(m.mean_ttft_ms())),
+        ("queue_wait_ms_p50", Json::Num(m.queue_wait_pctile(0.5))),
+        ("queue_wait_ms_p95", Json::Num(m.queue_wait_pctile(0.95))),
+        ("token_latency_ms_p50", Json::Num(m.token_latency_pctile(0.5))),
+        ("token_latency_ms_p95", Json::Num(m.token_latency_pctile(0.95))),
+        ("cancel_reclaim_us_p50", Json::Num(Metrics::percentile(&cancel_us, 0.5))),
+        ("cancelled", Json::Num(m.requests_cancelled as f64)),
+        ("expired", Json::Num(m.requests_expired as f64)),
+        ("rejected", Json::Num(m.requests_rejected as f64)),
+        ("completed", Json::Num(m.requests_completed as f64)),
+        ("occupancy", Json::Num(m.mean_batch_occupancy())),
+    ]))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"), &["quick"]);
+    let out_path = args.opt_or("out", "BENCH_serving.json").to_string();
+    let quick = args.has("quick");
+    let budget = Duration::from_millis(if quick { 150 } else { 500 });
+    let n_req = args.usize_or("requests", if quick { 8 } else { 16 });
+    let max_new = args.usize_or("max-new", if quick { 8 } else { 16 });
+
+    let mut reclaim = Vec::new();
+    reclaim_microbench(&mut reclaim, quick);
+    let wq = wait_queue_microbench(budget);
+
+    let mut engine_rows = Vec::new();
+    let engine_json = match Manifest::load(args.opt_or("artifacts", "artifacts")) {
+        Ok(man) => {
+            let rt = Runtime::cpu()?;
+            let mut t = Table::new(
+                "Serving lifecycle (mixed cancel/deadline workload)",
+                &["policy", "tok/s", "ttft ms", "queue p50/p95 ms", "cancelled", "expired"],
+            );
+            for policy in [BatchPolicy::Eager, BatchPolicy::Full, BatchPolicy::Threshold(2)] {
+                let row = engine_lifecycle(&man, &rt, policy, n_req, max_new)?;
+                t.row(vec![
+                    policy.name(),
+                    format!("{:.1}", row.req("decode_tok_per_s").as_f64().unwrap_or(0.0)),
+                    format!("{:.1}", row.req("ttft_ms_mean").as_f64().unwrap_or(0.0)),
+                    format!(
+                        "{:.1}/{:.1}",
+                        row.req("queue_wait_ms_p50").as_f64().unwrap_or(0.0),
+                        row.req("queue_wait_ms_p95").as_f64().unwrap_or(0.0)
+                    ),
+                    format!("{}", row.req("cancelled").as_f64().unwrap_or(0.0) as u64),
+                    format!("{}", row.req("expired").as_f64().unwrap_or(0.0) as u64),
+                ]);
+                engine_rows.push(row);
+            }
+            t.print();
+            Json::Arr(std::mem::take(&mut engine_rows))
+        }
+        Err(_) => {
+            println!("[skip] artifacts/ not built — micro-paths only");
+            Json::Null
+        }
+    };
+
+    let report = obj(vec![
+        ("bench", Json::Str("serving_lifecycle".into())),
+        ("reclaim", Json::Arr(reclaim)),
+        ("wait_queue", wq),
+        ("engine", engine_json),
+    ]);
+    std::fs::write(&out_path, report.to_string())?;
+    println!("[report saved to {out_path}]");
+    Ok(())
+}

@@ -22,6 +22,7 @@ use super::{calibrate, cka, reorder, svdc};
 use crate::linalg::Matrix;
 use crate::util::pool;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Method switches (ablation axes of paper Table 3).
 #[derive(Clone, Copy, Debug)]
@@ -63,14 +64,20 @@ pub struct LayerInputs<'a> {
 }
 
 /// One compressed layer in the runtime layout (reordering folded offline).
+///
+/// The rank-*independent* matrices (`wq_reordered`, `cka`) are shared
+/// behind `Arc`: every entry of a rank sweep points at the same
+/// allocation instead of carrying its own copy (they never vary with the
+/// rank), so sweeping k ranks over a large model costs one `W_q`-sized
+/// buffer, not k.
 pub struct CompressedLayer {
-    pub wq_reordered: Matrix,   // [d, h·dh]
-    pub l_k: Matrix,            // [d, g·rk]
-    pub r_k: Vec<Matrix>,       // per group [rk, s·dh]
-    pub l_v: Matrix,            // [d, rv]
-    pub wo_fused: Matrix,       // [h·rv, d]
+    pub wq_reordered: Arc<Matrix>, // [d, h·dh]
+    pub l_k: Matrix,               // [d, g·rk]
+    pub r_k: Vec<Matrix>,          // per group [rk, s·dh]
+    pub l_v: Matrix,               // [d, rv]
+    pub wo_fused: Matrix,          // [h·rv, d]
     pub kv_perm: Vec<usize>,
-    pub cka: Matrix,
+    pub cka: Arc<Matrix>,
     pub key_error: f64,
     pub value_error_pre: f64,
     pub value_error_post: f64,
@@ -102,12 +109,11 @@ pub fn compress_layers(inputs: &[LayerInputs], cfg: MethodCfg) -> Result<Vec<Com
 /// `out[layer][rank_index]` is bit-identical to running
 /// [`compress_layer`] at that rank alone.
 ///
-/// Each entry is a self-contained [`CompressedLayer`], so the
-/// rank-independent matrices (`wq_reordered`, `cka`) are duplicated
-/// across a layer's entries (the last takes them by move). That is noise
-/// at the d ≤ 640 scales this mirror targets; a sweep over much larger
-/// models should either consume entries incrementally or share them
-/// behind `Arc` (an API change deferred until needed).
+/// The rank-independent matrices (`wq_reordered`, `cka`) are shared
+/// behind `Arc` across a layer's entries — `Arc::ptr_eq` holds between
+/// any two entries of the same layer — so sweep memory scales with the
+/// number of *distinct* per-rank factors, not with `ranks.len()` copies
+/// of `W_q`.
 pub fn compress_layers_sweep(inputs: &[LayerInputs], cfg: MethodCfg, ranks: &[(usize, usize)])
     -> Result<Vec<Vec<CompressedLayer>>> {
     pool::parallel_map(inputs.len(), |l| compress_layer_ranks(&inputs[l], cfg, ranks))
@@ -134,8 +140,8 @@ pub fn compress_layer_ranks(inp: &LayerInputs, cfg: MethodCfg, ranks: &[(usize, 
     let g = inp.n_kv_heads / inp.group_size;
 
     // --- Keys: CKA → (optional) reorder → grouped SVD (paper §3.2) ---
-    let mut sim = cka::head_similarity(inp.x_sample, inp.w_k, inp.n_kv_heads);
-    let mut kv_perm: Vec<usize> = if cfg.use_hsr {
+    let sim = cka::head_similarity(inp.x_sample, inp.w_k, inp.n_kv_heads);
+    let kv_perm: Vec<usize> = if cfg.use_hsr {
         reorder::greedy_group_heads(&sim, inp.group_size)
     } else {
         (0..inp.n_kv_heads).collect()
@@ -168,18 +174,16 @@ pub fn compress_layer_ranks(inp: &LayerInputs, cfg: MethodCfg, ranks: &[(usize, 
         .map(|i| inp.w_q.cols_slice(i * inp.d_head, (i + 1) * inp.d_head))
         .collect();
     let refs: Vec<&Matrix> = wq_blocks.iter().collect();
-    let mut wq_reordered = Matrix::hcat(&refs);
+    let wq_reordered = Arc::new(Matrix::hcat(&refs));
 
     let within_before = reorder::within_group_similarity(
         &sim, &ident, inp.group_size);
     let within_after = reorder::within_group_similarity(&sim, &kv_perm, inp.group_size);
+    // rank-independent: one allocation shared by every sweep entry
+    let sim = Arc::new(sim);
 
     let mut out = Vec::with_capacity(ranks.len());
-    for (ri, &(key_rank, value_rank)) in ranks.iter().enumerate() {
-        // The shared matrices are cloned into every entry except the last,
-        // which takes them by move — the common single-rank path stays
-        // copy-free, like the pre-sweep code.
-        let last = ri + 1 == ranks.len();
+    for &(key_rank, value_rank) in ranks {
         let (l_k, r_k) = key_decomp.truncate(key_rank);
         let rk_flat = block_diag(&r_k);
         let key_error = svdc::recon_error(&wk_perm, &l_k, &rk_flat, Some(inp.m));
@@ -251,21 +255,13 @@ pub fn compress_layer_ranks(inp: &LayerInputs, cfg: MethodCfg, ranks: &[(usize, 
         }
 
         out.push(CompressedLayer {
-            wq_reordered: if last {
-                std::mem::replace(&mut wq_reordered, Matrix::zeros(0, 0))
-            } else {
-                wq_reordered.clone()
-            },
+            wq_reordered: Arc::clone(&wq_reordered),
             l_k,
             r_k,
             l_v,
             wo_fused,
-            kv_perm: if last { std::mem::take(&mut kv_perm) } else { kv_perm.clone() },
-            cka: if last {
-                std::mem::replace(&mut sim, Matrix::zeros(0, 0))
-            } else {
-                sim.clone()
-            },
+            kv_perm: kv_perm.clone(),
+            cka: Arc::clone(&sim),
             key_error,
             value_error_pre,
             value_error_post,

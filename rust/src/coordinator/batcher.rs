@@ -1,13 +1,24 @@
-//! Batching policy: decides when to run prefill vs decode and how many
-//! waiting requests to admit, given slot occupancy and queue depth.
+//! Batching policy and admission queue: decide when to run prefill vs
+//! decode, how many waiting requests to admit, and *which* waiting request
+//! is admitted next.
 //!
 //! The engine's default policy (prefill whenever a slot is free) maximizes
 //! occupancy; this module adds tunable alternatives used by the ablation
-//! bench `coordinator_throughput --policy=...`:
+//! benches (`coordinator_throughput --policy=...`, `serving_lifecycle`):
 //!   - `Eager`: admit as soon as a slot frees (default, lowest TTFT)
 //!   - `Full`: wait until all slots are free, then admit a full batch
 //!     (fewer prefill calls, higher TTFT — the "static batching" baseline)
-//!   - `Threshold(k)`: admit when ≥k slots are free.
+//!   - `Threshold(k)`: admit when ≥k slots are free (k ≥ 1; `Threshold(0)`
+//!     would never admit and is rejected at parse time).
+//!
+//! Admission order is governed by [`WaitQueue`], a bounded priority queue:
+//! highest [`GenRequest::priority`] first, ties broken by earliest
+//! deadline (requests without a deadline sort last), then submission
+//! order — so a run with uniform priorities and no deadlines pops in exact
+//! FIFO order, preserving the pre-session-API schedule bit for bit.
+
+use super::request::{GenRequest, SubmitError, Tracked};
+use std::time::Instant;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum BatchPolicy {
@@ -17,11 +28,38 @@ pub enum BatchPolicy {
 }
 
 impl BatchPolicy {
-    pub fn parse(s: &str) -> Option<BatchPolicy> {
+    /// Parse a policy name: `eager`, `full`, or `threshold<k>` with k ≥ 1.
+    /// `threshold` with no integer, a malformed integer, or `threshold0`
+    /// (which could never admit anything) are rejected with a message.
+    pub fn parse(s: &str) -> Result<BatchPolicy, String> {
         match s {
-            "eager" => Some(BatchPolicy::Eager),
-            "full" => Some(BatchPolicy::Full),
-            _ => s.strip_prefix("threshold").and_then(|k| k.parse().ok().map(BatchPolicy::Threshold)),
+            "eager" => Ok(BatchPolicy::Eager),
+            "full" => Ok(BatchPolicy::Full),
+            _ => {
+                let Some(rest) = s.strip_prefix("threshold") else {
+                    return Err(format!(
+                        "unknown batch policy '{s}' (eager | full | threshold<k>)"
+                    ));
+                };
+                let k: usize = rest.parse().map_err(|_| {
+                    format!("bad threshold policy '{s}': expected threshold<k> with integer k")
+                })?;
+                if k == 0 {
+                    return Err(
+                        "threshold0 would never admit a request (k must be >= 1)".to_string()
+                    );
+                }
+                Ok(BatchPolicy::Threshold(k))
+            }
+        }
+    }
+
+    /// Canonical name, round-tripping through [`BatchPolicy::parse`].
+    pub fn name(&self) -> String {
+        match self {
+            BatchPolicy::Eager => "eager".to_string(),
+            BatchPolicy::Full => "full".to_string(),
+            BatchPolicy::Threshold(k) => format!("threshold{k}"),
         }
     }
 
@@ -35,6 +73,103 @@ impl BatchPolicy {
             BatchPolicy::Full => free_slots == total_slots,
             BatchPolicy::Threshold(k) => free_slots >= *k || waiting >= free_slots,
         }
+    }
+}
+
+/// Bounded admission queue with priority/deadline-aware ordering.
+///
+/// `pop_next` selects by (priority desc, deadline asc with `None` last,
+/// submission order asc); `push` enforces the bound and hands the request
+/// back inside [`SubmitError::QueueFull`] so the caller owns the
+/// backpressure decision. Selection is O(n) over the waiting set — the
+/// queue is bounded and admission runs once per prefill, so this never
+/// shows up next to the graph execution it gates.
+pub struct WaitQueue {
+    items: Vec<Tracked>,
+    capacity: usize,
+    next_seq: u64,
+}
+
+impl WaitQueue {
+    /// `capacity` = max waiting requests; `usize::MAX` for unbounded.
+    pub fn new(capacity: usize) -> Self {
+        WaitQueue { items: Vec::new(), capacity: capacity.max(1), next_seq: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Admit a request into the waiting set, stamping its FIFO tie-breaker.
+    pub fn push(&mut self, req: GenRequest) -> Result<(), SubmitError> {
+        if self.items.len() >= self.capacity {
+            return Err(SubmitError::QueueFull { req, capacity: self.capacity });
+        }
+        let mut t = Tracked::new(req);
+        t.submit_seq = self.next_seq;
+        self.next_seq += 1;
+        self.items.push(t);
+        Ok(())
+    }
+
+    /// Ordering key: smaller = admitted sooner.
+    fn key(t: &Tracked) -> (i64, Option<Instant>, u64) {
+        // negate priority so "higher priority" sorts first; Option<Instant>
+        // orders None > Some(_) via the is_none() prefix below
+        (-(t.req.priority as i64), t.deadline, t.submit_seq)
+    }
+
+    /// Pop the next request to admit (highest priority, then earliest
+    /// deadline, then FIFO).
+    pub fn pop_next(&mut self) -> Option<Tracked> {
+        let best = self
+            .items
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                let (pa, da, sa) = Self::key(a);
+                let (pb, db, sb) = Self::key(b);
+                pa.cmp(&pb)
+                    .then(da.is_none().cmp(&db.is_none()))
+                    .then(da.cmp(&db))
+                    .then(sa.cmp(&sb))
+            })
+            .map(|(i, _)| i)?;
+        Some(self.items.remove(best))
+    }
+
+    /// Remove a waiting request by id (client cancellation before a slot
+    /// was ever assigned).
+    pub fn remove(&mut self, id: u64) -> Option<Tracked> {
+        let i = self.items.iter().position(|t| t.req.id == id)?;
+        Some(self.items.remove(i))
+    }
+
+    /// Drain every waiting request whose deadline has passed at `now`.
+    pub fn take_expired(&mut self, now: Instant) -> Vec<Tracked> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.items.len() {
+            if self.items[i].expired(now) {
+                out.push(self.items.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Drain the whole queue (engine shutdown/abort paths).
+    pub fn drain(&mut self) -> Vec<Tracked> {
+        std::mem::take(&mut self.items)
     }
 }
 
@@ -57,7 +192,71 @@ mod tests {
 
     #[test]
     fn threshold_parses() {
-        assert_eq!(BatchPolicy::parse("threshold2"), Some(BatchPolicy::Threshold(2)));
-        assert_eq!(BatchPolicy::parse("eager"), Some(BatchPolicy::Eager));
+        assert_eq!(BatchPolicy::parse("threshold2"), Ok(BatchPolicy::Threshold(2)));
+        assert_eq!(BatchPolicy::parse("eager"), Ok(BatchPolicy::Eager));
+    }
+
+    #[test]
+    fn parse_rejects_degenerate_policies() {
+        // threshold0 would never admit: must be a parse error, not a hang
+        // discovered at serve time.
+        assert!(BatchPolicy::parse("threshold0").unwrap_err().contains("never admit"));
+        assert!(BatchPolicy::parse("threshold").is_err());
+        assert!(BatchPolicy::parse("thresholdx").is_err());
+        assert!(BatchPolicy::parse("bogus").is_err());
+        assert!(BatchPolicy::parse("").is_err());
+    }
+
+    #[test]
+    fn parse_name_round_trips() {
+        for p in [BatchPolicy::Eager, BatchPolicy::Full, BatchPolicy::Threshold(1),
+                  BatchPolicy::Threshold(7)] {
+            assert_eq!(BatchPolicy::parse(&p.name()), Ok(p), "{p:?} round-trip");
+        }
+    }
+
+    #[test]
+    fn wait_queue_fifo_when_uniform() {
+        let mut q = WaitQueue::new(usize::MAX);
+        for id in 0..5u64 {
+            q.push(GenRequest::new(id, vec![1], 1)).unwrap();
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_next()).map(|t| t.req.id).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4], "uniform queue must stay FIFO");
+    }
+
+    #[test]
+    fn wait_queue_priority_then_deadline_then_fifo() {
+        let mut q = WaitQueue::new(usize::MAX);
+        q.push(GenRequest::new(1, vec![1], 1)).unwrap();
+        q.push(GenRequest::new(2, vec![1], 1).with_priority(5)).unwrap();
+        q.push(GenRequest::new(3, vec![1], 1).with_priority(5).with_deadline_ms(10_000))
+            .unwrap();
+        q.push(GenRequest::new(4, vec![1], 1).with_deadline_ms(5_000)).unwrap();
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_next()).map(|t| t.req.id).collect();
+        // priority 5 first (deadline-holder 3 before no-deadline 2), then
+        // priority 0 with the deadline, then the plain FIFO request.
+        assert_eq!(order, vec![3, 2, 4, 1]);
+    }
+
+    #[test]
+    fn wait_queue_bounds_and_returns_request() {
+        let mut q = WaitQueue::new(2);
+        q.push(GenRequest::new(1, vec![1], 1)).unwrap();
+        q.push(GenRequest::new(2, vec![1], 1)).unwrap();
+        let err = q.push(GenRequest::new(3, vec![9, 9], 1)).unwrap_err();
+        let SubmitError::QueueFull { req, capacity } = err;
+        assert_eq!(capacity, 2);
+        assert_eq!(req.id, 3);
+        assert_eq!(req.prompt, vec![9, 9], "rejected request must come back intact");
+        q.pop_next().unwrap();
+        q.push(req).unwrap();
+    }
+
+    #[test]
+    fn batch_policy_name_matches_cli_spelling() {
+        assert_eq!(BatchPolicy::Threshold(3).name(), "threshold3");
+        assert_eq!(BatchPolicy::Eager.name(), "eager");
+        assert_eq!(BatchPolicy::Full.name(), "full");
     }
 }

@@ -1,5 +1,9 @@
 //! The serving engine: continuous batching over the AOT decode graph with
-//! the paged latent cache.
+//! the paged latent cache, exposed as a **session API** — `submit` returns a
+//! [`RequestHandle`] (or bounces with [`SubmitError::QueueFull`] under the
+//! bounded admission queue) and every lifecycle transition is published as a
+//! [`GenEvent`] drained via [`Engine::poll_events`]. See the
+//! [`crate::coordinator`] module docs for the request state machine.
 //!
 //! Slots (≤ decode_batch) hold active sequences. Each slot owns a persistent
 //! per-layer staging region inside the engine's batch buffers, maintained
@@ -19,18 +23,24 @@
 //!     cache (`staged_len < seq_len`, e.g. quantized rows written without
 //!     staging) is caught up by re-dequantizing only the missing suffix
 //!     (`KvCache::stage_rows`),
-//!   * retiring a slot marks its region dirty; it is zeroed lazily before
-//!     the next decode batch that runs with the slot empty.
-//! Decode steps then: execute the decode graph (token, length, caches ->
-//! logits + new latents), append-and-stage the returned latents, and
-//! sample/force the next token. Prefill runs the prefill graph on up to
-//! prefill_batch waiting requests; a request that fails admission (bad
-//! prompt, cache exhaustion) is failed individually with a `GenResult`
-//! error — its partial sequence is freed and the rest of the batch
-//! proceeds.
+//!   * retiring a slot (completion, failure, cancellation, or deadline
+//!     expiry) frees its pages immediately and marks its region dirty; the
+//!     region is zeroed lazily before the next decode batch that runs with
+//!     the slot empty.
+//! Decode steps then: expire any slot past its deadline, execute the decode
+//! graph (token, length, caches -> logits + new latents), append-and-stage
+//! the returned latents, and sample/force the next token. Prefill pops
+//! waiting requests in priority/deadline/FIFO order (see
+//! [`super::batcher::WaitQueue`]) onto up to prefill_batch slots; a request
+//! that fails admission (bad prompt, cache exhaustion) is failed
+//! individually with a `GenResult` error — its partial sequence is freed
+//! and the rest of the batch proceeds.
 
+use super::batcher::WaitQueue;
 use super::metrics::Metrics;
-use super::request::{GenRequest, GenResult, Tracked};
+use super::request::{
+    GenEvent, GenRequest, GenResult, RequestHandle, SubmitError, Tracked,
+};
 use super::sampler::{log_prob, Sampler};
 use crate::artifacts::{ModelEntry, VariantEntry};
 use crate::kvcache::{CacheConfig, KvCache, SeqId};
@@ -38,6 +48,7 @@ use crate::quant::QuantKind;
 use crate::runtime::engine_graphs::ActivationArg;
 use crate::runtime::{GraphSet, Runtime, VariantRuntime};
 use anyhow::{bail, Result};
+use std::collections::VecDeque;
 use std::time::Instant;
 
 #[derive(Clone, Debug)]
@@ -47,6 +58,10 @@ pub struct EngineConfig {
     pub capacity_tokens: usize,
     pub signs_seed: u64,
     pub policy: super::batcher::BatchPolicy,
+    /// Bound on the waiting queue: a `submit` past this many waiting
+    /// requests returns [`SubmitError::QueueFull`] instead of queueing
+    /// (backpressure). `usize::MAX` = unbounded (the default).
+    pub queue_cap: usize,
 }
 
 impl Default for EngineConfig {
@@ -57,6 +72,7 @@ impl Default for EngineConfig {
             capacity_tokens: 1 << 16,
             signs_seed: 977,
             policy: super::batcher::BatchPolicy::Eager,
+            queue_cap: usize::MAX,
         }
     }
 }
@@ -66,6 +82,8 @@ struct Slot {
     seq: SeqId,
     /// Next token to feed (the one whose latents are not yet cached).
     pending_token: i32,
+    /// When the previous streamed token was produced (inter-token latency).
+    last_token_at: Instant,
 }
 
 /// Staging bookkeeping for one slot index (parallel to `slots`): which
@@ -95,8 +113,10 @@ pub struct Engine {
     val_dims: Vec<Vec<usize>>,
     policy: super::batcher::BatchPolicy,
     slots: Vec<Option<Slot>>,
-    waiting: std::collections::VecDeque<Tracked>,
-    finished: Vec<GenResult>,
+    waiting: WaitQueue,
+    /// Lifecycle event log, drained by `poll_events` (the single source of
+    /// truth — `take_finished`/`run_to_completion` are wrappers over it).
+    events: VecDeque<GenEvent>,
     samplers: std::collections::BTreeMap<u64, Sampler>,
     // persistent per-slot staging regions (hot path; see EXPERIMENTS.md
     // §Perf): stage_k[l][slot*S*wk ..] is written once at prefill and
@@ -139,8 +159,8 @@ impl Engine {
             val_dims,
             policy,
             slots: (0..b).map(|_| None).collect(),
-            waiting: Default::default(),
-            finished: Vec::new(),
+            waiting: WaitQueue::new(ecfg.queue_cap),
+            events: VecDeque::new(),
             samplers: Default::default(),
             stage_k,
             stage_v,
@@ -148,34 +168,95 @@ impl Engine {
         })
     }
 
-    pub fn submit(&mut self, req: GenRequest) {
-        self.samplers.insert(req.id, Sampler::new(req.sampling));
-        self.waiting.push_back(Tracked::new(req));
+    /// Open a request session: admit `req` into the bounded waiting queue
+    /// and return its handle, or bounce with [`SubmitError::QueueFull`]
+    /// (the request comes back inside the error for retry). A successful
+    /// submit emits [`GenEvent::Queued`].
+    pub fn submit(&mut self, req: GenRequest) -> Result<RequestHandle, SubmitError> {
+        let id = req.id;
+        let sampling = req.sampling;
+        match self.waiting.push(req) {
+            Ok(()) => {
+                self.samplers.insert(id, Sampler::new(sampling));
+                self.events.push_back(GenEvent::Queued { id });
+                Ok(RequestHandle { id })
+            }
+            Err(e) => {
+                self.metrics.requests_rejected += 1;
+                Err(e)
+            }
+        }
     }
 
+    /// Cancel a request mid-flight, whether it is still waiting or already
+    /// decoding: its slot, cache pages and staging region are reclaimed
+    /// immediately and a [`GenEvent::Cancelled`] carrying the partial
+    /// result is emitted. Returns `false` for ids the engine is not
+    /// currently tracking (already finished, never submitted).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(t) = self.waiting.remove(id) {
+            self.samplers.remove(&id);
+            self.metrics.requests_cancelled += 1;
+            self.events.push_back(GenEvent::Cancelled(t.cancel()));
+            return true;
+        }
+        for i in 0..self.slots.len() {
+            if self.slots[i].as_ref().is_some_and(|s| s.tracked.req.id == id) {
+                let s = self.slots[i].take().unwrap();
+                self.cache.free_seq(s.seq);
+                self.samplers.remove(&id);
+                self.metrics.requests_cancelled += 1;
+                self.events.push_back(GenEvent::Cancelled(s.tracked.cancel()));
+                self.stage_state[i] = StageState { dirty: true, ..StageState::default() };
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Drain every lifecycle event published since the last poll, in
+    /// emission order (per request that is also submission order). This is
+    /// the single-threaded streaming interface; the `Coordinator` router
+    /// fans the same events out over per-request channels.
+    pub fn poll_events(&mut self) -> Vec<GenEvent> {
+        self.events.drain(..).collect()
+    }
+
+    /// Compatibility accessor: drain pending events, keeping only terminal
+    /// results (progress events are dropped).
     pub fn take_finished(&mut self) -> Vec<GenResult> {
-        std::mem::take(&mut self.finished)
+        self.events.drain(..).filter_map(GenEvent::into_result).collect()
     }
 
     pub fn max_prompt_len(&self) -> usize {
         self.shapes.prefill_seq
     }
 
+    pub fn queue_depth(&self) -> usize {
+        self.waiting.len()
+    }
+
     pub fn idle(&self) -> bool {
         self.waiting.is_empty() && self.slots.iter().all(|s| s.is_none())
     }
 
-    /// Drive the engine until all submitted requests finish.
+    /// Drive the engine until all submitted requests finish — a thin
+    /// compatibility wrapper over the event loop: it steps the scheduler
+    /// and folds the event stream down to its terminal results.
     pub fn run_to_completion(&mut self) -> Result<Vec<GenResult>> {
+        let mut out = self.take_finished();
         while !self.idle() {
             self.step()?;
+            out.extend(self.take_finished());
         }
-        Ok(self.take_finished())
+        Ok(out)
     }
 
-    /// One scheduling step: prefill when the batching policy admits new
-    /// requests, otherwise one decode step over active slots.
+    /// One scheduling step: expire overdue requests, then prefill when the
+    /// batching policy admits new requests, otherwise one decode step over
+    /// active slots.
     pub fn step(&mut self) -> Result<()> {
+        self.expire_due(Instant::now());
         let free = self.slots.iter().filter(|s| s.is_none()).count();
         let any_active = self.slots.iter().any(|s| s.is_some());
         if self.policy.should_prefill(free, self.slots.len(), self.waiting.len())
@@ -190,6 +271,28 @@ impl Engine {
         Ok(())
     }
 
+    /// Enforce deadlines in both lifecycle states: drain expired waiting
+    /// requests, and retire active slots whose deadline passed (freeing
+    /// pages before the next decode batch is built).
+    fn expire_due(&mut self, now: Instant) {
+        for t in self.waiting.take_expired(now) {
+            self.samplers.remove(&t.req.id);
+            self.metrics.requests_expired += 1;
+            self.events.push_back(GenEvent::DeadlineExceeded(t.expire()));
+        }
+        for i in 0..self.slots.len() {
+            let expired = self.slots[i].as_ref().map(|s| s.tracked.expired(now)).unwrap_or(false);
+            if expired {
+                let s = self.slots[i].take().unwrap();
+                self.cache.free_seq(s.seq);
+                self.samplers.remove(&s.tracked.req.id);
+                self.metrics.requests_expired += 1;
+                self.events.push_back(GenEvent::DeadlineExceeded(s.tracked.expire()));
+                self.stage_state[i] = StageState { dirty: true, ..StageState::default() };
+            }
+        }
+    }
+
     // ------------------------------------------------------------------
     fn prefill_waiting(&mut self) -> Result<()> {
         let free = self.slots.iter().filter(|s| s.is_none()).count();
@@ -202,13 +305,15 @@ impl Engine {
         // instead of poisoning the whole batch.
         let mut batch: Vec<Tracked> = Vec::new();
         while batch.len() < limit {
-            let Some(t) = self.waiting.pop_front() else { break };
+            let Some(mut t) = self.waiting.pop_next() else { break };
             if t.req.prompt.is_empty() {
                 self.fail_request(t, "empty prompt");
             } else if t.req.prompt.len() > ps {
                 let plen = t.req.prompt.len();
                 self.fail_request(t, format!("prompt {plen} longer than prefill_seq {ps}"));
             } else {
+                t.queue_wait_ms = t.arrived.elapsed().as_secs_f64() * 1e3;
+                self.metrics.record_queue_wait(t.queue_wait_ms);
                 batch.push(t);
             }
         }
@@ -285,20 +390,29 @@ impl Engine {
             // One full gather per admitted request; decode extends the
             // region incrementally from here on.
             self.stage_full_slot(si, seq)?;
-            // first generated token from the prefill logits
+            // first generated token from the prefill logits; Prefilled is
+            // published before the Token event it produces
             let row = logits[i * v..(i + 1) * v].to_vec();
+            let now = Instant::now();
+            tracked.first_token = Some(now);
+            self.events.push_back(GenEvent::Prefilled {
+                id: tracked.req.id,
+                prompt_len: plen,
+                ttft_ms: (now - tracked.arrived).as_secs_f64() * 1e3,
+            });
             let next = self.next_token(&mut tracked, &row, plen);
-            tracked.first_token = Some(Instant::now());
             self.metrics.prompt_tokens += plen as u64;
-            self.slots[si] = Some(Slot { tracked, seq, pending_token: next });
+            self.slots[si] =
+                Some(Slot { tracked, seq, pending_token: next, last_token_at: now });
         }
         self.retire_done();
         Ok(())
     }
 
     /// Choose the next token: forced (teacher forcing) or sampled; records
-    /// log-probs of forced tokens. `pos` is the index of the token being
-    /// predicted (prompt_len + generated so far).
+    /// log-probs of forced tokens and emits the [`GenEvent::Token`] for the
+    /// chosen one. `pos` is the index of the token being predicted
+    /// (prompt_len + generated so far).
     fn next_token(&mut self, tracked: &mut Tracked, logits_row: &[f32], _pos: usize) -> i32 {
         let gen_idx = tracked.generated.len();
         let forced = tracked
@@ -306,19 +420,29 @@ impl Engine {
             .forced_tokens
             .as_ref()
             .and_then(|f| f.get(gen_idx).copied());
-        let tok = match forced {
+        let (tok, lp) = match forced {
             Some(t) => {
-                tracked.forced_logprob += log_prob(logits_row, t);
+                let lp = log_prob(logits_row, t);
+                tracked.forced_logprob += lp;
                 tracked.forced_count += 1;
-                t
+                (t, lp)
             }
-            None => self
-                .samplers
-                .get_mut(&tracked.req.id)
-                .map(|s| s.sample(logits_row))
-                .unwrap_or_else(|| super::sampler::argmax(logits_row)),
+            None => {
+                let t = self
+                    .samplers
+                    .get_mut(&tracked.req.id)
+                    .map(|s| s.sample(logits_row))
+                    .unwrap_or_else(|| super::sampler::argmax(logits_row));
+                (t, log_prob(logits_row, t))
+            }
         };
         tracked.generated.push(tok);
+        self.events.push_back(GenEvent::Token {
+            id: tracked.req.id,
+            token: tok,
+            text_delta: super::tokenizer::decode(&[tok]),
+            logprob: lp,
+        });
         tok
     }
 
@@ -336,6 +460,9 @@ impl Engine {
                 length[i] = self.cache.seq_len(sl.seq) as i32;
                 active += 1;
             }
+        }
+        if active == 0 {
+            return Ok(());
         }
         self.metrics.batch_occupancy_sum += active as f64 / b as f64;
 
@@ -410,9 +537,13 @@ impl Engine {
                         Tracked::new(GenRequest::new(0, vec![0], 0)),
                     );
                     let next = self.next_token(&mut tracked, row, pos);
+                    let now = Instant::now();
                     let sl = self.slots[i].as_mut().unwrap();
+                    let gap_ms = (now - sl.last_token_at).as_secs_f64() * 1e3;
+                    sl.last_token_at = now;
                     sl.tracked = tracked;
                     sl.pending_token = next;
+                    self.metrics.record_token_latency(gap_ms);
                 }
                 Err(e) => self.fail_slot(i, &format!("decode append failed: {e:#}")),
             }
@@ -547,7 +678,7 @@ impl Engine {
     fn fail_request(&mut self, tracked: Tracked, msg: impl Into<String>) {
         self.samplers.remove(&tracked.req.id);
         self.metrics.requests_failed += 1;
-        self.finished.push(tracked.fail(msg));
+        self.events.push_back(GenEvent::Failed(tracked.fail(msg)));
     }
 
     /// Abort the request in slot `i` with an error result, freeing its
@@ -557,7 +688,7 @@ impl Engine {
             self.cache.free_seq(s.seq);
             self.samplers.remove(&s.tracked.req.id);
             self.metrics.requests_failed += 1;
-            self.finished.push(s.tracked.fail(msg));
+            self.events.push_back(GenEvent::Failed(s.tracked.fail(msg)));
         }
         self.stage_state[i] = StageState { dirty: true, ..StageState::default() };
     }
@@ -581,7 +712,7 @@ impl Engine {
                     .first_token
                     .map(|t| (t - s.tracked.arrived).as_secs_f64() * 1e3)
                     .unwrap_or(0.0);
-                self.finished.push(s.tracked.finish());
+                self.events.push_back(GenEvent::Finished(s.tracked.finish()));
                 self.stage_state[i] = StageState { dirty: true, ..StageState::default() };
             }
         }

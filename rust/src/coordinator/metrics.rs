@@ -1,5 +1,5 @@
 //! Serving metrics: counters and latency accumulators, printed by the CLI
-//! and consumed by the throughput benches.
+//! and consumed by the throughput/lifecycle benches.
 //!
 //! Staging cost is split by path: `stage_full_*` counts the O(S·w) gathers
 //! (prefill admission and stale-buffer recovery), `stage_incr_*` counts the
@@ -8,6 +8,13 @@
 //! and incremental work proportional to generated tokens — if
 //! `rows_staged_full` grows with decode steps, slots are being invalidated
 //! too often.
+//!
+//! Lifecycle accounting: `requests_*` counters partition every submitted
+//! request into completed / failed / cancelled / expired / rejected;
+//! `queue_wait_ms` samples the waiting-queue residency of every *admitted*
+//! request, and `token_latency_ms` samples the gap between consecutive
+//! streamed tokens of a slot (the client-visible inter-token latency).
+//! Percentiles come from [`Metrics::percentile`] over those samples.
 
 use std::time::Duration;
 
@@ -17,6 +24,12 @@ pub struct Metrics {
     /// Requests that ended with an error result (admission or decode
     /// failure) instead of a completed generation.
     pub requests_failed: u64,
+    /// Requests cancelled by the client (waiting or decoding).
+    pub requests_cancelled: u64,
+    /// Requests that blew their `deadline_ms` (waiting or decoding).
+    pub requests_expired: u64,
+    /// Submissions bounced off the bounded admission queue (`QueueFull`).
+    pub requests_rejected: u64,
     pub prompt_tokens: u64,
     pub generated_tokens: u64,
     pub prefill_calls: u64,
@@ -34,9 +47,44 @@ pub struct Metrics {
     pub append_time: Duration,
     pub ttft_ms_sum: f64,
     pub batch_occupancy_sum: f64,
+    /// Per-admitted-request waiting-queue residency samples (ms) — a
+    /// bounded ring of the most recent [`SAMPLE_CAP`] admissions, so a
+    /// long-lived engine's metrics stay O(1) in requests served.
+    pub queue_wait_ms: Vec<f64>,
+    /// Total queue-wait samples ever recorded (ring write cursor).
+    pub queue_wait_seen: u64,
+    /// Per-token inter-arrival samples (ms): the gap between consecutive
+    /// streamed tokens of one slot (first gap measured from first token).
+    /// Bounded ring like `queue_wait_ms`.
+    pub token_latency_ms: Vec<f64>,
+    /// Total token-latency samples ever recorded (ring write cursor).
+    pub token_latency_seen: u64,
 }
 
+/// Latency sample window: percentiles reflect the most recent this-many
+/// samples (64k ≈ hours of serving at interactive rates, small enough that
+/// a `report()` sort is trivial).
+pub const SAMPLE_CAP: usize = 1 << 16;
+
 impl Metrics {
+    /// Record into a bounded sample ring: append until [`SAMPLE_CAP`],
+    /// then overwrite the oldest sample.
+    fn record(buf: &mut Vec<f64>, seen: &mut u64, x: f64) {
+        if buf.len() < SAMPLE_CAP {
+            buf.push(x);
+        } else {
+            buf[(*seen % SAMPLE_CAP as u64) as usize] = x;
+        }
+        *seen += 1;
+    }
+
+    pub fn record_queue_wait(&mut self, ms: f64) {
+        Self::record(&mut self.queue_wait_ms, &mut self.queue_wait_seen, ms);
+    }
+
+    pub fn record_token_latency(&mut self, ms: f64) {
+        Self::record(&mut self.token_latency_ms, &mut self.token_latency_seen, ms);
+    }
     pub fn decode_tokens_per_s(&self) -> f64 {
         let s = self.decode_time.as_secs_f64();
         if s > 0.0 {
@@ -62,14 +110,38 @@ impl Metrics {
         }
     }
 
+    /// Nearest-rank percentile of a sample set (`p` in [0, 1]); 0.0 when no
+    /// samples were recorded.
+    pub fn percentile(samples: &[f64], p: f64) -> f64 {
+        if samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s[((s.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize]
+    }
+
+    pub fn queue_wait_pctile(&self, p: f64) -> f64 {
+        Self::percentile(&self.queue_wait_ms, p)
+    }
+
+    pub fn token_latency_pctile(&self, p: f64) -> f64 {
+        Self::percentile(&self.token_latency_ms, p)
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests={} failed={} prompt_toks={} gen_toks={} | prefill: {} calls {:.1}ms avg | \
+            "requests={} failed={} cancelled={} expired={} rejected={} \
+             prompt_toks={} gen_toks={} | prefill: {} calls {:.1}ms avg | \
              decode: {} calls {:.2}ms avg, {:.1} tok/s, occupancy {:.2} | \
              stage full {:.1}ms/{} rows, incr {:.1}ms/{} rows, append {:.1}ms total | \
-             ttft {:.1}ms avg",
+             ttft {:.1}ms avg | queue wait p50 {:.1}ms p95 {:.1}ms | \
+             token latency p50 {:.2}ms p95 {:.2}ms",
             self.requests_completed,
             self.requests_failed,
+            self.requests_cancelled,
+            self.requests_expired,
+            self.requests_rejected,
             self.prompt_tokens,
             self.generated_tokens,
             self.prefill_calls,
@@ -92,6 +164,47 @@ impl Metrics {
             self.rows_staged_incr,
             self.append_time.as_secs_f64() * 1e3,
             self.mean_ttft_ms(),
+            self.queue_wait_pctile(0.50),
+            self.queue_wait_pctile(0.95),
+            self.token_latency_pctile(0.50),
+            self.token_latency_pctile(0.95),
         )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let s = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(Metrics::percentile(&s, 0.0), 1.0);
+        assert_eq!(Metrics::percentile(&s, 0.5), 3.0);
+        assert_eq!(Metrics::percentile(&s, 1.0), 5.0);
+        assert_eq!(Metrics::percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn report_includes_lifecycle_counters() {
+        let mut m = Metrics { requests_cancelled: 2, requests_expired: 1, ..Default::default() };
+        m.record_queue_wait(4.0);
+        let r = m.report();
+        assert!(r.contains("cancelled=2"), "{r}");
+        assert!(r.contains("expired=1"), "{r}");
+    }
+
+    #[test]
+    fn sample_rings_are_bounded() {
+        let mut m = Metrics::default();
+        for i in 0..(SAMPLE_CAP + 10) {
+            m.record_token_latency(i as f64);
+        }
+        assert_eq!(m.token_latency_ms.len(), SAMPLE_CAP, "ring must not grow past cap");
+        assert_eq!(m.token_latency_seen, (SAMPLE_CAP + 10) as u64);
+        // the overwritten head holds the newest samples
+        assert_eq!(m.token_latency_ms[0], SAMPLE_CAP as f64);
+        assert_eq!(m.token_latency_ms[9], (SAMPLE_CAP + 9) as f64);
+        assert_eq!(m.token_latency_ms[10], 10.0, "unreached tail keeps older samples");
     }
 }

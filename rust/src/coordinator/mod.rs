@@ -1,7 +1,48 @@
-//! L3 coordinator: request router, dynamic batcher, prefill/decode scheduler
-//! and the serving engine executing AOT graphs against the paged latent
-//! cache. Threads + channels (tokio is unavailable offline); python never
-//! runs here.
+//! L3 coordinator: the session-based serving surface — request router,
+//! bounded admission queue, prefill/decode scheduler and the serving engine
+//! executing AOT graphs against the paged latent cache. Threads + channels
+//! (tokio is unavailable offline); python never runs here.
+//!
+//! # Request lifecycle
+//!
+//! Every request is a *session*: `Engine::submit` returns a
+//! [`RequestHandle`] (or [`SubmitError::QueueFull`] under the bounded
+//! admission queue), and each transition of the request state machine is
+//! published as a [`GenEvent`]:
+//!
+//! ```text
+//!              submit                    prefill admission
+//!   client ──────────────▶ Queued ─────────────────────────▶ Prefilled
+//!     │        (QueueFull ⇒         (validation/admission        │
+//!     │         SubmitError)         error ⇒ Failed)             ▼
+//!     │                                                      Decoding ──┐
+//!     │ cancel(id)                                             │  ▲     │ Token*
+//!     ├──────────────▶ Cancelled  (waiting or decoding)        │  └─────┘
+//!     │                                                        │
+//!     │ deadline_ms elapsed                                    ▼
+//!     └──────────────▶ DeadlineExceeded                    Finished / Failed
+//! ```
+//!
+//! Terminal events (`Finished`, `Failed`, `Cancelled`, `DeadlineExceeded`)
+//! carry the final [`GenResult`] with its [`FinishReason`]; all of them
+//! free the slot, its cache pages and its staging region immediately.
+//!
+//! Two drivers consume the stream:
+//!   * **single-threaded**: call `Engine::step` and drain
+//!     `Engine::poll_events` (what `run_to_completion` does internally —
+//!     it is a thin compatibility wrapper that folds the stream down to
+//!     terminal results);
+//!   * **threaded**: [`Coordinator`] owns the engine on a worker thread
+//!     and fans events out over one channel per request
+//!     ([`router::RequestStream`]), with `cancel` edges back in.
+//!
+//! Admission order is priority-aware ([`batcher::WaitQueue`]): highest
+//! [`GenRequest::priority`] first, ties by earliest deadline, then
+//! submission order — uniform-priority workloads keep exact FIFO, so the
+//! session API reproduces the pre-redesign schedule token for token.
+//! Deadlines ([`GenRequest::deadline_ms`]) are enforced in both
+//! non-terminal states: waiting requests are swept at every scheduling
+//! step, decoding requests before every decode batch.
 
 pub mod batcher;
 pub mod engine;
@@ -12,5 +53,7 @@ pub mod sampler;
 pub mod tokenizer;
 
 pub use engine::{Engine, EngineConfig};
-pub use request::{GenRequest, GenResult, SamplingParams};
-pub use router::Coordinator;
+pub use request::{
+    FinishReason, GenEvent, GenRequest, GenResult, RequestHandle, SamplingParams, SubmitError,
+};
+pub use router::{Coordinator, RequestStream};

@@ -1,5 +1,11 @@
-//! Generation request/response types shared by the router, batcher and
-//! engine.
+//! Generation request/response types and the per-request lifecycle events
+//! shared by the router, batcher and engine.
+//!
+//! A request moves through the state machine documented in the
+//! [`crate::coordinator`] module docs (Queued → Prefilled → Decoding →
+//! Finished/Failed/Cancelled/Expired); every transition is published as a
+//! [`GenEvent`] and every terminal transition carries the final
+//! [`GenResult`] with its [`FinishReason`].
 
 use std::time::Instant;
 
@@ -29,6 +35,15 @@ pub struct GenRequest {
     /// sampled ones and records their log-probs (perplexity through the
     /// *serving* path — used by the Table 4 quantized-cache evaluation).
     pub forced_tokens: Option<Vec<i32>>,
+    /// Latency bound in milliseconds from submission. Enforced at admission
+    /// (a request whose deadline passed while waiting is never prefilled)
+    /// and per decode step (an in-flight request past its deadline is
+    /// retired with [`FinishReason::DeadlineExceeded`]). `None` = no bound.
+    pub deadline_ms: Option<u64>,
+    /// Admission priority: higher values are admitted first; ties break by
+    /// earliest deadline, then submission order. Default 0 keeps the queue
+    /// pure FIFO.
+    pub priority: i32,
 }
 
 impl GenRequest {
@@ -40,8 +55,38 @@ impl GenRequest {
             sampling: SamplingParams::default(),
             stop_token: None,
             forced_tokens: None,
+            deadline_ms: None,
+            priority: 0,
         }
     }
+
+    /// Builder-style deadline (TTL from submission).
+    pub fn with_deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Builder-style admission priority (higher = sooner).
+    pub fn with_priority(mut self, p: i32) -> Self {
+        self.priority = p;
+        self
+    }
+}
+
+/// Why a request reached a terminal state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generation ran to its stop condition (max tokens, stop token, or
+    /// cache-capacity retirement).
+    Completed,
+    /// The engine could not serve the request (validation, admission or
+    /// decode failure); `GenResult::error` holds the message.
+    Failed,
+    /// The client cancelled the request mid-flight; `GenResult::tokens`
+    /// holds whatever was generated before the cancel.
+    Cancelled,
+    /// The request's `deadline_ms` elapsed while waiting or decoding.
+    DeadlineExceeded,
 }
 
 #[derive(Clone, Debug)]
@@ -55,17 +100,135 @@ pub struct GenResult {
     pub prompt_len: usize,
     pub ttft_ms: f64,
     pub total_ms: f64,
+    /// Milliseconds spent in the waiting queue before prefill admission
+    /// (0.0 for requests that never reached a slot).
+    pub queue_wait_ms: f64,
+    /// How the request terminated.
+    pub reason: FinishReason,
     /// Set when the request could not be served (admission or decode
-    /// failure); `tokens`/`text` then hold whatever was generated before the
-    /// failure. `None` for a normally completed generation.
+    /// failure) or expired past its deadline; `tokens`/`text` then hold
+    /// whatever was generated before the failure. `None` for completed and
+    /// client-cancelled requests.
     pub error: Option<String>,
+}
+
+/// One lifecycle transition of a tracked request, streamed in submission
+/// order per request via [`crate::coordinator::Engine::poll_events`] or the
+/// per-request channel of a [`crate::coordinator::Coordinator`] stream.
+#[derive(Clone, Debug)]
+pub enum GenEvent {
+    /// The request passed admission-queue bounds and is waiting for a slot.
+    Queued { id: u64 },
+    /// Prefill admitted the request into a slot; its prompt is cached and
+    /// the first token was chosen (`ttft_ms` = submission → first token).
+    Prefilled { id: u64, prompt_len: usize, ttft_ms: f64 },
+    /// One generated (or teacher-forced) token, with the text it decodes to
+    /// and its log-probability under the model.
+    Token { id: u64, token: i32, text_delta: String, logprob: f64 },
+    /// Terminal: normal completion.
+    Finished(GenResult),
+    /// Terminal: the engine failed the request (see `GenResult::error`).
+    Failed(GenResult),
+    /// Terminal: the client cancelled the request.
+    Cancelled(GenResult),
+    /// Terminal: the request's deadline elapsed.
+    DeadlineExceeded(GenResult),
+}
+
+impl GenEvent {
+    /// The request this event belongs to.
+    pub fn id(&self) -> u64 {
+        match self {
+            GenEvent::Queued { id }
+            | GenEvent::Prefilled { id, .. }
+            | GenEvent::Token { id, .. } => *id,
+            GenEvent::Finished(r)
+            | GenEvent::Failed(r)
+            | GenEvent::Cancelled(r)
+            | GenEvent::DeadlineExceeded(r) => r.id,
+        }
+    }
+
+    /// The final result, if this is a terminal event.
+    pub fn result(&self) -> Option<&GenResult> {
+        match self {
+            GenEvent::Finished(r)
+            | GenEvent::Failed(r)
+            | GenEvent::Cancelled(r)
+            | GenEvent::DeadlineExceeded(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    /// Consume the event, returning the final result for terminal events.
+    pub fn into_result(self) -> Option<GenResult> {
+        match self {
+            GenEvent::Finished(r)
+            | GenEvent::Failed(r)
+            | GenEvent::Cancelled(r)
+            | GenEvent::DeadlineExceeded(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        self.result().is_some()
+    }
+}
+
+/// Admission rejection: returned by `Engine::submit` instead of silently
+/// growing the waiting queue without bound. The request is handed back so
+/// the caller can retry after draining (backpressure) or fail it upstream.
+#[derive(Debug)]
+pub enum SubmitError {
+    QueueFull { req: GenRequest, capacity: usize },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { req, capacity } => {
+                write!(f, "admission queue full ({capacity} waiting) for request {}", req.id)
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+impl SubmitError {
+    /// Take the rejected request back (for retry or upstream failure).
+    pub fn into_request(self) -> GenRequest {
+        match self {
+            SubmitError::QueueFull { req, .. } => req,
+        }
+    }
+}
+
+/// Ticket for a submitted request on the single-threaded [`Engine`] driver:
+/// carries the id used to correlate [`GenEvent`]s from `poll_events` and to
+/// [`Engine::cancel`] the request. (The threaded `Coordinator` front-end
+/// wraps this in a `RequestStream` that owns the per-request channel.)
+///
+/// [`Engine`]: crate::coordinator::Engine
+/// [`Engine::cancel`]: crate::coordinator::Engine::cancel
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RequestHandle {
+    pub id: u64,
 }
 
 /// Internal: a request being tracked by the scheduler.
 pub struct Tracked {
     pub req: GenRequest,
     pub arrived: Instant,
+    /// Absolute deadline (arrived + deadline_ms), precomputed at admission.
+    pub deadline: Option<Instant>,
+    /// Monotonic submission counter — the FIFO tie-breaker of the priority
+    /// queue, so runs with uniform priorities pop in exact submission order.
+    pub submit_seq: u64,
     pub first_token: Option<Instant>,
+    /// Waiting-queue residency, stamped when prefill pops the request.
+    pub queue_wait_ms: f64,
     pub generated: Vec<i32>,
     pub forced_logprob: f64,
     pub forced_count: usize,
@@ -73,10 +236,16 @@ pub struct Tracked {
 
 impl Tracked {
     pub fn new(req: GenRequest) -> Self {
+        let arrived = Instant::now();
+        let deadline =
+            req.deadline_ms.map(|ms| arrived + std::time::Duration::from_millis(ms));
         Tracked {
             req,
-            arrived: Instant::now(),
+            arrived,
+            deadline,
+            submit_seq: 0,
             first_token: None,
+            queue_wait_ms: 0.0,
             generated: Vec::new(),
             forced_logprob: 0.0,
             forced_count: 0,
@@ -95,7 +264,14 @@ impl Tracked {
         false
     }
 
-    pub fn finish(&self) -> GenResult {
+    /// Has this request's deadline passed at `now`? (Both lifecycle states
+    /// check this: waiting requests at every admission sweep, decoding
+    /// requests before every decode batch.)
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.map(|d| now >= d).unwrap_or(false)
+    }
+
+    fn result(&self, reason: FinishReason, error: Option<String>) -> GenResult {
         let now = Instant::now();
         GenResult {
             id: self.req.id,
@@ -109,16 +285,36 @@ impl Tracked {
                 .map(|t| (t - self.arrived).as_secs_f64() * 1e3)
                 .unwrap_or(0.0),
             total_ms: (now - self.arrived).as_secs_f64() * 1e3,
-            error: None,
+            queue_wait_ms: self.queue_wait_ms,
+            reason,
+            error,
         }
+    }
+
+    pub fn finish(&self) -> GenResult {
+        self.result(FinishReason::Completed, None)
     }
 
     /// Terminate this request with an error result, preserving whatever was
     /// generated before the failure (the engine uses this to fail one
     /// request without dropping the rest of its batch).
     pub fn fail(&self, msg: impl Into<String>) -> GenResult {
-        let mut res = self.finish();
-        res.error = Some(msg.into());
-        res
+        self.result(FinishReason::Failed, Some(msg.into()))
+    }
+
+    /// Terminal result for a client cancellation (not an error: partial
+    /// tokens are returned and `error` stays `None`).
+    pub fn cancel(&self) -> GenResult {
+        self.result(FinishReason::Cancelled, None)
+    }
+
+    /// Terminal result for a deadline expiry; `error` carries the bound so
+    /// non-streaming callers that only inspect `error` still see it.
+    pub fn expire(&self) -> GenResult {
+        let ms = self.req.deadline_ms.unwrap_or(0);
+        self.result(
+            FinishReason::DeadlineExceeded,
+            Some(format!("deadline exceeded ({ms}ms)")),
+        )
     }
 }

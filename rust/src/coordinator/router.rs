@@ -1,17 +1,73 @@
 //! Request router: a threaded front-end over the engine (vLLM-router
-//! style). Clients submit `GenRequest`s from any thread; a worker thread
-//! owns the engine, runs the continuous-batching loop, and delivers
-//! `GenResult`s back over a channel.
+//! style). Clients open request sessions from any thread; a worker thread
+//! owns the engine, runs the continuous-batching loop, and fans the
+//! engine's [`GenEvent`] stream out over one channel per request — so a
+//! client holding a [`RequestStream`] observes its tokens as they decode,
+//! can [`RequestStream::cancel`] mid-flight, and sees queue-full
+//! backpressure and deadline expiry as terminal events instead of silence.
+//! Terminal results of requests whose stream receiver is gone (dropped
+//! fire-and-forget, or never held) fall back to a global results channel
+//! for the legacy `collect(n)` pattern — streaming clients that do hold
+//! their streams don't grow that channel.
 
 use super::engine::Engine;
-use super::request::{GenRequest, GenResult};
+use super::request::{GenEvent, GenRequest, GenResult, SubmitError, Tracked};
 use anyhow::Result;
+use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;
 
 enum Cmd {
-    Submit(GenRequest),
+    Submit(Box<GenRequest>, Sender<GenEvent>),
+    Cancel(u64),
     Shutdown,
+}
+
+/// Client-side session handle for one request served by a [`Coordinator`]:
+/// a stream of lifecycle events plus a cancellation edge back to the
+/// worker. Dropping the stream does not cancel the request (its terminal
+/// result still reaches `Coordinator::collect`).
+pub struct RequestStream {
+    id: u64,
+    events: Receiver<GenEvent>,
+    cmd_tx: Sender<Cmd>,
+}
+
+impl RequestStream {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block for the next lifecycle event; `None` once the stream is
+    /// exhausted (terminal event already delivered, or the router shut
+    /// down).
+    pub fn recv(&self) -> Option<GenEvent> {
+        self.events.recv().ok()
+    }
+
+    /// Non-blocking poll for the next event.
+    pub fn try_recv(&self) -> Option<GenEvent> {
+        self.events.try_recv().ok()
+    }
+
+    /// Ask the worker to cancel this request mid-flight (waiting or
+    /// decoding). Fire-and-forget: the acknowledgement is the terminal
+    /// [`GenEvent::Cancelled`] on this stream (a request that already
+    /// finished delivers its original terminal event instead).
+    pub fn cancel(&self) {
+        let _ = self.cmd_tx.send(Cmd::Cancel(self.id));
+    }
+
+    /// Drain events until the terminal one and return its result (`None`
+    /// if the router shut down before this request terminated).
+    pub fn wait(self) -> Option<GenResult> {
+        while let Some(ev) = self.recv() {
+            if let Some(r) = ev.into_result() {
+                return Some(r);
+            }
+        }
+        None
+    }
 }
 
 pub struct Coordinator {
@@ -34,13 +90,45 @@ impl Coordinator {
         let (res_tx, results) = channel::<GenResult>();
         let worker = std::thread::spawn(move || -> Result<String> {
             let mut engine = factory()?;
+            let mut streams: HashMap<u64, Sender<GenEvent>> = HashMap::new();
             let mut shutdown = false;
+            let handle_cmd = |engine: &mut Engine,
+                                  streams: &mut HashMap<u64, Sender<GenEvent>>,
+                                  res_tx: &Sender<GenResult>,
+                                  cmd: Cmd|
+             -> bool {
+                match cmd {
+                    Cmd::Submit(req, ev_tx) => match engine.submit(*req) {
+                        Ok(handle) => {
+                            streams.insert(handle.id, ev_tx);
+                        }
+                        Err(SubmitError::QueueFull { req, capacity }) => {
+                            // Backpressure surfaces as a terminal event on
+                            // the stream (or the results channel when the
+                            // stream is gone) instead of an unbounded queue.
+                            let res = Tracked::new(req)
+                                .fail(format!("admission queue full ({capacity} waiting)"));
+                            if ev_tx.send(GenEvent::Failed(res.clone())).is_err() {
+                                let _ = res_tx.send(res);
+                            }
+                        }
+                    },
+                    Cmd::Cancel(id) => {
+                        // Unknown/finished ids are a no-op; the Cancelled
+                        // event for live ones is routed on the next drain.
+                        engine.cancel(id);
+                    }
+                    Cmd::Shutdown => return true,
+                }
+                false
+            };
             loop {
                 // drain incoming commands without blocking while busy
                 loop {
                     match rx.try_recv() {
-                        Ok(Cmd::Submit(r)) => engine.submit(r),
-                        Ok(Cmd::Shutdown) => shutdown = true,
+                        Ok(cmd) => {
+                            shutdown |= handle_cmd(&mut engine, &mut streams, &res_tx, cmd)
+                        }
                         Err(TryRecvError::Empty) => break,
                         Err(TryRecvError::Disconnected) => {
                             shutdown = true;
@@ -48,20 +136,29 @@ impl Coordinator {
                         }
                     }
                 }
+                // route events produced by cancellations handled above (or
+                // by the previous step) before possibly blocking
+                for ev in engine.poll_events() {
+                    route_event(&mut streams, &res_tx, ev);
+                }
                 if engine.idle() {
                     if shutdown {
                         break;
                     }
                     // block for the next command
                     match rx.recv() {
-                        Ok(Cmd::Submit(r)) => engine.submit(r),
-                        Ok(Cmd::Shutdown) | Err(_) => break,
+                        Ok(cmd) => {
+                            if handle_cmd(&mut engine, &mut streams, &res_tx, cmd) {
+                                break;
+                            }
+                        }
+                        Err(_) => break,
                     }
                     continue;
                 }
                 engine.step()?;
-                for r in engine.take_finished() {
-                    let _ = res_tx.send(r);
+                for ev in engine.poll_events() {
+                    route_event(&mut streams, &res_tx, ev);
                 }
             }
             Ok(engine.metrics.report())
@@ -69,11 +166,25 @@ impl Coordinator {
         Coordinator { tx, results, worker: Some(worker) }
     }
 
-    pub fn submit(&self, req: GenRequest) {
-        let _ = self.tx.send(Cmd::Submit(req));
+    /// Open a request session: returns the per-request event stream. The
+    /// submission itself is asynchronous; admission-queue rejection arrives
+    /// as a terminal [`GenEvent::Failed`] on the stream.
+    pub fn submit(&self, req: GenRequest) -> RequestStream {
+        let id = req.id;
+        let (ev_tx, events) = channel();
+        let _ = self.tx.send(Cmd::Submit(Box::new(req), ev_tx));
+        RequestStream { id, events, cmd_tx: self.tx.clone() }
     }
 
-    /// Blockingly collect `n` results.
+    /// Cancel a request by id without holding its stream.
+    pub fn cancel(&self, id: u64) {
+        let _ = self.tx.send(Cmd::Cancel(id));
+    }
+
+    /// Blockingly collect `n` terminal results (any request, completion
+    /// order). Only requests whose [`RequestStream`] receiver was dropped
+    /// deliver here — drop the stream right after `submit` for the
+    /// fire-and-forget pattern, or hold it and consume events instead.
     pub fn collect(&self, n: usize) -> Vec<GenResult> {
         (0..n).filter_map(|_| self.results.recv().ok()).collect()
     }
@@ -85,5 +196,30 @@ impl Coordinator {
             Some(h) => h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?,
             None => Ok(String::new()),
         }
+    }
+}
+
+/// Deliver one engine event to its request's stream; a terminal event that
+/// cannot be delivered (stream receiver dropped) falls back to the global
+/// results channel, and either way closes the stream. Routing to exactly
+/// one sink keeps a long-lived router's memory bounded by its *live*
+/// requests — an unread mirror channel would otherwise grow by one result
+/// per request forever.
+fn route_event(
+    streams: &mut HashMap<u64, Sender<GenEvent>>,
+    res_tx: &Sender<GenResult>,
+    ev: GenEvent,
+) {
+    let id = ev.id();
+    let terminal_result = ev.result().cloned();
+    let delivered = match streams.get(&id) {
+        Some(tx) => tx.send(ev).is_ok(),
+        None => false,
+    };
+    if let Some(r) = terminal_result {
+        if !delivered {
+            let _ = res_tx.send(r);
+        }
+        streams.remove(&id);
     }
 }

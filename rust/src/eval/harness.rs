@@ -4,7 +4,7 @@
 
 use super::tasks;
 use crate::artifacts::{EvalConfig, ModelEntry};
-use crate::coordinator::request::GenRequest;
+use crate::coordinator::request::{GenEvent, GenRequest};
 use crate::coordinator::sampler::log_prob;
 use crate::coordinator::tokenizer;
 use crate::coordinator::Engine;
@@ -130,7 +130,7 @@ pub fn run_long_tasks(engine: &mut Engine, eval: &EvalConfig)
             let gen_len = inst.expected.len().max(1).min(eval.long_gen_tokens.max(4));
             let req = GenRequest::new(next_id, prompt, gen_len);
             next_id += 1;
-            engine.submit(req);
+            engine.submit(req).map_err(|e| anyhow::anyhow!("eval submit bounced: {e}"))?;
         }
         let mut finished = engine.run_to_completion()?;
         // results arrive in completion order; re-align with submission order
@@ -153,6 +153,11 @@ pub fn run_long_tasks(engine: &mut Engine, eval: &EvalConfig)
 /// prompt, then force the document tokens one decode step at a time. This
 /// exercises the real cache (including quantized storage) and is the Table 4
 /// evaluator.
+///
+/// Driven through the session event loop (`step` + `poll_events`): the
+/// negative log-likelihood accumulates from terminal `Finished` events as
+/// documents complete, rather than materializing every result up front —
+/// the same consumption pattern a streaming client uses.
 pub fn ppl_from_engine(engine: &mut Engine, tokens: &[i32], doc_len: usize,
                        prompt_len: usize) -> Result<f64> {
     let n_docs = tokens.len() / doc_len;
@@ -161,18 +166,38 @@ pub fn ppl_from_engine(engine: &mut Engine, tokens: &[i32], doc_len: usize,
         let doc = &tokens[d * doc_len..(d + 1) * doc_len];
         let mut req = GenRequest::new(id, doc[..prompt_len].to_vec(), doc_len - prompt_len);
         req.forced_tokens = Some(doc[prompt_len..].to_vec());
-        engine.submit(req);
+        engine.submit(req).map_err(|e| anyhow::anyhow!("ppl submit bounced: {e}"))?;
         id += 1;
     }
-    let finished = engine.run_to_completion()?;
     let mut nll = 0.0;
     let mut count = 0usize;
-    for r in finished {
-        if let Some(e) = &r.error {
-            bail!("engine failed request {}: {e}", r.id);
+    let mut done = 0usize;
+    while !engine.idle() {
+        engine.step()?;
+        for ev in engine.poll_events() {
+            match ev {
+                GenEvent::Finished(r) => {
+                    nll -= r.forced_logprob;
+                    count += r.forced_count;
+                    done += 1;
+                }
+                GenEvent::Failed(r)
+                | GenEvent::Cancelled(r)
+                | GenEvent::DeadlineExceeded(r) => {
+                    bail!(
+                        "engine did not serve request {} ({:?}): {}",
+                        r.id,
+                        r.reason,
+                        r.error.as_deref().unwrap_or("no error message")
+                    );
+                }
+                // progress events (Queued/Prefilled/Token) need no action
+                _ => {}
+            }
         }
-        nll -= r.forced_logprob;
-        count += r.forced_count;
+    }
+    if done != n_docs {
+        bail!("served {done}/{n_docs} ppl documents");
     }
     Ok((nll / count as f64).exp())
 }

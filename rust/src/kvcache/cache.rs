@@ -47,7 +47,7 @@
 
 use super::pool::{BlockId, BlockPool};
 use crate::linalg::hadamard::signs_from_seed;
-use crate::quant::{dequantize, quantize, QuantKind, QuantizedRow};
+use crate::quant::{dequantize_rows, quantize, QuantKind, QuantizedRow};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
@@ -153,7 +153,14 @@ impl KvCache {
         id
     }
 
-    pub fn free_seq(&mut self, id: SeqId) {
+    /// Free a sequence and every page it holds — the mid-flight reclaim
+    /// path behind engine cancellation, deadline expiry and retirement
+    /// (safe at any point in the sequence's life, including between a
+    /// prefill admission and its first decode step). Returns the number of
+    /// pages released, so callers can account reclaim work; 0 for unknown
+    /// ids (double-free is a no-op).
+    pub fn free_seq(&mut self, id: SeqId) -> usize {
+        let mut released = 0usize;
         if let Some(st) = self.seqs.remove(&id) {
             self.total -= st.len;
             for (l, planes) in st.blocks.iter().enumerate() {
@@ -167,10 +174,12 @@ impl KvCache {
                             }
                         }
                         plane.pool.release(*b);
+                        released += 1;
                     }
                 }
             }
         }
+        released
     }
 
     pub fn seq_len(&self, id: SeqId) -> usize {
@@ -328,10 +337,13 @@ impl KvCache {
 
     /// Shared gather kernel for `stage`/`stage_rows`: rows `[t0, t1)` into
     /// `out` (already sized `(t1-t0)*w`). F32 copies whole-block runs;
-    /// quantized dequantizes row by row, allocation-free — `dequantize`
-    /// decodes packed codes straight into the staging slice (no per-row
-    /// scratch `Vec`), which matters on the decode hot path where this
-    /// runs once per token per layer per plane.
+    /// quantized mode decodes the whole suffix through the *batched*
+    /// multi-row dequant ([`crate::quant::dequantize_rows`]): packed codes
+    /// go straight into the staging slice (no per-row scratch `Vec`), the
+    /// SIMD tier is resolved once per call, and one inverse-Hadamard pass
+    /// covers every staged row — bit-identical to per-row `dequantize`,
+    /// which matters on the decode hot path where this runs once per token
+    /// per layer per plane and in O(suffix) catch-up gathers.
     fn stage_range(&self, st: &SeqState, layer: usize, plane: usize, t0: usize, t1: usize,
                    out: &mut [f32]) {
         let pl = &self.planes[layer * 2 + plane];
@@ -348,13 +360,13 @@ impl KvCache {
                 t += take;
             }
         } else {
-            for t in t0..t1 {
+            let rows = (t0..t1).map(|t| {
                 let b = st.blocks[layer][plane][t / tpb];
-                let q = pl.qrows[b as usize * tpb + t % tpb]
+                pl.qrows[b as usize * tpb + t % tpb]
                     .as_ref()
-                    .expect("missing quantized row");
-                dequantize(q, &pl.signs, &mut out[(t - t0) * w..(t - t0 + 1) * w]);
-            }
+                    .expect("missing quantized row")
+            });
+            dequantize_rows(rows, &pl.signs, out);
         }
     }
 
@@ -538,6 +550,55 @@ mod tests {
             assert!(c.stage_rows(s, 0, 0, 5, 12, &mut vec![0.0; 7 * 8]).is_err(),
                     "out-of-range stage_rows must error");
         }
+    }
+
+    /// A multi-row `stage_rows` (batched dequant: one tier resolve, one
+    /// shared inverse-Hadamard pass) must be bit-identical to staging the
+    /// same range one row at a time, in every quant mode.
+    #[test]
+    fn batched_stage_rows_matches_single_row_calls() {
+        for quant in [QuantKind::F32, QuantKind::Int4, QuantKind::Int3] {
+            let mut c = KvCache::new(cfg(quant));
+            let s = c.new_seq();
+            for t in 0..13 {
+                let k: Vec<f32> = (0..8).map(|i| ((t * 7 + i) as f32 * 0.21).sin()).collect();
+                let v: Vec<f32> = (0..12).map(|i| ((t * 11 + i) as f32 * 0.19).cos()).collect();
+                c.append(s, &[(&k, &v), (&k, &v)]).unwrap();
+            }
+            for (layer, plane, w) in [(0usize, 0usize, 8usize), (1, 1, 12)] {
+                for (t0, t1) in [(0usize, 13usize), (4, 11), (12, 13)] {
+                    let mut batched = vec![f32::NAN; (t1 - t0) * w];
+                    c.stage_rows(s, layer, plane, t0, t1, &mut batched).unwrap();
+                    let mut single = vec![f32::NAN; (t1 - t0) * w];
+                    for t in t0..t1 {
+                        c.stage_rows(s, layer, plane, t, t + 1,
+                                     &mut single[(t - t0) * w..(t - t0 + 1) * w])
+                            .unwrap();
+                    }
+                    assert!(
+                        batched.iter().zip(&single).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{quant:?} L{layer} p{plane} rows {t0}..{t1}: batched diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn free_seq_reports_released_pages() {
+        let mut c = KvCache::new(cfg(QuantKind::F32));
+        let s = c.new_seq();
+        let k = vec![0.0; 8];
+        let v = vec![0.0; 12];
+        for _ in 0..9 {
+            c.append(s, &[(&k, &v), (&k, &v)]).unwrap();
+        }
+        // 9 tokens at 4/block = 3 pages per plane × 4 planes
+        let in_use = c.blocks_in_use();
+        assert_eq!(in_use, 12);
+        assert_eq!(c.free_seq(s), in_use, "released count must match pages held");
+        assert_eq!(c.free_seq(s), 0, "double free is a counted no-op");
+        assert_eq!(c.blocks_in_use(), 0);
     }
 
     #[test]

@@ -2,6 +2,10 @@
 //!
 //! Subcommands:
 //!   serve     demo serving run: batched generation through the coordinator
+//!             (--stream prints lifecycle events live; --deadline-ms bounds
+//!             per-request latency; --queue-cap bounds the admission queue
+//!             and exercises QueueFull backpressure; --policy picks the
+//!             batching policy: eager | full | threshold<k>)
 //!   eval      evaluate one variant (ppl + zero-shot tasks)
 //!   tables    regenerate the paper's tables/figures (--table N | --figure F)
 //!   compress  run the pure-rust compression mirror over an .rtz archive
@@ -10,6 +14,7 @@
 //! Examples:
 //!   repro info
 //!   repro serve --model tiny-mha --variant recal@50 --requests 16
+//!   repro serve --requests 16 --stream --deadline-ms 2000 --queue-cap 4
 //!   repro tables --table 1 --models tiny-mha --mc 32 --ppl-tokens 4096
 //!   repro tables --figure 2
 //!   repro compress --model tiny-mha --method recal --ratio 0.6
@@ -17,7 +22,7 @@
 
 use anyhow::{bail, Context, Result};
 use recalkv::artifacts::{Manifest, TensorArchive};
-use recalkv::coordinator::{Engine, EngineConfig, GenRequest};
+use recalkv::coordinator::{Engine, EngineConfig, GenRequest, GenResult};
 use recalkv::eval::report::{self, EvalSizes};
 use recalkv::eval::tasks;
 use recalkv::quant::QuantKind;
@@ -25,7 +30,7 @@ use recalkv::runtime::Runtime;
 use recalkv::util::cli::Args;
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["quick", "fisher", "quiet"]);
+    let args = Args::from_env(&["quick", "fisher", "quiet", "stream"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
     let dir = args.opt_or("artifacts", "artifacts");
     match cmd {
@@ -65,7 +70,41 @@ fn info(dir: &str) -> Result<()> {
     Ok(())
 }
 
+/// Drain the engine's event stream, optionally narrating it live
+/// (`--stream`), and collect terminal results.
+fn drain_events(engine: &mut Engine, stream: bool, out: &mut Vec<GenResult>) {
+    use recalkv::coordinator::GenEvent;
+    for ev in engine.poll_events() {
+        if stream {
+            match &ev {
+                GenEvent::Queued { id } => println!("req {id:>3}: queued"),
+                GenEvent::Prefilled { id, prompt_len, ttft_ms } => println!(
+                    "req {id:>3}: prefilled {prompt_len} prompt tokens, ttft {ttft_ms:.1}ms"
+                ),
+                GenEvent::Token { id, text_delta, logprob, .. } => println!(
+                    "req {id:>3}: +{text_delta:?} (lp {logprob:.2})"
+                ),
+                GenEvent::Finished(r) => println!(
+                    "req {:>3}: finished '{}'", r.id,
+                    r.text.chars().take(32).collect::<String>()
+                ),
+                GenEvent::Failed(r) => println!(
+                    "req {:>3}: FAILED — {}", r.id, r.error.as_deref().unwrap_or("")
+                ),
+                GenEvent::Cancelled(r) => println!("req {:>3}: cancelled", r.id),
+                GenEvent::DeadlineExceeded(r) => println!(
+                    "req {:>3}: deadline exceeded after {:.1}ms", r.id, r.total_ms
+                ),
+            }
+        }
+        if let Some(r) = ev.into_result() {
+            out.push(r);
+        }
+    }
+}
+
 fn serve(dir: &str, args: &Args) -> Result<()> {
+    use recalkv::coordinator::{FinishReason, SubmitError};
     let man = Manifest::load(dir)?;
     let rt = Runtime::cpu()?;
     let mname = args.opt_or("model", "tiny-mha");
@@ -74,38 +113,76 @@ fn serve(dir: &str, args: &Args) -> Result<()> {
     let max_new = args.usize_or("max-new", 24);
     let quant = QuantKind::parse(args.opt_or("bits", "f32"))
         .context("bad --bits (f32|4|3)")?;
+    let policy = recalkv::coordinator::batcher::BatchPolicy::parse(
+        args.opt_or("policy", "eager"))
+        .map_err(|e| anyhow::anyhow!("bad --policy: {e}"))?;
+    let queue_cap = args.usize_or("queue-cap", usize::MAX);
+    let deadline_ms: Option<u64> = match args.opt("deadline-ms") {
+        Some(s) => Some(s.parse().context("bad --deadline-ms (integer ms)")?),
+        None => None,
+    };
+    let stream = args.has("stream");
     let model = man.model(mname)?;
     let variant = model.variant(vname)?;
-    println!("serving {mname}/{vname} quant={quant:?}");
-    let mut engine = Engine::new(&rt, model, variant,
-                                 EngineConfig { quant, ..Default::default() })?;
+    println!(
+        "serving {mname}/{vname} quant={quant:?} policy={} queue_cap={}",
+        policy.name(),
+        if queue_cap == usize::MAX { "unbounded".to_string() } else { queue_cap.to_string() },
+    );
+    let mut engine = Engine::new(
+        &rt,
+        model,
+        variant,
+        EngineConfig { quant, policy, queue_cap, ..Default::default() },
+    )?;
 
     // demo workload: long-context task prompts (real use of the cache)
     let insts = tasks::gen_long("needle", man.eval.corpus_seed, n_req,
                                 man.eval.long_ctx_chars);
+    let t0 = std::time::Instant::now();
+    let mut results: Vec<GenResult> = Vec::new();
     for (i, inst) in insts.iter().enumerate() {
         let mut prompt = recalkv::coordinator::tokenizer::encode(&inst.prompt);
         let cap = engine.max_prompt_len();
         if prompt.len() > cap {
             prompt.drain(..prompt.len() - cap);
         }
-        engine.submit(GenRequest::new(i as u64 + 1, prompt, max_new));
-    }
-    let t0 = std::time::Instant::now();
-    let results = engine.run_to_completion()?;
-    let dt = t0.elapsed();
-    let mut failed = 0usize;
-    for r in &results {
-        match &r.error {
-            Some(e) => {
-                failed += 1;
-                println!("req {:>3}: FAILED after {:>8.1}ms — {e}", r.id, r.total_ms);
+        let mut req = GenRequest::new(i as u64 + 1, prompt, max_new);
+        req.deadline_ms = deadline_ms;
+        // bounded-queue backpressure: when the admission queue bounces the
+        // request, drive the engine until the queue drains, then retry.
+        let mut pending = Some(req);
+        while let Some(r) = pending.take() {
+            match engine.submit(r) {
+                Ok(_handle) => {}
+                Err(SubmitError::QueueFull { req, .. }) => {
+                    pending = Some(req);
+                    engine.step()?;
+                    drain_events(&mut engine, stream, &mut results);
+                }
             }
-            None => println!(
-                "req {:>3}: ttft {:>7.1}ms total {:>8.1}ms  '{}'",
-                r.id, r.ttft_ms, r.total_ms,
-                r.text.chars().take(32).collect::<String>()
-            ),
+        }
+        drain_events(&mut engine, stream, &mut results);
+    }
+    while !engine.idle() {
+        engine.step()?;
+        drain_events(&mut engine, stream, &mut results);
+    }
+    drain_events(&mut engine, stream, &mut results);
+    let dt = t0.elapsed();
+    results.sort_by_key(|r| r.id);
+    if !stream {
+        for r in &results {
+            match &r.error {
+                Some(e) => {
+                    println!("req {:>3}: {:?} after {:>8.1}ms — {e}", r.id, r.reason, r.total_ms)
+                }
+                None => println!(
+                    "req {:>3}: ttft {:>7.1}ms total {:>8.1}ms  '{}'",
+                    r.id, r.ttft_ms, r.total_ms,
+                    r.text.chars().take(32).collect::<String>()
+                ),
+            }
         }
     }
     println!("\n{}", engine.metrics.report());
@@ -120,6 +197,9 @@ fn serve(dir: &str, args: &Args) -> Result<()> {
             / dt.as_secs_f64(),
         engine.cache.config.bytes_per_token(),
     );
+    // expiry under an explicit --deadline-ms is expected load-shedding, not
+    // a serving failure; hard failures still make the demo exit non-zero
+    let failed = results.iter().filter(|r| r.reason == FinishReason::Failed).count();
     if failed > 0 {
         anyhow::bail!("{failed}/{} requests failed", results.len());
     }
@@ -301,7 +381,8 @@ fn compress(dir: &str, args: &Args) -> Result<()> {
         table.print();
         println!(
             "swept {} keep-ratios over {} layers in {wall:.1}s on {} threads \
-             (CKA/whitening/SVD passes shared across ratios)",
+             (CKA/whitening/SVD passes and the rank-independent matrices \
+             shared across ratios)",
             keeps.len(),
             per_layer.len(),
             pool::num_threads()

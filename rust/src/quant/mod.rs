@@ -9,5 +9,6 @@
 pub mod pertoken;
 
 pub use pertoken::{
-    dequantize, quantize, unpack_int3_into, unpack_int4_into, QuantKind, QuantizedRow,
+    dequantize, dequantize_rows, quantize, unpack_int3_into, unpack_int4_into, QuantKind,
+    QuantizedRow,
 };

@@ -120,14 +120,21 @@ pub fn unpack_int4_into_scalar(packed: &[u8], out: &mut [i32]) {
 
 /// Fused int4 decode: codes → `code as f32 * scale`, straight into `out`.
 fn dequant_int4_into(packed: &[u8], scale: f32, out: &mut [f32]) {
+    dequant_int4_with(packed, scale, out, tier());
+}
+
+/// [`dequant_int4_into`] with the tier resolved by the caller — the batched
+/// multi-row path ([`dequantize_rows`]) resolves once per staged suffix
+/// instead of once per row.
+fn dequant_int4_with(packed: &[u8], scale: f32, out: &mut [f32], t: Tier) {
     assert!(packed.len() >= out.len().div_ceil(2), "packed int4 buffer too short");
     if out.len() < 16 {
         // below one 16-code vector step the dispatch is pure overhead
         return dequant_int4_scalar(packed, scale, out);
     }
-    match tier() {
+    match t {
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: tier() returns Avx2 only after is_x86_feature_detected!.
+        // SAFETY: t is Avx2 only if tier() observed is_x86_feature_detected!.
         Tier::Avx2 => unsafe { int4_avx2::dequant(packed, scale, out) },
         #[cfg(target_arch = "aarch64")]
         // SAFETY: NEON is mandatory on aarch64.
@@ -226,6 +233,59 @@ pub fn dequantize(row: &QuantizedRow, signs: &[f32], out: &mut [f32]) {
             }
             hadamard::inverse(out, signs);
         }
+    }
+}
+
+/// Batched multi-row dequantize: decode each row of `rows` (all the same
+/// kind, `signs.len()` wide) into consecutive slices of `out`, then run
+/// **one** inverse Hadamard pass over the whole buffer.
+///
+/// Bit-identical to calling [`dequantize`] row by row: every row's decode
+/// uses the same per-row scale and the same lane sequence, and
+/// `hadamard::inverse` processes rows independently (it chunks by
+/// `signs.len()`), so fusing the per-row inverse calls into one pass
+/// changes no arithmetic. What it *does* amortize across the staged
+/// suffix is the per-row SIMD tier resolve and the signs/chunk-size
+/// setup — the `KvCache::stage_rows` hot path (ROADMAP perf lever).
+pub fn dequantize_rows<'a, I>(rows: I, signs: &'a [f32], out: &mut [f32])
+where
+    I: Iterator<Item = &'a QuantizedRow>,
+{
+    let n = signs.len();
+    let t = tier();
+    let mut used = 0usize;
+    let mut needs_inverse = false;
+    let mut batch_kind: Option<QuantKind> = None;
+    for (i, row) in rows.enumerate() {
+        debug_assert_eq!(row.n, n);
+        // one shared inverse pass is only valid over a uniform-kind batch
+        // (true by construction: a cache stores exactly one kind)
+        debug_assert_eq!(*batch_kind.get_or_insert(row.kind), row.kind);
+        let dst = &mut out[i * n..(i + 1) * n];
+        match row.kind {
+            QuantKind::F32 => {
+                for (o, b) in dst.iter_mut().zip(row.packed.chunks_exact(4)) {
+                    *o = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+                }
+            }
+            QuantKind::Int4 => {
+                dequant_int4_with(&row.packed, row.scale, dst, t);
+                needs_inverse = true;
+            }
+            QuantKind::Int3 => {
+                for (w, base) in row.packed.chunks_exact(2).zip((0..n).step_by(5)) {
+                    let word = u16::from_le_bytes([w[0], w[1]]);
+                    for k in 0..5.min(n - base) {
+                        dst[base + k] = int3_code(word, k) as f32 * row.scale;
+                    }
+                }
+                needs_inverse = true;
+            }
+        }
+        used = i + 1;
+    }
+    if needs_inverse {
+        hadamard::inverse(&mut out[..used * n], signs);
     }
 }
 
@@ -449,6 +509,36 @@ mod tests {
                 assert!(
                     want_f.iter().zip(&got_f).all(|(a, b)| a.to_bits() == b.to_bits()),
                     "dequant n={n} scale={scale}"
+                );
+            }
+        }
+    }
+
+    /// The batched multi-row decode (one tier resolve + one shared inverse
+    /// Hadamard pass) must match per-row [`dequantize`] bit for bit — this
+    /// is what lets `KvCache::stage_rows` batch a staged suffix without
+    /// changing the staged image.
+    #[test]
+    fn batched_rows_match_per_row_dequantize_bitwise() {
+        let mut rng = Rng::new(77);
+        for kind in [QuantKind::F32, QuantKind::Int4, QuantKind::Int3] {
+            for n in [8usize, 48, 63] {
+                let signs = signs_from_seed(9, n);
+                let rows: Vec<QuantizedRow> = (0..7)
+                    .map(|_| {
+                        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+                        quantize(&x, &signs, kind)
+                    })
+                    .collect();
+                let mut per_row = vec![0.0f32; 7 * n];
+                for (i, q) in rows.iter().enumerate() {
+                    dequantize(q, &signs, &mut per_row[i * n..(i + 1) * n]);
+                }
+                let mut batched = vec![f32::NAN; 7 * n];
+                dequantize_rows(rows.iter(), &signs, &mut batched);
+                assert!(
+                    per_row.iter().zip(&batched).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{kind:?} n={n}: batched dequant diverged from per-row"
                 );
             }
         }

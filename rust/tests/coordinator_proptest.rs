@@ -1,12 +1,21 @@
 //! Coordinator invariants that don't need the XLA runtime: batching policy,
-//! sampler, request lifecycle, tokenizer, metrics.
+//! the priority/deadline admission queue (QueueFull backpressure, ordering),
+//! sampler, the session lifecycle (cancel-at-any-step page reclamation,
+//! deadline expiry in waiting and decoding states), tokenizer, metrics.
+//! The engine-in-the-loop halves of the same invariants live in
+//! `integration_runtime.rs` (they need artifacts + PJRT).
 
-use recalkv::coordinator::batcher::BatchPolicy;
-use recalkv::coordinator::request::{GenRequest, SamplingParams, Tracked};
+use recalkv::coordinator::batcher::{BatchPolicy, WaitQueue};
+use recalkv::coordinator::request::{
+    FinishReason, GenRequest, SamplingParams, SubmitError, Tracked,
+};
 use recalkv::coordinator::sampler::{log_prob, Sampler};
 use recalkv::coordinator::tokenizer;
+use recalkv::kvcache::{CacheConfig, KvCache, SeqId};
 use recalkv::prop_assert;
+use recalkv::quant::QuantKind;
 use recalkv::util::prop::check;
+use std::time::{Duration, Instant};
 
 #[test]
 fn tokenizer_roundtrip_property() {
@@ -107,4 +116,176 @@ fn forced_tokens_drive_teacher_forcing_bookkeeping() {
     let t = Tracked::new(req);
     assert_eq!(t.forced_count, 0);
     assert!(!t.done());
+}
+
+/// Admission ordering key mirror of `WaitQueue::pop_next` (priority desc,
+/// deadline asc with None last, submission order asc).
+fn admission_key(t: &Tracked) -> (i64, bool, Option<Instant>, u64) {
+    (-(t.req.priority as i64), t.deadline.is_none(), t.deadline, t.submit_seq)
+}
+
+#[test]
+fn wait_queue_backpressure_and_admission_order() {
+    check("wait_queue_order", 40, |ctx| {
+        let cap = 1 + ctx.usize_in(0, 8);
+        let mut q = WaitQueue::new(cap);
+        let n = ctx.usize_in(0, 14);
+        let mut accepted = 0usize;
+        for id in 0..n as u64 {
+            let mut req = GenRequest::new(id, vec![1], 1);
+            req.priority = ctx.rng.below(3) as i32 - 1;
+            if ctx.rng.below(2) == 0 {
+                req.deadline_ms = Some(100 + ctx.rng.below(1_000_000) as u64);
+            }
+            let was_full = q.len() == cap;
+            match q.push(req) {
+                Ok(()) => {
+                    prop_assert!(!was_full, "push succeeded past capacity {cap}");
+                    accepted += 1;
+                }
+                Err(SubmitError::QueueFull { req, capacity }) => {
+                    // QueueFull fires exactly at saturation and hands the
+                    // request back intact
+                    prop_assert!(was_full, "QueueFull below capacity ({} < {cap})", q.len());
+                    prop_assert!(capacity == cap, "reported cap {capacity} != {cap}");
+                    prop_assert!(req.id == id, "rejected wrong request: {}", req.id);
+                }
+            }
+        }
+        prop_assert!(q.len() == accepted.min(cap), "queue depth bookkeeping broke");
+        let mut popped: Vec<Tracked> = Vec::new();
+        while let Some(t) = q.pop_next() {
+            popped.push(t);
+        }
+        prop_assert!(popped.len() == accepted, "popped {} of {accepted}", popped.len());
+        for w in popped.windows(2) {
+            let (ka, kb) = (admission_key(&w[0]), admission_key(&w[1]));
+            prop_assert!(
+                ka <= kb,
+                "admission order violated: {:?} (id {}) before {:?} (id {})",
+                ka, w[0].req.id, kb, w[1].req.id
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Cancel-at-any-step: a random schedule of sequence creation, appends and
+/// mid-flight frees (the cache-side effect of `Engine::cancel`, deadline
+/// expiry and failure retirement) must keep page accounting exact at every
+/// step and return it to baseline once everything is freed — in f32 and
+/// quantized modes.
+#[test]
+fn cancel_at_any_step_returns_page_accounting_to_baseline() {
+    check("cancel_reclaim", 25, |ctx| {
+        let quant = match ctx.rng.below(3) {
+            0 => QuantKind::F32,
+            1 => QuantKind::Int4,
+            _ => QuantKind::Int3,
+        };
+        let tpb = 1 + ctx.usize_in(0, 7);
+        let mut cache = KvCache::new(CacheConfig {
+            n_layers: 2,
+            widths: vec![(8, 12), (8, 12)],
+            cache_len: 32,
+            tokens_per_block: tpb,
+            capacity_tokens: 64 * tpb,
+            quant,
+            signs_seed: 13,
+        });
+        prop_assert!(cache.blocks_in_use() == 0, "dirty baseline");
+        let pages_for = |len: usize| 4 * len.div_ceil(tpb); // 2 layers × 2 planes
+        let mut live: Vec<(SeqId, usize)> = Vec::new();
+        let k: Vec<f32> = (0..8).map(|i| (i as f32 * 0.3).sin()).collect();
+        let v: Vec<f32> = (0..12).map(|i| (i as f32 * 0.7).cos()).collect();
+        for step in 0..ctx.usize_in(4, 60) {
+            match ctx.rng.below(4) {
+                0 => live.push((cache.new_seq(), 0)),
+                1 | 2 if !live.is_empty() => {
+                    let i = ctx.rng.below(live.len());
+                    let (seq, len) = live[i];
+                    if cache.append(seq, &[(&k, &v), (&k, &v)]).is_ok() {
+                        live[i] = (seq, len + 1);
+                    }
+                }
+                _ if !live.is_empty() => {
+                    // cancel mid-flight: freeing must release exactly the
+                    // pages the sequence held
+                    let i = ctx.rng.below(live.len());
+                    let (seq, len) = live.remove(i);
+                    let released = cache.free_seq(seq);
+                    prop_assert!(
+                        released == pages_for(len),
+                        "step {step}: freed {released} pages for len {len}, want {}",
+                        pages_for(len)
+                    );
+                }
+                _ => {}
+            }
+            let want_tokens: usize = live.iter().map(|(_, l)| l).sum();
+            let want_pages: usize = live.iter().map(|(_, l)| pages_for(*l)).sum();
+            prop_assert!(
+                cache.total_tokens() == want_tokens,
+                "step {step}: {} cached tokens, want {want_tokens}",
+                cache.total_tokens()
+            );
+            prop_assert!(
+                cache.blocks_in_use() == want_pages,
+                "step {step}: {} pages in use, want {want_pages}",
+                cache.blocks_in_use()
+            );
+        }
+        for (seq, _) in live.drain(..) {
+            cache.free_seq(seq);
+        }
+        prop_assert!(
+            cache.blocks_in_use() == 0 && cache.total_tokens() == 0 && cache.live_seqs() == 0,
+            "accounting did not return to baseline: {} pages, {} tokens, {} seqs",
+            cache.blocks_in_use(), cache.total_tokens(), cache.live_seqs()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn deadline_expiry_in_waiting_and_decoding_states() {
+    // Waiting state: the admission queue sweeps expired requests out.
+    let mut q = WaitQueue::new(8);
+    q.push(GenRequest::new(1, vec![65], 4).with_deadline_ms(0)).unwrap();
+    q.push(GenRequest::new(2, vec![65], 4)).unwrap();
+    std::thread::sleep(Duration::from_millis(2));
+    let expired = q.take_expired(Instant::now());
+    assert_eq!(expired.len(), 1, "exactly the deadline-holder expires");
+    assert_eq!(expired[0].req.id, 1);
+    assert_eq!(q.len(), 1, "unbounded-deadline request must stay queued");
+    let r = expired[0].expire();
+    assert_eq!(r.reason, FinishReason::DeadlineExceeded);
+    assert!(r.error.as_deref().unwrap_or("").contains("deadline"), "{:?}", r.error);
+    assert!(r.tokens.is_empty(), "waiting request has no partial tokens");
+
+    // Decoding state: a request that already streamed tokens still expires,
+    // and its terminal result preserves the partial generation.
+    let mut t = Tracked::new(GenRequest::new(3, vec![65], 100).with_deadline_ms(1));
+    t.first_token = Some(Instant::now());
+    t.generated.extend([70, 71]);
+    std::thread::sleep(Duration::from_millis(3));
+    assert!(t.expired(Instant::now()), "decoding request past deadline must expire");
+    let r = t.expire();
+    assert_eq!(r.reason, FinishReason::DeadlineExceeded);
+    assert_eq!(r.tokens, vec![70, 71], "partial tokens preserved");
+
+    // No deadline: never expires, even far in the future.
+    let t = Tracked::new(GenRequest::new(4, vec![65], 1));
+    assert!(!t.expired(Instant::now() + Duration::from_secs(3600)));
+}
+
+#[test]
+fn cancelled_results_are_partial_not_errors() {
+    let mut t = Tracked::new(GenRequest::new(9, vec![65, 66], 10));
+    t.generated.extend([1, 2, 3]);
+    let r = t.cancel();
+    assert_eq!(r.reason, FinishReason::Cancelled);
+    assert!(r.error.is_none(), "cancellation is a client action, not a failure");
+    assert_eq!(r.tokens, vec![1, 2, 3]);
+    assert_eq!(r.prompt_len, 2);
 }

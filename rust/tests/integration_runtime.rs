@@ -1,11 +1,18 @@
-//! Integration tests over the full runtime: artifacts → PJRT → engine.
-//! Skipped gracefully when artifacts/ is absent.
+//! Integration tests over the full runtime: artifacts → PJRT → engine,
+//! including the session API acceptance bar — the streaming event loop and
+//! the Coordinator's per-request streams must reproduce `run_to_completion`
+//! token for token, and cancellation/deadline/backpressure must never leak
+//! slots or cache pages. Skipped gracefully when artifacts/ is absent.
 
 use recalkv::artifacts::{Manifest, TensorArchive};
-use recalkv::coordinator::{Engine, EngineConfig, GenRequest};
+use recalkv::coordinator::{
+    Coordinator, Engine, EngineConfig, FinishReason, GenEvent, GenRequest, GenResult,
+    SamplingParams, SubmitError,
+};
 use recalkv::quant::QuantKind;
 use recalkv::runtime::engine_graphs::ActivationArg;
 use recalkv::runtime::{GraphSet, Runtime, VariantRuntime};
+use std::collections::BTreeMap;
 
 fn manifest() -> Option<Manifest> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -74,7 +81,7 @@ fn engine_decode_consistent_with_score_graph() {
     let mut engine = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
     let mut req = GenRequest::new(1, toks[..prompt_len].to_vec(), toks.len() - prompt_len);
     req.forced_tokens = Some(toks[prompt_len..].to_vec());
-    engine.submit(req);
+    engine.submit(req).unwrap();
     let res = engine.run_to_completion().unwrap();
     let engine_lp = res[0].forced_logprob;
 
@@ -111,7 +118,7 @@ fn engine_serves_batched_requests_all_variants_kinds() {
         let mut engine = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
         for i in 0..6 {
             let prompt = recalkv::coordinator::tokenizer::encode("the dog ");
-            engine.submit(GenRequest::new(i, prompt, 5));
+            engine.submit(GenRequest::new(i, prompt, 5)).unwrap();
         }
         let results = engine.run_to_completion().unwrap();
         assert_eq!(results.len(), 6, "{vname}: all requests must finish");
@@ -135,11 +142,13 @@ fn quantized_engine_still_generates_sensibly() {
                 .unwrap();
         // strongly-learned pattern (with in-distribution leading context):
         // "... . the dog " -> "barks"
-        engine.submit(GenRequest::new(
-            1,
-            recalkv::coordinator::tokenizer::encode("rain fell on the old roof . the dog "),
-            5,
-        ));
+        engine
+            .submit(GenRequest::new(
+                1,
+                recalkv::coordinator::tokenizer::encode("rain fell on the old roof . the dog "),
+                5,
+            ))
+            .unwrap();
         let res = engine.run_to_completion().unwrap();
         // int4/int3 latents perturb the greedy path after a couple of
         // characters (Table 4 quantifies the ppl cost); the prediction must
@@ -172,7 +181,7 @@ fn engine_incremental_staging_matches_full_gather_every_step() {
                 .unwrap();
         for i in 0..4 {
             let prompt = recalkv::coordinator::tokenizer::encode("the dog barks . ");
-            engine.submit(GenRequest::new(i, prompt, 6));
+            engine.submit(GenRequest::new(i, prompt, 6)).unwrap();
         }
         let mut steps = 0usize;
         while !engine.idle() {
@@ -214,8 +223,8 @@ fn prefill_admission_failure_fails_request_and_frees() {
     assert!(doomed.len() > 8);
     // 4 tokens (+1 decode row) fit comfortably.
     let viable = recalkv::coordinator::tokenizer::encode("dog ");
-    engine.submit(GenRequest::new(1, doomed, 4));
-    engine.submit(GenRequest::new(2, viable, 2));
+    engine.submit(GenRequest::new(1, doomed, 4)).unwrap();
+    engine.submit(GenRequest::new(2, viable, 2)).unwrap();
     let mut results = engine.run_to_completion().unwrap();
     results.sort_by_key(|r| r.id);
     assert_eq!(results.len(), 2, "every submitted request must get a result");
@@ -235,8 +244,10 @@ fn invalid_prompt_fails_only_its_own_request() {
     let model = man.model("tiny-mha").unwrap();
     let variant = model.variant("recal@50").unwrap();
     let mut engine = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
-    engine.submit(GenRequest::new(1, vec![], 3)); // empty prompt
-    engine.submit(GenRequest::new(2, recalkv::coordinator::tokenizer::encode("the dog "), 3));
+    engine.submit(GenRequest::new(1, vec![], 3)).unwrap(); // empty prompt
+    engine
+        .submit(GenRequest::new(2, recalkv::coordinator::tokenizer::encode("the dog "), 3))
+        .unwrap();
     let mut results = engine.run_to_completion().unwrap();
     results.sort_by_key(|r| r.id);
     assert_eq!(results.len(), 2);
@@ -260,7 +271,7 @@ fn request_can_fill_cache_exactly() {
     let prompt = recalkv::coordinator::tokenizer::encode("the dog ");
     let plen = prompt.len();
     let mut engine = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
-    engine.submit(GenRequest::new(1, prompt, s)); // more than can ever fit
+    engine.submit(GenRequest::new(1, prompt, s)).unwrap(); // more than can ever fit
     let results = engine.run_to_completion().unwrap();
     assert!(results[0].error.is_none(), "unexpected failure: {:?}", results[0].error);
     assert_eq!(
@@ -268,6 +279,351 @@ fn request_can_fill_cache_exactly() {
         s - plen + 1,
         "generation must run to exact cache capacity"
     );
+    assert_eq!(engine.cache.blocks_in_use(), 0);
+}
+
+/// Mixed-mode workload for the equivalence tests: greedy, seeded sampling,
+/// teacher forcing, a stop token, and one invalid request — same seeds on
+/// every engine, so any schedule- or API-level divergence shows up as a
+/// token mismatch.
+fn mixed_workload() -> Vec<GenRequest> {
+    let enc = recalkv::coordinator::tokenizer::encode;
+    let mut reqs = Vec::new();
+    for i in 0..6u64 {
+        let mut req = GenRequest::new(i + 1, enc("the dog barks . the cat "), 8);
+        match i % 3 {
+            0 => {} // greedy
+            1 => {
+                req.sampling = SamplingParams { temperature: 0.8, top_k: 4, seed: 11 + i };
+            }
+            _ => req.forced_tokens = Some(enc("sits on the mat")[..8].to_vec()),
+        }
+        if i == 5 {
+            req.stop_token = Some(b' ' as i32);
+        }
+        reqs.push(req);
+    }
+    reqs.push(GenRequest::new(7, vec![], 3)); // invalid: must fail identically
+    reqs
+}
+
+fn assert_results_equivalent(label: &str, a: &GenResult, b: &GenResult) {
+    assert_eq!(a.id, b.id, "{label}: id");
+    assert_eq!(a.tokens, b.tokens, "{label} req {}: tokens diverged", a.id);
+    assert_eq!(a.text, b.text, "{label} req {}: text diverged", a.id);
+    assert_eq!(
+        a.forced_logprob.to_bits(),
+        b.forced_logprob.to_bits(),
+        "{label} req {}: forced logprob diverged",
+        a.id
+    );
+    assert_eq!(a.forced_count, b.forced_count, "{label} req {}", a.id);
+    assert_eq!(a.error, b.error, "{label} req {}: error diverged", a.id);
+    assert_eq!(a.reason, b.reason, "{label} req {}: reason diverged", a.id);
+    assert_eq!(a.prompt_len, b.prompt_len, "{label} req {}", a.id);
+}
+
+/// Acceptance bar for the session redesign: the event-loop driver
+/// (`step` + `poll_events`) and the Coordinator's per-request streams must
+/// yield token-for-token the results `run_to_completion` yields on the
+/// same seeds — and the streamed `Token` events must concatenate to
+/// exactly the terminal result.
+#[test]
+fn streaming_paths_behavior_equivalent_to_run_to_completion() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("tiny-mha").unwrap();
+    let variant = model.variant("recal@50").unwrap();
+
+    // Reference: the compatibility wrapper.
+    let mut engine_a = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
+    for req in mixed_workload() {
+        engine_a.submit(req).unwrap();
+    }
+    let mut ref_results = engine_a.run_to_completion().unwrap();
+    ref_results.sort_by_key(|r| r.id);
+    assert_eq!(ref_results.len(), 7);
+
+    // Driver 1: explicit event loop.
+    let mut engine_b = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
+    for req in mixed_workload() {
+        engine_b.submit(req).unwrap();
+    }
+    let mut streamed_tokens: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+    let mut streamed_text: BTreeMap<u64, String> = BTreeMap::new();
+    let mut results_b: BTreeMap<u64, GenResult> = BTreeMap::new();
+    while !engine_b.idle() {
+        engine_b.step().unwrap();
+        for ev in engine_b.poll_events() {
+            match ev {
+                GenEvent::Token { id, token, text_delta, .. } => {
+                    streamed_tokens.entry(id).or_default().push(token);
+                    streamed_text.entry(id).or_default().push_str(&text_delta);
+                }
+                GenEvent::Finished(r)
+                | GenEvent::Failed(r)
+                | GenEvent::Cancelled(r)
+                | GenEvent::DeadlineExceeded(r) => {
+                    assert!(results_b.insert(r.id, r).is_none(), "double terminal event");
+                }
+                GenEvent::Queued { .. } | GenEvent::Prefilled { .. } => {}
+            }
+        }
+    }
+    assert_eq!(results_b.len(), ref_results.len(), "event loop lost requests");
+    for r in &ref_results {
+        let b = &results_b[&r.id];
+        assert_results_equivalent("poll_events", r, b);
+        // the streamed deltas must reassemble the terminal result exactly
+        let toks = streamed_tokens.get(&r.id).cloned().unwrap_or_default();
+        assert_eq!(toks, b.tokens, "req {}: streamed tokens != final tokens", r.id);
+        let text = streamed_text.get(&r.id).cloned().unwrap_or_default();
+        assert_eq!(text, b.text, "req {}: streamed text != final text", r.id);
+    }
+    assert_eq!(engine_b.cache.blocks_in_use(), 0);
+
+    // Driver 2: threaded Coordinator with per-request streams.
+    let dir = man.root.clone();
+    let coord = Coordinator::spawn(move || {
+        let man = Manifest::load(&dir)?;
+        let rt = Runtime::cpu()?;
+        let model = man.model("tiny-mha")?;
+        Engine::new(&rt, model, model.variant("recal@50")?, EngineConfig::default())
+    });
+    let streams: Vec<_> = mixed_workload().into_iter().map(|r| coord.submit(r)).collect();
+    let mut results_c: Vec<GenResult> =
+        streams.into_iter().map(|s| s.wait().expect("stream truncated")).collect();
+    results_c.sort_by_key(|r| r.id);
+    for (r, c) in ref_results.iter().zip(&results_c) {
+        assert_results_equivalent("coordinator", r, c);
+    }
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn cancel_mid_flight_frees_slot_and_pages() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("tiny-mha").unwrap();
+    let variant = model.variant("recal@50").unwrap();
+    let mut engine = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
+    let enc = recalkv::coordinator::tokenizer::encode;
+    for i in 1..=3u64 {
+        engine.submit(GenRequest::new(i, enc("the dog barks . "), 20)).unwrap();
+    }
+    // unknown ids are a no-op
+    assert!(!engine.cancel(99));
+    // drive until request 2 has streamed at least two tokens, then cancel it
+    let mut toks_2 = 0usize;
+    let mut guard = 0usize;
+    while toks_2 < 2 {
+        engine.step().unwrap();
+        for ev in engine.poll_events() {
+            if let GenEvent::Token { id: 2, .. } = ev {
+                toks_2 += 1;
+            }
+        }
+        guard += 1;
+        assert!(guard < 1000, "request 2 never produced tokens");
+    }
+    assert!(engine.cancel(2), "live request must be cancellable");
+    assert!(!engine.cancel(2), "second cancel is a no-op");
+    let mut results = engine.run_to_completion().unwrap();
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results.len(), 3, "every session ends in exactly one terminal result");
+    assert_eq!(results[1].reason, FinishReason::Cancelled);
+    assert!(
+        results[1].tokens.len() >= 2 && results[1].tokens.len() < 20,
+        "cancelled mid-flight: partial tokens expected, got {}",
+        results[1].tokens.len()
+    );
+    for r in [&results[0], &results[2]] {
+        assert_eq!(r.reason, FinishReason::Completed, "batch-mates must be unaffected");
+        assert_eq!(r.tokens.len(), 20);
+    }
+    assert_eq!(engine.metrics.requests_cancelled, 1);
+    assert_eq!(engine.metrics.requests_completed, 2);
+    assert_eq!(engine.cache.blocks_in_use(), 0, "cancellation leaked pages");
+    assert_eq!(engine.cache.live_seqs(), 0, "cancellation leaked sequences");
+
+    // cancelling while still waiting (before any step) also reclaims
+    let mut engine = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
+    engine.submit(GenRequest::new(1, enc("the dog "), 4)).unwrap();
+    engine.submit(GenRequest::new(2, enc("the cat "), 4)).unwrap();
+    assert!(engine.cancel(2));
+    let evs = engine.poll_events();
+    let cancelled: Vec<_> = evs
+        .iter()
+        .filter_map(|e| match e {
+            GenEvent::Cancelled(r) => Some(r.clone()),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(cancelled.len(), 1);
+    assert_eq!(cancelled[0].id, 2);
+    assert!(cancelled[0].tokens.is_empty(), "waiting request has no tokens");
+    assert_eq!(cancelled[0].reason, FinishReason::Cancelled);
+    let results = engine.run_to_completion().unwrap();
+    assert_eq!(results.len(), 1, "only the live request remains");
+    assert_eq!(results[0].id, 1);
+    assert_eq!(engine.cache.blocks_in_use(), 0);
+}
+
+#[test]
+fn cancel_result_carries_partial_generation() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("tiny-mha").unwrap();
+    let variant = model.variant("recal@50").unwrap();
+    let mut engine = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
+    let enc = recalkv::coordinator::tokenizer::encode;
+    engine.submit(GenRequest::new(1, enc("the dog barks . "), 50)).unwrap();
+    let mut streamed = Vec::new();
+    let mut guard = 0usize;
+    while streamed.len() < 3 {
+        engine.step().unwrap();
+        for ev in engine.poll_events() {
+            if let GenEvent::Token { token, .. } = ev {
+                streamed.push(token);
+            }
+        }
+        guard += 1;
+        assert!(guard < 1000);
+    }
+    engine.cancel(1);
+    let res: Vec<_> = engine
+        .poll_events()
+        .into_iter()
+        .filter_map(GenEvent::into_result)
+        .collect();
+    assert_eq!(res.len(), 1);
+    assert_eq!(res[0].reason, FinishReason::Cancelled);
+    assert!(res[0].error.is_none(), "cancellation is not an error");
+    assert_eq!(res[0].tokens, streamed, "partial tokens must match the streamed prefix");
+    assert!(engine.idle());
+    assert_eq!(engine.cache.blocks_in_use(), 0);
+}
+
+#[test]
+fn deadline_exceeded_in_waiting_and_decoding_states() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("tiny-mha").unwrap();
+    let variant = model.variant("recal@50").unwrap();
+    let enc = recalkv::coordinator::tokenizer::encode;
+
+    // Waiting state: an already-expired deadline is shed at the next step,
+    // before prefill ever runs.
+    let mut engine = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
+    engine.submit(GenRequest::new(1, enc("the dog "), 4).with_deadline_ms(0)).unwrap();
+    engine.submit(GenRequest::new(2, enc("the cat "), 4)).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(2));
+    let mut results = engine.run_to_completion().unwrap();
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results.len(), 2);
+    assert_eq!(results[0].reason, FinishReason::DeadlineExceeded);
+    assert!(results[0].tokens.is_empty(), "expired while waiting: no tokens");
+    assert!(results[0].error.as_deref().unwrap_or("").contains("deadline"));
+    assert_eq!(results[1].reason, FinishReason::Completed);
+    assert_eq!(engine.metrics.requests_expired, 1);
+    assert_eq!(engine.cache.blocks_in_use(), 0);
+    assert_eq!(engine.cache.live_seqs(), 0);
+
+    // Decoding state: admitted, streams some tokens, then blows the bound
+    // mid-generation; the terminal result keeps the partial output and the
+    // pages come back.
+    let mut engine = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
+    engine
+        .submit(GenRequest::new(1, enc("the dog barks . "), 10_000).with_deadline_ms(60))
+        .unwrap();
+    let mut saw_prefill = false;
+    let mut guard = 0usize;
+    while !saw_prefill {
+        engine.step().unwrap();
+        saw_prefill = engine
+            .poll_events()
+            .iter()
+            .any(|e| matches!(e, GenEvent::Prefilled { .. }));
+        guard += 1;
+        assert!(guard < 1000, "request never admitted");
+    }
+    std::thread::sleep(std::time::Duration::from_millis(80));
+    let results = engine.run_to_completion().unwrap();
+    assert_eq!(results.len(), 1);
+    assert_eq!(results[0].reason, FinishReason::DeadlineExceeded);
+    assert!(
+        !results[0].tokens.is_empty(),
+        "decoding expiry must preserve the partial generation"
+    );
+    assert_eq!(engine.metrics.requests_expired, 1);
+    assert_eq!(engine.cache.blocks_in_use(), 0, "expiry leaked pages");
+    assert_eq!(engine.cache.live_seqs(), 0, "expiry leaked sequences");
+}
+
+#[test]
+fn queue_full_backpressure_rejects_then_admits_after_drain() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("tiny-mha").unwrap();
+    let variant = model.variant("recal@50").unwrap();
+    let enc = recalkv::coordinator::tokenizer::encode;
+    let mut engine = Engine::new(
+        &rt,
+        model,
+        variant,
+        EngineConfig { queue_cap: 2, ..Default::default() },
+    )
+    .unwrap();
+    engine.submit(GenRequest::new(1, enc("the dog "), 3)).unwrap();
+    engine.submit(GenRequest::new(2, enc("the cat "), 3)).unwrap();
+    let SubmitError::QueueFull { req, capacity } =
+        engine.submit(GenRequest::new(3, enc("the fox "), 3)).unwrap_err();
+    assert_eq!(capacity, 2);
+    assert_eq!(req.id, 3, "rejected request must come back for retry");
+    assert_eq!(engine.metrics.requests_rejected, 1);
+    // drain the queue (one prefill admits the waiters), then the retry fits
+    engine.step().unwrap();
+    assert_eq!(engine.queue_depth(), 0, "prefill should have admitted the queue");
+    engine.submit(req).unwrap();
+    let mut results = engine.run_to_completion().unwrap();
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results.len(), 3, "retried request must be served");
+    assert!(results.iter().all(|r| r.error.is_none()));
+    assert_eq!(engine.cache.blocks_in_use(), 0);
+}
+
+#[test]
+fn priority_orders_admission_under_full_policy() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("tiny-mha").unwrap();
+    let variant = model.variant("recal@50").unwrap();
+    let enc = recalkv::coordinator::tokenizer::encode;
+    // prefill_batch bounds one admission wave; with more waiters than one
+    // wave admits, the high-priority latecomer must jump the FIFO order
+    let pb = model.shapes.prefill_batch;
+    let n = pb + 2;
+    let mut engine = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
+    for i in 0..n as u64 {
+        let mut req = GenRequest::new(i + 1, enc("the dog "), 2);
+        if i == n as u64 - 1 {
+            req = req.with_priority(10); // submitted last, must admit first
+        }
+        engine.submit(req).unwrap();
+    }
+    let mut first_wave: Vec<u64> = Vec::new();
+    engine.step().unwrap(); // one prefill
+    for ev in engine.poll_events() {
+        if let GenEvent::Prefilled { id, .. } = ev {
+            first_wave.push(id);
+        }
+    }
+    assert!(
+        first_wave.contains(&(n as u64)),
+        "high-priority request missing from first admission wave {first_wave:?}"
+    );
+    let results = engine.run_to_completion().unwrap();
+    assert_eq!(results.len(), n, "every request must still be served");
     assert_eq!(engine.cache.blocks_in_use(), 0);
 }
 
@@ -282,7 +638,9 @@ fn gqa_model_serves() {
     let model = man.model("tiny-gqa").unwrap();
     let variant = model.variant("recal@50").unwrap();
     let mut engine = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
-    engine.submit(GenRequest::new(1, recalkv::coordinator::tokenizer::encode("the cat "), 5));
+    engine
+        .submit(GenRequest::new(1, recalkv::coordinator::tokenizer::encode("the cat "), 5))
+        .unwrap();
     let res = engine.run_to_completion().unwrap();
     assert_eq!(res.len(), 1);
     assert_eq!(res[0].tokens.len(), 5);

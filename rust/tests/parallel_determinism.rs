@@ -167,11 +167,11 @@ fn pipeline_parallel_matches_single_thread_f32_and_quantized() {
         for (li, p) in par.iter().enumerate() {
             assert_eq!(serial.kv_perm, p.kv_perm, "{method} L{li}: perm diverged");
             for (name, a, b) in [
-                ("wq", &serial.wq_reordered, &p.wq_reordered),
+                ("wq", &*serial.wq_reordered, &*p.wq_reordered),
                 ("l_k", &serial.l_k, &p.l_k),
                 ("l_v", &serial.l_v, &p.l_v),
                 ("wo_fused", &serial.wo_fused, &p.wo_fused),
-                ("cka", &serial.cka, &p.cka),
+                ("cka", &*serial.cka, &*p.cka),
             ] {
                 assert!(bits_equal(a, b), "{method} L{li}: {name} diverged");
             }
@@ -355,6 +355,14 @@ fn rank_sweep_matches_standalone_runs_bitwise() {
         let cfg = MethodCfg::from_name(method).unwrap();
         let swept = compress_layer_ranks(&mk_inp(0, 0), cfg, &ranks).unwrap();
         assert_eq!(swept.len(), ranks.len());
+        // the rank-independent matrices must be *shared* across entries,
+        // not duplicated per rank (one allocation per layer sweep)
+        for s in &swept[1..] {
+            assert!(std::sync::Arc::ptr_eq(&swept[0].wq_reordered, &s.wq_reordered),
+                    "{method}: wq_reordered duplicated across sweep entries");
+            assert!(std::sync::Arc::ptr_eq(&swept[0].cka, &s.cka),
+                    "{method}: cka duplicated across sweep entries");
+        }
         for (s, &(kr, vr)) in swept.iter().zip(&ranks) {
             let solo = compress_layer(&mk_inp(kr, vr), cfg).unwrap();
             assert_eq!(solo.kv_perm, s.kv_perm, "{method} r=({kr},{vr}): perm");
@@ -362,7 +370,7 @@ fn rank_sweep_matches_standalone_runs_bitwise() {
                 ("l_k", &solo.l_k, &s.l_k),
                 ("l_v", &solo.l_v, &s.l_v),
                 ("wo_fused", &solo.wo_fused, &s.wo_fused),
-                ("wq_reordered", &solo.wq_reordered, &s.wq_reordered),
+                ("wq_reordered", &*solo.wq_reordered, &*s.wq_reordered),
             ] {
                 assert!(
                     bits_equal(a, b),

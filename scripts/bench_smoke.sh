@@ -11,6 +11,11 @@ cd "$REPO_ROOT/rust"
 # End-to-end serving path, few requests (skips gracefully without artifacts/).
 cargo bench --bench coordinator_throughput -- --requests 2 --max-new 4
 
+# Session-lifecycle path: mixed cancel/deadline workload per batching policy
+# (engine section skips without artifacts/; reclaim + queue micro-paths and
+# the JSON always run).
+cargo bench --bench serving_lifecycle -- --quick --out "$REPO_ROOT/BENCH_serving.json"
+
 # Full-vs-incremental staging comparison; the JSON records per-step times
 # and speedups at S in {512, 2048, 8192} (f32 + int4).
 cargo bench --bench decode_staging -- --out "$REPO_ROOT/BENCH_decode_staging.json"
@@ -20,4 +25,4 @@ cargo bench --bench decode_staging -- --out "$REPO_ROOT/BENCH_decode_staging.jso
 # per-layer pipeline wall time at 1/2/N pool threads with SIMD on/off.
 cargo bench --bench linalg_hotpath -- --quick --out "$REPO_ROOT/BENCH_linalg.json"
 
-echo "bench_smoke.sh: wrote $REPO_ROOT/BENCH_decode_staging.json and $REPO_ROOT/BENCH_linalg.json"
+echo "bench_smoke.sh: wrote $REPO_ROOT/BENCH_decode_staging.json, $REPO_ROOT/BENCH_linalg.json and $REPO_ROOT/BENCH_serving.json"
