@@ -1,0 +1,179 @@
+//! Wire-serving benchmark: the TCP server on localhost loopback under
+//! concurrent-client load, plus runtime-free protocol micro-paths.
+//!
+//! Emits `BENCH_server.json` so successive PRs have a network-perf
+//! trajectory: requests/s and streamed tok/s end-to-end through the wire,
+//! client-observed TTFT and inter-token-event latency p50/p95, at 1/4/16
+//! concurrent connections (1/4 with --quick), plus frame encode/decode
+//! throughput. The loopback section needs artifacts/ (skipped gracefully
+//! without them); the protocol section always runs.
+//!
+//!   cargo bench --bench server_wire -- --out ../BENCH_server.json
+
+use recalkv::artifacts::Manifest;
+use recalkv::coordinator::{Coordinator, Engine, EngineConfig};
+use recalkv::server::{
+    run_load, Client, Server, ServerConfig, ServerFrame, WireEvent, WireResult,
+};
+use recalkv::util::bench::{bench, Table};
+use recalkv::util::cli::Args;
+use recalkv::util::json::Json;
+use std::time::Duration;
+
+/// Frame encode/decode throughput (runtime-free): the per-token cost the
+/// wire adds over the in-process stream.
+fn protocol_microbench(budget: Duration) -> Json {
+    let token_frame = ServerFrame::Event(WireEvent::Token {
+        id: 12345,
+        token: 104,
+        text_delta: "h".into(),
+        logprob: -1.2503217828,
+    });
+    let enc = bench("token frame encode", budget, || {
+        std::hint::black_box(token_frame.encode());
+    });
+    let line = token_frame.encode();
+    let dec = bench("token frame decode", budget, || {
+        std::hint::black_box(ServerFrame::decode(&line).unwrap());
+    });
+    let result_frame = ServerFrame::Event(WireEvent::Finished(WireResult {
+        id: 12345,
+        tokens: (0..64).collect(),
+        text: "x".repeat(64),
+        forced_logprob: 0.0,
+        forced_count: 0,
+        prompt_len: 128,
+        ttft_ms: 5.25,
+        total_ms: 90.5,
+        queue_wait_ms: 0.5,
+        reason: recalkv::coordinator::FinishReason::Completed,
+        error: None,
+    }));
+    let line_r = result_frame.encode();
+    let dec_r = bench("terminal frame decode", budget, || {
+        std::hint::black_box(ServerFrame::decode(&line_r).unwrap());
+    });
+    Json::obj(vec![
+        ("token_frame_bytes", Json::Num(line.len() as f64)),
+        ("token_encode_ns", Json::Num(enc.median_ns)),
+        ("token_decode_ns", Json::Num(dec.median_ns)),
+        ("token_frames_per_s", Json::Num(dec.throughput(1.0))),
+        ("terminal_frame_bytes", Json::Num(line_r.len() as f64)),
+        ("terminal_decode_ns", Json::Num(dec_r.median_ns)),
+    ])
+}
+
+/// One loopback scaling point: `clients` concurrent connections, each
+/// streaming `reqs` requests sequentially.
+fn loopback_point(
+    addr: &str,
+    clients: usize,
+    reqs: usize,
+    prompts: &[String],
+    max_new: usize,
+) -> anyhow::Result<Json> {
+    let rep = run_load(addr, clients, reqs, prompts, max_new)?;
+    println!(
+        "{:>2} clients: {:>6.1} req/s {:>7.1} tok/s | ttft p50/p95 {:>6.1}/{:>6.1}ms | \
+         token gap p50/p95 {:>5.2}/{:>5.2}ms | {} ok {} rejected {} failed",
+        clients,
+        rep.req_per_s(),
+        rep.tok_per_s(),
+        rep.ttft_pctile(0.50),
+        rep.ttft_pctile(0.95),
+        rep.event_gap_pctile(0.50),
+        rep.event_gap_pctile(0.95),
+        rep.completed,
+        rep.rejected,
+        rep.failed,
+    );
+    Ok(Json::obj(vec![
+        ("clients", Json::Num(clients as f64)),
+        ("requests", Json::Num(rep.requests as f64)),
+        ("completed", Json::Num(rep.completed as f64)),
+        ("rejected", Json::Num(rep.rejected as f64)),
+        ("failed", Json::Num(rep.failed as f64)),
+        ("wall_s", Json::Num(rep.wall_s)),
+        ("req_per_s", Json::Num(rep.req_per_s())),
+        ("tok_per_s", Json::Num(rep.tok_per_s())),
+        ("ttft_ms_p50", Json::Num(rep.ttft_pctile(0.50))),
+        ("ttft_ms_p95", Json::Num(rep.ttft_pctile(0.95))),
+        ("token_gap_ms_p50", Json::Num(rep.event_gap_pctile(0.50))),
+        ("token_gap_ms_p95", Json::Num(rep.event_gap_pctile(0.95))),
+    ]))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"), &["quick"]);
+    let out_path = args.opt_or("out", "BENCH_server.json").to_string();
+    let quick = args.has("quick");
+    let budget = Duration::from_millis(if quick { 150 } else { 400 });
+    let reqs = args.usize_or("requests", if quick { 2 } else { 6 });
+    let max_new = args.usize_or("max-new", if quick { 8 } else { 16 });
+    let client_counts: &[usize] = if quick { &[1, 4] } else { &[1, 4, 16] };
+
+    let protocol = protocol_microbench(budget);
+
+    let dir = args.opt_or("artifacts", "artifacts").to_string();
+    let loopback = match Manifest::load(&dir) {
+        Ok(_) => {
+            let coord = Coordinator::spawn(move || {
+                let man = Manifest::load(&dir)?;
+                let rt = recalkv::runtime::Runtime::cpu()?;
+                let model = man.model("tiny-mha")?;
+                Engine::new(&rt, model, model.variant("recal@50")?, EngineConfig::default())
+            });
+            let server =
+                Server::bind("127.0.0.1:0", coord.handle(), ServerConfig::default())?;
+            let addr = server.local_addr()?.to_string();
+            let worker = std::thread::spawn(move || server.run());
+            let prompts: Vec<String> = recalkv::eval::tasks::gen_long("needle", 42, 8, 200)
+                .into_iter()
+                .map(|inst| inst.prompt)
+                .collect();
+
+            let mut table = Table::new(
+                "Wire serving, localhost loopback",
+                &["clients", "req/s", "tok/s", "ttft p50/p95 ms", "gap p50/p95 ms"],
+            );
+            let mut rows = Vec::new();
+            for &clients in client_counts {
+                let row = loopback_point(&addr, clients, reqs, &prompts, max_new)?;
+                table.row(vec![
+                    clients.to_string(),
+                    format!("{:.1}", row.req("req_per_s").as_f64().unwrap_or(0.0)),
+                    format!("{:.1}", row.req("tok_per_s").as_f64().unwrap_or(0.0)),
+                    format!(
+                        "{:.1}/{:.1}",
+                        row.req("ttft_ms_p50").as_f64().unwrap_or(0.0),
+                        row.req("ttft_ms_p95").as_f64().unwrap_or(0.0)
+                    ),
+                    format!(
+                        "{:.2}/{:.2}",
+                        row.req("token_gap_ms_p50").as_f64().unwrap_or(0.0),
+                        row.req("token_gap_ms_p95").as_f64().unwrap_or(0.0)
+                    ),
+                ]);
+                rows.push(row);
+            }
+            table.print();
+            Client::connect(&addr)?.shutdown_server()?;
+            worker.join().expect("server thread panicked")?;
+            println!("{}", coord.shutdown()?);
+            Json::Arr(rows)
+        }
+        Err(_) => {
+            println!("[skip] artifacts/ not built — protocol micro-paths only");
+            Json::Null
+        }
+    };
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("server_wire".into())),
+        ("protocol", protocol),
+        ("loopback", loopback),
+    ]);
+    std::fs::write(&out_path, report.to_string())?;
+    println!("[report saved to {out_path}]");
+    Ok(())
+}

@@ -162,6 +162,7 @@ fn engine_lifecycle(man: &Manifest, rt: &Runtime, policy: BatchPolicy, n_req: us
                     backlog.push_front(req);
                     break;
                 }
+                Err(e) => anyhow::bail!("unexpected submit rejection: {e}"),
             }
         }
         engine.step()?;

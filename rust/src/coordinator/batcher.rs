@@ -245,7 +245,9 @@ mod tests {
         q.push(GenRequest::new(1, vec![1], 1)).unwrap();
         q.push(GenRequest::new(2, vec![1], 1)).unwrap();
         let err = q.push(GenRequest::new(3, vec![9, 9], 1)).unwrap_err();
-        let SubmitError::QueueFull { req, capacity } = err;
+        let SubmitError::QueueFull { req, capacity } = err else {
+            panic!("wait queue must reject with QueueFull, got {err:?}");
+        };
         assert_eq!(capacity, 2);
         assert_eq!(req.id, 3);
         assert_eq!(req.prompt, vec![9, 9], "rejected request must come back intact");

@@ -62,6 +62,12 @@ pub struct EngineConfig {
     /// requests returns [`SubmitError::QueueFull`] instead of queueing
     /// (backpressure). `usize::MAX` = unbounded (the default).
     pub queue_cap: usize,
+    /// Per-request cache-token budget: a request whose worst case
+    /// (`prompt + max_new_tokens`) exceeds this is rejected at submit time
+    /// with [`SubmitError::TooLarge`], so one oversized request cannot
+    /// starve the page pool for everyone else. `usize::MAX` = no budget
+    /// (the default).
+    pub max_cache_tokens: usize,
 }
 
 impl Default for EngineConfig {
@@ -73,6 +79,7 @@ impl Default for EngineConfig {
             signs_seed: 977,
             policy: super::batcher::BatchPolicy::Eager,
             queue_cap: usize::MAX,
+            max_cache_tokens: usize::MAX,
         }
     }
 }
@@ -112,6 +119,8 @@ pub struct Engine {
     key_dims: Vec<Vec<usize>>,
     val_dims: Vec<Vec<usize>>,
     policy: super::batcher::BatchPolicy,
+    /// Per-request cache-token budget ([`EngineConfig::max_cache_tokens`]).
+    max_cache_tokens: usize,
     slots: Vec<Option<Slot>>,
     waiting: WaitQueue,
     /// Lifecycle event log, drained by `poll_events` (the single source of
@@ -158,6 +167,7 @@ impl Engine {
             key_dims,
             val_dims,
             policy,
+            max_cache_tokens: ecfg.max_cache_tokens,
             slots: (0..b).map(|_| None).collect(),
             waiting: WaitQueue::new(ecfg.queue_cap),
             events: VecDeque::new(),
@@ -170,9 +180,16 @@ impl Engine {
 
     /// Open a request session: admit `req` into the bounded waiting queue
     /// and return its handle, or bounce with [`SubmitError::QueueFull`]
-    /// (the request comes back inside the error for retry). A successful
-    /// submit emits [`GenEvent::Queued`].
+    /// (the request comes back inside the error for retry) /
+    /// [`SubmitError::TooLarge`] (worst case over the per-request
+    /// cache-token budget — retrying cannot help). A successful submit
+    /// emits [`GenEvent::Queued`].
     pub fn submit(&mut self, req: GenRequest) -> Result<RequestHandle, SubmitError> {
+        let need = req.cache_tokens_needed();
+        if need > self.max_cache_tokens {
+            self.metrics.requests_rejected += 1;
+            return Err(SubmitError::TooLarge { req, need, budget: self.max_cache_tokens });
+        }
         let id = req.id;
         let sampling = req.sampling;
         match self.waiting.push(req) {
@@ -437,10 +454,17 @@ impl Engine {
             }
         };
         tracked.generated.push(tok);
+        // Incremental UTF-8 assembly: a byte that only extends a multi-byte
+        // sequence yields an empty delta now and the whole code point once
+        // complete — concatenated deltas re-form `GenResult::text` exactly
+        // (up to one trailing U+FFFD when generation stops mid-sequence,
+        // which only the terminal result can know about).
+        let mut text_delta = String::new();
+        tracked.detok.push((tok & 0xff) as u8, &mut text_delta);
         self.events.push_back(GenEvent::Token {
             id: tracked.req.id,
             token: tok,
-            text_delta: super::tokenizer::decode(&[tok]),
+            text_delta,
             logprob: lp,
         });
         tok

@@ -16,6 +16,7 @@
 //! streamed tokens of a slot (the client-visible inter-token latency).
 //! Percentiles come from [`Metrics::percentile`] over those samples.
 
+use crate::util::json::Json;
 use std::time::Duration;
 
 #[derive(Clone, Debug, Default)]
@@ -129,6 +130,36 @@ impl Metrics {
         Self::percentile(&self.token_latency_ms, p)
     }
 
+    /// Machine-readable snapshot: the lifecycle counters, token totals,
+    /// throughput, and latency percentiles of [`Metrics::report`], as the
+    /// JSON served by the wire protocol's `metrics` control frame and
+    /// dumped by `repro serve --metrics-json`.
+    pub fn to_json(&self) -> Json {
+        let num = Json::Num;
+        let count = |x: u64| Json::Num(x as f64);
+        let pairs: Vec<(&str, Json)> = vec![
+            ("requests_completed", count(self.requests_completed)),
+            ("requests_failed", count(self.requests_failed)),
+            ("requests_cancelled", count(self.requests_cancelled)),
+            ("requests_expired", count(self.requests_expired)),
+            ("requests_rejected", count(self.requests_rejected)),
+            ("prompt_tokens", count(self.prompt_tokens)),
+            ("generated_tokens", count(self.generated_tokens)),
+            ("prefill_calls", count(self.prefill_calls)),
+            ("decode_calls", count(self.decode_calls)),
+            ("prefill_time_ms", num(self.prefill_time.as_secs_f64() * 1e3)),
+            ("decode_time_ms", num(self.decode_time.as_secs_f64() * 1e3)),
+            ("decode_tok_per_s", num(self.decode_tokens_per_s())),
+            ("ttft_ms_mean", num(self.mean_ttft_ms())),
+            ("batch_occupancy_mean", num(self.mean_batch_occupancy())),
+            ("queue_wait_ms_p50", num(self.queue_wait_pctile(0.50))),
+            ("queue_wait_ms_p95", num(self.queue_wait_pctile(0.95))),
+            ("token_latency_ms_p50", num(self.token_latency_pctile(0.50))),
+            ("token_latency_ms_p95", num(self.token_latency_pctile(0.95))),
+        ];
+        Json::obj(pairs)
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests={} failed={} cancelled={} expired={} rejected={} \
@@ -192,6 +223,24 @@ mod tests {
         let r = m.report();
         assert!(r.contains("cancelled=2"), "{r}");
         assert!(r.contains("expired=1"), "{r}");
+    }
+
+    #[test]
+    fn to_json_round_trips_counters() {
+        let mut m = Metrics {
+            requests_completed: 7,
+            requests_rejected: 3,
+            generated_tokens: 42,
+            ..Default::default()
+        };
+        m.record_queue_wait(4.0);
+        m.record_token_latency(1.5);
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(j.req("requests_completed").as_f64(), Some(7.0));
+        assert_eq!(j.req("requests_rejected").as_f64(), Some(3.0));
+        assert_eq!(j.req("generated_tokens").as_f64(), Some(42.0));
+        assert_eq!(j.req("queue_wait_ms_p50").as_f64(), Some(4.0));
+        assert_eq!(j.req("token_latency_ms_p95").as_f64(), Some(1.5));
     }
 
     #[test]

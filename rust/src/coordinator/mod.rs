@@ -34,7 +34,11 @@
 //!     terminal results);
 //!   * **threaded**: [`Coordinator`] owns the engine on a worker thread
 //!     and fans events out over one channel per request
-//!     ([`router::RequestStream`]), with `cancel` edges back in.
+//!     ([`router::RequestStream`]), with `cancel` edges back in. The TCP
+//!     wire front-end ([`crate::server`]) layers on the same worker via
+//!     [`CoordinatorHandle`], whose `submit` reports admission rejections
+//!     typed (so the wire can answer with protocol errors) and lets many
+//!     requests fan into one per-connection event channel.
 //!
 //! Admission order is priority-aware ([`batcher::WaitQueue`]): highest
 //! [`GenRequest::priority`] first, ties by earliest deadline, then
@@ -56,4 +60,4 @@ pub use engine::{Engine, EngineConfig};
 pub use request::{
     FinishReason, GenEvent, GenRequest, GenResult, RequestHandle, SamplingParams, SubmitError,
 };
-pub use router::{Coordinator, RequestStream};
+pub use router::{Coordinator, CoordinatorHandle, RequestStream, WorkerStats};

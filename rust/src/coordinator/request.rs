@@ -47,6 +47,14 @@ pub struct GenRequest {
 }
 
 impl GenRequest {
+    /// Worst-case cache rows this request can occupy: every prompt token
+    /// plus every token it is allowed to generate. Compared against
+    /// [`crate::coordinator::EngineConfig::max_cache_tokens`] at submit
+    /// time so one long request cannot starve the page pool.
+    pub fn cache_tokens_needed(&self) -> usize {
+        self.prompt.len() + self.max_new_tokens
+    }
+
     pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
         GenRequest {
             id,
@@ -87,6 +95,29 @@ pub enum FinishReason {
     Cancelled,
     /// The request's `deadline_ms` elapsed while waiting or decoding.
     DeadlineExceeded,
+}
+
+impl FinishReason {
+    /// Stable lower-snake name, round-tripping through
+    /// [`FinishReason::parse`] (the wire protocol's spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FinishReason::Completed => "completed",
+            FinishReason::Failed => "failed",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::DeadlineExceeded => "deadline_exceeded",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FinishReason> {
+        match s {
+            "completed" => Some(FinishReason::Completed),
+            "failed" => Some(FinishReason::Failed),
+            "cancelled" => Some(FinishReason::Cancelled),
+            "deadline_exceeded" => Some(FinishReason::DeadlineExceeded),
+            _ => None,
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -176,12 +207,22 @@ impl GenEvent {
     }
 }
 
-/// Admission rejection: returned by `Engine::submit` instead of silently
-/// growing the waiting queue without bound. The request is handed back so
-/// the caller can retry after draining (backpressure) or fail it upstream.
+/// Admission rejection: returned by `Engine::submit` (and the threaded
+/// [`crate::coordinator::CoordinatorHandle::submit`]) instead of silently
+/// growing the waiting queue without bound. Where possible the request is
+/// handed back so the caller can retry after draining (backpressure) or
+/// fail it upstream.
 #[derive(Debug)]
 pub enum SubmitError {
+    /// The bounded admission queue is at capacity; retry after draining.
     QueueFull { req: GenRequest, capacity: usize },
+    /// The request's worst case (`prompt + max_new_tokens`) exceeds the
+    /// engine's per-request cache-token budget — retrying cannot help;
+    /// shrink the prompt or `max_new_tokens` instead.
+    TooLarge { req: GenRequest, need: usize, budget: usize },
+    /// The coordinator worker is gone (engine construction failed or the
+    /// router shut down); the request was consumed by the dead channel.
+    Shutdown { id: u64 },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -189,6 +230,17 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::QueueFull { req, capacity } => {
                 write!(f, "admission queue full ({capacity} waiting) for request {}", req.id)
+            }
+            SubmitError::TooLarge { req, need, budget } => write!(
+                f,
+                "request {} needs {need} cache tokens (prompt {} + max_new {}) \
+                 over the per-request budget {budget}",
+                req.id,
+                req.prompt.len(),
+                req.max_new_tokens
+            ),
+            SubmitError::Shutdown { id } => {
+                write!(f, "coordinator shut down before request {id} was admitted")
             }
         }
     }
@@ -198,9 +250,12 @@ impl std::error::Error for SubmitError {}
 
 impl SubmitError {
     /// Take the rejected request back (for retry or upstream failure).
-    pub fn into_request(self) -> GenRequest {
+    /// `None` for [`SubmitError::Shutdown`], whose request died with the
+    /// worker's channel.
+    pub fn into_request(self) -> Option<GenRequest> {
         match self {
-            SubmitError::QueueFull { req, .. } => req,
+            SubmitError::QueueFull { req, .. } | SubmitError::TooLarge { req, .. } => Some(req),
+            SubmitError::Shutdown { .. } => None,
         }
     }
 }
@@ -232,6 +287,12 @@ pub struct Tracked {
     pub generated: Vec<i32>,
     pub forced_logprob: f64,
     pub forced_count: usize,
+    /// Incremental UTF-8 assembly for `GenEvent::Token::text_delta`: bytes
+    /// of an unfinished multi-byte sequence are buffered here instead of
+    /// being emitted as replacement characters. Concatenating every emitted
+    /// delta plus this decoder's flush equals `tokenizer::decode(generated)`
+    /// exactly (both implement lossy maximal-subpart substitution).
+    pub detok: super::tokenizer::Utf8Stream,
 }
 
 impl Tracked {
@@ -249,6 +310,7 @@ impl Tracked {
             generated: Vec::new(),
             forced_logprob: 0.0,
             forced_count: 0,
+            detok: super::tokenizer::Utf8Stream::default(),
         }
     }
 

@@ -9,18 +9,72 @@
 //! fire-and-forget, or never held) fall back to a global results channel
 //! for the legacy `collect(n)` pattern — streaming clients that do hold
 //! their streams don't grow that channel.
+//!
+//! Two submission surfaces share the worker:
+//!   * [`Coordinator::submit`] — per-request channel, admission rejection
+//!     arrives as a terminal [`GenEvent::Failed`] on the stream (the
+//!     fire-and-forget-friendly shape);
+//!   * [`CoordinatorHandle::submit`] — a cheap cloneable handle for
+//!     multi-threaded front-ends (the TCP server): the caller provides the
+//!     event sender (so many requests can fan into one channel) and gets
+//!     the typed [`SubmitError`] back synchronously, which the wire layer
+//!     maps to protocol errors instead of string-matching event text.
+//!
+//! [`CoordinatorHandle::stats`] snapshots the live engine (metrics + cache
+//! accounting) without stopping it — the `metrics` control frame and the
+//! cancel-on-disconnect reclamation tests are built on it.
 
 use super::engine::Engine;
-use super::request::{GenEvent, GenRequest, GenResult, SubmitError, Tracked};
+use super::metrics::Metrics;
+use super::request::{GenEvent, GenRequest, GenResult, RequestHandle, SubmitError, Tracked};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;
 
 enum Cmd {
-    Submit(Box<GenRequest>, Sender<GenEvent>),
+    Submit {
+        req: Box<GenRequest>,
+        events: Sender<GenEvent>,
+        /// When present, the submit outcome is reported here (typed) and a
+        /// rejection produces no event; when absent, a rejection falls back
+        /// to a terminal [`GenEvent::Failed`] on `events`.
+        ack: Option<Sender<std::result::Result<RequestHandle, SubmitError>>>,
+    },
     Cancel(u64),
+    Stats(Sender<WorkerStats>),
     Shutdown,
+}
+
+/// Point-in-time snapshot of the worker's engine: serving metrics plus the
+/// cache-pool accounting that proves lifecycle transitions (cancellation,
+/// disconnect) actually reclaimed their pages.
+#[derive(Clone, Debug)]
+pub struct WorkerStats {
+    pub metrics: Metrics,
+    /// Requests waiting for prefill admission.
+    pub queue_depth: usize,
+    /// Cache pages currently allocated across all planes.
+    pub blocks_in_use: usize,
+    /// Live (unfreed) sequences in the cache.
+    pub live_seqs: usize,
+    /// Cached tokens across live sequences.
+    pub total_tokens: usize,
+}
+
+impl WorkerStats {
+    /// Snapshot an engine — the single source of truth for the wire
+    /// `metrics` control frame and `repro serve --metrics-json` (both the
+    /// threaded and in-process paths build the snapshot here).
+    pub fn snapshot(engine: &Engine) -> WorkerStats {
+        WorkerStats {
+            metrics: engine.metrics.clone(),
+            queue_depth: engine.queue_depth(),
+            blocks_in_use: engine.cache.blocks_in_use(),
+            live_seqs: engine.cache.live_seqs(),
+            total_tokens: engine.cache.total_tokens(),
+        }
+    }
 }
 
 /// Client-side session handle for one request served by a [`Coordinator`]:
@@ -70,6 +124,53 @@ impl RequestStream {
     }
 }
 
+/// Cheap cloneable front-door to a [`Coordinator`]'s worker, safe to hand
+/// to any thread (it owns only the command sender). The TCP server gives
+/// one to every connection.
+#[derive(Clone)]
+pub struct CoordinatorHandle {
+    tx: Sender<Cmd>,
+}
+
+impl CoordinatorHandle {
+    /// Submit with a caller-provided event sender — several requests may
+    /// share one channel (events carry their request id) — and block for
+    /// the typed admission outcome. Returns [`SubmitError::Shutdown`] when
+    /// the worker is gone.
+    pub fn submit(
+        &self,
+        req: GenRequest,
+        events: Sender<GenEvent>,
+    ) -> std::result::Result<RequestHandle, SubmitError> {
+        let id = req.id;
+        let (ack_tx, ack_rx) = channel();
+        if self
+            .tx
+            .send(Cmd::Submit { req: Box::new(req), events, ack: Some(ack_tx) })
+            .is_err()
+        {
+            return Err(SubmitError::Shutdown { id });
+        }
+        match ack_rx.recv() {
+            Ok(outcome) => outcome,
+            Err(_) => Err(SubmitError::Shutdown { id }),
+        }
+    }
+
+    /// Cancel a request by id (no-op for unknown/finished ids).
+    pub fn cancel(&self, id: u64) {
+        let _ = self.tx.send(Cmd::Cancel(id));
+    }
+
+    /// Snapshot the live engine's metrics + cache accounting; `None` when
+    /// the worker is gone.
+    pub fn stats(&self) -> Option<WorkerStats> {
+        let (tx, rx) = channel();
+        self.tx.send(Cmd::Stats(tx)).ok()?;
+        rx.recv().ok()
+    }
+}
+
 pub struct Coordinator {
     tx: Sender<Cmd>,
     results: Receiver<GenResult>,
@@ -98,25 +199,40 @@ impl Coordinator {
                                   cmd: Cmd|
              -> bool {
                 match cmd {
-                    Cmd::Submit(req, ev_tx) => match engine.submit(*req) {
+                    Cmd::Submit { req, events, ack } => match engine.submit(*req) {
                         Ok(handle) => {
-                            streams.insert(handle.id, ev_tx);
-                        }
-                        Err(SubmitError::QueueFull { req, capacity }) => {
-                            // Backpressure surfaces as a terminal event on
-                            // the stream (or the results channel when the
-                            // stream is gone) instead of an unbounded queue.
-                            let res = Tracked::new(req)
-                                .fail(format!("admission queue full ({capacity} waiting)"));
-                            if ev_tx.send(GenEvent::Failed(res.clone())).is_err() {
-                                let _ = res_tx.send(res);
+                            streams.insert(handle.id, events);
+                            if let Some(ack) = ack {
+                                let _ = ack.send(Ok(handle));
                             }
                         }
+                        Err(e) => match ack {
+                            // Typed path (wire front-ends): the rejection
+                            // travels back through the ack, not the stream.
+                            Some(ack) => {
+                                let _ = ack.send(Err(e));
+                            }
+                            // Stream path: backpressure surfaces as a
+                            // terminal event (or the results channel when
+                            // the stream is gone) instead of silence.
+                            None => {
+                                let msg = e.to_string();
+                                if let Some(req) = e.into_request() {
+                                    let res = Tracked::new(req).fail(msg);
+                                    if events.send(GenEvent::Failed(res.clone())).is_err() {
+                                        let _ = res_tx.send(res);
+                                    }
+                                }
+                            }
+                        },
                     },
                     Cmd::Cancel(id) => {
                         // Unknown/finished ids are a no-op; the Cancelled
                         // event for live ones is routed on the next drain.
                         engine.cancel(id);
+                    }
+                    Cmd::Stats(reply) => {
+                        let _ = reply.send(WorkerStats::snapshot(engine));
                     }
                     Cmd::Shutdown => return true,
                 }
@@ -172,8 +288,14 @@ impl Coordinator {
     pub fn submit(&self, req: GenRequest) -> RequestStream {
         let id = req.id;
         let (ev_tx, events) = channel();
-        let _ = self.tx.send(Cmd::Submit(Box::new(req), ev_tx));
+        let _ = self.tx.send(Cmd::Submit { req: Box::new(req), events: ev_tx, ack: None });
         RequestStream { id, events, cmd_tx: self.tx.clone() }
+    }
+
+    /// A cloneable, thread-safe handle for multi-threaded front-ends (the
+    /// TCP server hands one clone to every connection).
+    pub fn handle(&self) -> CoordinatorHandle {
+        CoordinatorHandle { tx: self.tx.clone() }
     }
 
     /// Cancel a request by id without holding its stream.

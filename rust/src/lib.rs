@@ -6,6 +6,9 @@
 //! graphs (HLO text produced by `python/compile/aot.py`), manages a paged
 //! compressed-latent KV cache (optionally int4/int3 per-token quantized), and
 //! serves batched generation requests through a prefill/decode scheduler.
+//! Layer 4 ([`server`]) puts that session API on the network: a multi-client
+//! TCP server speaking a newline-delimited JSON protocol, with
+//! cancel-on-disconnect page reclamation and typed wire backpressure.
 //! It also contains a complete from-scratch Rust mirror of the offline
 //! compression pipeline (Fisher allocation, CKA head reordering, grouped SVD,
 //! offline calibration, matrix fusion) over a small dense linear-algebra
@@ -19,4 +22,5 @@ pub mod kvcache;
 pub mod linalg;
 pub mod quant;
 pub mod runtime;
+pub mod server;
 pub mod util;

@@ -5,7 +5,18 @@
 //!             (--stream prints lifecycle events live; --deadline-ms bounds
 //!             per-request latency; --queue-cap bounds the admission queue
 //!             and exercises QueueFull backpressure; --policy picks the
-//!             batching policy: eager | full | threshold<k>)
+//!             batching policy: eager | full | threshold<k>;
+//!             --max-cache-tokens caps prompt+max_new per request;
+//!             --metrics-json dumps the metrics snapshot on exit).
+//!             With --listen <addr> it becomes the TCP wire server:
+//!             newline-delimited JSON protocol over the coordinator
+//!             (--max-inflight / --max-inflight-conn bound concurrency;
+//!             stop it with the `shutdown` control frame, e.g.
+//!             `repro client --addr ... --requests 0 --shutdown`)
+//!   client    wire load generator: N connections × M streamed requests
+//!             against a `serve --listen` server; prints req/s, tok/s,
+//!             TTFT and token-gap percentiles (--metrics fetches the
+//!             server's metrics snapshot; --shutdown stops the server)
 //!   eval      evaluate one variant (ppl + zero-shot tasks)
 //!   tables    regenerate the paper's tables/figures (--table N | --figure F)
 //!   compress  run the pure-rust compression mirror over an .rtz archive
@@ -15,6 +26,9 @@
 //!   repro info
 //!   repro serve --model tiny-mha --variant recal@50 --requests 16
 //!   repro serve --requests 16 --stream --deadline-ms 2000 --queue-cap 4
+//!   repro serve --listen 127.0.0.1:7077 --queue-cap 8 --max-cache-tokens 4096
+//!   repro client --addr 127.0.0.1:7077 --connections 4 --requests 8
+//!   repro client --addr 127.0.0.1:7077 --requests 0 --shutdown
 //!   repro tables --table 1 --models tiny-mha --mc 32 --ppl-tokens 4096
 //!   repro tables --figure 2
 //!   repro compress --model tiny-mha --method recal --ratio 0.6
@@ -30,16 +44,19 @@ use recalkv::runtime::Runtime;
 use recalkv::util::cli::Args;
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["quick", "fisher", "quiet", "stream"]);
+    let args = Args::from_env(&["quick", "fisher", "quiet", "stream", "shutdown", "metrics"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
     let dir = args.opt_or("artifacts", "artifacts");
     match cmd {
         "info" => info(dir),
         "serve" => serve(dir, &args),
+        "client" => client_cmd(&args),
         "eval" => eval_variant(dir, &args),
         "tables" => tables(dir, &args),
         "compress" => compress(dir, &args),
-        other => bail!("unknown command '{other}' (try: info serve eval tables compress)"),
+        other => {
+            bail!("unknown command '{other}' (try: info serve client eval tables compress)")
+        }
     }
 }
 
@@ -105,6 +122,9 @@ fn drain_events(engine: &mut Engine, stream: bool, out: &mut Vec<GenResult>) {
 
 fn serve(dir: &str, args: &Args) -> Result<()> {
     use recalkv::coordinator::{FinishReason, SubmitError};
+    if let Some(addr) = args.opt("listen") {
+        return serve_listen(dir, args, addr);
+    }
     let man = Manifest::load(dir)?;
     let rt = Runtime::cpu()?;
     let mname = args.opt_or("model", "tiny-mha");
@@ -117,6 +137,7 @@ fn serve(dir: &str, args: &Args) -> Result<()> {
         args.opt_or("policy", "eager"))
         .map_err(|e| anyhow::anyhow!("bad --policy: {e}"))?;
     let queue_cap = args.usize_or("queue-cap", usize::MAX);
+    let max_cache_tokens = args.usize_or("max-cache-tokens", usize::MAX);
     let deadline_ms: Option<u64> = match args.opt("deadline-ms") {
         Some(s) => Some(s.parse().context("bad --deadline-ms (integer ms)")?),
         None => None,
@@ -133,7 +154,7 @@ fn serve(dir: &str, args: &Args) -> Result<()> {
         &rt,
         model,
         variant,
-        EngineConfig { quant, policy, queue_cap, ..Default::default() },
+        EngineConfig { quant, policy, queue_cap, max_cache_tokens, ..Default::default() },
     )?;
 
     // demo workload: long-context task prompts (real use of the cache)
@@ -160,6 +181,9 @@ fn serve(dir: &str, args: &Args) -> Result<()> {
                     engine.step()?;
                     drain_events(&mut engine, stream, &mut results);
                 }
+                // TooLarge cannot succeed on retry; Shutdown cannot happen
+                // on the in-process engine.
+                Err(e) => bail!("submit failed: {e}"),
             }
         }
         drain_events(&mut engine, stream, &mut results);
@@ -186,6 +210,12 @@ fn serve(dir: &str, args: &Args) -> Result<()> {
         }
     }
     println!("\n{}", engine.metrics.report());
+    if let Some(path) = args.opt("metrics-json") {
+        let ws = recalkv::coordinator::WorkerStats::snapshot(&engine);
+        std::fs::write(path, recalkv::server::stats_json(&ws).to_string())
+            .with_context(|| format!("writing {path}"))?;
+        println!("metrics snapshot written to {path}");
+    }
     println!(
         "wall {:.2}s | {:.1} generated tok/s end-to-end | cache bytes/token {}",
         dt.as_secs_f64(),
@@ -202,6 +232,101 @@ fn serve(dir: &str, args: &Args) -> Result<()> {
     let failed = results.iter().filter(|r| r.reason == FinishReason::Failed).count();
     if failed > 0 {
         anyhow::bail!("{failed}/{} requests failed", results.len());
+    }
+    Ok(())
+}
+
+/// `repro serve --listen <addr>`: the TCP wire server. The engine lives on
+/// a coordinator worker; connections speak the newline-delimited JSON
+/// protocol of [`recalkv::server::protocol`]. Runs until a `shutdown`
+/// control frame arrives on any connection.
+fn serve_listen(dir: &str, args: &Args, addr: &str) -> Result<()> {
+    use recalkv::coordinator::Coordinator;
+    use recalkv::server::{Server, ServerConfig, PROTOCOL_VERSION};
+    let mname = args.opt_or("model", "tiny-mha").to_string();
+    let vname = args.opt_or("variant", "recal@50").to_string();
+    let quant = QuantKind::parse(args.opt_or("bits", "f32"))
+        .context("bad --bits (f32|4|3)")?;
+    let policy = recalkv::coordinator::batcher::BatchPolicy::parse(
+        args.opt_or("policy", "eager"))
+        .map_err(|e| anyhow::anyhow!("bad --policy: {e}"))?;
+    let queue_cap = args.usize_or("queue-cap", usize::MAX);
+    let max_cache_tokens = args.usize_or("max-cache-tokens", usize::MAX);
+    let cfg = ServerConfig {
+        max_inflight_per_conn: args.usize_or("max-inflight-conn", 8),
+        max_inflight_global: args.usize_or("max-inflight", 64),
+    };
+    println!(
+        "serving {mname}/{vname} quant={quant:?} policy={} queue_cap={} over TCP",
+        policy.name(),
+        if queue_cap == usize::MAX { "unbounded".to_string() } else { queue_cap.to_string() },
+    );
+    // The engine is built inside the worker thread (PJRT handles are not
+    // Send); the factory captures only owned Send data.
+    let dir = dir.to_string();
+    let coord = Coordinator::spawn(move || {
+        let man = Manifest::load(&dir)?;
+        let rt = Runtime::cpu()?;
+        let model = man.model(&mname)?;
+        let variant = model.variant(&vname)?;
+        Engine::new(
+            &rt,
+            model,
+            variant,
+            EngineConfig { quant, policy, queue_cap, max_cache_tokens, ..Default::default() },
+        )
+    });
+    let handle = coord.handle();
+    let server = Server::bind(addr, coord.handle(), cfg)?;
+    // parsed by scripts/check.sh's loopback smoke test — keep the shape
+    println!("listening on {} (protocol v{PROTOCOL_VERSION})", server.local_addr()?);
+    server.run()?;
+    if let Some(path) = args.opt("metrics-json") {
+        match handle.stats() {
+            Some(ws) => {
+                std::fs::write(path, recalkv::server::stats_json(&ws).to_string())
+                    .with_context(|| format!("writing {path}"))?;
+                println!("metrics snapshot written to {path}");
+            }
+            None => eprintln!("metrics snapshot unavailable (worker already gone)"),
+        }
+    }
+    println!("{}", coord.shutdown()?);
+    Ok(())
+}
+
+/// `repro client`: blocking wire client / load generator against a
+/// `serve --listen` server.
+fn client_cmd(args: &Args) -> Result<()> {
+    use recalkv::server::{run_load, Client};
+    let addr = args.opt("addr").context("--addr <host:port> is required")?;
+    let connections = args.usize_or("connections", 1);
+    let requests = args.usize_or("requests", 4);
+    let max_new = args.usize_or("max-new", 16);
+    let prompts: Vec<String> = match args.opt("prompt") {
+        Some(p) => vec![p.to_string()],
+        // manifest-free default: the same seeded long-context generator the
+        // serve demo uses, kept short enough for any prefill_seq
+        None => tasks::gen_long("needle", 42, 8, 200)
+            .into_iter()
+            .map(|inst| inst.prompt)
+            .collect(),
+    };
+    if connections > 0 && requests > 0 {
+        let report = run_load(addr, connections, requests, &prompts, max_new)?;
+        println!("{}", report.summary());
+        if report.failed > 0 {
+            bail!("{} of {} requests ended in failure", report.failed, report.requests);
+        }
+    }
+    if args.has("metrics") {
+        let mut c = Client::connect(addr)?;
+        println!("{}", c.metrics()?);
+    }
+    if args.has("shutdown") {
+        let mut c = Client::connect(addr)?;
+        c.shutdown_server()?;
+        println!("server acknowledged shutdown");
     }
     Ok(())
 }

@@ -1,0 +1,279 @@
+//! Blocking wire client: the `repro client` load generator and the test
+//! harness's view of the server. One [`Client`] is one connection (hello
+//! handshake performed at connect); [`run_load`] drives N connections × M
+//! requests and aggregates throughput and latency percentiles.
+
+use super::protocol::{
+    read_frame, ClientFrame, ReadOutcome, ServerFrame, WireError, WireEvent, WireRequest,
+    PROTOCOL_VERSION,
+};
+use crate::coordinator::metrics::Metrics;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// One connection to a wire server, past its `hello` handshake.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    acc: Vec<u8>,
+}
+
+/// Outcome of one [`Client::generate`] call.
+pub enum GenOutcome {
+    /// Every event of the session with its arrival time; the last event is
+    /// terminal.
+    Done { events: Vec<(WireEvent, Instant)> },
+    /// The server rejected the request with a typed error frame
+    /// (`queue_full` is retryable, `too_large` is not).
+    Rejected(WireError),
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+        let writer = BufWriter::new(stream);
+        let mut c = Client { reader, writer, acc: Vec::new() };
+        c.send(&ClientFrame::Hello { version: PROTOCOL_VERSION })?;
+        match c.recv()? {
+            ServerFrame::HelloOk { version } if version == PROTOCOL_VERSION => Ok(c),
+            ServerFrame::HelloOk { version } => {
+                bail!("server answered hello with unexpected version {version}")
+            }
+            ServerFrame::Error(e) => bail!("handshake rejected: {} ({})", e.message,
+                                           e.kind.name()),
+            other => bail!("expected hello_ok, got {other:?}"),
+        }
+    }
+
+    /// Write one frame (line-delimited, flushed).
+    pub fn send(&mut self, frame: &ClientFrame) -> Result<()> {
+        let line = frame.encode();
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Block for the next server frame (EOF is an error: the protocol ends
+    /// sessions with terminal events / `bye`, not silence).
+    pub fn recv(&mut self) -> Result<ServerFrame> {
+        loop {
+            match read_frame(&mut self.reader, &mut self.acc)? {
+                ReadOutcome::Frame(line) => {
+                    return ServerFrame::decode(&line)
+                        .map_err(|e| anyhow::anyhow!("bad server frame: {e} in {line:?}"));
+                }
+                ReadOutcome::TimedOut => continue,
+                ReadOutcome::Eof => bail!("server closed the connection mid-stream"),
+            }
+        }
+    }
+
+    /// Submit one request and block until its terminal event (or a typed
+    /// rejection). Frames for other in-flight ids are not expected in this
+    /// single-request driver and error out loudly.
+    pub fn generate(&mut self, req: &WireRequest) -> Result<GenOutcome> {
+        self.send(&ClientFrame::Gen(req.clone()))?;
+        let mut events: Vec<(WireEvent, Instant)> = Vec::new();
+        loop {
+            match self.recv()? {
+                ServerFrame::Event(ev) => {
+                    if ev.id() != req.id {
+                        bail!("event for unexpected request {} (driving {})", ev.id(), req.id);
+                    }
+                    let terminal = ev.is_terminal();
+                    events.push((ev, Instant::now()));
+                    if terminal {
+                        return Ok(GenOutcome::Done { events });
+                    }
+                }
+                ServerFrame::Error(e) if e.id == Some(req.id) => {
+                    return Ok(GenOutcome::Rejected(e));
+                }
+                ServerFrame::Error(e) => bail!("server error: {} ({})", e.message,
+                                               e.kind.name()),
+                other => bail!("unexpected frame mid-generation: {other:?}"),
+            }
+        }
+    }
+
+    /// Fetch the engine metrics + cache accounting snapshot.
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.send(&ClientFrame::Metrics)?;
+        loop {
+            match self.recv()? {
+                ServerFrame::Metrics(stats) => return Ok(stats),
+                // events of concurrent requests may interleave; skip them
+                ServerFrame::Event(_) => continue,
+                ServerFrame::Error(e) => bail!("metrics failed: {} ({})", e.message,
+                                               e.kind.name()),
+                other => bail!("unexpected frame awaiting metrics: {other:?}"),
+            }
+        }
+    }
+
+    /// Ask the server to stop (graceful fleet-wide wind-down) and wait for
+    /// its `bye`.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        self.send(&ClientFrame::Shutdown)?;
+        loop {
+            match self.recv()? {
+                ServerFrame::Bye => return Ok(()),
+                ServerFrame::Event(_) => continue,
+                other => bail!("expected bye, got {other:?}"),
+            }
+        }
+    }
+}
+
+/// Aggregated result of one [`run_load`] run.
+#[derive(Debug, Default)]
+pub struct LoadReport {
+    pub connections: usize,
+    pub requests: usize,
+    /// Terminal `finished` results.
+    pub completed: usize,
+    /// Typed rejections (`queue_full` / `too_large`).
+    pub rejected: usize,
+    /// Other terminal outcomes (failed / cancelled / deadline exceeded).
+    pub failed: usize,
+    pub tokens: u64,
+    pub wall_s: f64,
+    /// Per-request submit → first token-event latency (ms).
+    pub ttft_ms: Vec<f64>,
+    /// Gaps between consecutive streamed token events of one request (ms):
+    /// the client-observed inter-token latency including the wire.
+    pub event_gap_ms: Vec<f64>,
+}
+
+impl LoadReport {
+    pub fn req_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            (self.completed + self.failed) as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn tok_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 { self.tokens as f64 / self.wall_s } else { 0.0 }
+    }
+
+    pub fn ttft_pctile(&self, p: f64) -> f64 {
+        Metrics::percentile(&self.ttft_ms, p)
+    }
+
+    pub fn event_gap_pctile(&self, p: f64) -> f64 {
+        Metrics::percentile(&self.event_gap_ms, p)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} conns × {} reqs: {} ok / {} rejected / {} failed in {:.2}s | \
+             {:.1} req/s, {:.1} tok/s | ttft p50 {:.1}ms p95 {:.1}ms | \
+             token gap p50 {:.2}ms p95 {:.2}ms",
+            self.connections,
+            self.requests / self.connections.max(1),
+            self.completed,
+            self.rejected,
+            self.failed,
+            self.wall_s,
+            self.req_per_s(),
+            self.tok_per_s(),
+            self.ttft_pctile(0.50),
+            self.ttft_pctile(0.95),
+            self.event_gap_pctile(0.50),
+            self.event_gap_pctile(0.95),
+        )
+    }
+}
+
+/// Drive `connections` concurrent clients, each issuing
+/// `requests_per_conn` streamed requests sequentially (prompts cycled from
+/// `prompts`), and aggregate latency/throughput stats. Connection-level
+/// failures (refused, handshake) abort the run; request-level rejections
+/// and failures are counted.
+pub fn run_load(
+    addr: &str,
+    connections: usize,
+    requests_per_conn: usize,
+    prompts: &[String],
+    max_new: usize,
+) -> Result<LoadReport> {
+    if prompts.is_empty() {
+        bail!("run_load needs at least one prompt");
+    }
+    let t0 = Instant::now();
+    let per_thread: Vec<Result<LoadReport>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..connections)
+            .map(|c| {
+                s.spawn(move || -> Result<LoadReport> {
+                    let mut client = Client::connect(addr)?;
+                    let mut rep = LoadReport::default();
+                    for r in 0..requests_per_conn {
+                        let prompt = &prompts[(c * requests_per_conn + r) % prompts.len()];
+                        let mut wr =
+                            WireRequest::new(r as u64 + 1, prompt.clone(), max_new);
+                        wr.seed = (c * requests_per_conn + r) as u64;
+                        let submitted = Instant::now();
+                        match client.generate(&wr)? {
+                            GenOutcome::Done { events } => {
+                                let mut last_token_at: Option<Instant> = None;
+                                for (ev, at) in &events {
+                                    if let WireEvent::Token { .. } = ev {
+                                        rep.tokens += 1;
+                                        let since = match last_token_at {
+                                            Some(prev) => *at - prev,
+                                            None => {
+                                                rep.ttft_ms.push(
+                                                    (*at - submitted).as_secs_f64() * 1e3,
+                                                );
+                                                last_token_at = Some(*at);
+                                                continue;
+                                            }
+                                        };
+                                        rep.event_gap_ms.push(since.as_secs_f64() * 1e3);
+                                        last_token_at = Some(*at);
+                                    }
+                                }
+                                let terminal = &events.last().expect("terminal event").0;
+                                match terminal {
+                                    WireEvent::Finished(_) => rep.completed += 1,
+                                    _ => rep.failed += 1,
+                                }
+                            }
+                            GenOutcome::Rejected(_) => rep.rejected += 1,
+                        }
+                        rep.requests += 1;
+                    }
+                    Ok(rep)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow::anyhow!("load thread panicked"))))
+            .collect()
+    });
+    let mut total = LoadReport {
+        connections,
+        wall_s: t0.elapsed().as_secs_f64(),
+        ..Default::default()
+    };
+    for rep in per_thread {
+        let rep = rep?;
+        total.requests += rep.requests;
+        total.completed += rep.completed;
+        total.rejected += rep.rejected;
+        total.failed += rep.failed;
+        total.tokens += rep.tokens;
+        total.ttft_ms.extend(rep.ttft_ms);
+        total.event_gap_ms.extend(rep.event_gap_ms);
+    }
+    Ok(total)
+}

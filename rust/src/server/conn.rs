@@ -1,0 +1,385 @@
+//! Per-connection session handling: a reader (the connection's own thread)
+//! parsing client frames, an event pump fanning every in-flight request of
+//! the connection back out of one shared channel, and the session table
+//! that maps client-chosen wire ids to server-assigned engine ids.
+//!
+//! # Threading model (per connection)
+//!
+//! * **reader** — owns the read half; enforces the `hello` handshake,
+//!   admission caps, and id bookkeeping, and submits through
+//!   [`CoordinatorHandle::submit`] with the connection's shared event
+//!   sender (all of the connection's requests fan into one channel; events
+//!   carry their engine id).
+//! * **pump** — owns the shared channel's receiver; translates engine ids
+//!   back to wire ids, writes event frames, and retires table entries (and
+//!   the global in-flight count) on terminal events.
+//! * both write through one `Mutex<BufWriter>` (control replies from the
+//!   reader, events from the pump), never holding the table lock across a
+//!   write.
+//!
+//! # Disconnect ⇒ cancel
+//!
+//! When the reader sees EOF (or an error, or the server's stop flag), it
+//! cancels every live request of this connection, so their slots, cache
+//! pages and staging regions are reclaimed immediately — a vanished client
+//! cannot pin pool capacity. The pump then drains the resulting terminal
+//! events (write failures are ignored; the socket may already be gone) so
+//! the global in-flight accounting converges before the thread exits.
+
+use super::protocol::{
+    read_frame, ClientFrame, ReadOutcome, ServerFrame, WireError, WireErrorKind, WireEvent,
+    WireRequest, PROTOCOL_VERSION,
+};
+use super::server::ServerConfig;
+use crate::coordinator::{CoordinatorHandle, GenEvent, WorkerStats};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How long the reader blocks in one read before re-checking the stop
+/// flag; also the pump's drain poll interval.
+const POLL: Duration = Duration::from_millis(100);
+
+/// Bound on any one socket write: a client that stops *reading* (send
+/// buffer full) must not block the pump forever — a timed-out write fails
+/// the frame, terminal bookkeeping still runs, and the failure marks the
+/// connection dead so the reader tears it down at its next poll.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// After the reader is gone, how many pump poll intervals to wait for the
+/// cancelled requests' terminal events before giving up (worker death).
+const DRAIN_GRACE_POLLS: u32 = 100; // × 100ms = 10s
+
+/// Shared server state handed to every connection.
+pub(crate) struct ConnContext {
+    pub handle: CoordinatorHandle,
+    pub cfg: ServerConfig,
+    /// Server-wide stop flag (`shutdown` control frame sets it).
+    pub stop: Arc<AtomicBool>,
+    /// Requests submitted wire-wide and not yet terminal.
+    pub global_inflight: Arc<AtomicUsize>,
+    /// Source of server-assigned engine ids (client ids are per-connection
+    /// and may collide across connections).
+    pub next_engine_id: Arc<AtomicU64>,
+}
+
+/// Wire id ↔ engine id session table for one connection.
+#[derive(Default)]
+struct Table {
+    /// engine id → (wire id, stream flag).
+    by_engine: HashMap<u64, (u64, bool)>,
+    /// wire id → engine id (cancel/duplicate lookups).
+    by_wire: HashMap<u64, u64>,
+}
+
+impl Table {
+    fn live(&self) -> usize {
+        self.by_engine.len()
+    }
+
+    fn insert(&mut self, wire_id: u64, engine_id: u64, stream: bool) {
+        self.by_engine.insert(engine_id, (wire_id, stream));
+        self.by_wire.insert(wire_id, engine_id);
+    }
+
+    fn remove_engine(&mut self, engine_id: u64) -> Option<u64> {
+        let (wire_id, _) = self.by_engine.remove(&engine_id)?;
+        self.by_wire.remove(&wire_id);
+        Some(wire_id)
+    }
+}
+
+/// The engine snapshot served by the `metrics` control frame (and dumped
+/// by `repro serve --metrics-json`): serving metrics plus the cache
+/// accounting that proves reclamation.
+pub fn stats_json(ws: &WorkerStats) -> Json {
+    Json::obj(vec![
+        ("metrics", ws.metrics.to_json()),
+        (
+            "cache",
+            Json::obj(vec![
+                ("blocks_in_use", Json::Num(ws.blocks_in_use as f64)),
+                ("live_seqs", Json::Num(ws.live_seqs as f64)),
+                ("total_tokens", Json::Num(ws.total_tokens as f64)),
+            ]),
+        ),
+        ("queue_depth", Json::Num(ws.queue_depth as f64)),
+    ])
+}
+
+/// Write one frame (line + flush). A failed or timed-out write marks the
+/// connection dead — once a frame has been dropped (or stranded
+/// half-written in the buffer) the stream is unrecoverable, so the reader
+/// must tear the connection down rather than leave a resumed client
+/// waiting for an event that will never arrive.
+fn send(writer: &Mutex<BufWriter<TcpStream>>, dead: &AtomicBool, frame: &ServerFrame) -> bool {
+    // encode before taking the lock: string building needs no
+    // serialization against the peer thread
+    let line = frame.encode();
+    let mut w = writer.lock().unwrap();
+    let ok = w
+        .write_all(line.as_bytes())
+        .and_then(|_| w.write_all(b"\n"))
+        .and_then(|_| w.flush())
+        .is_ok();
+    if !ok {
+        dead.store(true, Ordering::SeqCst);
+    }
+    ok
+}
+
+/// Serve one accepted connection to completion. Runs on the connection's
+/// own thread; spawns the event pump and joins it before returning.
+pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+    // low-latency streaming: a token frame is a few dozen bytes — never
+    // Nagle-delay it behind the next one
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(POLL)).is_err()
+        || stream.set_write_timeout(Some(WRITE_TIMEOUT)).is_err()
+    {
+        return;
+    }
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(BufWriter::new(w))),
+        Err(_) => return,
+    };
+    let table = Arc::new(Mutex::new(Table::default()));
+    let closing = Arc::new(AtomicBool::new(false));
+    // set by any failed write (send() above): the stream is broken, tear
+    // the connection down at the reader's next poll
+    let dead = Arc::new(AtomicBool::new(false));
+    let (ev_tx, ev_rx) = channel::<GenEvent>();
+
+    // ---- event pump ------------------------------------------------------
+    let pump = {
+        let writer = Arc::clone(&writer);
+        let table = Arc::clone(&table);
+        let closing = Arc::clone(&closing);
+        let dead = Arc::clone(&dead);
+        let global_inflight = Arc::clone(&ctx.global_inflight);
+        std::thread::spawn(move || {
+            let mut idle_polls = 0u32;
+            loop {
+                match ev_rx.recv_timeout(POLL) {
+                    Ok(ev) => {
+                        idle_polls = 0;
+                        let engine_id = ev.id();
+                        let routed = table.lock().unwrap().by_engine.get(&engine_id).copied();
+                        let Some((wire_id, stream_events)) = routed else {
+                            // Unknown id: a rejected submit raced its table
+                            // removal, or a stale event after cleanup.
+                            continue;
+                        };
+                        let terminal = ev.is_terminal();
+                        if terminal {
+                            // Retire the session BEFORE the terminal frame
+                            // hits the socket: a client that sees it may
+                            // legally reuse the id (or its cap slot) on its
+                            // very next frame, and must not race a
+                            // spurious duplicate-id/queue_full rejection.
+                            table.lock().unwrap().remove_engine(engine_id);
+                            global_inflight.fetch_sub(1, Ordering::SeqCst);
+                        }
+                        if stream_events || terminal {
+                            // write failures are ignored: the reader owns
+                            // disconnect detection and cleanup
+                            send(&writer, &dead, &ServerFrame::Event(WireEvent::from_event(
+                                &ev, wire_id,
+                            )));
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        if closing.load(Ordering::SeqCst) {
+                            idle_polls += 1;
+                            let drained = table.lock().unwrap().live() == 0;
+                            if drained || idle_polls > DRAIN_GRACE_POLLS {
+                                break;
+                            }
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            // Anything still live here means its terminal event will never
+            // arrive (worker died / drain grace expired): release the
+            // global accounting so the server doesn't wedge its caps.
+            let mut t = table.lock().unwrap();
+            let leaked = t.live();
+            if leaked > 0 {
+                global_inflight.fetch_sub(leaked, Ordering::SeqCst);
+                t.by_engine.clear();
+                t.by_wire.clear();
+            }
+        })
+    };
+
+    // ---- reader ----------------------------------------------------------
+    let mut reader = BufReader::new(stream);
+    let mut acc: Vec<u8> = Vec::new();
+    let mut greeted = false;
+    loop {
+        if ctx.stop.load(Ordering::SeqCst) || dead.load(Ordering::SeqCst) {
+            break;
+        }
+        let line = match read_frame(&mut reader, &mut acc) {
+            Ok(ReadOutcome::Frame(line)) => line,
+            Ok(ReadOutcome::TimedOut) => continue,
+            Ok(ReadOutcome::Eof) => break,
+            Err(_) => break,
+        };
+        let frame = match ClientFrame::decode(&line) {
+            Ok(f) => f,
+            Err(e) => {
+                send(&writer, &dead, &ServerFrame::Error(WireError::new(
+                    None,
+                    WireErrorKind::BadFrame,
+                    format!("unparseable frame: {e}"),
+                )));
+                if greeted {
+                    continue; // one bad frame doesn't kill a session
+                }
+                break; // garbage before hello: likely not our protocol
+            }
+        };
+        match frame {
+            ClientFrame::Hello { version } => {
+                if version != PROTOCOL_VERSION {
+                    send(&writer, &dead, &ServerFrame::Error(WireError::new(
+                        None,
+                        WireErrorKind::UnsupportedVersion {
+                            server: PROTOCOL_VERSION,
+                            client: version,
+                        },
+                        format!("server speaks protocol version {PROTOCOL_VERSION}"),
+                    )));
+                    break;
+                }
+                greeted = true;
+                send(&writer, &dead, &ServerFrame::HelloOk { version: PROTOCOL_VERSION });
+            }
+            _ if !greeted => {
+                send(&writer, &dead, &ServerFrame::Error(WireError::new(
+                    None,
+                    WireErrorKind::BadFrame,
+                    "expected hello handshake first",
+                )));
+                break;
+            }
+            ClientFrame::Gen(wr) => handle_gen(&ctx, &table, &writer, &dead, &ev_tx, wr),
+            ClientFrame::Cancel { id } => {
+                // Unknown/finished ids are a no-op, mirroring Engine::cancel.
+                let engine_id = table.lock().unwrap().by_wire.get(&id).copied();
+                if let Some(engine_id) = engine_id {
+                    ctx.handle.cancel(engine_id);
+                }
+            }
+            ClientFrame::Metrics => match ctx.handle.stats() {
+                Some(ws) => {
+                    send(&writer, &dead, &ServerFrame::Metrics(stats_json(&ws)));
+                }
+                None => {
+                    send(&writer, &dead, &ServerFrame::Error(WireError::new(
+                        None,
+                        WireErrorKind::ShuttingDown,
+                        "coordinator worker is gone",
+                    )));
+                }
+            },
+            ClientFrame::Shutdown => {
+                // Graceful server stop: no new connections, every reader
+                // breaks at its next poll, live requests are cancelled with
+                // their terminal events delivered where sockets still live.
+                ctx.stop.store(true, Ordering::SeqCst);
+                send(&writer, &dead, &ServerFrame::Bye);
+                break;
+            }
+        }
+    }
+
+    // ---- disconnect cleanup ---------------------------------------------
+    closing.store(true, Ordering::SeqCst);
+    let live: Vec<u64> = table.lock().unwrap().by_engine.keys().copied().collect();
+    for engine_id in live {
+        ctx.handle.cancel(engine_id);
+    }
+    drop(ev_tx); // pump exits once the router drops the last live sender
+    if pump.join().is_err() {
+        eprintln!("[server] event pump for {peer} panicked");
+    }
+}
+
+/// Admission for one `gen` frame: duplicate-id check, per-connection and
+/// global in-flight caps (both surfacing as `queue_full`, the protocol's
+/// single retryable kind), then the engine submit — whose typed rejection
+/// ([`crate::coordinator::SubmitError`]) maps straight onto the wire.
+fn handle_gen(
+    ctx: &ConnContext,
+    table: &Mutex<Table>,
+    writer: &Mutex<BufWriter<TcpStream>>,
+    dead: &AtomicBool,
+    ev_tx: &std::sync::mpsc::Sender<GenEvent>,
+    wr: WireRequest,
+) {
+    let wire_id = wr.id;
+    // Decide rejection with the table lock, write without it (the pump
+    // needs the table to keep routing other requests' events; a slow
+    // socket must never stall them).
+    let rejection = {
+        let t = table.lock().unwrap();
+        if t.by_wire.contains_key(&wire_id) {
+            Some(WireError::new(
+                Some(wire_id),
+                WireErrorKind::BadFrame,
+                format!("request id {wire_id} is already in flight on this connection"),
+            ))
+        } else if t.live() >= ctx.cfg.max_inflight_per_conn {
+            Some(WireError::new(
+                Some(wire_id),
+                WireErrorKind::QueueFull { capacity: ctx.cfg.max_inflight_per_conn },
+                format!(
+                    "connection in-flight cap reached ({})",
+                    ctx.cfg.max_inflight_per_conn
+                ),
+            ))
+        } else {
+            None
+        }
+    };
+    if let Some(e) = rejection {
+        send(writer, dead, &ServerFrame::Error(e));
+        return;
+    }
+    // global cap: admit-or-reject atomically across connections
+    let admitted = ctx
+        .global_inflight
+        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+            (n < ctx.cfg.max_inflight_global).then_some(n + 1)
+        })
+        .is_ok();
+    if !admitted {
+        send(writer, dead, &ServerFrame::Error(WireError::new(
+            Some(wire_id),
+            WireErrorKind::QueueFull { capacity: ctx.cfg.max_inflight_global },
+            format!("server in-flight cap reached ({})", ctx.cfg.max_inflight_global),
+        )));
+        return;
+    }
+    let engine_id = ctx.next_engine_id.fetch_add(1, Ordering::SeqCst) + 1;
+    // Insert before submitting: the worker can emit (and the pump route)
+    // this request's Queued event before submit() even returns.
+    table.lock().unwrap().insert(wire_id, engine_id, wr.stream);
+    match ctx.handle.submit(wr.to_gen_request(engine_id), ev_tx.clone()) {
+        Ok(_) => {}
+        Err(e) => {
+            table.lock().unwrap().remove_engine(engine_id);
+            ctx.global_inflight.fetch_sub(1, Ordering::SeqCst);
+            send(writer, dead, &ServerFrame::Error(WireError::from_submit(wire_id, &e)));
+        }
+    }
+}

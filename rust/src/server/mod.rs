@@ -1,0 +1,69 @@
+//! L4 network serving: a TCP wire front-end over the coordinator's session
+//! API — the boundary that turns in-process streams into served traffic.
+//!
+//! # Protocol
+//!
+//! Newline-delimited JSON frames (see [`protocol`] for the full grammar
+//! and framing/versioning rules): a connection opens with a versioned
+//! `hello` handshake, then multiplexes any number of `gen` requests —
+//! each identified by a client-chosen id, answered by a stream of `event`
+//! frames mirroring [`crate::coordinator::GenEvent`] one-to-one
+//! (queued / prefilled / token+text_delta+logprob / terminal-with-result)
+//! — plus `cancel`, `metrics` (engine + cache accounting snapshot), and
+//! `shutdown` control frames. Admission rejections arrive as typed
+//! `error` frames mirroring [`crate::coordinator::SubmitError`]:
+//! `queue_full` (retryable backpressure — from the engine's bounded
+//! admission queue *or* the server's per-connection/global in-flight
+//! caps) and `too_large` (the request's `prompt + max_new_tokens` exceeds
+//! the engine's per-request cache-token budget; not retryable).
+//!
+//! # Threading model
+//!
+//! std-only (tokio is unavailable offline). One listener thread polls
+//! accept + a stop flag; each connection gets a reader thread (frame
+//! parsing, handshake, caps, submits) and an event-pump thread (drains
+//! the connection's shared event channel — every in-flight request of the
+//! connection fans into it via
+//! [`crate::coordinator::CoordinatorHandle::submit`] — and writes event
+//! frames), both sharing one locked writer. The engine itself stays on
+//! the coordinator's single worker thread; the wire layer only ever
+//! touches channels, so serving semantics (batching, priorities,
+//! deadlines, backpressure) are exactly the in-process ones — a
+//! wire-served generation is token-for-token and logprob-bitwise
+//! identical to `run_to_completion` (integration-tested).
+//!
+//! # Lifecycle guarantees
+//!
+//! * **cancel-on-disconnect** — a client that vanishes mid-stream has all
+//!   of its live requests cancelled, freeing slots, cache pages and
+//!   staging regions immediately (asserted via pool accounting in tests);
+//! * **deadlines / priorities** — `deadline_ms` and `priority` ride the
+//!   wire into [`crate::coordinator::GenRequest`] unchanged;
+//! * **graceful shutdown** — a `shutdown` control frame stops the accept
+//!   loop, winds every connection down (cancelling still-live requests,
+//!   delivering their terminal events where sockets remain open), and
+//!   joins all threads before [`Server::run`] returns.
+//!
+//! # Quickstart
+//!
+//! ```text
+//! $ repro serve --listen 127.0.0.1:0 --queue-cap 8   # prints the port
+//! listening on 127.0.0.1:40513 (protocol v1)
+//! $ repro client --addr 127.0.0.1:40513 --connections 4 --requests 8
+//! 4 conns × 8 reqs: 32 ok / 0 rejected / 0 failed in 1.92s | 16.7 req/s, ...
+//! $ repro client --addr 127.0.0.1:40513 --requests 0 --shutdown
+//! ```
+
+pub mod client;
+pub mod conn;
+pub mod protocol;
+#[allow(clippy::module_inception)]
+pub mod server;
+
+pub use client::{run_load, Client, GenOutcome, LoadReport};
+pub use conn::stats_json;
+pub use protocol::{
+    ClientFrame, ServerFrame, WireError, WireErrorKind, WireEvent, WireRequest, WireResult,
+    PROTOCOL_VERSION,
+};
+pub use server::{Server, ServerConfig};

@@ -1,0 +1,878 @@
+//! Wire protocol: newline-delimited JSON frames over TCP.
+//!
+//! # Framing
+//!
+//! One frame per line: a complete JSON object terminated by `\n`. JSON
+//! string escaping guarantees an encoded frame never contains a raw
+//! newline, so framing survives arbitrary prompts and text deltas
+//! (including embedded `\n` and non-ASCII). [`read_frame`] accumulates
+//! bytes across read timeouts without ever splitting a frame (or a UTF-8
+//! sequence) and tolerates a missing final newline at EOF.
+//!
+//! # Integer fidelity
+//!
+//! `f64` can only represent integers exactly up to 2^53, so `u64`-valued
+//! fields (`id`, `seed`, `deadline_ms`) travel as decimal *strings*;
+//! decoding accepts either spelling. `f64` payloads (logprobs, latencies)
+//! round-trip bitwise: the printer emits the shortest representation that
+//! re-parses to the same bits (asserted in `util::json` tests) — the
+//! wire-vs-in-process equivalence test depends on this.
+//!
+//! # Versioning
+//!
+//! Every connection starts with a `hello` carrying the client's
+//! [`PROTOCOL_VERSION`]; the server answers `hello_ok` (same version) or an
+//! `unsupported_version` error and closes. Any other first frame is a
+//! `bad_frame` error. Fields unknown to a decoder are ignored, so adding
+//! optional fields is backward compatible within a version.
+//!
+//! # Frame grammar
+//!
+//! ```text
+//! client → server
+//!   {"op":"hello","version":1}
+//!   {"op":"gen","id":"1","prompt":"...","max_new_tokens":24,
+//!    "temperature":0,"top_k":0,"seed":"0","priority":0,
+//!    "deadline_ms":"2000"?,"stream":true}
+//!   {"op":"cancel","id":"1"}
+//!   {"op":"metrics"}
+//!   {"op":"shutdown"}
+//! server → client
+//!   {"op":"hello_ok","version":1}
+//!   {"op":"event","type":"queued","id":"1"}
+//!   {"op":"event","type":"prefilled","id":"1","prompt_len":8,"ttft_ms":3.1}
+//!   {"op":"event","type":"token","id":"1","token":104,"text_delta":"h",
+//!    "logprob":-1.25}
+//!   {"op":"event","type":"finished|failed|cancelled|deadline_exceeded",
+//!    "id":"1","result":{...}}
+//!   {"op":"error","id":"1"?,"kind":"queue_full|too_large|shutting_down|
+//!    bad_frame|unsupported_version","message":"...",...}
+//!   {"op":"metrics","stats":{...}}
+//!   {"op":"bye"}
+//! ```
+
+use crate::coordinator::{tokenizer, FinishReason, GenEvent, GenRequest, GenResult, SubmitError};
+use crate::util::json::Json;
+use std::io::{self, BufRead};
+
+/// Bumped on any incompatible frame-grammar change; the `hello` handshake
+/// rejects mismatches instead of mis-parsing mid-stream.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// json helpers
+
+/// u64 → decimal string (exact past 2^53; see module docs).
+fn u64_json(x: u64) -> Json {
+    Json::Str(x.to_string())
+}
+
+/// Accept `"123"` or `123` for u64-valued fields. The numeric spelling is
+/// only valid strictly below 2^53: past that, distinct integers collapse
+/// onto one f64 during parsing (silently corrupting request ids), so such
+/// values must use the exact string form.
+fn u64_field(j: &Json, key: &str) -> Result<u64, String> {
+    const EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+    let v = j.get(key).ok_or_else(|| format!("missing '{key}'"))?;
+    match v {
+        Json::Str(s) => s.parse().map_err(|_| format!("bad u64 in '{key}': {s:?}")),
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < EXACT => Ok(*n as u64),
+        Json::Num(n) if *n >= EXACT => Err(format!(
+            "'{key}' is too large for a JSON number (>= 2^53); send it as a decimal string"
+        )),
+        _ => Err(format!("bad u64 in '{key}'")),
+    }
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize, String> {
+    u64_field(j, key).map(|x| x as usize)
+}
+
+fn f64_field(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing/bad number '{key}'"))
+}
+
+/// Optional numeric field: absent → `None`; present with the wrong type →
+/// error. A mistyped sampling parameter (e.g. `"top_k":"40"`) must be
+/// rejected loudly, not silently served with the default.
+fn opt_f64_field(j: &Json, key: &str) -> Result<Option<f64>, String> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            v.as_f64().map(Some).ok_or_else(|| format!("'{key}' must be a number"))
+        }
+    }
+}
+
+/// Optional boolean field, strict like [`opt_f64_field`].
+fn opt_bool_field(j: &Json, key: &str) -> Result<Option<bool>, String> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            v.as_bool().map(Some).ok_or_else(|| format!("'{key}' must be a boolean"))
+        }
+    }
+}
+
+fn str_field<'a>(j: &'a Json, key: &str) -> Result<&'a str, String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("missing/bad string '{key}'"))
+}
+
+// ---------------------------------------------------------------------------
+// requests
+
+/// A generation request as it travels on the wire. `id` is chosen by the
+/// client and scoped to its connection; the server remaps it to a globally
+/// unique engine id and translates back on every event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    pub id: u64,
+    /// UTF-8 prompt text; the server tokenizes (byte-level) on receipt.
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    pub top_k: usize,
+    pub seed: u64,
+    pub priority: i32,
+    pub deadline_ms: Option<u64>,
+    /// `false` suppresses progress frames (queued/prefilled/token); only
+    /// the terminal event is delivered.
+    pub stream: bool,
+}
+
+impl WireRequest {
+    pub fn new(id: u64, prompt: impl Into<String>, max_new_tokens: usize) -> Self {
+        WireRequest {
+            id,
+            prompt: prompt.into(),
+            max_new_tokens,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+            priority: 0,
+            deadline_ms: None,
+            stream: true,
+        }
+    }
+
+    /// Materialize the engine-side request under a server-assigned id.
+    pub fn to_gen_request(&self, engine_id: u64) -> GenRequest {
+        let mut req = GenRequest::new(engine_id, tokenizer::encode(&self.prompt),
+                                      self.max_new_tokens);
+        req.sampling.temperature = self.temperature;
+        req.sampling.top_k = self.top_k;
+        req.sampling.seed = self.seed;
+        req.priority = self.priority;
+        req.deadline_ms = self.deadline_ms;
+        req
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("op", Json::Str("gen".into())),
+            ("id", u64_json(self.id)),
+            ("prompt", Json::Str(self.prompt.clone())),
+            ("max_new_tokens", Json::Num(self.max_new_tokens as f64)),
+            ("temperature", Json::Num(self.temperature as f64)),
+            ("top_k", Json::Num(self.top_k as f64)),
+            ("seed", u64_json(self.seed)),
+            ("priority", Json::Num(self.priority as f64)),
+            ("stream", Json::Bool(self.stream)),
+        ];
+        if let Some(ms) = self.deadline_ms {
+            pairs.push(("deadline_ms", u64_json(ms)));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        Ok(WireRequest {
+            id: u64_field(j, "id")?,
+            prompt: str_field(j, "prompt")?.to_string(),
+            max_new_tokens: usize_field(j, "max_new_tokens")?,
+            temperature: opt_f64_field(j, "temperature")?.unwrap_or(0.0) as f32,
+            top_k: opt_f64_field(j, "top_k")?.unwrap_or(0.0) as usize,
+            seed: if j.get("seed").is_some() { u64_field(j, "seed")? } else { 0 },
+            priority: opt_f64_field(j, "priority")?.unwrap_or(0.0) as i32,
+            deadline_ms: if j.get("deadline_ms").is_some() {
+                Some(u64_field(j, "deadline_ms")?)
+            } else {
+                None
+            },
+            stream: opt_bool_field(j, "stream")?.unwrap_or(true),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// events
+
+/// Terminal payload mirroring [`GenResult`] (ids rewritten to wire ids).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireResult {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub text: String,
+    pub forced_logprob: f64,
+    pub forced_count: usize,
+    pub prompt_len: usize,
+    pub ttft_ms: f64,
+    pub total_ms: f64,
+    pub queue_wait_ms: f64,
+    pub reason: FinishReason,
+    pub error: Option<String>,
+}
+
+impl WireResult {
+    pub fn from_result(r: &GenResult, wire_id: u64) -> Self {
+        WireResult {
+            id: wire_id,
+            tokens: r.tokens.clone(),
+            text: r.text.clone(),
+            forced_logprob: r.forced_logprob,
+            forced_count: r.forced_count,
+            prompt_len: r.prompt_len,
+            ttft_ms: r.ttft_ms,
+            total_ms: r.total_ms,
+            queue_wait_ms: r.queue_wait_ms,
+            reason: r.reason,
+            error: r.error.clone(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tokens", Json::Arr(self.tokens.iter().map(|t| Json::Num(*t as f64)).collect())),
+            ("text", Json::Str(self.text.clone())),
+            ("forced_logprob", Json::Num(self.forced_logprob)),
+            ("forced_count", Json::Num(self.forced_count as f64)),
+            ("prompt_len", Json::Num(self.prompt_len as f64)),
+            ("ttft_ms", Json::Num(self.ttft_ms)),
+            ("total_ms", Json::Num(self.total_ms)),
+            ("queue_wait_ms", Json::Num(self.queue_wait_ms)),
+            ("reason", Json::Str(self.reason.name().into())),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => Json::Str(e.clone()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    fn from_json(id: u64, j: &Json) -> Result<Self, String> {
+        let tokens = j
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .ok_or("missing 'tokens'")?
+            .iter()
+            .map(|t| t.as_f64().map(|n| n as i32).ok_or_else(|| "bad token".to_string()))
+            .collect::<Result<Vec<i32>, String>>()?;
+        let reason = str_field(j, "reason").and_then(|s| {
+            FinishReason::parse(s).ok_or_else(|| format!("unknown reason {s:?}"))
+        })?;
+        Ok(WireResult {
+            id,
+            tokens,
+            text: str_field(j, "text")?.to_string(),
+            forced_logprob: f64_field(j, "forced_logprob")?,
+            forced_count: usize_field(j, "forced_count")?,
+            prompt_len: usize_field(j, "prompt_len")?,
+            ttft_ms: f64_field(j, "ttft_ms")?,
+            total_ms: f64_field(j, "total_ms")?,
+            queue_wait_ms: f64_field(j, "queue_wait_ms")?,
+            reason,
+            error: j.get("error").and_then(Json::as_str).map(String::from),
+        })
+    }
+}
+
+/// One lifecycle event on the wire, mirroring [`GenEvent`] one-to-one.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireEvent {
+    Queued { id: u64 },
+    Prefilled { id: u64, prompt_len: usize, ttft_ms: f64 },
+    Token { id: u64, token: i32, text_delta: String, logprob: f64 },
+    Finished(WireResult),
+    Failed(WireResult),
+    Cancelled(WireResult),
+    DeadlineExceeded(WireResult),
+}
+
+impl WireEvent {
+    /// Translate an engine event onto the wire under the client's id.
+    pub fn from_event(ev: &GenEvent, wire_id: u64) -> Self {
+        match ev {
+            GenEvent::Queued { .. } => WireEvent::Queued { id: wire_id },
+            GenEvent::Prefilled { prompt_len, ttft_ms, .. } => {
+                WireEvent::Prefilled { id: wire_id, prompt_len: *prompt_len, ttft_ms: *ttft_ms }
+            }
+            GenEvent::Token { token, text_delta, logprob, .. } => WireEvent::Token {
+                id: wire_id,
+                token: *token,
+                text_delta: text_delta.clone(),
+                logprob: *logprob,
+            },
+            GenEvent::Finished(r) => WireEvent::Finished(WireResult::from_result(r, wire_id)),
+            GenEvent::Failed(r) => WireEvent::Failed(WireResult::from_result(r, wire_id)),
+            GenEvent::Cancelled(r) => WireEvent::Cancelled(WireResult::from_result(r, wire_id)),
+            GenEvent::DeadlineExceeded(r) => {
+                WireEvent::DeadlineExceeded(WireResult::from_result(r, wire_id))
+            }
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        match self {
+            WireEvent::Queued { id }
+            | WireEvent::Prefilled { id, .. }
+            | WireEvent::Token { id, .. } => *id,
+            WireEvent::Finished(r)
+            | WireEvent::Failed(r)
+            | WireEvent::Cancelled(r)
+            | WireEvent::DeadlineExceeded(r) => r.id,
+        }
+    }
+
+    /// The terminal payload, if this event ends its request's session.
+    pub fn result(&self) -> Option<&WireResult> {
+        match self {
+            WireEvent::Finished(r)
+            | WireEvent::Failed(r)
+            | WireEvent::Cancelled(r)
+            | WireEvent::DeadlineExceeded(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        self.result().is_some()
+    }
+
+    fn to_json(&self) -> Json {
+        let ev = |ty: &str, mut rest: Vec<(&str, Json)>| {
+            let mut pairs = vec![
+                ("op", Json::Str("event".into())),
+                ("type", Json::Str(ty.into())),
+                ("id", u64_json(self.id())),
+            ];
+            pairs.append(&mut rest);
+            Json::obj(pairs)
+        };
+        match self {
+            WireEvent::Queued { .. } => ev("queued", vec![]),
+            WireEvent::Prefilled { prompt_len, ttft_ms, .. } => ev(
+                "prefilled",
+                vec![
+                    ("prompt_len", Json::Num(*prompt_len as f64)),
+                    ("ttft_ms", Json::Num(*ttft_ms)),
+                ],
+            ),
+            WireEvent::Token { token, text_delta, logprob, .. } => ev(
+                "token",
+                vec![
+                    ("token", Json::Num(*token as f64)),
+                    ("text_delta", Json::Str(text_delta.clone())),
+                    ("logprob", Json::Num(*logprob)),
+                ],
+            ),
+            WireEvent::Finished(r) => ev("finished", vec![("result", r.to_json())]),
+            WireEvent::Failed(r) => ev("failed", vec![("result", r.to_json())]),
+            WireEvent::Cancelled(r) => ev("cancelled", vec![("result", r.to_json())]),
+            WireEvent::DeadlineExceeded(r) => {
+                ev("deadline_exceeded", vec![("result", r.to_json())])
+            }
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        let id = u64_field(j, "id")?;
+        let terminal = |j: &Json| -> Result<WireResult, String> {
+            WireResult::from_json(id, j.get("result").ok_or("missing 'result'")?)
+        };
+        match str_field(j, "type")? {
+            "queued" => Ok(WireEvent::Queued { id }),
+            "prefilled" => Ok(WireEvent::Prefilled {
+                id,
+                prompt_len: usize_field(j, "prompt_len")?,
+                ttft_ms: f64_field(j, "ttft_ms")?,
+            }),
+            "token" => Ok(WireEvent::Token {
+                id,
+                token: f64_field(j, "token")? as i32,
+                text_delta: str_field(j, "text_delta")?.to_string(),
+                logprob: f64_field(j, "logprob")?,
+            }),
+            "finished" => Ok(WireEvent::Finished(terminal(j)?)),
+            "failed" => Ok(WireEvent::Failed(terminal(j)?)),
+            "cancelled" => Ok(WireEvent::Cancelled(terminal(j)?)),
+            "deadline_exceeded" => Ok(WireEvent::DeadlineExceeded(terminal(j)?)),
+            other => Err(format!("unknown event type {other:?}")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// errors
+
+/// Typed protocol error, mirroring [`SubmitError`] plus wire-only kinds.
+/// Admission caps at every level (engine queue, per-connection and global
+/// in-flight) all map to `QueueFull` so clients need one retry path.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireErrorKind {
+    QueueFull { capacity: usize },
+    TooLarge { need: usize, budget: usize },
+    ShuttingDown,
+    BadFrame,
+    UnsupportedVersion { server: u64, client: u64 },
+}
+
+impl WireErrorKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireErrorKind::QueueFull { .. } => "queue_full",
+            WireErrorKind::TooLarge { .. } => "too_large",
+            WireErrorKind::ShuttingDown => "shutting_down",
+            WireErrorKind::BadFrame => "bad_frame",
+            WireErrorKind::UnsupportedVersion { .. } => "unsupported_version",
+        }
+    }
+
+    /// Retrying the same frame later can succeed (backpressure, not a
+    /// malformed or oversized request).
+    pub fn retryable(&self) -> bool {
+        matches!(self, WireErrorKind::QueueFull { .. })
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireError {
+    /// The request the error answers, when it answers one.
+    pub id: Option<u64>,
+    pub kind: WireErrorKind,
+    pub message: String,
+}
+
+impl WireError {
+    pub fn new(id: Option<u64>, kind: WireErrorKind, message: impl Into<String>) -> Self {
+        WireError { id, kind, message: message.into() }
+    }
+
+    /// Map an engine-side admission rejection onto the wire.
+    pub fn from_submit(wire_id: u64, e: &SubmitError) -> Self {
+        let kind = match e {
+            SubmitError::QueueFull { capacity, .. } => {
+                WireErrorKind::QueueFull { capacity: *capacity }
+            }
+            SubmitError::TooLarge { need, budget, .. } => {
+                WireErrorKind::TooLarge { need: *need, budget: *budget }
+            }
+            SubmitError::Shutdown { .. } => WireErrorKind::ShuttingDown,
+        };
+        WireError::new(Some(wire_id), kind, e.to_string())
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("op", Json::Str("error".into())),
+            ("kind", Json::Str(self.kind.name().into())),
+            ("message", Json::Str(self.message.clone())),
+        ];
+        if let Some(id) = self.id {
+            pairs.push(("id", u64_json(id)));
+        }
+        match &self.kind {
+            WireErrorKind::QueueFull { capacity } => {
+                pairs.push(("capacity", Json::Num(*capacity as f64)));
+            }
+            WireErrorKind::TooLarge { need, budget } => {
+                pairs.push(("need", Json::Num(*need as f64)));
+                pairs.push(("budget", Json::Num(*budget as f64)));
+            }
+            WireErrorKind::UnsupportedVersion { server, client } => {
+                pairs.push(("server", u64_json(*server)));
+                pairs.push(("client", u64_json(*client)));
+            }
+            WireErrorKind::ShuttingDown | WireErrorKind::BadFrame => {}
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        let kind = match str_field(j, "kind")? {
+            "queue_full" => WireErrorKind::QueueFull { capacity: usize_field(j, "capacity")? },
+            "too_large" => WireErrorKind::TooLarge {
+                need: usize_field(j, "need")?,
+                budget: usize_field(j, "budget")?,
+            },
+            "shutting_down" => WireErrorKind::ShuttingDown,
+            "bad_frame" => WireErrorKind::BadFrame,
+            "unsupported_version" => WireErrorKind::UnsupportedVersion {
+                server: u64_field(j, "server")?,
+                client: u64_field(j, "client")?,
+            },
+            other => return Err(format!("unknown error kind {other:?}")),
+        };
+        let id = if j.get("id").is_some() { Some(u64_field(j, "id")?) } else { None };
+        Ok(WireError { id, kind, message: str_field(j, "message")?.to_string() })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// frames
+
+/// Every frame a client may send.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientFrame {
+    Hello { version: u64 },
+    Gen(WireRequest),
+    Cancel { id: u64 },
+    Metrics,
+    Shutdown,
+}
+
+impl ClientFrame {
+    /// One line of JSON, newline-free (append `\n` when writing).
+    pub fn encode(&self) -> String {
+        match self {
+            ClientFrame::Hello { version } => Json::obj(vec![
+                ("op", Json::Str("hello".into())),
+                ("version", u64_json(*version)),
+            ])
+            .to_string(),
+            ClientFrame::Gen(req) => req.to_json().to_string(),
+            ClientFrame::Cancel { id } => {
+                Json::obj(vec![("op", Json::Str("cancel".into())), ("id", u64_json(*id))]).to_string()
+            }
+            ClientFrame::Metrics => Json::obj(vec![("op", Json::Str("metrics".into()))]).to_string(),
+            ClientFrame::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".into()))]).to_string(),
+        }
+    }
+
+    pub fn decode(line: &str) -> Result<Self, String> {
+        let j = Json::parse(line.trim())?;
+        match str_field(&j, "op")? {
+            "hello" => Ok(ClientFrame::Hello { version: u64_field(&j, "version")? }),
+            "gen" => Ok(ClientFrame::Gen(WireRequest::from_json(&j)?)),
+            "cancel" => Ok(ClientFrame::Cancel { id: u64_field(&j, "id")? }),
+            "metrics" => Ok(ClientFrame::Metrics),
+            "shutdown" => Ok(ClientFrame::Shutdown),
+            other => Err(format!("unknown op {other:?}")),
+        }
+    }
+}
+
+/// Every frame a server may send.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServerFrame {
+    HelloOk { version: u64 },
+    Event(WireEvent),
+    Error(WireError),
+    /// Engine metrics + cache accounting snapshot (see
+    /// [`crate::server::conn`] for the exact shape).
+    Metrics(Json),
+    /// Acknowledges a `shutdown` frame before the connection closes.
+    Bye,
+}
+
+impl ServerFrame {
+    /// One line of JSON, newline-free (append `\n` when writing).
+    pub fn encode(&self) -> String {
+        match self {
+            ServerFrame::HelloOk { version } => Json::obj(vec![
+                ("op", Json::Str("hello_ok".into())),
+                ("version", u64_json(*version)),
+            ])
+            .to_string(),
+            ServerFrame::Event(ev) => ev.to_json().to_string(),
+            ServerFrame::Error(e) => e.to_json().to_string(),
+            ServerFrame::Metrics(stats) => Json::obj(vec![
+                ("op", Json::Str("metrics".into())),
+                ("stats", stats.clone()),
+            ])
+            .to_string(),
+            ServerFrame::Bye => Json::obj(vec![("op", Json::Str("bye".into()))]).to_string(),
+        }
+    }
+
+    pub fn decode(line: &str) -> Result<Self, String> {
+        let j = Json::parse(line.trim())?;
+        match str_field(&j, "op")? {
+            "hello_ok" => Ok(ServerFrame::HelloOk { version: u64_field(&j, "version")? }),
+            "event" => Ok(ServerFrame::Event(WireEvent::from_json(&j)?)),
+            "error" => Ok(ServerFrame::Error(WireError::from_json(&j)?)),
+            "metrics" => {
+                Ok(ServerFrame::Metrics(j.get("stats").cloned().unwrap_or(Json::Null)))
+            }
+            "bye" => Ok(ServerFrame::Bye),
+            other => Err(format!("unknown op {other:?}")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// line reading
+
+/// Outcome of one [`read_frame`] attempt.
+pub enum ReadOutcome {
+    /// A complete line (without its terminator).
+    Frame(String),
+    /// The read timed out mid-line; partial bytes stay in `acc` and the
+    /// next call resumes them (used by the server's stop-flag polling).
+    TimedOut,
+    /// Clean end of stream.
+    Eof,
+}
+
+/// Read one newline-terminated frame, accumulating raw bytes in `acc`
+/// across timeouts so neither frames nor UTF-8 sequences are ever split.
+/// (`BufRead::read_lines`-style String APIs can drop partially-read bytes
+/// when a timeout lands inside a multi-byte character — raw `read_until`
+/// keeps them.) A final unterminated line before EOF is returned as a
+/// frame; the following call reports `Eof`.
+pub fn read_frame(r: &mut impl BufRead, acc: &mut Vec<u8>) -> io::Result<ReadOutcome> {
+    match r.read_until(b'\n', acc) {
+        Ok(0) => {
+            if acc.is_empty() {
+                Ok(ReadOutcome::Eof)
+            } else {
+                let line = take_line(acc)?;
+                Ok(ReadOutcome::Frame(line))
+            }
+        }
+        Ok(_) => {
+            if acc.last() == Some(&b'\n') {
+                acc.pop();
+                if acc.last() == Some(&b'\r') {
+                    acc.pop();
+                }
+                let line = take_line(acc)?;
+                Ok(ReadOutcome::Frame(line))
+            } else {
+                // read_until returned without a delimiter only at EOF
+                let line = take_line(acc)?;
+                Ok(ReadOutcome::Frame(line))
+            }
+        }
+        Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+            Ok(ReadOutcome::TimedOut)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+fn take_line(acc: &mut Vec<u8>) -> io::Result<String> {
+    String::from_utf8(std::mem::take(acc))
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_are_single_lines() {
+        let req = WireRequest::new(7, "line one\nline two\né𝄞", 16);
+        let enc = ClientFrame::Gen(req).encode();
+        assert!(!enc.contains('\n'), "embedded newline escaped: {enc}");
+    }
+
+    #[test]
+    fn client_frames_round_trip() {
+        let mut req = WireRequest::new(u64::MAX, "héllo\nwörld", 24);
+        req.temperature = 0.75;
+        req.top_k = 40;
+        req.seed = (1u64 << 60) + 3; // exercises the >2^53 string path
+        req.priority = -2;
+        req.deadline_ms = Some(u64::MAX - 1);
+        req.stream = false;
+        for f in [
+            ClientFrame::Hello { version: PROTOCOL_VERSION },
+            ClientFrame::Gen(req),
+            ClientFrame::Cancel { id: 1 << 55 },
+            ClientFrame::Metrics,
+            ClientFrame::Shutdown,
+        ] {
+            let enc = f.encode();
+            assert_eq!(ClientFrame::decode(&enc).unwrap(), f, "round trip of {enc}");
+        }
+    }
+
+    #[test]
+    fn server_frames_round_trip() {
+        let res = WireResult {
+            id: 9,
+            tokens: vec![104, 233, -1],
+            text: "hé".into(),
+            forced_logprob: -12.34567890123,
+            forced_count: 2,
+            prompt_len: 5,
+            ttft_ms: 1.25,
+            total_ms: 9.5,
+            queue_wait_ms: 0.125,
+            reason: FinishReason::DeadlineExceeded,
+            error: Some("deadline exceeded (5ms)".into()),
+        };
+        for f in [
+            ServerFrame::HelloOk { version: PROTOCOL_VERSION },
+            ServerFrame::Event(WireEvent::Queued { id: 9 }),
+            ServerFrame::Event(WireEvent::Prefilled { id: 9, prompt_len: 5, ttft_ms: 3.5 }),
+            ServerFrame::Event(WireEvent::Token {
+                id: 9,
+                token: 233,
+                text_delta: "é".into(),
+                logprob: -0.6931471805599453,
+            }),
+            ServerFrame::Event(WireEvent::Finished(res.clone())),
+            ServerFrame::Event(WireEvent::Cancelled(res)),
+            ServerFrame::Error(WireError::new(
+                Some(9),
+                WireErrorKind::QueueFull { capacity: 4 },
+                "admission queue full (4 waiting)",
+            )),
+            ServerFrame::Error(WireError::new(
+                None,
+                WireErrorKind::UnsupportedVersion { server: 1, client: 2 },
+                "speak version 1",
+            )),
+            ServerFrame::Metrics(Json::parse(r#"{"requests_completed":3}"#).unwrap()),
+            ServerFrame::Bye,
+        ] {
+            let enc = f.encode();
+            assert!(!enc.contains('\n'));
+            assert_eq!(ServerFrame::decode(&enc).unwrap(), f, "round trip of {enc}");
+        }
+    }
+
+    #[test]
+    fn token_logprob_round_trips_bitwise() {
+        let lp = -3.0000000000000004; // not representable as a short decimal
+        let f = ServerFrame::Event(WireEvent::Token {
+            id: 1,
+            token: 65,
+            text_delta: "A".into(),
+            logprob: lp,
+        });
+        let ServerFrame::Event(WireEvent::Token { logprob, .. }) =
+            ServerFrame::decode(&f.encode()).unwrap()
+        else {
+            panic!("decoded to a different frame");
+        };
+        assert_eq!(logprob.to_bits(), lp.to_bits());
+    }
+
+    #[test]
+    fn malformed_frames_error_cleanly() {
+        for bad in [
+            "",
+            "not json",
+            "{}",
+            r#"{"op":"gen"}"#,
+            r#"{"op":"gen","id":"x","prompt":"p","max_new_tokens":1}"#,
+            r#"{"op":"nope"}"#,
+            r#"{"op":"cancel","id":-3}"#,
+        ] {
+            assert!(ClientFrame::decode(bad).is_err(), "accepted {bad:?}");
+        }
+        assert!(ServerFrame::decode(r#"{"op":"event","type":"wat","id":"1"}"#).is_err());
+    }
+
+    #[test]
+    fn numeric_u64_rejected_past_exact_range() {
+        // 2^53 - 1 is the largest integer every f64 represents uniquely:
+        // numeric ids up to there are fine...
+        let ok = ClientFrame::decode(r#"{"op":"cancel","id":9007199254740991}"#).unwrap();
+        assert_eq!(ok, ClientFrame::Cancel { id: 9007199254740991 });
+        // ...past it the parse silently rounds (9007199254740993 becomes
+        // ...992), so the decoder must reject instead of mis-correlating
+        let err =
+            ClientFrame::decode(r#"{"op":"cancel","id":9007199254740993}"#).unwrap_err();
+        assert!(err.contains("decimal string"), "unhelpful rejection: {err}");
+        // the string spelling stays exact at any magnitude
+        let big = format!(r#"{{"op":"cancel","id":"{}"}}"#, u64::MAX);
+        assert_eq!(
+            ClientFrame::decode(&big).unwrap(),
+            ClientFrame::Cancel { id: u64::MAX }
+        );
+    }
+
+    #[test]
+    fn mistyped_optional_fields_rejected_not_defaulted() {
+        // a string-typed sampling param must error, not silently serve the
+        // request greedy at the defaults
+        for bad in [
+            r#"{"op":"gen","id":"1","prompt":"p","max_new_tokens":1,"top_k":"40"}"#,
+            r#"{"op":"gen","id":"1","prompt":"p","max_new_tokens":1,"temperature":"0.9"}"#,
+            r#"{"op":"gen","id":"1","prompt":"p","max_new_tokens":1,"priority":null}"#,
+            r#"{"op":"gen","id":"1","prompt":"p","max_new_tokens":1,"stream":"yes"}"#,
+        ] {
+            assert!(ClientFrame::decode(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn gen_decode_fills_defaults() {
+        let f = ClientFrame::decode(
+            r#"{"op":"gen","id":"3","prompt":"hi","max_new_tokens":4}"#,
+        )
+        .unwrap();
+        let ClientFrame::Gen(req) = f else { panic!("not a gen frame") };
+        assert_eq!(req.temperature, 0.0);
+        assert_eq!(req.top_k, 0);
+        assert_eq!(req.seed, 0);
+        assert_eq!(req.priority, 0);
+        assert_eq!(req.deadline_ms, None);
+        assert!(req.stream, "stream defaults on");
+    }
+
+    #[test]
+    fn to_gen_request_remaps_id_and_tokenizes() {
+        let mut wr = WireRequest::new(5, "ab", 3);
+        wr.deadline_ms = Some(100);
+        wr.priority = 2;
+        wr.seed = 42;
+        let gr = wr.to_gen_request(777);
+        assert_eq!(gr.id, 777);
+        assert_eq!(gr.prompt, vec![b'a' as i32, b'b' as i32]);
+        assert_eq!(gr.max_new_tokens, 3);
+        assert_eq!(gr.deadline_ms, Some(100));
+        assert_eq!(gr.priority, 2);
+        assert_eq!(gr.sampling.seed, 42);
+        assert_eq!(gr.cache_tokens_needed(), 5);
+    }
+
+    #[test]
+    fn read_frame_accumulates_across_split_reads() {
+        use std::io::BufReader;
+        // a reader that yields one byte per read: every frame arrives
+        // maximally fragmented
+        struct OneByte<'a>(&'a [u8], usize);
+        impl std::io::Read for OneByte<'_> {
+            fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+                if self.1 >= self.0.len() {
+                    return Ok(0);
+                }
+                buf[0] = self.0[self.1];
+                self.1 += 1;
+                Ok(1)
+            }
+        }
+        let wire = "{\"op\":\"metrics\"}\n{\"op\":\"bye\"}";
+        let mut r = BufReader::with_capacity(1, OneByte(wire.as_bytes(), 0));
+        let mut acc = Vec::new();
+        let mut frames = Vec::new();
+        loop {
+            match read_frame(&mut r, &mut acc).unwrap() {
+                ReadOutcome::Frame(l) => frames.push(l),
+                ReadOutcome::TimedOut => continue,
+                ReadOutcome::Eof => break,
+            }
+        }
+        assert_eq!(frames, vec!["{\"op\":\"metrics\"}", "{\"op\":\"bye\"}"]);
+    }
+}

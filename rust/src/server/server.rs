@@ -1,0 +1,121 @@
+//! The TCP listener: accepts connections, hands each one to
+//! [`super::conn`] on its own thread, and coordinates graceful shutdown.
+//!
+//! std-only concurrency (tokio is unavailable offline): the listener runs
+//! non-blocking and polls a shared stop flag between accepts, so a
+//! `shutdown` control frame received on *any* connection stops the whole
+//! server — no new connections are accepted, every connection's reader
+//! breaks at its next read-timeout poll (cancelling its live requests so
+//! cache pages are reclaimed), and [`Server::run`] returns once every
+//! connection thread has been joined. There is no in-process SIGINT hook
+//! (std has no signal handling); process kill is abrupt but safe — the OS
+//! closes the sockets and the engine dies with its process.
+
+use super::conn::{handle_conn, ConnContext};
+use crate::coordinator::CoordinatorHandle;
+use anyhow::{Context, Result};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Accept-loop poll interval while no connection is pending.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Max in-flight (submitted, not yet terminal) requests per connection;
+    /// the N+1st gets a `queue_full` error frame.
+    pub max_inflight_per_conn: usize,
+    /// Max in-flight requests across all connections; overflow also maps to
+    /// `queue_full` (one retryable kind for every admission level).
+    pub max_inflight_global: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_inflight_per_conn: 8, max_inflight_global: 64 }
+    }
+}
+
+/// A bound-but-not-yet-running wire server over one coordinator worker.
+pub struct Server {
+    listener: TcpListener,
+    handle: CoordinatorHandle,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:7077`, or port `0` for an ephemeral
+    /// port — read it back with [`Server::local_addr`]).
+    pub fn bind(addr: &str, handle: CoordinatorHandle, cfg: ServerConfig) -> Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(Server { listener, handle, cfg, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Shared stop flag: setting it true stops the accept loop and winds
+    /// down every connection (the `shutdown` control frame does exactly
+    /// this from inside a connection).
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Serve until the stop flag is set, then join every connection thread.
+    pub fn run(self) -> Result<()> {
+        self.listener.set_nonblocking(true).context("non-blocking listener")?;
+        let global_inflight = Arc::new(AtomicUsize::new(0));
+        let next_engine_id = Arc::new(AtomicU64::new(0));
+        let mut conns: Vec<JoinHandle<()>> = Vec::new();
+        while !self.stop.load(Ordering::SeqCst) {
+            // reap finished connections every iteration (not only when
+            // accept would block): under a steady stream of short-lived
+            // connections the WouldBlock branch may rarely run, and dead
+            // join handles must not accumulate without bound
+            conns.retain(|t| !t.is_finished());
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    // accepted sockets may inherit the listener's
+                    // non-blocking mode on some platforms; conn I/O wants
+                    // blocking reads with a timeout
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    let ctx = ConnContext {
+                        handle: self.handle.clone(),
+                        cfg: self.cfg,
+                        stop: Arc::clone(&self.stop),
+                        global_inflight: Arc::clone(&global_inflight),
+                        next_engine_id: Arc::clone(&next_engine_id),
+                    };
+                    let t = std::thread::Builder::new()
+                        .name(format!("wire-conn-{peer}"))
+                        .spawn(move || handle_conn(stream, ctx))
+                        .context("spawning connection thread")?;
+                    conns.push(t);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) => {
+                    // Transient accept failures (ECONNABORTED from a client
+                    // RSTing mid-handshake, EMFILE under fd pressure) must
+                    // not take down every healthy connection — log, back
+                    // off, keep serving. Only the stop flag ends the loop.
+                    eprintln!("[server] accept error (continuing): {e}");
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+            }
+        }
+        for t in conns {
+            let _ = t.join();
+        }
+        Ok(())
+    }
+}

@@ -29,6 +29,12 @@ impl Json {
         Ok(v)
     }
 
+    /// Build an object from `(key, value)` pairs — the construction shared
+    /// by report emission and the wire protocol's frame encoders.
+    pub fn obj<K: Into<String>>(pairs: impl IntoIterator<Item = (K, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
     // -- typed accessors -------------------------------------------------
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
@@ -51,6 +57,13 @@ impl Json {
 
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -279,7 +292,16 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no inf/NaN; emit null rather than an
+                    // unparseable token (readers see a missing value).
+                    out.push_str("null");
+                } else if n.fract() == 0.0
+                    && n.abs() < 1e15
+                    && !(n.is_sign_negative() && *n == 0.0)
+                {
+                    // integer fast path; -0.0 is excluded so the wire's
+                    // bitwise f64 round-trip holds (as i64 would print "0")
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -327,5 +349,32 @@ mod tests {
     #[test]
     fn rejects_trailing() {
         assert!(Json::parse("{} x").is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_print_as_null() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let printed = Json::Arr(vec![Json::Num(bad)]).to_string();
+            assert_eq!(printed, "[null]");
+            assert!(Json::parse(&printed).is_ok(), "printed form must stay parseable");
+        }
+    }
+
+    #[test]
+    fn finite_f64_round_trips_bitwise() {
+        // shortest-repr printing + str::parse must reproduce exact bits —
+        // the wire protocol's logprob fidelity depends on it
+        for x in [
+            0.25,
+            -1.0e-7,
+            3.141592653589793,
+            1.0 / 3.0,
+            -2.2250738585072014e-308,
+            -0.0, // must not take the integer fast path ("0" parses to +0.0)
+        ] {
+            let printed = Json::Num(x).to_string();
+            let back = Json::parse(&printed).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} reprinted as {printed}");
+        }
     }
 }

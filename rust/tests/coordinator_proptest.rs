@@ -150,6 +150,9 @@ fn wait_queue_backpressure_and_admission_order() {
                     prop_assert!(capacity == cap, "reported cap {capacity} != {cap}");
                     prop_assert!(req.id == id, "rejected wrong request: {}", req.id);
                 }
+                Err(e) => {
+                    return Err(format!("wait queue must only reject QueueFull, got {e:?}"));
+                }
             }
         }
         prop_assert!(q.len() == accepted.min(cap), "queue depth bookkeeping broke");

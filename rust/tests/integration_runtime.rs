@@ -576,8 +576,10 @@ fn queue_full_backpressure_rejects_then_admits_after_drain() {
     .unwrap();
     engine.submit(GenRequest::new(1, enc("the dog "), 3)).unwrap();
     engine.submit(GenRequest::new(2, enc("the cat "), 3)).unwrap();
-    let SubmitError::QueueFull { req, capacity } =
-        engine.submit(GenRequest::new(3, enc("the fox "), 3)).unwrap_err();
+    let err = engine.submit(GenRequest::new(3, enc("the fox "), 3)).unwrap_err();
+    let SubmitError::QueueFull { req, capacity } = err else {
+        panic!("saturated queue must reject with QueueFull, got {err:?}");
+    };
     assert_eq!(capacity, 2);
     assert_eq!(req.id, 3, "rejected request must come back for retry");
     assert_eq!(engine.metrics.requests_rejected, 1);
@@ -589,6 +591,38 @@ fn queue_full_backpressure_rejects_then_admits_after_drain() {
     results.sort_by_key(|r| r.id);
     assert_eq!(results.len(), 3, "retried request must be served");
     assert!(results.iter().all(|r| r.error.is_none()));
+    assert_eq!(engine.cache.blocks_in_use(), 0);
+}
+
+#[test]
+fn oversized_request_rejected_at_submit() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("tiny-mha").unwrap();
+    let variant = model.variant("recal@50").unwrap();
+    let enc = recalkv::coordinator::tokenizer::encode;
+    let mut engine = Engine::new(
+        &rt,
+        model,
+        variant,
+        EngineConfig { max_cache_tokens: 16, ..Default::default() },
+    )
+    .unwrap();
+    // 12 prompt tokens + 8 new = 20 > 16: typed rejection, nothing queued
+    let err = engine.submit(GenRequest::new(1, enc("twelve bytes"), 8)).unwrap_err();
+    let SubmitError::TooLarge { req, need, budget } = err else {
+        panic!("expected TooLarge, got {err:?}");
+    };
+    assert_eq!((need, budget), (20, 16));
+    assert_eq!(req.id, 1, "rejected request must come back intact");
+    assert_eq!(engine.queue_depth(), 0, "oversized request must not be queued");
+    assert_eq!(engine.metrics.requests_rejected, 1);
+    // exactly at budget (12 + 4) is admitted and served
+    engine.submit(GenRequest::new(2, enc("twelve bytes"), 4)).unwrap();
+    let results = engine.run_to_completion().unwrap();
+    assert_eq!(results.len(), 1);
+    assert!(results[0].error.is_none());
+    assert_eq!(results[0].tokens.len(), 4);
     assert_eq!(engine.cache.blocks_in_use(), 0);
 }
 

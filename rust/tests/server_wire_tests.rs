@@ -1,0 +1,435 @@
+//! Wire-protocol and TCP-server tests.
+//!
+//! The protocol round-trip properties are runtime-free and always run.
+//! The end-to-end server tests (equivalence with the in-process engine,
+//! cancel-on-disconnect page reclamation, wire backpressure, oversized
+//! request rejection) need artifacts/ and skip gracefully without it —
+//! same convention as integration_runtime.rs.
+
+use recalkv::artifacts::Manifest;
+use recalkv::coordinator::batcher::BatchPolicy;
+use recalkv::coordinator::{Coordinator, Engine, EngineConfig, GenEvent, GenRequest};
+use recalkv::server::{
+    Client, ClientFrame, GenOutcome, Server, ServerConfig, ServerFrame, WireError,
+    WireErrorKind, WireEvent, WireRequest, WireResult,
+};
+use recalkv::util::prop;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// runtime-free protocol properties
+
+/// Random unicode-ish string including newlines, quotes, backslashes and
+/// multi-byte chars — everything that could break line framing or JSON
+/// escaping.
+fn gen_string(ctx: &mut prop::PropCtx, max_len: usize) -> String {
+    let n = ctx.usize_in(0, max_len);
+    (0..n)
+        .map(|_| match ctx.rng.below(8) {
+            0 => '\n',
+            1 => '"',
+            2 => '\\',
+            3 => 'é',
+            4 => '𝄞',
+            5 => '\t',
+            6 => char::from_u32(0x20 + ctx.rng.below(0x5f) as u32).unwrap(),
+            _ => char::from_u32(0x4e00 + ctx.rng.below(0x100) as u32).unwrap(),
+        })
+        .collect()
+}
+
+fn gen_request(ctx: &mut prop::PropCtx) -> WireRequest {
+    let mut req = WireRequest::new(ctx.rng.next_u64(), gen_string(ctx, 48), ctx.usize_in(0, 512));
+    req.temperature = (ctx.rng.below(200) as f32) / 100.0;
+    req.top_k = ctx.usize_in(0, 64);
+    req.seed = ctx.rng.next_u64(); // full u64 range: exercises the string path
+    req.priority = ctx.rng.below(11) as i32 - 5;
+    req.deadline_ms = if ctx.rng.below(2) == 0 { Some(ctx.rng.next_u64()) } else { None };
+    req.stream = ctx.rng.below(2) == 0;
+    req
+}
+
+#[test]
+fn wire_request_roundtrip_property() {
+    prop::check("wire_request_roundtrip", 200, |ctx| {
+        let req = gen_request(ctx);
+        let enc = ClientFrame::Gen(req.clone()).encode();
+        if enc.contains('\n') {
+            return Err(format!("encoded frame contains a raw newline: {enc}"));
+        }
+        let dec = ClientFrame::decode(&enc).map_err(|e| format!("decode failed: {e}"))?;
+        if dec != ClientFrame::Gen(req) {
+            return Err(format!("round trip mismatch: {enc}"));
+        }
+        Ok(())
+    });
+}
+
+fn gen_result(ctx: &mut prop::PropCtx, id: u64) -> WireResult {
+    use recalkv::coordinator::FinishReason;
+    let n = ctx.usize_in(0, 32);
+    let reasons = [
+        FinishReason::Completed,
+        FinishReason::Failed,
+        FinishReason::Cancelled,
+        FinishReason::DeadlineExceeded,
+    ];
+    WireResult {
+        id,
+        tokens: (0..n).map(|_| ctx.rng.below(256) as i32).collect(),
+        text: gen_string(ctx, 32),
+        forced_logprob: -(ctx.rng.normal().abs() as f64) * 100.0,
+        forced_count: ctx.usize_in(0, 32),
+        prompt_len: ctx.usize_in(0, 512),
+        ttft_ms: ctx.rng.normal().abs() as f64 * 10.0,
+        total_ms: ctx.rng.normal().abs() as f64 * 100.0,
+        queue_wait_ms: ctx.rng.normal().abs() as f64,
+        reason: reasons[ctx.rng.below(4)],
+        error: if ctx.rng.below(2) == 0 { Some(gen_string(ctx, 16)) } else { None },
+    }
+}
+
+#[test]
+fn wire_event_roundtrip_property() {
+    prop::check("wire_event_roundtrip", 200, |ctx| {
+        let id = ctx.rng.next_u64();
+        let ev = match ctx.rng.below(7) {
+            0 => WireEvent::Queued { id },
+            1 => WireEvent::Prefilled {
+                id,
+                prompt_len: ctx.usize_in(0, 512),
+                ttft_ms: ctx.rng.normal().abs() as f64 * 10.0,
+            },
+            2 => WireEvent::Token {
+                id,
+                token: ctx.rng.below(256) as i32,
+                text_delta: gen_string(ctx, 4),
+                logprob: -(ctx.rng.normal().abs() as f64) * 20.0,
+            },
+            3 => WireEvent::Finished(gen_result(ctx, id)),
+            4 => WireEvent::Failed(gen_result(ctx, id)),
+            5 => WireEvent::Cancelled(gen_result(ctx, id)),
+            _ => WireEvent::DeadlineExceeded(gen_result(ctx, id)),
+        };
+        let enc = ServerFrame::Event(ev.clone()).encode();
+        if enc.contains('\n') {
+            return Err(format!("encoded frame contains a raw newline: {enc}"));
+        }
+        let dec = ServerFrame::decode(&enc).map_err(|e| format!("decode failed: {e}"))?;
+        let ServerFrame::Event(got) = dec else {
+            return Err(format!("decoded to a non-event frame: {enc}"));
+        };
+        // logprob fidelity is bitwise, not approximate
+        if let (
+            WireEvent::Token { logprob: a, .. },
+            WireEvent::Token { logprob: b, .. },
+        ) = (&ev, &got)
+        {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("logprob bits changed: {a} -> {b}"));
+            }
+        }
+        if got != ev {
+            return Err(format!("round trip mismatch: {enc}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end server tests (need artifacts/)
+
+fn manifest_dir() -> Option<PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("[skip] artifacts/ not built");
+        return None;
+    }
+    Some(dir)
+}
+
+/// Spawn a coordinator + wire server on an ephemeral loopback port.
+/// Returns the client-facing address, the coordinator (shut it down last),
+/// and the server thread's join handle (joins after `shutdown_server`).
+fn spawn_server(
+    dir: PathBuf,
+    ecfg: EngineConfig,
+    scfg: ServerConfig,
+) -> (String, Coordinator, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let coord = Coordinator::spawn(move || {
+        let man = Manifest::load(&dir)?;
+        let rt = recalkv::runtime::Runtime::cpu()?;
+        let model = man.model("tiny-mha")?;
+        Engine::new(&rt, model, model.variant("recal@50")?, ecfg)
+    });
+    let server = Server::bind("127.0.0.1:0", coord.handle(), scfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let worker = std::thread::spawn(move || server.run());
+    (addr, coord, worker)
+}
+
+fn stop_server(addr: &str, coord: Coordinator, worker: std::thread::JoinHandle<anyhow::Result<()>>) {
+    let mut c = Client::connect(addr).expect("connect for shutdown");
+    c.shutdown_server().expect("shutdown handshake");
+    worker.join().expect("server thread panicked").expect("server run failed");
+    coord.shutdown().expect("coordinator shutdown");
+}
+
+#[test]
+fn wire_generation_matches_in_process_bitwise() {
+    let Some(dir) = manifest_dir() else { return };
+    let prompt_text = "bob has a red key . the dog barks . ";
+    let max_new = 16usize;
+
+    // in-process reference: greedy generation, token logprobs from the
+    // event stream
+    let man = Manifest::load(&dir).unwrap();
+    let rt = recalkv::runtime::Runtime::cpu().unwrap();
+    let model = man.model("tiny-mha").unwrap();
+    let variant = model.variant("recal@50").unwrap();
+    let mut engine = Engine::new(&rt, model, variant, EngineConfig::default()).unwrap();
+    let prompt = recalkv::coordinator::tokenizer::encode(prompt_text);
+    engine.submit(GenRequest::new(1, prompt, max_new)).unwrap();
+    let mut ref_tokens: Vec<i32> = Vec::new();
+    let mut ref_logprobs: Vec<f64> = Vec::new();
+    let mut ref_deltas = String::new();
+    let mut ref_result = None;
+    while ref_result.is_none() {
+        engine.step().unwrap();
+        for ev in engine.poll_events() {
+            match ev {
+                GenEvent::Token { token, logprob, text_delta, .. } => {
+                    ref_tokens.push(token);
+                    ref_logprobs.push(logprob);
+                    ref_deltas.push_str(&text_delta);
+                }
+                ev if ev.is_terminal() => ref_result = ev.into_result(),
+                _ => {}
+            }
+        }
+    }
+    let ref_result = ref_result.unwrap();
+    assert_eq!(ref_tokens, ref_result.tokens);
+
+    // the same request over the TCP wire
+    let (addr, coord, worker) =
+        spawn_server(dir, EngineConfig::default(), ServerConfig::default());
+    let mut client = Client::connect(&addr).unwrap();
+    let outcome = client.generate(&WireRequest::new(1, prompt_text, max_new)).unwrap();
+    let GenOutcome::Done { events } = outcome else { panic!("wire request rejected") };
+    let mut wire_tokens: Vec<i32> = Vec::new();
+    let mut wire_logprobs: Vec<f64> = Vec::new();
+    let mut wire_deltas = String::new();
+    let mut wire_result = None;
+    for (ev, _) in &events {
+        match ev {
+            WireEvent::Token { token, logprob, text_delta, .. } => {
+                wire_tokens.push(*token);
+                wire_logprobs.push(*logprob);
+                wire_deltas.push_str(text_delta);
+            }
+            WireEvent::Finished(r) => wire_result = Some(r.clone()),
+            other => assert!(!other.is_terminal(), "wire generation ended {other:?}"),
+        }
+    }
+    let wire_result = wire_result.expect("no terminal wire event");
+
+    assert_eq!(wire_tokens, ref_tokens, "wire tokens diverge from in-process");
+    assert_eq!(wire_result.tokens, ref_result.tokens);
+    assert_eq!(wire_result.text, ref_result.text, "terminal text diverges");
+    assert_eq!(wire_deltas, ref_deltas, "streamed deltas diverge");
+    assert_eq!(wire_logprobs.len(), ref_logprobs.len());
+    for (i, (w, r)) in wire_logprobs.iter().zip(&ref_logprobs).enumerate() {
+        assert_eq!(
+            w.to_bits(),
+            r.to_bits(),
+            "logprob {i} not bitwise identical over the wire: {w} vs {r}"
+        );
+    }
+    stop_server(&addr, coord, worker);
+}
+
+#[test]
+fn disconnect_cancels_and_reclaims_pages() {
+    let Some(dir) = manifest_dir() else { return };
+    let (addr, coord, worker) =
+        spawn_server(dir, EngineConfig::default(), ServerConfig::default());
+
+    // a long-running streamed request we will abandon mid-flight
+    {
+        let mut victim = Client::connect(&addr).unwrap();
+        victim
+            .send(&ClientFrame::Gen(WireRequest::new(
+                1,
+                "the dog barks . the cat sleeps . ",
+                400,
+            )))
+            .unwrap();
+        let mut tokens_seen = 0;
+        while tokens_seen < 2 {
+            match victim.recv().unwrap() {
+                ServerFrame::Event(WireEvent::Token { .. }) => tokens_seen += 1,
+                ServerFrame::Event(ev) => {
+                    assert!(!ev.is_terminal(), "request ended before disconnect: {ev:?}")
+                }
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        // dropping the client closes the socket: the server must cancel
+    }
+
+    // observe the reclamation through a second connection's metrics frames
+    let mut observer = Client::connect(&addr).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = observer.metrics().unwrap();
+        let cancelled = stats
+            .req("metrics")
+            .req("requests_cancelled")
+            .as_f64()
+            .unwrap_or(0.0) as u64;
+        if cancelled >= 1 {
+            let cache = stats.req("cache");
+            assert_eq!(
+                cache.req("blocks_in_use").as_usize(),
+                Some(0),
+                "disconnect leaked cache pages: {stats}"
+            );
+            assert_eq!(
+                cache.req("live_seqs").as_usize(),
+                Some(0),
+                "disconnect leaked sequences: {stats}"
+            );
+            assert_eq!(cache.req("total_tokens").as_usize(), Some(0));
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "disconnect never cancelled the request: {stats}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    stop_server(&addr, coord, worker);
+}
+
+#[test]
+fn nth_concurrent_wire_request_gets_queue_full() {
+    let Some(dir) = manifest_dir() else { return };
+    // per-connection cap 2: the 3rd concurrent gen on one socket must
+    // bounce with the retryable queue_full kind
+    let (addr, coord, worker) = spawn_server(
+        dir,
+        EngineConfig::default(),
+        ServerConfig { max_inflight_per_conn: 2, max_inflight_global: 64 },
+    );
+    let mut client = Client::connect(&addr).unwrap();
+    for id in 1..=3u64 {
+        client
+            .send(&ClientFrame::Gen(WireRequest::new(id, "the dog barks . ", 32)))
+            .unwrap();
+    }
+    let mut rejection: Option<WireError> = None;
+    let mut terminals = 0;
+    while terminals < 2 || rejection.is_none() {
+        match client.recv().unwrap() {
+            ServerFrame::Error(e) => {
+                assert_eq!(e.id, Some(3), "only the 3rd request may be rejected: {e:?}");
+                assert_eq!(e.kind, WireErrorKind::QueueFull { capacity: 2 });
+                assert!(e.kind.retryable(), "queue_full must be retryable");
+                rejection = Some(e);
+            }
+            ServerFrame::Event(ev) => {
+                assert_ne!(ev.id(), 3, "rejected request must produce no events");
+                if ev.is_terminal() {
+                    let r = ev.result().unwrap();
+                    assert!(r.error.is_none(), "in-cap request failed: {:?}", r.error);
+                    terminals += 1;
+                }
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    // after the first two drained, a retry of id 3 is admitted
+    match client.generate(&WireRequest::new(3, "the dog barks . ", 4)).unwrap() {
+        GenOutcome::Done { events } => {
+            let (last, _) = events.last().unwrap();
+            assert!(matches!(last, WireEvent::Finished(_)), "retry must finish: {last:?}");
+        }
+        GenOutcome::Rejected(e) => panic!("retry after drain still rejected: {e:?}"),
+    }
+    stop_server(&addr, coord, worker);
+}
+
+#[test]
+fn oversized_request_rejected_as_too_large() {
+    let Some(dir) = manifest_dir() else { return };
+    let (addr, coord, worker) = spawn_server(
+        dir,
+        EngineConfig { max_cache_tokens: 16, ..Default::default() },
+        ServerConfig::default(),
+    );
+    let mut client = Client::connect(&addr).unwrap();
+    // 12 prompt bytes + 8 new = 20 > 16: typed, non-retryable rejection
+    match client.generate(&WireRequest::new(1, "twelve bytes", 8)).unwrap() {
+        GenOutcome::Rejected(e) => {
+            assert_eq!(e.kind, WireErrorKind::TooLarge { need: 20, budget: 16 });
+            assert!(!e.kind.retryable(), "too_large must not be retryable");
+            assert_eq!(e.id, Some(1));
+        }
+        GenOutcome::Done { .. } => panic!("oversized request was admitted"),
+    }
+    // within budget (12 + 4 = 16) passes on the same connection
+    match client.generate(&WireRequest::new(1, "twelve bytes", 4)).unwrap() {
+        GenOutcome::Done { events } => {
+            let (last, _) = events.last().unwrap();
+            assert!(matches!(last, WireEvent::Finished(_)), "in-budget must finish");
+        }
+        GenOutcome::Rejected(e) => panic!("in-budget request rejected: {e:?}"),
+    }
+    stop_server(&addr, coord, worker);
+}
+
+#[test]
+fn version_mismatch_is_rejected_at_handshake() {
+    let Some(dir) = manifest_dir() else { return };
+    let (addr, coord, worker) =
+        spawn_server(dir, EngineConfig::default(), ServerConfig::default());
+    // raw socket: speak a future protocol version
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        s.write_all(b"{\"op\":\"hello\",\"version\":999}\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
+        let ServerFrame::Error(e) = ServerFrame::decode(&line).unwrap() else {
+            panic!("expected error frame, got {line}");
+        };
+        assert_eq!(e.kind, WireErrorKind::UnsupportedVersion { server: 1, client: 999 });
+    }
+    // a well-versioned client still connects fine afterwards
+    Client::connect(&addr).unwrap();
+    stop_server(&addr, coord, worker);
+}
+
+// keep clippy quiet about the unused import when artifacts are absent:
+// BatchPolicy is exercised here so wire serving covers non-default policies
+#[test]
+fn wire_serves_under_full_batching_policy() {
+    let Some(dir) = manifest_dir() else { return };
+    let (addr, coord, worker) = spawn_server(
+        dir,
+        EngineConfig { policy: BatchPolicy::Full, ..Default::default() },
+        ServerConfig::default(),
+    );
+    let mut client = Client::connect(&addr).unwrap();
+    match client.generate(&WireRequest::new(7, "the dog barks . ", 6)).unwrap() {
+        GenOutcome::Done { events } => {
+            let (last, _) = events.last().unwrap();
+            let WireEvent::Finished(r) = last else { panic!("did not finish: {last:?}") };
+            assert_eq!(r.tokens.len(), 6);
+        }
+        GenOutcome::Rejected(e) => panic!("rejected under full policy: {e:?}"),
+    }
+    stop_server(&addr, coord, worker);
+}

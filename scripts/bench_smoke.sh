@@ -25,4 +25,10 @@ cargo bench --bench decode_staging -- --out "$REPO_ROOT/BENCH_decode_staging.jso
 # per-layer pipeline wall time at 1/2/N pool threads with SIMD on/off.
 cargo bench --bench linalg_hotpath -- --quick --out "$REPO_ROOT/BENCH_linalg.json"
 
-echo "bench_smoke.sh: wrote $REPO_ROOT/BENCH_decode_staging.json, $REPO_ROOT/BENCH_linalg.json and $REPO_ROOT/BENCH_serving.json"
+# TCP wire serving on localhost loopback: req/s + streamed tok/s, TTFT and
+# inter-token-event latency p50/p95 at 1/4 concurrent clients (1/4/16
+# without --quick), plus frame encode/decode micro-paths (loopback section
+# skips without artifacts/; the JSON always lands).
+cargo bench --bench server_wire -- --quick --out "$REPO_ROOT/BENCH_server.json"
+
+echo "bench_smoke.sh: wrote $REPO_ROOT/BENCH_decode_staging.json, $REPO_ROOT/BENCH_linalg.json, $REPO_ROOT/BENCH_serving.json and $REPO_ROOT/BENCH_server.json"

@@ -18,6 +18,32 @@ PALLAS_SIMD=off cargo test -q
 cargo clippy --all-targets -- -D warnings
 cargo fmt --check
 
+# Wire-serving loopback smoke (needs artifacts/): serve on an ephemeral
+# port, run one streamed request through the TCP protocol, stop the server
+# with the shutdown control frame, and assert a clean exit.
+if [[ -f artifacts/manifest.json ]]; then
+    cargo build --release --quiet
+    SERVE_LOG="$(mktemp)"
+    ./target/release/repro serve --listen 127.0.0.1:0 --queue-cap 8 > "$SERVE_LOG" 2>&1 &
+    SERVE_PID=$!
+    trap 'kill "$SERVE_PID" 2>/dev/null || true' EXIT
+    ADDR=""
+    for _ in $(seq 1 100); do
+        ADDR="$(sed -n 's/^listening on \([0-9.:]*\).*/\1/p' "$SERVE_LOG" | head -1)"
+        [[ -n "$ADDR" ]] && break
+        kill -0 "$SERVE_PID" 2>/dev/null || { cat "$SERVE_LOG"; exit 1; }
+        sleep 0.2
+    done
+    [[ -n "$ADDR" ]] || { echo "server never reported its address"; cat "$SERVE_LOG"; exit 1; }
+    ./target/release/repro client --addr "$ADDR" --connections 1 --requests 1 --max-new 8
+    ./target/release/repro client --addr "$ADDR" --requests 0 --shutdown
+    wait "$SERVE_PID"   # non-zero exit (unclean shutdown) fails the check
+    trap - EXIT
+    echo "loopback smoke: OK ($ADDR)"
+else
+    echo "[skip] loopback smoke: artifacts/ not built"
+fi
+
 if [[ "${1:-}" == "--bench" ]]; then
     "$REPO_ROOT/scripts/bench_smoke.sh"
 fi
