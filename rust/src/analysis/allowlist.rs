@@ -1,0 +1,244 @@
+//! Hand-rolled parser for the lint's two config files (no TOML crate is
+//! available offline; this reads the small subset the files use).
+//!
+//! `rust/lint_allow.toml` — reviewed exceptions to rules 1/2/4:
+//!
+//! ```toml
+//! [[allow]]
+//! rule = "panic-policy"
+//! path = "coordinator/engine.rs"        # suffix match on the src-relative path
+//! contains = ".take().unwrap()"         # substring of the trimmed source line
+//! reason = "slot occupancy invariant: the scheduler admits only filled slots"
+//! ```
+//!
+//! `rust/lint_sync_baseline.toml` — the committed rule-5 inventory:
+//!
+//! ```toml
+//! [[sync]]
+//! file = "server/conn.rs"
+//! atomic_orderings = 10
+//! lock_unwrap = 0
+//! lock_unpoisoned = 7
+//! ```
+//!
+//! Grammar: `[[allow]]` / `[[sync]]` section headers, `key = "string"` and
+//! `key = integer` pairs, `#` comments, blank lines. Anything else is a
+//! parse error surfaced as a lint violation (a malformed allowlist must
+//! fail the run, not silently allow nothing).
+
+use super::rules::SyncCount;
+
+/// One `[[allow]]` entry. All three predicates must match for a violation
+/// to be suppressed; `reason` is mandatory documentation.
+#[derive(Debug, Clone, Default)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub path: String,
+    pub contains: String,
+    pub reason: String,
+    /// Line of the `[[allow]]` header (stale-entry reporting).
+    pub line: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct AllowConfig {
+    pub allows: Vec<AllowEntry>,
+    pub errors: Vec<String>,
+}
+
+pub fn parse_allowlist(text: &str) -> AllowConfig {
+    let mut cfg = AllowConfig::default();
+    let mut cur: Option<AllowEntry> = None;
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        let lineno = idx + 1;
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[allow]]" {
+            flush_allow(&mut cur, &mut cfg);
+            cur = Some(AllowEntry { line: lineno, ..AllowEntry::default() });
+            continue;
+        }
+        let Some(entry) = cur.as_mut() else {
+            cfg.errors.push(format!("line {lineno}: key outside any [[allow]] section"));
+            continue;
+        };
+        match parse_kv(line) {
+            Some((key, Value::Str(v))) => match key {
+                "rule" => entry.rule = v,
+                "path" => entry.path = v,
+                "contains" => entry.contains = v,
+                "reason" => entry.reason = v,
+                other => cfg.errors.push(format!("line {lineno}: unknown key `{other}`")),
+            },
+            Some((key, Value::Int(_))) => {
+                cfg.errors.push(format!("line {lineno}: key `{key}` must be a string"));
+            }
+            None => cfg.errors.push(format!("line {lineno}: unparseable line `{line}`")),
+        }
+    }
+    flush_allow(&mut cur, &mut cfg);
+    cfg
+}
+
+fn flush_allow(cur: &mut Option<AllowEntry>, cfg: &mut AllowConfig) {
+    let Some(e) = cur.take() else { return };
+    if e.rule.is_empty() || e.path.is_empty() || e.contains.is_empty() {
+        cfg.errors.push(format!(
+            "[[allow]] at line {}: `rule`, `path` and `contains` are all required",
+            e.line
+        ));
+    } else if e.reason.trim().is_empty() {
+        cfg.errors.push(format!(
+            "[[allow]] at line {}: a one-line `reason` justification is required",
+            e.line
+        ));
+    } else {
+        cfg.allows.push(e);
+    }
+}
+
+/// Parse `rust/lint_sync_baseline.toml`; returns entries + errors.
+pub fn parse_sync_baseline(text: &str) -> (Vec<SyncCount>, Vec<String>) {
+    let mut entries: Vec<SyncCount> = Vec::new();
+    let mut errors: Vec<String> = Vec::new();
+    let mut cur: Option<SyncCount> = None;
+    let mut flush = |cur: &mut Option<SyncCount>, errors: &mut Vec<String>, entries: &mut Vec<SyncCount>| {
+        if let Some(e) = cur.take() {
+            if e.file.is_empty() {
+                errors.push("[[sync]] entry without a `file` key".to_string());
+            } else {
+                entries.push(e);
+            }
+        }
+    };
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        let lineno = idx + 1;
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[sync]]" {
+            flush(&mut cur, &mut errors, &mut entries);
+            cur = Some(SyncCount {
+                file: String::new(),
+                atomic_orderings: 0,
+                lock_unwrap: 0,
+                lock_unpoisoned: 0,
+            });
+            continue;
+        }
+        let Some(entry) = cur.as_mut() else {
+            errors.push(format!("line {lineno}: key outside any [[sync]] section"));
+            continue;
+        };
+        match parse_kv(line) {
+            Some(("file", Value::Str(v))) => entry.file = v,
+            Some(("atomic_orderings", Value::Int(n))) => entry.atomic_orderings = n,
+            Some(("lock_unwrap", Value::Int(n))) => entry.lock_unwrap = n,
+            Some(("lock_unpoisoned", Value::Int(n))) => entry.lock_unpoisoned = n,
+            Some((key, _)) => errors.push(format!("line {lineno}: unknown or mistyped key `{key}`")),
+            None => errors.push(format!("line {lineno}: unparseable line `{line}`")),
+        }
+    }
+    flush(&mut cur, &mut errors, &mut entries);
+    (entries, errors)
+}
+
+/// Render the live inventory in the committed-baseline format
+/// (`repro lint --update-sync-baseline`).
+pub fn format_sync_baseline(inventory: &[SyncCount]) -> String {
+    let mut out = String::from(
+        "# Rule-5 sync inventory baseline — non-test `Ordering::*` uses,\n\
+         # poisoning `lock().unwrap()` calls, and poison-tolerant\n\
+         # `lock_unpoisoned(` calls per file. Regenerate after a reviewed\n\
+         # change with: repro lint --update-sync-baseline\n",
+    );
+    for e in inventory {
+        out.push_str(&format!(
+            "\n[[sync]]\nfile = \"{}\"\natomic_orderings = {}\nlock_unwrap = {}\nlock_unpoisoned = {}\n",
+            e.file, e.atomic_orderings, e.lock_unwrap, e.lock_unpoisoned
+        ));
+    }
+    out
+}
+
+enum Value {
+    Str(String),
+    Int(usize),
+}
+
+/// `key = "string"` or `key = 123` (with optional trailing `#` comment
+/// after an integer; strings keep `#` verbatim).
+fn parse_kv(line: &str) -> Option<(&str, Value)> {
+    let (key, raw) = line.split_once('=')?;
+    let key = key.trim();
+    let raw = raw.trim();
+    if !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') || key.is_empty() {
+        return None;
+    }
+    if let Some(rest) = raw.strip_prefix('"') {
+        let end = rest.find('"')?;
+        return Some((key, Value::Str(rest[..end].to_string())));
+    }
+    let digits: String = raw.chars().take_while(|c| c.is_ascii_digit()).collect();
+    let tail = raw[digits.len()..].trim();
+    if digits.is_empty() || !(tail.is_empty() || tail.starts_with('#')) {
+        return None;
+    }
+    digits.parse::<usize>().ok().map(|n| (key, Value::Int(n)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_allow_entries_and_requires_reason() {
+        let cfg = parse_allowlist(
+            "# header comment\n\n[[allow]]\nrule = \"panic-policy\"\npath = \"coordinator/engine.rs\"\ncontains = \".take().unwrap()\"\nreason = \"slot invariant\"\n\n[[allow]]\nrule = \"panic-policy\"\npath = \"server/x.rs\"\ncontains = \"v[i]\"\n",
+        );
+        assert_eq!(cfg.allows.len(), 1, "{:?}", cfg.errors);
+        assert_eq!(cfg.allows[0].rule, "panic-policy");
+        assert_eq!(cfg.allows[0].contains, ".take().unwrap()");
+        assert_eq!(cfg.errors.len(), 1, "missing reason must be an error");
+        assert!(cfg.errors[0].contains("reason"));
+    }
+
+    #[test]
+    fn rejects_keys_outside_sections_and_bad_lines() {
+        let cfg = parse_allowlist("rule = \"x\"\n[[allow]]\nwhat even is this\n");
+        assert!(cfg.allows.is_empty());
+        assert_eq!(cfg.errors.len(), 3, "{:?}", cfg.errors);
+    }
+
+    #[test]
+    fn sync_baseline_roundtrips_through_format() {
+        let inv = vec![
+            SyncCount {
+                file: "server/conn.rs".into(),
+                atomic_orderings: 10,
+                lock_unwrap: 0,
+                lock_unpoisoned: 7,
+            },
+            SyncCount {
+                file: "util/pool.rs".into(),
+                atomic_orderings: 3,
+                lock_unwrap: 1,
+                lock_unpoisoned: 0,
+            },
+        ];
+        let (parsed, errors) = parse_sync_baseline(&format_sync_baseline(&inv));
+        assert!(errors.is_empty(), "{errors:?}");
+        assert_eq!(parsed, inv);
+    }
+
+    #[test]
+    fn integer_values_allow_trailing_comments() {
+        let (entries, errors) =
+            parse_sync_baseline("[[sync]]\nfile = \"a.rs\"\natomic_orderings = 2 # two stores\nlock_unwrap = 0\nlock_unpoisoned = 0\n");
+        assert!(errors.is_empty(), "{errors:?}");
+        assert_eq!(entries[0].atomic_orderings, 2);
+    }
+}

@@ -1,0 +1,326 @@
+//! `repro lint` — the project-specific invariant checker.
+//!
+//! The compiler proves memory safety; it cannot prove the two contracts
+//! this reproduction actually stands on. This pass makes them machine
+//! checked instead of conventions. **Five invariants are enforced over
+//! `rust/src/`** (see [`rules`] for the matchers, [`scan`] for the
+//! comment/string masking that keeps them honest):
+//!
+//! 1. **Unsafe hygiene** (`unsafe-hygiene`) — every `unsafe` block or fn
+//!    carries a `// SAFETY:` justification within a few lines.
+//!    `clippy::undocumented_unsafe_blocks` (denied in `scripts/check.sh`)
+//!    is the compiler-side second opinion.
+//! 2. **Panic policy** (`panic-policy`) — no `unwrap()` / `expect()` /
+//!    panicking macro / direct indexing in the serving layers (`server/`,
+//!    `coordinator/`, `kvcache/`) outside tests: a panic there kills a
+//!    connection thread, poisons shared locks, and can wedge the server.
+//!    Reviewed exceptions live in `rust/lint_allow.toml`, each with a
+//!    mandatory one-line justification; stale entries fail the lint.
+//! 3. **SIMD twin rule** (`simd-twin`) — every public `#[target_feature]`
+//!    kernel in `linalg/simd.rs` / `quant/pertoken.rs` is reached through
+//!    a dispatcher that falls back to a `*_scalar` twin defined in the
+//!    same file and referenced by a bitwise-equivalence test. This is the
+//!    bit-identity contract: `PALLAS_SIMD=off` must produce the same bits
+//!    as every SIMD tier.
+//! 4. **Determinism** (`determinism`) — no wall-clock, ambient RNG, or
+//!    hash-iteration-order dependence in the `compress/` and `linalg/`
+//!    numeric paths; compression output must be bit-identical across
+//!    runs, hosts, and thread counts.
+//! 5. **Sync inventory** (`sync-baseline`) — every non-test `Ordering::*`
+//!    use, poisoning `lock().unwrap()`, and poison-tolerant
+//!    `lock_unpoisoned(` call is counted per file and must match the
+//!    committed `rust/lint_sync_baseline.toml`; concurrency-surface
+//!    changes are thereby always a reviewed diff. Regenerate with
+//!    `repro lint --update-sync-baseline` after review.
+//!
+//! The dynamic counterpart is `scripts/sanitize.sh`: a Miri lane over the
+//! unsafe-heavy modules (with `PALLAS_SIMD=off`, so the scalar twins are
+//! what Miri executes) and a ThreadSanitizer lane over the
+//! pool/coordinator/server suites. Both are nightly-gated and skip
+//! gracefully where the toolchain is absent; `repro lint` itself is
+//! std-only, fast, and always on in `scripts/check.sh`.
+
+mod allowlist;
+mod rules;
+mod scan;
+
+pub use rules::{SyncCount, Violation};
+
+use std::fs;
+use std::io;
+use std::path::PathBuf;
+
+/// Name of the allowlist file, relative to the crate root.
+pub const ALLOWLIST_FILE: &str = "lint_allow.toml";
+/// Name of the rule-5 baseline file, relative to the crate root.
+pub const SYNC_BASELINE_FILE: &str = "lint_sync_baseline.toml";
+
+pub struct LintOptions {
+    /// The crate root (the directory holding `src/`, `lint_allow.toml`,
+    /// `lint_sync_baseline.toml`).
+    pub crate_root: PathBuf,
+    /// Rewrite the sync baseline from the live inventory instead of
+    /// diffing against it.
+    pub update_sync_baseline: bool,
+}
+
+pub struct LintOutcome {
+    /// All findings, sorted by (path, line). Empty ⇔ the tree is clean.
+    pub violations: Vec<Violation>,
+    pub files_scanned: usize,
+    /// The live rule-5 inventory (also what `--update-sync-baseline`
+    /// writes).
+    pub inventory: Vec<SyncCount>,
+    pub baseline_rewritten: bool,
+}
+
+/// Run the full pass. IO errors (unreadable tree) abort; everything else
+/// is reported as [`Violation`]s.
+pub fn run(opts: &LintOptions) -> io::Result<LintOutcome> {
+    let files = scan::load_tree(&opts.crate_root.join("src"))?;
+    // rule 3 also accepts twin references from the cross-file
+    // determinism/bitwise suite
+    let extra_tests = fs::read_to_string(
+        opts.crate_root.join("tests").join("parallel_determinism.rs"),
+    )
+    .unwrap_or_default();
+
+    let mut raw: Vec<Violation> = Vec::new();
+    for f in &files {
+        rules::check_unsafe_hygiene(f, &mut raw);
+        rules::check_panic_policy(f, &mut raw);
+        rules::check_determinism(f, &mut raw);
+        rules::check_simd_twins(f, &extra_tests, &mut raw);
+    }
+
+    let mut violations: Vec<Violation> = Vec::new();
+
+    // ---- allowlist (rules 1/2/4; the twin rule is never allowlistable:
+    // a kernel without a tested scalar twin has no reviewable excuse) ----
+    let allow_text =
+        fs::read_to_string(opts.crate_root.join(ALLOWLIST_FILE)).unwrap_or_default();
+    let cfg = allowlist::parse_allowlist(&allow_text);
+    for e in &cfg.errors {
+        violations.push(Violation {
+            rule: rules::RULE_ALLOWLIST,
+            path: ALLOWLIST_FILE.to_string(),
+            line: 0,
+            text: String::new(),
+            msg: e.clone(),
+        });
+    }
+    let mut used = vec![0usize; cfg.allows.len()];
+    'violation: for v in raw {
+        if v.rule != rules::RULE_TWIN {
+            for (k, a) in cfg.allows.iter().enumerate() {
+                if a.rule == v.rule && v.path.ends_with(&a.path) && v.text.contains(&a.contains)
+                {
+                    used[k] += 1;
+                    continue 'violation;
+                }
+            }
+        }
+        violations.push(v);
+    }
+    for (k, a) in cfg.allows.iter().enumerate() {
+        if used[k] == 0 {
+            violations.push(Violation {
+                rule: rules::RULE_ALLOWLIST,
+                path: ALLOWLIST_FILE.to_string(),
+                line: a.line,
+                text: format!("rule = {}, path = {}, contains = {:?}", a.rule, a.path, a.contains),
+                msg: "stale allowlist entry: it suppresses nothing — remove it".to_string(),
+            });
+        }
+    }
+
+    // ---- rule 5: sync inventory vs committed baseline ----
+    let inventory = rules::sync_inventory(&files);
+    let baseline_path = opts.crate_root.join(SYNC_BASELINE_FILE);
+    let mut baseline_rewritten = false;
+    if opts.update_sync_baseline {
+        fs::write(&baseline_path, allowlist::format_sync_baseline(&inventory))?;
+        baseline_rewritten = true;
+    } else {
+        let text = fs::read_to_string(&baseline_path).unwrap_or_default();
+        let (baseline, errors) = allowlist::parse_sync_baseline(&text);
+        for e in errors {
+            violations.push(Violation {
+                rule: rules::RULE_SYNC,
+                path: SYNC_BASELINE_FILE.to_string(),
+                line: 0,
+                text: String::new(),
+                msg: e,
+            });
+        }
+        diff_inventory(&inventory, &baseline, &mut violations);
+    }
+
+    violations.sort_by(|a, b| (a.path.as_str(), a.line).cmp(&(b.path.as_str(), b.line)));
+    Ok(LintOutcome { violations, files_scanned: files.len(), inventory, baseline_rewritten })
+}
+
+fn diff_inventory(actual: &[SyncCount], baseline: &[SyncCount], out: &mut Vec<Violation>) {
+    let drift = |what: &str, file: &str, got: usize, want: usize| Violation {
+        rule: rules::RULE_SYNC,
+        path: file.to_string(),
+        line: 0,
+        text: String::new(),
+        msg: format!(
+            "sync inventory drift: {what} = {got}, baseline says {want} \
+             (review, then `repro lint --update-sync-baseline`)"
+        ),
+    };
+    for a in actual {
+        match baseline.iter().find(|b| b.file == a.file) {
+            None => out.push(Violation {
+                rule: rules::RULE_SYNC,
+                path: a.file.clone(),
+                line: 0,
+                text: String::new(),
+                msg: format!(
+                    "sync inventory drift: file now uses sync primitives \
+                     (Ordering: {}, lock().unwrap(): {}, lock_unpoisoned: {}) \
+                     but has no baseline entry",
+                    a.atomic_orderings, a.lock_unwrap, a.lock_unpoisoned
+                ),
+            }),
+            Some(b) => {
+                if a.atomic_orderings != b.atomic_orderings {
+                    out.push(drift("Ordering:: uses", &a.file, a.atomic_orderings, b.atomic_orderings));
+                }
+                if a.lock_unwrap != b.lock_unwrap {
+                    out.push(drift("lock().unwrap() calls", &a.file, a.lock_unwrap, b.lock_unwrap));
+                }
+                if a.lock_unpoisoned != b.lock_unpoisoned {
+                    out.push(drift("lock_unpoisoned() calls", &a.file, a.lock_unpoisoned, b.lock_unpoisoned));
+                }
+            }
+        }
+    }
+    for b in baseline {
+        if !actual.iter().any(|a| a.file == b.file) {
+            out.push(Violation {
+                rule: rules::RULE_SYNC,
+                path: b.file.clone(),
+                line: 0,
+                text: String::new(),
+                msg: "sync inventory drift: baseline entry for a file that no longer \
+                      uses sync primitives (regenerate the baseline)"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a throwaway crate tree under a unique temp dir.
+    struct TempCrate {
+        root: PathBuf,
+    }
+
+    impl TempCrate {
+        fn new(tag: &str) -> TempCrate {
+            let root = std::env::temp_dir()
+                .join(format!("repro-lint-test-{tag}-{}", std::process::id()));
+            let _ = fs::remove_dir_all(&root);
+            fs::create_dir_all(root.join("src")).expect("mkdir src");
+            TempCrate { root }
+        }
+
+        fn write(&self, rel: &str, content: &str) {
+            let p = self.root.join(rel);
+            if let Some(parent) = p.parent() {
+                fs::create_dir_all(parent).expect("mkdir parents");
+            }
+            fs::write(p, content).expect("write fixture");
+        }
+
+        fn run(&self, update: bool) -> LintOutcome {
+            run(&LintOptions { crate_root: self.root.clone(), update_sync_baseline: update })
+                .expect("lint run")
+        }
+    }
+
+    impl Drop for TempCrate {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.root);
+        }
+    }
+
+    #[test]
+    fn clean_tree_passes_and_counts_files() {
+        let t = TempCrate::new("clean");
+        t.write("src/lib.rs", "pub mod server;\n");
+        t.write("src/server/mod.rs", "pub fn ok() -> Option<u8> { None }\n");
+        let out = t.run(false);
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+        assert_eq!(out.files_scanned, 2);
+    }
+
+    #[test]
+    fn allowlist_suppresses_and_stale_entries_fail() {
+        let t = TempCrate::new("allow");
+        t.write("src/server/conn.rs", "fn f(v: &[u8]) -> u8 {\n    v.first().copied().unwrap()\n}\n");
+        // no allowlist: one panic-policy violation
+        let out = t.run(false);
+        assert_eq!(out.violations.len(), 1, "{:?}", out.violations);
+        assert_eq!(out.violations[0].rule, "panic-policy");
+        // matching allowlist entry: clean
+        t.write(
+            "lint_allow.toml",
+            "[[allow]]\nrule = \"panic-policy\"\npath = \"server/conn.rs\"\ncontains = \".unwrap()\"\nreason = \"fixture\"\n",
+        );
+        let out = t.run(false);
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+        // entry that matches nothing: reported stale
+        t.write(
+            "lint_allow.toml",
+            "[[allow]]\nrule = \"panic-policy\"\npath = \"server/conn.rs\"\ncontains = \".unwrap()\"\nreason = \"fixture\"\n\n[[allow]]\nrule = \"panic-policy\"\npath = \"server/gone.rs\"\ncontains = \"x\"\nreason = \"stale\"\n",
+        );
+        let out = t.run(false);
+        assert_eq!(out.violations.len(), 1, "{:?}", out.violations);
+        assert!(out.violations[0].msg.contains("stale"));
+    }
+
+    #[test]
+    fn sync_baseline_update_then_diff() {
+        let t = TempCrate::new("sync");
+        t.write(
+            "src/util/pool.rs",
+            "use std::sync::atomic::Ordering;\npub fn f(x: &std::sync::atomic::AtomicUsize) {\n    x.store(1, Ordering::SeqCst);\n}\n",
+        );
+        // no baseline yet: drift (file has sync uses, baseline empty)
+        let out = t.run(false);
+        assert_eq!(out.violations.len(), 1, "{:?}", out.violations);
+        assert_eq!(out.violations[0].rule, "sync-baseline");
+        // write the baseline, then the tree is clean
+        let out = t.run(true);
+        assert!(out.baseline_rewritten);
+        let out = t.run(false);
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+        // add a second Ordering use: count drift
+        t.write(
+            "src/util/pool.rs",
+            "use std::sync::atomic::Ordering;\npub fn f(x: &std::sync::atomic::AtomicUsize) {\n    x.store(1, Ordering::SeqCst);\n    x.store(2, Ordering::Relaxed);\n}\n",
+        );
+        let out = t.run(false);
+        assert_eq!(out.violations.len(), 1, "{:?}", out.violations);
+        assert!(out.violations[0].msg.contains("Ordering:: uses = 2, baseline says 1"));
+    }
+
+    #[test]
+    fn unsafe_hygiene_and_determinism_reported_with_paths() {
+        let t = TempCrate::new("mixed");
+        t.write("src/compress/cka.rs", "use std::collections::HashMap;\n");
+        t.write("src/linalg/gemm.rs", "pub fn f() {\n    unsafe { core::hint::unreachable_unchecked() }\n}\n");
+        let out = t.run(true); // rewrite baseline so rule 5 stays quiet
+        let rules: Vec<&str> = out.violations.iter().map(|v| v.rule).collect();
+        assert_eq!(rules, vec!["determinism", "unsafe-hygiene"], "{:?}", out.violations);
+        assert_eq!(out.violations[0].path, "compress/cka.rs");
+        assert_eq!(out.violations[1].line, 2);
+    }
+}

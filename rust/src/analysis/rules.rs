@@ -1,0 +1,522 @@
+//! The five invariant rules behind `repro lint`.
+//!
+//! Each rule is a pure function over [`SourceFile`]s (masked lines,
+//! test spans — see [`super::scan`]) appending [`Violation`]s. The
+//! driver in [`super`] applies the allowlist and the sync baseline.
+
+use super::scan::{contains_word, is_ident_byte, SourceFile};
+
+pub const RULE_UNSAFE: &str = "unsafe-hygiene";
+pub const RULE_PANIC: &str = "panic-policy";
+pub const RULE_TWIN: &str = "simd-twin";
+pub const RULE_DETERMINISM: &str = "determinism";
+pub const RULE_SYNC: &str = "sync-baseline";
+pub const RULE_ALLOWLIST: &str = "allowlist";
+
+/// One lint finding, pointing at a single source line.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: &'static str,
+    /// Path relative to `src/` (or the config file name for
+    /// `allowlist`/`sync-baseline` findings).
+    pub path: String,
+    /// 1-based line number; 0 for file-level findings.
+    pub line: usize,
+    /// The offending source line, trimmed (empty for file-level findings).
+    pub text: String,
+    pub msg: String,
+}
+
+impl Violation {
+    fn at(rule: &'static str, f: &SourceFile, i: usize, msg: String) -> Violation {
+        Violation {
+            rule,
+            path: f.rel_path.clone(),
+            line: i + 1,
+            text: f.lines[i].trim().to_string(),
+            msg,
+        }
+    }
+}
+
+/// How many lines above an `unsafe` token a `SAFETY:` comment may sit
+/// (attribute + signature lines commonly separate them).
+const SAFETY_WINDOW: usize = 4;
+
+/// Rule 1 — unsafe hygiene: every `unsafe` token outside tests carries a
+/// `SAFETY:` justification on the same line or within [`SAFETY_WINDOW`]
+/// lines above (doc-comment `/// SAFETY:` counts; `clippy::undocumented_unsafe_blocks`
+/// is the compiler-side second opinion for blocks).
+pub fn check_unsafe_hygiene(f: &SourceFile, out: &mut Vec<Violation>) {
+    for (i, code) in f.code.iter().enumerate() {
+        if f.is_test[i] || !contains_word(code, "unsafe") {
+            continue;
+        }
+        let lo = i.saturating_sub(SAFETY_WINDOW);
+        if !f.lines[lo..=i].iter().any(|l| l.contains("SAFETY:")) {
+            out.push(Violation::at(
+                RULE_UNSAFE,
+                f,
+                i,
+                format!("`unsafe` without a `// SAFETY:` justification within {SAFETY_WINDOW} lines above"),
+            ));
+        }
+    }
+}
+
+/// The layers where the panic policy (rule 2) applies: a panic here can
+/// take a connection or the whole serving process down.
+const SERVING_PREFIXES: [&str; 3] = ["server/", "coordinator/", "kvcache/"];
+
+/// Rule 2 — panic policy: no `unwrap()`/`expect()`/panicking macro/direct
+/// indexing in the serving layers outside tests. `assert!`/`debug_assert!`
+/// are deliberately NOT flagged: stated invariants are the policy's goal,
+/// not its enemy. Survivors need an entry in `rust/lint_allow.toml` with a
+/// one-line justification.
+pub fn check_panic_policy(f: &SourceFile, out: &mut Vec<Violation>) {
+    if !SERVING_PREFIXES.iter().any(|p| f.rel_path.starts_with(p)) {
+        return;
+    }
+    for (i, code) in f.code.iter().enumerate() {
+        if f.is_test[i] {
+            continue;
+        }
+        let mut hits: Vec<&'static str> = Vec::new();
+        if code.contains(".unwrap()") {
+            hits.push("`.unwrap()`");
+        }
+        if code.contains(".expect(") {
+            hits.push("`.expect()`");
+        }
+        for (pat, label) in [
+            ("panic!", "`panic!`"),
+            ("unreachable!", "`unreachable!`"),
+            ("todo!", "`todo!`"),
+            ("unimplemented!", "`unimplemented!`"),
+        ] {
+            if code.contains(pat) {
+                hits.push(label);
+            }
+        }
+        if has_direct_index(code) {
+            hits.push("direct indexing");
+        }
+        if !hits.is_empty() {
+            out.push(Violation::at(
+                RULE_PANIC,
+                f,
+                i,
+                format!(
+                    "{} in a serving layer (return a typed error, or add a justified allowlist entry)",
+                    hits.join(", ")
+                ),
+            ));
+        }
+    }
+}
+
+/// `expr[` — a `[` immediately after an identifier char, `)` or `]` is an
+/// index (or slice) expression; `[` after whitespace/operators is an array
+/// literal, slice pattern, or attribute and panics nothing.
+fn has_direct_index(code: &str) -> bool {
+    let b = code.as_bytes();
+    (1..b.len()).any(|k| {
+        b[k] == b'[' && (is_ident_byte(b[k - 1]) || b[k - 1] == b')' || b[k - 1] == b']')
+    })
+}
+
+/// Where rule 4 applies: the numeric paths whose outputs must be
+/// bit-identical across runs, hosts, and thread counts.
+const DETERMINISM_SCOPES: [&str; 2] = ["compress/", "linalg/"];
+
+const DETERMINISM_TOKENS: [(&str, &str); 7] = [
+    ("HashMap", "iteration order is nondeterministic — use BTreeMap or index-ordered Vec"),
+    ("HashSet", "iteration order is nondeterministic — use BTreeSet"),
+    ("Instant", "wall-clock dependence breaks bit-identical replay"),
+    ("SystemTime", "wall-clock dependence breaks bit-identical replay"),
+    ("thread_rng", "ambient RNG breaks reproducibility — use util::rng seeded streams"),
+    ("from_entropy", "entropy-seeded RNG breaks reproducibility — use util::rng seeded streams"),
+    ("env::var", "hidden environment dependence breaks reproducibility"),
+];
+
+/// Rule 4 — determinism: no wall-clock, ambient RNG, or hash-iteration-order
+/// dependence in the `compress/` and `linalg/` numeric paths.
+pub fn check_determinism(f: &SourceFile, out: &mut Vec<Violation>) {
+    if !DETERMINISM_SCOPES.iter().any(|p| f.rel_path.starts_with(p)) {
+        return;
+    }
+    for (i, code) in f.code.iter().enumerate() {
+        if f.is_test[i] {
+            continue;
+        }
+        for (tok, why) in DETERMINISM_TOKENS {
+            if contains_word(code, tok) {
+                out.push(Violation::at(RULE_DETERMINISM, f, i, format!("`{tok}`: {why}")));
+            }
+        }
+    }
+}
+
+/// The files rule 3 applies to: every `#[target_feature]` kernel lives in
+/// an arch module (`mod avx2 { … }`) of one of these.
+const TWIN_FILES: [&str; 2] = ["linalg/simd.rs", "quant/pertoken.rs"];
+
+/// Rule 3 — SIMD twin rule. For every **public** `#[target_feature]`
+/// kernel `M::K` in an arch module:
+/// 1. some top-level dispatcher calls `M::K(…)`,
+/// 2. that dispatcher also falls back to a `*_scalar` twin,
+/// 3. the twin function is defined in the same file, and
+/// 4. a test (in-file `#[cfg(test)]` or `tests/parallel_determinism.rs`)
+///    references the dispatcher or the twin — the bitwise-equivalence
+///    check that makes the twin a contract instead of dead code.
+///
+/// Private `#[target_feature]` helpers (e.g. `decode16`) are reachable
+/// only through a public kernel and are exempt from 1–4.
+pub fn check_simd_twins(f: &SourceFile, extra_test_haystack: &str, out: &mut Vec<Violation>) {
+    if !TWIN_FILES.contains(&f.rel_path.as_str()) {
+        return;
+    }
+    // collect (module, kernel, decl line) for pub #[target_feature] fns
+    let mut kernels: Vec<(String, String, usize)> = Vec::new();
+    let mut i = 0usize;
+    while i < f.code.len() {
+        let Some(modname) = parse_col0_mod(&f.code[i]) else {
+            i += 1;
+            continue;
+        };
+        let end = block_end(&f.code, i);
+        let mut j = i + 1;
+        while j < end {
+            if f.code[j].contains("#[target_feature") {
+                for k in j..(j + 4).min(end) {
+                    let line = &f.code[k];
+                    if let Some(name) = parse_fn_name(line) {
+                        if line.contains("pub ") {
+                            kernels.push((modname.clone(), name, k));
+                        }
+                        break;
+                    }
+                }
+            }
+            j += 1;
+        }
+        i = end;
+    }
+
+    for (m, kernel, decl) in &kernels {
+        let call_pat = format!("{m}::{kernel}(");
+        let Some(call_line) = f
+            .code
+            .iter()
+            .enumerate()
+            .position(|(i, l)| !f.is_test[i] && l.contains(&call_pat))
+        else {
+            out.push(Violation::at(
+                RULE_TWIN,
+                f,
+                *decl,
+                format!("kernel `{m}::{kernel}` has no dispatcher call site (`{call_pat}…)`)"),
+            ));
+            continue;
+        };
+        let Some((disp_line, dispatcher)) = (0..=call_line)
+            .rev()
+            .find_map(|j| col0_fn_name(&f.code[j]).map(|n| (j, n)))
+        else {
+            out.push(Violation::at(
+                RULE_TWIN,
+                f,
+                call_line,
+                format!("call to `{m}::{kernel}` is not inside a top-level dispatcher fn"),
+            ));
+            continue;
+        };
+        let body = &f.code[disp_line..block_end(&f.code, disp_line)];
+        let Some(twin) = find_scalar_twin(body) else {
+            out.push(Violation::at(
+                RULE_TWIN,
+                f,
+                disp_line,
+                format!("dispatcher `{dispatcher}` for `{m}::{kernel}` has no `*_scalar` twin fallback"),
+            ));
+            continue;
+        };
+        if !f.code.iter().any(|l| l.contains(&format!("fn {twin}"))) {
+            out.push(Violation::at(
+                RULE_TWIN,
+                f,
+                disp_line,
+                format!("scalar twin `{twin}` called by `{dispatcher}` is not defined in this file"),
+            ));
+            continue;
+        }
+        let in_file_test = f
+            .code
+            .iter()
+            .enumerate()
+            .any(|(i, l)| f.is_test[i] && (l.contains(&twin) || l.contains(&dispatcher)));
+        if !in_file_test
+            && !extra_test_haystack.contains(&twin)
+            && !extra_test_haystack.contains(&dispatcher)
+        {
+            out.push(Violation::at(
+                RULE_TWIN,
+                f,
+                disp_line,
+                format!(
+                    "kernel `{m}::{kernel}` lacks a bitwise-equivalence test referencing `{dispatcher}` or `{twin}`"
+                ),
+            ));
+        }
+    }
+}
+
+/// `mod name {` at column 0 (the arch-module convention in the kernel
+/// files). Attributes like `#[cfg(target_arch = …)]` sit on prior lines.
+fn parse_col0_mod(line: &str) -> Option<String> {
+    let rest = line.strip_prefix("mod ")?;
+    if !line.contains('{') {
+        return None;
+    }
+    let name: String = rest.chars().take_while(|c| super::scan::is_ident_char(*c)).collect();
+    (!name.is_empty()).then_some(name)
+}
+
+/// Exclusive end line of the brace block opened at/after `start`.
+fn block_end(code: &[String], start: usize) -> usize {
+    let mut depth = 0i64;
+    let mut opened = false;
+    for (j, line) in code.iter().enumerate().skip(start) {
+        for ch in line.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return j + 1;
+        }
+    }
+    code.len()
+}
+
+/// The identifier after the first word-boundary `fn ` on the line.
+fn parse_fn_name(line: &str) -> Option<String> {
+    let pos = line.find("fn ")?;
+    if pos > 0 && is_ident_byte(line.as_bytes()[pos - 1]) {
+        return None;
+    }
+    let name: String = line[pos + 3..]
+        .trim_start()
+        .chars()
+        .take_while(|c| super::scan::is_ident_char(*c))
+        .collect();
+    (!name.is_empty()).then_some(name)
+}
+
+/// A column-0 `fn` declaration (top-level dispatcher).
+fn col0_fn_name(line: &str) -> Option<String> {
+    for prefix in ["pub unsafe fn ", "pub(crate) fn ", "pub fn ", "unsafe fn ", "fn "] {
+        if let Some(rest) = line.strip_prefix(prefix) {
+            let name: String =
+                rest.chars().take_while(|c| super::scan::is_ident_char(*c)).collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+    }
+    None
+}
+
+/// First `<ident>_scalar(` call in the dispatcher body.
+fn find_scalar_twin(body: &[String]) -> Option<String> {
+    for line in body {
+        let b = line.as_bytes();
+        let mut k = 0usize;
+        while let Some(pos) = line[k..].find("_scalar(") {
+            let at = k + pos;
+            let mut s = at;
+            while s > 0 && is_ident_byte(b[s - 1]) {
+                s -= 1;
+            }
+            if s < at {
+                return Some(format!("{}_scalar", &line[s..at]));
+            }
+            k = at + 1;
+        }
+    }
+    None
+}
+
+/// Per-file non-test synchronization inventory (rule 5): every
+/// `Ordering::*` use, poisoning `lock().unwrap()`, and poison-tolerant
+/// `lock_unpoisoned(` call, checked against `rust/lint_sync_baseline.toml`
+/// so new lock-poisoning hazards and memory-ordering choices show up in
+/// review instead of slipping in silently.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SyncCount {
+    pub file: String,
+    pub atomic_orderings: usize,
+    pub lock_unwrap: usize,
+    pub lock_unpoisoned: usize,
+}
+
+pub fn sync_inventory(files: &[SourceFile]) -> Vec<SyncCount> {
+    let mut out = Vec::new();
+    for f in files {
+        let (mut a, mut lu, mut lp) = (0usize, 0usize, 0usize);
+        for (i, code) in f.code.iter().enumerate() {
+            if f.is_test[i] {
+                continue;
+            }
+            a += count_occurrences(code, "Ordering::");
+            lu += count_occurrences(code, ".lock().unwrap()");
+            lp += count_occurrences(code, "lock_unpoisoned(");
+        }
+        if a + lu + lp > 0 {
+            out.push(SyncCount {
+                file: f.rel_path.clone(),
+                atomic_orderings: a,
+                lock_unwrap: lu,
+                lock_unpoisoned: lp,
+            });
+        }
+    }
+    out
+}
+
+fn count_occurrences(hay: &str, needle: &str) -> usize {
+    let mut n = 0usize;
+    let mut k = 0usize;
+    while let Some(p) = hay[k..].find(needle) {
+        n += 1;
+        k += p + needle.len();
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(path: &str, src: &str) -> SourceFile {
+        SourceFile::parse(path.to_string(), src)
+    }
+
+    #[test]
+    fn unsafe_without_safety_flagged_with_safety_clean() {
+        let f = file(
+            "linalg/x.rs",
+            "fn a() {\n    unsafe { q() }\n}\n// SAFETY: bounds pre-checked\nfn b() {\n    unsafe { q() }\n}\n",
+        );
+        let mut v = Vec::new();
+        check_unsafe_hygiene(&f, &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn unsafe_in_tests_and_comments_ignored() {
+        let f = file(
+            "linalg/x.rs",
+            "// unsafe mentioned in prose\n#[cfg(test)]\nmod tests {\n    fn t() { unsafe { q() } }\n}\n",
+        );
+        let mut v = Vec::new();
+        check_unsafe_hygiene(&f, &mut v);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn panic_policy_scopes_and_patterns() {
+        let src = "fn f(v: &[u32], i: usize) -> u32 {\n    let x = v.get(i).unwrap();\n    let y = v[i];\n    panic!(\"no\");\n}\n";
+        let mut v = Vec::new();
+        check_panic_policy(&file("server/x.rs", src), &mut v);
+        assert_eq!(v.len(), 3, "{v:?}");
+        assert!(v[0].msg.contains("`.unwrap()`"));
+        assert!(v[1].msg.contains("direct indexing"));
+        assert!(v[2].msg.contains("`panic!`"));
+        // same source outside the serving layers: no violations
+        let mut v = Vec::new();
+        check_panic_policy(&file("linalg/x.rs", src), &mut v);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn panic_policy_skips_tests_attrs_and_literals() {
+        let src = "fn f() {\n    #[allow(dead_code)]\n    let a = [0u8; 4];\n    let s = \"x.unwrap()\";\n    assert!(s.len() > 1);\n}\n#[cfg(test)]\nmod tests {\n    fn t() { None::<u8>.unwrap(); }\n}\n";
+        let mut v = Vec::new();
+        check_panic_policy(&file("coordinator/x.rs", src), &mut v);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn determinism_flags_tokens_in_scope_only() {
+        let src = "use std::collections::HashMap;\nfn f() { let t = std::time::Instant::now(); }\n";
+        let mut v = Vec::new();
+        check_determinism(&file("compress/x.rs", src), &mut v);
+        assert_eq!(v.len(), 2, "{v:?}");
+        let mut v = Vec::new();
+        check_determinism(&file("server/x.rs", src), &mut v);
+        assert!(v.is_empty(), "servers may use wall clocks and hash maps");
+    }
+
+    /// A miniature twin-rule file: one healthy kernel, one with no test.
+    const TWIN_SRC: &str = "\
+pub fn alpha(x: &mut [f32]) {\n    match tier() {\n        T::A => unsafe { a::alpha(x) },\n        _ => alpha_scalar(x),\n    }\n}\n\
+pub fn alpha_scalar(_x: &mut [f32]) {}\n\
+pub fn beta(x: &mut [f32]) {\n    match tier() {\n        T::A => unsafe { a::beta(x) },\n        _ => beta_scalar(x),\n    }\n}\n\
+pub fn beta_scalar(_x: &mut [f32]) {}\n\
+mod a {\n    #[target_feature(enable = \"avx2\")]\n    pub unsafe fn alpha(_x: &mut [f32]) {}\n    #[target_feature(enable = \"avx2\")]\n    pub unsafe fn beta(_x: &mut [f32]) {}\n    #[target_feature(enable = \"avx2\")]\n    unsafe fn helper() {}\n}\n\
+#[cfg(test)]\nmod tests {\n    fn lanes_match() { super::alpha_scalar(&mut []); }\n}\n";
+
+    #[test]
+    fn twin_rule_accepts_tested_kernel_flags_untested() {
+        let f = file("linalg/simd.rs", TWIN_SRC);
+        let mut v = Vec::new();
+        check_simd_twins(&f, "", &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("beta"), "{}", v[0].msg);
+        assert!(v[0].msg.contains("bitwise-equivalence test"));
+        // the external determinism-test haystack also satisfies rule 4
+        let mut v = Vec::new();
+        check_simd_twins(&f, "calls beta_scalar somewhere", &mut v);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn twin_rule_ignores_private_helpers_and_other_files() {
+        let f = file("linalg/simd.rs", TWIN_SRC);
+        let mut v = Vec::new();
+        check_simd_twins(&f, "beta_scalar", &mut v);
+        assert!(v.is_empty(), "private `helper` needs no dispatcher: {v:?}");
+        let g = file("linalg/gemm.rs", TWIN_SRC);
+        let mut v = Vec::new();
+        check_simd_twins(&g, "", &mut v);
+        assert!(v.is_empty(), "rule only applies to the kernel files");
+    }
+
+    #[test]
+    fn twin_rule_flags_missing_dispatcher() {
+        let src = "mod a {\n    #[target_feature(enable = \"avx2\")]\n    pub unsafe fn orphan(_x: &mut [f32]) {}\n}\n";
+        let f = file("quant/pertoken.rs", src);
+        let mut v = Vec::new();
+        check_simd_twins(&f, "", &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("no dispatcher call site"));
+    }
+
+    #[test]
+    fn sync_inventory_counts_non_test_lines() {
+        let src = "use std::sync::atomic::Ordering;\nfn f() {\n    x.store(1, Ordering::SeqCst);\n    let g = m.lock().unwrap();\n    let h = lock_unpoisoned(&m2);\n}\n#[cfg(test)]\nmod tests {\n    fn t() { x.load(Ordering::SeqCst); }\n}\n";
+        let files = vec![file("util/x.rs", src)];
+        let inv = sync_inventory(&files);
+        assert_eq!(inv.len(), 1);
+        assert_eq!(inv[0].atomic_orderings, 1, "use-line `Ordering` has no `::`; test line skipped");
+        assert_eq!(inv[0].lock_unwrap, 1);
+        assert_eq!(inv[0].lock_unpoisoned, 1);
+    }
+}

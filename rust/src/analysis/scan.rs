@@ -1,0 +1,357 @@
+//! Source loading and lexical masking for the `repro lint` pass.
+//!
+//! The rules in [`super::rules`] are line-oriented substring matchers, so
+//! before any rule runs, each file is **masked**: comment and
+//! string/char-literal contents are replaced by spaces (one space per
+//! character, newlines preserved), and every line inside a `#[cfg(test)]`
+//! item's span is flagged. Rules then match against the masked text and
+//! skip test lines — a `panic!` in a doc comment, a `".unwrap()"` inside
+//! a string literal, or an `unsafe` in a test helper never fires.
+//!
+//! This is a lexer, not a parser: it tracks exactly the Rust token
+//! classes that can hide rule patterns (line/block comments with
+//! nesting, `"…"`/`b"…"` strings with escapes, `r#"…"#` raw strings,
+//! char literals vs. lifetimes) and nothing else.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One scanned source file: the original lines, the masked lines the
+/// rules match against, and the per-line test flag.
+pub struct SourceFile {
+    /// Path relative to `src/`, with forward slashes (`server/conn.rs`).
+    pub rel_path: String,
+    /// Original source lines, verbatim (violation text, SAFETY lookups).
+    pub lines: Vec<String>,
+    /// Masked lines: comments and string/char contents become spaces.
+    pub code: Vec<String>,
+    /// `is_test[i]` ⇔ line `i` lies inside a `#[cfg(test)]` item.
+    pub is_test: Vec<bool>,
+}
+
+impl SourceFile {
+    pub fn parse(rel_path: String, text: &str) -> SourceFile {
+        let lines: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+        let code = mask_lines(&lines);
+        let is_test = test_spans(&code);
+        SourceFile { rel_path, lines, code, is_test }
+    }
+}
+
+/// Load every `.rs` file under `src_root`, sorted by path so lint output
+/// and the sync inventory are deterministic.
+pub fn load_tree(src_root: &Path) -> io::Result<Vec<SourceFile>> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    collect_rs(src_root, &mut paths)?;
+    paths.sort();
+    let mut out = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let text = fs::read_to_string(p)?;
+        let rel = p
+            .strip_prefix(src_root)
+            .unwrap_or(p)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<String>>()
+            .join("/");
+        out.push(SourceFile::parse(rel, &text));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lexer state carried across lines (block comments and strings span
+/// lines; line comments never do).
+#[derive(Clone, Copy)]
+enum Lex {
+    Code,
+    /// Block comment, with nesting depth (Rust block comments nest).
+    Block(u32),
+    /// Inside `"…"` / `b"…"`.
+    Str,
+    /// Inside `r##"…"##`, with the hash count needed to close it.
+    RawStr(u32),
+}
+
+fn mask_lines(lines: &[String]) -> Vec<String> {
+    let mut state = Lex::Code;
+    let mut out = Vec::with_capacity(lines.len());
+    for line in lines {
+        let chars: Vec<char> = line.chars().collect();
+        let mut masked: Vec<char> = Vec::with_capacity(chars.len());
+        let mut i = 0usize;
+        while i < chars.len() {
+            let c = chars[i];
+            let next = chars.get(i + 1).copied();
+            match state {
+                Lex::Code => {
+                    if c == '/' && next == Some('/') {
+                        // line comment (incl. /// and //!): mask the rest
+                        while masked.len() < chars.len() {
+                            masked.push(' ');
+                        }
+                        i = chars.len();
+                    } else if c == '/' && next == Some('*') {
+                        state = Lex::Block(1);
+                        masked.push(' ');
+                        masked.push(' ');
+                        i += 2;
+                    } else if c == '"' {
+                        // raw string? the `r`/`#`s were already emitted as
+                        // code chars — look back over them
+                        let mut hashes = 0usize;
+                        while hashes < masked.len() && masked[masked.len() - 1 - hashes] == '#' {
+                            hashes += 1;
+                        }
+                        let k = masked.len() - hashes;
+                        let is_raw = k > 0 && masked[k - 1] == 'r' && {
+                            // `r` must start the literal prefix, not end an
+                            // identifier (`br"…"` is still raw)
+                            let before = if k >= 2 { Some(masked[k - 2]) } else { None };
+                            match before {
+                                Some(b) => !is_ident_char(b) || b == 'b',
+                                None => true,
+                            }
+                        };
+                        state = if is_raw { Lex::RawStr(hashes as u32) } else { Lex::Str };
+                        masked.push(' ');
+                        i += 1;
+                    } else if c == '\'' {
+                        if next == Some('\\') {
+                            // escaped char literal: mask `'\`, the escaped
+                            // char, then everything through the closing `'`
+                            // (covers '\'' and '\u{…}')
+                            masked.push(' ');
+                            masked.push(' ');
+                            i += 2;
+                            if i < chars.len() {
+                                masked.push(' ');
+                                i += 1;
+                            }
+                            while i < chars.len() {
+                                let d = chars[i];
+                                masked.push(' ');
+                                i += 1;
+                                if d == '\'' {
+                                    break;
+                                }
+                            }
+                        } else if next.is_some() && chars.get(i + 2) == Some(&'\'') {
+                            // plain char literal 'x'
+                            masked.push(' ');
+                            masked.push(' ');
+                            masked.push(' ');
+                            i += 3;
+                        } else {
+                            // lifetime ('a, '_, 'static): real code, keep it
+                            masked.push(c);
+                            i += 1;
+                        }
+                    } else {
+                        masked.push(c);
+                        i += 1;
+                    }
+                }
+                Lex::Block(depth) => {
+                    if c == '*' && next == Some('/') {
+                        masked.push(' ');
+                        masked.push(' ');
+                        i += 2;
+                        state = if depth == 1 { Lex::Code } else { Lex::Block(depth - 1) };
+                    } else if c == '/' && next == Some('*') {
+                        masked.push(' ');
+                        masked.push(' ');
+                        i += 2;
+                        state = Lex::Block(depth + 1);
+                    } else {
+                        masked.push(' ');
+                        i += 1;
+                    }
+                }
+                Lex::Str => {
+                    if c == '\\' {
+                        // escape: mask the backslash and (if present) the
+                        // escaped char, so `\"` cannot terminate the string
+                        masked.push(' ');
+                        i += 1;
+                        if i < chars.len() {
+                            masked.push(' ');
+                            i += 1;
+                        }
+                    } else {
+                        if c == '"' {
+                            state = Lex::Code;
+                        }
+                        masked.push(' ');
+                        i += 1;
+                    }
+                }
+                Lex::RawStr(hashes) => {
+                    let h = hashes as usize;
+                    if c == '"' && (1..=h).all(|k| chars.get(i + k) == Some(&'#')) {
+                        for _ in 0..=h {
+                            masked.push(' ');
+                        }
+                        i += h + 1;
+                        state = Lex::Code;
+                    } else {
+                        masked.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(masked.len(), chars.len());
+        out.push(masked.into_iter().collect());
+    }
+    out
+}
+
+/// Mark every line inside a `#[cfg(test)]` item's span. The span runs
+/// from the attribute through the close of the item's brace block (or
+/// through the terminating `;` for `mod tests;`). Works on masked lines
+/// so braces in strings/comments cannot unbalance the match.
+fn test_spans(code: &[String]) -> Vec<bool> {
+    let mut is_test = vec![false; code.len()];
+    let mut i = 0usize;
+    while i < code.len() {
+        if !code[i].contains("#[cfg(test)") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut closed = false;
+        let mut j = i;
+        while j < code.len() {
+            is_test[j] = true;
+            for ch in code[j].chars() {
+                match ch {
+                    '{' => depth += 1,
+                    '}' => {
+                        depth -= 1;
+                        if depth <= 0 {
+                            closed = true;
+                        }
+                    }
+                    // out-of-line `#[cfg(test)] mod tests;`
+                    ';' if depth == 0 => closed = true,
+                    _ => {}
+                }
+            }
+            if closed {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    is_test
+}
+
+pub(crate) fn is_ident_char(c: char) -> bool {
+    c == '_' || c.is_ascii_alphanumeric()
+}
+
+pub(crate) fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// `line` contains `word` with non-identifier characters (or the line
+/// edge) on both sides.
+pub(crate) fn contains_word(line: &str, word: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut start = 0usize;
+    while let Some(pos) = line[start..].find(word) {
+        let at = start + pos;
+        let end = at + word.len();
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mask_one(src: &str) -> Vec<String> {
+        let lines: Vec<String> = src.lines().map(|l| l.to_string()).collect();
+        mask_lines(&lines)
+    }
+
+    #[test]
+    fn masks_line_and_doc_comments() {
+        let m = mask_one("let x = 1; // panic! here\n/// unsafe in a doc\nlet y = 2;");
+        assert_eq!(m[0].trim_end(), "let x = 1;");
+        assert_eq!(m[0].len(), "let x = 1; // panic! here".len());
+        assert!(m[1].trim().is_empty(), "doc comment fully masked: {:?}", m[1]);
+        assert_eq!(m[2], "let y = 2;");
+    }
+
+    #[test]
+    fn masks_nested_block_comments_across_lines() {
+        let m = mask_one("a /* one /* two */ still */ b\nc /* spans\nlines */ d");
+        assert!(m[0].starts_with("a ") && m[0].ends_with(" b"), "got {:?}", m[0]);
+        assert!(!m[0].contains("two"), "nested close must not end the comment");
+        assert_eq!(m[1].trim_end(), "c");
+        assert_eq!(m[2].trim_start(), "d");
+    }
+
+    #[test]
+    fn masks_strings_with_escapes_and_raw_strings() {
+        let m = mask_one(r#"let s = "un\"wrap().unwrap()"; s.len();"#);
+        assert!(!m[0].contains("unwrap"), "masked: {:?}", m[0]);
+        assert!(m[0].contains("s.len()"), "code after the string survives");
+        let m = mask_one(r##"let r = r#"panic!("x")"#; done();"##);
+        assert!(!m[0].contains("panic!"), "masked: {:?}", m[0]);
+        assert!(m[0].contains("done()"));
+    }
+
+    #[test]
+    fn char_literals_mask_but_lifetimes_survive() {
+        let m = mask_one("let q = '\\''; let c = 'x'; fn f<'a>(v: &'a str) {}");
+        assert!(!m[0].contains('x'), "char literal masked: {:?}", m[0]);
+        assert!(m[0].contains("<'a>"), "lifetime kept: {:?}", m[0]);
+        assert!(m[0].contains("&'a str"));
+    }
+
+    #[test]
+    fn cfg_test_spans_cover_the_module() {
+        let src = "fn real() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn after() {}";
+        let lines: Vec<String> = src.lines().map(|l| l.to_string()).collect();
+        let spans = test_spans(&mask_lines(&lines));
+        assert_eq!(spans, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn cfg_test_out_of_line_mod_ends_at_semicolon() {
+        let src = "#[cfg(test)]\nmod tests;\nfn real() {}";
+        let lines: Vec<String> = src.lines().map(|l| l.to_string()).collect();
+        let spans = test_spans(&mask_lines(&lines));
+        assert_eq!(spans, vec![true, true, false]);
+    }
+
+    #[test]
+    fn word_boundaries_respected() {
+        assert!(contains_word("let x = unsafe { y };", "unsafe"));
+        assert!(!contains_word("let unsafely = 1;", "unsafe"));
+        assert!(!contains_word("fn not_unsafe() {}", "unsafe"));
+        assert!(contains_word("std::env::var(\"X\")", "env::var"));
+    }
+}

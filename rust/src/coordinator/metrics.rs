@@ -117,8 +117,11 @@ impl Metrics {
         if samples.is_empty() {
             return 0.0;
         }
+        // total_cmp, not partial_cmp().unwrap(): a NaN sample must not
+        // panic the metrics path (and latency samples are non-negative,
+        // so the -0.0 < 0.0 distinction cannot reorder anything)
         let mut s = samples.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         s[((s.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize]
     }
 

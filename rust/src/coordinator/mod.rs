@@ -48,6 +48,12 @@
 //! non-terminal states: waiting requests are swept at every scheduling
 //! step, decoding requests before every decode batch.
 
+// Serving-layer panic policy (machine-checked by `repro lint`, rule 2):
+// a panic on the coordinator worker takes every session down with it, so
+// unwrap/expect are denied outside tests. The few justified exceptions
+// carry fn-level allows + entries in rust/lint_allow.toml.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 pub mod batcher;
 pub mod engine;
 pub mod metrics;

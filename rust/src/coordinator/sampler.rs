@@ -15,6 +15,12 @@ impl Sampler {
     }
 
     /// Pick the next token from a logits row.
+    // partial_cmp().unwrap() is kept deliberately: logits come straight
+    // from the runtime and are finite (NaN would already have poisoned
+    // the softmax below); switching to total_cmp would order -0.0 < 0.0
+    // and could reorder the top-k index set, changing sampled tokens and
+    // breaking seed bit-identity (see lint_allow.toml)
+    #[allow(clippy::unwrap_used)]
     pub fn sample(&mut self, logits: &[f32]) -> i32 {
         if self.params.temperature <= 0.0 {
             return argmax(logits);

@@ -14,6 +14,7 @@
 //! offline calibration, matrix fusion) over a small dense linear-algebra
 //! substrate, cross-checked against the Python implementation.
 
+pub mod analysis;
 pub mod artifacts;
 pub mod compress;
 pub mod coordinator;

@@ -20,6 +20,11 @@
 //!   eval      evaluate one variant (ppl + zero-shot tasks)
 //!   tables    regenerate the paper's tables/figures (--table N | --figure F)
 //!   compress  run the pure-rust compression mirror over an .rtz archive
+//!   lint      run the project invariant checker over rust/src/ (unsafe
+//!             hygiene, serving-layer panic policy, SIMD twin rule,
+//!             determinism rule, sync-inventory baseline — see
+//!             recalkv::analysis; --update-sync-baseline rewrites
+//!             rust/lint_sync_baseline.toml after a reviewed change)
 //!   info      list models/variants in the artifact manifest
 //!
 //! Examples:
@@ -44,7 +49,9 @@ use recalkv::runtime::Runtime;
 use recalkv::util::cli::Args;
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["quick", "fisher", "quiet", "stream", "shutdown", "metrics"]);
+    let args = Args::from_env(&[
+        "quick", "fisher", "quiet", "stream", "shutdown", "metrics", "update-sync-baseline",
+    ]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
     let dir = args.opt_or("artifacts", "artifacts");
     match cmd {
@@ -54,8 +61,9 @@ fn main() -> Result<()> {
         "eval" => eval_variant(dir, &args),
         "tables" => tables(dir, &args),
         "compress" => compress(dir, &args),
+        "lint" => lint(&args),
         other => {
-            bail!("unknown command '{other}' (try: info serve client eval tables compress)")
+            bail!("unknown command '{other}' (try: info serve client eval tables compress lint)")
         }
     }
 }
@@ -329,6 +337,66 @@ fn client_cmd(args: &Args) -> Result<()> {
         println!("server acknowledged shutdown");
     }
     Ok(())
+}
+
+/// `repro lint`: the five-invariant static checker over `rust/src/`
+/// (see [`recalkv::analysis`] for what is enforced and why). Exits
+/// non-zero on any violation outside the committed allowlist, so
+/// `scripts/check.sh` can gate on it.
+fn lint(args: &Args) -> Result<()> {
+    use recalkv::analysis::{self, LintOptions};
+    let root = match args.opt("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => default_crate_root()?,
+    };
+    let out = analysis::run(&LintOptions {
+        crate_root: root.clone(),
+        update_sync_baseline: args.has("update-sync-baseline"),
+    })
+    .with_context(|| format!("linting {}", root.display()))?;
+    if out.baseline_rewritten {
+        println!(
+            "sync baseline rewritten: {} ({} files with sync primitives)",
+            root.join(analysis::SYNC_BASELINE_FILE).display(),
+            out.inventory.len()
+        );
+    }
+    if out.violations.is_empty() {
+        println!(
+            "repro lint: OK ({} files scanned, {} in the sync inventory)",
+            out.files_scanned,
+            out.inventory.len()
+        );
+        return Ok(());
+    }
+    for v in &out.violations {
+        if v.line > 0 {
+            println!("{}:{}: [{}] {}", v.path, v.line, v.rule, v.msg);
+        } else {
+            println!("{}: [{}] {}", v.path, v.rule, v.msg);
+        }
+        if !v.text.is_empty() {
+            println!("    {}", v.text);
+        }
+    }
+    bail!("repro lint: {} violation(s) in {} files scanned", out.violations.len(), out.files_scanned)
+}
+
+/// Locate the crate root (`rust/`) whether we run from the repo root
+/// (scripts), from `rust/` itself, or from an arbitrary cwd with the
+/// build-time path still valid.
+fn default_crate_root() -> Result<std::path::PathBuf> {
+    for cand in ["rust", "."] {
+        let p = std::path::PathBuf::from(cand);
+        if p.join("src").join("lib.rs").is_file() {
+            return Ok(p);
+        }
+    }
+    let compiled = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    if compiled.join("src").join("lib.rs").is_file() {
+        return Ok(compiled);
+    }
+    bail!("cannot locate the crate root — pass --root <path to rust/>")
 }
 
 fn eval_variant(dir: &str, args: &Args) -> Result<()> {

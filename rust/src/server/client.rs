@@ -241,9 +241,11 @@ pub fn run_load(
                                         last_token_at = Some(*at);
                                     }
                                 }
-                                let terminal = &events.last().expect("terminal event").0;
-                                match terminal {
-                                    WireEvent::Finished(_) => rep.completed += 1,
+                                // Done always carries the terminal event
+                                // last; a server that violates that counts
+                                // as a failed request, not a panic here
+                                match events.last().map(|(ev, _)| ev) {
+                                    Some(WireEvent::Finished(_)) => rep.completed += 1,
                                     _ => rep.failed += 1,
                                 }
                             }

@@ -25,6 +25,18 @@
 //! cannot pin pool capacity. The pump then drains the resulting terminal
 //! events (write failures are ignored; the socket may already be gone) so
 //! the global in-flight accounting converges before the thread exits.
+//!
+//! # Panic robustness
+//!
+//! All shared locks here are poison-tolerant ([`lock_unpoisoned`]): if a
+//! pump thread panics while holding the table or writer mutex, later
+//! lockers recover the guard instead of panicking in turn — one panicked
+//! thread costs at most its own request, never a cascading connection
+//! teardown through poisoned mutexes. The global in-flight count is an
+//! [`InflightGauge`]: admission is an atomic claim-below-cap, and every
+//! release is tied to the corresponding session-table removal, so no
+//! error path can double-release and wrap the counter (which would wedge
+//! the cap and reject all future requests server-wide).
 
 use super::protocol::{
     read_frame, ClientFrame, ReadOutcome, ServerFrame, WireError, WireErrorKind, WireEvent,
@@ -33,10 +45,11 @@ use super::protocol::{
 use super::server::ServerConfig;
 use crate::coordinator::{CoordinatorHandle, GenEvent, WorkerStats};
 use crate::util::json::Json;
+use crate::util::sync::{lock_unpoisoned, InflightGauge};
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -61,8 +74,9 @@ pub(crate) struct ConnContext {
     pub cfg: ServerConfig,
     /// Server-wide stop flag (`shutdown` control frame sets it).
     pub stop: Arc<AtomicBool>,
-    /// Requests submitted wire-wide and not yet terminal.
-    pub global_inflight: Arc<AtomicUsize>,
+    /// Requests submitted wire-wide and not yet terminal (saturating,
+    /// capped admission — see [`InflightGauge`]).
+    pub global_inflight: Arc<InflightGauge>,
     /// Source of server-assigned engine ids (client ids are per-connection
     /// and may collide across connections).
     pub next_engine_id: Arc<AtomicU64>,
@@ -121,7 +135,13 @@ fn send(writer: &Mutex<BufWriter<TcpStream>>, dead: &AtomicBool, frame: &ServerF
     // encode before taking the lock: string building needs no
     // serialization against the peer thread
     let line = frame.encode();
-    let mut w = writer.lock().unwrap();
+    // Poison-tolerant: this is the writer's only critical section and it
+    // performs nothing but Result-returning IO (write_all/flush cannot
+    // unwind), so a recovered guard always sees a consistent BufWriter.
+    // Propagating a peer's panic here would instead cascade — every
+    // later send() from either thread would panic too, killing the whole
+    // connection for one failed request.
+    let mut w = lock_unpoisoned(writer);
     let ok = w
         .write_all(line.as_bytes())
         .and_then(|_| w.write_all(b"\n"))
@@ -170,7 +190,7 @@ pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
                     Ok(ev) => {
                         idle_polls = 0;
                         let engine_id = ev.id();
-                        let routed = table.lock().unwrap().by_engine.get(&engine_id).copied();
+                        let routed = lock_unpoisoned(&table).by_engine.get(&engine_id).copied();
                         let Some((wire_id, stream_events)) = routed else {
                             // Unknown id: a rejected submit raced its table
                             // removal, or a stale event after cleanup.
@@ -183,8 +203,13 @@ pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
                             // legally reuse the id (or its cap slot) on its
                             // very next frame, and must not race a
                             // spurious duplicate-id/queue_full rejection.
-                            table.lock().unwrap().remove_engine(engine_id);
-                            global_inflight.fetch_sub(1, Ordering::SeqCst);
+                            // The gauge release is tied to winning the
+                            // removal: if a rejected submit's cleanup
+                            // already retired this id, releasing again
+                            // here would leak a cap slot to underflow.
+                            if lock_unpoisoned(&table).remove_engine(engine_id).is_some() {
+                                global_inflight.release(1);
+                            }
                         }
                         if stream_events || terminal {
                             // write failures are ignored: the reader owns
@@ -197,7 +222,7 @@ pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
                     Err(RecvTimeoutError::Timeout) => {
                         if closing.load(Ordering::SeqCst) {
                             idle_polls += 1;
-                            let drained = table.lock().unwrap().live() == 0;
+                            let drained = lock_unpoisoned(&table).live() == 0;
                             if drained || idle_polls > DRAIN_GRACE_POLLS {
                                 break;
                             }
@@ -209,10 +234,10 @@ pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
             // Anything still live here means its terminal event will never
             // arrive (worker died / drain grace expired): release the
             // global accounting so the server doesn't wedge its caps.
-            let mut t = table.lock().unwrap();
+            let mut t = lock_unpoisoned(&table);
             let leaked = t.live();
             if leaked > 0 {
-                global_inflight.fetch_sub(leaked, Ordering::SeqCst);
+                global_inflight.release(leaked);
                 t.by_engine.clear();
                 t.by_wire.clear();
             }
@@ -274,7 +299,7 @@ pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
             ClientFrame::Gen(wr) => handle_gen(&ctx, &table, &writer, &dead, &ev_tx, wr),
             ClientFrame::Cancel { id } => {
                 // Unknown/finished ids are a no-op, mirroring Engine::cancel.
-                let engine_id = table.lock().unwrap().by_wire.get(&id).copied();
+                let engine_id = lock_unpoisoned(&table).by_wire.get(&id).copied();
                 if let Some(engine_id) = engine_id {
                     ctx.handle.cancel(engine_id);
                 }
@@ -304,7 +329,7 @@ pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
 
     // ---- disconnect cleanup ---------------------------------------------
     closing.store(true, Ordering::SeqCst);
-    let live: Vec<u64> = table.lock().unwrap().by_engine.keys().copied().collect();
+    let live: Vec<u64> = lock_unpoisoned(&table).by_engine.keys().copied().collect();
     for engine_id in live {
         ctx.handle.cancel(engine_id);
     }
@@ -331,7 +356,7 @@ fn handle_gen(
     // needs the table to keep routing other requests' events; a slow
     // socket must never stall them).
     let rejection = {
-        let t = table.lock().unwrap();
+        let t = lock_unpoisoned(table);
         if t.by_wire.contains_key(&wire_id) {
             Some(WireError::new(
                 Some(wire_id),
@@ -356,13 +381,7 @@ fn handle_gen(
         return;
     }
     // global cap: admit-or-reject atomically across connections
-    let admitted = ctx
-        .global_inflight
-        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
-            (n < ctx.cfg.max_inflight_global).then_some(n + 1)
-        })
-        .is_ok();
-    if !admitted {
+    if !ctx.global_inflight.try_acquire(ctx.cfg.max_inflight_global) {
         send(writer, dead, &ServerFrame::Error(WireError::new(
             Some(wire_id),
             WireErrorKind::QueueFull { capacity: ctx.cfg.max_inflight_global },
@@ -373,12 +392,17 @@ fn handle_gen(
     let engine_id = ctx.next_engine_id.fetch_add(1, Ordering::SeqCst) + 1;
     // Insert before submitting: the worker can emit (and the pump route)
     // this request's Queued event before submit() even returns.
-    table.lock().unwrap().insert(wire_id, engine_id, wr.stream);
+    lock_unpoisoned(table).insert(wire_id, engine_id, wr.stream);
     match ctx.handle.submit(wr.to_gen_request(engine_id), ev_tx.clone()) {
         Ok(_) => {}
         Err(e) => {
-            table.lock().unwrap().remove_engine(engine_id);
-            ctx.global_inflight.fetch_sub(1, Ordering::SeqCst);
+            // Release only on winning the removal: a terminal event that
+            // slipped out before the submit error may have already retired
+            // this id via the pump — releasing twice would underflow the
+            // gauge and (pre-saturation) permanently wedge the global cap.
+            if lock_unpoisoned(table).remove_engine(engine_id).is_some() {
+                ctx.global_inflight.release(1);
+            }
             send(writer, dead, &ServerFrame::Error(WireError::from_submit(wire_id, &e)));
         }
     }

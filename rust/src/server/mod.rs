@@ -54,6 +54,12 @@
 //! $ repro client --addr 127.0.0.1:40513 --requests 0 --shutdown
 //! ```
 
+// Serving-layer panic policy (machine-checked by `repro lint`, rule 2):
+// a panic in this layer kills a connection thread and poisons its shared
+// locks, so unwrap/expect are denied outside tests. The few justified
+// exceptions carry fn-level allows + entries in rust/lint_allow.toml.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 pub mod client;
 pub mod conn;
 pub mod protocol;

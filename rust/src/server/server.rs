@@ -13,9 +13,10 @@
 
 use super::conn::{handle_conn, ConnContext};
 use crate::coordinator::CoordinatorHandle;
+use crate::util::sync::InflightGauge;
 use anyhow::{Context, Result};
 use std::net::{SocketAddr, TcpListener};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -70,7 +71,7 @@ impl Server {
     /// Serve until the stop flag is set, then join every connection thread.
     pub fn run(self) -> Result<()> {
         self.listener.set_nonblocking(true).context("non-blocking listener")?;
-        let global_inflight = Arc::new(AtomicUsize::new(0));
+        let global_inflight = Arc::new(InflightGauge::new());
         let next_engine_id = Arc::new(AtomicU64::new(0));
         let mut conns: Vec<JoinHandle<()>> = Vec::new();
         while !self.stop.load(Ordering::SeqCst) {

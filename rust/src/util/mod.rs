@@ -2,8 +2,10 @@
 //! offline environment beyond `xla`/`anyhow`): JSON, a deterministic RNG
 //! shared with python, CLI parsing, a criterion-style bench harness, a
 //! tiny property-testing helper, the scoped-thread work pool the offline
-//! compression pipeline fans out on, and the runtime CPU-feature dispatch
-//! behind the SIMD micro-kernels.
+//! compression pipeline fans out on, the runtime CPU-feature dispatch
+//! behind the SIMD micro-kernels, and the panic-robust sync helpers
+//! (poison-tolerant locking, the saturating in-flight gauge) the serving
+//! stack leans on.
 
 pub mod bench;
 pub mod cli;
@@ -12,3 +14,4 @@ pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod simd;
+pub mod sync;

@@ -1,0 +1,54 @@
+//! The repo's own tree must pass `repro lint` — same pass `scripts/check.sh`
+//! runs, driven through the library so the suite catches violations (and
+//! stale allowlist entries, and sync-baseline drift) even where the CLI
+//! isn't wired into CI.
+
+use recalkv::analysis::{run, LintOptions};
+use std::path::PathBuf;
+
+fn crate_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn repo_tree_is_lint_clean() {
+    let out = run(&LintOptions { crate_root: crate_root(), update_sync_baseline: false })
+        .expect("lint pass must be able to read the tree");
+    let rendered: Vec<String> = out
+        .violations
+        .iter()
+        .map(|v| format!("{}:{}: [{}] {}\n    {}", v.path, v.line, v.rule, v.msg, v.text))
+        .collect();
+    assert!(
+        out.violations.is_empty(),
+        "repro lint found {} violation(s):\n{}",
+        out.violations.len(),
+        rendered.join("\n")
+    );
+    // sanity: the walker really saw the tree, not an empty directory
+    assert!(
+        out.files_scanned >= 40,
+        "suspiciously few files scanned: {}",
+        out.files_scanned
+    );
+}
+
+#[test]
+fn serving_stack_has_no_poisoning_locks() {
+    // The poison-tolerance contract (server/conn.rs uses lock_unpoisoned
+    // exclusively) pinned through the rule-5 inventory: a reintroduced
+    // `.lock().unwrap()` on a connection's shared state would flip these
+    // counts before any stress test got flaky.
+    let out = run(&LintOptions { crate_root: crate_root(), update_sync_baseline: false })
+        .expect("lint pass must be able to read the tree");
+    let conn = out
+        .inventory
+        .iter()
+        .find(|s| s.file == "server/conn.rs")
+        .expect("server/conn.rs must appear in the sync inventory");
+    assert_eq!(conn.lock_unwrap, 0, "server/conn.rs regained a poisoning lock");
+    assert!(
+        conn.lock_unpoisoned > 0,
+        "server/conn.rs no longer uses poison-tolerant locking"
+    );
+}

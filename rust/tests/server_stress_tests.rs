@@ -1,0 +1,161 @@
+//! Shutdown/disconnect race stress for the TCP serving stack.
+//!
+//! The scenario the pool-accounting fix (removal-tied `InflightGauge`
+//! release in `server/conn.rs`) exists for: many clients streaming
+//! long generations, some vanishing mid-stream at the same moment a
+//! `shutdown` control frame lands. The server must wind down cleanly
+//! (no panic, no wedged join) and the engine must end with zero live
+//! sequences and zero cache blocks in use.
+//!
+//! Needs artifacts/ and skips gracefully without it — same convention
+//! as server_wire_tests.rs.
+
+use recalkv::artifacts::Manifest;
+use recalkv::coordinator::{Coordinator, Engine, EngineConfig};
+use recalkv::server::{
+    Client, ClientFrame, GenOutcome, Server, ServerConfig, ServerFrame, WireErrorKind,
+    WireEvent, WireRequest,
+};
+use std::path::PathBuf;
+use std::sync::{Arc, Barrier};
+
+fn manifest_dir() -> Option<PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("[skip] artifacts/ not built");
+        return None;
+    }
+    Some(dir)
+}
+
+fn spawn_server(
+    dir: PathBuf,
+    ecfg: EngineConfig,
+    scfg: ServerConfig,
+) -> (String, Coordinator, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let coord = Coordinator::spawn(move || {
+        let man = Manifest::load(&dir)?;
+        let rt = recalkv::runtime::Runtime::cpu()?;
+        let model = man.model("tiny-mha")?;
+        Engine::new(&rt, model, model.variant("recal@50")?, ecfg)
+    });
+    let server = Server::bind("127.0.0.1:0", coord.handle(), scfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let worker = std::thread::spawn(move || server.run());
+    (addr, coord, worker)
+}
+
+#[test]
+fn disconnect_storm_during_shutdown_reclaims_everything() {
+    let Some(dir) = manifest_dir() else { return };
+    let (addr, coord, worker) =
+        spawn_server(dir, EngineConfig::default(), ServerConfig::default());
+
+    // 6 clients, each streaming a long generation. All of them first prove
+    // the request is live (>= 1 token observed), then rendezvous on the
+    // barrier with the shutdown sender — so the abrupt socket drops land
+    // concurrently with the shutdown frame, not safely before it.
+    const CLIENTS: usize = 6;
+    let barrier = Arc::new(Barrier::new(CLIENTS + 1));
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let addr = addr.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("stress client connect");
+                client
+                    .send(&ClientFrame::Gen(WireRequest::new(
+                        c as u64 + 1,
+                        "the dog barks . the cat sleeps . ",
+                        400,
+                    )))
+                    .expect("stress submit");
+                let mut tokens = 0usize;
+                while tokens < 1 {
+                    match client.recv().expect("stream before shutdown") {
+                        ServerFrame::Event(WireEvent::Token { .. }) => tokens += 1,
+                        ServerFrame::Event(ev) => {
+                            assert!(!ev.is_terminal(), "ended before the race window: {ev:?}")
+                        }
+                        other => panic!("unexpected frame {other:?}"),
+                    }
+                }
+                barrier.wait();
+                // Half the clients vanish abruptly mid-stream (socket drop,
+                // no cancel frame); the other half keep reading until the
+                // server winds them down, tolerating whatever the teardown
+                // order delivers (terminal event, then EOF).
+                if c % 2 == 0 {
+                    drop(client);
+                } else {
+                    while let Ok(frame) = client.recv() {
+                        if let ServerFrame::Event(ev) = frame {
+                            if ev.is_terminal() {
+                                break;
+                            }
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+
+    barrier.wait();
+    let mut c = Client::connect(&addr).expect("shutdown connection");
+    c.shutdown_server().expect("shutdown handshake");
+    worker
+        .join()
+        .expect("server thread panicked during the disconnect storm")
+        .expect("server run returned an error");
+    for h in handles {
+        h.join().expect("stress client panicked");
+    }
+
+    // The coordinator outlives the server: every sequence and cache block
+    // claimed by the storm must be back.
+    let stats = coord.handle().stats().expect("coordinator alive after server shutdown");
+    assert_eq!(stats.live_seqs, 0, "shutdown leaked sequences: {stats:?}");
+    assert_eq!(stats.blocks_in_use, 0, "shutdown leaked cache blocks: {stats:?}");
+    coord.shutdown().expect("coordinator shutdown");
+}
+
+#[test]
+fn rejected_submits_do_not_leak_the_global_inflight_cap() {
+    let Some(dir) = manifest_dir() else { return };
+    // Tiny cache budget so oversized requests are rejected typed
+    // (`too_large`) by the engine AFTER the wire layer has claimed a
+    // global in-flight slot. Before the removal-tied release, each
+    // rejection leaked one slot; with the global cap at 2, two rejections
+    // would wedge the server into answering queue_full forever.
+    let (addr, coord, worker) = spawn_server(
+        dir,
+        EngineConfig { max_cache_tokens: 16, ..Default::default() },
+        ServerConfig { max_inflight_per_conn: 64, max_inflight_global: 2 },
+    );
+    let mut client = Client::connect(&addr).unwrap();
+    for round in 0..6u64 {
+        match client.generate(&WireRequest::new(100 + round, "way past the budget", 64)).unwrap()
+        {
+            GenOutcome::Rejected(e) => assert!(
+                matches!(e.kind, WireErrorKind::TooLarge { .. }),
+                "round {round}: want too_large, got {e:?} — a queue_full here means \
+                 rejections are leaking the global in-flight cap"
+            ),
+            GenOutcome::Done { .. } => panic!("oversized request was admitted"),
+        }
+    }
+    // an in-budget request still gets one of the 2 slots (12 + 4 = 16)
+    match client.generate(&WireRequest::new(1, "twelve bytes", 4)).unwrap() {
+        GenOutcome::Done { events } => {
+            let (last, _) = events.last().expect("no events for the in-budget request");
+            assert!(matches!(last, WireEvent::Finished(_)), "did not finish: {last:?}");
+        }
+        GenOutcome::Rejected(e) => {
+            panic!("in-budget request rejected after rejections: {e:?} — global cap leaked")
+        }
+    }
+    let mut c = Client::connect(&addr).expect("shutdown connection");
+    c.shutdown_server().expect("shutdown handshake");
+    worker.join().expect("server thread panicked").expect("server run failed");
+    coord.shutdown().expect("coordinator shutdown");
+}

@@ -10,12 +10,18 @@ REPO_ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
 cd "$REPO_ROOT/rust"
 
 cargo build --release
+# Project invariant checker (unsafe hygiene, panic policy, SIMD twins,
+# determinism, sync baseline — see rust/src/analysis/mod.rs). Runs before
+# the test suites: a policy violation should fail fast.
+./target/release/repro lint
 cargo test -q
 # Second pass with SIMD dispatch pinned to the scalar twins: on machines
 # where AVX2/NEON masks them, the scalar fallback paths must not rot (and
 # the suite's bitwise assertions prove scalar == SIMD == seed).
 PALLAS_SIMD=off cargo test -q
-cargo clippy --all-targets -- -D warnings
+# clippy::undocumented_unsafe_blocks is the compiler-side second opinion
+# on the lint's unsafe-hygiene rule.
+cargo clippy --all-targets -- -D warnings -D clippy::undocumented_unsafe_blocks
 cargo fmt --check
 
 # Wire-serving loopback smoke (needs artifacts/): serve on an ephemeral

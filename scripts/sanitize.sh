@@ -1,0 +1,85 @@
+#!/usr/bin/env bash
+# Dynamic-analysis lanes complementing `repro lint` (see
+# rust/src/analysis/mod.rs for the static invariants these back up):
+#
+#   scripts/sanitize.sh --miri   # Miri over the unsafe-heavy modules,
+#                                # PALLAS_SIMD=off so the scalar twins
+#                                # (what Miri can execute) are the code
+#                                # under test
+#   scripts/sanitize.sh --tsan   # ThreadSanitizer over the pool /
+#                                # coordinator / server suites (the
+#                                # shutdown, disconnect and in-flight
+#                                # accounting races live there)
+#   scripts/sanitize.sh          # both lanes
+#
+# Both lanes need a nightly toolchain (Miri additionally the `miri`
+# component, TSan the `rust-src` component for -Zbuild-std). Where the
+# toolchain is missing the lane prints `[skip] …` and exits 0 — the
+# lanes are an extra line of defence, not a gate on machines that only
+# have stable.
+set -euo pipefail
+
+REPO_ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+cd "$REPO_ROOT/rust"
+
+have_nightly() {
+    command -v cargo > /dev/null 2>&1 && cargo +nightly --version > /dev/null 2>&1
+}
+
+run_miri() {
+    if ! have_nightly; then
+        echo "[skip] miri lane: no nightly toolchain"
+        return 0
+    fi
+    if ! cargo +nightly miri --version > /dev/null 2>&1; then
+        echo "[skip] miri lane: nightly has no miri component (rustup component add miri)"
+        return 0
+    fi
+    # Scalar twins only: Miri has no SIMD intrinsics, and the twin rule
+    # guarantees PALLAS_SIMD=off exercises the same numeric contract the
+    # vector tiers must match bitwise. Scope to the unsafe-heavy and
+    # concurrency-bearing modules — whole-suite Miri is impractically slow.
+    PALLAS_SIMD=off MIRIFLAGS="-Zmiri-strict-provenance" \
+        cargo +nightly miri test --lib -- \
+        linalg::simd quant::pertoken util::pool util::simd util::sync
+    echo "miri lane: OK"
+}
+
+run_tsan() {
+    if ! have_nightly; then
+        echo "[skip] tsan lane: no nightly toolchain"
+        return 0
+    fi
+    if ! rustup +nightly component list 2> /dev/null | grep -q "rust-src (installed)"; then
+        echo "[skip] tsan lane: nightly has no rust-src component (rustup component add rust-src --toolchain nightly)"
+        return 0
+    fi
+    local host
+    host="$(rustc +nightly -vV | sed -n 's/^host: //p')"
+    # The suites where threads actually contend: the parallel map pool,
+    # the coordinator worker + router fan-out, and the TCP serving stack
+    # (reader/pump/listener threads sharing the writer lock and the
+    # in-flight gauge).
+    RUSTFLAGS="-Zsanitizer=thread" RUSTDOCFLAGS="-Zsanitizer=thread" \
+        cargo +nightly test -Zbuild-std --target "$host" --lib -- \
+        util::pool util::sync coordinator:: server::
+    RUSTFLAGS="-Zsanitizer=thread" RUSTDOCFLAGS="-Zsanitizer=thread" \
+        cargo +nightly test -Zbuild-std --target "$host" \
+        --test coordinator_proptest --test server_wire_tests
+    echo "tsan lane: OK"
+}
+
+case "${1:-both}" in
+    --miri) run_miri ;;
+    --tsan) run_tsan ;;
+    both)
+        run_miri
+        run_tsan
+        ;;
+    *)
+        echo "usage: scripts/sanitize.sh [--miri|--tsan]" >&2
+        exit 2
+        ;;
+esac
+
+echo "sanitize.sh: OK"
