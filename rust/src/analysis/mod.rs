@@ -2,7 +2,7 @@
 //!
 //! The compiler proves memory safety; it cannot prove the two contracts
 //! this reproduction actually stands on. This pass makes them machine
-//! checked instead of conventions. **Five invariants are enforced over
+//! checked instead of conventions. **Six invariants are enforced over
 //! `rust/src/`** (see [`rules`] for the matchers, [`scan`] for the
 //! comment/string masking that keeps them honest):
 //!
@@ -32,6 +32,13 @@
 //!    committed `rust/lint_sync_baseline.toml`; concurrency-surface
 //!    changes are thereby always a reviewed diff. Regenerate with
 //!    `repro lint --update-sync-baseline` after review.
+//! 6. **Failpoint hygiene** (`failpoint-hygiene`) — fault-injection sites
+//!    (`failpoint!` / `failpoint::fired`, see `util::failpoint`) are
+//!    forbidden in the `compress/` and `linalg/` numeric paths (even a
+//!    disarmed site is a branch, and an armed one breaks the determinism
+//!    contract), must name themselves with a string literal on the
+//!    invocation line, and site names must be unique across the crate so
+//!    one `PALLAS_FAILPOINTS` entry targets exactly one seam.
 //!
 //! The dynamic counterpart is `scripts/sanitize.sh`: a Miri lane over the
 //! unsafe-heavy modules (with `PALLAS_SIMD=off`, so the scalar twins are
@@ -92,11 +99,15 @@ pub fn run(opts: &LintOptions) -> io::Result<LintOutcome> {
         rules::check_determinism(f, &mut raw);
         rules::check_simd_twins(f, &extra_tests, &mut raw);
     }
+    // rule 6 is cross-file (site-name uniqueness spans the crate)
+    rules::check_failpoints(&files, &mut raw);
 
     let mut violations: Vec<Violation> = Vec::new();
 
-    // ---- allowlist (rules 1/2/4; the twin rule is never allowlistable:
-    // a kernel without a tested scalar twin has no reviewable excuse) ----
+    // ---- allowlist (rules 1/2/4; the twin and failpoint rules are never
+    // allowlistable: a kernel without a tested scalar twin has no
+    // reviewable excuse, and neither does an injection seam in a
+    // determinism-scoped numeric path) ----
     let allow_text =
         fs::read_to_string(opts.crate_root.join(ALLOWLIST_FILE)).unwrap_or_default();
     let cfg = allowlist::parse_allowlist(&allow_text);
@@ -111,7 +122,7 @@ pub fn run(opts: &LintOptions) -> io::Result<LintOutcome> {
     }
     let mut used = vec![0usize; cfg.allows.len()];
     'violation: for v in raw {
-        if v.rule != rules::RULE_TWIN {
+        if v.rule != rules::RULE_TWIN && v.rule != rules::RULE_FAILPOINT {
             for (k, a) in cfg.allows.iter().enumerate() {
                 if a.rule == v.rule && v.path.ends_with(&a.path) && v.text.contains(&a.contains)
                 {
@@ -310,6 +321,25 @@ mod tests {
         let out = t.run(false);
         assert_eq!(out.violations.len(), 1, "{:?}", out.violations);
         assert!(out.violations[0].msg.contains("Ordering:: uses = 2, baseline says 1"));
+    }
+
+    #[test]
+    fn failpoint_rule_runs_cross_file_and_is_not_allowlistable() {
+        let t = TempCrate::new("failpoint");
+        t.write("src/linalg/gemm.rs", "pub fn f() {\n    crate::failpoint!(\"gemm.x\");\n}\n");
+        t.write(
+            "lint_allow.toml",
+            "[[allow]]\nrule = \"failpoint-hygiene\"\npath = \"linalg/gemm.rs\"\ncontains = \"failpoint\"\nreason = \"not reviewable\"\n",
+        );
+        let out = t.run(true);
+        // the violation survives the allowlist AND the entry reports stale
+        let rules: Vec<&str> = out.violations.iter().map(|v| v.rule).collect();
+        assert!(rules.contains(&"failpoint-hygiene"), "{:?}", out.violations);
+        assert!(
+            out.violations.iter().any(|v| v.msg.contains("stale")),
+            "{:?}",
+            out.violations
+        );
     }
 
     #[test]

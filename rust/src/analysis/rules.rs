@@ -1,4 +1,4 @@
-//! The five invariant rules behind `repro lint`.
+//! The six invariant rules behind `repro lint`.
 //!
 //! Each rule is a pure function over [`SourceFile`]s (masked lines,
 //! test spans — see [`super::scan`]) appending [`Violation`]s. The
@@ -12,6 +12,7 @@ pub const RULE_TWIN: &str = "simd-twin";
 pub const RULE_DETERMINISM: &str = "determinism";
 pub const RULE_SYNC: &str = "sync-baseline";
 pub const RULE_ALLOWLIST: &str = "allowlist";
+pub const RULE_FAILPOINT: &str = "failpoint-hygiene";
 
 /// One lint finding, pointing at a single source line.
 #[derive(Debug, Clone)]
@@ -352,6 +353,84 @@ fn find_scalar_twin(body: &[String]) -> Option<String> {
     None
 }
 
+/// Layers where fault-injection sites (rule 6) are forbidden: the numeric
+/// paths must stay bit-identical and branch-free — even a disarmed
+/// `failpoint!` is a load + branch per call, and an armed one breaks the
+/// determinism contract the compression/linalg tests certify.
+const FAILPOINT_FORBIDDEN: [&str; 2] = ["compress/", "linalg/"];
+
+/// Rule 6 — failpoint hygiene, cross-file: no `failpoint!`/`failpoint::fired`
+/// site in `compress/` or `linalg/`, every wired site carries a literal
+/// name on its invocation line, and site names are unique across the crate
+/// (two sites sharing a name would make one `PALLAS_FAILPOINTS` entry fire
+/// in places its chaos schedule never meant to reach). The registry module
+/// itself (`util/failpoint.rs`) is definitional and exempt; so is test
+/// code, where ad-hoc sites are fine.
+pub fn check_failpoints(files: &[SourceFile], out: &mut Vec<Violation>) {
+    // (name, path, 1-based line) of each site already wired
+    let mut seen: Vec<(String, String, usize)> = Vec::new();
+    for f in files {
+        if f.rel_path == "util/failpoint.rs" {
+            continue;
+        }
+        for (i, code) in f.code.iter().enumerate() {
+            if f.is_test[i] {
+                continue;
+            }
+            if !code.contains("failpoint!(") && !code.contains("failpoint::fired(") {
+                continue;
+            }
+            if FAILPOINT_FORBIDDEN.iter().any(|p| f.rel_path.starts_with(p)) {
+                out.push(Violation::at(
+                    RULE_FAILPOINT,
+                    f,
+                    i,
+                    "fault-injection site in a determinism-scoped numeric path \
+                     (compress/, linalg/ must stay branch-free and bit-identical)"
+                        .to_string(),
+                ));
+                continue;
+            }
+            // the site name is a string literal — masked in `code`, so
+            // extract it from the raw line
+            let Some(name) = site_name(&f.lines[i]) else {
+                out.push(Violation::at(
+                    RULE_FAILPOINT,
+                    f,
+                    i,
+                    "fault-injection site without a literal site name on the invocation line"
+                        .to_string(),
+                ));
+                continue;
+            };
+            if let Some((_, path, line)) = seen.iter().find(|(n, _, _)| *n == name) {
+                out.push(Violation::at(
+                    RULE_FAILPOINT,
+                    f,
+                    i,
+                    format!(
+                        "duplicate fault-injection site name {name:?} (first wired at {path}:{line})"
+                    ),
+                ));
+            } else {
+                seen.push((name, f.rel_path.clone(), i + 1));
+            }
+        }
+    }
+}
+
+/// First string literal after the failpoint invocation on the raw line.
+fn site_name(raw: &str) -> Option<String> {
+    let at = raw
+        .find("failpoint!(")
+        .map(|p| p + "failpoint!(".len())
+        .or_else(|| raw.find("failpoint::fired(").map(|p| p + "failpoint::fired(".len()))?;
+    let rest = raw.get(at..)?;
+    let open = rest.find('"')? + 1;
+    let close = open + rest.get(open..)?.find('"')?;
+    rest.get(open..close).map(str::to_string)
+}
+
 /// Per-file non-test synchronization inventory (rule 5): every
 /// `Ordering::*` use, poisoning `lock().unwrap()`, and poison-tolerant
 /// `lock_unpoisoned(` call, checked against `rust/lint_sync_baseline.toml`
@@ -507,6 +586,42 @@ mod a {\n    #[target_feature(enable = \"avx2\")]\n    pub unsafe fn alpha(_x: &
         check_simd_twins(&f, "", &mut v);
         assert_eq!(v.len(), 1, "{v:?}");
         assert!(v[0].msg.contains("no dispatcher call site"));
+    }
+
+    #[test]
+    fn failpoint_rule_forbids_numeric_paths_and_duplicates() {
+        let ok = file(
+            "kvcache/pool.rs",
+            "fn f() -> R {\n    crate::failpoint!(\"pool.alloc\", |f| Err(e));\n    Ok(())\n}\n",
+        );
+        let dup = file(
+            "server/conn.rs",
+            "fn g() {\n    if crate::util::failpoint::fired(\"pool.alloc\") {}\n}\n",
+        );
+        let bad = file("linalg/gemm.rs", "fn h() {\n    crate::failpoint!(\"gemm.inner\");\n}\n");
+        let mut v = Vec::new();
+        check_failpoints(&[ok, dup, bad], &mut v);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v[0].msg.contains("duplicate"), "{}", v[0].msg);
+        assert!(v[0].msg.contains("kvcache/pool.rs"), "{}", v[0].msg);
+        assert!(v[1].msg.contains("determinism-scoped"), "{}", v[1].msg);
+    }
+
+    #[test]
+    fn failpoint_rule_skips_tests_registry_and_requires_literal_names() {
+        let t = file(
+            "server/conn.rs",
+            "#[cfg(test)]\nmod tests {\n    fn t() { crate::failpoint!(\"x\"); }\n}\n",
+        );
+        let reg = file("util/failpoint.rs", "fn f() { crate::failpoint!(\"y\"); }\n");
+        let mut v = Vec::new();
+        check_failpoints(&[t, reg], &mut v);
+        assert!(v.is_empty(), "{v:?}");
+        let dynamic = file("server/conn.rs", "fn f() { crate::failpoint!(site_var); }\n");
+        let mut v = Vec::new();
+        check_failpoints(&[dynamic], &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("literal site name"), "{}", v[0].msg);
     }
 
     #[test]

@@ -34,7 +34,10 @@
 //! [`super::batcher::WaitQueue`]) onto up to prefill_batch slots; a request
 //! that fails admission (bad prompt, cache exhaustion) is failed
 //! individually with a `GenResult` error — its partial sequence is freed
-//! and the rest of the batch proceeds.
+//! and the rest of the batch proceeds. Staging failures get the same
+//! treatment: a failed gather (only reachable through cache corruption or
+//! an injected `cache.stage` fault) retires the owning request and scrubs
+//! its region — the step loop itself never dies on a per-request seam.
 
 use super::batcher::WaitQueue;
 use super::metrics::Metrics;
@@ -415,8 +418,15 @@ impl Engine {
                 .position(|s| s.is_none())
                 .expect("free slot disappeared");
             // One full gather per admitted request; decode extends the
-            // region incrementally from here on.
-            self.stage_full_slot(si, seq)?;
+            // region incrementally from here on. A failed gather fails only
+            // this request: free its pages, scrub the half-written region,
+            // and keep serving the rest of the batch.
+            if let Err(e) = self.stage_full_slot(si, seq) {
+                self.cache.free_seq(seq);
+                self.zero_slot_region(si);
+                self.fail_request(tracked, format!("staging failed: {e:#}"));
+                continue;
+            }
             // first generated token from the prefill logits; Prefilled is
             // published before the Token event it produces
             let row = logits[i * v..(i + 1) * v].to_vec();
@@ -510,7 +520,16 @@ impl Engine {
         for i in 0..b {
             let seq = self.slots[i].as_ref().map(|sl| sl.seq);
             match seq {
-                Some(seq) => self.ensure_staged(i, seq)?,
+                // A staging failure retires only this slot's request (and
+                // presents a clean zero region to the decode graph, like any
+                // other retired slot) — the step loop survives.
+                Some(seq) => {
+                    if let Err(e) = self.ensure_staged(i, seq) {
+                        let msg = format!("staging failed: {e:#}");
+                        self.fail_slot(i, &msg);
+                        self.zero_slot_region(i);
+                    }
+                }
                 None => {
                     if self.stage_state[i].dirty {
                         self.zero_slot_region(i);
@@ -565,8 +584,14 @@ impl Engine {
                 Ok(()) => {
                     // extend the slot's staging tail by the appended row:
                     // O(w) per layer, staged from the stored rows so the
-                    // buffer stays bit-identical to a full gather
-                    self.stage_suffix_slot(i, seq, t, t + 1)?;
+                    // buffer stays bit-identical to a full gather; a failed
+                    // tail write retires only this slot's request
+                    if let Err(e) = self.stage_suffix_slot(i, seq, t, t + 1) {
+                        let msg = format!("staging failed: {e:#}");
+                        self.fail_slot(i, &msg);
+                        self.zero_slot_region(i);
+                        continue;
+                    }
                     self.metrics.generated_tokens += 1;
                     let row = &logits[i * v..(i + 1) * v];
                     let pos = self.cache.seq_len(seq);

@@ -31,6 +31,20 @@ pub struct Metrics {
     pub requests_expired: u64,
     /// Submissions bounced off the bounded admission queue (`QueueFull`).
     pub requests_rejected: u64,
+    /// Requests cancelled by server-side load shedding: their connection's
+    /// bounded event queue overflowed (a stalled consumer) and the server
+    /// tore the connection down instead of blocking on it. Process-wide;
+    /// overlaid at snapshot time by `server::stats_json` (the seam lives in
+    /// the TCP layer, not the engine).
+    pub requests_shed: u64,
+    /// Retry attempts performed by this process's shared backoff helper
+    /// (`util/backoff.rs`): client reconnect/resubmit plus the in-process
+    /// admission loop. Overlaid at snapshot time by `WorkerStats::snapshot`.
+    pub requests_retried: u64,
+    /// Faults fired by the deterministic fault-injection registry
+    /// (`util/failpoint.rs`) since its last reset; 0 in production (sites
+    /// disarmed). Overlaid at snapshot time by `WorkerStats::snapshot`.
+    pub faults_injected: u64,
     pub prompt_tokens: u64,
     pub generated_tokens: u64,
     pub prefill_calls: u64,
@@ -146,6 +160,9 @@ impl Metrics {
             ("requests_cancelled", count(self.requests_cancelled)),
             ("requests_expired", count(self.requests_expired)),
             ("requests_rejected", count(self.requests_rejected)),
+            ("requests_shed", count(self.requests_shed)),
+            ("requests_retried", count(self.requests_retried)),
+            ("faults_injected", count(self.faults_injected)),
             ("prompt_tokens", count(self.prompt_tokens)),
             ("generated_tokens", count(self.generated_tokens)),
             ("prefill_calls", count(self.prefill_calls)),
@@ -166,6 +183,7 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} failed={} cancelled={} expired={} rejected={} \
+             shed={} retried={} faults={} \
              prompt_toks={} gen_toks={} | prefill: {} calls {:.1}ms avg | \
              decode: {} calls {:.2}ms avg, {:.1} tok/s, occupancy {:.2} | \
              stage full {:.1}ms/{} rows, incr {:.1}ms/{} rows, append {:.1}ms total | \
@@ -176,6 +194,9 @@ impl Metrics {
             self.requests_cancelled,
             self.requests_expired,
             self.requests_rejected,
+            self.requests_shed,
+            self.requests_retried,
+            self.faults_injected,
             self.prompt_tokens,
             self.generated_tokens,
             self.prefill_calls,
@@ -221,11 +242,29 @@ mod tests {
 
     #[test]
     fn report_includes_lifecycle_counters() {
-        let mut m = Metrics { requests_cancelled: 2, requests_expired: 1, ..Default::default() };
+        let mut m = Metrics {
+            requests_cancelled: 2,
+            requests_expired: 1,
+            requests_shed: 3,
+            requests_retried: 5,
+            ..Default::default()
+        };
         m.record_queue_wait(4.0);
         let r = m.report();
         assert!(r.contains("cancelled=2"), "{r}");
         assert!(r.contains("expired=1"), "{r}");
+        assert!(r.contains("shed=3"), "{r}");
+        assert!(r.contains("retried=5"), "{r}");
+        assert!(r.contains("faults=0"), "{r}");
+    }
+
+    #[test]
+    fn to_json_carries_robustness_counters() {
+        let m = Metrics { requests_shed: 2, faults_injected: 9, ..Default::default() };
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(j.req("requests_shed").as_f64(), Some(2.0));
+        assert_eq!(j.req("requests_retried").as_f64(), Some(0.0));
+        assert_eq!(j.req("faults_injected").as_f64(), Some(9.0));
     }
 
     #[test]

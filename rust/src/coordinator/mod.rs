@@ -66,4 +66,6 @@ pub use engine::{Engine, EngineConfig};
 pub use request::{
     FinishReason, GenEvent, GenRequest, GenResult, RequestHandle, SamplingParams, SubmitError,
 };
-pub use router::{Coordinator, CoordinatorHandle, RequestStream, WorkerStats};
+pub use router::{
+    Coordinator, CoordinatorHandle, EventSink, RequestStream, WorkerStats, EVENT_QUEUE_CAP,
+};

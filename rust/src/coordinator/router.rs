@@ -23,26 +23,77 @@
 //! [`CoordinatorHandle::stats`] snapshots the live engine (metrics + cache
 //! accounting) without stopping it — the `metrics` control frame and the
 //! cancel-on-disconnect reclamation tests are built on it.
+//!
+//! # Bounded fan-out (shed, don't wedge — and don't balloon)
+//!
+//! Every channel the worker *sends* on is bounded, so one stalled consumer
+//! can neither balloon memory nor block the step loop:
+//!   * per-request / per-connection **event channels** are
+//!     `sync_channel`s behind an [`EventSink`]; the worker only ever
+//!     `try_send`s. Overflow drops the (non-terminal) event and raises the
+//!     sink's *stalled* flag — the TCP layer treats a stalled connection
+//!     like a disconnect: cancel its live requests, reclaim pages/slots.
+//!     A terminal event that finds the queue full falls back to the
+//!     results channel, so it is still delivered to exactly one sink.
+//!   * **acks** ride a capacity-1 `sync_channel` (exactly one message).
+//!   * the **results** fallback channel is bounded at [`RESULTS_CAP`];
+//!     fire-and-forget consumers that never drain lose the overflow
+//!     instead of growing it. `collect(n)` callers drain promptly.
+//! The inbound command channel stays unbounded by design: bounding it
+//! would block submitters against a busy worker, and admission pressure is
+//! already the engine queue's job (`SubmitError::QueueFull`).
 
 use super::engine::Engine;
 use super::metrics::Metrics;
 use super::request::{GenEvent, GenRequest, GenResult, RequestHandle, SubmitError, Tracked};
 use anyhow::Result;
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
+
+/// Capacity of each [`RequestStream`]'s event channel (and the default
+/// scale for per-connection channels in the TCP layer): enough for the
+/// longest request's full lifecycle with headroom, small enough that a
+/// stalled consumer is detected in one request's worth of traffic.
+pub const EVENT_QUEUE_CAP: usize = 1024;
+
+/// Bound of the fire-and-forget results fallback channel.
+const RESULTS_CAP: usize = 4096;
+
+/// A bounded event sender plus a consumer-visible overflow flag. The
+/// worker marks the flag instead of blocking when the channel is full; the
+/// owning front-end polls [`EventSink::stalled_flag`] and shuts the slow
+/// consumer down (load shedding).
+#[derive(Clone)]
+pub struct EventSink {
+    tx: SyncSender<GenEvent>,
+    stalled: Arc<AtomicBool>,
+}
+
+impl EventSink {
+    pub fn new(tx: SyncSender<GenEvent>) -> EventSink {
+        EventSink { tx, stalled: Arc::new(AtomicBool::new(false)) }
+    }
+
+    /// Shared flag, raised (never lowered) by the router on overflow.
+    pub fn stalled_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stalled)
+    }
+}
 
 enum Cmd {
     Submit {
         req: Box<GenRequest>,
-        events: Sender<GenEvent>,
+        events: EventSink,
         /// When present, the submit outcome is reported here (typed) and a
         /// rejection produces no event; when absent, a rejection falls back
         /// to a terminal [`GenEvent::Failed`] on `events`.
-        ack: Option<Sender<std::result::Result<RequestHandle, SubmitError>>>,
+        ack: Option<SyncSender<std::result::Result<RequestHandle, SubmitError>>>,
     },
     Cancel(u64),
-    Stats(Sender<WorkerStats>),
+    Stats(SyncSender<WorkerStats>),
     Shutdown,
 }
 
@@ -67,8 +118,15 @@ impl WorkerStats {
     /// `metrics` control frame and `repro serve --metrics-json` (both the
     /// threaded and in-process paths build the snapshot here).
     pub fn snapshot(engine: &Engine) -> WorkerStats {
+        // The robustness counters live outside the engine (faults fire in
+        // every layer, retries happen in clients); overlay the process-wide
+        // totals so one snapshot carries the whole picture. The TCP layer
+        // adds `requests_shed` the same way (`server::stats_json`).
+        let mut metrics = engine.metrics.clone();
+        metrics.requests_retried = crate::util::backoff::retries_total();
+        metrics.faults_injected = crate::util::failpoint::injected_total();
         WorkerStats {
-            metrics: engine.metrics.clone(),
+            metrics,
             queue_depth: engine.queue_depth(),
             blocks_in_use: engine.cache.blocks_in_use(),
             live_seqs: engine.cache.live_seqs(),
@@ -133,17 +191,23 @@ pub struct CoordinatorHandle {
 }
 
 impl CoordinatorHandle {
-    /// Submit with a caller-provided event sender — several requests may
+    /// Submit with a caller-provided event sink — several requests may
     /// share one channel (events carry their request id) — and block for
     /// the typed admission outcome. Returns [`SubmitError::Shutdown`] when
     /// the worker is gone.
     pub fn submit(
         &self,
         req: GenRequest,
-        events: Sender<GenEvent>,
+        events: EventSink,
     ) -> std::result::Result<RequestHandle, SubmitError> {
+        // Chaos seam: an injected admission rejection, typed retryable so
+        // the client's backoff/retry path is exercised end to end.
+        crate::failpoint!("router.submit", |_f| Err(SubmitError::QueueFull {
+            req,
+            capacity: 0
+        }));
         let id = req.id;
-        let (ack_tx, ack_rx) = channel();
+        let (ack_tx, ack_rx) = sync_channel(1);
         if self
             .tx
             .send(Cmd::Submit { req: Box::new(req), events, ack: Some(ack_tx) })
@@ -165,7 +229,7 @@ impl CoordinatorHandle {
     /// Snapshot the live engine's metrics + cache accounting; `None` when
     /// the worker is gone.
     pub fn stats(&self) -> Option<WorkerStats> {
-        let (tx, rx) = channel();
+        let (tx, rx) = sync_channel(1);
         self.tx.send(Cmd::Stats(tx)).ok()?;
         rx.recv().ok()
     }
@@ -188,14 +252,14 @@ impl Coordinator {
         F: FnOnce() -> Result<Engine> + Send + 'static,
     {
         let (tx, rx) = channel::<Cmd>();
-        let (res_tx, results) = channel::<GenResult>();
+        let (res_tx, results) = sync_channel::<GenResult>(RESULTS_CAP);
         let worker = std::thread::spawn(move || -> Result<String> {
             let mut engine = factory()?;
-            let mut streams: HashMap<u64, Sender<GenEvent>> = HashMap::new();
+            let mut streams: HashMap<u64, EventSink> = HashMap::new();
             let mut shutdown = false;
             let handle_cmd = |engine: &mut Engine,
-                                  streams: &mut HashMap<u64, Sender<GenEvent>>,
-                                  res_tx: &Sender<GenResult>,
+                                  streams: &mut HashMap<u64, EventSink>,
+                                  res_tx: &SyncSender<GenResult>,
                                   cmd: Cmd|
              -> bool {
                 match cmd {
@@ -203,7 +267,17 @@ impl Coordinator {
                         Ok(handle) => {
                             streams.insert(handle.id, events);
                             if let Some(ack) = ack {
-                                let _ = ack.send(Ok(handle));
+                                // Chaos seam: a dropped ack makes the
+                                // submitter observe a worker that admitted
+                                // the request but never answered — a typed
+                                // shutdown rejection; the orphan request's
+                                // events route to a sink whose table entry
+                                // the front-end already retired.
+                                if crate::util::failpoint::fired("router.ack") {
+                                    drop(ack);
+                                } else {
+                                    let _ = ack.send(Ok(handle));
+                                }
                             }
                         }
                         Err(e) => match ack {
@@ -219,8 +293,9 @@ impl Coordinator {
                                 let msg = e.to_string();
                                 if let Some(req) = e.into_request() {
                                     let res = Tracked::new(req).fail(msg);
-                                    if events.send(GenEvent::Failed(res.clone())).is_err() {
-                                        let _ = res_tx.send(res);
+                                    if events.tx.try_send(GenEvent::Failed(res.clone())).is_err()
+                                    {
+                                        let _ = res_tx.try_send(res);
                                     }
                                 }
                             }
@@ -287,8 +362,12 @@ impl Coordinator {
     /// as a terminal [`GenEvent::Failed`] on the stream.
     pub fn submit(&self, req: GenRequest) -> RequestStream {
         let id = req.id;
-        let (ev_tx, events) = channel();
-        let _ = self.tx.send(Cmd::Submit { req: Box::new(req), events: ev_tx, ack: None });
+        let (ev_tx, events) = sync_channel(EVENT_QUEUE_CAP);
+        let _ = self.tx.send(Cmd::Submit {
+            req: Box::new(req),
+            events: EventSink::new(ev_tx),
+            ack: None,
+        });
         RequestStream { id, events, cmd_tx: self.tx.clone() }
     }
 
@@ -321,26 +400,44 @@ impl Coordinator {
     }
 }
 
-/// Deliver one engine event to its request's stream; a terminal event that
-/// cannot be delivered (stream receiver dropped) falls back to the global
-/// results channel, and either way closes the stream. Routing to exactly
-/// one sink keeps a long-lived router's memory bounded by its *live*
-/// requests — an unread mirror channel would otherwise grow by one result
-/// per request forever.
+/// Deliver one engine event to its request's sink; a terminal event that
+/// cannot be delivered (receiver dropped, or queue full) falls back to the
+/// global results channel, and either way closes the stream. Routing to
+/// exactly one sink keeps a long-lived router's memory bounded by its
+/// *live* requests — an unread mirror channel would otherwise grow by one
+/// result per request forever.
+///
+/// The worker never blocks here: delivery is `try_send`, and a full queue
+/// marks the sink stalled (the owning front-end sheds it) while dropping
+/// the non-terminal event — losing a progress frame is recoverable, losing
+/// the step loop to one slow reader is not. Terminal events are exempt
+/// from the `router.event` chaos seam: exactly-once terminal delivery is
+/// the invariant the chaos suite asserts, and transport-level terminal
+/// loss is covered by the `conn.write` / disconnect faults instead.
 fn route_event(
-    streams: &mut HashMap<u64, Sender<GenEvent>>,
-    res_tx: &Sender<GenResult>,
+    streams: &mut HashMap<u64, EventSink>,
+    res_tx: &SyncSender<GenResult>,
     ev: GenEvent,
 ) {
     let id = ev.id();
     let terminal_result = ev.result().cloned();
+    if terminal_result.is_none() && crate::util::failpoint::fired("router.event") {
+        return;
+    }
     let delivered = match streams.get(&id) {
-        Some(tx) => tx.send(ev).is_ok(),
+        Some(sink) => match sink.tx.try_send(ev) {
+            Ok(()) => true,
+            Err(std::sync::mpsc::TrySendError::Full(_)) => {
+                sink.stalled.store(true, Ordering::SeqCst);
+                false
+            }
+            Err(std::sync::mpsc::TrySendError::Disconnected(_)) => false,
+        },
         None => false,
     };
     if let Some(r) = terminal_result {
         if !delivered {
-            let _ = res_tx.send(r);
+            let _ = res_tx.try_send(r);
         }
         streams.remove(&id);
     }

@@ -48,7 +48,7 @@
 use super::pool::{BlockId, BlockPool};
 use crate::linalg::hadamard::signs_from_seed;
 use crate::quant::{dequantize_rows, quantize, QuantKind, QuantizedRow};
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 
 pub type SeqId = u64;
@@ -204,6 +204,9 @@ impl KvCache {
     /// Transactional: on any allocation failure the cache is left exactly as
     /// it was before the call (no partial pages, `len` unchanged).
     pub fn append(&mut self, id: SeqId, rows: &[(&[f32], &[f32])]) -> Result<()> {
+        // Chaos seam: a whole-token admission failure (the engine fails only
+        // the owning request; see tests/chaos_tests.rs).
+        crate::failpoint!("cache.append", |f| Err(anyhow!("{f}: append rejected")));
         self.append_token(id, rows).map(|_| ())
     }
 
@@ -301,6 +304,9 @@ impl KvCache {
     /// past the sequence length are zero-filled.
     pub fn stage(&self, id: SeqId, layer: usize, plane: usize, out: &mut [f32],
                  pad_to: usize) -> Result<usize> {
+        // Chaos seam: a failed gather fails the owning request, never the
+        // engine (the worker's step loop must survive it).
+        crate::failpoint!("cache.stage", |f| Err(anyhow!("{f}: stage rejected")));
         let st = match self.seqs.get(&id) {
             Some(s) => s,
             None => bail!("unknown sequence {id}"),

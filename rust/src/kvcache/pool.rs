@@ -1,7 +1,7 @@
 //! Fixed-size block pool with a free list — the allocation substrate of the
 //! paged cache (one pool per layer-tensor kind so widths stay uniform).
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 pub type BlockId = u32;
 
@@ -27,6 +27,12 @@ impl BlockPool {
     }
 
     pub fn alloc(&mut self) -> Result<BlockId> {
+        // Chaos seam: forced exhaustion on a deterministic schedule drives
+        // the cache's mid-token rollback path (see tests/chaos_tests.rs).
+        crate::failpoint!("pool.alloc", |f| Err(anyhow!(
+            "{f}: forced pool exhaustion ({} blocks)",
+            self.capacity
+        )));
         match self.free.pop() {
             Some(id) => Ok(id),
             None => bail!("block pool exhausted ({} blocks)", self.capacity),

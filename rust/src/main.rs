@@ -11,7 +11,9 @@
 //!             With --listen <addr> it becomes the TCP wire server:
 //!             newline-delimited JSON protocol over the coordinator
 //!             (--max-inflight / --max-inflight-conn bound concurrency;
-//!             stop it with the `shutdown` control frame, e.g.
+//!             --event-queue-cap bounds each connection's event queue —
+//!             overflow sheds the connection; stop it with the `shutdown`
+//!             control frame, e.g.
 //!             `repro client --addr ... --requests 0 --shutdown`)
 //!   client    wire load generator: N connections × M streamed requests
 //!             against a `serve --listen` server; prints req/s, tok/s,
@@ -22,9 +24,10 @@
 //!   compress  run the pure-rust compression mirror over an .rtz archive
 //!   lint      run the project invariant checker over rust/src/ (unsafe
 //!             hygiene, serving-layer panic policy, SIMD twin rule,
-//!             determinism rule, sync-inventory baseline — see
-//!             recalkv::analysis; --update-sync-baseline rewrites
-//!             rust/lint_sync_baseline.toml after a reviewed change)
+//!             determinism rule, sync-inventory baseline, failpoint
+//!             hygiene — see recalkv::analysis; --update-sync-baseline
+//!             rewrites rust/lint_sync_baseline.toml after a reviewed
+//!             change)
 //!   info      list models/variants in the artifact manifest
 //!
 //! Examples:
@@ -49,6 +52,13 @@ use recalkv::runtime::Runtime;
 use recalkv::util::cli::Args;
 
 fn main() -> Result<()> {
+    // Arm fault-injection sites from PALLAS_FAILPOINTS before any subsystem
+    // runs (chaos/robustness testing; no-op and one relaxed atomic load per
+    // site when unset). A malformed spec must fail loudly, not silently
+    // run the binary un-faulted.
+    if let Err(e) = recalkv::util::failpoint::init_from_env() {
+        bail!("bad {} spec: {e}", recalkv::util::failpoint::ENV_VAR);
+    }
     let args = Args::from_env(&[
         "quick", "fisher", "quiet", "stream", "shutdown", "metrics", "update-sync-baseline",
     ]);
@@ -130,6 +140,7 @@ fn drain_events(engine: &mut Engine, stream: bool, out: &mut Vec<GenResult>) {
 
 fn serve(dir: &str, args: &Args) -> Result<()> {
     use recalkv::coordinator::{FinishReason, SubmitError};
+    use recalkv::util::backoff::{Backoff, ADMISSION_RETRY};
     if let Some(addr) = args.opt("listen") {
         return serve_listen(dir, args, addr);
     }
@@ -178,13 +189,22 @@ fn serve(dir: &str, args: &Args) -> Result<()> {
         }
         let mut req = GenRequest::new(i as u64 + 1, prompt, max_new);
         req.deadline_ms = deadline_ms;
-        // bounded-queue backpressure: when the admission queue bounces the
-        // request, drive the engine until the queue drains, then retry.
+        // bounded-queue backpressure: same retry discipline as the wire
+        // clients (util::backoff — one policy everywhere). In-process the
+        // "wait" is driving the engine: a step drains the queue faster
+        // than any sleep could, so only the policy's retry budget applies.
         let mut pending = Some(req);
+        let mut backoff = Backoff::new(ADMISSION_RETRY);
         while let Some(r) = pending.take() {
             match engine.submit(r) {
                 Ok(_handle) => {}
                 Err(SubmitError::QueueFull { req, .. }) => {
+                    if backoff.next_delay().is_none() {
+                        bail!(
+                            "admission queue stayed full after {} retries",
+                            backoff.attempts()
+                        );
+                    }
                     pending = Some(req);
                     engine.step()?;
                     drain_events(&mut engine, stream, &mut results);
@@ -260,9 +280,13 @@ fn serve_listen(dir: &str, args: &Args, addr: &str) -> Result<()> {
         .map_err(|e| anyhow::anyhow!("bad --policy: {e}"))?;
     let queue_cap = args.usize_or("queue-cap", usize::MAX);
     let max_cache_tokens = args.usize_or("max-cache-tokens", usize::MAX);
+    let defaults = ServerConfig::default();
     let cfg = ServerConfig {
         max_inflight_per_conn: args.usize_or("max-inflight-conn", 8),
         max_inflight_global: args.usize_or("max-inflight", 64),
+        // shrink to drive load shedding in chaos tests; overflow sheds the
+        // connection instead of blocking the engine worker
+        event_queue_cap: args.usize_or("event-queue-cap", defaults.event_queue_cap),
     };
     println!(
         "serving {mname}/{vname} quant={quant:?} policy={} queue_cap={} over TCP",
@@ -339,7 +363,7 @@ fn client_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `repro lint`: the five-invariant static checker over `rust/src/`
+/// `repro lint`: the six-invariant static checker over `rust/src/`
 /// (see [`recalkv::analysis`] for what is enforced and why). Exits
 /// non-zero on any violation outside the committed allowlist, so
 /// `scripts/check.sh` can gate on it.

@@ -2,17 +2,39 @@
 //! harness's view of the server. One [`Client`] is one connection (hello
 //! handshake performed at connect); [`run_load`] drives N connections × M
 //! requests and aggregates throughput and latency percentiles.
+//!
+//! # Self-healing ([`generate_with_retry`])
+//!
+//! One shared retry discipline (deterministic capped exponential backoff,
+//! [`crate::util::backoff`]) serves every driver — the CLI one-shot,
+//! `repro client`, and [`run_load`]:
+//!
+//! * **retried** — `queue_full` rejections (typed retryable backpressure,
+//!   [`super::protocol::WireErrorKind::retryable`]), and transport errors
+//!   (reset, EOF mid-session, failed reconnect) *provided no token event
+//!   arrived that attempt* — the request observably never started
+//!   generating, so resubmitting cannot double-generate;
+//! * **never retried** — `too_large` and other non-retryable rejections
+//!   (retrying cannot succeed), and any failure after the first streamed
+//!   token (the caller must decide what a half-delivered stream means);
+//! * **bounded** — by the policy's retry budget and, when the request
+//!   carries `deadline_ms`, by that same budget across *all* attempts:
+//!   the deadline is consulted before each backoff sleep and truncates it.
+//!
+//! Transport errors tear down the connection; the next attempt reconnects
+//! (fresh handshake) through the caller-owned `slot`.
 
 use super::protocol::{
     read_frame, ClientFrame, ReadOutcome, ServerFrame, WireError, WireEvent, WireRequest,
     PROTOCOL_VERSION,
 };
 use crate::coordinator::metrics::Metrics;
+use crate::util::backoff::{Backoff, BackoffPolicy, ADMISSION_RETRY};
 use crate::util::json::Json;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One connection to a wire server, past its `hello` handshake.
 pub struct Client {
@@ -52,6 +74,9 @@ impl Client {
 
     /// Write one frame (line-delimited, flushed).
     pub fn send(&mut self, frame: &ClientFrame) -> Result<()> {
+        // Chaos seam: forged transport failure before any bytes hit the
+        // wire (the server never sees the frame).
+        crate::failpoint!("client.send", |f| Err(anyhow!("{f}: connection reset")));
         let line = frame.encode();
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
@@ -62,6 +87,9 @@ impl Client {
     /// Block for the next server frame (EOF is an error: the protocol ends
     /// sessions with terminal events / `bye`, not silence).
     pub fn recv(&mut self) -> Result<ServerFrame> {
+        // Chaos seam: forged transport failure on the read half (the frame
+        // may well have been sent — the client just never sees it).
+        crate::failpoint!("client.recv", |f| Err(anyhow!("{f}: connection reset")));
         loop {
             match read_frame(&mut self.reader, &mut self.acc)? {
                 ReadOutcome::Frame(line) => {
@@ -70,6 +98,9 @@ impl Client {
                 }
                 ReadOutcome::TimedOut => continue,
                 ReadOutcome::Eof => bail!("server closed the connection mid-stream"),
+                ReadOutcome::Oversized { len } => {
+                    bail!("server frame exceeds the length cap ({len} bytes)")
+                }
             }
         }
     }
@@ -78,8 +109,20 @@ impl Client {
     /// rejection). Frames for other in-flight ids are not expected in this
     /// single-request driver and error out loudly.
     pub fn generate(&mut self, req: &WireRequest) -> Result<GenOutcome> {
+        let mut events = Vec::new();
+        self.drive(req, &mut events)
+    }
+
+    /// [`Client::generate`] with the event log owned by the caller, so a
+    /// transport error mid-session still leaves the events seen so far
+    /// observable — [`generate_with_retry`] needs them to decide whether a
+    /// resubmit is safe (no token arrived) or forbidden (stream started).
+    fn drive(
+        &mut self,
+        req: &WireRequest,
+        events: &mut Vec<(WireEvent, Instant)>,
+    ) -> Result<GenOutcome> {
         self.send(&ClientFrame::Gen(req.clone()))?;
-        let mut events: Vec<(WireEvent, Instant)> = Vec::new();
         loop {
             match self.recv()? {
                 ServerFrame::Event(ev) => {
@@ -89,7 +132,7 @@ impl Client {
                     let terminal = ev.is_terminal();
                     events.push((ev, Instant::now()));
                     if terminal {
-                        return Ok(GenOutcome::Done { events });
+                        return Ok(GenOutcome::Done { events: std::mem::take(events) });
                     }
                 }
                 ServerFrame::Error(e) if e.id == Some(req.id) => {
@@ -131,6 +174,82 @@ impl Client {
     }
 }
 
+/// Drive one request to a terminal outcome through retries (module docs
+/// spell out exactly what is and is not retried). `slot` is the
+/// caller-owned connection: `None` (or a connection torn down by a
+/// transport error) makes the next attempt reconnect, so one slot serves
+/// a whole sequence of requests across failures. Returns the outcome and
+/// how many retries it took; the exhausted-retry outcome is whatever the
+/// final attempt produced (a retryable rejection comes back as
+/// `Rejected`, a transport error as `Err`).
+pub fn generate_with_retry(
+    addr: &str,
+    slot: &mut Option<Client>,
+    req: &WireRequest,
+    policy: &BackoffPolicy,
+) -> Result<(GenOutcome, u32)> {
+    let started = Instant::now();
+    let budget = req.deadline_ms.map(Duration::from_millis);
+    let mut backoff = Backoff::new(*policy);
+    let mut last_err: Option<anyhow::Error> = None;
+    let mut last_rejection: Option<WireError> = None;
+    loop {
+        let mut events: Vec<(WireEvent, Instant)> = Vec::new();
+        let attempt = match slot.as_mut() {
+            Some(client) => client.drive(req, &mut events),
+            None => Client::connect(addr)
+                .map(|c| slot.insert(c))
+                .and_then(|client| client.drive(req, &mut events)),
+        };
+        match attempt {
+            Ok(GenOutcome::Rejected(e)) if e.kind.retryable() => {
+                last_rejection = Some(e);
+                last_err = None;
+            }
+            Ok(out) => return Ok((out, backoff.attempts())),
+            Err(e) => {
+                // The connection's stream state is unknowable after a
+                // transport error: drop it, reconnect next attempt.
+                *slot = None;
+                if events.iter().any(|(ev, _)| matches!(ev, WireEvent::Token { .. })) {
+                    // The stream observably started; a blind resubmit
+                    // could generate (and bill) the request twice.
+                    return Err(e.context(
+                        "transport failure after streamed tokens (not retried: \
+                         a resubmit could double-generate)",
+                    ));
+                }
+                last_err = Some(e);
+                last_rejection = None;
+            }
+        }
+        // Another attempt? The request's own deadline bounds the whole
+        // retry sequence and is consulted *before* consuming a retry.
+        let out_of_budget = matches!(budget, Some(b) if started.elapsed() >= b);
+        let delay = if out_of_budget { None } else { backoff.next_delay() };
+        let Some(delay) = delay else {
+            let why = if out_of_budget { "deadline budget" } else { "retry budget" };
+            if let Some(e) = last_err.take() {
+                return Err(e.context(format!(
+                    "gave up after {} retries ({why} exhausted)",
+                    backoff.attempts()
+                )));
+            }
+            if let Some(r) = last_rejection.take() {
+                return Ok((GenOutcome::Rejected(r), backoff.attempts()));
+            }
+            bail!("retry loop exhausted without an attempt"); // unreachable
+        };
+        // Sleep the deterministic backoff step, truncated to whatever
+        // deadline budget remains.
+        let delay = match budget {
+            Some(b) => delay.min(b.saturating_sub(started.elapsed())),
+            None => delay,
+        };
+        std::thread::sleep(delay);
+    }
+}
+
 /// Aggregated result of one [`run_load`] run.
 #[derive(Debug, Default)]
 pub struct LoadReport {
@@ -149,6 +268,11 @@ pub struct LoadReport {
     /// Gaps between consecutive streamed token events of one request (ms):
     /// the client-observed inter-token latency including the wire.
     pub event_gap_ms: Vec<f64>,
+    /// Total retry attempts across the run (admission backoff +
+    /// reconnects; see [`generate_with_retry`]).
+    pub retries: u64,
+    /// Requests that needed at least one retry to reach their outcome.
+    pub requests_retried: usize,
 }
 
 impl LoadReport {
@@ -176,7 +300,7 @@ impl LoadReport {
         format!(
             "{} conns × {} reqs: {} ok / {} rejected / {} failed in {:.2}s | \
              {:.1} req/s, {:.1} tok/s | ttft p50 {:.1}ms p95 {:.1}ms | \
-             token gap p50 {:.2}ms p95 {:.2}ms",
+             token gap p50 {:.2}ms p95 {:.2}ms | {} retries over {} reqs",
             self.connections,
             self.requests / self.connections.max(1),
             self.completed,
@@ -189,15 +313,21 @@ impl LoadReport {
             self.ttft_pctile(0.95),
             self.event_gap_pctile(0.50),
             self.event_gap_pctile(0.95),
+            self.retries,
+            self.requests_retried,
         )
     }
 }
 
 /// Drive `connections` concurrent clients, each issuing
 /// `requests_per_conn` streamed requests sequentially (prompts cycled from
-/// `prompts`), and aggregate latency/throughput stats. Connection-level
-/// failures (refused, handshake) abort the run; request-level rejections
-/// and failures are counted.
+/// `prompts`), and aggregate latency/throughput stats. Requests go through
+/// [`generate_with_retry`] under the shared [`ADMISSION_RETRY`] policy, so
+/// transient `queue_full` backpressure (and dropped connections before the
+/// first token) is retried instead of counted as a rejection — only
+/// rejections that survive the retry budget land in `rejected`. The
+/// *initial* connect of each thread still aborts the run (refused /
+/// handshake failures mean the server isn't there at all).
 pub fn run_load(
     addr: &str,
     connections: usize,
@@ -213,7 +343,7 @@ pub fn run_load(
         let handles: Vec<_> = (0..connections)
             .map(|c| {
                 s.spawn(move || -> Result<LoadReport> {
-                    let mut client = Client::connect(addr)?;
+                    let mut slot = Some(Client::connect(addr)?);
                     let mut rep = LoadReport::default();
                     for r in 0..requests_per_conn {
                         let prompt = &prompts[(c * requests_per_conn + r) % prompts.len()];
@@ -221,7 +351,13 @@ pub fn run_load(
                             WireRequest::new(r as u64 + 1, prompt.clone(), max_new);
                         wr.seed = (c * requests_per_conn + r) as u64;
                         let submitted = Instant::now();
-                        match client.generate(&wr)? {
+                        let (outcome, retries) =
+                            generate_with_retry(addr, &mut slot, &wr, &ADMISSION_RETRY)?;
+                        if retries > 0 {
+                            rep.retries += retries as u64;
+                            rep.requests_retried += 1;
+                        }
+                        match outcome {
                             GenOutcome::Done { events } => {
                                 let mut last_token_at: Option<Instant> = None;
                                 for (ev, at) in &events {
@@ -276,6 +412,8 @@ pub fn run_load(
         total.tokens += rep.tokens;
         total.ttft_ms.extend(rep.ttft_ms);
         total.event_gap_ms.extend(rep.event_gap_ms);
+        total.retries += rep.retries;
+        total.requests_retried += rep.requests_retried;
     }
     Ok(total)
 }

@@ -26,6 +26,19 @@
 //! events (write failures are ignored; the socket may already be gone) so
 //! the global in-flight accounting converges before the thread exits.
 //!
+//! # Load shedding (stalled consumers)
+//!
+//! Every connection's events flow through one *bounded* channel
+//! (`ServerConfig::event_queue_cap` deep): a client that stops draining —
+//! or a pump wedged behind a dead socket — makes the router's `try_send`
+//! overflow, which raises the sink's *stalled* flag instead of ever
+//! blocking the engine worker. The reader treats the flag like a
+//! disconnect: it cancels the connection's live requests (counted
+//! process-wide and overlaid onto `Metrics::requests_shed` by
+//! [`stats_json`]) so their pages and slots are reclaimed, and the pump's
+//! drain grace shrinks — terminal events may already have been diverted
+//! off the full queue, so most of the long grace would be dead time.
+//!
 //! # Panic robustness
 //!
 //! All shared locks here are poison-tolerant ([`lock_unpoisoned`]): if a
@@ -40,17 +53,17 @@
 
 use super::protocol::{
     read_frame, ClientFrame, ReadOutcome, ServerFrame, WireError, WireErrorKind, WireEvent,
-    WireRequest, PROTOCOL_VERSION,
+    WireRequest, MAX_FRAME_LEN, PROTOCOL_VERSION,
 };
 use super::server::ServerConfig;
-use crate::coordinator::{CoordinatorHandle, GenEvent, WorkerStats};
+use crate::coordinator::{CoordinatorHandle, EventSink, GenEvent, WorkerStats};
 use crate::util::json::Json;
 use crate::util::sync::{lock_unpoisoned, InflightGauge};
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::mpsc::{sync_channel, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -67,6 +80,23 @@ const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 /// After the reader is gone, how many pump poll intervals to wait for the
 /// cancelled requests' terminal events before giving up (worker death).
 const DRAIN_GRACE_POLLS: u32 = 100; // × 100ms = 10s
+
+/// Drain grace when the connection was shed for a stalled event queue:
+/// its terminal events may have been diverted off the full queue entirely
+/// (the router falls back to the results channel), so most of the long
+/// grace would be dead time before the leak-release path runs anyway.
+const SHED_DRAIN_POLLS: u32 = 5; // × 100ms = 0.5s
+
+/// Requests cancelled by load shedding, process-wide; overlaid onto
+/// `Metrics::requests_shed` by [`stats_json`] (the engine never sees the
+/// shed decision — it only sees the resulting cancels).
+static SHED_REQUESTS: AtomicU64 = AtomicU64::new(0);
+/// Connections torn down by load shedding, process-wide.
+static SHED_CONNS: AtomicU64 = AtomicU64::new(0);
+
+pub(crate) fn shed_requests_total() -> u64 {
+    SHED_REQUESTS.load(Ordering::Relaxed)
+}
 
 /// Shared server state handed to every connection.
 pub(crate) struct ConnContext {
@@ -112,8 +142,13 @@ impl Table {
 /// by `repro serve --metrics-json`): serving metrics plus the cache
 /// accounting that proves reclamation.
 pub fn stats_json(ws: &WorkerStats) -> Json {
+    // requests_shed lives in the TCP layer (the shed decision is made
+    // here, not in the engine), so overlay it the same way the snapshot
+    // overlays the retry/fault totals.
+    let mut metrics = ws.metrics.clone();
+    metrics.requests_shed = shed_requests_total();
     Json::obj(vec![
-        ("metrics", ws.metrics.to_json()),
+        ("metrics", metrics.to_json()),
         (
             "cache",
             Json::obj(vec![
@@ -123,6 +158,13 @@ pub fn stats_json(ws: &WorkerStats) -> Json {
             ]),
         ),
         ("queue_depth", Json::Num(ws.queue_depth as f64)),
+        (
+            "server",
+            Json::obj(vec![
+                ("shed_requests", Json::Num(SHED_REQUESTS.load(Ordering::Relaxed) as f64)),
+                ("shed_conns", Json::Num(SHED_CONNS.load(Ordering::Relaxed) as f64)),
+            ]),
+        ),
     ])
 }
 
@@ -135,6 +177,14 @@ fn send(writer: &Mutex<BufWriter<TcpStream>>, dead: &AtomicBool, frame: &ServerF
     // encode before taking the lock: string building needs no
     // serialization against the peer thread
     let line = frame.encode();
+    // Chaos seam: an err action forges a failed socket write (the frame is
+    // dropped, the connection marked dead); a delay action forges a slow
+    // peer, holding the pump long enough to overflow the bounded event
+    // queue and drive the shed path.
+    if crate::util::failpoint::fired("conn.write") {
+        dead.store(true, Ordering::SeqCst);
+        return false;
+    }
     // Poison-tolerant: this is the writer's only critical section and it
     // performs nothing but Result-returning IO (write_all/flush cannot
     // unwind), so a recovered guard always sees a consistent BufWriter.
@@ -174,7 +224,12 @@ pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
     // set by any failed write (send() above): the stream is broken, tear
     // the connection down at the reader's next poll
     let dead = Arc::new(AtomicBool::new(false));
-    let (ev_tx, ev_rx) = channel::<GenEvent>();
+    // Bounded fan-in: the router try_sends into this queue and raises the
+    // sink's stalled flag on overflow instead of blocking the engine
+    // worker (see module docs, "Load shedding").
+    let (ev_tx, ev_rx) = sync_channel::<GenEvent>(ctx.cfg.event_queue_cap.max(1));
+    let sink = EventSink::new(ev_tx);
+    let stalled = sink.stalled_flag();
 
     // ---- event pump ------------------------------------------------------
     let pump = {
@@ -182,6 +237,7 @@ pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
         let table = Arc::clone(&table);
         let closing = Arc::clone(&closing);
         let dead = Arc::clone(&dead);
+        let stalled = Arc::clone(&stalled);
         let global_inflight = Arc::clone(&ctx.global_inflight);
         std::thread::spawn(move || {
             let mut idle_polls = 0u32;
@@ -222,8 +278,13 @@ pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
                     Err(RecvTimeoutError::Timeout) => {
                         if closing.load(Ordering::SeqCst) {
                             idle_polls += 1;
+                            let grace = if stalled.load(Ordering::SeqCst) {
+                                SHED_DRAIN_POLLS
+                            } else {
+                                DRAIN_GRACE_POLLS
+                            };
                             let drained = lock_unpoisoned(&table).live() == 0;
-                            if drained || idle_polls > DRAIN_GRACE_POLLS {
+                            if drained || idle_polls > grace {
                                 break;
                             }
                         }
@@ -248,14 +309,37 @@ pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
     let mut reader = BufReader::new(stream);
     let mut acc: Vec<u8> = Vec::new();
     let mut greeted = false;
+    let mut shed = false;
     loop {
         if ctx.stop.load(Ordering::SeqCst) || dead.load(Ordering::SeqCst) {
+            break;
+        }
+        if stalled.load(Ordering::SeqCst) {
+            // The event queue overflowed: this connection's consumer is
+            // not keeping up. Shed it like a disconnect — cancel below
+            // reclaims every slot and page it was pinning.
+            shed = true;
+            break;
+        }
+        // Chaos seam: forged transport failure on the read half.
+        if crate::util::failpoint::fired("conn.read") {
             break;
         }
         let line = match read_frame(&mut reader, &mut acc) {
             Ok(ReadOutcome::Frame(line)) => line,
             Ok(ReadOutcome::TimedOut) => continue,
             Ok(ReadOutcome::Eof) => break,
+            Ok(ReadOutcome::Oversized { len }) => {
+                // One oversized line poisons the rest of the stream (its
+                // tail would decode as garbage frames): answer typed and
+                // hang up.
+                send(&writer, &dead, &ServerFrame::Error(WireError::new(
+                    None,
+                    WireErrorKind::BadFrame,
+                    format!("frame exceeds {MAX_FRAME_LEN} bytes ({len} and unterminated)"),
+                )));
+                break;
+            }
             Err(_) => break,
         };
         let frame = match ClientFrame::decode(&line) {
@@ -296,7 +380,7 @@ pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
                 )));
                 break;
             }
-            ClientFrame::Gen(wr) => handle_gen(&ctx, &table, &writer, &dead, &ev_tx, wr),
+            ClientFrame::Gen(wr) => handle_gen(&ctx, &table, &writer, &dead, &sink, wr),
             ClientFrame::Cancel { id } => {
                 // Unknown/finished ids are a no-op, mirroring Engine::cancel.
                 let engine_id = lock_unpoisoned(&table).by_wire.get(&id).copied();
@@ -306,7 +390,18 @@ pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
             }
             ClientFrame::Metrics => match ctx.handle.stats() {
                 Some(ws) => {
-                    send(&writer, &dead, &ServerFrame::Metrics(stats_json(&ws)));
+                    // The wire-served snapshot also carries the live global
+                    // in-flight gauge (the chaos suite asserts it returns
+                    // to zero); the offline `--metrics-json` dump cannot —
+                    // by then the server, and the gauge, are gone.
+                    let mut j = stats_json(&ws);
+                    if let Json::Obj(m) = &mut j {
+                        m.insert(
+                            "inflight".to_string(),
+                            Json::Num(ctx.global_inflight.current() as f64),
+                        );
+                    }
+                    send(&writer, &dead, &ServerFrame::Metrics(j));
                 }
                 None => {
                     send(&writer, &dead, &ServerFrame::Error(WireError::new(
@@ -330,10 +425,18 @@ pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
     // ---- disconnect cleanup ---------------------------------------------
     closing.store(true, Ordering::SeqCst);
     let live: Vec<u64> = lock_unpoisoned(&table).by_engine.keys().copied().collect();
+    if shed {
+        SHED_CONNS.fetch_add(1, Ordering::Relaxed);
+        SHED_REQUESTS.fetch_add(live.len() as u64, Ordering::Relaxed);
+        eprintln!(
+            "[server] shedding {} request(s) from {peer}: event queue stalled",
+            live.len()
+        );
+    }
     for engine_id in live {
         ctx.handle.cancel(engine_id);
     }
-    drop(ev_tx); // pump exits once the router drops the last live sender
+    drop(sink); // pump exits once the router drops the last live sender
     if pump.join().is_err() {
         eprintln!("[server] event pump for {peer} panicked");
     }
@@ -348,7 +451,7 @@ fn handle_gen(
     table: &Mutex<Table>,
     writer: &Mutex<BufWriter<TcpStream>>,
     dead: &AtomicBool,
-    ev_tx: &std::sync::mpsc::Sender<GenEvent>,
+    sink: &EventSink,
     wr: WireRequest,
 ) {
     let wire_id = wr.id;
@@ -393,7 +496,7 @@ fn handle_gen(
     // Insert before submitting: the worker can emit (and the pump route)
     // this request's Queued event before submit() even returns.
     lock_unpoisoned(table).insert(wire_id, engine_id, wr.stream);
-    match ctx.handle.submit(wr.to_gen_request(engine_id), ev_tx.clone()) {
+    match ctx.handle.submit(wr.to_gen_request(engine_id), sink.clone()) {
         Ok(_) => {}
         Err(e) => {
             // Release only on winning the removal: a terminal event that

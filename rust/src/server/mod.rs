@@ -66,10 +66,10 @@ pub mod protocol;
 #[allow(clippy::module_inception)]
 pub mod server;
 
-pub use client::{run_load, Client, GenOutcome, LoadReport};
+pub use client::{generate_with_retry, run_load, Client, GenOutcome, LoadReport};
 pub use conn::stats_json;
 pub use protocol::{
     ClientFrame, ServerFrame, WireError, WireErrorKind, WireEvent, WireRequest, WireResult,
-    PROTOCOL_VERSION,
+    MAX_FRAME_LEN, PROTOCOL_VERSION,
 };
 pub use server::{Server, ServerConfig};

@@ -574,7 +574,11 @@ pub enum ServerFrame {
     Event(WireEvent),
     Error(WireError),
     /// Engine metrics + cache accounting snapshot (see
-    /// [`crate::server::conn`] for the exact shape).
+    /// [`crate::server::conn`] for the exact shape). The `metrics` object
+    /// carries the robustness counters `requests_shed` / `requests_retried`
+    /// / `faults_injected` alongside the lifecycle counters; the top level
+    /// adds a `server` section (`shed_requests`, `shed_conns`) and the live
+    /// global `inflight` gauge.
     Metrics(Json),
     /// Acknowledges a `shutdown` frame before the connection closes.
     Bye,
@@ -618,7 +622,15 @@ impl ServerFrame {
 // ---------------------------------------------------------------------------
 // line reading
 
+/// Hard cap on one frame's length in bytes (1 MiB). A peer that never
+/// sends `\n` must not grow the accumulator without bound: [`read_frame`]
+/// reports [`ReadOutcome::Oversized`] as soon as a line exceeds this, and
+/// the server answers `bad_frame` and closes. Generously above any legal
+/// frame (prompts are bounded by the cache budget long before this).
+pub const MAX_FRAME_LEN: usize = 1 << 20;
+
 /// Outcome of one [`read_frame`] attempt.
+#[derive(Debug)]
 pub enum ReadOutcome {
     /// A complete line (without its terminator).
     Frame(String),
@@ -627,42 +639,74 @@ pub enum ReadOutcome {
     TimedOut,
     /// Clean end of stream.
     Eof,
+    /// The line grew past [`MAX_FRAME_LEN`] before its terminator arrived
+    /// (`len` = bytes seen so far). The accumulator is cleared; the caller
+    /// should answer `bad_frame` and close, since the rest of the
+    /// oversized line would otherwise decode as garbage frames.
+    Oversized { len: usize },
 }
 
 /// Read one newline-terminated frame, accumulating raw bytes in `acc`
 /// across timeouts so neither frames nor UTF-8 sequences are ever split.
 /// (`BufRead::read_lines`-style String APIs can drop partially-read bytes
-/// when a timeout lands inside a multi-byte character — raw `read_until`
-/// keeps them.) A final unterminated line before EOF is returned as a
-/// frame; the following call reports `Eof`.
+/// when a timeout lands inside a multi-byte character — accumulating raw
+/// bytes keeps them.) A final unterminated line before EOF is returned as
+/// a frame; the following call reports `Eof`. Lines longer than
+/// [`MAX_FRAME_LEN`] report [`ReadOutcome::Oversized`] instead of growing
+/// `acc` without bound — the length check runs per chunk (not per line),
+/// so a hostile peer streaming garbage forever costs at most one buffer's
+/// worth of memory past the cap.
 pub fn read_frame(r: &mut impl BufRead, acc: &mut Vec<u8>) -> io::Result<ReadOutcome> {
-    match r.read_until(b'\n', acc) {
-        Ok(0) => {
-            if acc.is_empty() {
-                Ok(ReadOutcome::Eof)
-            } else {
-                let line = take_line(acc)?;
-                Ok(ReadOutcome::Frame(line))
-            }
-        }
-        Ok(_) => {
-            if acc.last() == Some(&b'\n') {
-                acc.pop();
-                if acc.last() == Some(&b'\r') {
-                    acc.pop();
+    loop {
+        // fill_buf/consume instead of read_until: read_until only returns
+        // once it sees the delimiter (or EOF), so a cap could not interrupt
+        // a single call mid-line.
+        let (used, saw_newline) = {
+            let buf = match r.fill_buf() {
+                Ok(b) => b,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Ok(ReadOutcome::TimedOut);
+                }
+                Err(e) => return Err(e),
+            };
+            if buf.is_empty() {
+                // EOF: flush an unterminated final line, else done.
+                if acc.is_empty() {
+                    return Ok(ReadOutcome::Eof);
                 }
                 let line = take_line(acc)?;
-                Ok(ReadOutcome::Frame(line))
-            } else {
-                // read_until returned without a delimiter only at EOF
-                let line = take_line(acc)?;
-                Ok(ReadOutcome::Frame(line))
+                return Ok(ReadOutcome::Frame(line));
             }
+            match buf.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    let (line_part, _) = buf.split_at(pos);
+                    acc.extend_from_slice(line_part);
+                    (pos + 1, true) // consume the delimiter too
+                }
+                None => {
+                    acc.extend_from_slice(buf);
+                    (buf.len(), false)
+                }
+            }
+        };
+        r.consume(used);
+        if acc.len() > MAX_FRAME_LEN {
+            let len = acc.len();
+            acc.clear();
+            return Ok(ReadOutcome::Oversized { len });
         }
-        Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
-            Ok(ReadOutcome::TimedOut)
+        if saw_newline {
+            if acc.last() == Some(&b'\r') {
+                acc.pop();
+            }
+            let line = take_line(acc)?;
+            return Ok(ReadOutcome::Frame(line));
         }
-        Err(e) => Err(e),
     }
 }
 
@@ -874,5 +918,53 @@ mod tests {
             }
         }
         assert_eq!(frames, vec!["{\"op\":\"metrics\"}", "{\"op\":\"bye\"}"]);
+    }
+
+    #[test]
+    fn read_frame_caps_line_length() {
+        use std::io::BufReader;
+        // a newline-free flood twice the cap, then a legal frame: the
+        // reader must bail with Oversized instead of buffering the flood,
+        // and keep working once the caller resynchronizes past the `\n`
+        let mut wire = vec![b'x'; 2 * MAX_FRAME_LEN];
+        wire.push(b'\n');
+        wire.extend_from_slice(b"{\"op\":\"bye\"}\n");
+        let mut r = BufReader::new(&wire[..]);
+        let mut acc = Vec::new();
+        let ReadOutcome::Oversized { len } = read_frame(&mut r, &mut acc).unwrap() else {
+            panic!("oversized line not rejected");
+        };
+        assert!(len > MAX_FRAME_LEN, "reported len {len} not past cap");
+        // the check fires per chunk: only ~one buffer past the cap is held
+        assert!(len <= MAX_FRAME_LEN + 64 * 1024, "accumulated too much: {len}");
+        assert!(acc.is_empty(), "accumulator not cleared after oversize");
+        // skip the remainder of the poisoned line, then read the real frame
+        loop {
+            match read_frame(&mut r, &mut acc).unwrap() {
+                ReadOutcome::Oversized { .. } => continue,
+                ReadOutcome::Frame(l) if l.is_empty() || l.bytes().all(|b| b == b'x') => {
+                    continue; // tail of the flood up to its newline
+                }
+                ReadOutcome::Frame(l) => {
+                    assert_eq!(l, "{\"op\":\"bye\"}");
+                    break;
+                }
+                _ => panic!("lost the stream after oversize"),
+            }
+        }
+    }
+
+    #[test]
+    fn read_frame_cap_allows_maximal_frame() {
+        use std::io::BufReader;
+        // exactly MAX_FRAME_LEN bytes before the newline is still legal
+        let mut wire = vec![b'y'; MAX_FRAME_LEN];
+        wire.push(b'\n');
+        let mut r = BufReader::new(&wire[..]);
+        let mut acc = Vec::new();
+        let ReadOutcome::Frame(l) = read_frame(&mut r, &mut acc).unwrap() else {
+            panic!("maximal frame rejected");
+        };
+        assert_eq!(l.len(), MAX_FRAME_LEN);
     }
 }

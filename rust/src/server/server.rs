@@ -32,11 +32,19 @@ pub struct ServerConfig {
     /// Max in-flight requests across all connections; overflow also maps to
     /// `queue_full` (one retryable kind for every admission level).
     pub max_inflight_global: usize,
+    /// Depth of each connection's bounded event queue. Overflow (a client
+    /// that stops draining) sheds that connection instead of blocking the
+    /// engine worker — see `conn` module docs, "Load shedding".
+    pub event_queue_cap: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_inflight_per_conn: 8, max_inflight_global: 64 }
+        ServerConfig {
+            max_inflight_per_conn: 8,
+            max_inflight_global: 64,
+            event_queue_cap: 256,
+        }
     }
 }
 

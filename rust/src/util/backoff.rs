@@ -1,0 +1,144 @@
+//! Deterministic capped exponential backoff — the one retry policy shared
+//! by every admission-retry path: the TCP client's reconnect/retry driver
+//! (`server/client.rs`, so `repro client` and `run_load` inherit it) and
+//! the in-process `repro serve` submit loop (`main.rs`).
+//!
+//! The schedule is a pure function of the attempt index — `delay(n) =
+//! min(cap, base · 2ⁿ)`, no jitter, no wall-clock reads — so a retry
+//! storm under the chaos suite replays identically and the unit test
+//! below can assert the exact sequence. Callers decide what a delay
+//! *means*: the TCP client sleeps (truncated to the request's remaining
+//! deadline budget), while the in-process loop spends the slot stepping
+//! the engine, which is what actually drains the admission queue there.
+//!
+//! Every delay handed out bumps a process-wide counter surfaced as
+//! `requests_retried` in [`crate::coordinator::Metrics`] and per-request
+//! in `run_load`'s summary.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// A reviewed retry policy: geometric delays from `base`, capped at `cap`,
+/// giving up after `max_retries` re-attempts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BackoffPolicy {
+    pub base: Duration,
+    pub cap: Duration,
+    pub max_retries: u32,
+}
+
+/// The shared admission-retry policy: 5 ms doubling to a 320 ms ceiling,
+/// 24 re-attempts (worst-case sleep budget ≈ 6.4 s — generous next to the
+/// engine's admission-queue drain rate, small next to a request deadline).
+pub const ADMISSION_RETRY: BackoffPolicy = BackoffPolicy {
+    base: Duration::from_millis(5),
+    cap: Duration::from_millis(320),
+    max_retries: 24,
+};
+
+static RETRIES: AtomicU64 = AtomicU64::new(0);
+
+/// Retries performed by this process since startup (all [`Backoff`]
+/// instances), for `Metrics::requests_retried`.
+pub fn retries_total() -> u64 {
+    RETRIES.load(Ordering::Relaxed)
+}
+
+impl BackoffPolicy {
+    /// Delay before 0-based retry `attempt`: `min(cap, base · 2^attempt)`,
+    /// saturating — the schedule is total even for absurd attempt counts.
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let factor = 2u32.saturating_pow(attempt.min(31));
+        self.base.saturating_mul(factor).min(self.cap)
+    }
+}
+
+/// Per-operation retry state over a [`BackoffPolicy`]. Deterministic:
+/// construction plus N calls always yields the same delays.
+pub struct Backoff {
+    policy: BackoffPolicy,
+    attempt: u32,
+}
+
+impl Backoff {
+    pub fn new(policy: BackoffPolicy) -> Backoff {
+        Backoff { policy, attempt: 0 }
+    }
+
+    /// Retries handed out so far.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Claim the next retry slot: its delay, or `None` once the policy's
+    /// budget is exhausted. Each `Some` counts toward [`retries_total`].
+    pub fn next_delay(&mut self) -> Option<Duration> {
+        if self.attempt >= self.policy.max_retries {
+            return None;
+        }
+        let d = self.policy.delay(self.attempt);
+        self.attempt += 1;
+        RETRIES.fetch_add(1, Ordering::Relaxed);
+        Some(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: BackoffPolicy = BackoffPolicy {
+        base: Duration::from_millis(10),
+        cap: Duration::from_millis(100),
+        max_retries: 6,
+    };
+
+    #[test]
+    fn schedule_doubles_then_caps() {
+        let ms: Vec<u128> =
+            (0..6).map(|a| P.delay(a).as_millis()).collect();
+        assert_eq!(ms, [10, 20, 40, 80, 100, 100]);
+        // saturating far past the doubling range, still capped
+        assert_eq!(P.delay(200), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_bounded() {
+        let drain = |mut b: Backoff| {
+            let mut out = Vec::new();
+            while let Some(d) = b.next_delay() {
+                out.push(d);
+            }
+            (out, b.attempts())
+        };
+        let (d1, a1) = drain(Backoff::new(P));
+        let (d2, a2) = drain(Backoff::new(P));
+        assert_eq!(d1, d2, "same policy must produce the same schedule");
+        assert_eq!((a1, a2), (6, 6), "budget is exactly max_retries");
+        assert_eq!(d1.first(), Some(&Duration::from_millis(10)));
+        assert_eq!(d1.last(), Some(&Duration::from_millis(100)));
+    }
+
+    #[test]
+    fn exhausted_backoff_stays_exhausted() {
+        let mut b = Backoff::new(BackoffPolicy {
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(1),
+            max_retries: 1,
+        });
+        assert!(b.next_delay().is_some());
+        assert!(b.next_delay().is_none());
+        assert!(b.next_delay().is_none());
+    }
+
+    #[test]
+    fn shared_policy_is_sane() {
+        assert!(ADMISSION_RETRY.base < ADMISSION_RETRY.cap);
+        assert!(ADMISSION_RETRY.max_retries >= 8);
+        // worst-case total sleep stays under 10 s so a retry storm cannot
+        // wedge a load generator
+        let total: Duration =
+            (0..ADMISSION_RETRY.max_retries).map(|a| ADMISSION_RETRY.delay(a)).sum();
+        assert!(total < Duration::from_secs(10), "worst case {total:?}");
+    }
+}

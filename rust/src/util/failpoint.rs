@@ -1,0 +1,587 @@
+//! Deterministic fault injection: named failpoint sites for the serving
+//! stack's chaos suite (`tests/chaos_tests.rs`).
+//!
+//! A **site** is a named seam in fallible code — `failpoint!("pool.alloc")`
+//! — that normally does nothing. When the process is *armed* (via the
+//! `PALLAS_FAILPOINTS` environment variable or [`configure`]) a site can
+//! inject an error or a delay on a **deterministic schedule**. The disabled
+//! cost is a single relaxed atomic load per site ([`armed`]); the armed
+//! path takes a global registry lock, which is fine because arming only
+//! happens in tests and operator-driven fault drills.
+//!
+//! # DSL
+//!
+//! `PALLAS_FAILPOINTS` (and [`configure`]) take a comma-separated list of
+//! `site=action[:schedule]` entries:
+//!
+//! ```text
+//! PALLAS_FAILPOINTS='pool.alloc=err(3),conn.write=delay(10ms):every(2)'
+//! ```
+//!
+//! Actions:
+//!   * `err` — the site injects a fault; Result-returning sites map it to
+//!     their own error type via the `failpoint!` closure form, branch sites
+//!     ([`fired`]) take their failure branch.
+//!   * `err(N)` — shorthand for `err:first(N)`.
+//!   * `delay(10ms)` / `delay(2s)` / `delay(15)` (ms) — the site sleeps,
+//!     then proceeds normally. Simulates stalls (a slow peer, a blocked
+//!     writer) rather than failures.
+//!
+//! Schedules (evaluated against the site's *hit counter*, never the
+//! wall clock, so the same workload injects the same fault sequence):
+//!   * `always` (default) — every hit fires.
+//!   * `once` — only the first hit fires.
+//!   * `nth(N)` — exactly the Nth hit fires (1-based).
+//!   * `every(N)` — hits N, 2N, 3N, … fire.
+//!   * `first(K)` — hits 1..=K fire.
+//!   * `prob(P)` / `prob(P,SEED)` — hit k fires iff the k-th draw of a
+//!     [`Rng`] seeded with `SEED` (default 0x5EED) is below `P`. The
+//!     decision depends only on (seed, hit index), so same-seed reruns of
+//!     a deterministic workload fire on the identical hit set.
+//!
+//! # Site catalogue and the self-healing contract
+//!
+//! Sites are wired into every layer's fallible seam; `repro lint` keeps
+//! the names unique and bans sites in `compress/` + `linalg/` (injected
+//! faults in the offline pipeline would break its determinism contract):
+//!
+//! | site            | seam                                             |
+//! |-----------------|--------------------------------------------------|
+//! | `pool.alloc`    | cache page allocation (mid-token ⇒ rollback)     |
+//! | `cache.append`  | whole-token KV append admission                  |
+//! | `cache.stage`   | full staging gather (fails only that request)    |
+//! | `router.submit` | admission ⇒ injected `queue_full` (retryable)    |
+//! | `router.ack`    | submit ack dropped ⇒ typed shutdown rejection    |
+//! | `router.event`  | non-terminal event delivery dropped              |
+//! | `conn.write`    | server frame write fails (err) or stalls (delay) |
+//! | `conn.read`     | server-side read fails mid-frame                 |
+//! | `client.send`   | client frame write fails                         |
+//! | `client.recv`   | client frame read fails                          |
+//!
+//! The healing layers these sites exercise: the client retries retryable
+//! rejections and pre-token transport errors with deterministic capped
+//! exponential backoff (`util/backoff.rs`), the server bounds each
+//! connection's event queue and sheds (cancels + reclaims) stalled
+//! consumers, and the engine fails individual requests — never the whole
+//! worker — on append/stage faults. Terminal events are **never** injected
+//! away at the router: exactly-once terminal delivery is the invariant the
+//! chaos suite asserts after every schedule.
+//!
+//! # Writing a chaos schedule
+//!
+//! A schedule is just a named spec plus assertions (see
+//! `tests/chaos_tests.rs`): serialize on the suite's gate (the registry is
+//! process-global), `reset()`, `configure("site=action:schedule")`, drive
+//! load, then assert zero leaks and exactly-once terminals. Capture
+//! [`injected_total`] / [`take_fired_log`] *before* the final `reset()` if
+//! the schedule asserts on the injected sequence.
+
+use super::rng::Rng;
+use super::sync::lock_unpoisoned;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Environment variable consulted by [`init_from_env`] (done once at CLI
+/// startup; library users call [`configure`] directly).
+pub const ENV_VAR: &str = "PALLAS_FAILPOINTS";
+
+/// The fired log stops growing past this many entries so an `always`
+/// schedule on a hot site cannot balloon memory; [`injected_total`] keeps
+/// counting regardless.
+const FIRED_LOG_CAP: usize = 4096;
+
+/// What an armed site does when its schedule fires.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Inject a fault: [`hit`] returns `Some(Fault)` and the site maps it
+    /// to its own error type (or takes its failure branch via [`fired`]).
+    Err,
+    /// Sleep for the given duration, then proceed normally.
+    Delay(Duration),
+}
+
+/// When an armed site fires, as a pure function of its hit counter (and,
+/// for `Prob`, a seeded [`Rng`] draw per hit) — never the wall clock.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Schedule {
+    Always,
+    Once,
+    /// Exactly the Nth hit (1-based).
+    Nth(u64),
+    /// Hits N, 2N, 3N, …
+    Every(u64),
+    /// Hits 1..=K.
+    First(u64),
+    /// Hit k fires iff the k-th draw of `Rng::new(seed)` is `< p`.
+    Prob { p: f32, seed: u64 },
+}
+
+/// Evidence handed to a firing site: which site, and which hit fired.
+#[derive(Clone, Debug)]
+pub struct Fault {
+    pub site: &'static str,
+    pub hit: u64,
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "injected fault at {} (hit {})", self.site, self.hit)
+    }
+}
+
+struct Site {
+    name: String,
+    action: Action,
+    schedule: Schedule,
+    /// Evaluations of this site since it was configured.
+    hits: u64,
+    /// How many of those hits fired.
+    fired: u64,
+    /// Draw source for `Schedule::Prob`, advanced once per hit.
+    rng: Rng,
+}
+
+// All cross-thread coordination goes through REGISTRY's mutex; the atomics
+// are monotone counters plus the advisory fast-path flag, so Relaxed is
+// enough everywhere in this module.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+static REGISTRY: Mutex<Vec<Site>> = Mutex::new(Vec::new());
+static FIRED_LOG: Mutex<Vec<(&'static str, u64)>> = Mutex::new(Vec::new());
+
+/// Fast-path guard: one relaxed atomic load. `false` (the default, and the
+/// state after [`reset`]) means every `failpoint!` site is a no-op.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Evaluate a site against the armed configuration. Returns `Some(Fault)`
+/// when an `err`-action site fires; a firing `delay` site sleeps here (with
+/// the registry lock released) and returns `None`. Unconfigured sites
+/// return `None` without counting.
+pub fn hit(name: &'static str) -> Option<Fault> {
+    let delay;
+    {
+        let mut reg = lock_unpoisoned(&REGISTRY);
+        let site = reg.iter_mut().find(|s| s.name == name)?;
+        site.hits += 1;
+        let hit = site.hits;
+        let fire = match &site.schedule {
+            Schedule::Always => true,
+            Schedule::Once => hit == 1,
+            Schedule::Nth(n) => hit == *n,
+            Schedule::Every(n) => *n > 0 && hit % *n == 0,
+            Schedule::First(k) => hit <= *k,
+            Schedule::Prob { p, .. } => site.rng.uniform() < *p,
+        };
+        if !fire {
+            return None;
+        }
+        site.fired += 1;
+        let action = site.action.clone();
+        INJECTED.fetch_add(1, Ordering::Relaxed);
+        let mut log = lock_unpoisoned(&FIRED_LOG);
+        if log.len() < FIRED_LOG_CAP {
+            log.push((name, hit));
+        }
+        match action {
+            Action::Err => return Some(Fault { site: name, hit }),
+            Action::Delay(d) => delay = d,
+        }
+    }
+    // Sleep outside the lock so a stalling site doesn't serialize every
+    // other site in the process.
+    std::thread::sleep(delay);
+    None
+}
+
+/// Branch form for sites that have no error value to construct: `true` iff
+/// an armed `err`-action schedule fired. Delay faults sleep inside and
+/// return `false` (the site proceeds, slowly).
+pub fn fired(name: &'static str) -> bool {
+    armed() && hit(name).is_some()
+}
+
+/// Replace the whole configuration with the parsed `spec` (see the module
+/// docs for the DSL) and arm iff it names at least one site. Counters from
+/// the previous configuration are kept; use [`reset`] between test runs.
+pub fn configure(spec: &str) -> Result<(), String> {
+    let sites = parse_spec(spec)?;
+    let mut reg = lock_unpoisoned(&REGISTRY);
+    let arm = !sites.is_empty();
+    *reg = sites;
+    ARMED.store(arm, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Programmatic single-site arm (tests that want no DSL round-trip).
+/// Replaces the site if it is already configured.
+pub fn arm_site(name: &str, action: Action, schedule: Schedule) {
+    let mut reg = lock_unpoisoned(&REGISTRY);
+    reg.retain(|s| s.name != name);
+    reg.push(new_site(name.to_string(), action, schedule));
+    ARMED.store(true, Ordering::Relaxed);
+}
+
+/// Disarm everything and zero the counters and the fired log. Chaos tests
+/// call this before configuring and again before their quiescence checks
+/// so observer traffic runs fault-free.
+pub fn reset() {
+    let mut reg = lock_unpoisoned(&REGISTRY);
+    ARMED.store(false, Ordering::Relaxed);
+    reg.clear();
+    INJECTED.store(0, Ordering::Relaxed);
+    lock_unpoisoned(&FIRED_LOG).clear();
+}
+
+/// Faults injected (fires of `err` *and* `delay` sites) since the last
+/// [`reset`]. Surfaced as `faults_injected` in [`crate::coordinator::Metrics`].
+pub fn injected_total() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+/// How many times `name` has fired since the last [`reset`] (0 for
+/// unconfigured sites).
+pub fn site_fired(name: &str) -> u64 {
+    let reg = lock_unpoisoned(&REGISTRY);
+    reg.iter().find(|s| s.name == name).map_or(0, |s| s.fired)
+}
+
+/// Drain the fired log: `(site, hit index)` in fire order, capped at
+/// [`FIRED_LOG_CAP`] entries. The chaos suite compares two same-seed runs'
+/// logs to prove schedule determinism.
+pub fn take_fired_log() -> Vec<(&'static str, u64)> {
+    std::mem::take(&mut *lock_unpoisoned(&FIRED_LOG))
+}
+
+/// Arm from [`ENV_VAR`] if it is set and non-empty. Called once from the
+/// CLI entry point; absent/empty means stay disarmed.
+pub fn init_from_env() -> Result<(), String> {
+    match std::env::var(ENV_VAR) {
+        Ok(spec) if !spec.trim().is_empty() => configure(&spec),
+        _ => Ok(()),
+    }
+}
+
+fn new_site(name: String, action: Action, schedule: Schedule) -> Site {
+    let seed = match schedule {
+        Schedule::Prob { seed, .. } => seed,
+        _ => 0x5EED,
+    };
+    Site { name, action, schedule, hits: 0, fired: 0, rng: Rng::new(seed) }
+}
+
+// ----------------------------------------------------------------------
+// DSL parser
+
+fn parse_spec(spec: &str) -> Result<Vec<Site>, String> {
+    let mut sites: Vec<Site> = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let (name, rest) = entry
+            .split_once('=')
+            .ok_or_else(|| format!("failpoint entry `{entry}` is missing `=`"))?;
+        let name = name.trim();
+        if name.is_empty() {
+            return Err(format!("failpoint entry `{entry}` has an empty site name"));
+        }
+        if sites.iter().any(|s| s.name == name) {
+            return Err(format!("site `{name}` configured twice"));
+        }
+        let (action_s, sched_s) = match rest.split_once(':') {
+            Some((a, s)) => (a.trim(), Some(s.trim())),
+            None => (rest.trim(), None),
+        };
+        let (action, implied) = parse_action(action_s)?;
+        let schedule = match (implied, sched_s) {
+            (Some(_), Some(_)) => {
+                return Err(format!(
+                    "site `{name}`: `err(N)` already implies `first(N)`; drop the `:{}`",
+                    sched_s.unwrap_or_default()
+                ));
+            }
+            (Some(s), None) => s,
+            (None, Some(s)) => parse_schedule(s)?,
+            (None, None) => Schedule::Always,
+        };
+        sites.push(new_site(name.to_string(), action, schedule));
+    }
+    Ok(sites)
+}
+
+/// Split `name(args)` into `(name, Some(args))`, or `(name, None)` for a
+/// bare word.
+fn split_call(s: &str) -> Result<(&str, Option<&str>), String> {
+    match s.split_once('(') {
+        None => Ok((s, None)),
+        Some((head, tail)) => {
+            let args = tail
+                .strip_suffix(')')
+                .ok_or_else(|| format!("`{s}` is missing a closing `)`"))?;
+            Ok((head.trim(), Some(args.trim())))
+        }
+    }
+}
+
+/// Parse an action; `err(N)` returns the implied `first(N)` schedule.
+fn parse_action(s: &str) -> Result<(Action, Option<Schedule>), String> {
+    let (head, args) = split_call(s)?;
+    match (head, args) {
+        ("err", None) => Ok((Action::Err, None)),
+        ("err", Some(n)) => {
+            let k = parse_u64(n, "err count")?;
+            Ok((Action::Err, Some(Schedule::First(k))))
+        }
+        ("delay", Some(d)) => Ok((Action::Delay(parse_duration(d)?), None)),
+        ("delay", None) => Err("`delay` needs a duration, e.g. delay(10ms)".to_string()),
+        _ => Err(format!("unknown action `{s}` (expected err, err(N), or delay(DUR))")),
+    }
+}
+
+fn parse_schedule(s: &str) -> Result<Schedule, String> {
+    let (head, args) = split_call(s)?;
+    match (head, args) {
+        ("always", None) => Ok(Schedule::Always),
+        ("once", None) => Ok(Schedule::Once),
+        ("nth", Some(n)) => Ok(Schedule::Nth(parse_u64(n, "nth")?)),
+        ("every", Some(n)) => {
+            let n = parse_u64(n, "every")?;
+            if n == 0 {
+                return Err("every(0) would never fire".to_string());
+            }
+            Ok(Schedule::Every(n))
+        }
+        ("first", Some(k)) => Ok(Schedule::First(parse_u64(k, "first")?)),
+        ("prob", Some(args)) => {
+            let (p_s, seed_s) = match args.split_once(',') {
+                Some((p, s)) => (p.trim(), Some(s.trim())),
+                None => (args, None),
+            };
+            let p: f32 = p_s
+                .parse()
+                .map_err(|_| format!("prob `{p_s}` is not a number"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("prob {p} outside [0,1]"));
+            }
+            let seed = match seed_s {
+                Some(s) => parse_u64(s, "prob seed")?,
+                None => 0x5EED,
+            };
+            Ok(Schedule::Prob { p, seed })
+        }
+        _ => Err(format!(
+            "unknown schedule `{s}` (expected always, once, nth(N), every(N), first(K), prob(P[,SEED]))"
+        )),
+    }
+}
+
+fn parse_u64(s: &str, what: &str) -> Result<u64, String> {
+    s.parse().map_err(|_| format!("{what} `{s}` is not a non-negative integer"))
+}
+
+/// `10ms`, `2s`, or a bare integer (milliseconds).
+fn parse_duration(s: &str) -> Result<Duration, String> {
+    if let Some(ms) = s.strip_suffix("ms") {
+        return Ok(Duration::from_millis(parse_u64(ms.trim(), "delay ms")?));
+    }
+    if let Some(secs) = s.strip_suffix('s') {
+        return Ok(Duration::from_secs(parse_u64(secs.trim(), "delay s")?));
+    }
+    Ok(Duration::from_millis(parse_u64(s, "delay")?))
+}
+
+/// Inject a fault at a named site.
+///
+/// * `failpoint!("site")` — evaluate the site for its side effects only:
+///   a firing `delay` action sleeps; a firing `err` action counts but has
+///   nothing to return into. Use at seams where a stall is the interesting
+///   fault.
+/// * `failpoint!("site", |fault| expr)` — when the site fires with an
+///   `err` action, **return** `expr` from the enclosing function. The
+///   closure maps the [`Fault`] evidence into the function's own error
+///   type:
+///
+/// ```ignore
+/// pub fn alloc(&mut self) -> Result<BlockId> {
+///     crate::failpoint!("pool.alloc", |f| Err(anyhow!("{f}: forced exhaustion")));
+///     // ... real allocation ...
+/// }
+/// ```
+///
+/// Disabled cost is the single relaxed load of [`armed`].
+#[macro_export]
+macro_rules! failpoint {
+    ($name:literal) => {
+        if $crate::util::failpoint::armed() {
+            let _ = $crate::util::failpoint::hit($name);
+        }
+    };
+    ($name:literal, $on_fault:expr) => {
+        if $crate::util::failpoint::armed() {
+            if let Some(fault) = $crate::util::failpoint::hit($name) {
+                let on_fault = $on_fault;
+                return on_fault(fault);
+            }
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex as StdMutex;
+
+    /// The registry is process-global; every test here serializes on this
+    /// gate and leaves the process disarmed.
+    static GATE: StdMutex<()> = StdMutex::new(());
+
+    struct Disarm;
+    impl Drop for Disarm {
+        fn drop(&mut self) {
+            reset();
+        }
+    }
+
+    fn with_registry(f: impl FnOnce()) {
+        let _gate = lock_unpoisoned(&GATE);
+        reset();
+        let _disarm = Disarm;
+        f();
+    }
+
+    #[test]
+    fn disabled_sites_are_inert() {
+        with_registry(|| {
+            assert!(!armed());
+            assert!(hit("pool.alloc").is_none());
+            assert!(!fired("pool.alloc"));
+            assert_eq!(injected_total(), 0);
+        });
+    }
+
+    #[test]
+    fn schedules_fire_on_the_documented_hits() {
+        with_registry(|| {
+            configure("a=err:once,b=err:nth(3),c=err:every(2),d=err(2)").unwrap();
+            let pattern =
+                |name| (1..=6).map(|_| hit(name).is_some()).collect::<Vec<bool>>();
+            assert_eq!(pattern("a"), [true, false, false, false, false, false]);
+            assert_eq!(pattern("b"), [false, false, true, false, false, false]);
+            assert_eq!(pattern("c"), [false, true, false, true, false, true]);
+            assert_eq!(pattern("d"), [true, true, false, false, false, false]);
+            assert_eq!(injected_total(), 1 + 1 + 3 + 2);
+        });
+    }
+
+    #[test]
+    fn prob_schedule_is_seed_deterministic() {
+        with_registry(|| {
+            let run = || {
+                configure("p=err:prob(0.3,42)").unwrap();
+                let fires: Vec<bool> = (0..64).map(|_| hit("p").is_some()).collect();
+                let log = take_fired_log();
+                reset();
+                (fires, log)
+            };
+            let (f1, l1) = run();
+            let (f2, l2) = run();
+            assert_eq!(f1, f2, "same seed must fire on the same hit set");
+            assert_eq!(l1, l2);
+            assert!(f1.iter().any(|&b| b), "p=0.3 over 64 hits should fire");
+            assert!(!f1.iter().all(|&b| b), "p=0.3 over 64 hits should also skip");
+        });
+    }
+
+    #[test]
+    fn fault_evidence_names_site_and_hit() {
+        with_registry(|| {
+            configure("s=err:nth(2)").unwrap();
+            assert!(hit("s").is_none());
+            let f = hit("s").expect("second hit fires");
+            assert_eq!(f.site, "s");
+            assert_eq!(f.hit, 2);
+            assert_eq!(f.to_string(), "injected fault at s (hit 2)");
+            assert_eq!(site_fired("s"), 1);
+        });
+    }
+
+    #[test]
+    fn delay_action_returns_none_and_counts() {
+        with_registry(|| {
+            configure("d=delay(1ms):once").unwrap();
+            assert!(hit("d").is_none(), "delay faults sleep, they do not error");
+            assert!(!fired("d"));
+            assert_eq!(injected_total(), 1);
+        });
+    }
+
+    #[test]
+    fn macro_error_form_returns_from_the_enclosing_function() {
+        fn guarded() -> Result<u32, String> {
+            crate::failpoint!("macro.site", |f: Fault| Err(format!("{f}")));
+            Ok(7)
+        }
+        with_registry(|| {
+            assert_eq!(guarded(), Ok(7), "disarmed sites pass through");
+            configure("macro.site=err:once").unwrap();
+            assert_eq!(guarded(), Err("injected fault at macro.site (hit 1)".to_string()));
+            assert_eq!(guarded(), Ok(7), "once-schedule is spent");
+        });
+    }
+
+    #[test]
+    fn dsl_rejects_malformed_specs() {
+        with_registry(|| {
+            for bad in [
+                "noequals",
+                "s=",
+                "s=err(x)",
+                "s=delay",
+                "s=delay(10ms",
+                "s=err:every(0)",
+                "s=err:prob(1.5)",
+                "s=err(2):every(3)",
+                "s=err,s=err",
+                "s=frobnicate",
+                "s=err:sometimes",
+            ] {
+                assert!(configure(bad).is_err(), "spec `{bad}` should be rejected");
+            }
+            assert!(!armed(), "a rejected spec must not arm");
+        });
+    }
+
+    #[test]
+    fn dsl_duration_forms() {
+        assert_eq!(parse_duration("10ms"), Ok(Duration::from_millis(10)));
+        assert_eq!(parse_duration("2s"), Ok(Duration::from_secs(2)));
+        assert_eq!(parse_duration("15"), Ok(Duration::from_millis(15)));
+        assert!(parse_duration("fast").is_err());
+    }
+
+    #[test]
+    fn reset_disarms_and_zeroes() {
+        with_registry(|| {
+            configure("s=err").unwrap();
+            assert!(fired("s"));
+            reset();
+            assert!(!armed());
+            assert_eq!(injected_total(), 0);
+            assert!(take_fired_log().is_empty());
+            assert!(hit("s").is_none());
+        });
+    }
+
+    #[test]
+    fn arm_site_replaces_existing_configuration() {
+        with_registry(|| {
+            arm_site("s", Action::Err, Schedule::Once);
+            assert!(fired("s"));
+            assert!(!fired("s"), "once is spent");
+            arm_site("s", Action::Err, Schedule::Always);
+            assert!(fired("s"), "re-arming resets the site's counters");
+        });
+    }
+}

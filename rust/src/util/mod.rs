@@ -3,12 +3,16 @@
 //! shared with python, CLI parsing, a criterion-style bench harness, a
 //! tiny property-testing helper, the scoped-thread work pool the offline
 //! compression pipeline fans out on, the runtime CPU-feature dispatch
-//! behind the SIMD micro-kernels, and the panic-robust sync helpers
+//! behind the SIMD micro-kernels, the panic-robust sync helpers
 //! (poison-tolerant locking, the saturating in-flight gauge) the serving
-//! stack leans on.
+//! stack leans on, and the robustness substrate: deterministic fault
+//! injection (`failpoint`) plus the shared capped-exponential retry
+//! policy (`backoff`).
 
+pub mod backoff;
 pub mod bench;
 pub mod cli;
+pub mod failpoint;
 pub mod json;
 pub mod pool;
 pub mod prop;

@@ -1,0 +1,729 @@
+//! Seeded chaos suite for the serving stack: each test arms one named
+//! deterministic fault schedule (`util/failpoint`), drives load through
+//! the TCP wire path, then disarms and asserts the self-healing
+//! invariants the stack promises:
+//!
+//!   * the server and coordinator join cleanly (no panic, no wedge);
+//!   * zero leaks — `live_seqs == 0`, `blocks_in_use == 0`, and the
+//!     global in-flight gauge back to 0 (all read off the `metrics`
+//!     control frame);
+//!   * every submitted request reaches a terminal state **exactly once**
+//!     (a rejection, a terminal event, or a transport error — never
+//!     silence, never a duplicate);
+//!   * same-seed reruns inject the identical fault sequence (schedules
+//!     are functions of hit counters, never the wall clock).
+//!
+//! The failpoint registry is process-global, so every test serializes on
+//! [`GATE`] and leaves the process disarmed. Needs artifacts/ and skips
+//! gracefully without it — same convention as server_wire_tests.rs. The
+//! `chaos_smoke_*` subset is fast enough for scripts/check.sh.
+
+use recalkv::artifacts::Manifest;
+use recalkv::coordinator::{Coordinator, Engine, EngineConfig};
+use recalkv::server::{
+    generate_with_retry, run_load, Client, ClientFrame, GenOutcome, Server, ServerConfig,
+    ServerFrame, WireErrorKind, WireEvent, WireRequest, MAX_FRAME_LEN,
+};
+use recalkv::util::backoff::ADMISSION_RETRY;
+use recalkv::util::failpoint;
+use recalkv::util::json::Json;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+const PROMPT: &str = "the dog barks . the cat sleeps . ";
+
+/// The failpoint registry is process-global and cargo runs tests on
+/// parallel threads: every chaos test serializes here and disarms on the
+/// way out (even on panic, via [`Disarm`]).
+static GATE: Mutex<()> = Mutex::new(());
+
+struct Disarm;
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        failpoint::reset();
+    }
+}
+
+fn serialized(f: impl FnOnce()) {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    failpoint::reset();
+    let _disarm = Disarm;
+    f();
+}
+
+fn manifest_dir() -> Option<PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("[skip] artifacts/ not built");
+        return None;
+    }
+    Some(dir)
+}
+
+fn spawn_server(
+    dir: PathBuf,
+    ecfg: EngineConfig,
+    scfg: ServerConfig,
+) -> (String, Coordinator, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let coord = Coordinator::spawn(move || {
+        let man = Manifest::load(&dir)?;
+        let rt = recalkv::runtime::Runtime::cpu()?;
+        let model = man.model("tiny-mha")?;
+        Engine::new(&rt, model, model.variant("recal@50")?, ecfg)
+    });
+    let server = Server::bind("127.0.0.1:0", coord.handle(), scfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let worker = std::thread::spawn(move || server.run());
+    (addr, coord, worker)
+}
+
+/// Clean join: must only be called with the failpoints already disarmed
+/// (the shutdown handshake rides the same client/conn seams).
+fn stop_server(addr: &str, coord: Coordinator, worker: std::thread::JoinHandle<anyhow::Result<()>>) {
+    assert!(!failpoint::armed(), "disarm before the shutdown handshake");
+    let mut c = Client::connect(addr).expect("connect for shutdown");
+    c.shutdown_server().expect("shutdown handshake");
+    worker.join().expect("server thread panicked").expect("server run failed");
+    coord.shutdown().expect("coordinator shutdown");
+}
+
+fn num(j: &Json, path: &[&str]) -> f64 {
+    let mut cur = j;
+    for k in path {
+        cur = cur.req(k);
+    }
+    cur.as_f64().unwrap_or_else(|| panic!("{path:?} is not a number in {j}", j = cur))
+}
+
+/// Poll the `metrics` control frame until the engine is idle again
+/// (`live_seqs == 0` and the global in-flight gauge at 0). Call only
+/// after disarming — the observer connections ride the chaos seams too.
+fn await_quiescence(addr: &str, what: &str) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let mut c = Client::connect(addr).expect("metrics connection");
+        let j = c.metrics().expect("metrics frame");
+        if num(&j, &["cache", "live_seqs"]) == 0.0 && num(&j, &["inflight"]) == 0.0 {
+            return j;
+        }
+        assert!(Instant::now() < deadline, "`{what}` did not quiesce: {j}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn assert_leak_free(j: &Json, what: &str) {
+    assert_eq!(num(j, &["cache", "live_seqs"]), 0.0, "`{what}` leaked sequences");
+    assert_eq!(num(j, &["cache", "blocks_in_use"]), 0.0, "`{what}` leaked cache blocks");
+    assert_eq!(num(j, &["inflight"]), 0.0, "`{what}` leaked in-flight slots");
+}
+
+/// Boot a server, arm `spec`, run `drive`, then disarm and assert the
+/// no-leak invariant before a clean shutdown. Returns how many faults the
+/// schedule injected while `drive` ran (`None` = skipped, no artifacts).
+fn run_schedule(
+    spec: &str,
+    ecfg: EngineConfig,
+    scfg: ServerConfig,
+    drive: impl FnOnce(&str),
+) -> Option<u64> {
+    let dir = manifest_dir()?;
+    let (addr, coord, worker) = spawn_server(dir, ecfg, scfg);
+    failpoint::configure(spec).expect("chaos spec parses");
+    drive(&addr);
+    let injected = failpoint::injected_total();
+    failpoint::reset();
+    let j = await_quiescence(&addr, spec);
+    assert_leak_free(&j, spec);
+    stop_server(&addr, coord, worker);
+    Some(injected)
+}
+
+fn last_event(events: &[(WireEvent, Instant)]) -> &WireEvent {
+    let (ev, _) = events.last().expect("session delivered no events");
+    ev
+}
+
+fn assert_exactly_one_terminal(events: &[(WireEvent, Instant)], what: &str) {
+    let terminals = events.iter().filter(|(ev, _)| ev.is_terminal()).count();
+    assert_eq!(terminals, 1, "`{what}`: want exactly one terminal event, got {terminals}");
+}
+
+// ---------------------------------------------------------------------------
+// engine-side faults: the worker survives, only the owning request fails
+
+#[test]
+fn chaos_pool_alloc_nth_fails_only_the_owning_request() {
+    serialized(|| {
+        let injected = run_schedule(
+            "pool.alloc=err:nth(3)",
+            EngineConfig::default(),
+            ServerConfig::default(),
+            |addr| {
+                let mut c = Client::connect(addr).expect("connect");
+                match c.generate(&WireRequest::new(1, PROMPT, 64)).expect("transport held") {
+                    GenOutcome::Done { events } => {
+                        assert!(
+                            matches!(last_event(&events), WireEvent::Failed(_)),
+                            "a forced pool exhaustion must fail the request, got {:?}",
+                            last_event(&events)
+                        );
+                        assert_exactly_one_terminal(&events, "pool.alloc nth(3)");
+                    }
+                    GenOutcome::Rejected(e) => panic!("unexpected rejection: {e:?}"),
+                }
+            },
+        );
+        if let Some(injected) = injected {
+            assert_eq!(injected, 1, "nth(3) fires exactly once");
+        }
+    });
+}
+
+#[test]
+fn chaos_pool_alloc_every_under_concurrent_load() {
+    serialized(|| {
+        let _ = run_schedule(
+            "pool.alloc=err:every(5)",
+            EngineConfig::default(),
+            ServerConfig::default(),
+            |addr| {
+                let report = run_load(addr, 2, 3, &[PROMPT.to_string()], 16)
+                    .expect("run_load survives engine-side faults");
+                assert_eq!(report.requests, 6, "every request must terminate: {}", report.summary());
+                assert_eq!(
+                    report.completed + report.failed + report.rejected,
+                    6,
+                    "requests vanished: {}",
+                    report.summary()
+                );
+                assert!(
+                    report.failed >= 1,
+                    "every(5) across 6 allocating requests should fail at least one: {}",
+                    report.summary()
+                );
+            },
+        );
+    });
+}
+
+#[test]
+fn chaos_cache_append_once_fails_request_not_worker() {
+    serialized(|| {
+        let injected = run_schedule(
+            "cache.append=err:once",
+            EngineConfig::default(),
+            ServerConfig::default(),
+            |addr| {
+                let mut c = Client::connect(addr).expect("connect");
+                match c.generate(&WireRequest::new(1, PROMPT, 16)).expect("transport held") {
+                    GenOutcome::Done { events } => {
+                        assert!(
+                            matches!(last_event(&events), WireEvent::Failed(_)),
+                            "append rejection must fail the request, got {:?}",
+                            last_event(&events)
+                        );
+                        assert_exactly_one_terminal(&events, "cache.append once");
+                    }
+                    GenOutcome::Rejected(e) => panic!("unexpected rejection: {e:?}"),
+                }
+                // the worker survived: a fault-free request completes
+                match c.generate(&WireRequest::new(2, PROMPT, 4)).expect("transport held") {
+                    GenOutcome::Done { events } => assert!(
+                        matches!(last_event(&events), WireEvent::Finished(_)),
+                        "worker should serve cleanly after the fault, got {:?}",
+                        last_event(&events)
+                    ),
+                    GenOutcome::Rejected(e) => panic!("post-fault request rejected: {e:?}"),
+                }
+            },
+        );
+        if let Some(injected) = injected {
+            assert_eq!(injected, 1, "once fires exactly once");
+        }
+    });
+}
+
+#[test]
+fn chaos_cache_stage_nth_fails_request_not_worker() {
+    serialized(|| {
+        let _ = run_schedule(
+            "cache.stage=err:nth(2)",
+            EngineConfig::default(),
+            ServerConfig::default(),
+            |addr| {
+                let mut c = Client::connect(addr).expect("connect");
+                match c.generate(&WireRequest::new(1, PROMPT, 16)).expect("transport held") {
+                    GenOutcome::Done { events } => {
+                        assert!(
+                            matches!(last_event(&events), WireEvent::Failed(_)),
+                            "stage rejection must fail the request, got {:?}",
+                            last_event(&events)
+                        );
+                        assert_exactly_one_terminal(&events, "cache.stage nth(2)");
+                    }
+                    GenOutcome::Rejected(e) => panic!("unexpected rejection: {e:?}"),
+                }
+            },
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// router faults: typed rejections, retry healing, exactly-once terminals
+
+#[test]
+fn chaos_smoke_submit_retry_storm() {
+    serialized(|| {
+        let injected = run_schedule(
+            "router.submit=err:first(5)",
+            EngineConfig::default(),
+            ServerConfig::default(),
+            |addr| {
+                let mut slot = Some(Client::connect(addr).expect("connect"));
+                let mut total_retries = 0u32;
+                for r in 0..3u64 {
+                    let (outcome, retries) = generate_with_retry(
+                        addr,
+                        &mut slot,
+                        &WireRequest::new(r + 1, PROMPT, 4),
+                        &ADMISSION_RETRY,
+                    )
+                    .expect("retry loop");
+                    total_retries += retries;
+                    match outcome {
+                        GenOutcome::Done { events } => assert!(
+                            matches!(last_event(&events), WireEvent::Finished(_)),
+                            "request {r} did not finish: {:?}",
+                            last_event(&events)
+                        ),
+                        GenOutcome::Rejected(e) => {
+                            panic!("request {r} rejected through the retry budget: {e:?}")
+                        }
+                    }
+                }
+                assert_eq!(total_retries, 5, "first(5) forces exactly five retries");
+                // the metrics frame carries the robustness counters while armed
+                let mut obs = Client::connect(addr).expect("observer");
+                let j = obs.metrics().expect("metrics");
+                assert_eq!(num(&j, &["metrics", "faults_injected"]), 5.0);
+                assert!(num(&j, &["metrics", "requests_retried"]) >= 5.0);
+            },
+        );
+        if let Some(injected) = injected {
+            assert_eq!(injected, 5);
+        }
+    });
+}
+
+#[test]
+fn chaos_run_load_absorbs_injected_queue_full_storm() {
+    serialized(|| {
+        let _ = run_schedule(
+            "router.submit=err:first(6)",
+            EngineConfig::default(),
+            ServerConfig::default(),
+            |addr| {
+                let report = run_load(addr, 3, 4, &[PROMPT.to_string()], 8)
+                    .expect("run_load survives the storm");
+                assert_eq!(report.completed, 12, "storm left requests behind: {}", report.summary());
+                assert_eq!(report.failed, 0, "storm failed requests: {}", report.summary());
+                assert_eq!(report.rejected, 0, "retryable rejections leaked out: {}", report.summary());
+                assert!(
+                    report.retries >= 6,
+                    "six injected queue_fulls must surface as retries: {}",
+                    report.summary()
+                );
+                assert!(report.requests_retried >= 1, "{}", report.summary());
+            },
+        );
+    });
+}
+
+#[test]
+fn chaos_router_ack_drop_surfaces_typed_rejection() {
+    serialized(|| {
+        let injected = run_schedule(
+            "router.ack=err:once",
+            EngineConfig::default(),
+            ServerConfig::default(),
+            |addr| {
+                let mut c = Client::connect(addr).expect("connect");
+                match c.generate(&WireRequest::new(1, PROMPT, 4)).expect("transport held") {
+                    GenOutcome::Rejected(e) => {
+                        assert!(
+                            matches!(e.kind, WireErrorKind::ShuttingDown),
+                            "a dropped ack must surface as a typed shutdown rejection: {e:?}"
+                        );
+                        assert!(!e.kind.retryable());
+                    }
+                    GenOutcome::Done { .. } => panic!("dropped ack reported success"),
+                }
+                // same connection stays usable; the orphaned admission
+                // drains on its own (asserted leak-free by the harness)
+                match c.generate(&WireRequest::new(2, PROMPT, 4)).expect("transport held") {
+                    GenOutcome::Done { events } => assert!(
+                        matches!(last_event(&events), WireEvent::Finished(_)),
+                        "post-fault request did not finish: {:?}",
+                        last_event(&events)
+                    ),
+                    GenOutcome::Rejected(e) => panic!("post-fault request rejected: {e:?}"),
+                }
+            },
+        );
+        if let Some(injected) = injected {
+            assert_eq!(injected, 1);
+        }
+    });
+}
+
+#[test]
+fn chaos_router_event_drops_keep_terminals_exactly_once() {
+    serialized(|| {
+        let injected = run_schedule(
+            "router.event=err:every(3)",
+            EngineConfig::default(),
+            ServerConfig::default(),
+            |addr| {
+                const REQS: u64 = 4;
+                let mut c = Client::connect(addr).expect("connect");
+                for id in 1..=REQS {
+                    c.send(&ClientFrame::Gen(WireRequest::new(id, PROMPT, 8)))
+                        .expect("pipelined send");
+                }
+                let mut terminals: HashMap<u64, usize> = HashMap::new();
+                while terminals.values().copied().sum::<usize>() < REQS as usize {
+                    match c.recv().expect("stream") {
+                        ServerFrame::Event(ev) if ev.is_terminal() => {
+                            *terminals.entry(ev.id()).or_insert(0) += 1;
+                        }
+                        ServerFrame::Event(_) => {}
+                        other => panic!("unexpected frame {other:?}"),
+                    }
+                }
+                // sentinel probe: anything terminal between here and the
+                // metrics reply would be a duplicate delivery
+                c.send(&ClientFrame::Metrics).expect("probe send");
+                loop {
+                    match c.recv().expect("probe") {
+                        ServerFrame::Metrics(_) => break,
+                        ServerFrame::Event(ev) => {
+                            assert!(!ev.is_terminal(), "duplicate terminal after drain: {ev:?}")
+                        }
+                        other => panic!("unexpected frame {other:?}"),
+                    }
+                }
+                for id in 1..=REQS {
+                    assert_eq!(
+                        terminals.get(&id).copied().unwrap_or(0),
+                        1,
+                        "request {id} must terminate exactly once"
+                    );
+                }
+            },
+        );
+        if let Some(injected) = injected {
+            assert!(injected >= 1, "every(3) across four sessions should drop something");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// transport faults: reconnect healing and load shedding
+
+#[test]
+fn chaos_conn_write_error_heals_by_reconnect() {
+    serialized(|| {
+        let injected = run_schedule(
+            "conn.write=err:nth(2)",
+            EngineConfig::default(),
+            ServerConfig::default(),
+            |addr| {
+                // hit 1 is this connection's hello_ok; hit 2 kills the first
+                // event write of the generation — before any token streamed,
+                // so the retry layer may safely resubmit on a fresh socket.
+                let mut slot = Some(Client::connect(addr).expect("connect"));
+                let (outcome, retries) = generate_with_retry(
+                    addr,
+                    &mut slot,
+                    &WireRequest::new(1, PROMPT, 4),
+                    &ADMISSION_RETRY,
+                )
+                .expect("retry loop");
+                assert_eq!(retries, 1, "one forged write failure, one reconnect retry");
+                match outcome {
+                    GenOutcome::Done { events } => assert!(
+                        matches!(last_event(&events), WireEvent::Finished(_)),
+                        "did not finish after reconnect: {:?}",
+                        last_event(&events)
+                    ),
+                    GenOutcome::Rejected(e) => panic!("unexpected rejection: {e:?}"),
+                }
+            },
+        );
+        if let Some(injected) = injected {
+            assert_eq!(injected, 1);
+        }
+    });
+}
+
+#[test]
+fn chaos_slow_consumer_is_shed_and_reclaimed() {
+    serialized(|| {
+        let Some(dir) = manifest_dir() else { return };
+        let scfg = ServerConfig { event_queue_cap: 2, ..Default::default() };
+        let (addr, coord, worker) = spawn_server(dir, EngineConfig::default(), scfg);
+        let mut obs = Client::connect(&addr).expect("observer");
+        let before = obs.metrics().expect("baseline metrics");
+        let (shed_reqs_0, shed_conns_0) = (
+            num(&before, &["server", "shed_requests"]),
+            num(&before, &["server", "shed_conns"]),
+        );
+
+        // Every server-side write now stalls 50ms: the 2-slot event queue
+        // overflows within a few decoded tokens and the connection is shed.
+        failpoint::configure("conn.write=delay(50ms)").expect("chaos spec parses");
+        let mut c = Client::connect(&addr).expect("slow consumer");
+        match c.generate(&WireRequest::new(1, PROMPT, 400)) {
+            // shed mid-stream: the socket is torn down under the client
+            Err(_) => {}
+            // ... or the cancel terminal squeezed out before the teardown
+            Ok(GenOutcome::Done { events }) => assert!(
+                matches!(last_event(&events), WireEvent::Cancelled(_)),
+                "a shed connection's request must cancel, got {:?}",
+                last_event(&events)
+            ),
+            Ok(GenOutcome::Rejected(e)) => panic!("unexpected rejection: {e:?}"),
+        }
+        failpoint::reset();
+
+        let j = await_quiescence(&addr, "conn.write delay(50ms) shed");
+        assert_leak_free(&j, "conn.write delay(50ms) shed");
+        assert!(
+            num(&j, &["server", "shed_requests"]) >= shed_reqs_0 + 1.0,
+            "the stalled consumer's request was not counted shed: {j}"
+        );
+        assert!(
+            num(&j, &["server", "shed_conns"]) >= shed_conns_0 + 1.0,
+            "the stalled connection was not counted shed: {j}"
+        );
+        // the engine-facing metrics overlay carries the same counter
+        assert_eq!(
+            num(&j, &["metrics", "requests_shed"]),
+            num(&j, &["server", "shed_requests"]),
+            "requests_shed overlay out of sync: {j}"
+        );
+        stop_server(&addr, coord, worker);
+    });
+}
+
+#[test]
+fn chaos_client_send_errors_heal_by_reconnect() {
+    serialized(|| {
+        let injected = run_schedule(
+            "client.send=err(2)",
+            EngineConfig::default(),
+            ServerConfig::default(),
+            |addr| {
+                // first(2): the first two client writes — both handshake
+                // sends of the first two connect attempts — are forged
+                // failures; the third attempt connects and completes.
+                let mut slot: Option<Client> = None;
+                let (outcome, retries) = generate_with_retry(
+                    addr,
+                    &mut slot,
+                    &WireRequest::new(1, PROMPT, 4),
+                    &ADMISSION_RETRY,
+                )
+                .expect("retry loop");
+                assert_eq!(retries, 2, "two forged send failures, two retries");
+                match outcome {
+                    GenOutcome::Done { events } => assert!(
+                        matches!(last_event(&events), WireEvent::Finished(_)),
+                        "did not finish after reconnects: {:?}",
+                        last_event(&events)
+                    ),
+                    GenOutcome::Rejected(e) => panic!("unexpected rejection: {e:?}"),
+                }
+            },
+        );
+        if let Some(injected) = injected {
+            assert_eq!(injected, 2);
+        }
+    });
+}
+
+#[test]
+fn chaos_client_recv_error_heals_by_reconnect() {
+    serialized(|| {
+        let injected = run_schedule(
+            "client.recv=err:once",
+            EngineConfig::default(),
+            ServerConfig::default(),
+            |addr| {
+                let mut slot: Option<Client> = None;
+                let (outcome, retries) = generate_with_retry(
+                    addr,
+                    &mut slot,
+                    &WireRequest::new(1, PROMPT, 4),
+                    &ADMISSION_RETRY,
+                )
+                .expect("retry loop");
+                assert_eq!(retries, 1, "one forged read failure, one retry");
+                match outcome {
+                    GenOutcome::Done { events } => assert!(
+                        matches!(last_event(&events), WireEvent::Finished(_)),
+                        "did not finish after reconnect: {:?}",
+                        last_event(&events)
+                    ),
+                    GenOutcome::Rejected(e) => panic!("unexpected rejection: {e:?}"),
+                }
+            },
+        );
+        if let Some(injected) = injected {
+            assert_eq!(injected, 1);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// retry-policy edges and schedule determinism
+
+#[test]
+fn chaos_smoke_too_large_never_retried() {
+    serialized(|| {
+        let injected = run_schedule(
+            "router.submit=err:first(2)",
+            EngineConfig { max_cache_tokens: 16, ..Default::default() },
+            ServerConfig::default(),
+            |addr| {
+                let mut slot = Some(Client::connect(addr).expect("connect"));
+                let (outcome, retries) = generate_with_retry(
+                    addr,
+                    &mut slot,
+                    &WireRequest::new(1, "way past the cache budget for sure", 64),
+                    &ADMISSION_RETRY,
+                )
+                .expect("retry loop");
+                match outcome {
+                    GenOutcome::Rejected(e) => assert!(
+                        matches!(e.kind, WireErrorKind::TooLarge { .. }),
+                        "want too_large through the retry layer: {e:?}"
+                    ),
+                    GenOutcome::Done { .. } => panic!("oversized request was admitted"),
+                }
+                assert_eq!(
+                    retries, 2,
+                    "the injected queue_fulls are retried; the too_large behind them is not"
+                );
+            },
+        );
+        if let Some(injected) = injected {
+            assert_eq!(injected, 2);
+        }
+    });
+}
+
+#[test]
+fn chaos_same_seed_rerun_injects_identical_fault_sequence() {
+    serialized(|| {
+        let Some(dir) = manifest_dir() else { return };
+        let (addr, coord, worker) =
+            spawn_server(dir, EngineConfig::default(), ServerConfig::default());
+        // Submits from one sequential client hit the site in a fixed
+        // order, so the prob schedule's fire set is a pure function of
+        // the seed — two runs must inject the identical sequence.
+        let run = |addr: &str| -> Vec<(&'static str, u64)> {
+            failpoint::reset();
+            failpoint::configure("router.submit=err:prob(0.5,2024)").expect("chaos spec parses");
+            let mut slot = Some(Client::connect(addr).expect("connect"));
+            for r in 0..16u64 {
+                let mut wr = WireRequest::new(r + 1, PROMPT, 2);
+                wr.seed = r;
+                let (outcome, _retries) =
+                    generate_with_retry(addr, &mut slot, &wr, &ADMISSION_RETRY)
+                        .expect("retry loop");
+                match outcome {
+                    GenOutcome::Done { .. } => {}
+                    GenOutcome::Rejected(e) => panic!("request {r} rejected: {e:?}"),
+                }
+            }
+            let log = failpoint::take_fired_log();
+            failpoint::reset();
+            log
+        };
+        let first = run(&addr);
+        let second = run(&addr);
+        assert_eq!(first, second, "same seed must inject the identical fault sequence");
+        assert!(!first.is_empty(), "prob(0.5) over 16+ submits should have fired");
+
+        let j = await_quiescence(&addr, "router.submit prob(0.5,2024) rerun");
+        assert_leak_free(&j, "router.submit prob(0.5,2024) rerun");
+        stop_server(&addr, coord, worker);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// wire-level garbage (no failpoints: raw malformed traffic)
+
+#[test]
+fn chaos_smoke_garbage_frames_do_not_kill_the_server() {
+    serialized(|| {
+        let Some(dir) = manifest_dir() else { return };
+        let (addr, coord, worker) =
+            spawn_server(dir, EngineConfig::default(), ServerConfig::default());
+
+        // non-UTF-8 bytes: the framing layer errors, the connection closes
+        {
+            let mut s = TcpStream::connect(&addr).expect("raw connect");
+            s.write_all(b"\xff\xfe\x80 not even text\n").expect("garbage write");
+            let mut sink = Vec::new();
+            let _ = s.try_clone().expect("clone").read_to_end(&mut sink);
+        }
+        // valid text, not our protocol: bad_frame answer, then close
+        {
+            let mut s = TcpStream::connect(&addr).expect("raw connect");
+            s.write_all(b"who goes there\n").expect("garbage write");
+            let mut reply = Vec::new();
+            let _ = s.try_clone().expect("clone").read_to_end(&mut reply);
+            let reply = String::from_utf8_lossy(&reply);
+            assert!(reply.contains("bad_frame"), "want a typed bad_frame answer, got {reply:?}");
+        }
+        // an unterminated flood past the frame cap: typed answer, close
+        {
+            let mut s = TcpStream::connect(&addr).expect("raw connect");
+            let chunk = vec![b'x'; 1 << 16];
+            let mut wrote = 0usize;
+            while wrote <= MAX_FRAME_LEN + (1 << 16) {
+                if s.write_all(&chunk).is_err() {
+                    break; // server already hung up on us
+                }
+                wrote += chunk.len();
+            }
+            let mut sink = Vec::new();
+            let _ = s.try_clone().expect("clone").read_to_end(&mut sink);
+        }
+        // a truncated frame followed by an abrupt disconnect
+        {
+            let mut s = TcpStream::connect(&addr).expect("raw connect");
+            s.write_all(b"{\"op\":\"hel").expect("partial write");
+        }
+
+        // the server is still healthy and leak-free
+        let mut c = Client::connect(&addr).expect("healthy connect after garbage");
+        match c.generate(&WireRequest::new(1, PROMPT, 4)).expect("healthy request") {
+            GenOutcome::Done { events } => assert!(
+                matches!(last_event(&events), WireEvent::Finished(_)),
+                "healthy request did not finish: {:?}",
+                last_event(&events)
+            ),
+            GenOutcome::Rejected(e) => panic!("healthy request rejected: {e:?}"),
+        }
+        let j = await_quiescence(&addr, "garbage-frame smoke");
+        assert_leak_free(&j, "garbage-frame smoke");
+        stop_server(&addr, coord, worker);
+    });
+}

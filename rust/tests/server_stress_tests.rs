@@ -130,7 +130,7 @@ fn rejected_submits_do_not_leak_the_global_inflight_cap() {
     let (addr, coord, worker) = spawn_server(
         dir,
         EngineConfig { max_cache_tokens: 16, ..Default::default() },
-        ServerConfig { max_inflight_per_conn: 64, max_inflight_global: 2 },
+        ServerConfig { max_inflight_per_conn: 64, max_inflight_global: 2, ..Default::default() },
     );
     let mut client = Client::connect(&addr).unwrap();
     for round in 0..6u64 {

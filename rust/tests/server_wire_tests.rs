@@ -9,9 +9,10 @@
 use recalkv::artifacts::Manifest;
 use recalkv::coordinator::batcher::BatchPolicy;
 use recalkv::coordinator::{Coordinator, Engine, EngineConfig, GenEvent, GenRequest};
+use recalkv::server::protocol::{read_frame, ReadOutcome};
 use recalkv::server::{
     Client, ClientFrame, GenOutcome, Server, ServerConfig, ServerFrame, WireError,
-    WireErrorKind, WireEvent, WireRequest, WireResult,
+    WireErrorKind, WireEvent, WireRequest, WireResult, MAX_FRAME_LEN,
 };
 use recalkv::util::prop;
 use std::path::PathBuf;
@@ -135,6 +136,161 @@ fn wire_event_roundtrip_property() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// read_frame robustness (runtime-free): truncated, oversized, garbage,
+// and interleaved-partial reads, driven through a scripted reader.
+
+/// One scripted delivery step: a chunk of bytes, or a simulated socket
+/// read timeout (`WouldBlock`, which `read_frame` reports as `TimedOut`).
+enum Step {
+    Bytes(Vec<u8>),
+    Block,
+}
+
+/// Reader that yields its script one step at a time, then EOF. Chunks are
+/// further split by the caller's `BufReader` capacity, so byte-at-a-time
+/// delivery composes with scripted timeouts.
+struct ScriptedReader {
+    steps: std::collections::VecDeque<Step>,
+}
+
+impl ScriptedReader {
+    fn new(steps: Vec<Step>) -> Self {
+        ScriptedReader { steps: steps.into() }
+    }
+}
+
+impl std::io::Read for ScriptedReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        loop {
+            match self.steps.front_mut() {
+                None => return Ok(0),
+                Some(Step::Block) => {
+                    self.steps.pop_front();
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WouldBlock,
+                        "scripted timeout",
+                    ));
+                }
+                Some(Step::Bytes(b)) if b.is_empty() => {
+                    self.steps.pop_front();
+                }
+                Some(Step::Bytes(b)) => {
+                    let n = b.len().min(buf.len());
+                    buf[..n].copy_from_slice(&b[..n]);
+                    b.drain(..n);
+                    return Ok(n);
+                }
+            }
+        }
+    }
+}
+
+/// Frames survive arbitrary chunk boundaries, interleaved read timeouts,
+/// tiny `BufReader` capacities, and a missing final newline (EOF-terminated
+/// last frame) — and every recovered line still decodes.
+#[test]
+fn read_frame_survives_arbitrary_chunking_and_timeouts() {
+    prop::check("read_frame_chunking", 200, |ctx| {
+        let n_frames = ctx.usize_in(1, 4);
+        let frames: Vec<String> =
+            (0..n_frames).map(|_| ClientFrame::Gen(gen_request(ctx)).encode()).collect();
+        let mut wire = Vec::new();
+        for f in &frames {
+            wire.extend_from_slice(f.as_bytes());
+            wire.push(b'\n');
+        }
+        // Half the runs drop the final newline: the last frame must still
+        // surface at EOF instead of being silently discarded.
+        if ctx.rng.below(2) == 0 {
+            wire.pop();
+        }
+        let mut steps = Vec::new();
+        let mut at = 0usize;
+        while at < wire.len() {
+            if ctx.rng.below(4) == 0 {
+                steps.push(Step::Block);
+            }
+            let n = ctx.usize_in(1, 13).min(wire.len() - at);
+            steps.push(Step::Bytes(wire[at..at + n].to_vec()));
+            at += n;
+        }
+        let cap = 1 + ctx.usize_in(0, 7);
+        let mut r = std::io::BufReader::with_capacity(cap, ScriptedReader::new(steps));
+        let mut acc = Vec::new();
+        let mut got: Vec<String> = Vec::new();
+        let mut timeouts = 0u32;
+        loop {
+            match read_frame(&mut r, &mut acc).map_err(|e| format!("io error: {e}"))? {
+                ReadOutcome::Frame(line) => got.push(line),
+                ReadOutcome::TimedOut => {
+                    timeouts += 1;
+                    if timeouts > 10_000 {
+                        return Err("read loop livelocked on timeouts".into());
+                    }
+                }
+                ReadOutcome::Eof => break,
+                ReadOutcome::Oversized { len } => {
+                    return Err(format!("spurious oversize report at {len} bytes"));
+                }
+            }
+        }
+        if got != frames {
+            return Err(format!(
+                "frames mangled: {} sent, {} recovered",
+                frames.len(),
+                got.len()
+            ));
+        }
+        for line in &got {
+            ClientFrame::decode(line).map_err(|e| format!("recovered frame undecodable: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Non-UTF-8 garbage on the wire surfaces as a typed `InvalidData` io
+/// error from the framing layer — never a panic, never a silent drop.
+#[test]
+fn read_frame_garbage_bytes_report_invalid_data() {
+    let wire: Vec<u8> = vec![b'{', 0xff, 0xfe, 0x80, b'}', b'\n'];
+    let mut r = std::io::BufReader::new(&wire[..]);
+    let mut acc = Vec::new();
+    match read_frame(&mut r, &mut acc) {
+        Err(e) => assert_eq!(e.kind(), std::io::ErrorKind::InvalidData),
+        Ok(out) => panic!("garbage line accepted: {out:?}"),
+    }
+}
+
+/// A newline-free flood larger than the cap is reported `Oversized` even
+/// when it never terminates — the reader must not buffer unboundedly
+/// waiting for a newline that never comes.
+#[test]
+fn read_frame_unterminated_flood_reports_oversized() {
+    let wire = vec![b'z'; MAX_FRAME_LEN + 2];
+    let mut r = std::io::BufReader::new(&wire[..]);
+    let mut acc = Vec::new();
+    match read_frame(&mut r, &mut acc) {
+        Ok(ReadOutcome::Oversized { len }) => assert!(len > MAX_FRAME_LEN),
+        other => panic!("flood not reported oversized: {other:?}"),
+    }
+    assert!(acc.is_empty(), "oversized line must not linger in the accumulator");
+}
+
+/// A frame truncated by EOF (no trailing newline) is still delivered,
+/// followed by a clean `Eof`.
+#[test]
+fn read_frame_truncated_final_frame_then_eof() {
+    let wire = b"{\"op\":\"metrics\"}".to_vec();
+    let mut r = std::io::BufReader::new(&wire[..]);
+    let mut acc = Vec::new();
+    match read_frame(&mut r, &mut acc) {
+        Ok(ReadOutcome::Frame(line)) => assert_eq!(line, "{\"op\":\"metrics\"}"),
+        other => panic!("truncated final frame lost: {other:?}"),
+    }
+    assert!(matches!(read_frame(&mut r, &mut acc), Ok(ReadOutcome::Eof)));
 }
 
 // ---------------------------------------------------------------------------
@@ -321,7 +477,7 @@ fn nth_concurrent_wire_request_gets_queue_full() {
     let (addr, coord, worker) = spawn_server(
         dir,
         EngineConfig::default(),
-        ServerConfig { max_inflight_per_conn: 2, max_inflight_global: 64 },
+        ServerConfig { max_inflight_per_conn: 2, max_inflight_global: 64, ..Default::default() },
     );
     let mut client = Client::connect(&addr).unwrap();
     for id in 1..=3u64 {

@@ -19,6 +19,11 @@ cargo test -q
 # where AVX2/NEON masks them, the scalar fallback paths must not rot (and
 # the suite's bitwise assertions prove scalar == SIMD == seed).
 PALLAS_SIMD=off cargo test -q
+# Chaos smoke: the fastest seeded fault schedules (injected queue_full
+# retry storm, too_large through the retry layer, wire-level garbage).
+# The full matrix lives in `cargo test --test chaos_tests`; like every
+# e2e suite these skip internally without artifacts/.
+cargo test -q --test chaos_tests chaos_smoke
 # clippy::undocumented_unsafe_blocks is the compiler-side second opinion
 # on the lint's unsafe-hygiene rule.
 cargo clippy --all-targets -- -D warnings -D clippy::undocumented_unsafe_blocks

@@ -10,7 +10,11 @@
 #                                # coordinator / server suites (the
 #                                # shutdown, disconnect and in-flight
 #                                # accounting races live there)
-#   scripts/sanitize.sh          # both lanes
+#   scripts/sanitize.sh --chaos  # full seeded fault-injection matrix
+#                                # (tests/chaos_tests.rs) on stable —
+#                                # every failpoint schedule, not just
+#                                # the smoke subset check.sh runs
+#   scripts/sanitize.sh          # both nightly lanes
 #
 # Both lanes need a nightly toolchain (Miri additionally the `miri`
 # component, TSan the `rust-src` component for -Zbuild-std). Where the
@@ -69,15 +73,32 @@ run_tsan() {
     echo "tsan lane: OK"
 }
 
+run_chaos() {
+    # Stable toolchain is enough: the chaos suite is deterministic fault
+    # injection, not a sanitizer. Runs the whole matrix — engine faults,
+    # router faults, transport faults, shed, same-seed rerun equality.
+    if ! command -v cargo > /dev/null 2>&1; then
+        echo "[skip] chaos lane: no cargo toolchain"
+        return 0
+    fi
+    if [[ ! -f artifacts/manifest.json ]]; then
+        echo "[skip] chaos lane: artifacts/ not built (tests would self-skip)"
+        return 0
+    fi
+    cargo test --test chaos_tests
+    echo "chaos lane: OK"
+}
+
 case "${1:-both}" in
     --miri) run_miri ;;
     --tsan) run_tsan ;;
+    --chaos) run_chaos ;;
     both)
         run_miri
         run_tsan
         ;;
     *)
-        echo "usage: scripts/sanitize.sh [--miri|--tsan]" >&2
+        echo "usage: scripts/sanitize.sh [--miri|--tsan|--chaos]" >&2
         exit 2
         ;;
 esac
