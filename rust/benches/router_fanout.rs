@@ -1,0 +1,270 @@
+//! Shard-router benchmark: the front tier fanning out over loopback
+//! worker fleets, plus runtime-free placement/breaker micro-paths.
+//!
+//! Emits `BENCH_router.json` so successive PRs have a fan-out perf
+//! trajectory: streamed tok/s and client-observed TTFT p95 end-to-end
+//! through router + workers at 1/2/4 loopback workers (1/2 with --quick),
+//! and the recovery profile after a worker kill — how long until the
+//! first post-kill request completes through failover, and until the
+//! prober trips the dead worker's breaker. The fleet section needs
+//! artifacts/ (skipped gracefully without them); the micro-paths always
+//! run.
+//!
+//!   cargo bench --bench router_fanout -- --out ../BENCH_router.json
+
+use recalkv::artifacts::Manifest;
+use recalkv::coordinator::{Coordinator, Engine, EngineConfig};
+use recalkv::router::{
+    place, prefix_hash, Breaker, BreakerConfig, HealthConfig, Router, RouterConfig, WorkerView,
+};
+use recalkv::server::{run_load, Client, Server, ServerConfig, WireEvent, WireRequest};
+use recalkv::util::bench::{bench, Table};
+use recalkv::util::cli::Args;
+use recalkv::util::json::Json;
+use std::time::{Duration, Instant};
+
+/// Placement and breaker micro-paths (runtime-free): the per-request cost
+/// the front tier adds before a single byte reaches a worker.
+fn router_microbench(budget: Duration) -> Json {
+    let prompt = "the dog barks . the cat sleeps . ".repeat(16);
+    let hash = bench("prefix hash", budget, || {
+        std::hint::black_box(prefix_hash(std::hint::black_box(&prompt)));
+    });
+    let views: Vec<WorkerView> = (0..16)
+        .map(|i| WorkerView { index: i, eligible: i % 5 != 0, queue_depth: (i * 7) % 11 })
+        .collect();
+    let h = prefix_hash(&prompt);
+    let placed = bench("placement over 16 workers", budget, || {
+        std::hint::black_box(place(std::hint::black_box(&views), h, 2));
+    });
+    let cycle = bench("breaker trip/recover cycle", budget, || {
+        let mut b = Breaker::new(BreakerConfig { failure_threshold: 3, open_ticks: 2 });
+        for _ in 0..3 {
+            b.record_failure();
+        }
+        for _ in 0..3 {
+            b.tick();
+        }
+        b.record_success();
+        std::hint::black_box(b.state());
+    });
+    Json::obj(vec![
+        ("prefix_hash_ns", Json::Num(hash.median_ns)),
+        ("placement_ns", Json::Num(placed.median_ns)),
+        ("placements_per_s", Json::Num(placed.throughput(1.0))),
+        ("breaker_cycle_ns", Json::Num(cycle.median_ns)),
+    ])
+}
+
+struct Fleet {
+    router_addr: String,
+    workers: Vec<(String, std::sync::Arc<std::sync::atomic::AtomicBool>)>,
+    router_stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<anyhow::Result<()>>>,
+    coords: Vec<Coordinator>,
+}
+
+/// Spawn `n` engine+server workers plus a router fronting them all.
+fn spawn_fleet(dir: &str, n: usize, rcfg: RouterConfig) -> anyhow::Result<Fleet> {
+    let mut workers = Vec::new();
+    let mut threads = Vec::new();
+    let mut coords = Vec::new();
+    for _ in 0..n {
+        let dir = dir.to_string();
+        let coord = Coordinator::spawn(move || {
+            let man = Manifest::load(&dir)?;
+            let rt = recalkv::runtime::Runtime::cpu()?;
+            let model = man.model("tiny-mha")?;
+            Engine::new(&rt, model, model.variant("recal@50")?, EngineConfig::default())
+        });
+        let server = Server::bind("127.0.0.1:0", coord.handle(), ServerConfig::default())?;
+        let addr = server.local_addr()?.to_string();
+        workers.push((addr, server.stop_flag()));
+        threads.push(std::thread::spawn(move || server.run()));
+        coords.push(coord);
+    }
+    let addrs: Vec<String> = workers.iter().map(|(a, _)| a.clone()).collect();
+    let router = Router::bind("127.0.0.1:0", &addrs, rcfg)?;
+    let router_addr = router.local_addr()?.to_string();
+    let router_stop = router.stop_flag();
+    threads.push(std::thread::spawn(move || router.run()));
+    Ok(Fleet { router_addr, workers, router_stop, threads, coords })
+}
+
+impl Fleet {
+    fn shutdown(self) -> anyhow::Result<()> {
+        self.router_stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        for (_, stop) in &self.workers {
+            stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        }
+        for t in self.threads {
+            t.join().expect("fleet thread panicked")?;
+        }
+        for c in self.coords {
+            c.shutdown()?;
+        }
+        Ok(())
+    }
+}
+
+/// One fan-out scaling point: `clients` concurrent connections through a
+/// router over `n_workers` workers.
+fn fanout_point(
+    dir: &str,
+    n_workers: usize,
+    clients: usize,
+    reqs: usize,
+    prompts: &[String],
+    max_new: usize,
+) -> anyhow::Result<Json> {
+    let fleet = spawn_fleet(dir, n_workers, RouterConfig::default())?;
+    let rep = run_load(&fleet.router_addr, clients, reqs, prompts, max_new)?;
+    println!(
+        "{:>2} workers, {:>2} clients: {:>6.1} req/s {:>7.1} tok/s | ttft p50/p95 \
+         {:>6.1}/{:>6.1}ms | {} ok {} rejected {} failed",
+        n_workers,
+        clients,
+        rep.req_per_s(),
+        rep.tok_per_s(),
+        rep.ttft_pctile(0.50),
+        rep.ttft_pctile(0.95),
+        rep.completed,
+        rep.rejected,
+        rep.failed,
+    );
+    fleet.shutdown()?;
+    Ok(Json::obj(vec![
+        ("workers", Json::Num(n_workers as f64)),
+        ("clients", Json::Num(clients as f64)),
+        ("requests", Json::Num(rep.requests as f64)),
+        ("completed", Json::Num(rep.completed as f64)),
+        ("rejected", Json::Num(rep.rejected as f64)),
+        ("failed", Json::Num(rep.failed as f64)),
+        ("wall_s", Json::Num(rep.wall_s)),
+        ("req_per_s", Json::Num(rep.req_per_s())),
+        ("tok_per_s", Json::Num(rep.tok_per_s())),
+        ("ttft_ms_p50", Json::Num(rep.ttft_pctile(0.50))),
+        ("ttft_ms_p95", Json::Num(rep.ttft_pctile(0.95))),
+    ]))
+}
+
+/// Kill 1 of 2 workers and time the healing: how long until the first
+/// post-kill request completes through the router (failover latency), and
+/// until the prober has tripped the dead worker's breaker (detection).
+fn recovery_point(dir: &str, prompt: &str, max_new: usize) -> anyhow::Result<Json> {
+    let rcfg = RouterConfig {
+        breaker: BreakerConfig { failure_threshold: 2, open_ticks: 10 },
+        health: HealthConfig { tick: Duration::from_millis(25), probe_every: 2 },
+        ..Default::default()
+    };
+    let mut fleet = spawn_fleet(dir, 2, rcfg)?;
+    let mut c = Client::connect(&fleet.router_addr)?;
+    // warm both the fleet and the client connection
+    c.generate(&WireRequest::new(1, prompt, max_new))?;
+
+    let (_, stop) = fleet.workers.remove(0);
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    let killed_at = Instant::now();
+
+    let mut failover_ms = None;
+    for id in 2..64u64 {
+        if let recalkv::server::GenOutcome::Done { events } = c.generate(&WireRequest::new(
+            id,
+            prompt,
+            max_new,
+        ))? {
+            if matches!(events.last().map(|(ev, _)| ev), Some(WireEvent::Finished(_))) {
+                failover_ms = Some(killed_at.elapsed().as_secs_f64() * 1e3);
+                break;
+            }
+        }
+    }
+    let failover_ms = failover_ms
+        .ok_or_else(|| anyhow::anyhow!("no request completed after the worker kill"))?;
+
+    let mut detection_ms = None;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline {
+        let j = c.metrics()?;
+        let healthy =
+            j.req("router").req("workers_healthy").as_f64().unwrap_or(f64::NAN);
+        if healthy == 1.0 {
+            detection_ms = Some(killed_at.elapsed().as_secs_f64() * 1e3);
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let detection_ms = detection_ms
+        .ok_or_else(|| anyhow::anyhow!("the prober never tripped the dead worker's breaker"))?;
+    println!(
+        "recovery after kill 1/2: first completed request {failover_ms:.1}ms, \
+         breaker open {detection_ms:.1}ms"
+    );
+    drop(c);
+    fleet.shutdown()?;
+    Ok(Json::obj(vec![
+        ("failover_first_completion_ms", Json::Num(failover_ms)),
+        ("breaker_detection_ms", Json::Num(detection_ms)),
+    ]))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"), &["quick"]);
+    let out_path = args.opt_or("out", "BENCH_router.json").to_string();
+    let quick = args.has("quick");
+    let budget = Duration::from_millis(if quick { 150 } else { 400 });
+    let reqs = args.usize_or("requests", if quick { 2 } else { 6 });
+    let max_new = args.usize_or("max-new", if quick { 8 } else { 16 });
+    let worker_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+
+    let micro = router_microbench(budget);
+
+    let dir = args.opt_or("artifacts", "artifacts").to_string();
+    let (fanout, recovery) = match Manifest::load(&dir) {
+        Ok(_) => {
+            let prompts: Vec<String> = recalkv::eval::tasks::gen_long("needle", 42, 8, 200)
+                .into_iter()
+                .map(|inst| inst.prompt)
+                .collect();
+            let mut table = Table::new(
+                "Router fan-out, localhost loopback",
+                &["workers", "req/s", "tok/s", "ttft p50/p95 ms"],
+            );
+            let mut rows = Vec::new();
+            for &n in worker_counts {
+                // clients scale with the fleet so each point keeps every
+                // worker busy rather than measuring an idle tail
+                let clients = (n * 2).max(2);
+                let row = fanout_point(&dir, n, clients, reqs, &prompts, max_new)?;
+                table.row(vec![
+                    n.to_string(),
+                    format!("{:.1}", row.req("req_per_s").as_f64().unwrap_or(0.0)),
+                    format!("{:.1}", row.req("tok_per_s").as_f64().unwrap_or(0.0)),
+                    format!(
+                        "{:.1}/{:.1}",
+                        row.req("ttft_ms_p50").as_f64().unwrap_or(0.0),
+                        row.req("ttft_ms_p95").as_f64().unwrap_or(0.0)
+                    ),
+                ]);
+                rows.push(row);
+            }
+            table.print();
+            let recovery = recovery_point(&dir, "the dog barks . the cat sleeps . ", max_new)?;
+            (Json::Arr(rows), recovery)
+        }
+        Err(_) => {
+            println!("[skip] artifacts/ not built — router micro-paths only");
+            (Json::Null, Json::Null)
+        }
+    };
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("router_fanout".into())),
+        ("micro", micro),
+        ("fanout", fanout),
+        ("recovery", recovery),
+    ]);
+    std::fs::write(&out_path, report.to_string())?;
+    println!("[report saved to {out_path}]");
+    Ok(())
+}

@@ -12,8 +12,9 @@
 //!    is the compiler-side second opinion.
 //! 2. **Panic policy** (`panic-policy`) — no `unwrap()` / `expect()` /
 //!    panicking macro / direct indexing in the serving layers (`server/`,
-//!    `coordinator/`, `kvcache/`) outside tests: a panic there kills a
-//!    connection thread, poisons shared locks, and can wedge the server.
+//!    `coordinator/`, `kvcache/`, `router/`) outside tests: a panic there
+//!    kills a connection thread, poisons shared locks, and can wedge the
+//!    server — or, in the shard router, silently drop a whole fleet.
 //!    Reviewed exceptions live in `rust/lint_allow.toml`, each with a
 //!    mandatory one-line justification; stale entries fail the lint.
 //! 3. **SIMD twin rule** (`simd-twin`) — every public `#[target_feature]`

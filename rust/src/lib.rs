@@ -9,6 +9,9 @@
 //! Layer 4 ([`server`]) puts that session API on the network: a multi-client
 //! TCP server speaking a newline-delimited JSON protocol, with
 //! cancel-on-disconnect page reclamation and typed wire backpressure.
+//! Layer 5 ([`router`]) fans that protocol out over a fleet of workers:
+//! health-probed placement with session affinity, per-worker circuit
+//! breakers, automatic failover, and graceful drain.
 //! It also contains a complete from-scratch Rust mirror of the offline
 //! compression pipeline (Fisher allocation, CKA head reordering, grouped SVD,
 //! offline calibration, matrix fusion) over a small dense linear-algebra
@@ -22,6 +25,7 @@ pub mod eval;
 pub mod kvcache;
 pub mod linalg;
 pub mod quant;
+pub mod router;
 pub mod runtime;
 pub mod server;
 pub mod util;

@@ -16,9 +16,19 @@
 //!             control frame, e.g.
 //!             `repro client --addr ... --requests 0 --shutdown`)
 //!   client    wire load generator: N connections × M streamed requests
-//!             against a `serve --listen` server; prints req/s, tok/s,
-//!             TTFT and token-gap percentiles (--metrics fetches the
-//!             server's metrics snapshot; --shutdown stops the server)
+//!             against a `serve --listen` server or a router; prints
+//!             req/s, tok/s, TTFT and token-gap percentiles (--metrics
+//!             fetches the server's metrics snapshot; --ping round-trips
+//!             a keepalive; --shutdown stops the server)
+//!   router    fault-tolerant shard router: fans the same wire protocol
+//!             out over N `serve --listen` workers (--listen <addr>
+//!             --workers a,b,... ; health-probed placement with session
+//!             affinity, per-worker circuit breakers, automatic failover,
+//!             graceful drain; --failure-threshold / --open-ticks /
+//!             --tick-ms / --probe-every / --spill-margin tune it).
+//!             With --addr <router> --drain <worker> it instead asks a
+//!             running router to drain one worker and prints the
+//!             aggregated metrics acknowledgement
 //!   eval      evaluate one variant (ppl + zero-shot tasks)
 //!   tables    regenerate the paper's tables/figures (--table N | --figure F)
 //!   compress  run the pure-rust compression mirror over an .rtz archive
@@ -37,6 +47,8 @@
 //!   repro serve --listen 127.0.0.1:7077 --queue-cap 8 --max-cache-tokens 4096
 //!   repro client --addr 127.0.0.1:7077 --connections 4 --requests 8
 //!   repro client --addr 127.0.0.1:7077 --requests 0 --shutdown
+//!   repro router --listen 127.0.0.1:7070 --workers 127.0.0.1:7077,127.0.0.1:7078
+//!   repro router --addr 127.0.0.1:7070 --drain 127.0.0.1:7078
 //!   repro tables --table 1 --models tiny-mha --mc 32 --ppl-tokens 4096
 //!   repro tables --figure 2
 //!   repro compress --model tiny-mha --method recal --ratio 0.6
@@ -60,7 +72,8 @@ fn main() -> Result<()> {
         bail!("bad {} spec: {e}", recalkv::util::failpoint::ENV_VAR);
     }
     let args = Args::from_env(&[
-        "quick", "fisher", "quiet", "stream", "shutdown", "metrics", "update-sync-baseline",
+        "quick", "fisher", "quiet", "stream", "shutdown", "metrics", "ping",
+        "update-sync-baseline",
     ]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
     let dir = args.opt_or("artifacts", "artifacts");
@@ -68,12 +81,16 @@ fn main() -> Result<()> {
         "info" => info(dir),
         "serve" => serve(dir, &args),
         "client" => client_cmd(&args),
+        "router" => router_cmd(&args),
         "eval" => eval_variant(dir, &args),
         "tables" => tables(dir, &args),
         "compress" => compress(dir, &args),
         "lint" => lint(&args),
         other => {
-            bail!("unknown command '{other}' (try: info serve client eval tables compress lint)")
+            bail!(
+                "unknown command '{other}' \
+                 (try: info serve client router eval tables compress lint)"
+            )
         }
     }
 }
@@ -351,6 +368,11 @@ fn client_cmd(args: &Args) -> Result<()> {
             bail!("{} of {} requests ended in failure", report.failed, report.requests);
         }
     }
+    if args.has("ping") {
+        let mut c = Client::connect(addr)?;
+        c.ping(1)?;
+        println!("pong (seq 1) — reader and writer at {addr} are alive");
+    }
     if args.has("metrics") {
         let mut c = Client::connect(addr)?;
         println!("{}", c.metrics()?);
@@ -360,6 +382,68 @@ fn client_cmd(args: &Args) -> Result<()> {
         c.shutdown_server()?;
         println!("server acknowledged shutdown");
     }
+    Ok(())
+}
+
+/// `repro router`: the fault-tolerant shard front tier (serve mode), or —
+/// with `--addr <router> --drain <worker>` — a control client asking a
+/// running router to drain one worker.
+fn router_cmd(args: &Args) -> Result<()> {
+    use recalkv::router::{BreakerConfig, HealthConfig, Router, RouterConfig};
+    use recalkv::server::{Client, ClientFrame, ServerFrame, PROTOCOL_VERSION};
+    if let Some(worker) = args.opt("drain") {
+        let addr = args.opt("addr").context("--addr <router host:port> is required with --drain")?;
+        let mut c = Client::connect(addr)?;
+        c.send(&ClientFrame::Drain { worker: worker.to_string() })?;
+        loop {
+            match c.recv()? {
+                ServerFrame::Metrics(stats) => {
+                    println!("{stats}");
+                    println!("drain of {worker} acknowledged");
+                    return Ok(());
+                }
+                ServerFrame::Error(e) => {
+                    bail!("drain rejected: {} ({})", e.message, e.kind.name())
+                }
+                ServerFrame::Event(_) => continue,
+                other => bail!("unexpected answer to drain: {other:?}"),
+            }
+        }
+    }
+    let listen = args.opt_or("listen", "127.0.0.1:0");
+    let workers: Vec<String> = args
+        .opt("workers")
+        .context("--workers <addr,addr,...> is required (or --addr + --drain <worker>)")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let defaults = RouterConfig::default();
+    let cfg = RouterConfig {
+        max_inflight_per_conn: args.usize_or("max-inflight-conn", defaults.max_inflight_per_conn),
+        spill_margin: args.usize_or("spill-margin", defaults.spill_margin),
+        breaker: BreakerConfig {
+            failure_threshold: args
+                .usize_or("failure-threshold", defaults.breaker.failure_threshold as usize)
+                as u32,
+            open_ticks: args.usize_or("open-ticks", defaults.breaker.open_ticks as usize) as u64,
+        },
+        health: HealthConfig {
+            tick: std::time::Duration::from_millis(
+                args.usize_or("tick-ms", defaults.health.tick.as_millis() as usize) as u64,
+            ),
+            probe_every: args.usize_or("probe-every", defaults.health.probe_every as usize) as u64,
+        },
+    };
+    let router = Router::bind(listen, &workers, cfg)?;
+    // parsed by scripts/check.sh's router smoke test — keep the shape
+    println!(
+        "listening on {} (protocol v{PROTOCOL_VERSION}, routing {} workers)",
+        router.local_addr()?,
+        workers.len()
+    );
+    router.run()?;
+    println!("router drained and stopped");
     Ok(())
 }
 

@@ -1,0 +1,257 @@
+//! Per-worker circuit breaker: a pure state machine over probe/transport
+//! outcomes and router ticks — no clocks, no IO.
+//!
+//! ```text
+//!            consecutive failures >= threshold
+//!   Closed ───────────────────────────────────▶ Open
+//!     ▲                                          │ tick() × open_ticks
+//!     │ trial success                            ▼
+//!     └──────────────────────────────────── HalfOpen
+//!                 trial failure ⇒ Open (restart the countdown)
+//! ```
+//!
+//! **Closed** — the worker takes traffic; each success resets the
+//! consecutive-failure count. **Open** — the worker takes nothing (the
+//! placement layer skips it) and absorbs no probes; the router's tick loop
+//! counts it down. **HalfOpen** — one trial (the next probe or placed
+//! request) decides: success re-closes, failure re-opens and the countdown
+//! restarts from zero.
+//!
+//! Time is the router's *tick counter* (one [`Breaker::tick`] per health
+//! loop iteration), never the wall clock: a chaos run that drives N ticks
+//! observes the identical transition sequence on every rerun, which is
+//! what lets `tests/chaos_tests.rs` assert breaker trajectories under
+//! seeded fault schedules.
+
+/// Where a [`Breaker`] currently stands. `Open` is the only state the
+/// placement layer treats as ineligible.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: traffic flows, failures are counted.
+    Closed,
+    /// Tripped: no traffic until the open countdown elapses.
+    Open,
+    /// Countdown elapsed: the next outcome (probe or request) is the trial.
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// Wire-friendly name, used in the aggregated `metrics` frame.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half_open",
+        }
+    }
+}
+
+/// Tuning for one [`Breaker`]. The defaults trip after 3 consecutive
+/// failures and re-trial after 20 ticks (2s at the router's 100ms tick).
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive failures (probe or transport) that trip Closed → Open.
+    pub failure_threshold: u32,
+    /// Ticks spent Open before the HalfOpen trial is offered.
+    pub open_ticks: u64,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig { failure_threshold: 3, open_ticks: 20 }
+    }
+}
+
+/// One worker's breaker. Owned behind the router's per-worker mutex; all
+/// methods are O(1) and non-blocking.
+#[derive(Debug)]
+pub struct Breaker {
+    cfg: BreakerConfig,
+    state: BreakerState,
+    consecutive_failures: u32,
+    ticks_in_open: u64,
+    /// Times this breaker has entered Open, ever (the `breaker_open_total`
+    /// metric sums these across workers).
+    open_count: u64,
+}
+
+impl Breaker {
+    pub fn new(cfg: BreakerConfig) -> Self {
+        Breaker {
+            cfg,
+            state: BreakerState::Closed,
+            consecutive_failures: 0,
+            ticks_in_open: 0,
+            open_count: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// May the placement layer put a request (or the prober a probe) on
+    /// this worker? Closed and HalfOpen say yes — a HalfOpen placement *is*
+    /// the trial.
+    pub fn allows(&self) -> bool {
+        self.state != BreakerState::Open
+    }
+
+    /// Times this breaker has tripped open since construction.
+    pub fn open_count(&self) -> u64 {
+        self.open_count
+    }
+
+    /// A probe answered or a relayed request reached its terminal event.
+    pub fn record_success(&mut self) {
+        match self.state {
+            BreakerState::Closed => self.consecutive_failures = 0,
+            BreakerState::HalfOpen => {
+                // trial passed: fully re-close
+                self.state = BreakerState::Closed;
+                self.consecutive_failures = 0;
+            }
+            // A straggler stream that completed after the breaker tripped:
+            // not evidence the worker answers *new* work, so it does not
+            // short-circuit the countdown.
+            BreakerState::Open => {}
+        }
+    }
+
+    /// A probe failed or a relay saw a transport-level failure.
+    pub fn record_failure(&mut self) {
+        match self.state {
+            BreakerState::Closed => {
+                self.consecutive_failures = self.consecutive_failures.saturating_add(1);
+                if self.consecutive_failures >= self.cfg.failure_threshold {
+                    self.trip();
+                }
+            }
+            // trial failed: straight back to Open, countdown restarts
+            BreakerState::HalfOpen => self.trip(),
+            // failures of straggler streams while already open: no-op
+            BreakerState::Open => {}
+        }
+    }
+
+    /// One router tick. Only Open cares: after `open_ticks` of them the
+    /// breaker offers its HalfOpen trial.
+    pub fn tick(&mut self) {
+        if self.state == BreakerState::Open {
+            self.ticks_in_open += 1;
+            if self.ticks_in_open >= self.cfg.open_ticks {
+                self.state = BreakerState::HalfOpen;
+            }
+        }
+    }
+
+    fn trip(&mut self) {
+        self.state = BreakerState::Open;
+        self.ticks_in_open = 0;
+        self.consecutive_failures = 0;
+        self.open_count += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breaker(threshold: u32, open_ticks: u64) -> Breaker {
+        Breaker::new(BreakerConfig { failure_threshold: threshold, open_ticks })
+    }
+
+    #[test]
+    fn stays_closed_below_threshold() {
+        let mut b = breaker(3, 10);
+        b.record_failure();
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allows());
+        // a success resets the consecutive count: two more failures still
+        // don't trip
+        b.record_success();
+        b.record_failure();
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.open_count(), 0);
+    }
+
+    #[test]
+    fn trips_open_on_consecutive_failures() {
+        let mut b = breaker(3, 10);
+        for _ in 0..3 {
+            b.record_failure();
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.allows());
+        assert_eq!(b.open_count(), 1);
+    }
+
+    #[test]
+    fn open_counts_ticks_down_to_half_open() {
+        let mut b = breaker(1, 5);
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        for _ in 0..4 {
+            b.tick();
+            assert_eq!(b.state(), BreakerState::Open, "opened early");
+        }
+        b.tick(); // 5th
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(b.allows(), "half-open must admit the trial");
+    }
+
+    #[test]
+    fn half_open_trial_success_closes() {
+        let mut b = breaker(1, 1);
+        b.record_failure();
+        b.tick();
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        // and the failure counter started fresh
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open, "threshold 1 re-trips");
+        assert_eq!(b.open_count(), 2);
+    }
+
+    #[test]
+    fn half_open_trial_failure_reopens_and_restarts_countdown() {
+        let mut b = breaker(1, 3);
+        b.record_failure();
+        for _ in 0..3 {
+            b.tick();
+        }
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.open_count(), 2);
+        // the countdown starts over — 2 ticks are not enough
+        b.tick();
+        b.tick();
+        assert_eq!(b.state(), BreakerState::Open);
+        b.tick();
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+    }
+
+    #[test]
+    fn straggler_outcomes_while_open_are_ignored() {
+        let mut b = breaker(2, 10);
+        b.record_failure();
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        // late terminal from a stream placed before the trip
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Open, "straggler must not close");
+        b.record_failure();
+        assert_eq!(b.open_count(), 1, "straggler must not re-trip");
+    }
+
+    #[test]
+    fn state_names_are_wire_stable() {
+        assert_eq!(BreakerState::Closed.name(), "closed");
+        assert_eq!(BreakerState::Open.name(), "open");
+        assert_eq!(BreakerState::HalfOpen.name(), "half_open");
+    }
+}

@@ -1,0 +1,229 @@
+//! Health probing: a single prober thread that drives every worker's
+//! breaker on a deterministic, tick-counted schedule.
+//!
+//! # Determinism
+//!
+//! The schedule is a pure function of the prober's tick counter — probe on
+//! every tick divisible by [`HealthConfig::probe_every`], breaker
+//! countdowns advance one [`super::Breaker::tick`] per tick — never of the
+//! wall clock. A chaos run that arms `shard.probe` with a seeded schedule
+//! therefore sees the same probe/trip/half-open sequence on every rerun;
+//! only the *rate* at which ticks elapse is wall-clock (one per
+//! [`HealthConfig::tick`] sleep).
+//!
+//! # Probe anatomy
+//!
+//! One probe = fresh TCP dial, `hello`/`hello_ok` version handshake, then
+//! `ping(seq = tick)`/`pong` echo. A full round-trip through the worker's
+//! reader and writer proves more than an accepted connection would: the
+//! worker's accept loop, frame decoding, and per-connection writer are all
+//! alive. Probe IO is deliberately raw (not [`super::relay::Upstream`]) so
+//! the `shard.relay` failpoint only ever counts relayed traffic.
+//!
+//! While a breaker is Open the worker absorbs nothing — not even probes;
+//! the tick countdown alone re-admits it to HalfOpen, and the next
+//! scheduled probe (or placed request) is the trial.
+
+use super::relay::{Shared, CONNECT_TIMEOUT};
+use crate::server::protocol::{
+    read_frame, ClientFrame, ReadOutcome, ServerFrame, PROTOCOL_VERSION,
+};
+use crate::util::sync::lock_unpoisoned;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+/// Read-timeout poll while awaiting a probe answer (shorter than the relay
+/// poll: probes race a tick budget, not a generation).
+const PROBE_POLL: Duration = Duration::from_millis(50);
+
+/// Polls (× [`PROBE_POLL`]) granted to each probe phase (handshake, pong).
+const PROBE_POLLS: u32 = 40; // 2s
+
+#[derive(Clone, Copy, Debug)]
+pub struct HealthConfig {
+    /// Length of one router tick (breaker countdown granularity).
+    pub tick: Duration,
+    /// Probe every worker on ticks divisible by this (0 disables probing —
+    /// breakers then learn only from relayed traffic).
+    pub probe_every: u64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig { tick: Duration::from_millis(100), probe_every: 5 }
+    }
+}
+
+/// The prober loop: one breaker tick per sleep, probes on schedule, until
+/// the router's stop flag is set. Runs on the dedicated `route-prober`
+/// thread.
+pub(crate) fn run_prober(shared: &Shared, stop: &AtomicBool, cfg: HealthConfig) {
+    let mut tick: u64 = 0;
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(cfg.tick);
+        tick = tick.wrapping_add(1);
+        shared.tick_all();
+        if cfg.probe_every == 0 || tick % cfg.probe_every != 0 {
+            continue;
+        }
+        for (wi, slot) in shared.workers.iter().enumerate() {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            if !lock_unpoisoned(&slot.breaker).allows() {
+                // Open absorbs nothing, not even probes; the tick
+                // countdown re-admits it
+                continue;
+            }
+            match probe(&slot.addr, tick) {
+                Ok(()) => shared.record_outcome(wi, true),
+                Err(e) => {
+                    // bounded volume: a dead worker trips Open within
+                    // `failure_threshold` probes and stops being probed
+                    eprintln!("[router] probe of {} failed: {e}", slot.addr);
+                    shared.record_outcome(wi, false);
+                }
+            }
+        }
+    }
+}
+
+/// One full probe of `addr`: dial, version-handshake, `ping(seq)` echoed
+/// as `pong(seq)`. Any shortfall — including a stale or mismatched `seq`
+/// — is a probe failure.
+pub(crate) fn probe(addr: &str, seq: u64) -> Result<(), String> {
+    // Chaos seam: forged probe failure, driving breaker trips without
+    // killing a real worker.
+    if crate::util::failpoint::fired("shard.probe") {
+        return Err("shard.probe failpoint: forged probe failure".to_string());
+    }
+    let sock = addr
+        .to_socket_addrs()
+        .map_err(|e| format!("resolving: {e}"))?
+        .next()
+        .ok_or_else(|| "address resolves to nothing".to_string())?;
+    let stream = TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT)
+        .map_err(|e| format!("dialing: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(PROBE_POLL)).map_err(|e| format!("read timeout: {e}"))?;
+    stream
+        .set_write_timeout(Some(CONNECT_TIMEOUT))
+        .map_err(|e| format!("write timeout: {e}"))?;
+    let mut writer =
+        BufWriter::new(stream.try_clone().map_err(|e| format!("cloning stream: {e}"))?);
+    let mut reader = BufReader::new(stream);
+    let mut acc: Vec<u8> = Vec::new();
+
+    send_line(&mut writer, &ClientFrame::Hello { version: PROTOCOL_VERSION })
+        .map_err(|e| format!("sending hello: {e}"))?;
+    match await_frame(&mut reader, &mut acc)? {
+        ServerFrame::HelloOk { version } if version == PROTOCOL_VERSION => {}
+        ServerFrame::HelloOk { version } => {
+            return Err(format!("protocol v{version}, expected v{PROTOCOL_VERSION}"));
+        }
+        ServerFrame::Error(e) => {
+            return Err(format!("handshake rejected: {} ({})", e.message, e.kind.name()));
+        }
+        other => return Err(format!("hello answered with {other:?}")),
+    }
+
+    send_line(&mut writer, &ClientFrame::Ping { seq })
+        .map_err(|e| format!("sending ping: {e}"))?;
+    match await_frame(&mut reader, &mut acc)? {
+        ServerFrame::Pong { seq: echoed } if echoed == seq => Ok(()),
+        ServerFrame::Pong { seq: echoed } => {
+            Err(format!("stale pong: sent seq {seq}, got {echoed}"))
+        }
+        other => Err(format!("ping answered with {other:?}")),
+    }
+}
+
+fn send_line(writer: &mut BufWriter<TcpStream>, frame: &ClientFrame) -> std::io::Result<()> {
+    let line = frame.encode();
+    writer.write_all(line.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()
+}
+
+/// Await one frame within the probe's poll budget; silence past the budget
+/// is a probe failure (a hung worker must not hang the prober).
+fn await_frame(
+    reader: &mut BufReader<TcpStream>,
+    acc: &mut Vec<u8>,
+) -> Result<ServerFrame, String> {
+    for _ in 0..PROBE_POLLS {
+        match read_frame(reader, acc) {
+            Ok(ReadOutcome::Frame(line)) => {
+                return ServerFrame::decode(&line).map_err(|e| format!("bad frame: {e}"));
+            }
+            Ok(ReadOutcome::TimedOut) => {}
+            Ok(ReadOutcome::Eof) => return Err("connection closed mid-probe".to_string()),
+            Ok(ReadOutcome::Oversized { len }) => {
+                return Err(format!("oversized frame ({len} bytes)"));
+            }
+            Err(e) => return Err(format!("read: {e}")),
+        }
+    }
+    Err(format!("no answer within {PROBE_POLLS} polls"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufRead;
+    use std::net::TcpListener;
+
+    /// A one-connection stub worker speaking just enough protocol to be
+    /// probed; `pong_skew` forges stale pongs.
+    fn stub_worker(pong_skew: u64) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut writer = BufWriter::new(stream.try_clone().unwrap());
+            let reader = BufReader::new(stream);
+            for line in reader.lines() {
+                let Ok(line) = line else { break };
+                let answer = match ClientFrame::decode(&line).unwrap() {
+                    ClientFrame::Hello { version } => ServerFrame::HelloOk { version },
+                    ClientFrame::Ping { seq } => {
+                        ServerFrame::Pong { seq: seq.wrapping_add(pong_skew) }
+                    }
+                    other => panic!("stub got {other:?}"),
+                };
+                writer.write_all(answer.encode().as_bytes()).unwrap();
+                writer.write_all(b"\n").unwrap();
+                writer.flush().unwrap();
+            }
+        });
+        (addr, t)
+    }
+
+    #[test]
+    fn probe_round_trips_against_a_live_worker() {
+        let (addr, t) = stub_worker(0);
+        assert_eq!(probe(&addr.to_string(), 42), Ok(()));
+        drop(t); // stub exits when probe's sockets close
+    }
+
+    #[test]
+    fn probe_rejects_a_stale_pong() {
+        let (addr, t) = stub_worker(1);
+        let err = probe(&addr.to_string(), 7).unwrap_err();
+        assert!(err.contains("stale pong"), "got: {err}");
+        drop(t);
+    }
+
+    #[test]
+    fn probe_fails_fast_when_nothing_listens() {
+        // bind-then-drop guarantees a dead port
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let err = probe(&addr.to_string(), 1).unwrap_err();
+        assert!(err.contains("dialing"), "got: {err}");
+    }
+}

@@ -1,0 +1,47 @@
+//! Fault-tolerant shard router: a front tier that fans one wire-protocol
+//! listener out over N backend `repro serve` workers.
+//!
+//! ```text
+//!                        ┌────────────────────┐      ┌──────────────┐
+//!   client ── gen ─────▶ │  Router            │ ───▶ │ worker :4701 │
+//!          ◀─ events ──  │   placement        │      └──────────────┘
+//!                        │   breakers, health │ ───▶ ┌──────────────┐
+//!                        │   failover relay   │      │ worker :4702 │
+//!                        └────────────────────┘      └──────────────┘
+//! ```
+//!
+//! Clients speak the exact same newline-delimited JSON protocol to the
+//! router as they would to a single worker ([`crate::server::protocol`]) —
+//! the router is topology, not a new protocol. Three concerns live here,
+//! one per submodule:
+//!
+//! * [`placement`] — queue-depth-weighted worker choice with session
+//!   affinity keyed on a prompt-prefix hash (pure functions).
+//! * [`breaker`] — per-worker circuit breakers: Closed → Open after
+//!   consecutive failures, tick-counted countdown to a HalfOpen trial.
+//! * [`health`] — the deterministic prober (versioned `hello` + `ping`
+//!   per schedule tick) feeding those breakers.
+//! * [`relay`] — the listener, per-request relay threads, automatic
+//!   failover of retryable/zero-token failures, graceful drain, and the
+//!   aggregated `metrics` frame.
+//!
+//! Like the rest of the serving stack this layer is std-only (threads +
+//! sockets, no async runtime) and panic-free by policy: `repro lint`
+//! invariant 2 bans `unwrap`/`expect`/panics/direct indexing in non-test
+//! code here, and the attribute below backs the ban at compile time.
+//!
+//! Chaos seams: `shard.place` (forged placement failure), `shard.probe`
+//! (forged probe failure), `shard.relay` (forged upstream transport
+//! failure) — see [`crate::util::failpoint`] for the `PALLAS_FAILPOINTS`
+//! schedule DSL the chaos suite drives them with.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+pub mod breaker;
+pub mod health;
+pub mod placement;
+pub mod relay;
+
+pub use breaker::{Breaker, BreakerConfig, BreakerState};
+pub use health::HealthConfig;
+pub use placement::{place, prefix_hash, WorkerView, PREFIX_LEN};
+pub use relay::{Router, RouterConfig};

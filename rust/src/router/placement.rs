@@ -1,0 +1,184 @@
+//! Worker selection: queue-depth-weighted placement with session affinity
+//! keyed on a prompt-prefix hash — pure functions over snapshots, so every
+//! decision is deterministic and unit-testable.
+//!
+//! # Affinity, then load
+//!
+//! Requests sharing a prompt prefix (system prompt, few-shot preamble)
+//! hash to the same *preferred* worker, so prefix-cache hits (ROADMAP
+//! item 2) survive sharding: the pages a prefix warmed live on one worker,
+//! and that worker keeps seeing the prefix. Affinity yields to load — if
+//! the preferred worker's router-tracked queue depth is more than
+//! `spill_margin` deeper than the shallowest eligible worker, the request
+//! spills to that shallowest worker instead (ties broken by lowest index,
+//! keeping the decision deterministic).
+//!
+//! The hash covers only the first [`PREFIX_LEN`] bytes of the prompt:
+//! long-tail request bodies differ, shared preambles don't, and a bounded
+//! prefix keeps the hash O(1) in prompt length.
+
+/// Prompt bytes covered by the affinity hash. Shared preambles are usually
+/// much longer than this; distinct prompts usually diverge much earlier.
+pub const PREFIX_LEN: usize = 256;
+
+/// FNV-1a over the first [`PREFIX_LEN`] bytes of the prompt. FNV is enough
+/// here: the hash picks a shard, it doesn't need collision resistance, and
+/// its fixed offset/prime constants keep placement reproducible across
+/// runs and platforms (a `DefaultHasher` would not promise that).
+pub fn prefix_hash(prompt: &str) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in prompt.as_bytes().iter().take(PREFIX_LEN) {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// One worker as the placement decision sees it: a snapshot, taken under
+/// the router's per-worker locks, of whether the worker may take traffic
+/// (breaker not open, not draining) and how much it already carries.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerView {
+    /// Position in the router's worker list (placement returns this).
+    pub index: usize,
+    /// Breaker allows traffic and the worker is not draining.
+    pub eligible: bool,
+    /// Router-placed requests currently in flight on this worker.
+    pub queue_depth: usize,
+}
+
+/// Pick a worker for a request whose prompt hashes to `hash`, or `None`
+/// when no worker is eligible. Affinity first: the hash selects a
+/// preferred worker among the *eligible* set (modulo placement — a breaker
+/// trip or drain re-homes deterministically, though not minimally; swap to
+/// a consistent-hash ring if worker churn becomes routine); load second:
+/// the preferred worker is used unless it is more than `spill_margin`
+/// deeper than the shallowest eligible worker, in which case the request
+/// spills to the shallowest (lowest index on ties).
+pub fn place(views: &[WorkerView], hash: u64, spill_margin: usize) -> Option<usize> {
+    let eligible: Vec<&WorkerView> = views.iter().filter(|v| v.eligible).collect();
+    let preferred = eligible.get((hash % eligible.len().max(1) as u64) as usize)?;
+    let shallowest = eligible.iter().min_by_key(|v| (v.queue_depth, v.index))?;
+    if preferred.queue_depth > shallowest.queue_depth.saturating_add(spill_margin) {
+        Some(shallowest.index)
+    } else {
+        Some(preferred.index)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(depths: &[(bool, usize)]) -> Vec<WorkerView> {
+        depths
+            .iter()
+            .enumerate()
+            .map(|(index, &(eligible, queue_depth))| WorkerView {
+                index,
+                eligible,
+                queue_depth,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prefix_hash_is_stable_and_prefix_only() {
+        // fixed constants ⇒ fixed value (placement must not drift across
+        // builds — affinity is a cross-run cache contract)
+        assert_eq!(prefix_hash(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(prefix_hash("a"), prefix_hash("a"));
+        assert_ne!(prefix_hash("a"), prefix_hash("b"));
+        // bytes past PREFIX_LEN don't matter: same preamble ⇒ same shard
+        let preamble = "s".repeat(PREFIX_LEN);
+        assert_eq!(
+            prefix_hash(&format!("{preamble}request one")),
+            prefix_hash(&format!("{preamble}request two")),
+        );
+        // ...but a divergence inside the prefix does
+        assert_ne!(prefix_hash("xa"), prefix_hash("xb"));
+    }
+
+    #[test]
+    fn same_hash_same_worker() {
+        let v = views(&[(true, 0), (true, 0), (true, 0)]);
+        let h = prefix_hash("shared system prompt");
+        let first = place(&v, h, 2).unwrap();
+        for _ in 0..10 {
+            assert_eq!(place(&v, h, 2), Some(first), "affinity not sticky");
+        }
+    }
+
+    #[test]
+    fn hashes_spread_across_workers() {
+        let v = views(&[(true, 0), (true, 0), (true, 0), (true, 0)]);
+        let mut seen = [false; 4];
+        for i in 0..64 {
+            let h = prefix_hash(&format!("prompt family {i}"));
+            if let Some(w) = place(&v, h, 2) {
+                seen[w] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "64 prompt families hit {seen:?}");
+    }
+
+    #[test]
+    fn ineligible_workers_are_skipped() {
+        let v = views(&[(false, 0), (true, 5), (false, 0)]);
+        for i in 0..16 {
+            let h = prefix_hash(&format!("p{i}"));
+            assert_eq!(place(&v, h, 0), Some(1), "placed on an ineligible worker");
+        }
+    }
+
+    #[test]
+    fn none_when_no_worker_eligible() {
+        let v = views(&[(false, 0), (false, 0)]);
+        assert_eq!(place(&v, prefix_hash("p"), 2), None);
+        assert_eq!(place(&[], prefix_hash("p"), 2), None);
+    }
+
+    #[test]
+    fn deep_preferred_worker_spills_to_shallowest() {
+        // find a hash that prefers worker 2, then pile depth on it
+        let flat = views(&[(true, 0), (true, 0), (true, 0)]);
+        let h = (0..64)
+            .map(|i| prefix_hash(&format!("probe {i}")))
+            .find(|&h| place(&flat, h, 0) == Some(2))
+            .expect("some hash prefers worker 2");
+        // within margin: affinity wins despite imbalance
+        let v = views(&[(true, 1), (true, 3), (true, 3)]);
+        assert_eq!(place(&v, h, 2), Some(2), "within-margin spill");
+        // past margin: spill to shallowest
+        let v = views(&[(true, 1), (true, 3), (true, 4)]);
+        assert_eq!(place(&v, h, 2), Some(0), "no spill past margin");
+    }
+
+    #[test]
+    fn spill_ties_break_to_lowest_index() {
+        let flat = views(&[(true, 0), (true, 0), (true, 0)]);
+        let h = (0..64)
+            .map(|i| prefix_hash(&format!("tie {i}")))
+            .find(|&h| place(&flat, h, 0) == Some(2))
+            .expect("some hash prefers worker 2");
+        let v = views(&[(true, 1), (true, 1), (true, 9)]);
+        assert_eq!(place(&v, h, 0), Some(0));
+    }
+
+    #[test]
+    fn affinity_rehomes_when_preferred_worker_leaves() {
+        // with all three eligible, the chosen hash prefers worker 1; when
+        // worker 1 drains, the same hash must deterministically re-home
+        let all = views(&[(true, 0), (true, 0), (true, 0)]);
+        let h = (0..64)
+            .map(|i| prefix_hash(&format!("rehome {i}")))
+            .find(|&h| place(&all, h, 0) == Some(1))
+            .expect("some hash prefers worker 1");
+        let drained = views(&[(true, 0), (false, 0), (true, 0)]);
+        let new_home = place(&drained, h, 0).unwrap();
+        assert_ne!(new_home, 1);
+        assert_eq!(place(&drained, h, 0), Some(new_home), "re-homing not stable");
+    }
+}

@@ -1,0 +1,1104 @@
+//! The router's serving core: the front-tier listener, per-client relay
+//! threads, and the shared worker table (breakers, depths, drain flags)
+//! that placement and health probing both consult.
+//!
+//! # Threading model
+//!
+//! One listener thread polls accept + the stop flag (mirroring
+//! [`crate::server::server`]); each client connection gets a reader thread,
+//! and each `gen` frame a **relay thread** with its own dedicated upstream
+//! connection to the chosen worker. Dedicated upstreams keep the failure
+//! domain per-request: a worker dying fails over exactly the streams on
+//! it, cancel propagates by simply dropping the upstream socket (workers
+//! cancel on disconnect), and no multiplexing table can leak across
+//! requests. All relay threads of a connection share one locked client
+//! writer, exactly like the worker tier's reader/pump pair.
+//!
+//! # Failover contract
+//!
+//! A relay attempt ends one of three ways, and each maps to a fixed
+//! policy (the chaos suite pins it):
+//!
+//! * **Settled** — a terminal frame reached the client (exactly once,
+//!   always: every other path either failed over *before* delivering
+//!   anything terminal or synthesizes exactly one terminal below), or the
+//!   client itself vanished and nothing remains deliverable.
+//! * **Rejected** — the worker answered a typed error frame. Retryable
+//!   rejections ([`WireError::is_retryable`] — the same predicate the
+//!   client's own retry loop uses) and `shutting_down` fail over to
+//!   another worker under the shared [`ADMISSION_RETRY`] backoff budget;
+//!   everything else is relayed to the client verbatim — a different
+//!   worker would say the same thing.
+//! * **WorkerLost** — transport-level failure (connect/handshake/read/
+//!   write/EOF, or the `shard.relay` failpoint). With **zero streamed
+//!   tokens** the request observably never started: re-place it on another
+//!   worker. With tokens already relayed, a resubmit could duplicate
+//!   output the client has consumed — the router instead synthesizes a
+//!   typed `failed` terminal whose error names `failed_over`, and the
+//!   client decides.
+//!
+//! Every failover burns the same backoff budget, so a request placed onto
+//! a dying fleet degrades into a bounded, typed `queue_full` rejection
+//! (retryable — the client's budget may outlive the router's) rather than
+//! an unbounded retry storm.
+//!
+//! # Drain semantics
+//!
+//! `drain(worker)` flips the worker's draining flag: placement skips it,
+//! live relays finish naturally, probes keep running (so its breaker state
+//! stays honest). Router shutdown is a drain of everything: the accept
+//! loop stops, readers break, and relay threads are *joined, not
+//! cancelled* — live streams finish before the process exits. A client
+//! that disconnects, by contrast, has its relays cancelled so workers
+//! reclaim pages immediately (cancel-on-disconnect, propagated one tier).
+
+use super::breaker::{Breaker, BreakerState};
+use super::health::{self, HealthConfig};
+use super::placement::{self, WorkerView};
+use crate::coordinator::FinishReason;
+use crate::server::protocol::{
+    read_frame, ClientFrame, ReadOutcome, ServerFrame, WireError, WireErrorKind, WireEvent,
+    WireRequest, WireResult, MAX_FRAME_LEN, PROTOCOL_VERSION,
+};
+use crate::util::backoff::{Backoff, ADMISSION_RETRY};
+use crate::util::json::Json;
+use crate::util::sync::lock_unpoisoned;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Read-timeout poll interval on both the client and worker sides,
+/// matching the worker tier's polling cadence.
+const POLL: Duration = Duration::from_millis(100);
+
+/// Bound on any one socket write (mirrors the worker tier's bound).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Accept-loop poll interval while no connection is pending.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Bound on dialing one worker. Short: a worker that cannot complete a
+/// loopback/LAN TCP handshake in this long is failover material, and a
+/// long dial would stall its relay thread's cancel polling.
+pub(crate) const CONNECT_TIMEOUT: Duration = Duration::from_millis(1000);
+
+/// Polls (× [`POLL`]) granted to a worker's `hello_ok`/`metrics` answer.
+const HANDSHAKE_POLLS: u32 = 50; // 5s
+
+/// Polls (× [`POLL`]) of mid-stream silence before a worker counts as
+/// lost. Generous — real decode gaps are milliseconds — but it bounds how
+/// long a hung worker can pin a relay thread (and block router drain).
+const STREAM_IDLE_POLLS: u32 = 600; // 60s
+
+// ---------------------------------------------------------------------------
+// shared worker table
+
+/// One backend worker as the router tracks it.
+pub(crate) struct WorkerSlot {
+    pub(crate) addr: String,
+    /// Circuit breaker; also the per-worker serialization point for
+    /// outcome recording (probe and relay threads both feed it).
+    pub(crate) breaker: Mutex<Breaker>,
+    /// Router-placed requests currently relayed to this worker — the
+    /// queue-depth signal placement weighs. (The worker's own engine queue
+    /// is not consulted per request; this gauge is free and current.)
+    pub(crate) depth: AtomicUsize,
+    /// Draining: placement skips it, live streams finish, probes continue.
+    pub(crate) draining: AtomicBool,
+}
+
+impl WorkerSlot {
+    /// May placement choose this worker right now?
+    fn eligible(&self) -> bool {
+        !self.draining.load(Ordering::SeqCst) && lock_unpoisoned(&self.breaker).allows()
+    }
+}
+
+/// State shared by the accept loop, every relay thread, and the prober.
+pub(crate) struct Shared {
+    pub(crate) workers: Vec<WorkerSlot>,
+    pub(crate) spill_margin: usize,
+    /// `gen` frames accepted for relay, ever.
+    pub(crate) relayed: AtomicU64,
+    /// Re-placements after a failed attempt (failover events), ever.
+    pub(crate) failed_over: AtomicU64,
+}
+
+impl Shared {
+    fn new(workers: &[String], cfg: &RouterConfig) -> Shared {
+        Shared {
+            workers: workers
+                .iter()
+                .map(|addr| WorkerSlot {
+                    addr: addr.clone(),
+                    breaker: Mutex::new(Breaker::new(cfg.breaker)),
+                    depth: AtomicUsize::new(0),
+                    draining: AtomicBool::new(false),
+                })
+                .collect(),
+            spill_margin: cfg.spill_margin,
+            relayed: AtomicU64::new(0),
+            failed_over: AtomicU64::new(0),
+        }
+    }
+
+    /// Choose a worker for `prompt`, preferring anything over `avoid`
+    /// (the worker a previous attempt just failed on) but falling back to
+    /// it when it is the only eligible worker left.
+    pub(crate) fn place(&self, prompt: &str, avoid: Option<usize>) -> Option<usize> {
+        // Chaos seam: forged "no eligible worker", driving the placement
+        // backoff path without touching any real worker state.
+        if crate::util::failpoint::fired("shard.place") {
+            return None;
+        }
+        let hash = placement::prefix_hash(prompt);
+        let views = |skip: Option<usize>| -> Vec<WorkerView> {
+            self.workers
+                .iter()
+                .enumerate()
+                .map(|(index, s)| WorkerView {
+                    index,
+                    eligible: skip != Some(index) && s.eligible(),
+                    queue_depth: s.depth.load(Ordering::SeqCst),
+                })
+                .collect()
+        };
+        placement::place(&views(avoid), hash, self.spill_margin)
+            .or_else(|| avoid.and_then(|_| placement::place(&views(None), hash, self.spill_margin)))
+    }
+
+    /// Feed one probe/relay outcome to the worker's breaker, logging state
+    /// transitions (trips and recoveries are the router's key events).
+    pub(crate) fn record_outcome(&self, wi: usize, ok: bool) {
+        let Some(slot) = self.workers.get(wi) else { return };
+        let mut b = lock_unpoisoned(&slot.breaker);
+        let from = b.state();
+        if ok {
+            b.record_success();
+        } else {
+            b.record_failure();
+        }
+        let to = b.state();
+        if from != to {
+            eprintln!(
+                "[router] worker {} breaker {} -> {}",
+                slot.addr,
+                from.name(),
+                to.name()
+            );
+        }
+    }
+
+    /// One router tick for every breaker (Open → HalfOpen countdowns).
+    pub(crate) fn tick_all(&self) {
+        for slot in &self.workers {
+            let mut b = lock_unpoisoned(&slot.breaker);
+            let from = b.state();
+            b.tick();
+            if from != b.state() {
+                eprintln!(
+                    "[router] worker {} breaker {} -> {}",
+                    slot.addr,
+                    from.name(),
+                    b.state().name()
+                );
+            }
+        }
+    }
+
+    fn healthy_count(&self) -> usize {
+        self.workers.iter().filter(|s| lock_unpoisoned(&s.breaker).allows()).count()
+    }
+
+    fn breaker_open_total(&self) -> u64 {
+        self.workers.iter().map(|s| lock_unpoisoned(&s.breaker).open_count()).sum()
+    }
+
+    /// Start draining the worker whose address is `addr`. Returns whether
+    /// any worker matched.
+    fn mark_draining(&self, addr: &str) -> bool {
+        let mut any = false;
+        for slot in self.workers.iter().filter(|s| s.addr == addr) {
+            slot.draining.store(true, Ordering::SeqCst);
+            eprintln!("[router] draining worker {}", slot.addr);
+            any = true;
+        }
+        any
+    }
+
+    /// The aggregated `metrics` frame: router-level counters plus each
+    /// non-open worker's own stats snapshot (fetched over the wire; `null`
+    /// for workers the router will not dial).
+    fn aggregate_stats(&self) -> Json {
+        let mut worker_rows = Vec::new();
+        let mut worker_stats = Vec::new();
+        for slot in &self.workers {
+            let (state, opens) = {
+                let b = lock_unpoisoned(&slot.breaker);
+                (b.state(), b.open_count())
+            };
+            worker_rows.push(Json::obj(vec![
+                ("addr", Json::Str(slot.addr.clone())),
+                ("breaker", Json::Str(state.name().into())),
+                ("draining", Json::Bool(slot.draining.load(Ordering::SeqCst))),
+                ("queue_depth", Json::Num(slot.depth.load(Ordering::SeqCst) as f64)),
+                ("breaker_opens", Json::Num(opens as f64)),
+            ]));
+            worker_stats.push(if state == BreakerState::Open {
+                Json::Null
+            } else {
+                fetch_worker_stats(&slot.addr).unwrap_or(Json::Null)
+            });
+        }
+        Json::obj(vec![
+            (
+                "router",
+                Json::obj(vec![
+                    ("workers_total", Json::Num(self.workers.len() as f64)),
+                    ("workers_healthy", Json::Num(self.healthy_count() as f64)),
+                    ("breaker_open_total", Json::Num(self.breaker_open_total() as f64)),
+                    ("requests_relayed", Json::Num(self.relayed.load(Ordering::Relaxed) as f64)),
+                    (
+                        "requests_failed_over",
+                        Json::Num(self.failed_over.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("workers", Json::Arr(worker_rows)),
+                ]),
+            ),
+            ("workers", Json::Arr(worker_stats)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// router front tier
+
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// Max in-flight relayed requests per client connection (the N+1st
+    /// gets `queue_full`, mirroring the worker tier's cap).
+    pub max_inflight_per_conn: usize,
+    /// Placement's affinity-vs-load tradeoff (see [`placement::place`]):
+    /// affinity holds until the preferred worker is this many requests
+    /// deeper than the shallowest eligible one.
+    pub spill_margin: usize,
+    pub breaker: super::breaker::BreakerConfig,
+    pub health: HealthConfig,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            max_inflight_per_conn: 8,
+            spill_margin: 2,
+            breaker: super::breaker::BreakerConfig::default(),
+            health: HealthConfig::default(),
+        }
+    }
+}
+
+/// A bound-but-not-yet-running router over a fixed worker fleet.
+pub struct Router {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    cfg: RouterConfig,
+    stop: Arc<AtomicBool>,
+}
+
+/// Everything one client-connection thread needs, cloned per accept.
+struct RelayContext {
+    shared: Arc<Shared>,
+    cfg: RouterConfig,
+    stop: Arc<AtomicBool>,
+}
+
+impl Router {
+    /// Bind the front-tier listener. Workers are dialed lazily — a dead
+    /// address at startup is just a worker whose breaker will trip.
+    pub fn bind(addr: &str, workers: &[String], cfg: RouterConfig) -> Result<Router> {
+        if workers.is_empty() {
+            bail!("router needs at least one worker address");
+        }
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(Router {
+            listener,
+            shared: Arc::new(Shared::new(workers, &cfg)),
+            cfg,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Shared stop flag (a `shutdown` control frame sets it): stops the
+    /// accept loop and the prober, then drains — live relays finish.
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Serve until the stop flag is set, then drain: join every connection
+    /// (which joins its relay threads) and the health prober.
+    pub fn run(self) -> Result<()> {
+        self.listener.set_nonblocking(true).context("non-blocking listener")?;
+        let prober = {
+            let shared = Arc::clone(&self.shared);
+            let stop = Arc::clone(&self.stop);
+            let health_cfg = self.cfg.health;
+            std::thread::Builder::new()
+                .name("route-prober".into())
+                .spawn(move || health::run_prober(&shared, &stop, health_cfg))
+                .context("spawning health prober")?
+        };
+        let mut conns: Vec<JoinHandle<()>> = Vec::new();
+        while !self.stop.load(Ordering::SeqCst) {
+            conns.retain(|t| !t.is_finished());
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    let ctx = RelayContext {
+                        shared: Arc::clone(&self.shared),
+                        cfg: self.cfg,
+                        stop: Arc::clone(&self.stop),
+                    };
+                    let t = std::thread::Builder::new()
+                        .name(format!("route-conn-{peer}"))
+                        .spawn(move || handle_client(stream, ctx))
+                        .context("spawning connection thread")?;
+                    conns.push(t);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) => {
+                    // transient accept failures must not kill the fleet's
+                    // only front door — log, back off, keep serving
+                    eprintln!("[router] accept error (continuing): {e}");
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+            }
+        }
+        for t in conns {
+            let _ = t.join();
+        }
+        let _ = prober.join();
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client connections
+
+/// Write one frame to the client (line + flush); a failure marks the
+/// connection dead so every relay thread stops delivering.
+fn send_frame(
+    writer: &Mutex<BufWriter<TcpStream>>,
+    dead: &AtomicBool,
+    frame: &ServerFrame,
+) -> bool {
+    let line = frame.encode();
+    // Poison-tolerant for the same reason as the worker tier: one relay
+    // thread's panic must cost one request, not every later send.
+    let mut w = lock_unpoisoned(writer);
+    let ok = w
+        .write_all(line.as_bytes())
+        .and_then(|_| w.write_all(b"\n"))
+        .and_then(|_| w.flush())
+        .is_ok();
+    if !ok {
+        dead.store(true, Ordering::SeqCst);
+    }
+    ok
+}
+
+/// Serve one client connection: handshake, then a relay thread per `gen`
+/// frame. On exit, live relays are cancelled iff the client is gone;
+/// drain-on-shutdown instead *joins* them so live streams finish.
+fn handle_client(stream: TcpStream, ctx: RelayContext) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(POLL)).is_err()
+        || stream.set_write_timeout(Some(WRITE_TIMEOUT)).is_err()
+    {
+        return;
+    }
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(BufWriter::new(w))),
+        Err(_) => return,
+    };
+    let dead = Arc::new(AtomicBool::new(false));
+    // wire id → cancel flag of the live relay thread serving it
+    let live: Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>> = Arc::new(Mutex::new(HashMap::new()));
+    let mut relays: Vec<JoinHandle<()>> = Vec::new();
+
+    let mut reader = BufReader::new(stream);
+    let mut acc: Vec<u8> = Vec::new();
+    let mut greeted = false;
+    loop {
+        if ctx.stop.load(Ordering::SeqCst) || dead.load(Ordering::SeqCst) {
+            break;
+        }
+        relays.retain(|t| !t.is_finished());
+        let line = match read_frame(&mut reader, &mut acc) {
+            Ok(ReadOutcome::Frame(line)) => line,
+            Ok(ReadOutcome::TimedOut) => continue,
+            Ok(ReadOutcome::Eof) => break,
+            Ok(ReadOutcome::Oversized { len }) => {
+                send_frame(
+                    &writer,
+                    &dead,
+                    &ServerFrame::Error(WireError::new(
+                        None,
+                        WireErrorKind::BadFrame,
+                        format!("frame exceeds {MAX_FRAME_LEN} bytes ({len} and unterminated)"),
+                    )),
+                );
+                break;
+            }
+            Err(_) => break,
+        };
+        let frame = match ClientFrame::decode(&line) {
+            Ok(f) => f,
+            Err(e) => {
+                send_frame(
+                    &writer,
+                    &dead,
+                    &ServerFrame::Error(WireError::new(
+                        None,
+                        WireErrorKind::BadFrame,
+                        format!("unparseable frame: {e}"),
+                    )),
+                );
+                if greeted {
+                    continue;
+                }
+                break;
+            }
+        };
+        match frame {
+            ClientFrame::Hello { version } => {
+                if version != PROTOCOL_VERSION {
+                    send_frame(
+                        &writer,
+                        &dead,
+                        &ServerFrame::Error(WireError::new(
+                            None,
+                            WireErrorKind::UnsupportedVersion {
+                                server: PROTOCOL_VERSION,
+                                client: version,
+                            },
+                            format!("router speaks protocol version {PROTOCOL_VERSION}"),
+                        )),
+                    );
+                    break;
+                }
+                greeted = true;
+                send_frame(&writer, &dead, &ServerFrame::HelloOk { version: PROTOCOL_VERSION });
+            }
+            _ if !greeted => {
+                send_frame(
+                    &writer,
+                    &dead,
+                    &ServerFrame::Error(WireError::new(
+                        None,
+                        WireErrorKind::BadFrame,
+                        "expected hello handshake first",
+                    )),
+                );
+                break;
+            }
+            ClientFrame::Gen(wr) => {
+                handle_gen(&ctx, &live, &writer, &dead, &mut relays, wr);
+            }
+            ClientFrame::Cancel { id } => {
+                // set the relay's cancel flag; it forwards the cancel
+                // upstream and relays the worker's real terminal (or
+                // synthesizes one if the worker dies first)
+                if let Some(flag) = lock_unpoisoned(&live).get(&id) {
+                    flag.store(true, Ordering::SeqCst);
+                }
+            }
+            ClientFrame::Ping { seq } => {
+                send_frame(&writer, &dead, &ServerFrame::Pong { seq });
+            }
+            ClientFrame::Metrics => {
+                send_frame(&writer, &dead, &ServerFrame::Metrics(ctx.shared.aggregate_stats()));
+            }
+            ClientFrame::Drain { worker } => {
+                if ctx.shared.mark_draining(&worker) {
+                    // the aggregated snapshot shows the flagged worker —
+                    // the ack carries the evidence
+                    send_frame(
+                        &writer,
+                        &dead,
+                        &ServerFrame::Metrics(ctx.shared.aggregate_stats()),
+                    );
+                } else {
+                    let known: Vec<&str> =
+                        ctx.shared.workers.iter().map(|s| s.addr.as_str()).collect();
+                    send_frame(
+                        &writer,
+                        &dead,
+                        &ServerFrame::Error(WireError::new(
+                            None,
+                            WireErrorKind::BadFrame,
+                            format!("unknown worker {worker:?} (fleet: {known:?})"),
+                        )),
+                    );
+                }
+            }
+            ClientFrame::Shutdown => {
+                // drain-on-shutdown: stop placing (accept loop + readers
+                // exit), let live streams finish (joined below), detach —
+                // workers keep running and are stopped by their operator
+                ctx.stop.store(true, Ordering::SeqCst);
+                send_frame(&writer, &dead, &ServerFrame::Bye);
+                break;
+            }
+        }
+    }
+
+    // ---- disconnect / drain cleanup --------------------------------------
+    let draining = ctx.stop.load(Ordering::SeqCst) && !dead.load(Ordering::SeqCst);
+    if !draining {
+        // client gone: cancel its live relays so workers reclaim pages now
+        for flag in lock_unpoisoned(&live).values() {
+            flag.store(true, Ordering::SeqCst);
+        }
+    }
+    for t in relays {
+        let _ = t.join();
+    }
+}
+
+/// Admission for one `gen` frame at the router tier: duplicate-id and
+/// per-connection cap checks (typed exactly like the worker tier's), then
+/// a relay thread.
+fn handle_gen(
+    ctx: &RelayContext,
+    live: &Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>,
+    writer: &Arc<Mutex<BufWriter<TcpStream>>>,
+    dead: &Arc<AtomicBool>,
+    relays: &mut Vec<JoinHandle<()>>,
+    wr: WireRequest,
+) {
+    let rejection = {
+        let map = lock_unpoisoned(live);
+        if map.contains_key(&wr.id) {
+            Some(WireError::new(
+                Some(wr.id),
+                WireErrorKind::BadFrame,
+                format!("request id {} is already in flight on this connection", wr.id),
+            ))
+        } else if map.len() >= ctx.cfg.max_inflight_per_conn {
+            Some(WireError::new(
+                Some(wr.id),
+                WireErrorKind::QueueFull { capacity: ctx.cfg.max_inflight_per_conn },
+                format!("connection in-flight cap reached ({})", ctx.cfg.max_inflight_per_conn),
+            ))
+        } else {
+            None
+        }
+    };
+    if let Some(e) = rejection {
+        send_frame(writer, dead, &ServerFrame::Error(e));
+        return;
+    }
+    let id = wr.id;
+    let cancel = Arc::new(AtomicBool::new(false));
+    lock_unpoisoned(live).insert(id, Arc::clone(&cancel));
+    ctx.shared.relayed.fetch_add(1, Ordering::Relaxed);
+    let shared = Arc::clone(&ctx.shared);
+    let writer2 = Arc::clone(writer);
+    let dead2 = Arc::clone(dead);
+    let live2 = Arc::clone(live);
+    let spawned = std::thread::Builder::new().name(format!("route-relay-{id}")).spawn(move || {
+        relay_request(&shared, &wr, &writer2, &dead2, &cancel);
+        lock_unpoisoned(&live2).remove(&id);
+    });
+    match spawned {
+        Ok(t) => relays.push(t),
+        Err(e) => {
+            // thread exhaustion is backpressure: undo the bookkeeping and
+            // reject retryable
+            lock_unpoisoned(live).remove(&id);
+            send_frame(
+                writer,
+                dead,
+                &ServerFrame::Error(WireError::new(
+                    Some(id),
+                    WireErrorKind::QueueFull { capacity: ctx.cfg.max_inflight_per_conn },
+                    format!("cannot spawn relay thread: {e}"),
+                )),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the relay itself
+
+/// How one attempt at relaying a request through one worker ended.
+enum RelayOutcome {
+    /// The relay is complete: a terminal frame reached the client, or the
+    /// client itself vanished and nothing remains deliverable. The worker
+    /// is blameless either way.
+    Settled,
+    /// The worker answered a typed rejection; nothing was delivered.
+    Rejected(WireError),
+    /// Transport-level failure with `tokens` already relayed to the client.
+    WorkerLost { tokens: usize, cause: String },
+}
+
+/// Drive one request to a terminal outcome: place, relay, and on failure
+/// either fail over (nothing delivered yet) or synthesize the one honest
+/// terminal (output already streamed). Exactly one terminal frame reaches
+/// the client on every path through this function.
+fn relay_request(
+    shared: &Shared,
+    wr: &WireRequest,
+    writer: &Mutex<BufWriter<TcpStream>>,
+    dead: &AtomicBool,
+    cancel: &AtomicBool,
+) {
+    let mut backoff = Backoff::new(ADMISSION_RETRY);
+    let mut avoid: Option<usize> = None;
+    let mut attempts: u32 = 0;
+    let mut last_failure = String::from("no worker attempted");
+    loop {
+        if cancel.load(Ordering::SeqCst) {
+            // cancelled between attempts: nothing is running upstream, so
+            // the router owns the terminal
+            send_frame(
+                writer,
+                dead,
+                &ServerFrame::Event(synth_terminal(
+                    wr.id,
+                    FinishReason::Cancelled,
+                    "cancelled by client before a worker delivered a result".to_string(),
+                )),
+            );
+            return;
+        }
+        let Some(wi) = shared.place(&wr.prompt, avoid) else {
+            last_failure = "no eligible worker (breakers open or fleet draining)".to_string();
+            if sleep_backoff(&mut backoff) {
+                continue;
+            }
+            break;
+        };
+        if attempts > 0 {
+            shared.failed_over.fetch_add(1, Ordering::Relaxed);
+        }
+        attempts += 1;
+        let Some(slot) = shared.workers.get(wi) else { break };
+        slot.depth.fetch_add(1, Ordering::SeqCst);
+        let outcome = relay_stream(&slot.addr, wr, writer, dead, cancel);
+        slot.depth.fetch_sub(1, Ordering::SeqCst);
+        match outcome {
+            RelayOutcome::Settled => {
+                shared.record_outcome(wi, true);
+                return;
+            }
+            RelayOutcome::Rejected(e) => {
+                let failover = if e.is_retryable() {
+                    // backpressure: the worker is healthy, just full — no
+                    // breaker penalty
+                    true
+                } else if matches!(e.kind, WireErrorKind::ShuttingDown) {
+                    // a withdrawing worker is failure evidence AND needs a
+                    // different destination, not a retry of the same one
+                    shared.record_outcome(wi, false);
+                    true
+                } else {
+                    false
+                };
+                if !failover {
+                    // deterministic rejection (too_large, bad_frame, ...):
+                    // relay it verbatim — another worker would say the same
+                    send_frame(writer, dead, &ServerFrame::Error(e));
+                    return;
+                }
+                last_failure =
+                    format!("worker {} rejected: {} ({})", slot.addr, e.message, e.kind.name());
+                avoid = Some(wi);
+                if !sleep_backoff(&mut backoff) {
+                    break;
+                }
+            }
+            RelayOutcome::WorkerLost { tokens, cause } => {
+                shared.record_outcome(wi, false);
+                if cancel.load(Ordering::SeqCst) {
+                    // the client no longer wants a result and the worker is
+                    // gone (its disconnect handling reclaims the request):
+                    // settle with a synthesized cancel terminal
+                    send_frame(
+                        writer,
+                        dead,
+                        &ServerFrame::Event(synth_terminal(
+                            wr.id,
+                            FinishReason::Cancelled,
+                            format!(
+                                "cancelled by client; worker {} was lost before its terminal \
+                                 arrived ({cause})",
+                                slot.addr
+                            ),
+                        )),
+                    );
+                    return;
+                }
+                if tokens > 0 {
+                    // output already reached the client: a silent resubmit
+                    // would duplicate it — surface a typed, explicit failure
+                    send_frame(
+                        writer,
+                        dead,
+                        &ServerFrame::Event(synth_terminal(
+                            wr.id,
+                            FinishReason::Failed,
+                            format!(
+                                "worker {} lost after {tokens} streamed tokens; this request \
+                                 is not failed_over because a resubmit would duplicate \
+                                 delivered output — resubmit to regenerate ({cause})",
+                                slot.addr
+                            ),
+                        )),
+                    );
+                    return;
+                }
+                last_failure = format!("worker {} lost: {cause}", slot.addr);
+                avoid = Some(wi);
+                if !sleep_backoff(&mut backoff) {
+                    break;
+                }
+            }
+        }
+    }
+    // failover budget exhausted with nothing delivered: typed, retryable —
+    // the client's own budget may outlive the router's
+    send_frame(
+        writer,
+        dead,
+        &ServerFrame::Error(WireError::new(
+            Some(wr.id),
+            WireErrorKind::QueueFull { capacity: shared.workers.len() },
+            format!("failover budget exhausted after {attempts} attempt(s); last: {last_failure}"),
+        )),
+    );
+}
+
+/// Burn one step of the failover budget; `false` means exhausted.
+fn sleep_backoff(backoff: &mut Backoff) -> bool {
+    match backoff.next_delay() {
+        Some(d) => {
+            std::thread::sleep(d);
+            true
+        }
+        None => false,
+    }
+}
+
+/// A router-synthesized terminal for a request whose worker cannot supply
+/// one. Empty output, zeroed timings, and an `error` string that tells the
+/// client what actually happened.
+fn synth_terminal(id: u64, reason: FinishReason, error: String) -> WireEvent {
+    let result = WireResult {
+        id,
+        tokens: Vec::new(),
+        text: String::new(),
+        forced_logprob: 0.0,
+        forced_count: 0,
+        prompt_len: 0,
+        ttft_ms: 0.0,
+        total_ms: 0.0,
+        queue_wait_ms: 0.0,
+        reason,
+        error: Some(error),
+    };
+    match reason {
+        FinishReason::Cancelled => WireEvent::Cancelled(result),
+        _ => WireEvent::Failed(result),
+    }
+}
+
+/// Relay one request over one dedicated worker connection until a terminal
+/// outcome, forwarding every event frame to the client as it arrives.
+fn relay_stream(
+    addr: &str,
+    wr: &WireRequest,
+    writer: &Mutex<BufWriter<TcpStream>>,
+    dead: &AtomicBool,
+    cancel: &AtomicBool,
+) -> RelayOutcome {
+    let lost = |tokens: usize, cause: String| RelayOutcome::WorkerLost { tokens, cause };
+    let mut up = match Upstream::connect(addr) {
+        Ok(up) => up,
+        Err(e) => return lost(0, format!("{e:#}")),
+    };
+    if let Err(e) = up.send(&ClientFrame::Gen(wr.clone())) {
+        return lost(0, format!("{e:#}"));
+    }
+    let mut tokens = 0usize;
+    let mut cancel_sent = false;
+    let mut idle_polls = 0u32;
+    loop {
+        if dead.load(Ordering::SeqCst) {
+            // the client writer broke: nothing can be delivered anymore;
+            // dropping the upstream socket cancels the request worker-side
+            return RelayOutcome::Settled;
+        }
+        if !cancel_sent && cancel.load(Ordering::SeqCst) {
+            cancel_sent = true;
+            if let Err(e) = up.send(&ClientFrame::Cancel { id: wr.id }) {
+                return lost(tokens, format!("lost while cancelling: {e:#}"));
+            }
+        }
+        let frame = match up.recv_step() {
+            Ok(Some(f)) => {
+                idle_polls = 0;
+                f
+            }
+            Ok(None) => {
+                idle_polls += 1;
+                if idle_polls >= STREAM_IDLE_POLLS {
+                    return lost(
+                        tokens,
+                        format!("silent for {STREAM_IDLE_POLLS} read polls mid-stream"),
+                    );
+                }
+                continue;
+            }
+            Err(e) => return lost(tokens, format!("{e:#}")),
+        };
+        match frame {
+            ServerFrame::Event(ev) if ev.id() == wr.id => {
+                if matches!(ev, WireEvent::Token { .. }) {
+                    tokens += 1;
+                }
+                let terminal = ev.is_terminal();
+                if terminal && !cancel_sent && matches!(ev, WireEvent::Cancelled(_)) {
+                    // a cancel nobody asked for is the worker withdrawing
+                    // (its shutdown cancels live work): treat it as worker
+                    // loss so zero-token requests fail over instead of
+                    // surfacing a cancel the client never requested
+                    return lost(tokens, "worker cancelled the request unprompted".to_string());
+                }
+                if !send_frame(writer, dead, &ServerFrame::Event(ev)) {
+                    return RelayOutcome::Settled; // client gone mid-relay
+                }
+                if terminal {
+                    return RelayOutcome::Settled;
+                }
+            }
+            ServerFrame::Event(ev) => {
+                return lost(tokens, format!("worker sent an event for unknown id {}", ev.id()));
+            }
+            ServerFrame::Error(e) if e.id == Some(wr.id) => {
+                return RelayOutcome::Rejected(e);
+            }
+            ServerFrame::Error(e) => {
+                return lost(
+                    tokens,
+                    format!("worker connection error: {} ({})", e.message, e.kind.name()),
+                );
+            }
+            ServerFrame::Pong { .. } => {} // harmless keepalive echo
+            other => {
+                return lost(tokens, format!("unexpected worker frame {other:?}"));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// upstream (router → worker) connections
+
+/// One dedicated connection to a worker, already past the version
+/// handshake. Also used (short-lived) by metrics aggregation. The health
+/// prober deliberately does its own raw probe IO instead (see [`health`])
+/// so `shard.relay` hit counts stay a pure function of relayed traffic.
+pub(crate) struct Upstream {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    acc: Vec<u8>,
+}
+
+impl Upstream {
+    /// Dial and version-handshake a worker within bounded time.
+    pub(crate) fn connect(addr: &str) -> Result<Upstream> {
+        let sock = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving worker {addr}"))?
+            .next()
+            .ok_or_else(|| anyhow!("worker address {addr} resolves to nothing"))?;
+        let stream = TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT)
+            .with_context(|| format!("dialing worker {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(POLL)).context("setting read timeout")?;
+        stream.set_write_timeout(Some(WRITE_TIMEOUT)).context("setting write timeout")?;
+        let reader = BufReader::new(stream.try_clone().context("cloning worker stream")?);
+        let mut up = Upstream { reader, writer: BufWriter::new(stream), acc: Vec::new() };
+        up.send(&ClientFrame::Hello { version: PROTOCOL_VERSION })?;
+        for _ in 0..HANDSHAKE_POLLS {
+            match up.recv_step()? {
+                Some(ServerFrame::HelloOk { version }) if version == PROTOCOL_VERSION => {
+                    return Ok(up);
+                }
+                Some(ServerFrame::HelloOk { version }) => {
+                    bail!("worker {addr} speaks protocol v{version}, router v{PROTOCOL_VERSION}")
+                }
+                Some(ServerFrame::Error(e)) => {
+                    bail!(
+                        "worker {addr} rejected the handshake: {} ({})",
+                        e.message,
+                        e.kind.name()
+                    )
+                }
+                Some(other) => bail!("worker {addr} answered hello with {other:?}"),
+                None => {}
+            }
+        }
+        bail!("worker {addr} did not answer the hello handshake")
+    }
+
+    /// Write one frame (line-delimited, flushed).
+    pub(crate) fn send(&mut self, frame: &ClientFrame) -> Result<()> {
+        let line = frame.encode();
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// One bounded read attempt: `Ok(None)` on timeout (poll the caller's
+    /// flags and come back), a decoded frame otherwise; EOF and oversized
+    /// lines are transport errors.
+    pub(crate) fn recv_step(&mut self) -> Result<Option<ServerFrame>> {
+        match read_frame(&mut self.reader, &mut self.acc)? {
+            ReadOutcome::Frame(line) => {
+                // Chaos seam: forged upstream transport failure. Evaluated
+                // only when a frame actually arrived — never on timeout
+                // polls — so hit counts are a pure function of the relayed
+                // workload and same-seed chaos runs see identical fault
+                // logs.
+                crate::failpoint!("shard.relay", |f| Err(anyhow!("{f}: worker connection reset")));
+                let frame =
+                    ServerFrame::decode(&line).map_err(|e| anyhow!("bad worker frame: {e}"))?;
+                Ok(Some(frame))
+            }
+            ReadOutcome::TimedOut => Ok(None),
+            ReadOutcome::Eof => bail!("worker closed the connection"),
+            ReadOutcome::Oversized { len } => {
+                bail!("worker frame exceeds {MAX_FRAME_LEN} bytes ({len} so far)")
+            }
+        }
+    }
+}
+
+/// Fetch one worker's own `metrics` snapshot for aggregation; any failure
+/// degrades to `None` (the aggregate reports `null` for that worker).
+fn fetch_worker_stats(addr: &str) -> Option<Json> {
+    let mut up = Upstream::connect(addr).ok()?;
+    up.send(&ClientFrame::Metrics).ok()?;
+    for _ in 0..HANDSHAKE_POLLS {
+        match up.recv_step().ok()? {
+            Some(ServerFrame::Metrics(stats)) => return Some(stats),
+            Some(_) | None => {}
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shared(addrs: &[&str]) -> Shared {
+        let workers: Vec<String> = addrs.iter().map(|a| a.to_string()).collect();
+        Shared::new(&workers, &RouterConfig::default())
+    }
+
+    fn trip(shared: &Shared, wi: usize) {
+        let threshold = RouterConfig::default().breaker.failure_threshold;
+        for _ in 0..threshold {
+            shared.record_outcome(wi, false);
+        }
+    }
+
+    #[test]
+    fn place_skips_tripped_workers() {
+        let s = shared(&["a:1", "b:2", "c:3"]);
+        trip(&s, 1);
+        for i in 0..16 {
+            let wi = s.place(&format!("prompt {i}"), None);
+            assert_ne!(wi, Some(1), "placed on an open breaker");
+            assert!(wi.is_some(), "two workers remain eligible");
+        }
+    }
+
+    #[test]
+    fn place_avoids_failed_worker_but_falls_back_when_alone() {
+        let s = shared(&["a:1", "b:2"]);
+        trip(&s, 1);
+        // worker 0 just failed this request (avoid), worker 1 is tripped:
+        // better to retry the avoided worker than to place nowhere
+        assert_eq!(s.place("p", Some(0)), Some(0));
+        // with worker 1 healthy, avoidance holds
+        let s = shared(&["a:1", "b:2"]);
+        assert_eq!(s.place("p", Some(0)), Some(1));
+    }
+
+    #[test]
+    fn place_returns_none_when_fleet_is_dark() {
+        let s = shared(&["a:1", "b:2"]);
+        trip(&s, 0);
+        trip(&s, 1);
+        assert_eq!(s.place("p", None), None);
+        assert_eq!(s.place("p", Some(0)), None, "fallback must not resurrect open breakers");
+    }
+
+    #[test]
+    fn draining_worker_takes_no_placements() {
+        let s = shared(&["a:1", "b:2"]);
+        assert!(s.mark_draining("a:1"));
+        assert!(!s.mark_draining("nope:9"), "unknown drain target must report false");
+        for i in 0..16 {
+            assert_eq!(s.place(&format!("p{i}"), None), Some(1));
+        }
+    }
+
+    #[test]
+    fn record_outcome_success_resets_failure_streak() {
+        let s = shared(&["a:1"]);
+        s.record_outcome(0, false);
+        s.record_outcome(0, false);
+        s.record_outcome(0, true);
+        s.record_outcome(0, false);
+        s.record_outcome(0, false);
+        assert_eq!(s.place("p", None), Some(0), "streak was reset, breaker stays closed");
+    }
+
+    #[test]
+    fn synth_terminal_reason_picks_event_variant() {
+        let cancelled = synth_terminal(7, FinishReason::Cancelled, "why".to_string());
+        assert!(matches!(&cancelled, WireEvent::Cancelled(r) if r.id == 7));
+        let failed = synth_terminal(8, FinishReason::Failed, "failed_over".to_string());
+        match &failed {
+            WireEvent::Failed(r) => {
+                assert_eq!(r.error.as_deref(), Some("failed_over"));
+                assert!(r.tokens.is_empty() && r.text.is_empty());
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        // synthesized terminals must survive the wire like real ones
+        let line = ServerFrame::Event(failed.clone()).encode();
+        assert_eq!(ServerFrame::decode(&line), Ok(ServerFrame::Event(failed)));
+    }
+}

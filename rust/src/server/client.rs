@@ -10,7 +10,8 @@
 //! `repro client`, and [`run_load`]:
 //!
 //! * **retried** — `queue_full` rejections (typed retryable backpressure,
-//!   [`super::protocol::WireErrorKind::retryable`]), and transport errors
+//!   [`super::protocol::WireError::is_retryable`] — the same classification
+//!   the router's failover path uses), and transport errors
 //!   (reset, EOF mid-session, failed reconnect) *provided no token event
 //!   arrived that attempt* — the request observably never started
 //!   generating, so resubmitting cannot double-generate;
@@ -145,6 +146,25 @@ impl Client {
         }
     }
 
+    /// Keepalive round-trip: send a `ping` and block until its `pong`
+    /// echoes `seq` back. Events of concurrent requests may interleave and
+    /// are skipped, mirroring [`Client::metrics`].
+    pub fn ping(&mut self, seq: u64) -> Result<()> {
+        self.send(&ClientFrame::Ping { seq })?;
+        loop {
+            match self.recv()? {
+                ServerFrame::Pong { seq: got } if got == seq => return Ok(()),
+                ServerFrame::Pong { seq: got } => {
+                    bail!("pong echoed seq {got}, expected {seq}")
+                }
+                ServerFrame::Event(_) => continue,
+                ServerFrame::Error(e) => bail!("ping failed: {} ({})", e.message,
+                                               e.kind.name()),
+                other => bail!("expected pong, got {other:?}"),
+            }
+        }
+    }
+
     /// Fetch the engine metrics + cache accounting snapshot.
     pub fn metrics(&mut self) -> Result<Json> {
         self.send(&ClientFrame::Metrics)?;
@@ -202,7 +222,7 @@ pub fn generate_with_retry(
                 .and_then(|client| client.drive(req, &mut events)),
         };
         match attempt {
-            Ok(GenOutcome::Rejected(e)) if e.kind.retryable() => {
+            Ok(GenOutcome::Rejected(e)) if e.is_retryable() => {
                 last_rejection = Some(e);
                 last_err = None;
             }

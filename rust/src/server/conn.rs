@@ -381,6 +381,22 @@ pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
                 break;
             }
             ClientFrame::Gen(wr) => handle_gen(&ctx, &table, &writer, &dead, &sink, wr),
+            ClientFrame::Ping { seq } => {
+                // Keepalive: prove the reader is alive and the socket
+                // writable. The router's health prober sends one per probe;
+                // idle clients may use it to keep NAT mappings warm.
+                send(&writer, &dead, &ServerFrame::Pong { seq });
+            }
+            ClientFrame::Drain { worker } => {
+                // Placement is the router's job; a worker has no peer list
+                // to drain from. Answering typed (instead of ignoring)
+                // catches a client pointed at a worker instead of a router.
+                send(&writer, &dead, &ServerFrame::Error(WireError::new(
+                    None,
+                    WireErrorKind::BadFrame,
+                    format!("drain({worker}) is a router control frame; this is a worker"),
+                )));
+            }
             ClientFrame::Cancel { id } => {
                 // Unknown/finished ids are a no-op, mirroring Engine::cancel.
                 let engine_id = lock_unpoisoned(&table).by_wire.get(&id).copied();

@@ -9,8 +9,8 @@
 //! each identified by a client-chosen id, answered by a stream of `event`
 //! frames mirroring [`crate::coordinator::GenEvent`] one-to-one
 //! (queued / prefilled / token+text_delta+logprob / terminal-with-result)
-//! — plus `cancel`, `metrics` (engine + cache accounting snapshot), and
-//! `shutdown` control frames. Admission rejections arrive as typed
+//! — plus `cancel`, `ping`/`pong` keepalives, `metrics` (engine + cache
+//! accounting snapshot), and `shutdown` control frames. Admission rejections arrive as typed
 //! `error` frames mirroring [`crate::coordinator::SubmitError`]:
 //! `queue_full` (retryable backpressure — from the engine's bounded
 //! admission queue *or* the server's per-connection/global in-flight

@@ -35,10 +35,13 @@
 //!    "temperature":0,"top_k":0,"seed":"0","priority":0,
 //!    "deadline_ms":"2000"?,"stream":true}
 //!   {"op":"cancel","id":"1"}
+//!   {"op":"ping","seq":"42"}
 //!   {"op":"metrics"}
+//!   {"op":"drain","worker":"127.0.0.1:4701"}   (router control; workers reject)
 //!   {"op":"shutdown"}
 //! server → client
 //!   {"op":"hello_ok","version":1}
+//!   {"op":"pong","seq":"42"}
 //!   {"op":"event","type":"queued","id":"1"}
 //!   {"op":"event","type":"prefilled","id":"1","prompt_len":8,"ttft_ms":3.1}
 //!   {"op":"event","type":"token","id":"1","token":104,"text_delta":"h",
@@ -477,6 +480,17 @@ impl WireError {
         WireError::new(Some(wire_id), kind, e.to_string())
     }
 
+    /// The one retryability classification in the codebase: both the
+    /// client's reconnect-and-retry loop and the router's failover path
+    /// call this, so "what is safe to re-submit" can never drift between
+    /// tiers. Only backpressure (`queue_full`) qualifies — `too_large`,
+    /// `bad_frame`, and version mismatches reproduce deterministically, and
+    /// `shutting_down` needs a *different* destination, not a retry of the
+    /// same one (the router's relay loop handles that distinction).
+    pub fn is_retryable(&self) -> bool {
+        self.kind.retryable()
+    }
+
     fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("op", Json::Str("error".into())),
@@ -532,7 +546,18 @@ pub enum ClientFrame {
     Hello { version: u64 },
     Gen(WireRequest),
     Cancel { id: u64 },
+    /// Keepalive/liveness check; the server answers [`ServerFrame::Pong`]
+    /// echoing `seq`. The router's health prober sends one per probe tick
+    /// (with `seq` = tick count), and any client may use it to verify a
+    /// connection is still being served between requests.
+    Ping { seq: u64 },
     Metrics,
+    /// Router control frame: stop placing new requests on the named worker,
+    /// let its live streams finish, then leave it detached. Answered with an
+    /// aggregated `metrics` frame reflecting the new placement state. A
+    /// plain worker answers `bad_frame` — draining a worker is the router's
+    /// job, not the worker's.
+    Drain { worker: String },
     Shutdown,
 }
 
@@ -549,7 +574,15 @@ impl ClientFrame {
             ClientFrame::Cancel { id } => {
                 Json::obj(vec![("op", Json::Str("cancel".into())), ("id", u64_json(*id))]).to_string()
             }
+            ClientFrame::Ping { seq } => {
+                Json::obj(vec![("op", Json::Str("ping".into())), ("seq", u64_json(*seq))]).to_string()
+            }
             ClientFrame::Metrics => Json::obj(vec![("op", Json::Str("metrics".into()))]).to_string(),
+            ClientFrame::Drain { worker } => Json::obj(vec![
+                ("op", Json::Str("drain".into())),
+                ("worker", Json::Str(worker.clone())),
+            ])
+            .to_string(),
             ClientFrame::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".into()))]).to_string(),
         }
     }
@@ -560,7 +593,9 @@ impl ClientFrame {
             "hello" => Ok(ClientFrame::Hello { version: u64_field(&j, "version")? }),
             "gen" => Ok(ClientFrame::Gen(WireRequest::from_json(&j)?)),
             "cancel" => Ok(ClientFrame::Cancel { id: u64_field(&j, "id")? }),
+            "ping" => Ok(ClientFrame::Ping { seq: u64_field(&j, "seq")? }),
             "metrics" => Ok(ClientFrame::Metrics),
+            "drain" => Ok(ClientFrame::Drain { worker: str_field(&j, "worker")?.to_string() }),
             "shutdown" => Ok(ClientFrame::Shutdown),
             other => Err(format!("unknown op {other:?}")),
         }
@@ -573,6 +608,8 @@ pub enum ServerFrame {
     HelloOk { version: u64 },
     Event(WireEvent),
     Error(WireError),
+    /// Answers [`ClientFrame::Ping`], echoing its `seq`.
+    Pong { seq: u64 },
     /// Engine metrics + cache accounting snapshot (see
     /// [`crate::server::conn`] for the exact shape). The `metrics` object
     /// carries the robustness counters `requests_shed` / `requests_retried`
@@ -595,6 +632,9 @@ impl ServerFrame {
             .to_string(),
             ServerFrame::Event(ev) => ev.to_json().to_string(),
             ServerFrame::Error(e) => e.to_json().to_string(),
+            ServerFrame::Pong { seq } => {
+                Json::obj(vec![("op", Json::Str("pong".into())), ("seq", u64_json(*seq))]).to_string()
+            }
             ServerFrame::Metrics(stats) => Json::obj(vec![
                 ("op", Json::Str("metrics".into())),
                 ("stats", stats.clone()),
@@ -610,6 +650,7 @@ impl ServerFrame {
             "hello_ok" => Ok(ServerFrame::HelloOk { version: u64_field(&j, "version")? }),
             "event" => Ok(ServerFrame::Event(WireEvent::from_json(&j)?)),
             "error" => Ok(ServerFrame::Error(WireError::from_json(&j)?)),
+            "pong" => Ok(ServerFrame::Pong { seq: u64_field(&j, "seq")? }),
             "metrics" => {
                 Ok(ServerFrame::Metrics(j.get("stats").cloned().unwrap_or(Json::Null)))
             }
@@ -739,7 +780,9 @@ mod tests {
             ClientFrame::Hello { version: PROTOCOL_VERSION },
             ClientFrame::Gen(req),
             ClientFrame::Cancel { id: 1 << 55 },
+            ClientFrame::Ping { seq: u64::MAX }, // >2^53: exercises the string path
             ClientFrame::Metrics,
+            ClientFrame::Drain { worker: "127.0.0.1:4701".into() },
             ClientFrame::Shutdown,
         ] {
             let enc = f.encode();
@@ -784,6 +827,7 @@ mod tests {
                 WireErrorKind::UnsupportedVersion { server: 1, client: 2 },
                 "speak version 1",
             )),
+            ServerFrame::Pong { seq: (1 << 61) + 7 },
             ServerFrame::Metrics(Json::parse(r#"{"requests_completed":3}"#).unwrap()),
             ServerFrame::Bye,
         ] {
@@ -791,6 +835,39 @@ mod tests {
             assert!(!enc.contains('\n'));
             assert_eq!(ServerFrame::decode(&enc).unwrap(), f, "round trip of {enc}");
         }
+    }
+
+    #[test]
+    fn retryable_set_is_pinned() {
+        // `is_retryable` gates what the client re-submits on reconnect AND
+        // what the router fails over to another worker — widening it means
+        // re-running requests whose failure was deterministic. This test
+        // pins the exact set so any change is a deliberate one.
+        let e = |kind| WireError::new(Some(1), kind, "m");
+        assert!(e(WireErrorKind::QueueFull { capacity: 4 }).is_retryable());
+        assert!(!e(WireErrorKind::TooLarge { need: 9, budget: 4 }).is_retryable());
+        assert!(!e(WireErrorKind::ShuttingDown).is_retryable());
+        assert!(!e(WireErrorKind::BadFrame).is_retryable());
+        assert!(
+            !e(WireErrorKind::UnsupportedVersion { server: 1, client: 2 }).is_retryable()
+        );
+        // the method and the kind-level predicate must agree
+        assert_eq!(
+            e(WireErrorKind::QueueFull { capacity: 1 }).is_retryable(),
+            WireErrorKind::QueueFull { capacity: 1 }.retryable()
+        );
+    }
+
+    #[test]
+    fn ping_pong_echo_seq() {
+        let enc = ClientFrame::Ping { seq: 9007199254740993 }.encode();
+        assert!(enc.contains("\"9007199254740993\""), "seq not a string: {enc}");
+        let ServerFrame::Pong { seq } =
+            ServerFrame::decode(r#"{"op":"pong","seq":"9007199254740993"}"#).unwrap()
+        else {
+            panic!("not a pong");
+        };
+        assert_eq!(seq, 9007199254740993);
     }
 
     #[test]

@@ -57,15 +57,21 @@
 //! | `conn.read`     | server-side read fails mid-frame                 |
 //! | `client.send`   | client frame write fails                         |
 //! | `client.recv`   | client frame read fails                          |
+//! | `shard.place`   | shard router placement ⇒ "no eligible worker"    |
+//! | `shard.probe`   | shard router health probe forged to fail         |
+//! | `shard.relay`   | router→worker transport fails (per frame read)   |
 //!
 //! The healing layers these sites exercise: the client retries retryable
 //! rejections and pre-token transport errors with deterministic capped
 //! exponential backoff (`util/backoff.rs`), the server bounds each
 //! connection's event queue and sheds (cancels + reclaims) stalled
 //! consumers, and the engine fails individual requests — never the whole
-//! worker — on append/stage faults. Terminal events are **never** injected
-//! away at the router: exactly-once terminal delivery is the invariant the
-//! chaos suite asserts after every schedule.
+//! worker — on append/stage faults. The shard router (`router/`) fails
+//! over retryable rejections and zero-token worker losses to another
+//! worker, and synthesizes a typed `failed` terminal after streamed tokens
+//! rather than resubmitting. Terminal events are **never** injected away
+//! at the coordinator router: exactly-once terminal delivery is the
+//! invariant the chaos suite asserts after every schedule.
 //!
 //! # Writing a chaos schedule
 //!

@@ -13,6 +13,10 @@
 //!   * same-seed reruns inject the identical fault sequence (schedules
 //!     are functions of hit counters, never the wall clock).
 //!
+//! The `chaos_router_*` tests put a worker fleet behind the shard router
+//! (`router/`) and hold the same invariants across worker death, zero-token
+//! failover, mid-stream loss, graceful drain, and breaker trip/recovery.
+//!
 //! The failpoint registry is process-global, so every test serializes on
 //! [`GATE`] and leaves the process disarmed. Needs artifacts/ and skips
 //! gracefully without it — same convention as server_wire_tests.rs. The
@@ -20,6 +24,7 @@
 
 use recalkv::artifacts::Manifest;
 use recalkv::coordinator::{Coordinator, Engine, EngineConfig};
+use recalkv::router::{BreakerConfig, HealthConfig, Router, RouterConfig};
 use recalkv::server::{
     generate_with_retry, run_load, Client, ClientFrame, GenOutcome, Server, ServerConfig,
     ServerFrame, WireErrorKind, WireEvent, WireRequest, MAX_FRAME_LEN,
@@ -30,8 +35,9 @@ use recalkv::util::json::Json;
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::TcpStream;
-use std::path::PathBuf;
-use std::sync::Mutex;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 const PROMPT: &str = "the dog barks . the cat sleeps . ";
@@ -663,6 +669,355 @@ fn chaos_same_seed_rerun_injects_identical_fault_sequence() {
         let j = await_quiescence(&addr, "router.submit prob(0.5,2024) rerun");
         assert_leak_free(&j, "router.submit prob(0.5,2024) rerun");
         stop_server(&addr, coord, worker);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// shard-router faults: worker death, failover, breaker recovery, drain
+
+/// A worker in a router fleet: its own engine + wire server. Killed via
+/// the stop flag rather than a `shutdown` frame so the worker never closes
+/// a socket first — its port holds no worker-side TIME_WAIT and can be
+/// rebound immediately for the restart/recovery test.
+struct FleetWorker {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    coord: Coordinator,
+    thread: std::thread::JoinHandle<anyhow::Result<()>>,
+}
+
+fn spawn_fleet_worker(dir: &Path, bind: &str) -> Result<FleetWorker, String> {
+    let dir_buf = dir.to_path_buf();
+    let coord = Coordinator::spawn(move || {
+        let man = Manifest::load(&dir_buf)?;
+        let rt = recalkv::runtime::Runtime::cpu()?;
+        let model = man.model("tiny-mha")?;
+        Engine::new(&rt, model, model.variant("recal@50")?, EngineConfig::default())
+    });
+    let server = match Server::bind(bind, coord.handle(), ServerConfig::default()) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = coord.shutdown();
+            return Err(format!("{e:#}"));
+        }
+    };
+    let addr = server.local_addr().expect("worker addr").to_string();
+    let stop = server.stop_flag();
+    let thread = std::thread::spawn(move || server.run());
+    Ok(FleetWorker { addr, stop, coord, thread })
+}
+
+impl FleetWorker {
+    /// Stop the worker the way a crash looks from the router: the listener
+    /// goes dark and in-flight relay sockets see EOF. Returns the freed
+    /// address so the recovery test can rebind it.
+    fn kill(self) -> String {
+        self.stop.store(true, Ordering::SeqCst);
+        self.thread.join().expect("worker thread panicked").expect("worker run failed");
+        self.coord.shutdown().expect("worker coordinator shutdown");
+        self.addr
+    }
+}
+
+/// Rebind a worker on an address a killed one just freed. A probe caught
+/// mid-flight by the kill leaves a worker-side TIME_WAIT that blocks the
+/// rebind for up to the kernel's 60s — rare, so the deadline outlasts it.
+fn restart_worker(dir: &Path, addr: &str) -> FleetWorker {
+    let deadline = Instant::now() + Duration::from_secs(75);
+    loop {
+        match spawn_fleet_worker(dir, addr) {
+            Ok(w) => return w,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "could not rebind {addr}: {e}");
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+fn spawn_router(
+    workers: &[String],
+    rcfg: RouterConfig,
+) -> (String, Arc<AtomicBool>, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let router = Router::bind("127.0.0.1:0", workers, rcfg).expect("router bind");
+    let addr = router.local_addr().expect("router addr").to_string();
+    let stop = router.stop_flag();
+    let thread = std::thread::spawn(move || router.run());
+    (addr, stop, thread)
+}
+
+fn stop_router(stop: Arc<AtomicBool>, thread: std::thread::JoinHandle<anyhow::Result<()>>) {
+    stop.store(true, Ordering::SeqCst);
+    thread.join().expect("router thread panicked").expect("router run failed");
+}
+
+/// Breakers trip after 2 failures and probes run every 40ms, so a dead
+/// worker is discovered (and a revived one re-admitted) within a few
+/// hundred milliseconds of test time.
+fn fast_router_cfg() -> RouterConfig {
+    RouterConfig {
+        breaker: BreakerConfig { failure_threshold: 2, open_ticks: 5 },
+        health: HealthConfig { tick: Duration::from_millis(20), probe_every: 2 },
+        ..Default::default()
+    }
+}
+
+/// Probes off and a breaker that never trips: every breaker/placement
+/// transition is then a pure function of relayed traffic, which the
+/// same-seed determinism test depends on.
+fn quiet_router_cfg() -> RouterConfig {
+    RouterConfig {
+        breaker: BreakerConfig { failure_threshold: 1000, open_ticks: 50 },
+        health: HealthConfig { probe_every: 0, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn router_metrics(addr: &str) -> Json {
+    let mut c = Client::connect(addr).expect("router metrics connect");
+    c.metrics().expect("router metrics frame")
+}
+
+fn await_router(addr: &str, what: &str, pred: impl Fn(&Json) -> bool) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        let j = router_metrics(addr);
+        if pred(&j) {
+            return j;
+        }
+        assert!(Instant::now() < deadline, "`{what}` never satisfied: {j}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn assert_finishes(c: &mut Client, id: u64, max_new: usize, what: &str) {
+    match c.generate(&WireRequest::new(id, PROMPT, max_new)).expect("transport held") {
+        GenOutcome::Done { events } => {
+            assert!(
+                matches!(last_event(&events), WireEvent::Finished(_)),
+                "`{what}`: request {id} did not finish: {:?}",
+                last_event(&events)
+            );
+            assert_exactly_one_terminal(&events, what);
+        }
+        GenOutcome::Rejected(e) => panic!("`{what}`: request {id} rejected: {e:?}"),
+    }
+}
+
+#[test]
+fn chaos_router_kill_one_of_three_fails_over_and_recovers() {
+    serialized(|| {
+        let Some(dir) = manifest_dir() else { return };
+        let mut fleet: Vec<FleetWorker> = (0..3)
+            .map(|_| spawn_fleet_worker(&dir, "127.0.0.1:0").expect("worker spawn"))
+            .collect();
+        let addrs: Vec<String> = fleet.iter().map(|w| w.addr.clone()).collect();
+        let (raddr, rstop, rthread) = spawn_router(&addrs, fast_router_cfg());
+        let mut c = Client::connect(&raddr).expect("router connect");
+
+        // the healthy fleet serves through the front tier
+        for id in 1..=3u64 {
+            assert_finishes(&mut c, id, 4, "healthy fleet");
+        }
+
+        // kill 1 of 3 mid-run: the fleet keeps completing every request,
+        // either by failing over a placement that hit the corpse or by the
+        // breaker steering placements away once the prober trips it
+        let dead_addr = fleet.remove(0).kill();
+        for id in 4..=9u64 {
+            assert_finishes(&mut c, id, 4, "kill 1 of 3");
+        }
+        let j = await_router(&raddr, "dead worker detected", |j| {
+            num(j, &["router", "breaker_open_total"]) >= 1.0
+                && num(j, &["router", "workers_healthy"]) == 2.0
+        });
+        assert_eq!(num(&j, &["router", "workers_total"]), 3.0);
+        assert!(
+            num(&j, &["router", "requests_failed_over"]) >= 1.0
+                || num(&j, &["router", "breaker_open_total"]) >= 1.0,
+            "the kill left no failover or breaker trace: {j}"
+        );
+
+        // restart on the same address: the half-open trial probe re-admits
+        // it and the fleet is whole again
+        let revived = restart_worker(&dir, &dead_addr);
+        await_router(&raddr, "revived worker re-admitted", |j| {
+            num(j, &["router", "workers_healthy"]) == 3.0
+        });
+        assert_finishes(&mut c, 10, 4, "whole again");
+
+        drop(c);
+        stop_router(rstop, rthread);
+        for w in fleet.iter().chain(std::iter::once(&revived)) {
+            let j = await_quiescence(&w.addr, "fleet survivor");
+            assert_leak_free(&j, "fleet survivor");
+        }
+        for w in fleet {
+            w.kill();
+        }
+        revived.kill();
+    });
+}
+
+#[test]
+fn chaos_router_relay_fault_before_output_fails_over() {
+    serialized(|| {
+        let Some(dir) = manifest_dir() else { return };
+        let w0 = spawn_fleet_worker(&dir, "127.0.0.1:0").expect("worker spawn");
+        let w1 = spawn_fleet_worker(&dir, "127.0.0.1:0").expect("worker spawn");
+        let (raddr, rstop, rthread) =
+            spawn_router(&[w0.addr.clone(), w1.addr.clone()], quiet_router_cfg());
+        // hit 1 is the relay connection's hello_ok, hit 2 the `queued`
+        // frame: the attempt dies with zero output delivered, so the router
+        // must resubmit to the other worker — the client sees one clean
+        // finish and never learns a worker was lost
+        failpoint::configure("shard.relay=err:nth(2)").expect("chaos spec parses");
+        let mut c = Client::connect(&raddr).expect("router connect");
+        assert_finishes(&mut c, 1, 4, "shard.relay nth(2)");
+        let injected = failpoint::injected_total();
+        failpoint::reset();
+        assert_eq!(injected, 1, "nth(2) fires exactly once");
+        let j = router_metrics(&raddr);
+        assert_eq!(
+            num(&j, &["router", "requests_failed_over"]),
+            1.0,
+            "the failover was not counted: {j}"
+        );
+        drop(c);
+        stop_router(rstop, rthread);
+        for w in [&w0, &w1] {
+            let j = await_quiescence(&w.addr, "failover fleet");
+            assert_leak_free(&j, "failover fleet");
+        }
+        w0.kill();
+        w1.kill();
+    });
+}
+
+#[test]
+fn chaos_router_midstream_worker_loss_is_typed_never_duplicated() {
+    serialized(|| {
+        let Some(dir) = manifest_dir() else { return };
+        let w0 = spawn_fleet_worker(&dir, "127.0.0.1:0").expect("worker spawn");
+        let (raddr, rstop, rthread) = spawn_router(&[w0.addr.clone()], quiet_router_cfg());
+        // hits 1..4 are hello_ok/queued/prefilled/token: the wire dies on
+        // hit 5 with one token already delivered to the client, so the
+        // router must NOT resubmit (that would duplicate streamed output)
+        // and must say exactly why in a typed failed terminal
+        failpoint::configure("shard.relay=err:nth(5)").expect("chaos spec parses");
+        let mut c = Client::connect(&raddr).expect("router connect");
+        match c.generate(&WireRequest::new(1, PROMPT, 8)).expect("transport held") {
+            GenOutcome::Done { events } => {
+                let tokens =
+                    events.iter().filter(|(ev, _)| matches!(ev, WireEvent::Token { .. })).count();
+                assert_eq!(tokens, 1, "streamed output duplicated or lost");
+                assert_exactly_one_terminal(&events, "shard.relay nth(5)");
+                let WireEvent::Failed(r) = last_event(&events) else {
+                    panic!("mid-stream loss must surface failed, got {:?}", last_event(&events));
+                };
+                let err = r.error.clone().unwrap_or_default();
+                assert!(
+                    err.contains("failed_over"),
+                    "the terminal must explain the failover refusal: {err}"
+                );
+                assert!(err.contains("streamed token"), "the terminal must count output: {err}");
+            }
+            GenOutcome::Rejected(e) => panic!("mid-stream loss surfaced a rejection: {e:?}"),
+        }
+        let injected = failpoint::injected_total();
+        failpoint::reset();
+        assert_eq!(injected, 1, "nth(5) fires exactly once");
+        // the worker survived and cancel-on-disconnect reclaimed the orphan
+        assert_finishes(&mut c, 2, 4, "post-loss request");
+        drop(c);
+        stop_router(rstop, rthread);
+        let j = await_quiescence(&w0.addr, "mid-stream loss");
+        assert_leak_free(&j, "mid-stream loss");
+        w0.kill();
+    });
+}
+
+#[test]
+fn chaos_router_same_seed_rerun_injects_identical_fault_sequence() {
+    serialized(|| {
+        let Some(dir) = manifest_dir() else { return };
+        let w0 = spawn_fleet_worker(&dir, "127.0.0.1:0").expect("worker spawn");
+        let (raddr, rstop, rthread) = spawn_router(&[w0.addr.clone()], quiet_router_cfg());
+        // `shard.relay` is evaluated only when a frame actually arrives
+        // (never on timeout polls) and probing is off, so with a sequential
+        // client the hit sequence is a pure function of the relayed
+        // workload — two same-seed runs must log the identical fault set,
+        // failovers and synthesized terminals included.
+        let run = |raddr: &str| -> Vec<(&'static str, u64)> {
+            failpoint::reset();
+            failpoint::configure("shard.relay=err:prob(0.25,2025)").expect("chaos spec parses");
+            let mut c = Client::connect(raddr).expect("router connect");
+            for r in 0..8u64 {
+                // any terminal outcome is acceptable — mid-stream losses
+                // surface typed failures, zero-token losses fail over —
+                // it just has to be the same one both runs
+                match c.generate(&WireRequest::new(r + 1, PROMPT, 3)).expect("transport held") {
+                    GenOutcome::Done { .. } | GenOutcome::Rejected(_) => {}
+                }
+            }
+            let log = failpoint::take_fired_log();
+            failpoint::reset();
+            log
+        };
+        let first = run(&raddr);
+        // quiesce between runs so orphaned upstream work never overlaps
+        // the second run's workload
+        let j = await_quiescence(&w0.addr, "router same-seed rerun (between runs)");
+        assert_leak_free(&j, "router same-seed rerun (between runs)");
+        let second = run(&raddr);
+        assert_eq!(first, second, "same seed must inject the identical fault sequence");
+        assert!(!first.is_empty(), "prob(0.25) over 8 relays should have fired");
+        let j = await_quiescence(&w0.addr, "router same-seed rerun");
+        assert_leak_free(&j, "router same-seed rerun");
+        stop_router(rstop, rthread);
+        w0.kill();
+    });
+}
+
+#[test]
+fn chaos_router_drain_excludes_worker_and_acknowledges() {
+    serialized(|| {
+        let Some(dir) = manifest_dir() else { return };
+        let w0 = spawn_fleet_worker(&dir, "127.0.0.1:0").expect("worker spawn");
+        let w1 = spawn_fleet_worker(&dir, "127.0.0.1:0").expect("worker spawn");
+        let (raddr, rstop, rthread) =
+            spawn_router(&[w0.addr.clone(), w1.addr.clone()], quiet_router_cfg());
+        let mut c = Client::connect(&raddr).expect("router connect");
+        c.send(&ClientFrame::Drain { worker: w0.addr.clone() }).expect("drain send");
+        let ack = loop {
+            match c.recv().expect("drain ack") {
+                ServerFrame::Metrics(j) => break j,
+                ServerFrame::Event(_) => {}
+                other => panic!("unexpected drain reply {other:?}"),
+            }
+        };
+        let rows = ack.req("router").req("workers").as_arr().expect("worker rows").to_vec();
+        let flags: Vec<bool> =
+            rows.iter().map(|r| r.req("draining").as_bool().unwrap_or(false)).collect();
+        assert_eq!(flags, vec![true, false], "drain must flag exactly the named worker: {ack}");
+
+        // every subsequent placement lands on the surviving worker
+        for id in 1..=4u64 {
+            assert_finishes(&mut c, id, 2, "drained fleet");
+        }
+        let mut direct = Client::connect(&w0.addr).expect("drained worker connect");
+        let j = direct.metrics().expect("drained worker metrics");
+        assert_eq!(
+            num(&j, &["metrics", "requests_completed"]),
+            0.0,
+            "a draining worker took new placements: {j}"
+        );
+        drop(c);
+        stop_router(rstop, rthread);
+        let j = await_quiescence(&w1.addr, "drain survivor");
+        assert_leak_free(&j, "drain survivor");
+        w0.kill();
+        w1.kill();
     });
 }
 

@@ -138,6 +138,33 @@ fn wire_event_roundtrip_property() {
     });
 }
 
+/// `ping`/`pong` keepalives round-trip the full u64 sequence range in both
+/// directions — the router's health prober matches pongs to probes by seq,
+/// so a lossy encoding would read as a permanently stale worker.
+#[test]
+fn ping_pong_roundtrip_property() {
+    prop::check("ping_pong_roundtrip", 200, |ctx| {
+        let seq = ctx.rng.next_u64();
+        let enc = ClientFrame::Ping { seq }.encode();
+        if enc.contains('\n') {
+            return Err(format!("encoded ping contains a raw newline: {enc}"));
+        }
+        match ClientFrame::decode(&enc).map_err(|e| format!("ping decode failed: {e}"))? {
+            ClientFrame::Ping { seq: got } if got == seq => {}
+            other => return Err(format!("ping round trip mismatch: {enc} -> {other:?}")),
+        }
+        let enc = ServerFrame::Pong { seq }.encode();
+        if enc.contains('\n') {
+            return Err(format!("encoded pong contains a raw newline: {enc}"));
+        }
+        match ServerFrame::decode(&enc).map_err(|e| format!("pong decode failed: {e}"))? {
+            ServerFrame::Pong { seq: got } if got == seq => {}
+            other => return Err(format!("pong round trip mismatch: {enc} -> {other:?}")),
+        }
+        Ok(())
+    });
+}
+
 // ---------------------------------------------------------------------------
 // read_frame robustness (runtime-free): truncated, oversized, garbage,
 // and interleaved-partial reads, driven through a scripted reader.

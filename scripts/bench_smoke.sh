@@ -31,4 +31,11 @@ cargo bench --bench linalg_hotpath -- --quick --out "$REPO_ROOT/BENCH_linalg.jso
 # skips without artifacts/; the JSON always lands).
 cargo bench --bench server_wire -- --quick --out "$REPO_ROOT/BENCH_server.json"
 
-echo "bench_smoke.sh: wrote $REPO_ROOT/BENCH_decode_staging.json, $REPO_ROOT/BENCH_linalg.json, $REPO_ROOT/BENCH_serving.json and $REPO_ROOT/BENCH_server.json"
+# Shard-router fan-out: streamed tok/s + TTFT p95 through router + workers
+# at 1/2 loopback workers (1/2/4 without --quick), plus the post-kill
+# recovery profile (failover latency, breaker detection) and the
+# placement/breaker micro-paths (fleet section skips without artifacts/;
+# the JSON always lands).
+cargo bench --bench router_fanout -- --quick --out "$REPO_ROOT/BENCH_router.json"
+
+echo "bench_smoke.sh: wrote $REPO_ROOT/BENCH_decode_staging.json, $REPO_ROOT/BENCH_linalg.json, $REPO_ROOT/BENCH_serving.json, $REPO_ROOT/BENCH_server.json and $REPO_ROOT/BENCH_router.json"

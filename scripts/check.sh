@@ -55,6 +55,49 @@ else
     echo "[skip] loopback smoke: artifacts/ not built"
 fi
 
+# Shard-router smoke (needs artifacts/): two workers behind `repro router`,
+# a keepalive ping plus one streamed request through the fan-out, then kill
+# one worker and prove the next request still completes (failover / breaker
+# steering) before shutting the stack down cleanly.
+if [[ -f artifacts/manifest.json ]]; then
+    wait_addr() { # <logfile> <pid> — echo the "listening on" address
+        local addr=""
+        for _ in $(seq 1 100); do
+            addr="$(sed -n 's/^listening on \([0-9.:]*\).*/\1/p' "$1" | head -1)"
+            [[ -n "$addr" ]] && { echo "$addr"; return 0; }
+            kill -0 "$2" 2>/dev/null || { cat "$1" >&2; return 1; }
+            sleep 0.2
+        done
+        cat "$1" >&2
+        return 1
+    }
+    W1_LOG="$(mktemp)"; W2_LOG="$(mktemp)"; ROUTER_LOG="$(mktemp)"
+    ./target/release/repro serve --listen 127.0.0.1:0 --queue-cap 8 > "$W1_LOG" 2>&1 &
+    W1_PID=$!
+    ./target/release/repro serve --listen 127.0.0.1:0 --queue-cap 8 > "$W2_LOG" 2>&1 &
+    W2_PID=$!
+    ROUTER_PID=""
+    trap 'kill "$W1_PID" "$W2_PID" $ROUTER_PID 2>/dev/null || true' EXIT
+    W1_ADDR="$(wait_addr "$W1_LOG" "$W1_PID")"
+    W2_ADDR="$(wait_addr "$W2_LOG" "$W2_PID")"
+    ./target/release/repro router --listen 127.0.0.1:0 --workers "$W1_ADDR,$W2_ADDR" \
+        --tick-ms 25 --probe-every 2 --failure-threshold 2 > "$ROUTER_LOG" 2>&1 &
+    ROUTER_PID=$!
+    R_ADDR="$(wait_addr "$ROUTER_LOG" "$ROUTER_PID")"
+    ./target/release/repro client --addr "$R_ADDR" --requests 0 --ping
+    ./target/release/repro client --addr "$R_ADDR" --connections 1 --requests 1 --max-new 8
+    kill -9 "$W1_PID" 2>/dev/null || true
+    ./target/release/repro client --addr "$R_ADDR" --connections 1 --requests 1 --max-new 8
+    ./target/release/repro client --addr "$R_ADDR" --requests 0 --shutdown
+    wait "$ROUTER_PID"   # non-zero exit (unclean drain) fails the check
+    ./target/release/repro client --addr "$W2_ADDR" --requests 0 --shutdown
+    wait "$W2_PID"
+    trap - EXIT
+    echo "router smoke: OK ($R_ADDR routing $W1_ADDR,$W2_ADDR)"
+else
+    echo "[skip] router smoke: artifacts/ not built"
+fi
+
 if [[ "${1:-}" == "--bench" ]]; then
     "$REPO_ROOT/scripts/bench_smoke.sh"
 fi
