@@ -5,8 +5,11 @@
 //! trajectory: requests/s and streamed tok/s end-to-end through the wire,
 //! client-observed TTFT and inter-token-event latency p50/p95, at 1/4/16
 //! concurrent connections (1/4 with --quick), plus frame encode/decode
-//! throughput. The loopback section needs artifacts/ (skipped gracefully
-//! without them); the protocol section always runs.
+//! throughput. A second section drives a zipfian shared-prefix workload
+//! through the latent prefix cache (`--prefix-pages` sizes the arena) and
+//! records cold-vs-warm TTFT percentiles and the trie hit rate. Both
+//! serving sections need artifacts/ (skipped gracefully without them); the
+//! protocol section always runs.
 //!
 //!   cargo bench --bench server_wire -- --out ../BENCH_server.json
 
@@ -103,6 +106,120 @@ fn loopback_point(
     ]))
 }
 
+/// Zipfian shared-prefix workload through the prefix cache: requests draw
+/// their prompt from a small family set with zipf(1) popularity (weight
+/// 1/rank), expanded into a fixed schedule and deterministically shuffled.
+/// Pass 1 runs against an empty trie (cold — the first occurrence of each
+/// family seeds it), pass 2 replays the identical schedule against the
+/// populated trie (warm). Records client-observed TTFT p50/p95 per pass
+/// plus each pass's hit rate off the worker's own counters.
+fn prefix_zipf_bench(
+    dir: String,
+    prefix_pages: usize,
+    n_reqs: usize,
+    max_new: usize,
+) -> anyhow::Result<Json> {
+    use recalkv::server::{GenOutcome, WireRequest};
+    use recalkv::util::rng::Rng;
+    use std::time::Instant;
+
+    let coord = Coordinator::spawn(move || {
+        let man = Manifest::load(&dir)?;
+        let rt = recalkv::runtime::Runtime::cpu()?;
+        let model = man.model("tiny-mha")?;
+        Engine::new(
+            &rt,
+            model,
+            model.variant("recal@50")?,
+            // 8-token pages: the ~40-token family prompts span several full
+            // (shareable) pages, where the default 32-token pages would
+            // leave sharing marginal.
+            EngineConfig {
+                prefix_cache_pages: prefix_pages,
+                tokens_per_block: 8,
+                ..Default::default()
+            },
+        )
+    });
+    let server = Server::bind("127.0.0.1:0", coord.handle(), ServerConfig::default())?;
+    let addr = server.local_addr()?.to_string();
+    let worker = std::thread::spawn(move || server.run());
+
+    let families: Vec<String> = recalkv::eval::tasks::gen_long("needle", 7, 8, 200)
+        .into_iter()
+        .map(|inst| inst.prompt)
+        .collect();
+    let weight_sum: f64 = (0..families.len()).map(|r| 1.0 / (r + 1) as f64).sum();
+    let mut schedule: Vec<usize> = Vec::new();
+    for rank in 0..families.len() {
+        let share = (1.0 / (rank + 1) as f64) / weight_sum;
+        let count = ((n_reqs as f64 * share).round() as usize).max(1);
+        schedule.extend(std::iter::repeat(rank).take(count));
+    }
+    let mut rng = Rng::new(42);
+    rng.shuffle(&mut schedule);
+
+    let pass = |label: &str| -> anyhow::Result<(f64, f64)> {
+        let mut c = Client::connect(&addr)?;
+        let mut ttfts: Vec<f64> = Vec::new();
+        for (i, &fam) in schedule.iter().enumerate() {
+            let t0 = Instant::now();
+            let req = WireRequest::new(i as u64 + 1, families[fam].clone(), max_new);
+            match c.generate(&req)? {
+                GenOutcome::Done { events } => {
+                    let first = events
+                        .iter()
+                        .find(|(ev, _)| matches!(ev, WireEvent::Token { .. }))
+                        .map(|(_, at)| (*at - t0).as_secs_f64() * 1e3);
+                    ttfts.push(first.unwrap_or(0.0));
+                }
+                GenOutcome::Rejected(e) => anyhow::bail!("{label}: request rejected: {e:?}"),
+            }
+        }
+        ttfts.sort_by(f64::total_cmp);
+        let pct = |p: f64| ttfts[((ttfts.len() - 1) as f64 * p) as usize];
+        Ok((pct(0.50), pct(0.95)))
+    };
+
+    let (cold_p50, cold_p95) = pass("cold")?;
+    let mut obs = Client::connect(&addr)?;
+    let mid = obs.metrics()?;
+    let (warm_p50, warm_p95) = pass("warm")?;
+    let fin = obs.metrics()?;
+    let m = |j: &Json, k: &str| j.req("metrics").req(k).as_f64().unwrap_or(0.0);
+    let rate = |h: f64, mi: f64| if h + mi > 0.0 { h / (h + mi) } else { 0.0 };
+    let cold_rate = rate(m(&mid, "prefix_hits"), m(&mid, "prefix_misses"));
+    let warm_rate = rate(
+        m(&fin, "prefix_hits") - m(&mid, "prefix_hits"),
+        m(&fin, "prefix_misses") - m(&mid, "prefix_misses"),
+    );
+    let pages_held = fin.req("cache").req("prefix_pages_held").as_f64().unwrap_or(0.0);
+    println!(
+        "prefix zipf ({} families, {} reqs/pass, {prefix_pages} pages): \
+         cold ttft p50/p95 {cold_p50:.1}/{cold_p95:.1}ms (hit rate {:.0}%) | \
+         warm {warm_p50:.1}/{warm_p95:.1}ms (hit rate {:.0}%) | {pages_held:.0} pages held",
+        families.len(),
+        schedule.len(),
+        cold_rate * 100.0,
+        warm_rate * 100.0,
+    );
+    Client::connect(&addr)?.shutdown_server()?;
+    worker.join().expect("server thread panicked")?;
+    println!("{}", coord.shutdown()?);
+    Ok(Json::obj(vec![
+        ("families", Json::Num(families.len() as f64)),
+        ("requests_per_pass", Json::Num(schedule.len() as f64)),
+        ("prefix_pages", Json::Num(prefix_pages as f64)),
+        ("cold_ttft_ms_p50", Json::Num(cold_p50)),
+        ("cold_ttft_ms_p95", Json::Num(cold_p95)),
+        ("warm_ttft_ms_p50", Json::Num(warm_p50)),
+        ("warm_ttft_ms_p95", Json::Num(warm_p95)),
+        ("cold_hit_rate", Json::Num(cold_rate)),
+        ("warm_hit_rate", Json::Num(warm_rate)),
+        ("prefix_pages_held", Json::Num(pages_held)),
+    ]))
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"), &["quick"]);
     let out_path = args.opt_or("out", "BENCH_server.json").to_string();
@@ -168,10 +285,21 @@ fn main() -> anyhow::Result<()> {
         }
     };
 
+    let prefix_dir = args.opt_or("artifacts", "artifacts").to_string();
+    let prefix_zipf = match Manifest::load(&prefix_dir) {
+        Ok(_) => {
+            let prefix_pages = args.usize_or("prefix-pages", 512);
+            let n_reqs = args.usize_or("prefix-requests", if quick { 16 } else { 48 });
+            prefix_zipf_bench(prefix_dir, prefix_pages, n_reqs, max_new)?
+        }
+        Err(_) => Json::Null,
+    };
+
     let report = Json::obj(vec![
         ("bench", Json::Str("server_wire".into())),
         ("protocol", protocol),
         ("loopback", loopback),
+        ("prefix_zipf", prefix_zipf),
     ]);
     std::fs::write(&out_path, report.to_string())?;
     println!("[report saved to {out_path}]");

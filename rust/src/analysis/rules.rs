@@ -68,7 +68,8 @@ pub fn check_unsafe_hygiene(f: &SourceFile, out: &mut Vec<Violation>) {
 /// The layers where the panic policy (rule 2) applies: a panic here can
 /// take a connection, the whole serving process, or (in the shard
 /// router's front tier) every worker behind it down.
-const SERVING_PREFIXES: [&str; 4] = ["server/", "coordinator/", "kvcache/", "router/"];
+const SERVING_PREFIXES: [&str; 5] =
+    ["server/", "coordinator/", "kvcache/", "prefixcache/", "router/"];
 
 /// Rule 2 — panic policy: no `unwrap()`/`expect()`/panicking macro/direct
 /// indexing in the serving layers outside tests. `assert!`/`debug_assert!`

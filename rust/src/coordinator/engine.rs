@@ -34,7 +34,13 @@
 //! [`super::batcher::WaitQueue`]) onto up to prefill_batch slots; a request
 //! that fails admission (bad prompt, cache exhaustion) is failed
 //! individually with a `GenResult` error — its partial sequence is freed
-//! and the rest of the batch proceeds. Staging failures get the same
+//! and the rest of the batch proceeds. With the cross-request prefix cache
+//! enabled ([`EngineConfig::prefix_cache_pages`]), admission first attaches
+//! the longest trie-cached page-aligned prefix by refcount bump
+//! ([`crate::prefixcache::PrefixCache`]) and runs the per-token admission
+//! pipeline only over the uncached suffix — bit-identical to a cold
+//! admission, because the adopted pages hold the same deterministic
+//! prefill latents the suffix path would have written. Staging failures get the same
 //! treatment: a failed gather (only reachable through cache corruption or
 //! an injected `cache.stage` fault) retires the owning request and scrubs
 //! its region — the step loop itself never dies on a per-request seam.
@@ -47,6 +53,7 @@ use super::request::{
 use super::sampler::{log_prob, Sampler};
 use crate::artifacts::{ModelEntry, VariantEntry};
 use crate::kvcache::{CacheConfig, KvCache, SeqId};
+use crate::prefixcache::PrefixCache;
 use crate::quant::QuantKind;
 use crate::runtime::engine_graphs::ActivationArg;
 use crate::runtime::{GraphSet, Runtime, VariantRuntime};
@@ -71,6 +78,12 @@ pub struct EngineConfig {
     /// starve the page pool for everyone else. `usize::MAX` = no budget
     /// (the default).
     pub max_cache_tokens: usize,
+    /// Cross-request latent prefix cache arena budget, in cache pages the
+    /// trie may pin ([`crate::prefixcache::PrefixCache`]; each indexed
+    /// chunk pins `2 * n_layers` pages). 0 disables the cache entirely
+    /// (the default — prefix sharing changes page-accounting invariants,
+    /// so it is strictly opt-in). CLI: `repro serve --prefix-cache-pages`.
+    pub prefix_cache_pages: usize,
 }
 
 impl Default for EngineConfig {
@@ -83,6 +96,7 @@ impl Default for EngineConfig {
             policy: super::batcher::BatchPolicy::Eager,
             queue_cap: usize::MAX,
             max_cache_tokens: usize::MAX,
+            prefix_cache_pages: 0,
         }
     }
 }
@@ -114,6 +128,9 @@ struct StageState {
 pub struct Engine {
     pub vr: VariantRuntime,
     pub cache: KvCache,
+    /// Cross-request latent prefix cache; `None` when disabled
+    /// ([`EngineConfig::prefix_cache_pages`] == 0).
+    prefix: Option<PrefixCache>,
     pub metrics: Metrics,
     cfg_model: crate::artifacts::manifest::ModelConfig,
     shapes: crate::artifacts::manifest::Shapes,
@@ -163,6 +180,8 @@ impl Engine {
         Ok(Engine {
             vr,
             cache,
+            prefix: (ecfg.prefix_cache_pages > 0)
+                .then(|| PrefixCache::new(ecfg.prefix_cache_pages, ecfg.tokens_per_block)),
             metrics: Metrics::default(),
             cfg_model: cfg,
             shapes,
@@ -226,7 +245,7 @@ impl Engine {
         for i in 0..self.slots.len() {
             if self.slots[i].as_ref().is_some_and(|s| s.tracked.req.id == id) {
                 let s = self.slots[i].take().unwrap();
-                self.cache.free_seq(s.seq);
+                self.release_seq(s.seq);
                 self.samplers.remove(&id);
                 self.metrics.requests_cancelled += 1;
                 self.events.push_back(GenEvent::Cancelled(s.tracked.cancel()));
@@ -310,7 +329,7 @@ impl Engine {
             let expired = self.slots[i].as_ref().map(|s| s.tracked.expired(now)).unwrap_or(false);
             if expired {
                 let s = self.slots[i].take().unwrap();
-                self.cache.free_seq(s.seq);
+                self.release_seq(s.seq);
                 self.samplers.remove(&s.tracked.req.id);
                 self.metrics.requests_expired += 1;
                 self.events.push_back(GenEvent::DeadlineExceeded(s.tracked.expire()));
@@ -386,11 +405,18 @@ impl Engine {
         for (i, mut tracked) in batch.into_iter().enumerate() {
             let plen = tracked.req.prompt.len();
             let seq = self.cache.new_seq();
+            // Prefix-cache attach: adopt the longest cached page-aligned
+            // prefix by refcount bump, so the admission loop below runs only
+            // over the uncached suffix. (The prefill graph already ran over
+            // the full prompt — its logits are needed regardless, and the
+            // adopted pages hold bit-identical latents — so a hit skips the
+            // per-token admission pipeline: page allocs, quantize, append.)
+            let attached = self.attach_prefix(seq, &tracked.req.prompt);
             // appends timed separately from the full gather below so
             // append_time and stage_full_time stay disjoint windows
             let append_t = Instant::now();
             let mut admit_err: Option<anyhow::Error> = None;
-            for t in 0..plen {
+            for t in attached..plen {
                 let rows: Vec<(&[f32], &[f32])> = (0..nl)
                     .map(|l| {
                         let (wk, wv) = self.widths[l];
@@ -408,9 +434,16 @@ impl Engine {
             if let Some(e) = admit_err {
                 // Admission failed mid-prompt: free the partial sequence and
                 // fail only this request; the rest of the batch proceeds.
-                self.cache.free_seq(seq);
+                self.release_seq(seq);
                 self.fail_request(tracked, format!("admission failed: {e:#}"));
                 continue;
+            }
+            // Index the admitted prompt's full chunks so later requests
+            // sharing this prefix can attach (best-effort under the arena
+            // budget; evictions of cold entries are counted).
+            if let Some(prefix) = self.prefix.as_mut() {
+                let out = prefix.insert(&mut self.cache, seq, &tracked.req.prompt);
+                self.metrics.prefix_evictions += out.nodes_evicted as u64;
             }
             let si = self
                 .slots
@@ -422,7 +455,7 @@ impl Engine {
             // this request: free its pages, scrub the half-written region,
             // and keep serving the rest of the batch.
             if let Err(e) = self.stage_full_slot(si, seq) {
-                self.cache.free_seq(seq);
+                self.release_seq(seq);
                 self.zero_slot_region(si);
                 self.fail_request(tracked, format!("staging failed: {e:#}"));
                 continue;
@@ -735,6 +768,50 @@ impl Engine {
     }
 
     // ------------------------------------------------------------------
+    // prefix cache
+
+    /// Attach the longest trie-cached page-aligned prefix to the fresh
+    /// sequence `seq`, counting hit/miss/shared-page metrics. Returns the
+    /// number of attached tokens; 0 on a miss, a disabled cache, or any
+    /// attach error (including an injected `prefix.attach` fault) — the
+    /// caller then admits the full prompt cold, which is always correct
+    /// because a failed attach leaves the sequence untouched.
+    fn attach_prefix(&mut self, seq: SeqId, prompt: &[i32]) -> usize {
+        let Some(prefix) = self.prefix.as_mut() else { return 0 };
+        match prefix.attach(&mut self.cache, seq, prompt) {
+            Ok(0) | Err(_) => {
+                self.metrics.prefix_misses += 1;
+                0
+            }
+            Ok(tokens) => {
+                self.metrics.prefix_hits += 1;
+                let chunks = tokens / self.cache.config.tokens_per_block;
+                self.metrics.prefix_pages_shared +=
+                    (chunks * self.cfg_model.n_layers * 2) as u64;
+                tokens
+            }
+        }
+    }
+
+    /// The one sequence-release path: drop any prefix-trie reader pins,
+    /// then free the sequence's page references (shared pages survive for
+    /// their other holders). Every engine retirement/cancel/failure seam
+    /// funnels through here so trie accounting can never leak.
+    fn release_seq(&mut self, seq: SeqId) {
+        if let Some(prefix) = self.prefix.as_mut() {
+            prefix.detach(seq);
+        }
+        self.cache.free_seq(seq);
+    }
+
+    /// Pages currently pinned by the prefix trie (0 when disabled) — the
+    /// steady-state `blocks_in_use` floor, surfaced in worker stats so leak
+    /// checks can assert exact accounting with the cache enabled.
+    pub fn prefix_pages_held(&self) -> usize {
+        self.prefix.as_ref().map(PrefixCache::pages_held).unwrap_or(0)
+    }
+
+    // ------------------------------------------------------------------
     // failure + retirement
 
     /// Fail a request that never reached a slot (validation or admission).
@@ -748,7 +825,7 @@ impl Engine {
     /// sequence and marking the staging region dirty.
     fn fail_slot(&mut self, i: usize, msg: &str) {
         if let Some(s) = self.slots[i].take() {
-            self.cache.free_seq(s.seq);
+            self.release_seq(s.seq);
             self.samplers.remove(&s.tracked.req.id);
             self.metrics.requests_failed += 1;
             self.events.push_back(GenEvent::Failed(s.tracked.fail(msg)));
@@ -770,7 +847,7 @@ impl Engine {
                 .unwrap_or(false);
             if done {
                 let s = self.slots[i].take().unwrap();
-                self.cache.free_seq(s.seq);
+                self.release_seq(s.seq);
                 self.samplers.remove(&s.tracked.req.id);
                 self.metrics.requests_completed += 1;
                 self.metrics.ttft_ms_sum += s

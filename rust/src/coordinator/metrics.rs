@@ -45,6 +45,20 @@ pub struct Metrics {
     /// (`util/failpoint.rs`) since its last reset; 0 in production (sites
     /// disarmed). Overlaid at snapshot time by `WorkerStats::snapshot`.
     pub faults_injected: u64,
+    /// Admissions that attached at least one trie-cached prefix chunk
+    /// (`prefixcache/`) instead of re-admitting those tokens.
+    pub prefix_hits: u64,
+    /// Admissions that walked the trie and attached nothing (counted only
+    /// while the prefix cache is enabled; includes faulted attaches that
+    /// fell back to a cold prefill).
+    pub prefix_misses: u64,
+    /// Cache pages adopted by refcount bump across all prefix hits (each
+    /// attached chunk shares `2 * n_layers` pages).
+    pub prefix_pages_shared: u64,
+    /// Trie nodes evicted to keep the pinned arena under
+    /// `EngineConfig::prefix_cache_pages` (ref-aware LRU; each eviction
+    /// unpins one chunk's pages).
+    pub prefix_evictions: u64,
     pub prompt_tokens: u64,
     pub generated_tokens: u64,
     pub prefill_calls: u64,
@@ -163,6 +177,10 @@ impl Metrics {
             ("requests_shed", count(self.requests_shed)),
             ("requests_retried", count(self.requests_retried)),
             ("faults_injected", count(self.faults_injected)),
+            ("prefix_hits", count(self.prefix_hits)),
+            ("prefix_misses", count(self.prefix_misses)),
+            ("prefix_pages_shared", count(self.prefix_pages_shared)),
+            ("prefix_evictions", count(self.prefix_evictions)),
             ("prompt_tokens", count(self.prompt_tokens)),
             ("generated_tokens", count(self.generated_tokens)),
             ("prefill_calls", count(self.prefill_calls)),
@@ -184,6 +202,7 @@ impl Metrics {
         format!(
             "requests={} failed={} cancelled={} expired={} rejected={} \
              shed={} retried={} faults={} \
+             prefix hits={} misses={} shared_pages={} evictions={} \
              prompt_toks={} gen_toks={} | prefill: {} calls {:.1}ms avg | \
              decode: {} calls {:.2}ms avg, {:.1} tok/s, occupancy {:.2} | \
              stage full {:.1}ms/{} rows, incr {:.1}ms/{} rows, append {:.1}ms total | \
@@ -197,6 +216,10 @@ impl Metrics {
             self.requests_shed,
             self.requests_retried,
             self.faults_injected,
+            self.prefix_hits,
+            self.prefix_misses,
+            self.prefix_pages_shared,
+            self.prefix_evictions,
             self.prompt_tokens,
             self.generated_tokens,
             self.prefill_calls,
@@ -265,6 +288,21 @@ mod tests {
         assert_eq!(j.req("requests_shed").as_f64(), Some(2.0));
         assert_eq!(j.req("requests_retried").as_f64(), Some(0.0));
         assert_eq!(j.req("faults_injected").as_f64(), Some(9.0));
+    }
+
+    #[test]
+    fn to_json_carries_prefix_counters() {
+        let m = Metrics {
+            prefix_hits: 4,
+            prefix_misses: 1,
+            prefix_pages_shared: 16,
+            ..Default::default()
+        };
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(j.req("prefix_hits").as_f64(), Some(4.0));
+        assert_eq!(j.req("prefix_misses").as_f64(), Some(1.0));
+        assert_eq!(j.req("prefix_pages_shared").as_f64(), Some(16.0));
+        assert_eq!(j.req("prefix_evictions").as_f64(), Some(0.0));
     }
 
     #[test]

@@ -111,6 +111,10 @@ pub struct WorkerStats {
     pub live_seqs: usize,
     /// Cached tokens across live sequences.
     pub total_tokens: usize,
+    /// Pages pinned by the prefix trie (0 when the prefix cache is off).
+    /// At quiescence `blocks_in_use == prefix_pages_held`: every page still
+    /// allocated is one the trie holds on purpose, not a leak.
+    pub prefix_pages_held: usize,
 }
 
 impl WorkerStats {
@@ -131,6 +135,7 @@ impl WorkerStats {
             blocks_in_use: engine.cache.blocks_in_use(),
             live_seqs: engine.cache.live_seqs(),
             total_tokens: engine.cache.total_tokens(),
+            prefix_pages_held: engine.prefix_pages_held(),
         }
     }
 }

@@ -44,6 +44,23 @@
 //! front, and if any plane's pool is exhausted the pages already taken for
 //! the token are released before the error returns. Payload writes are
 //! infallible, so `st.len` and `st.blocks` can never disagree.
+//!
+//! # Sharing and copy-on-write
+//!
+//! Pages may be shared read-only between sequences (and pinned by the
+//! prefix trie, see `prefixcache/`): [`KvCache::fork_seq`] clones a page
+//! table with refcount bumps only, and [`KvCache::adopt_prefix`] installs
+//! trie-held full pages into a fresh sequence. Writers must own their
+//! page: an append landing mid-block (`slot != 0`) COW-forks any shared
+//! tail block first — allocate a private page (transactionally, alongside
+//! nothing else to roll back), copy the shared rows' exact bits
+//! ([`BlockPool::copy_rows_between`] / cloned [`QuantizedRow`]s), drop one
+//! reference on the donor, and write on. Page-aligned sharing keeps COW
+//! rare: after adopting full pages, the next append lands at `slot == 0`
+//! and allocates a fresh block, so only forked partial tails ever copy.
+//! `free_seq`/`release_pages` clear quantized side state only when the
+//! *last* reference goes — a shared page's rows stay valid for its other
+//! readers.
 
 use super::pool::{BlockId, BlockPool};
 use crate::linalg::hadamard::signs_from_seed;
@@ -52,6 +69,13 @@ use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 
 pub type SeqId = u64;
+
+/// The pages backing one full chunk (= one block per plane) of cached
+/// tokens: `pages[layer] = [key_page, value_page]`. The currency between
+/// the cache and the prefix trie — `prefix_pages` exports them,
+/// `retain_pages`/`release_pages` move their refcounts, `adopt_prefix`
+/// installs them into a fresh sequence.
+pub type ChunkPages = Vec<[BlockId; 2]>;
 
 #[derive(Clone, Debug)]
 pub struct CacheConfig {
@@ -153,12 +177,14 @@ impl KvCache {
         id
     }
 
-    /// Free a sequence and every page it holds — the mid-flight reclaim
-    /// path behind engine cancellation, deadline expiry and retirement
-    /// (safe at any point in the sequence's life, including between a
-    /// prefill admission and its first decode step). Returns the number of
-    /// pages released, so callers can account reclaim work; 0 for unknown
-    /// ids (double-free is a no-op).
+    /// Free a sequence and drop its reference on every page it holds — the
+    /// mid-flight reclaim path behind engine cancellation, deadline expiry
+    /// and retirement (safe at any point in the sequence's life, including
+    /// between a prefill admission and its first decode step). Pages shared
+    /// with other sequences or pinned by the prefix trie lose only this
+    /// sequence's reference and stay live; quantized side state is cleared
+    /// only when the last reference goes. Returns the number of pages
+    /// actually freed; 0 for unknown ids (double-free is a no-op).
     pub fn free_seq(&mut self, id: SeqId) -> usize {
         let mut released = 0usize;
         if let Some(st) = self.seqs.remove(&id) {
@@ -167,14 +193,15 @@ impl KvCache {
                 for (p, blocks) in planes.iter().enumerate() {
                     let plane = &mut self.planes[l * 2 + p];
                     for b in blocks {
-                        if !plane.qrows.is_empty() {
-                            let base = *b as usize * self.config.tokens_per_block;
-                            for s in 0..self.config.tokens_per_block {
-                                plane.qrows[base + s] = None;
+                        if plane.pool.release(*b) {
+                            if !plane.qrows.is_empty() {
+                                let base = *b as usize * self.config.tokens_per_block;
+                                for s in 0..self.config.tokens_per_block {
+                                    plane.qrows[base + s] = None;
+                                }
                             }
+                            released += 1;
                         }
-                        plane.pool.release(*b);
-                        released += 1;
                     }
                 }
             }
@@ -250,6 +277,53 @@ impl KvCache {
             }
             for (l, p, b) in allocated {
                 st.blocks[l][p].push(b);
+            }
+        } else {
+            // Mid-block append: the token writes into each plane's tail
+            // block, which may be shared (sequence fork). Copy-on-write:
+            // transactionally allocate private pages for every shared tail,
+            // then (infallibly) copy the shared rows' exact bits, drop one
+            // reference on each donor, and swap the private page in. Same
+            // all-or-nothing contract as the boundary path.
+            let mut forks: Vec<(usize, usize, BlockId, BlockId)> = Vec::new();
+            for l in 0..rows.len() {
+                for p in 0..2 {
+                    let old = match st.blocks[l][p].last() {
+                        Some(b) => *b,
+                        None => bail!(
+                            "sequence {id} at len {t} has no tail page (layer {l} plane {p})"
+                        ),
+                    };
+                    if self.planes[l * 2 + p].pool.ref_count(old) > 1 {
+                        match self.planes[l * 2 + p].pool.alloc() {
+                            Ok(new) => forks.push((l, p, old, new)),
+                            Err(e) => {
+                                for (l2, p2, _, b2) in forks {
+                                    self.planes[l2 * 2 + p2].pool.release(b2);
+                                }
+                                return Err(e.context(format!(
+                                    "COW-forking page for seq {id} layer {l} plane {p}"
+                                )));
+                            }
+                        }
+                    }
+                }
+            }
+            for (l, p, old, new) in forks {
+                let plane = &mut self.planes[l * 2 + p];
+                if quant == QuantKind::F32 {
+                    plane.pool.copy_rows_between(old, new, 0, slot);
+                } else {
+                    for s in 0..slot {
+                        plane.qrows[new as usize * tpb + s] =
+                            plane.qrows[old as usize * tpb + s].clone();
+                    }
+                }
+                let freed = plane.pool.release(old);
+                debug_assert!(!freed, "COW-forked a page with no other reader");
+                if let Some(tail) = st.blocks[l][p].last_mut() {
+                    *tail = new;
+                }
             }
         }
         // Phase 2: payload writes — infallible.
@@ -374,6 +448,140 @@ impl KvCache {
             });
             dequantize_rows(rows, &pl.signs, out);
         }
+    }
+
+    /// Fork a sequence: the new sequence shares every page of `src`
+    /// read-only (refcount bumps, zero payload copying) and diverges from
+    /// there — N continuations of one prompt pay prefill once. The first
+    /// append into a shared partial tail block COW-forks it; full shared
+    /// blocks are never written again and are freed when the last of the
+    /// sharing sequences goes.
+    pub fn fork_seq(&mut self, src: SeqId) -> Result<SeqId> {
+        let (len, blocks) = match self.seqs.get(&src) {
+            Some(s) => (s.len, s.blocks.clone()),
+            None => bail!("unknown sequence {src}"),
+        };
+        for (l, planes) in blocks.iter().enumerate() {
+            for (p, bs) in planes.iter().enumerate() {
+                for b in bs {
+                    self.planes[l * 2 + p].pool.retain(*b);
+                }
+            }
+        }
+        let id = self.new_seq();
+        if let Some(st) = self.seqs.get_mut(&id) {
+            st.len = len;
+            st.blocks = blocks;
+        }
+        self.total += len;
+        self.peak_tokens = self.peak_tokens.max(self.total);
+        Ok(id)
+    }
+
+    /// The page ids backing full chunks `[chunk0, chunk1)` of a sequence
+    /// (chunk = block index; `[key_page, value_page]` per layer). Only
+    /// *full* chunks are addressable — `chunk1` must not exceed
+    /// `len / tokens_per_block` — because shared prefix pages must never
+    /// cover rows a later append could still write (page-aligned sharing is
+    /// what keeps COW off the attach path). Returns ids without touching
+    /// refcounts; pair with [`KvCache::retain_pages`] to actually pin.
+    pub fn prefix_pages(&self, id: SeqId, chunk0: usize, chunk1: usize)
+                        -> Result<Vec<ChunkPages>> {
+        let st = match self.seqs.get(&id) {
+            Some(s) => s,
+            None => bail!("unknown sequence {id}"),
+        };
+        let full = st.len / self.config.tokens_per_block;
+        if chunk0 > chunk1 || chunk1 > full {
+            bail!("chunks {chunk0}..{chunk1} out of range (seq {id} has {full} full pages)");
+        }
+        let mut out = Vec::with_capacity(chunk1 - chunk0);
+        for c in chunk0..chunk1 {
+            let mut layers = Vec::with_capacity(self.config.n_layers);
+            for l in 0..self.config.n_layers {
+                layers.push([st.blocks[l][0][c], st.blocks[l][1][c]]);
+            }
+            out.push(layers);
+        }
+        Ok(out)
+    }
+
+    /// Add one reference to every page of one chunk (the prefix trie
+    /// pinning pages it has indexed, independent of any sequence's life).
+    pub fn retain_pages(&mut self, pages: &ChunkPages) {
+        for (l, pair) in pages.iter().enumerate() {
+            for (p, b) in pair.iter().enumerate() {
+                self.planes[l * 2 + p].pool.retain(*b);
+            }
+        }
+    }
+
+    /// Drop one reference from every page of one chunk, clearing quantized
+    /// side state for pages whose last reference this was. Returns the
+    /// number of pages actually freed.
+    pub fn release_pages(&mut self, pages: &ChunkPages) -> usize {
+        let tpb = self.config.tokens_per_block;
+        let mut freed = 0usize;
+        for (l, pair) in pages.iter().enumerate() {
+            for (p, b) in pair.iter().enumerate() {
+                let plane = &mut self.planes[l * 2 + p];
+                if plane.pool.release(*b) {
+                    if !plane.qrows.is_empty() {
+                        let base = *b as usize * tpb;
+                        for s in 0..tpb {
+                            plane.qrows[base + s] = None;
+                        }
+                    }
+                    freed += 1;
+                }
+            }
+        }
+        freed
+    }
+
+    /// Install trie-held full pages as the opening chunks of a *fresh*
+    /// sequence (prefix-cache hit: the sequence starts
+    /// `chunks.len() * tokens_per_block` tokens long without a single
+    /// append). Validates everything first — empty sequence, per-chunk
+    /// layer arity, `cache_len` headroom — then retains and installs
+    /// infallibly, so a failed adopt leaves both the sequence and the trie's
+    /// refcounts untouched (the chaos fallback relies on this atomicity).
+    pub fn adopt_prefix(&mut self, id: SeqId, chunks: &[ChunkPages]) -> Result<()> {
+        let tpb = self.config.tokens_per_block;
+        let n_layers = self.config.n_layers;
+        match self.seqs.get(&id) {
+            None => bail!("unknown sequence {id}"),
+            Some(st) => {
+                if st.len != 0 || st.blocks.iter().any(|p| !p[0].is_empty() || !p[1].is_empty())
+                {
+                    bail!("adopt_prefix into non-empty sequence {id} (len {})", st.len);
+                }
+            }
+        }
+        if let Some(c) = chunks.iter().find(|c| c.len() != n_layers) {
+            bail!("adopt_prefix chunk covers {} layers, cache has {n_layers}", c.len());
+        }
+        let tokens = chunks.len() * tpb;
+        if tokens > self.config.cache_len {
+            bail!("adopted prefix ({tokens} tokens) exceeds cache_len {}",
+                  self.config.cache_len);
+        }
+        for chunk in chunks {
+            self.retain_pages(chunk);
+        }
+        if let Some(st) = self.seqs.get_mut(&id) {
+            for chunk in chunks {
+                for (l, pair) in chunk.iter().enumerate() {
+                    for (p, b) in pair.iter().enumerate() {
+                        st.blocks[l][p].push(*b);
+                    }
+                }
+            }
+            st.len = tokens;
+        }
+        self.total += tokens;
+        self.peak_tokens = self.peak_tokens.max(self.total);
+        Ok(())
     }
 
     /// Tokens currently cached across all sequences.
@@ -605,6 +813,149 @@ mod tests {
         assert_eq!(c.free_seq(s), in_use, "released count must match pages held");
         assert_eq!(c.free_seq(s), 0, "double free is a counted no-op");
         assert_eq!(c.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn fork_shares_pages_then_cow_diverges() {
+        for quant in [QuantKind::F32, QuantKind::Int4] {
+            let mut c = KvCache::new(cfg(quant));
+            let a = c.new_seq();
+            // 6 tokens at 4/block: one full page + a partial tail per plane.
+            for t in 0..6 {
+                let k: Vec<f32> = (0..8).map(|i| ((t * 8 + i) as f32 * 0.11).sin()).collect();
+                let v: Vec<f32> = (0..12).map(|i| ((t * 12 + i) as f32 * 0.07).cos()).collect();
+                c.append(a, &[(&k, &v), (&k, &v)]).unwrap();
+            }
+            let before = c.blocks_in_use();
+            let mut a_img = vec![0.0; 8 * 8];
+            c.stage(a, 0, 0, &mut a_img, 8).unwrap();
+
+            let b = c.fork_seq(a).unwrap();
+            assert_eq!(c.blocks_in_use(), before, "fork must not copy pages");
+            assert_eq!(c.seq_len(b), 6);
+            assert_eq!(c.total_tokens(), 12, "forked tokens count as cached");
+
+            // Divergent appends: b's lands mid-block and must COW the shared
+            // tails; a's keeps writing its own (now re-owned post-COW) tail.
+            let kb: Vec<f32> = (0..8).map(|i| i as f32 + 1000.0).collect();
+            let vb: Vec<f32> = (0..12).map(|i| i as f32 - 1000.0).collect();
+            c.append(b, &[(&kb, &vb), (&kb, &vb)]).unwrap();
+            let ka: Vec<f32> = (0..8).map(|i| i as f32 + 2000.0).collect();
+            let va: Vec<f32> = (0..12).map(|i| i as f32 - 2000.0).collect();
+            c.append(a, &[(&ka, &va), (&ka, &va)]).unwrap();
+
+            // a's first 6 rows are bit-identical to before the fork, and the
+            // two sequences see their own token 6.
+            let mut a_now = vec![0.0; 8 * 8];
+            c.stage(a, 0, 0, &mut a_now, 8).unwrap();
+            assert!(a_img[..6 * 8].iter().zip(&a_now[..6 * 8])
+                        .all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{quant:?}: fork/COW perturbed the donor's rows");
+            let mut b_now = vec![0.0; 8 * 8];
+            c.stage(b, 0, 0, &mut b_now, 8).unwrap();
+            assert!(a_img[..6 * 8].iter().zip(&b_now[..6 * 8])
+                        .all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{quant:?}: COW copy not bit-identical to the donor");
+            assert_ne!(&a_now[6 * 8..7 * 8], &b_now[6 * 8..7 * 8],
+                       "{quant:?}: sequences must diverge at token 6");
+
+            // Freeing one sharer releases only its references.
+            c.free_seq(b);
+            let mut a_after = vec![0.0; 8 * 8];
+            c.stage(a, 0, 0, &mut a_after, 8).unwrap();
+            assert!(a_now.iter().zip(&a_after).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{quant:?}: freeing the fork corrupted the survivor");
+            c.free_seq(a);
+            assert_eq!(c.blocks_in_use(), 0, "{quant:?}: pages leaked");
+            assert_eq!(c.total_tokens(), 0);
+        }
+    }
+
+    #[test]
+    fn adopt_prefix_shares_full_pages_bitwise() {
+        for quant in [QuantKind::F32, QuantKind::Int4] {
+            let mut c = KvCache::new(cfg(quant));
+            let a = c.new_seq();
+            for t in 0..8 {
+                let k: Vec<f32> = (0..8).map(|i| ((t * 5 + i) as f32 * 0.3).sin()).collect();
+                let v: Vec<f32> = (0..12).map(|i| ((t * 3 + i) as f32 * 0.2).cos()).collect();
+                c.append(a, &[(&k, &v), (&k, &v)]).unwrap();
+            }
+            // Pin both full chunks the way the trie would.
+            let chunks = c.prefix_pages(a, 0, 2).unwrap();
+            assert_eq!(chunks.len(), 2);
+            for ch in &chunks {
+                c.retain_pages(ch);
+            }
+            let before = c.blocks_in_use();
+
+            // Adoption: a fresh sequence opens 8 tokens long, sharing pages.
+            let b = c.new_seq();
+            c.adopt_prefix(b, &chunks).unwrap();
+            assert_eq!(c.seq_len(b), 8);
+            assert_eq!(c.blocks_in_use(), before, "adopt must not allocate");
+            let mut a_img = vec![0.0; 8 * 12];
+            let mut b_img = vec![0.0; 8 * 12];
+            c.stage(a, 1, 1, &mut a_img, 8).unwrap();
+            c.stage(b, 1, 1, &mut b_img, 8).unwrap();
+            assert!(a_img.iter().zip(&b_img).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{quant:?}: adopted prefix not bit-identical");
+
+            // Appending to the adopter lands at slot 0 of a *fresh* block —
+            // page-aligned sharing means no COW on this path.
+            let in_use = c.blocks_in_use();
+            let k = vec![0.5; 8];
+            let v = vec![-0.5; 12];
+            c.append(b, &[(&k, &v), (&k, &v)]).unwrap();
+            assert_eq!(c.blocks_in_use(), in_use + 4, "expected one fresh page per plane");
+
+            // Donor dies; the adopter and the trie pins keep pages live.
+            c.free_seq(a);
+            let mut b_after = vec![0.0; 8 * 12];
+            c.stage(b, 1, 1, &mut b_after, 8).unwrap();
+            assert!(b_img.iter().zip(&b_after).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{quant:?}: donor free corrupted adopter");
+            c.free_seq(b);
+            // Only the trie pins remain: exactly the adopted chunks' pages.
+            assert_eq!(c.blocks_in_use(), chunks.len() * 2 * 2);
+            let mut freed = 0;
+            for ch in &chunks {
+                freed += c.release_pages(ch);
+            }
+            assert_eq!(freed, chunks.len() * 2 * 2);
+            assert_eq!(c.blocks_in_use(), 0, "{quant:?}: trie pins leaked");
+        }
+    }
+
+    #[test]
+    fn adopt_prefix_validates_before_touching_refcounts() {
+        let mut c = KvCache::new(cfg(QuantKind::F32));
+        let a = c.new_seq();
+        let k = vec![1.0; 8];
+        let v = vec![2.0; 12];
+        for _ in 0..4 {
+            c.append(a, &[(&k, &v), (&k, &v)]).unwrap();
+        }
+        let chunks = c.prefix_pages(a, 0, 1).unwrap();
+        let before = c.blocks_in_use();
+        // Non-empty target: must error without retaining anything.
+        assert!(c.adopt_prefix(a, &chunks).is_err());
+        // Layer-arity mismatch: likewise.
+        let b = c.new_seq();
+        let bad = vec![vec![[0u32, 0u32]]]; // one layer, cache has two
+        assert!(c.adopt_prefix(b, &bad).is_err());
+        assert_eq!(c.blocks_in_use(), before);
+        // free_seq on the donor leaves nothing pinned (no refs were taken).
+        c.free_seq(a);
+        c.free_seq(b);
+        assert_eq!(c.blocks_in_use(), 0);
+        // prefix_pages refuses partial chunks.
+        let d = c.new_seq();
+        for _ in 0..6 {
+            c.append(d, &[(&k, &v), (&k, &v)]).unwrap();
+        }
+        assert!(c.prefix_pages(d, 0, 2).is_err(), "chunk 1 is partial (6 tokens, tpb 4)");
+        assert!(c.prefix_pages(d, 0, 1).is_ok());
     }
 
     #[test]

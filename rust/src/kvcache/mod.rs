@@ -15,9 +15,17 @@
 //! validated against. Appends are transactional: a mid-token pool
 //! exhaustion rolls back every page taken for that token. See the
 //! `cache` module docs for the full lifecycle and invalidation rules.
+//!
+//! Pages are refcounted, not single-owner: sequences can share pages
+//! read-only ([`cache::KvCache::fork_seq`], the prefix trie's
+//! [`cache::KvCache::adopt_prefix`]) with copy-on-write on divergent
+//! mid-block appends — the substrate under cross-request prefix caching
+//! (`prefixcache/`), and the same refactor that unblocks preemption/swap
+//! and fork-style sampling. [`cache::ChunkPages`] is the page-id currency
+//! the trie and cache exchange.
 
 pub mod cache;
 pub mod pool;
 
-pub use cache::{CacheConfig, KvCache, SeqId};
+pub use cache::{CacheConfig, ChunkPages, KvCache, SeqId};
 pub use pool::{BlockId, BlockPool};

@@ -1,5 +1,14 @@
-//! Fixed-size block pool with a free list — the allocation substrate of the
-//! paged cache (one pool per layer-tensor kind so widths stay uniform).
+//! Fixed-size block pool with a free list and per-block reference counts —
+//! the allocation substrate of the paged cache (one pool per layer-tensor
+//! kind so widths stay uniform).
+//!
+//! Blocks were single-owner until the prefix cache arrived; now a block may
+//! be shared read-only between sequences (and pinned by the prefix trie),
+//! so ownership is a refcount: `alloc` hands out a block with one
+//! reference, `retain` adds a reader, and `release` drops one — the block
+//! returns to the free list only when the last reference goes. Writers must
+//! hold the only reference (`ref_count == 1`); the cache layer enforces
+//! that by COW-forking shared blocks before mutating them.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -12,6 +21,8 @@ pub struct BlockPool {
     pub tokens_per_block: usize,
     data: Vec<f32>,
     free: Vec<BlockId>,
+    /// References per block; 0 ⇔ the block is on the free list.
+    refs: Vec<u32>,
     pub capacity: usize,
 }
 
@@ -22,6 +33,7 @@ impl BlockPool {
             tokens_per_block,
             data: vec![0.0; capacity * tokens_per_block * width],
             free: (0..capacity as BlockId).rev().collect(),
+            refs: vec![0; capacity],
             capacity,
         }
     }
@@ -34,14 +46,41 @@ impl BlockPool {
             self.capacity
         )));
         match self.free.pop() {
-            Some(id) => Ok(id),
+            Some(id) => {
+                self.refs[id as usize] = 1;
+                Ok(id)
+            }
             None => bail!("block pool exhausted ({} blocks)", self.capacity),
         }
     }
 
-    pub fn release(&mut self, id: BlockId) {
+    /// Add a reader to a live block (prefix attach, sequence fork).
+    pub fn retain(&mut self, id: BlockId) {
         debug_assert!((id as usize) < self.capacity);
-        self.free.push(id);
+        debug_assert!(self.refs[id as usize] > 0, "retain of a free block");
+        self.refs[id as usize] += 1;
+    }
+
+    /// Drop one reference; returns `true` iff this was the last reference
+    /// and the block went back on the free list (the caller owns per-block
+    /// side state — quantized rows — and must clear it exactly then).
+    pub fn release(&mut self, id: BlockId) -> bool {
+        debug_assert!((id as usize) < self.capacity);
+        debug_assert!(self.refs[id as usize] > 0, "release of a free block");
+        self.refs[id as usize] -= 1;
+        if self.refs[id as usize] == 0 {
+            self.free.push(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current reference count (0 for a free block). The cache's COW check:
+    /// a block is writable only while this is 1.
+    pub fn ref_count(&self, id: BlockId) -> u32 {
+        debug_assert!((id as usize) < self.capacity);
+        self.refs[id as usize]
     }
 
     pub fn in_use(&self) -> usize {
@@ -66,6 +105,18 @@ impl BlockPool {
         let base = (block as usize * self.tokens_per_block + slot0) * self.width;
         &self.data[base..base + (slot1 - slot0) * self.width]
     }
+
+    /// Copy rows [slot0, slot1) from `src` into the same slots of `dst` —
+    /// the bitwise half of a COW fork (`copy_within` moves the exact f32
+    /// bit patterns; quantized side state is cloned by the cache layer).
+    pub fn copy_rows_between(&mut self, src: BlockId, dst: BlockId, slot0: usize, slot1: usize) {
+        debug_assert!(src != dst);
+        debug_assert!(slot1 <= self.tokens_per_block);
+        let len = (slot1 - slot0) * self.width;
+        let s = (src as usize * self.tokens_per_block + slot0) * self.width;
+        let d = (dst as usize * self.tokens_per_block + slot0) * self.width;
+        self.data.copy_within(s..s + len, d);
+    }
 }
 
 #[cfg(test)]
@@ -79,12 +130,30 @@ mod tests {
         let b = p.alloc().unwrap();
         assert!(p.alloc().is_err());
         assert_eq!(p.in_use(), 2);
-        p.release(a);
+        assert!(p.release(a), "sole owner's release must free");
         let c = p.alloc().unwrap();
         assert_eq!(c, a);
-        p.release(b);
-        p.release(c);
+        assert!(p.release(b));
+        assert!(p.release(c));
         assert_eq!(p.in_use(), 0);
+    }
+
+    #[test]
+    fn retain_keeps_block_live_until_last_release() {
+        let mut p = BlockPool::new(1, 4, 2);
+        let a = p.alloc().unwrap();
+        assert_eq!(p.ref_count(a), 1);
+        p.retain(a);
+        p.retain(a);
+        assert_eq!(p.ref_count(a), 3);
+        assert!(!p.release(a), "two readers remain");
+        assert!(!p.release(a), "one reader remains");
+        assert_eq!(p.in_use(), 1, "shared block must not hit the free list");
+        assert!(p.alloc().is_err(), "capacity 1, block still referenced");
+        assert!(p.release(a), "last reference frees");
+        assert_eq!(p.ref_count(a), 0);
+        assert_eq!(p.in_use(), 0);
+        assert_eq!(p.alloc().unwrap(), a);
     }
 
     #[test]
@@ -97,5 +166,24 @@ mod tests {
         assert_eq!(p.row(a, 0), &[1.0, 2.0, 3.0]);
         assert_eq!(p.row(a, 1), &[0.0; 3]);
         assert_eq!(p.row(b, 1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn copy_rows_between_is_bitwise() {
+        let mut p = BlockPool::new(2, 3, 2);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        // include a negative-zero and a subnormal: COW must move exact bits
+        p.row_mut(a, 0).copy_from_slice(&[-0.0, 1.0e-40]);
+        p.row_mut(a, 1).copy_from_slice(&[3.5, -7.25]);
+        p.row_mut(a, 2).copy_from_slice(&[9.0, 9.0]);
+        p.copy_rows_between(a, b, 0, 2);
+        for slot in 0..2 {
+            let (src, dst) = (p.row(a, slot).to_vec(), p.row(b, slot).to_vec());
+            for (x, y) in src.iter().zip(dst.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(p.row(b, 2), &[0.0; 2], "slot past the copy range untouched");
     }
 }

@@ -12,6 +12,10 @@
 //! Layer 5 ([`router`]) fans that protocol out over a fleet of workers:
 //! health-probed placement with session affinity, per-worker circuit
 //! breakers, automatic failover, and graceful drain.
+//! A sixth capability sits under the engine: [`prefixcache`], a
+//! cross-request latent prefix cache (page-aligned trie over refcounted
+//! copy-on-write cache pages) that lets requests sharing a prompt prefix
+//! adopt already-computed latent pages instead of re-admitting them.
 //! It also contains a complete from-scratch Rust mirror of the offline
 //! compression pipeline (Fisher allocation, CKA head reordering, grouped SVD,
 //! offline calibration, matrix fusion) over a small dense linear-algebra
@@ -24,6 +28,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod kvcache;
 pub mod linalg;
+pub mod prefixcache;
 pub mod quant;
 pub mod router;
 pub mod runtime;

@@ -7,7 +7,12 @@
 //!             and exercises QueueFull backpressure; --policy picks the
 //!             batching policy: eager | full | threshold<k>;
 //!             --max-cache-tokens caps prompt+max_new per request;
-//!             --metrics-json dumps the metrics snapshot on exit).
+//!             --prefix-cache-pages N enables the cross-request latent
+//!             prefix cache with an N-page arena (0 = off, the default);
+//!             --tokens-per-block sets the KV page size — only *full*
+//!             pages are prefix-shareable, so short shared prompts want
+//!             small pages; --metrics-json dumps the metrics snapshot on
+//!             exit).
 //!             With --listen <addr> it becomes the TCP wire server:
 //!             newline-delimited JSON protocol over the coordinator
 //!             (--max-inflight / --max-inflight-conn bound concurrency;
@@ -19,7 +24,9 @@
 //!             against a `serve --listen` server or a router; prints
 //!             req/s, tok/s, TTFT and token-gap percentiles (--metrics
 //!             fetches the server's metrics snapshot; --ping round-trips
-//!             a keepalive; --shutdown stops the server)
+//!             a keepalive; --print-tokens streams one request and prints
+//!             its token ids + logprob bits, bitwise-comparable across
+//!             runs; --shutdown stops the server)
 //!   router    fault-tolerant shard router: fans the same wire protocol
 //!             out over N `serve --listen` workers (--listen <addr>
 //!             --workers a,b,... ; health-probed placement with session
@@ -45,6 +52,7 @@
 //!   repro serve --model tiny-mha --variant recal@50 --requests 16
 //!   repro serve --requests 16 --stream --deadline-ms 2000 --queue-cap 4
 //!   repro serve --listen 127.0.0.1:7077 --queue-cap 8 --max-cache-tokens 4096
+//!   repro serve --listen 127.0.0.1:7077 --prefix-cache-pages 256
 //!   repro client --addr 127.0.0.1:7077 --connections 4 --requests 8
 //!   repro client --addr 127.0.0.1:7077 --requests 0 --shutdown
 //!   repro router --listen 127.0.0.1:7070 --workers 127.0.0.1:7077,127.0.0.1:7078
@@ -73,7 +81,7 @@ fn main() -> Result<()> {
     }
     let args = Args::from_env(&[
         "quick", "fisher", "quiet", "stream", "shutdown", "metrics", "ping",
-        "update-sync-baseline",
+        "print-tokens", "update-sync-baseline",
     ]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
     let dir = args.opt_or("artifacts", "artifacts");
@@ -174,6 +182,9 @@ fn serve(dir: &str, args: &Args) -> Result<()> {
         .map_err(|e| anyhow::anyhow!("bad --policy: {e}"))?;
     let queue_cap = args.usize_or("queue-cap", usize::MAX);
     let max_cache_tokens = args.usize_or("max-cache-tokens", usize::MAX);
+    let prefix_cache_pages = args.usize_or("prefix-cache-pages", 0);
+    let tokens_per_block =
+        args.usize_or("tokens-per-block", EngineConfig::default().tokens_per_block);
     let deadline_ms: Option<u64> = match args.opt("deadline-ms") {
         Some(s) => Some(s.parse().context("bad --deadline-ms (integer ms)")?),
         None => None,
@@ -190,7 +201,15 @@ fn serve(dir: &str, args: &Args) -> Result<()> {
         &rt,
         model,
         variant,
-        EngineConfig { quant, policy, queue_cap, max_cache_tokens, ..Default::default() },
+        EngineConfig {
+            quant,
+            policy,
+            queue_cap,
+            max_cache_tokens,
+            prefix_cache_pages,
+            tokens_per_block,
+            ..Default::default()
+        },
     )?;
 
     // demo workload: long-context task prompts (real use of the cache)
@@ -297,6 +316,9 @@ fn serve_listen(dir: &str, args: &Args, addr: &str) -> Result<()> {
         .map_err(|e| anyhow::anyhow!("bad --policy: {e}"))?;
     let queue_cap = args.usize_or("queue-cap", usize::MAX);
     let max_cache_tokens = args.usize_or("max-cache-tokens", usize::MAX);
+    let prefix_cache_pages = args.usize_or("prefix-cache-pages", 0);
+    let tokens_per_block =
+        args.usize_or("tokens-per-block", EngineConfig::default().tokens_per_block);
     let defaults = ServerConfig::default();
     let cfg = ServerConfig {
         max_inflight_per_conn: args.usize_or("max-inflight-conn", 8),
@@ -322,7 +344,15 @@ fn serve_listen(dir: &str, args: &Args, addr: &str) -> Result<()> {
             &rt,
             model,
             variant,
-            EngineConfig { quant, policy, queue_cap, max_cache_tokens, ..Default::default() },
+            EngineConfig {
+                quant,
+                policy,
+                queue_cap,
+                max_cache_tokens,
+                prefix_cache_pages,
+                tokens_per_block,
+                ..Default::default()
+            },
         )
     });
     let handle = coord.handle();
@@ -347,7 +377,7 @@ fn serve_listen(dir: &str, args: &Args, addr: &str) -> Result<()> {
 /// `repro client`: blocking wire client / load generator against a
 /// `serve --listen` server.
 fn client_cmd(args: &Args) -> Result<()> {
-    use recalkv::server::{run_load, Client};
+    use recalkv::server::{run_load, Client, GenOutcome, WireEvent, WireRequest};
     let addr = args.opt("addr").context("--addr <host:port> is required")?;
     let connections = args.usize_or("connections", 1);
     let requests = args.usize_or("requests", 4);
@@ -366,6 +396,25 @@ fn client_cmd(args: &Args) -> Result<()> {
         println!("{}", report.summary());
         if report.failed > 0 {
             bail!("{} of {} requests ended in failure", report.failed, report.requests);
+        }
+    }
+    if args.has("print-tokens") {
+        // One streamed request, output formatted for byte-for-byte diffing:
+        // scripts/check.sh runs the same prompt cold and warm (prefix-cache
+        // hit) and asserts the outputs are identical.
+        let mut c = Client::connect(addr)?;
+        let prompt = prompts.first().cloned().unwrap_or_default();
+        match c.generate(&WireRequest::new(1, prompt, max_new))? {
+            GenOutcome::Done { events } => {
+                for (ev, _) in &events {
+                    if let WireEvent::Token { token, logprob, .. } = ev {
+                        println!("token={token} logprob_bits={:016x}", logprob.to_bits());
+                    }
+                }
+            }
+            GenOutcome::Rejected(e) => {
+                bail!("request rejected: {} ({})", e.message, e.kind.name())
+            }
         }
     }
     if args.has("ping") {

@@ -1,0 +1,491 @@
+//! Cross-request latent prefix cache: a page-aligned trie over token-prefix
+//! chunks, pinning refcounted cache pages so later requests sharing a
+//! prompt prefix (system prompts, few-shot preambles) skip the per-token
+//! admission pipeline — page allocation, quantize, append — for the cached
+//! part and adopt the donor's pages by refcount bump instead
+//! ([`crate::kvcache::KvCache::adopt_prefix`]). The stored rows are
+//! ReCalKV *latents* (low-rank, optionally int4/int3), so the shared arena
+//! is 4–8× denser than an uncompressed prefix cache would be.
+//!
+//! # Structure
+//!
+//! One trie node per full cache page (`tokens_per_block` tokens) of prompt
+//! prefix. Nodes are keyed by the FNV-1a *chain hash* of every token byte
+//! up to and including the node's chunk ([`crate::util::hash::fnv1a_seeded`]
+//! — the same primitive router placement hashes prompts with, so shard
+//! affinity and trie locality agree). A 64-bit hash can collide, so a hash
+//! key is never trusted alone: each node stores its chunk's tokens and its
+//! parent's chain hash, and a walk only follows a node whose stored tokens
+//! match the prompt byte-for-byte — a collision degrades to a miss, never
+//! to attaching wrong latents.
+//!
+//! # Page-aligned sharing
+//!
+//! Only *full* chunks are indexed. That keeps copy-on-write off the serving
+//! path entirely: after adopting N full pages, the suffix prefill and every
+//! decode append land at slot 0 of fresh private blocks, so shared pages
+//! are never written. (COW exists for `fork_seq`-style mid-block sharing;
+//! see `kvcache/cache.rs`.)
+//!
+//! # Eviction
+//!
+//! The trie pins one reference per indexed page and answers for at most
+//! `budget_pages` of them. Admission past the budget evicts
+//! least-recently-walked **leaf** nodes first — never an interior node
+//! (children still index through it) and never a node with live readers
+//! (sequences currently attached through it), so a hot prefix cannot be
+//! evicted out from under the requests replaying it. When nothing is
+//! evictable the insert simply stops extending: the cache is best-effort
+//! by design and correctness never depends on an insert landing.
+//!
+//! # Determinism
+//!
+//! Attach replays the exact bits a cold prefill would have written: the
+//! donor's pages were produced by the same deterministic prefill graph and
+//! quantize path, and staging gathers bits from pages without caring who
+//! allocated them. The wire-equivalence suites are therefore the oracle —
+//! a hit must stream byte-for-byte what a cold run streams.
+
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+use crate::kvcache::{ChunkPages, KvCache, SeqId};
+use crate::util::hash::{fnv1a_seeded, FNV_OFFSET};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// One indexed chunk: `tokens_per_block` prompt tokens whose latent pages
+/// the trie holds a reference on.
+struct Node {
+    /// Chain hash of the parent prefix ([`FNV_OFFSET`] for depth-0 nodes).
+    parent: u64,
+    /// The chunk's tokens — verified on every walk (collision safety).
+    tokens: Vec<i32>,
+    /// Pinned pages, `pages[layer] = [key_page, value_page]`.
+    pages: ChunkPages,
+    /// Child nodes indexing through this one (leaf ⇔ 0).
+    children: usize,
+    /// Sequences currently attached through this node.
+    readers: usize,
+    /// Logical LRU clock value of the last walk that touched this node.
+    last_used: u64,
+}
+
+/// What one [`PrefixCache::insert`] did (all best-effort): feeds the
+/// `prefix_evictions` counter and the accounting tests.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InsertOutcome {
+    pub nodes_inserted: usize,
+    pub pages_pinned: usize,
+    pub nodes_evicted: usize,
+}
+
+/// The trie. Owned by the engine next to its `KvCache`; every method that
+/// moves refcounts takes the cache explicitly, so the pinning side effects
+/// are visible at the call site and the trie can never outlive the pages
+/// it indexes.
+pub struct PrefixCache {
+    budget_pages: usize,
+    tokens_per_block: usize,
+    /// chain hash → node. BTreeMap for deterministic iteration (eviction
+    /// tie-breaks must not depend on hash-map order).
+    nodes: BTreeMap<u64, Node>,
+    /// Reader pins per attached sequence (chain hashes along its path),
+    /// dropped by [`PrefixCache::detach`].
+    attached: BTreeMap<SeqId, Vec<u64>>,
+    /// Logical LRU clock: bumped once per attach/insert walk.
+    tick: u64,
+    /// Pages currently pinned across all nodes.
+    pages_held: usize,
+}
+
+/// Extend `parent` chain hash over one chunk's token bytes.
+fn chunk_key(parent: u64, chunk: &[i32]) -> u64 {
+    let mut h = parent;
+    for t in chunk {
+        h = fnv1a_seeded(h, &t.to_le_bytes());
+    }
+    h
+}
+
+impl PrefixCache {
+    pub fn new(budget_pages: usize, tokens_per_block: usize) -> Self {
+        PrefixCache {
+            budget_pages,
+            tokens_per_block,
+            nodes: BTreeMap::new(),
+            attached: BTreeMap::new(),
+            tick: 0,
+            pages_held: 0,
+        }
+    }
+
+    /// Walk the trie along `prompt` and attach the longest cached
+    /// page-aligned prefix to the fresh sequence `seq`: its pages are
+    /// adopted by refcount bump ([`KvCache::adopt_prefix`] — all-or-nothing)
+    /// and the touched nodes gain a reader pin until
+    /// [`PrefixCache::detach`]. Returns the number of attached tokens
+    /// (0 = miss). On any error — including an injected `prefix.attach`
+    /// fault — the sequence and every refcount are untouched, so the caller
+    /// can always fall back to a cold prefill.
+    pub fn attach(&mut self, cache: &mut KvCache, seq: SeqId, prompt: &[i32]) -> Result<usize> {
+        // Chaos seam: a failed attach must degrade to a cold prefill with
+        // exactly-once terminals and zero leaked pages (chaos_prefix_*).
+        crate::failpoint!("prefix.attach", |f| Err(anyhow!("{f}: attach rejected")));
+        let mut chain = FNV_OFFSET;
+        let mut path: Vec<u64> = Vec::new();
+        let mut chunks: Vec<ChunkPages> = Vec::new();
+        for chunk in prompt.chunks_exact(self.tokens_per_block) {
+            let next = chunk_key(chain, chunk);
+            match self.nodes.get(&next) {
+                Some(n) if n.parent == chain && n.tokens.as_slice() == chunk => {
+                    chunks.push(n.pages.clone());
+                }
+                _ => break,
+            }
+            path.push(next);
+            chain = next;
+        }
+        if path.is_empty() {
+            return Ok(0);
+        }
+        cache.adopt_prefix(seq, &chunks)?;
+        self.tick += 1;
+        for key in &path {
+            if let Some(n) = self.nodes.get_mut(key) {
+                n.readers += 1;
+                n.last_used = self.tick;
+            }
+        }
+        let tokens = path.len() * self.tokens_per_block;
+        self.attached.insert(seq, path);
+        Ok(tokens)
+    }
+
+    /// Drop the reader pins `seq` took at attach time. Sequences that never
+    /// attached (misses, disabled cache) are a no-op, so the engine calls
+    /// this unconditionally from its one release path.
+    pub fn detach(&mut self, seq: SeqId) {
+        if let Some(path) = self.attached.remove(&seq) {
+            for key in path {
+                if let Some(n) = self.nodes.get_mut(&key) {
+                    n.readers = n.readers.saturating_sub(1);
+                }
+            }
+        }
+    }
+
+    /// Index `seq`'s admitted prompt: walk existing nodes (refreshing their
+    /// LRU stamp) and pin pages for each full chunk not yet present,
+    /// evicting cold leaves as needed to stay under `budget_pages`.
+    /// Best-effort and infallible: when the budget cannot be met (every
+    /// leaf has readers, or one chunk outweighs the whole budget) the walk
+    /// stops extending and reports what it did.
+    pub fn insert(&mut self, cache: &mut KvCache, seq: SeqId, prompt: &[i32]) -> InsertOutcome {
+        let mut out = InsertOutcome::default();
+        self.tick += 1;
+        let mut chain = FNV_OFFSET;
+        for (c, chunk) in prompt.chunks_exact(self.tokens_per_block).enumerate() {
+            let next = chunk_key(chain, chunk);
+            if let Some(n) = self.nodes.get_mut(&next) {
+                if n.parent == chain && n.tokens.as_slice() == chunk {
+                    n.last_used = self.tick;
+                    chain = next;
+                    continue;
+                }
+                // 64-bit chain collision: refuse to index past it (the
+                // resident node is someone else's prefix).
+                break;
+            }
+            let Ok(mut got) = cache.prefix_pages(seq, c, c + 1) else { break };
+            let Some(pages) = got.pop() else { break };
+            let per_node = pages.len() * 2;
+            while self.pages_held + per_node > self.budget_pages {
+                if self.evict_one(cache) {
+                    out.nodes_evicted += 1;
+                } else {
+                    return out;
+                }
+            }
+            cache.retain_pages(&pages);
+            if chain != FNV_OFFSET {
+                if let Some(parent) = self.nodes.get_mut(&chain) {
+                    parent.children += 1;
+                }
+            }
+            self.nodes.insert(
+                next,
+                Node {
+                    parent: chain,
+                    tokens: chunk.to_vec(),
+                    pages,
+                    children: 0,
+                    readers: 0,
+                    last_used: self.tick,
+                },
+            );
+            self.pages_held += per_node;
+            out.nodes_inserted += 1;
+            out.pages_pinned += per_node;
+            chain = next;
+        }
+        out
+    }
+
+    /// Evict the least-recently-used evictable node: a leaf, with no
+    /// readers, not touched by the walk in progress (`last_used < tick` —
+    /// an insert must never cannibalize the path it is building). Releases
+    /// the node's page pins. Returns `false` when nothing qualifies.
+    fn evict_one(&mut self, cache: &mut KvCache) -> bool {
+        let victim = self
+            .nodes
+            .iter()
+            .filter(|(_, n)| n.children == 0 && n.readers == 0 && n.last_used < self.tick)
+            .min_by_key(|(key, n)| (n.last_used, **key))
+            .map(|(key, _)| *key);
+        let Some(key) = victim else { return false };
+        if let Some(n) = self.nodes.remove(&key) {
+            self.pages_held -= n.pages.len() * 2;
+            cache.release_pages(&n.pages);
+            if n.parent != FNV_OFFSET {
+                if let Some(parent) = self.nodes.get_mut(&n.parent) {
+                    parent.children = parent.children.saturating_sub(1);
+                }
+            }
+        }
+        true
+    }
+
+    /// Pages currently pinned by the trie (`blocks_in_use` floor while the
+    /// trie is warm; surfaced as `prefix_pages_held` in worker stats).
+    pub fn pages_held(&self) -> usize {
+        self.pages_held
+    }
+
+    /// Indexed chunks (trie nodes).
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Release every pin and drop the whole index (accounting tests; an
+    /// engine being dropped can skip this — its pools die with it).
+    pub fn purge(&mut self, cache: &mut KvCache) {
+        for (_, n) in std::mem::take(&mut self.nodes) {
+            self.pages_held -= n.pages.len() * 2;
+            cache.release_pages(&n.pages);
+        }
+        self.attached.clear();
+        debug_assert_eq!(self.pages_held, 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{CacheConfig, KvCache};
+    use crate::quant::QuantKind;
+
+    const TPB: usize = 4;
+
+    fn cache() -> KvCache {
+        KvCache::new(CacheConfig {
+            n_layers: 2,
+            widths: vec![(8, 12), (8, 12)],
+            cache_len: 64,
+            tokens_per_block: TPB,
+            capacity_tokens: 256,
+            quant: QuantKind::F32,
+            signs_seed: 7,
+        })
+    }
+
+    /// Admit `prompt` cold into a fresh sequence (every row a function of
+    /// the token value, mimicking deterministic prefill latents).
+    fn admit(c: &mut KvCache, prompt: &[i32]) -> SeqId {
+        let s = c.new_seq();
+        for &t in prompt {
+            let k: Vec<f32> = (0..8).map(|i| t as f32 + i as f32 * 0.5).collect();
+            let v: Vec<f32> = (0..12).map(|i| -(t as f32) - i as f32 * 0.25).collect();
+            c.append(s, &[(&k, &v), (&k, &v)]).unwrap();
+        }
+        s
+    }
+
+    fn prompt(family: i32, len: usize) -> Vec<i32> {
+        (0..len as i32).map(|t| family * 1000 + t).collect()
+    }
+
+    #[test]
+    fn miss_then_insert_then_hit_is_bitwise() {
+        let mut c = cache();
+        let mut pc = PrefixCache::new(64, TPB);
+        let p = prompt(1, 10); // 2 full chunks + 2 tail tokens
+
+        let donor = admit(&mut c, &p);
+        assert_eq!(pc.attach(&mut c, donor, &p).ok(), Some(0), "empty trie must miss");
+        let out = pc.insert(&mut c, donor, &p);
+        assert_eq!(out.nodes_inserted, 2, "two full chunks indexable");
+        assert_eq!(out.pages_pinned, 2 * 2 * 2);
+        assert_eq!(pc.pages_held(), 8);
+
+        let mut donor_img = vec![0.0; 16 * 8];
+        c.stage(donor, 0, 0, &mut donor_img, 16).unwrap();
+
+        // A second request with the same prompt attaches 8 of 10 tokens.
+        let hit = c.new_seq();
+        let attached = pc.attach(&mut c, hit, &p).unwrap();
+        assert_eq!(attached, 8);
+        assert_eq!(c.seq_len(hit), 8);
+        // Suffix prefill of the remaining tokens, then bit-compare.
+        for &t in &p[attached..] {
+            let k: Vec<f32> = (0..8).map(|i| t as f32 + i as f32 * 0.5).collect();
+            let v: Vec<f32> = (0..12).map(|i| -(t as f32) - i as f32 * 0.25).collect();
+            c.append(hit, &[(&k, &v), (&k, &v)]).unwrap();
+        }
+        let mut hit_img = vec![0.0; 16 * 8];
+        c.stage(hit, 0, 0, &mut hit_img, 16).unwrap();
+        assert!(donor_img.iter().zip(&hit_img).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "attached prefix + suffix admission must replay the donor's bits");
+
+        // Lifecycle: sequences die, trie pins keep exactly its pages.
+        c.free_seq(donor);
+        c.free_seq(hit);
+        pc.detach(hit);
+        assert_eq!(c.blocks_in_use(), pc.pages_held());
+        pc.purge(&mut c);
+        assert_eq!(c.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn divergent_prompt_attaches_only_common_prefix() {
+        let mut c = cache();
+        let mut pc = PrefixCache::new(64, TPB);
+        let a = prompt(1, 12);
+        let donor = admit(&mut c, &a);
+        pc.insert(&mut c, donor, &a);
+        assert_eq!(pc.len(), 3);
+
+        // Same first chunk, divergence inside the second.
+        let mut b = a.clone();
+        if let Some(t) = b.get_mut(5) {
+            *t = -999;
+        }
+        let s = c.new_seq();
+        assert_eq!(pc.attach(&mut c, s, &b).unwrap(), TPB, "only chunk 0 is shared");
+        c.free_seq(donor);
+        c.free_seq(s);
+        pc.detach(s);
+        pc.purge(&mut c);
+        assert_eq!(c.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn budget_evicts_lru_leaves_but_never_read_nodes() {
+        let mut c = cache();
+        // Budget of 8 pages = exactly two nodes (2 layers × 2 planes × 2).
+        let mut pc = PrefixCache::new(8, TPB);
+
+        let p1 = prompt(1, 4);
+        let d1 = admit(&mut c, &p1);
+        assert_eq!(pc.insert(&mut c, d1, &p1).nodes_inserted, 1);
+
+        let p2 = prompt(2, 4);
+        let d2 = admit(&mut c, &p2);
+        assert_eq!(pc.insert(&mut c, d2, &p2).nodes_inserted, 1);
+        assert_eq!(pc.pages_held(), 8);
+
+        // A reader pins p1's node: the next insert must evict p2's (LRU
+        // would otherwise pick p1 — it is older).
+        let r = c.new_seq();
+        assert_eq!(pc.attach(&mut c, r, &p1).unwrap(), TPB);
+        let p3 = prompt(3, 4);
+        let d3 = admit(&mut c, &p3);
+        let out = pc.insert(&mut c, d3, &p3);
+        assert_eq!(out.nodes_inserted, 1);
+        assert_eq!(out.nodes_evicted, 1);
+        assert_eq!(pc.pages_held(), 8);
+        let s = c.new_seq();
+        assert_eq!(pc.attach(&mut c, s, &p1).unwrap(), TPB, "read node survived");
+        let s2 = c.new_seq();
+        assert_eq!(pc.attach(&mut c, s2, &p2).unwrap(), 0, "LRU leaf evicted");
+        c.free_seq(s2);
+
+        // Both evictable leaves read → a new insert cannot make room.
+        let r2 = c.new_seq();
+        assert_eq!(pc.attach(&mut c, r2, &p3).unwrap(), TPB);
+        let p4 = prompt(4, 4);
+        let d4 = admit(&mut c, &p4);
+        let out = pc.insert(&mut c, d4, &p4);
+        assert_eq!(out.nodes_inserted, 0, "all leaves have readers");
+        assert_eq!(pc.pages_held(), 8);
+
+        for seq in [d1, d2, d3, d4, r, s, r2] {
+            c.free_seq(seq);
+            pc.detach(seq);
+        }
+        pc.purge(&mut c);
+        assert_eq!(c.blocks_in_use(), 0, "pins leaked through eviction churn");
+    }
+
+    #[test]
+    fn interior_nodes_are_never_evicted() {
+        let mut c = cache();
+        // Room for exactly three nodes.
+        let mut pc = PrefixCache::new(12, TPB);
+        let long = prompt(1, 12); // chunks A→B→C, A and B interior
+        let d = admit(&mut c, &long);
+        assert_eq!(pc.insert(&mut c, d, &long).nodes_inserted, 3);
+
+        let p2 = prompt(2, 4);
+        let d2 = admit(&mut c, &p2);
+        let out = pc.insert(&mut c, d2, &p2);
+        // Only C (the leaf) is evictable; A and B hold the chain together.
+        assert_eq!(out.nodes_evicted, 1);
+        assert_eq!(out.nodes_inserted, 1);
+        let s = c.new_seq();
+        assert_eq!(pc.attach(&mut c, s, &long).unwrap(), 2 * TPB,
+                   "interior chain A→B must survive");
+        for seq in [d, d2, s] {
+            c.free_seq(seq);
+            pc.detach(seq);
+        }
+        pc.purge(&mut c);
+        assert_eq!(c.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn attach_fault_leaves_no_trace() {
+        // The failpoint registry is process-global: serialize with every
+        // other in-crate test that configures it.
+        let _gate = crate::util::sync::lock_unpoisoned(&crate::util::failpoint::TEST_GATE);
+        crate::util::failpoint::reset();
+        let mut c = cache();
+        let mut pc = PrefixCache::new(64, TPB);
+        let p = prompt(1, 8);
+        let d = admit(&mut c, &p);
+        pc.insert(&mut c, d, &p);
+        let before = c.blocks_in_use();
+
+        crate::util::failpoint::configure("prefix.attach=err(1)").unwrap();
+        let s = c.new_seq();
+        assert!(pc.attach(&mut c, s, &p).is_err());
+        crate::util::failpoint::reset();
+
+        assert_eq!(c.seq_len(s), 0, "faulted attach must leave the sequence empty");
+        assert_eq!(c.blocks_in_use(), before, "faulted attach moved refcounts");
+        // The cold fallback then proceeds normally on the same sequence.
+        for &t in &p {
+            let k: Vec<f32> = (0..8).map(|i| t as f32 + i as f32 * 0.5).collect();
+            let v: Vec<f32> = (0..12).map(|i| -(t as f32) - i as f32 * 0.25).collect();
+            c.append(s, &[(&k, &v), (&k, &v)]).unwrap();
+        }
+        assert_eq!(c.seq_len(s), 8);
+        c.free_seq(d);
+        c.free_seq(s);
+        pc.purge(&mut c);
+        assert_eq!(c.blocks_in_use(), 0);
+    }
+}

@@ -21,19 +21,17 @@
 /// much longer than this; distinct prompts usually diverge much earlier.
 pub const PREFIX_LEN: usize = 256;
 
-/// FNV-1a over the first [`PREFIX_LEN`] bytes of the prompt. FNV is enough
-/// here: the hash picks a shard, it doesn't need collision resistance, and
-/// its fixed offset/prime constants keep placement reproducible across
-/// runs and platforms (a `DefaultHasher` would not promise that).
+/// FNV-1a (via the shared [`crate::util::hash`] primitive — the same hash
+/// the prefix-cache trie keys chunks with, so placement and caching agree
+/// on prompt locality) over the first [`PREFIX_LEN`] bytes of the prompt.
+/// FNV is enough here: the hash picks a shard, it doesn't need collision
+/// resistance, and its fixed offset/prime constants keep placement
+/// reproducible across runs and platforms (a `DefaultHasher` would not
+/// promise that).
 pub fn prefix_hash(prompt: &str) -> u64 {
-    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-    const PRIME: u64 = 0x0000_0100_0000_01b3;
-    let mut h = OFFSET;
-    for &b in prompt.as_bytes().iter().take(PREFIX_LEN) {
-        h ^= b as u64;
-        h = h.wrapping_mul(PRIME);
-    }
-    h
+    let bytes = prompt.as_bytes();
+    let head = bytes.get(..PREFIX_LEN).unwrap_or(bytes);
+    crate::util::hash::fnv1a(head)
 }
 
 /// One worker as the placement decision sees it: a snapshot, taken under

@@ -255,6 +255,19 @@ impl Shared {
                 fetch_worker_stats(&slot.addr).unwrap_or(Json::Null)
             });
         }
+        // Fleet-wide prefix-cache totals: each worker has its own trie, so
+        // hit-rate only means something summed across the fleet (affinity
+        // routing is what makes per-worker tries effective at all).
+        let sum_counter = |name: &str| -> f64 {
+            worker_stats
+                .iter()
+                .filter_map(|ws| ws.get("metrics").and_then(|m| m.get(name)).and_then(Json::as_f64))
+                .sum()
+        };
+        let prefix_hits = sum_counter("prefix_hits");
+        let prefix_misses = sum_counter("prefix_misses");
+        let prefix_pages_shared = sum_counter("prefix_pages_shared");
+        let prefix_evictions = sum_counter("prefix_evictions");
         Json::obj(vec![
             (
                 "router",
@@ -267,6 +280,10 @@ impl Shared {
                         "requests_failed_over",
                         Json::Num(self.failed_over.load(Ordering::Relaxed) as f64),
                     ),
+                    ("prefix_hits_total", Json::Num(prefix_hits)),
+                    ("prefix_misses_total", Json::Num(prefix_misses)),
+                    ("prefix_pages_shared_total", Json::Num(prefix_pages_shared)),
+                    ("prefix_evictions_total", Json::Num(prefix_evictions)),
                     ("workers", Json::Arr(worker_rows)),
                 ]),
             ),

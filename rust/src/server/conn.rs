@@ -155,6 +155,7 @@ pub fn stats_json(ws: &WorkerStats) -> Json {
                 ("blocks_in_use", Json::Num(ws.blocks_in_use as f64)),
                 ("live_seqs", Json::Num(ws.live_seqs as f64)),
                 ("total_tokens", Json::Num(ws.total_tokens as f64)),
+                ("prefix_pages_held", Json::Num(ws.prefix_pages_held as f64)),
             ]),
         ),
         ("queue_depth", Json::Num(ws.queue_depth as f64)),

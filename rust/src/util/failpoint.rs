@@ -60,6 +60,7 @@
 //! | `shard.place`   | shard router placement ⇒ "no eligible worker"    |
 //! | `shard.probe`   | shard router health probe forged to fail         |
 //! | `shard.relay`   | router→worker transport fails (per frame read)   |
+//! | `prefix.attach` | prefix-trie attach ⇒ cold-prefill fallback       |
 //!
 //! The healing layers these sites exercise: the client retries retryable
 //! rejections and pre-token transport errors with deterministic capped
@@ -434,14 +435,15 @@ macro_rules! failpoint {
     };
 }
 
+/// Serialization gate for **in-crate** tests that configure the
+/// process-global registry (this module's and `prefixcache`'s); the suites
+/// under tests/ run in their own processes and carry their own gate.
+#[cfg(test)]
+pub(crate) static TEST_GATE: Mutex<()> = Mutex::new(());
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Mutex as StdMutex;
-
-    /// The registry is process-global; every test here serializes on this
-    /// gate and leaves the process disarmed.
-    static GATE: StdMutex<()> = StdMutex::new(());
 
     struct Disarm;
     impl Drop for Disarm {
@@ -451,7 +453,7 @@ mod tests {
     }
 
     fn with_registry(f: impl FnOnce()) {
-        let _gate = lock_unpoisoned(&GATE);
+        let _gate = lock_unpoisoned(&TEST_GATE);
         reset();
         let _disarm = Disarm;
         f();

@@ -1,0 +1,76 @@
+//! Shared FNV-1a hashing: the one content-hash primitive the shard
+//! router's session-affinity placement (`router/placement.rs`) and the
+//! latent prefix cache's trie chunk keys (`prefixcache/`) both build on,
+//! so the two layers agree on prompt locality — the worker a prefix hash
+//! routes to is the worker whose trie has that prefix warm.
+//!
+//! FNV-1a is deliberate: the fixed offset/prime constants make every hash
+//! reproducible across runs, builds, and platforms (a `DefaultHasher`
+//! promises none of that), and neither consumer needs collision
+//! resistance — placement picks a shard, and the trie verifies chunk
+//! tokens byte-for-byte before trusting a key (see
+//! `prefixcache::PrefixCache`).
+
+/// FNV-1a 64-bit offset basis (the hash of the empty input).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over `bytes` from the standard offset basis.
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_seeded(FNV_OFFSET, bytes)
+}
+
+/// FNV-1a over `bytes` continuing from `seed` — chaining form: feeding a
+/// byte stream in pieces (`fnv1a_seeded(fnv1a(a), b)`) produces exactly
+/// `fnv1a(a ++ b)`, which is how the prefix trie derives each chunk key
+/// from its parent's chain hash.
+#[inline]
+pub fn fnv1a_seeded(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_input_is_the_offset_basis() {
+        assert_eq!(fnv1a(b""), FNV_OFFSET);
+    }
+
+    #[test]
+    fn chaining_matches_one_shot() {
+        let a = b"system prompt: you are";
+        let b = b" a helpful assistant";
+        let whole: Vec<u8> = a.iter().chain(b.iter()).copied().collect();
+        assert_eq!(fnv1a_seeded(fnv1a(a), b), fnv1a(&whole));
+    }
+
+    #[test]
+    fn distinct_inputs_distinct_hashes() {
+        assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+        assert_ne!(fnv1a_seeded(1, b"x"), fnv1a_seeded(2, b"x"));
+    }
+
+    /// Satellite pin: placement's affinity hash IS this module's FNV-1a
+    /// over the same bytes — the shard router and the prefix cache must
+    /// agree on prompt locality, so identical prefixes hash identically
+    /// through both paths.
+    #[test]
+    fn placement_affinity_hash_agrees_with_shared_fnv() {
+        use crate::router::placement::{prefix_hash, PREFIX_LEN};
+        let long = "s".repeat(PREFIX_LEN + 100);
+        for prompt in ["", "shared few-shot preamble", long.as_str()] {
+            let covered = &prompt.as_bytes()[..prompt.len().min(PREFIX_LEN)];
+            assert_eq!(prefix_hash(prompt), fnv1a(covered), "prompt {prompt:?}");
+        }
+    }
+}

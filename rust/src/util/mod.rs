@@ -5,14 +5,17 @@
 //! compression pipeline fans out on, the runtime CPU-feature dispatch
 //! behind the SIMD micro-kernels, the panic-robust sync helpers
 //! (poison-tolerant locking, the saturating in-flight gauge) the serving
-//! stack leans on, and the robustness substrate: deterministic fault
+//! stack leans on, the robustness substrate: deterministic fault
 //! injection (`failpoint`) plus the shared capped-exponential retry
-//! policy (`backoff`).
+//! policy (`backoff`), and the shared FNV-1a content hash (`hash`) that
+//! keeps router placement and prefix-cache trie keys agreeing on prompt
+//! locality.
 
 pub mod backoff;
 pub mod bench;
 pub mod cli;
 pub mod failpoint;
+pub mod hash;
 pub mod json;
 pub mod pool;
 pub mod prop;

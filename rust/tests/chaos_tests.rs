@@ -16,6 +16,11 @@
 //! The `chaos_router_*` tests put a worker fleet behind the shard router
 //! (`router/`) and hold the same invariants across worker death, zero-token
 //! failover, mid-stream loss, graceful drain, and breaker trip/recovery.
+//! The `chaos_prefix_*` tests enable the latent prefix cache
+//! (`prefixcache/`) and hold the same bars through attach faults: a faulted
+//! attach degrades to a cold prefill with an identical token stream, and
+//! the leak bar becomes `blocks_in_use == prefix_pages_held` (the trie's
+//! deliberate pins are the only pages allowed to outlive the sequences).
 //!
 //! The failpoint registry is process-global, so every test serializes on
 //! [`GATE`] and leaves the process disarmed. Needs artifacts/ and skips
@@ -1018,6 +1023,138 @@ fn chaos_router_drain_excludes_worker_and_acknowledges() {
         assert_leak_free(&j, "drain survivor");
         w0.kill();
         w1.kill();
+    });
+}
+
+// ---------------------------------------------------------------------------
+// prefix-cache faults: a failed attach degrades to cold prefill, never leaks
+
+/// Leak bar for a prefix-enabled engine: the trie legitimately holds pages
+/// after every sequence retires, so quiescence means zero live sequences
+/// and slots with `blocks_in_use` exactly equal to the trie's pin count.
+fn assert_prefix_leak_free(j: &Json, what: &str) {
+    assert_eq!(num(j, &["cache", "live_seqs"]), 0.0, "`{what}` leaked sequences");
+    assert_eq!(num(j, &["inflight"]), 0.0, "`{what}` leaked in-flight slots");
+    assert_eq!(
+        num(j, &["cache", "blocks_in_use"]),
+        num(j, &["cache", "prefix_pages_held"]),
+        "`{what}` leaked cache blocks beyond the trie's pins: {j}"
+    );
+}
+
+/// Drive one request to a clean finish and return its streamed token ids
+/// (the identity oracle: cold, faulted-fallback, and hit streams must all
+/// be the same token sequence).
+fn finish_and_collect(c: &mut Client, id: u64, what: &str) -> Vec<i32> {
+    match c.generate(&WireRequest::new(id, PROMPT, 8)).expect("transport held") {
+        GenOutcome::Done { events } => {
+            assert!(
+                matches!(last_event(&events), WireEvent::Finished(_)),
+                "`{what}`: request {id} did not finish: {:?}",
+                last_event(&events)
+            );
+            assert_exactly_one_terminal(&events, what);
+            events
+                .iter()
+                .filter_map(|(ev, _)| match ev {
+                    WireEvent::Token { token, .. } => Some(*token),
+                    _ => None,
+                })
+                .collect()
+        }
+        GenOutcome::Rejected(e) => panic!("`{what}`: request {id} rejected: {e:?}"),
+    }
+}
+
+#[test]
+fn chaos_prefix_attach_fault_falls_back_to_cold_prefill() {
+    serialized(|| {
+        let Some(dir) = manifest_dir() else { return };
+        // tokens_per_block 4: only *full* pages are shareable, and PROMPT is
+        // ~8 tokens — the default 32-token pages would never fill, so the
+        // trie would have nothing to fault.
+        let ecfg = EngineConfig {
+            prefix_cache_pages: 256,
+            tokens_per_block: 4,
+            ..Default::default()
+        };
+        let (addr, coord, worker) = spawn_server(dir, ecfg, ServerConfig::default());
+        let mut c = Client::connect(&addr).expect("connect");
+
+        // seed the trie with a clean cold request
+        let cold = finish_and_collect(&mut c, 1, "prefix seed");
+
+        // the attach of the would-be hit faults: the engine must fall back
+        // to a cold prefill and still deliver the identical stream
+        failpoint::configure("prefix.attach=err:once").expect("chaos spec parses");
+        let faulted = finish_and_collect(&mut c, 2, "prefix.attach once");
+        let injected = failpoint::injected_total();
+        failpoint::reset();
+        assert_eq!(injected, 1, "once fires exactly once");
+        assert_eq!(faulted, cold, "cold fallback diverged from the seeded stream");
+
+        // disarmed, the same prompt hits the trie — and still matches
+        let warm = finish_and_collect(&mut c, 3, "prefix hit");
+        assert_eq!(warm, cold, "prefix hit diverged from the cold stream");
+
+        let mut obs = Client::connect(&addr).expect("observer");
+        let j = obs.metrics().expect("metrics");
+        assert!(num(&j, &["metrics", "prefix_hits"]) >= 1.0, "no hit recorded: {j}");
+        assert!(
+            num(&j, &["metrics", "prefix_misses"]) >= 2.0,
+            "the faulted attach must count as a miss: {j}"
+        );
+
+        drop(c);
+        let j = await_quiescence(&addr, "prefix.attach fault");
+        assert!(num(&j, &["cache", "prefix_pages_held"]) >= 1.0, "trie dropped its pages: {j}");
+        assert_prefix_leak_free(&j, "prefix.attach fault");
+        stop_server(&addr, coord, worker);
+    });
+}
+
+#[test]
+fn chaos_prefix_same_seed_rerun_injects_identical_fault_sequence() {
+    serialized(|| {
+        let Some(dir) = manifest_dir() else { return };
+        let ecfg = EngineConfig {
+            prefix_cache_pages: 256,
+            tokens_per_block: 4, // small pages so the short PROMPT fills some
+            ..Default::default()
+        };
+        let (addr, coord, worker) = spawn_server(dir, ecfg, ServerConfig::default());
+        // `prefix.attach` is evaluated once per admission, so with a
+        // sequential client the hit sequence is a pure function of the
+        // workload: two same-seed runs must fault the identical attach set.
+        // Every fault only degrades a hit to a cold prefill, so all
+        // requests still finish.
+        let run = |addr: &str| -> Vec<(&'static str, u64)> {
+            failpoint::reset();
+            failpoint::configure("prefix.attach=err:prob(0.5,2026)").expect("chaos spec parses");
+            let mut c = Client::connect(addr).expect("connect");
+            for r in 0..8u64 {
+                match c.generate(&WireRequest::new(r + 1, PROMPT, 2)).expect("transport held") {
+                    GenOutcome::Done { events } => assert!(
+                        matches!(last_event(&events), WireEvent::Finished(_)),
+                        "request {r} did not finish: {:?}",
+                        last_event(&events)
+                    ),
+                    GenOutcome::Rejected(e) => panic!("request {r} rejected: {e:?}"),
+                }
+            }
+            let log = failpoint::take_fired_log();
+            failpoint::reset();
+            log
+        };
+        let first = run(&addr);
+        let j = await_quiescence(&addr, "prefix same-seed rerun (between runs)");
+        assert_prefix_leak_free(&j, "prefix same-seed rerun (between runs)");
+        let second = run(&addr);
+        assert_eq!(first, second, "same seed must inject the identical fault sequence");
+        assert!(!first.is_empty(), "prob(0.5) over 8 attaches should have fired");
+        let j = await_quiescence(&addr, "prefix same-seed rerun");
+        assert_prefix_leak_free(&j, "prefix same-seed rerun");
+        stop_server(&addr, coord, worker);
     });
 }
 

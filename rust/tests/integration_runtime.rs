@@ -661,6 +661,79 @@ fn priority_orders_admission_under_full_policy() {
     assert_eq!(engine.cache.blocks_in_use(), 0);
 }
 
+/// Drive one request to its terminal result, collecting the bit patterns
+/// of every streamed token logprob — the oracle for prefix-cache identity.
+fn run_one(engine: &mut Engine, req: GenRequest) -> (GenResult, Vec<u64>) {
+    engine.submit(req).unwrap();
+    let mut lp_bits = Vec::new();
+    let mut result = None;
+    while !engine.idle() {
+        engine.step().unwrap();
+        for ev in engine.poll_events() {
+            if let GenEvent::Token { logprob, .. } = &ev {
+                lp_bits.push(logprob.to_bits());
+            }
+            if let Some(r) = ev.into_result() {
+                assert!(result.replace(r).is_none(), "double terminal result");
+            }
+        }
+    }
+    (result.expect("request never reached a terminal result"), lp_bits)
+}
+
+/// The prefix-cache acceptance bar: a request that attaches a cached
+/// prefix must be byte-for-byte identical to the same request served cold
+/// — tokens, text, and every streamed logprob bit — and retiring all
+/// sequences must leave exactly the trie-held pages allocated.
+#[test]
+fn prefix_cache_hit_is_bitwise_identical_to_cold_prefill() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = man.model("tiny-mha").unwrap();
+    let variant = model.variant("recal@50").unwrap();
+    let prompt = recalkv::coordinator::tokenizer::encode("the dog barks . the cat sits . ");
+
+    // Small pages so the short prompt spans full chunks (only full pages
+    // are shareable); identical paging on both engines, so the one delta
+    // between the worlds is the prefix cache itself.
+    let paging = EngineConfig { tokens_per_block: 4, ..Default::default() };
+
+    // cold reference: prefix cache off, both requests prefill from scratch
+    let mut cold = Engine::new(&rt, model, variant, paging.clone()).unwrap();
+    let (cold1, cold1_lp) = run_one(&mut cold, GenRequest::new(1, prompt.clone(), 8));
+    let (cold2, cold2_lp) = run_one(&mut cold, GenRequest::new(2, prompt.clone(), 8));
+    assert_eq!(cold.cache.blocks_in_use(), 0);
+
+    // warm: the first request seeds the trie, the second attaches it
+    let mut warm = Engine::new(
+        &rt,
+        model,
+        variant,
+        EngineConfig { prefix_cache_pages: 256, ..paging },
+    )
+    .unwrap();
+    let (warm1, warm1_lp) = run_one(&mut warm, GenRequest::new(1, prompt.clone(), 8));
+    let (warm2, warm2_lp) = run_one(&mut warm, GenRequest::new(2, prompt.clone(), 8));
+    assert_eq!(warm.metrics.prefix_misses, 1, "first request must miss");
+    assert_eq!(warm.metrics.prefix_hits, 1, "second request must hit");
+    assert!(warm.metrics.prefix_pages_shared > 0, "a hit must adopt pages");
+
+    assert_results_equivalent("prefix miss vs cold", &cold1, &warm1);
+    assert_results_equivalent("prefix hit vs cold", &cold2, &warm2);
+    assert_eq!(cold1_lp, warm1_lp, "miss-path logprob bits diverged from cold");
+    assert_eq!(cold2_lp, warm2_lp, "hit-path logprob bits diverged from cold");
+
+    // all sequences retired: the only pages still allocated are the ones
+    // the trie deliberately holds (shared-page accounting is exact)
+    assert!(warm.prefix_pages_held() > 0, "trie should hold the shared prefix");
+    assert_eq!(
+        warm.cache.blocks_in_use(),
+        warm.prefix_pages_held(),
+        "pages beyond the trie's leaked"
+    );
+    assert_eq!(warm.cache.live_seqs(), 0);
+}
+
 #[test]
 fn gqa_model_serves() {
     let Some(man) = manifest() else { return };

@@ -267,6 +267,120 @@ fn append_failure_keeps_cache_consistent() {
     });
 }
 
+/// Copy-on-write forks: a forked sequence that diverges must stay
+/// bit-identical to an independently built sequence with the same row
+/// history, in both F32 and quantized modes — and tearing everything down
+/// must leave the pool exactly empty.
+#[test]
+fn cow_fork_divergence_matches_independent_sequences() {
+    check("cow_fork_divergence", 6, |ctx| {
+        for quant in [QuantKind::F32, QuantKind::Int4] {
+            let mut cache = KvCache::new(cfg(quant, vec![(8, 12), (16, 4)], 4096));
+            let shared_len = ctx.usize_in(1, 20);
+            let a_extra = ctx.usize_in(1, 10);
+            let b_extra = ctx.usize_in(1, 10);
+            let mut shared = Vec::new();
+            for _ in 0..shared_len {
+                shared.push((ctx.f32_vec(8, 1.0), ctx.f32_vec(12, 1.0),
+                             ctx.f32_vec(16, 1.0), ctx.f32_vec(4, 1.0)));
+            }
+            let mut a_tail = Vec::new();
+            for _ in 0..a_extra {
+                a_tail.push((ctx.f32_vec(8, 1.0), ctx.f32_vec(12, 1.0),
+                             ctx.f32_vec(16, 1.0), ctx.f32_vec(4, 1.0)));
+            }
+            let mut b_tail = Vec::new();
+            for _ in 0..b_extra {
+                b_tail.push((ctx.f32_vec(8, 1.0), ctx.f32_vec(12, 1.0),
+                             ctx.f32_vec(16, 1.0), ctx.f32_vec(4, 1.0)));
+            }
+            // world 1: shared prefix via fork, then divergent tails (COW)
+            let a = cache.new_seq();
+            for r in &shared {
+                cache.append(a, &[(&r.0, &r.1), (&r.2, &r.3)]).map_err(|e| e.to_string())?;
+            }
+            let b = cache.fork_seq(a).map_err(|e| e.to_string())?;
+            for r in &a_tail {
+                cache.append(a, &[(&r.0, &r.1), (&r.2, &r.3)]).map_err(|e| e.to_string())?;
+            }
+            for r in &b_tail {
+                cache.append(b, &[(&r.0, &r.1), (&r.2, &r.3)]).map_err(|e| e.to_string())?;
+            }
+            // world 2: the same row histories built cold, no sharing
+            let c = cache.new_seq();
+            for r in shared.iter().chain(&a_tail) {
+                cache.append(c, &[(&r.0, &r.1), (&r.2, &r.3)]).map_err(|e| e.to_string())?;
+            }
+            let d = cache.new_seq();
+            for r in shared.iter().chain(&b_tail) {
+                cache.append(d, &[(&r.0, &r.1), (&r.2, &r.3)]).map_err(|e| e.to_string())?;
+            }
+            for (seq, twin) in [(a, c), (b, d)] {
+                for (layer, plane, w) in [(0usize, 0usize, 8usize), (0, 1, 12),
+                                          (1, 0, 16), (1, 1, 4)] {
+                    let mut x = vec![0.0f32; 128 * w];
+                    let mut y = vec![0.0f32; 128 * w];
+                    cache.stage(seq, layer, plane, &mut x, 128).map_err(|e| e.to_string())?;
+                    cache.stage(twin, layer, plane, &mut y, 128).map_err(|e| e.to_string())?;
+                    prop_assert!(
+                        x.iter().zip(&y).all(|(p, q)| p.to_bits() == q.to_bits()),
+                        "{quant:?} layer {layer} plane {plane}: fork lineage not \
+                         bit-identical to cold build"
+                    );
+                }
+            }
+            for s in [a, b, c, d] {
+                cache.free_seq(s);
+            }
+            prop_assert!(cache.blocks_in_use() == 0, "{quant:?}: leaked blocks");
+            prop_assert!(cache.total_tokens() == 0, "{quant:?}: leaked tokens");
+        }
+        Ok(())
+    });
+}
+
+/// `free_seq` on a sequence that shares all its pages must release only its
+/// refcounts: `blocks_in_use` is unchanged (the fork still owns every
+/// page), the survivor reads its rows bit-exactly and can keep appending,
+/// and only the last owner's free drains the pool to zero.
+#[test]
+fn shared_page_free_releases_only_the_refcount() {
+    check("shared_free_refcount", 8, |ctx| {
+        let mut cache = KvCache::new(cfg(QuantKind::F32, vec![(8, 12), (16, 4)], 2048));
+        let n = ctx.usize_in(1, 24);
+        let mut rows = Vec::new();
+        for _ in 0..n {
+            rows.push((ctx.f32_vec(8, 1.0), ctx.f32_vec(12, 1.0),
+                       ctx.f32_vec(16, 1.0), ctx.f32_vec(4, 1.0)));
+        }
+        let a = cache.new_seq();
+        for r in &rows {
+            cache.append(a, &[(&r.0, &r.1), (&r.2, &r.3)]).map_err(|e| e.to_string())?;
+        }
+        let b = cache.fork_seq(a).map_err(|e| e.to_string())?;
+        let before = cache.blocks_in_use();
+        let freed = cache.free_seq(a);
+        prop_assert!(freed == 0, "freeing a full sharer reclaimed {freed} pages");
+        prop_assert!(cache.blocks_in_use() == before,
+                     "freeing a sharer changed blocks_in_use");
+        let mut out = vec![0.0f32; 128 * 8];
+        cache.stage(b, 0, 0, &mut out, 128).map_err(|e| e.to_string())?;
+        for (t, r) in rows.iter().enumerate() {
+            prop_assert!(out[t * 8..(t + 1) * 8] == r.0[..],
+                         "survivor row {t} corrupted by donor free");
+        }
+        // the survivor is now sole owner: appends work, and its free drains
+        // the pool completely
+        let (k0, v0) = (ctx.f32_vec(8, 1.0), ctx.f32_vec(12, 1.0));
+        let (k1, v1) = (ctx.f32_vec(16, 1.0), ctx.f32_vec(4, 1.0));
+        cache.append(b, &[(&k0, &v0), (&k1, &v1)]).map_err(|e| e.to_string())?;
+        cache.free_seq(b);
+        prop_assert!(cache.blocks_in_use() == 0, "blocks leaked after last owner freed");
+        prop_assert!(cache.total_tokens() == 0, "tokens leaked after last owner freed");
+        Ok(())
+    });
+}
+
 #[test]
 fn bytes_per_token_accounting() {
     // the paper's memory claim: compressed+quantized cache is dramatically

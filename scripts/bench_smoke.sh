@@ -27,9 +27,11 @@ cargo bench --bench linalg_hotpath -- --quick --out "$REPO_ROOT/BENCH_linalg.jso
 
 # TCP wire serving on localhost loopback: req/s + streamed tok/s, TTFT and
 # inter-token-event latency p50/p95 at 1/4 concurrent clients (1/4/16
-# without --quick), plus frame encode/decode micro-paths (loopback section
-# skips without artifacts/; the JSON always lands).
-cargo bench --bench server_wire -- --quick --out "$REPO_ROOT/BENCH_server.json"
+# without --quick), plus frame encode/decode micro-paths and a zipfian
+# shared-prefix pass through the latent prefix cache recording cold-vs-warm
+# TTFT and the trie hit rate (serving sections skip without artifacts/; the
+# JSON always lands).
+cargo bench --bench server_wire -- --quick --prefix-pages 256 --out "$REPO_ROOT/BENCH_server.json"
 
 # Shard-router fan-out: streamed tok/s + TTFT p95 through router + workers
 # at 1/2 loopback workers (1/2/4 without --quick), plus the post-kill

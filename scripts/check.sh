@@ -98,6 +98,53 @@ else
     echo "[skip] router smoke: artifacts/ not built"
 fi
 
+# Prefix-cache smoke (needs artifacts/): serve with the latent prefix cache
+# on, stream the same prompt twice with --print-tokens, and diff the token
+# id + logprob-bit dumps byte-for-byte — the second run attaches the trie's
+# cached pages, so any drift here breaks the bitwise-identity guarantee.
+# Then assert the worker's metrics actually counted a hit (the diff alone
+# would pass trivially if the cache never engaged).
+if [[ -f artifacts/manifest.json ]]; then
+    PFX_LOG="$(mktemp)"
+    # 4-token pages: only full pages are prefix-shareable, and the smoke
+    # prompt is short — default 32-token pages would never fill the trie.
+    ./target/release/repro serve --listen 127.0.0.1:0 --queue-cap 8 \
+        --prefix-cache-pages 256 --tokens-per-block 4 > "$PFX_LOG" 2>&1 &
+    PFX_PID=$!
+    trap 'kill "$PFX_PID" 2>/dev/null || true' EXIT
+    PFX_ADDR=""
+    for _ in $(seq 1 100); do
+        PFX_ADDR="$(sed -n 's/^listening on \([0-9.:]*\).*/\1/p' "$PFX_LOG" | head -1)"
+        [[ -n "$PFX_ADDR" ]] && break
+        kill -0 "$PFX_PID" 2>/dev/null || { cat "$PFX_LOG"; exit 1; }
+        sleep 0.2
+    done
+    [[ -n "$PFX_ADDR" ]] || { echo "server never reported its address"; cat "$PFX_LOG"; exit 1; }
+    PFX_PROMPT="the dog barks . the cat sits . the bird flies over the quiet house ."
+    COLD_OUT="$(./target/release/repro client --addr "$PFX_ADDR" --requests 0 \
+        --prompt "$PFX_PROMPT" --max-new 8 --print-tokens)"
+    WARM_OUT="$(./target/release/repro client --addr "$PFX_ADDR" --requests 0 \
+        --prompt "$PFX_PROMPT" --max-new 8 --print-tokens)"
+    if [[ "$COLD_OUT" != "$WARM_OUT" ]]; then
+        echo "prefix smoke: warm output diverged from cold prefill"
+        diff <(echo "$COLD_OUT") <(echo "$WARM_OUT") || true
+        exit 1
+    fi
+    PFX_METRICS="$(./target/release/repro client --addr "$PFX_ADDR" --requests 0 --metrics)"
+    HITS="$(grep -o '"prefix_hits":[0-9]*' <<< "$PFX_METRICS" | head -1 | cut -d: -f2)"
+    if [[ -z "$HITS" || "$HITS" -lt 1 ]]; then
+        echo "prefix smoke: expected prefix_hits >= 1, got '${HITS:-missing}'"
+        echo "$PFX_METRICS"
+        exit 1
+    fi
+    ./target/release/repro client --addr "$PFX_ADDR" --requests 0 --shutdown
+    wait "$PFX_PID"   # non-zero exit (unclean shutdown) fails the check
+    trap - EXIT
+    echo "prefix smoke: OK ($PFX_ADDR, prefix_hits=$HITS, warm == cold bitwise)"
+else
+    echo "[skip] prefix smoke: artifacts/ not built"
+fi
+
 if [[ "${1:-}" == "--bench" ]]; then
     "$REPO_ROOT/scripts/bench_smoke.sh"
 fi
