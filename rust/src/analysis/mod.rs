@@ -2,7 +2,7 @@
 //!
 //! The compiler proves memory safety; it cannot prove the two contracts
 //! this reproduction actually stands on. This pass makes them machine
-//! checked instead of conventions. **Six invariants are enforced over
+//! checked instead of conventions. **Seven invariants are enforced over
 //! `rust/src/`** (see [`rules`] for the matchers, [`scan`] for the
 //! comment/string masking that keeps them honest):
 //!
@@ -40,6 +40,13 @@
 //!    contract), must name themselves with a string literal on the
 //!    invocation line, and site names must be unique across the crate so
 //!    one `PALLAS_FAILPOINTS` entry targets exactly one seam.
+//! 7. **Trace hygiene** (`trace-hygiene`) — trace sites (`trace_span!` /
+//!    `trace::instant` / `trace::complete_*`, see [`crate::trace`]) follow
+//!    the same discipline: forbidden in `compress/` and `linalg/`, a
+//!    string-literal site name on the invocation line, crate-wide name
+//!    uniqueness (`repro trace --check` joins events by site name), and in
+//!    the serving layers every `trace_span!` guard must be `let`-bound so
+//!    the span closes at scope exit on every return path.
 //!
 //! The dynamic counterpart is `scripts/sanitize.sh`: a Miri lane over the
 //! unsafe-heavy modules (with `PALLAS_SIMD=off`, so the scalar twins are
@@ -100,15 +107,16 @@ pub fn run(opts: &LintOptions) -> io::Result<LintOutcome> {
         rules::check_determinism(f, &mut raw);
         rules::check_simd_twins(f, &extra_tests, &mut raw);
     }
-    // rule 6 is cross-file (site-name uniqueness spans the crate)
+    // rules 6 and 7 are cross-file (site-name uniqueness spans the crate)
     rules::check_failpoints(&files, &mut raw);
+    rules::check_trace(&files, &mut raw);
 
     let mut violations: Vec<Violation> = Vec::new();
 
-    // ---- allowlist (rules 1/2/4; the twin and failpoint rules are never
-    // allowlistable: a kernel without a tested scalar twin has no
-    // reviewable excuse, and neither does an injection seam in a
-    // determinism-scoped numeric path) ----
+    // ---- allowlist (rules 1/2/4; the twin, failpoint, and trace rules
+    // are never allowlistable: a kernel without a tested scalar twin has
+    // no reviewable excuse, and neither does an injection seam or trace
+    // site in a determinism-scoped numeric path) ----
     let allow_text =
         fs::read_to_string(opts.crate_root.join(ALLOWLIST_FILE)).unwrap_or_default();
     let cfg = allowlist::parse_allowlist(&allow_text);
@@ -123,7 +131,10 @@ pub fn run(opts: &LintOptions) -> io::Result<LintOutcome> {
     }
     let mut used = vec![0usize; cfg.allows.len()];
     'violation: for v in raw {
-        if v.rule != rules::RULE_TWIN && v.rule != rules::RULE_FAILPOINT {
+        if v.rule != rules::RULE_TWIN
+            && v.rule != rules::RULE_FAILPOINT
+            && v.rule != rules::RULE_TRACE
+        {
             for (k, a) in cfg.allows.iter().enumerate() {
                 if a.rule == v.rule && v.path.ends_with(&a.path) && v.text.contains(&a.contains)
                 {
@@ -336,6 +347,28 @@ mod tests {
         // the violation survives the allowlist AND the entry reports stale
         let rules: Vec<&str> = out.violations.iter().map(|v| v.rule).collect();
         assert!(rules.contains(&"failpoint-hygiene"), "{:?}", out.violations);
+        assert!(
+            out.violations.iter().any(|v| v.msg.contains("stale")),
+            "{:?}",
+            out.violations
+        );
+    }
+
+    #[test]
+    fn trace_rule_runs_cross_file_and_is_not_allowlistable() {
+        let t = TempCrate::new("trace");
+        t.write(
+            "src/router/relay.rs",
+            "pub fn f() {\n    crate::trace_span!(\"hop\", 0);\n}\n",
+        );
+        t.write(
+            "lint_allow.toml",
+            "[[allow]]\nrule = \"trace-hygiene\"\npath = \"router/relay.rs\"\ncontains = \"trace_span\"\nreason = \"not reviewable\"\n",
+        );
+        let out = t.run(true);
+        // the violation survives the allowlist AND the entry reports stale
+        let rules: Vec<&str> = out.violations.iter().map(|v| v.rule).collect();
+        assert!(rules.contains(&"trace-hygiene"), "{:?}", out.violations);
         assert!(
             out.violations.iter().any(|v| v.msg.contains("stale")),
             "{:?}",

@@ -1,4 +1,4 @@
-//! The six invariant rules behind `repro lint`.
+//! The seven invariant rules behind `repro lint`.
 //!
 //! Each rule is a pure function over [`SourceFile`]s (masked lines,
 //! test spans — see [`super::scan`]) appending [`Violation`]s. The
@@ -13,6 +13,7 @@ pub const RULE_DETERMINISM: &str = "determinism";
 pub const RULE_SYNC: &str = "sync-baseline";
 pub const RULE_ALLOWLIST: &str = "allowlist";
 pub const RULE_FAILPOINT: &str = "failpoint-hygiene";
+pub const RULE_TRACE: &str = "trace-hygiene";
 
 /// One lint finding, pointing at a single source line.
 #[derive(Debug, Clone)]
@@ -433,6 +434,110 @@ fn site_name(raw: &str) -> Option<String> {
     rest.get(open..close).map(str::to_string)
 }
 
+/// Spans and instants are forbidden in the same determinism-scoped paths as
+/// failpoints, and for the same reason: `compress/` and `linalg/` kernels
+/// must stay branch-free, and even a disabled `trace_span!` is an atomic
+/// load + branch per call.
+const TRACE_FORBIDDEN: [&str; 2] = ["compress/", "linalg/"];
+
+/// Directories where a `trace_span!` guard must be bound with `let`: the
+/// serving layers have early-return and `?` paths everywhere, and an
+/// unbound guard (`trace_span!(..);`) records a zero-length span that ends
+/// on the same statement instead of at scope exit.
+const TRACE_LET_REQUIRED: [&str; 3] = ["server/", "coordinator/", "router/"];
+
+/// The call shapes that wire a trace site. `trace::fault` is deliberately
+/// absent: fault events reuse the failpoint site registry, whose names are
+/// already checked by rule 6.
+const TRACE_PATTERNS: [&str; 4] = [
+    "trace_span!(",
+    "trace::instant(",
+    "trace::complete_at(",
+    "trace::complete_from(",
+];
+
+/// Rule 7 — trace hygiene, cross-file: no trace site in `compress/` or
+/// `linalg/`, every site carries a literal name on its invocation line,
+/// site names are unique across the crate (`repro trace --check` joins
+/// events by site name, so two sites sharing one would corrupt every
+/// timeline that crosses both), and in the serving layers (`server/`,
+/// `coordinator/`, `router/`) a `trace_span!` must be a `let` binding so
+/// the RAII guard closes the span on every return path. The subsystem
+/// itself (`trace/`) is definitional and exempt; so is test code.
+pub fn check_trace(files: &[SourceFile], out: &mut Vec<Violation>) {
+    // (name, path, 1-based line) of each site already wired
+    let mut seen: Vec<(String, String, usize)> = Vec::new();
+    for f in files {
+        if f.rel_path.starts_with("trace/") {
+            continue;
+        }
+        for (i, code) in f.code.iter().enumerate() {
+            if f.is_test[i] {
+                continue;
+            }
+            let Some(pat) = TRACE_PATTERNS.iter().find(|p| code.contains(*p)) else {
+                continue;
+            };
+            if TRACE_FORBIDDEN.iter().any(|p| f.rel_path.starts_with(p)) {
+                out.push(Violation::at(
+                    RULE_TRACE,
+                    f,
+                    i,
+                    "trace site in a determinism-scoped numeric path \
+                     (compress/, linalg/ must stay branch-free and bit-identical)"
+                        .to_string(),
+                ));
+                continue;
+            }
+            // the site name is a string literal — masked in `code`, so
+            // extract it from the raw line
+            let Some(name) = trace_site_name(&f.lines[i], pat) else {
+                out.push(Violation::at(
+                    RULE_TRACE,
+                    f,
+                    i,
+                    "trace site without a literal site name on the invocation line".to_string(),
+                ));
+                continue;
+            };
+            if let Some((_, path, line)) = seen.iter().find(|(n, _, _)| *n == name) {
+                out.push(Violation::at(
+                    RULE_TRACE,
+                    f,
+                    i,
+                    format!("duplicate trace site name {name:?} (first wired at {path}:{line})"),
+                ));
+            } else {
+                seen.push((name, f.rel_path.clone(), i + 1));
+            }
+            if *pat == "trace_span!("
+                && TRACE_LET_REQUIRED.iter().any(|p| f.rel_path.starts_with(p))
+                && !code.trim_start().starts_with("let ")
+            {
+                out.push(Violation::at(
+                    RULE_TRACE,
+                    f,
+                    i,
+                    format!(
+                        "unbound span guard at serving-layer site {name:?} \
+                         (bind it: `let _span = trace_span!(..);` so the span \
+                         closes at scope exit, not end of statement)"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// First string literal after the trace invocation on the raw line.
+fn trace_site_name(raw: &str, pat: &str) -> Option<String> {
+    let at = raw.find(pat)? + pat.len();
+    let rest = raw.get(at..)?;
+    let open = rest.find('"')? + 1;
+    let close = open + rest.get(open..)?.find('"')?;
+    rest.get(open..close).map(str::to_string)
+}
+
 /// Per-file non-test synchronization inventory (rule 5): every
 /// `Ordering::*` use, poisoning `lock().unwrap()`, and poison-tolerant
 /// `lock_unpoisoned(` call, checked against `rust/lint_sync_baseline.toml`
@@ -622,6 +727,70 @@ mod a {\n    #[target_feature(enable = \"avx2\")]\n    pub unsafe fn alpha(_x: &
         let dynamic = file("server/conn.rs", "fn f() { crate::failpoint!(site_var); }\n");
         let mut v = Vec::new();
         check_failpoints(&[dynamic], &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("literal site name"), "{}", v[0].msg);
+    }
+
+    #[test]
+    fn trace_rule_forbids_numeric_paths_and_duplicates() {
+        let ok = file(
+            "coordinator/engine.rs",
+            "fn f() {\n    let _s = crate::trace_span!(\"prefill\", tid);\n}\n",
+        );
+        let dup = file(
+            "server/conn.rs",
+            "fn g() {\n    crate::trace::instant(\"prefill\", tid, [0; 4]);\n}\n",
+        );
+        let bad = file(
+            "linalg/gemm.rs",
+            "fn h() {\n    let _s = crate::trace_span!(\"gemm.inner\");\n}\n",
+        );
+        let mut v = Vec::new();
+        check_trace(&[ok, dup, bad], &mut v);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v[0].msg.contains("duplicate"), "{}", v[0].msg);
+        assert!(v[0].msg.contains("coordinator/engine.rs"), "{}", v[0].msg);
+        assert!(v[1].msg.contains("determinism-scoped"), "{}", v[1].msg);
+    }
+
+    #[test]
+    fn trace_rule_requires_let_bound_guards_in_serving_layers() {
+        let unbound = file(
+            "router/relay.rs",
+            "fn f() {\n    crate::trace_span!(\"relay_hop\", tid);\n}\n",
+        );
+        let mut v = Vec::new();
+        check_trace(&[unbound], &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("unbound span guard"), "{}", v[0].msg);
+        // instants need no binding, and kvcache/ is outside the let scope
+        let instant = file(
+            "router/relay.rs",
+            "fn f() {\n    crate::trace::instant(\"failover\", tid, [0; 4]);\n}\n",
+        );
+        let kv = file(
+            "kvcache/cache.rs",
+            "fn f() {\n    x.then(|| crate::trace_span!(\"quantize\"));\n}\n",
+        );
+        let mut v = Vec::new();
+        check_trace(&[instant, kv], &mut v);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn trace_rule_skips_tests_subsystem_and_requires_literal_names() {
+        let t = file(
+            "server/conn.rs",
+            "#[cfg(test)]\nmod tests {\n    fn t() { crate::trace_span!(\"x\"); }\n}\n",
+        );
+        let reg = file("trace/mod.rs", "fn f() { crate::trace::instant(\"y\", 0, [0; 4]); }\n");
+        let mut v = Vec::new();
+        check_trace(&[t, reg], &mut v);
+        assert!(v.is_empty(), "{v:?}");
+        let dynamic =
+            file("server/conn.rs", "fn f() { let _s = crate::trace_span!(site_var); }\n");
+        let mut v = Vec::new();
+        check_trace(&[dynamic], &mut v);
         assert_eq!(v.len(), 1, "{v:?}");
         assert!(v[0].msg.contains("literal site name"), "{}", v[0].msg);
     }

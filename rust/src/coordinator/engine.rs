@@ -84,6 +84,14 @@ pub struct EngineConfig {
     /// (the default — prefix sharing changes page-accounting invariants,
     /// so it is strictly opt-in). CLI: `repro serve --prefix-cache-pages`.
     pub prefix_cache_pages: usize,
+    /// Step-loop profiler: when true, every decode step's sub-phase wall
+    /// times (stage / graph / sample / append) are recorded into the
+    /// [`Metrics`] percentile rings and surfaced as the `profile` object of
+    /// the metrics frame. Off by default — the extra clock reads are cheap
+    /// but not free. CLI: `repro serve --profile`. (Tracing enabled via
+    /// [`crate::trace::enable`] captures the same sub-timings per request
+    /// on the `decode_step` span regardless of this flag.)
+    pub profile: bool,
 }
 
 impl Default for EngineConfig {
@@ -97,6 +105,7 @@ impl Default for EngineConfig {
             queue_cap: usize::MAX,
             max_cache_tokens: usize::MAX,
             prefix_cache_pages: 0,
+            profile: false,
         }
     }
 }
@@ -141,6 +150,8 @@ pub struct Engine {
     policy: super::batcher::BatchPolicy,
     /// Per-request cache-token budget ([`EngineConfig::max_cache_tokens`]).
     max_cache_tokens: usize,
+    /// Step-loop profiler toggle ([`EngineConfig::profile`]).
+    profile: bool,
     slots: Vec<Option<Slot>>,
     waiting: WaitQueue,
     /// Lifecycle event log, drained by `poll_events` (the single source of
@@ -190,6 +201,7 @@ impl Engine {
             val_dims,
             policy,
             max_cache_tokens: ecfg.max_cache_tokens,
+            profile: ecfg.profile,
             slots: (0..b).map(|_| None).collect(),
             waiting: WaitQueue::new(ecfg.queue_cap),
             events: VecDeque::new(),
@@ -206,7 +218,13 @@ impl Engine {
     /// [`SubmitError::TooLarge`] (worst case over the per-request
     /// cache-token budget — retrying cannot help). A successful submit
     /// emits [`GenEvent::Queued`].
-    pub fn submit(&mut self, req: GenRequest) -> Result<RequestHandle, SubmitError> {
+    pub fn submit(&mut self, mut req: GenRequest) -> Result<RequestHandle, SubmitError> {
+        // Mint a trace id for in-process submissions; wire-facing layers
+        // (server gen handler, router front door) stamp theirs first and
+        // the engine honors it — one id end to end.
+        if req.trace_id == 0 && crate::trace::enabled() {
+            req.trace_id = crate::trace::mint();
+        }
         let need = req.cache_tokens_needed();
         if need > self.max_cache_tokens {
             self.metrics.requests_rejected += 1;
@@ -363,6 +381,9 @@ impl Engine {
             } else {
                 t.queue_wait_ms = t.arrived.elapsed().as_secs_f64() * 1e3;
                 self.metrics.record_queue_wait(t.queue_wait_ms);
+                // the queue span covers submission → prefill pop, re-using
+                // the arrival Instant the wait metric is computed from
+                crate::trace::complete_from("queue", t.req.trace_id, t.arrived, [0; 4]);
                 batch.push(t);
             }
         }
@@ -387,7 +408,8 @@ impl Engine {
                 ActivationArg::I32(&lengths, &[pb]),
             ],
         )?;
-        self.metrics.prefill_time += t0.elapsed();
+        let prefill_elapsed = t0.elapsed();
+        self.metrics.prefill_time += prefill_elapsed;
         self.metrics.prefill_calls += 1;
 
         // outputs: logits_last [pb, V], then per-layer zk [pb, ps, ...],
@@ -404,6 +426,17 @@ impl Engine {
 
         for (i, mut tracked) in batch.into_iter().enumerate() {
             let plen = tracked.req.prompt.len();
+            let tid = tracked.req.trace_id;
+            if crate::trace::enabled() {
+                // deeper layers (kvcache quantize, failpoint firings)
+                // attribute to the thread-current id
+                crate::trace::set_current(tid);
+                // the batch ran one prefill graph call; each admitted
+                // request gets that shared window as its prefill span
+                crate::trace::complete_at(
+                    "prefill", tid, t0, prefill_elapsed, [plen as u64, 0, 0, 0],
+                );
+            }
             let seq = self.cache.new_seq();
             // Prefix-cache attach: adopt the longest cached page-aligned
             // prefix by refcount bump, so the admission loop below runs only
@@ -411,9 +444,13 @@ impl Engine {
             // the full prompt — its logits are needed regardless, and the
             // adopted pages hold bit-identical latents — so a hit skips the
             // per-token admission pipeline: page allocs, quantize, append.)
-            let attached = self.attach_prefix(seq, &tracked.req.prompt);
+            let attached = {
+                let _attach_span = crate::trace_span!("prefix_attach", tid);
+                self.attach_prefix(seq, &tracked.req.prompt)
+            };
             // appends timed separately from the full gather below so
             // append_time and stage_full_time stay disjoint windows
+            let admission_span = crate::trace_span!("admission", tid);
             let append_t = Instant::now();
             let mut admit_err: Option<anyhow::Error> = None;
             for t in attached..plen {
@@ -431,6 +468,7 @@ impl Engine {
                 }
             }
             self.metrics.append_time += append_t.elapsed();
+            drop(admission_span);
             if let Some(e) = admit_err {
                 // Admission failed mid-prompt: free the partial sequence and
                 // fail only this request; the rest of the batch proceeds.
@@ -474,6 +512,9 @@ impl Engine {
             self.metrics.prompt_tokens += plen as u64;
             self.slots[si] =
                 Some(Slot { tracked, seq, pending_token: next, last_token_at: now });
+        }
+        if crate::trace::enabled() {
+            crate::trace::set_current(0);
         }
         self.retire_done();
         Ok(())
@@ -531,6 +572,13 @@ impl Engine {
     fn decode_step(&mut self) -> Result<()> {
         let b = self.shapes.decode_batch;
         let nl = self.cfg_model.n_layers;
+        // Step-loop profiling: sub-phase wall times (stage / graph / sample
+        // / append) feed the metrics percentile rings (--profile) and the
+        // per-request decode_step span args (tracing). All extra clock
+        // reads are gated so the untraced, unprofiled path stays on the
+        // one-relaxed-load contract.
+        let profiling = self.profile || crate::trace::enabled();
+        let step_t0 = profiling.then(Instant::now);
 
         let mut token = vec![0i32; b];
         let mut length = vec![0i32; b];
@@ -550,6 +598,7 @@ impl Engine {
         // Staging: steady-state slots are already materialized (prefill
         // gather + per-token tail writes), so this loop normally only
         // validates generations and zeroes regions of retired slots.
+        let stage_t = profiling.then(Instant::now);
         for i in 0..b {
             let seq = self.slots[i].as_ref().map(|sl| sl.seq);
             match seq {
@@ -571,6 +620,8 @@ impl Engine {
             }
         }
 
+        let stage_us = stage_t.map(|t| t.elapsed().as_micros() as u64).unwrap_or(0);
+
         let bdims = [b];
         let mut args: Vec<ActivationArg> = vec![
             ActivationArg::I32(&token, &bdims),
@@ -585,7 +636,8 @@ impl Engine {
 
         let t1 = Instant::now();
         let outs = self.vr.run(self.vr.decode_exe()?, &args)?;
-        self.metrics.decode_time += t1.elapsed();
+        let graph_elapsed = t1.elapsed();
+        self.metrics.decode_time += graph_elapsed;
         self.metrics.decode_calls += 1;
 
         let v = self.cfg_model.vocab;
@@ -597,8 +649,13 @@ impl Engine {
             .map(|l| outs[1 + nl + l].to_vec::<f32>())
             .collect::<std::result::Result<_, _>>()?;
 
+        let mut sample_us = 0u64;
+        let mut append_us = 0u64;
         for i in 0..b {
             let Some(sl) = self.slots[i].as_ref() else { continue };
+            if crate::trace::enabled() {
+                crate::trace::set_current(sl.tracked.req.trace_id);
+            }
             let seq = sl.seq;
             let t = self.cache.seq_len(seq);
             // transactional append of the latents of the token we just fed
@@ -612,7 +669,11 @@ impl Engine {
                     .collect();
                 self.cache.append(seq, &rows)
             };
-            self.metrics.append_time += ta.elapsed();
+            let append_elapsed = ta.elapsed();
+            self.metrics.append_time += append_elapsed;
+            if profiling {
+                append_us += append_elapsed.as_micros() as u64;
+            }
             match appended {
                 Ok(()) => {
                     // extend the slot's staging tail by the appended row:
@@ -632,7 +693,11 @@ impl Engine {
                         &mut self.slots[i].as_mut().unwrap().tracked,
                         Tracked::new(GenRequest::new(0, vec![0], 0)),
                     );
+                    let ts = profiling.then(Instant::now);
                     let next = self.next_token(&mut tracked, row, pos);
+                    if let Some(ts) = ts {
+                        sample_us += ts.elapsed().as_micros() as u64;
+                    }
                     let now = Instant::now();
                     let sl = self.slots[i].as_mut().unwrap();
                     let gap_ms = (now - sl.last_token_at).as_secs_f64() * 1e3;
@@ -642,6 +707,27 @@ impl Engine {
                     self.metrics.record_token_latency(gap_ms);
                 }
                 Err(e) => self.fail_slot(i, &format!("decode append failed: {e:#}")),
+            }
+        }
+        if let Some(t0) = step_t0 {
+            let graph_us = graph_elapsed.as_micros() as u64;
+            if self.profile {
+                self.metrics.record_decode_phases(stage_us, graph_us, sample_us, append_us);
+            }
+            if crate::trace::enabled() {
+                // one decode_step span per sequence that survived the step,
+                // all sharing the batch window and its phase breakdown
+                let dur = t0.elapsed();
+                for slot in self.slots.iter().flatten() {
+                    crate::trace::complete_at(
+                        "decode_step",
+                        slot.tracked.req.trace_id,
+                        t0,
+                        dur,
+                        [stage_us, graph_us, sample_us, append_us],
+                    );
+                }
+                crate::trace::set_current(0);
             }
         }
         self.retire_done();
@@ -855,6 +941,7 @@ impl Engine {
                     .first_token
                     .map(|t| (t - s.tracked.arrived).as_secs_f64() * 1e3)
                     .unwrap_or(0.0);
+                crate::trace::instant("finished", s.tracked.req.trace_id, [0; 4]);
                 self.events.push_back(GenEvent::Finished(s.tracked.finish()));
                 self.stage_state[i] = StageState { dirty: true, ..StageState::default() };
             }

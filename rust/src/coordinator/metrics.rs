@@ -15,8 +15,17 @@
 //! request, and `token_latency_ms` samples the gap between consecutive
 //! streamed tokens of a slot (the client-visible inter-token latency).
 //! Percentiles come from [`Metrics::percentile`] over those samples.
+//!
+//! Step-loop profiler (`EngineConfig::profile` / `repro serve --profile`):
+//! every decode step's sub-phase wall times — staging validation (`stage`),
+//! the decode graph call (`graph`), token sampling (`sample`), and the
+//! transactional cache append (`append`) — land in four more bounded
+//! sample rings via [`Metrics::record_decode_phases`] and are served as
+//! the `profile` object of the metrics frame (p50/p95 per phase, in µs).
+//! The same four numbers ride per-request on the `decode_step` trace span
+//! when tracing is enabled (see [`crate::trace`]).
 
-use crate::util::json::Json;
+use crate::util::json::{u64_json, Json};
 use std::time::Duration;
 
 #[derive(Clone, Debug, Default)]
@@ -88,6 +97,19 @@ pub struct Metrics {
     pub token_latency_ms: Vec<f64>,
     /// Total token-latency samples ever recorded (ring write cursor).
     pub token_latency_seen: u64,
+    /// Step-loop profiler rings (µs per decode step; see the module docs):
+    /// staging-validation phase.
+    pub decode_stage_us: Vec<f64>,
+    /// Decode-graph call phase (µs per step).
+    pub decode_graph_us: Vec<f64>,
+    /// Token-sampling phase (µs per step, summed over the batch).
+    pub decode_sample_us: Vec<f64>,
+    /// Transactional cache-append phase (µs per step, summed over the
+    /// batch).
+    pub decode_append_us: Vec<f64>,
+    /// Profiled decode steps ever recorded (shared write cursor of the
+    /// four phase rings — they are always pushed together).
+    pub decode_steps_profiled: u64,
 }
 
 /// Latency sample window: percentiles reflect the most recent this-many
@@ -113,6 +135,44 @@ impl Metrics {
 
     pub fn record_token_latency(&mut self, ms: f64) {
         Self::record(&mut self.token_latency_ms, &mut self.token_latency_seen, ms);
+    }
+
+    /// Record one profiled decode step's sub-phase wall times (µs). The
+    /// four rings share one write cursor — they always advance together.
+    pub fn record_decode_phases(
+        &mut self,
+        stage_us: u64,
+        graph_us: u64,
+        sample_us: u64,
+        append_us: u64,
+    ) {
+        let cursor = self.decode_steps_profiled;
+        for (ring, x) in [
+            (&mut self.decode_stage_us, stage_us),
+            (&mut self.decode_graph_us, graph_us),
+            (&mut self.decode_sample_us, sample_us),
+            (&mut self.decode_append_us, append_us),
+        ] {
+            if ring.len() < SAMPLE_CAP {
+                ring.push(x as f64);
+            } else {
+                ring[(cursor % SAMPLE_CAP as u64) as usize] = x as f64;
+            }
+        }
+        self.decode_steps_profiled += 1;
+    }
+
+    /// Fraction of prefix-cache lookups that attached at least one cached
+    /// chunk (`hits / (hits + misses)`); 0.0 with no lookups (cache
+    /// disabled or no admissions yet). Consumers previously had to derive
+    /// this from the two counters.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total > 0 {
+            self.prefix_hits as f64 / total as f64
+        } else {
+            0.0
+        }
     }
     pub fn decode_tokens_per_s(&self) -> f64 {
         let s = self.decode_time.as_secs_f64();
@@ -167,7 +227,9 @@ impl Metrics {
     /// dumped by `repro serve --metrics-json`.
     pub fn to_json(&self) -> Json {
         let num = Json::Num;
-        let count = |x: u64| Json::Num(x as f64);
+        // u64 counters keep exact fidelity past 2^53 by switching to the
+        // decimal-string spelling (util::json::u64_field reads both)
+        let count = u64_json;
         let pairs: Vec<(&str, Json)> = vec![
             ("requests_completed", count(self.requests_completed)),
             ("requests_failed", count(self.requests_failed)),
@@ -179,6 +241,7 @@ impl Metrics {
             ("faults_injected", count(self.faults_injected)),
             ("prefix_hits", count(self.prefix_hits)),
             ("prefix_misses", count(self.prefix_misses)),
+            ("prefix_hit_rate", num(self.prefix_hit_rate())),
             ("prefix_pages_shared", count(self.prefix_pages_shared)),
             ("prefix_evictions", count(self.prefix_evictions)),
             ("prompt_tokens", count(self.prompt_tokens)),
@@ -194,6 +257,22 @@ impl Metrics {
             ("queue_wait_ms_p95", num(self.queue_wait_pctile(0.95))),
             ("token_latency_ms_p50", num(self.token_latency_pctile(0.50))),
             ("token_latency_ms_p95", num(self.token_latency_pctile(0.95))),
+            // step-loop profiler histogram (µs per decode step); all zeros
+            // until the engine runs with EngineConfig::profile
+            (
+                "profile",
+                Json::obj(vec![
+                    ("decode_steps", count(self.decode_steps_profiled)),
+                    ("stage_us_p50", num(Self::percentile(&self.decode_stage_us, 0.50))),
+                    ("stage_us_p95", num(Self::percentile(&self.decode_stage_us, 0.95))),
+                    ("graph_us_p50", num(Self::percentile(&self.decode_graph_us, 0.50))),
+                    ("graph_us_p95", num(Self::percentile(&self.decode_graph_us, 0.95))),
+                    ("sample_us_p50", num(Self::percentile(&self.decode_sample_us, 0.50))),
+                    ("sample_us_p95", num(Self::percentile(&self.decode_sample_us, 0.95))),
+                    ("append_us_p50", num(Self::percentile(&self.decode_append_us, 0.50))),
+                    ("append_us_p95", num(Self::percentile(&self.decode_append_us, 0.95))),
+                ]),
+            ),
         ];
         Json::obj(pairs)
     }
@@ -321,6 +400,106 @@ mod tests {
         assert_eq!(j.req("generated_tokens").as_f64(), Some(42.0));
         assert_eq!(j.req("queue_wait_ms_p50").as_f64(), Some(4.0));
         assert_eq!(j.req("token_latency_ms_p95").as_f64(), Some(1.5));
+    }
+
+    /// Every u64 counter of the metrics frame, paired with a getter — the
+    /// round-trip property below iterates this list so a counter added to
+    /// `to_json` without exact-fidelity spelling fails here.
+    fn counter_fields(m: &Metrics) -> Vec<(&'static str, u64)> {
+        vec![
+            ("requests_completed", m.requests_completed),
+            ("requests_failed", m.requests_failed),
+            ("requests_cancelled", m.requests_cancelled),
+            ("requests_expired", m.requests_expired),
+            ("requests_rejected", m.requests_rejected),
+            ("requests_shed", m.requests_shed),
+            ("requests_retried", m.requests_retried),
+            ("faults_injected", m.faults_injected),
+            ("prefix_hits", m.prefix_hits),
+            ("prefix_misses", m.prefix_misses),
+            ("prefix_pages_shared", m.prefix_pages_shared),
+            ("prefix_evictions", m.prefix_evictions),
+            ("prompt_tokens", m.prompt_tokens),
+            ("generated_tokens", m.generated_tokens),
+            ("prefill_calls", m.prefill_calls),
+            ("decode_calls", m.decode_calls),
+        ]
+    }
+
+    #[test]
+    fn to_json_round_trips_every_counter_exactly() {
+        use crate::util::json::{u64_field, U64_EXACT_F64};
+        // exercise the whole fidelity range — small, the 2^53 boundary,
+        // and values an f64 cannot hold — with a distinct value per
+        // counter so a field/value swap cannot cancel out
+        let m = Metrics {
+            requests_completed: 0,
+            requests_failed: 1,
+            requests_cancelled: 12_345,
+            requests_expired: U64_EXACT_F64 - 1,
+            requests_rejected: U64_EXACT_F64,
+            requests_shed: U64_EXACT_F64 + 1,
+            requests_retried: U64_EXACT_F64 + 977,
+            faults_injected: u64::MAX,
+            prefix_hits: u64::MAX - 1,
+            prefix_misses: u64::MAX - 2,
+            prefix_pages_shared: (1 << 60) + 3,
+            prefix_evictions: (1 << 57) + 11,
+            prompt_tokens: 2,
+            generated_tokens: U64_EXACT_F64 - 2,
+            prefill_calls: U64_EXACT_F64 + 2,
+            decode_calls: (1 << 54) + 5,
+            ..Default::default()
+        };
+        let printed = m.to_json().to_string();
+        let back = Json::parse(&printed).expect("metrics frame must stay parseable");
+        for (name, expected) in counter_fields(&m) {
+            assert_eq!(
+                u64_field(&back, name),
+                Some(expected),
+                "counter '{name}' must round-trip exactly (frame: {printed})"
+            );
+        }
+        // non-counter fields survive alongside the string-spelled ones
+        assert!(back.get("decode_tok_per_s").and_then(Json::as_f64).is_some());
+        assert!(back.get("profile").and_then(Json::as_obj).is_some());
+    }
+
+    #[test]
+    fn to_json_reports_prefix_hit_rate() {
+        let m = Metrics { prefix_hits: 3, prefix_misses: 1, ..Default::default() };
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(j.req("prefix_hit_rate").as_f64(), Some(0.75));
+        let cold = Metrics::default();
+        assert_eq!(cold.prefix_hit_rate(), 0.0, "no lookups → rate 0, not NaN");
+    }
+
+    #[test]
+    fn profile_rings_record_and_serialize() {
+        let mut m = Metrics::default();
+        m.record_decode_phases(10, 200, 3, 7);
+        m.record_decode_phases(20, 400, 5, 9);
+        assert_eq!(m.decode_steps_profiled, 2);
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        let p = j.req("profile");
+        assert_eq!(p.req("decode_steps").as_f64(), Some(2.0));
+        assert_eq!(p.req("graph_us_p50").as_f64(), Some(200.0));
+        assert_eq!(p.req("graph_us_p95").as_f64(), Some(400.0));
+        assert_eq!(p.req("append_us_p95").as_f64(), Some(9.0));
+    }
+
+    #[test]
+    fn profile_rings_are_bounded() {
+        let mut m = Metrics::default();
+        for i in 0..(SAMPLE_CAP + 3) {
+            m.record_decode_phases(i as u64, 0, 0, 0);
+        }
+        assert_eq!(m.decode_stage_us.len(), SAMPLE_CAP);
+        assert_eq!(m.decode_graph_us.len(), SAMPLE_CAP);
+        assert_eq!(m.decode_steps_profiled, (SAMPLE_CAP + 3) as u64);
+        // oldest entries were overwritten by the newest
+        assert_eq!(m.decode_stage_us[0], SAMPLE_CAP as f64);
+        assert_eq!(m.decode_stage_us[2], (SAMPLE_CAP + 2) as f64);
     }
 
     #[test]

@@ -44,6 +44,12 @@ pub struct GenRequest {
     /// earliest deadline, then submission order. Default 0 keeps the queue
     /// pure FIFO.
     pub priority: i32,
+    /// End-to-end trace id (see [`crate::trace`]): 0 = untraced. Stamped by
+    /// the router front door or the server's gen handler when tracing is
+    /// enabled, or minted by `Engine::submit` for in-process callers; the
+    /// engine records every lifecycle span under this id and echoes it on
+    /// the [`GenResult`].
+    pub trace_id: u64,
 }
 
 impl GenRequest {
@@ -65,6 +71,7 @@ impl GenRequest {
             forced_tokens: None,
             deadline_ms: None,
             priority: 0,
+            trace_id: 0,
         }
     }
 
@@ -141,6 +148,9 @@ pub struct GenResult {
     /// whatever was generated before the failure. `None` for completed and
     /// client-cancelled requests.
     pub error: Option<String>,
+    /// The request's trace id (0 = untraced), echoed so wire clients can
+    /// fetch the span timeline with the `trace` frame afterwards.
+    pub trace_id: u64,
 }
 
 /// One lifecycle transition of a tracked request, streamed in submission
@@ -350,6 +360,7 @@ impl Tracked {
             queue_wait_ms: self.queue_wait_ms,
             reason,
             error,
+            trace_id: self.req.trace_id,
         }
     }
 

@@ -326,7 +326,10 @@ impl KvCache {
                 }
             }
         }
-        // Phase 2: payload writes — infallible.
+        // Phase 2: payload writes — infallible. In quantized modes the span
+        // covers every plane's per-row quantization for this token,
+        // attributed to the engine's thread-current trace id.
+        let _quant_span = (quant != QuantKind::F32).then(|| crate::trace_span!("quantize"));
         for (l, (krow, vrow)) in rows.iter().enumerate() {
             for (p, row) in [(0usize, *krow), (1usize, *vrow)] {
                 let plane = &mut self.planes[l * 2 + p];

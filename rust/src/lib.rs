@@ -16,6 +16,10 @@
 //! cross-request latent prefix cache (page-aligned trie over refcounted
 //! copy-on-write cache pages) that lets requests sharing a prompt prefix
 //! adopt already-computed latent pages instead of re-admitting them.
+//! Cutting across all of these, [`trace`] is the observability substrate:
+//! per-request span timelines (queue → prefill → decode steps → wire →
+//! relay hops) recorded into lock-free per-thread rings, exported as JSONL
+//! or Chrome-trace JSON, and surfaced per request over the wire protocol.
 //! It also contains a complete from-scratch Rust mirror of the offline
 //! compression pipeline (Fisher allocation, CKA head reordering, grouped SVD,
 //! offline calibration, matrix fusion) over a small dense linear-algebra
@@ -33,4 +37,5 @@ pub mod quant;
 pub mod router;
 pub mod runtime;
 pub mod server;
+pub mod trace;
 pub mod util;

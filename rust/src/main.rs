@@ -39,13 +39,25 @@
 //!   eval      evaluate one variant (ppl + zero-shot tasks)
 //!   tables    regenerate the paper's tables/figures (--table N | --figure F)
 //!   compress  run the pure-rust compression mirror over an .rtz archive
+//!   trace     offline span-file tooling over --trace-out JSONL sinks:
+//!             --export chrome <spans.jsonl> [--out FILE] converts to the
+//!             chrome://tracing / Perfetto format; --check <worker.jsonl>
+//!             [--router-file <router.jsonl>] asserts every complete trace
+//!             walks queue → prefill → decode_step → finished in order
+//!             (and, with a router file, that its ids appear there too)
 //!   lint      run the project invariant checker over rust/src/ (unsafe
 //!             hygiene, serving-layer panic policy, SIMD twin rule,
 //!             determinism rule, sync-inventory baseline, failpoint
-//!             hygiene — see recalkv::analysis; --update-sync-baseline
-//!             rewrites rust/lint_sync_baseline.toml after a reviewed
-//!             change)
+//!             hygiene, trace hygiene — see recalkv::analysis;
+//!             --update-sync-baseline rewrites rust/lint_sync_baseline.toml
+//!             after a reviewed change)
 //!   info      list models/variants in the artifact manifest
+//!
+//! Observability: `serve` and `router` take --trace-out <file.jsonl> to
+//! record end-to-end request spans (see recalkv::trace), `serve` takes
+//! --profile to fill the decode-step phase histograms in the `metrics`
+//! frame, and `client` takes --trace <id> to fetch one request's recorded
+//! timeline over the wire.
 //!
 //! Examples:
 //!   repro info
@@ -53,8 +65,11 @@
 //!   repro serve --requests 16 --stream --deadline-ms 2000 --queue-cap 4
 //!   repro serve --listen 127.0.0.1:7077 --queue-cap 8 --max-cache-tokens 4096
 //!   repro serve --listen 127.0.0.1:7077 --prefix-cache-pages 256
+//!   repro serve --listen 127.0.0.1:7077 --trace-out worker-spans.jsonl --profile
 //!   repro client --addr 127.0.0.1:7077 --connections 4 --requests 8
 //!   repro client --addr 127.0.0.1:7077 --requests 0 --shutdown
+//!   repro trace --check worker-spans.jsonl --router-file router-spans.jsonl
+//!   repro trace --export chrome worker-spans.jsonl --out trace.json
 //!   repro router --listen 127.0.0.1:7070 --workers 127.0.0.1:7077,127.0.0.1:7078
 //!   repro router --addr 127.0.0.1:7070 --drain 127.0.0.1:7078
 //!   repro tables --table 1 --models tiny-mha --mc 32 --ppl-tokens 4096
@@ -81,7 +96,7 @@ fn main() -> Result<()> {
     }
     let args = Args::from_env(&[
         "quick", "fisher", "quiet", "stream", "shutdown", "metrics", "ping",
-        "print-tokens", "update-sync-baseline",
+        "print-tokens", "update-sync-baseline", "profile",
     ]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
     let dir = args.opt_or("artifacts", "artifacts");
@@ -93,14 +108,26 @@ fn main() -> Result<()> {
         "eval" => eval_variant(dir, &args),
         "tables" => tables(dir, &args),
         "compress" => compress(dir, &args),
+        "trace" => trace_cmd(&args),
         "lint" => lint(&args),
         other => {
             bail!(
                 "unknown command '{other}' \
-                 (try: info serve client router eval tables compress lint)"
+                 (try: info serve client router eval tables compress trace lint)"
             )
         }
     }
+}
+
+/// Turn tracing on when `--trace-out <file>` was passed (serve and router
+/// both honor it). Returns whether it was enabled so the caller pairs it
+/// with a [`recalkv::trace::shutdown`] flush on exit.
+fn maybe_enable_tracing(args: &Args) -> Result<bool> {
+    let Some(path) = args.opt("trace-out") else { return Ok(false) };
+    recalkv::trace::enable(Some(std::path::Path::new(path)))
+        .with_context(|| format!("opening trace sink {path}"))?;
+    println!("tracing enabled, spans -> {path}");
+    Ok(true)
 }
 
 fn info(dir: &str) -> Result<()> {
@@ -164,11 +191,24 @@ fn drain_events(engine: &mut Engine, stream: bool, out: &mut Vec<GenResult>) {
 }
 
 fn serve(dir: &str, args: &Args) -> Result<()> {
+    let tracing = maybe_enable_tracing(args)?;
+    let out = match args.opt("listen") {
+        Some(addr) => serve_listen(dir, args, addr),
+        None => serve_demo(dir, args),
+    };
+    if tracing {
+        // Flush and close the span sink even when serving errored — a
+        // failed run's trace is exactly the one worth reading.
+        recalkv::trace::shutdown();
+    }
+    out
+}
+
+/// The in-process demo path of `repro serve` (no --listen): batched
+/// generation straight through the engine on the caller's thread.
+fn serve_demo(dir: &str, args: &Args) -> Result<()> {
     use recalkv::coordinator::{FinishReason, SubmitError};
     use recalkv::util::backoff::{Backoff, ADMISSION_RETRY};
-    if let Some(addr) = args.opt("listen") {
-        return serve_listen(dir, args, addr);
-    }
     let man = Manifest::load(dir)?;
     let rt = Runtime::cpu()?;
     let mname = args.opt_or("model", "tiny-mha");
@@ -208,6 +248,7 @@ fn serve(dir: &str, args: &Args) -> Result<()> {
             max_cache_tokens,
             prefix_cache_pages,
             tokens_per_block,
+            profile: args.has("profile"),
             ..Default::default()
         },
     )?;
@@ -335,6 +376,7 @@ fn serve_listen(dir: &str, args: &Args, addr: &str) -> Result<()> {
     // The engine is built inside the worker thread (PJRT handles are not
     // Send); the factory captures only owned Send data.
     let dir = dir.to_string();
+    let profile = args.has("profile");
     let coord = Coordinator::spawn(move || {
         let man = Manifest::load(&dir)?;
         let rt = Runtime::cpu()?;
@@ -351,6 +393,7 @@ fn serve_listen(dir: &str, args: &Args, addr: &str) -> Result<()> {
                 max_cache_tokens,
                 prefix_cache_pages,
                 tokens_per_block,
+                profile,
                 ..Default::default()
             },
         )
@@ -426,6 +469,17 @@ fn client_cmd(args: &Args) -> Result<()> {
         let mut c = Client::connect(addr)?;
         println!("{}", c.metrics()?);
     }
+    if let Some(id) = args.opt("trace") {
+        // ids are minted past 2^53 (see recalkv::trace::mint), so they are
+        // decimal strings everywhere — including on this command line
+        let id: u64 = id.parse().context("bad --trace (decimal trace id)")?;
+        let mut c = Client::connect(addr)?;
+        let spans = c.trace(id)?;
+        if spans == recalkv::util::json::Json::Null {
+            bail!("no spans recorded for trace {id} at {addr}");
+        }
+        println!("{spans}");
+    }
     if args.has("shutdown") {
         let mut c = Client::connect(addr)?;
         c.shutdown_server()?;
@@ -484,6 +538,7 @@ fn router_cmd(args: &Args) -> Result<()> {
             probe_every: args.usize_or("probe-every", defaults.health.probe_every as usize) as u64,
         },
     };
+    let tracing = maybe_enable_tracing(args)?;
     let router = Router::bind(listen, &workers, cfg)?;
     // parsed by scripts/check.sh's router smoke test — keep the shape
     println!(
@@ -491,12 +546,76 @@ fn router_cmd(args: &Args) -> Result<()> {
         router.local_addr()?,
         workers.len()
     );
-    router.run()?;
+    let out = router.run();
+    if tracing {
+        recalkv::trace::shutdown();
+    }
+    out?;
     println!("router drained and stopped");
     Ok(())
 }
 
-/// `repro lint`: the six-invariant static checker over `rust/src/`
+/// `repro trace`: offline tooling over `--trace-out` span files. See the
+/// module docs for the two modes (`--export chrome`, `--check`).
+fn trace_cmd(args: &Args) -> Result<()> {
+    use recalkv::trace::export;
+    const USAGE: &str = "usage: repro trace --export chrome <spans.jsonl> [--out FILE] \
+                         | repro trace --check <worker.jsonl> [--router-file <router.jsonl>]";
+    if let Some(fmt) = args.opt("export") {
+        if fmt != "chrome" {
+            bail!("unknown export format '{fmt}' (supported: chrome)");
+        }
+        let file = args.positional.get(1).map(|s| s.as_str()).context(USAGE)?;
+        let events = export::load(std::path::Path::new(file))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let chrome = export::chrome_trace(&events);
+        match args.opt("out") {
+            Some(out) => {
+                std::fs::write(out, chrome.to_string())
+                    .with_context(|| format!("writing {out}"))?;
+                println!(
+                    "chrome trace written to {out} ({} events) — open in \
+                     chrome://tracing or ui.perfetto.dev",
+                    events.len()
+                );
+            }
+            None => println!("{chrome}"),
+        }
+        return Ok(());
+    }
+    if let Some(worker) = args.opt("check") {
+        let worker_events = export::load(std::path::Path::new(worker))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let router_events = match args.opt("router-file") {
+            Some(p) => Some(
+                export::load(std::path::Path::new(p)).map_err(|e| anyhow::anyhow!("{e}"))?,
+            ),
+            None => None,
+        };
+        let reports = export::check_chain(&worker_events, router_events.as_deref())
+            .map_err(|e| anyhow::anyhow!("trace check failed: {e}"))?;
+        for r in &reports {
+            println!(
+                "trace {}: {} decode step(s){}",
+                r.trace_id,
+                r.decode_steps,
+                if r.in_router { ", seen by the router" } else { "" }
+            );
+        }
+        println!(
+            "trace check OK: {} complete chain(s) ({} -> {} -> {} -> {})",
+            reports.len(),
+            export::CHAIN[0],
+            export::CHAIN[1],
+            export::CHAIN[2],
+            export::CHAIN[3]
+        );
+        return Ok(());
+    }
+    bail!(USAGE)
+}
+
+/// `repro lint`: the seven-invariant static checker over `rust/src/`
 /// (see [`recalkv::analysis`] for what is enforced and why). Exits
 /// non-zero on any violation outside the committed allowlist, so
 /// `scripts/check.sh` can gate on it.

@@ -119,6 +119,23 @@ impl WorkerSlot {
     }
 }
 
+/// The one place a breaker state change is logged and traced — probe
+/// outcomes and router ticks both funnel here, so the `breaker_transition`
+/// trace site stays unique and every transition is observable the same
+/// way. Transitions are process-scoped (no request owns them), so the
+/// event carries trace id 0; `args` encodes worker index and the
+/// from/to states as [`BreakerState`] discriminant-order codes
+/// (closed=0, open=1, half_open=2).
+fn note_breaker_transition(slot: &WorkerSlot, wi: usize, from: BreakerState, to: BreakerState) {
+    eprintln!("[router] worker {} breaker {} -> {}", slot.addr, from.name(), to.name());
+    let code = |s: BreakerState| match s {
+        BreakerState::Closed => 0u64,
+        BreakerState::Open => 1,
+        BreakerState::HalfOpen => 2,
+    };
+    crate::trace::instant("breaker_transition", 0, [wi as u64, code(from), code(to), 0]);
+}
+
 /// State shared by the accept loop, every relay thread, and the prober.
 pub(crate) struct Shared {
     pub(crate) workers: Vec<WorkerSlot>,
@@ -185,28 +202,18 @@ impl Shared {
         }
         let to = b.state();
         if from != to {
-            eprintln!(
-                "[router] worker {} breaker {} -> {}",
-                slot.addr,
-                from.name(),
-                to.name()
-            );
+            note_breaker_transition(slot, wi, from, to);
         }
     }
 
     /// One router tick for every breaker (Open → HalfOpen countdowns).
     pub(crate) fn tick_all(&self) {
-        for slot in &self.workers {
+        for (wi, slot) in self.workers.iter().enumerate() {
             let mut b = lock_unpoisoned(&slot.breaker);
             let from = b.state();
             b.tick();
             if from != b.state() {
-                eprintln!(
-                    "[router] worker {} breaker {} -> {}",
-                    slot.addr,
-                    from.name(),
-                    b.state().name()
-                );
+                note_breaker_transition(slot, wi, from, b.state());
             }
         }
     }
@@ -268,6 +275,15 @@ impl Shared {
         let prefix_misses = sum_counter("prefix_misses");
         let prefix_pages_shared = sum_counter("prefix_pages_shared");
         let prefix_evictions = sum_counter("prefix_evictions");
+        let prefix_lookups = prefix_hits + prefix_misses;
+        let prefix_hit_rate =
+            if prefix_lookups > 0.0 { prefix_hits / prefix_lookups } else { 0.0 };
+        // Top-level breaker map (addr → state): the per-worker rows carry
+        // the same fact, but dashboards and the chaos suite want it
+        // without walking an array.
+        let breaker_states = Json::obj(self.workers.iter().map(|s| {
+            (s.addr.as_str(), Json::Str(lock_unpoisoned(&s.breaker).state().name().into()))
+        }));
         Json::obj(vec![
             (
                 "router",
@@ -282,8 +298,10 @@ impl Shared {
                     ),
                     ("prefix_hits_total", Json::Num(prefix_hits)),
                     ("prefix_misses_total", Json::Num(prefix_misses)),
+                    ("prefix_hit_rate", Json::Num(prefix_hit_rate)),
                     ("prefix_pages_shared_total", Json::Num(prefix_pages_shared)),
                     ("prefix_evictions_total", Json::Num(prefix_evictions)),
+                    ("breaker_states", breaker_states),
                     ("workers", Json::Arr(worker_rows)),
                 ]),
             ),
@@ -548,6 +566,14 @@ fn handle_client(stream: TcpStream, ctx: RelayContext) {
             ClientFrame::Metrics => {
                 send_frame(&writer, &dead, &ServerFrame::Metrics(ctx.shared.aggregate_stats()));
             }
+            ClientFrame::Trace { trace_id } => {
+                // The router answers with its *own* spans for this id
+                // (relay_hop, failover, ...). The worker half of the story
+                // lives in the worker's collector; the shared id is the
+                // join key, not a shared clock.
+                let spans = crate::trace::timeline(trace_id).unwrap_or(Json::Null);
+                send_frame(&writer, &dead, &ServerFrame::Trace { trace_id, spans });
+            }
             ClientFrame::Drain { worker } => {
                 if ctx.shared.mark_draining(&worker) {
                     // the aggregated snapshot shows the flagged worker —
@@ -604,8 +630,15 @@ fn handle_gen(
     writer: &Arc<Mutex<BufWriter<TcpStream>>>,
     dead: &Arc<AtomicBool>,
     relays: &mut Vec<JoinHandle<()>>,
-    wr: WireRequest,
+    mut wr: WireRequest,
 ) {
+    // Front-door minting: the router is the first tier a request crosses,
+    // so the id stamped here rides the wire to whichever worker (or
+    // workers, across failovers) serves it — both sides' span files then
+    // correlate on one id.
+    if wr.trace_id == 0 && crate::trace::enabled() {
+        wr.trace_id = crate::trace::mint();
+    }
     let rejection = {
         let map = lock_unpoisoned(live);
         if map.contains_key(&wr.id) {
@@ -698,6 +731,7 @@ fn relay_request(
                 dead,
                 &ServerFrame::Event(synth_terminal(
                     wr.id,
+                    wr.trace_id,
                     FinishReason::Cancelled,
                     "cancelled by client before a worker delivered a result".to_string(),
                 )),
@@ -713,6 +747,7 @@ fn relay_request(
         };
         if attempts > 0 {
             shared.failed_over.fetch_add(1, Ordering::Relaxed);
+            crate::trace::instant("failover", wr.trace_id, [attempts as u64, wi as u64, 0, 0]);
         }
         attempts += 1;
         let Some(slot) = shared.workers.get(wi) else { break };
@@ -761,6 +796,7 @@ fn relay_request(
                         dead,
                         &ServerFrame::Event(synth_terminal(
                             wr.id,
+                            wr.trace_id,
                             FinishReason::Cancelled,
                             format!(
                                 "cancelled by client; worker {} was lost before its terminal \
@@ -779,6 +815,7 @@ fn relay_request(
                         dead,
                         &ServerFrame::Event(synth_terminal(
                             wr.id,
+                            wr.trace_id,
                             FinishReason::Failed,
                             format!(
                                 "worker {} lost after {tokens} streamed tokens; this request \
@@ -824,8 +861,10 @@ fn sleep_backoff(backoff: &mut Backoff) -> bool {
 
 /// A router-synthesized terminal for a request whose worker cannot supply
 /// one. Empty output, zeroed timings, and an `error` string that tells the
-/// client what actually happened.
-fn synth_terminal(id: u64, reason: FinishReason, error: String) -> WireEvent {
+/// client what actually happened. Echoes the request's trace id like a
+/// real terminal would, so a traced request stays traceable even when its
+/// worker died.
+fn synth_terminal(id: u64, trace_id: u64, reason: FinishReason, error: String) -> WireEvent {
     let result = WireResult {
         id,
         tokens: Vec::new(),
@@ -838,6 +877,7 @@ fn synth_terminal(id: u64, reason: FinishReason, error: String) -> WireEvent {
         queue_wait_ms: 0.0,
         reason,
         error: Some(error),
+        trace_id,
     };
     match reason {
         FinishReason::Cancelled => WireEvent::Cancelled(result),
@@ -854,6 +894,9 @@ fn relay_stream(
     dead: &AtomicBool,
     cancel: &AtomicBool,
 ) -> RelayOutcome {
+    // One span per relay attempt, covering dial + handshake + the whole
+    // stream; a failed-over request shows one relay_hop per worker tried.
+    let _hop_span = crate::trace_span!("relay_hop", wr.trace_id);
     let lost = |tokens: usize, cause: String| RelayOutcome::WorkerLost { tokens, cause };
     let mut up = match Upstream::connect(addr) {
         Ok(up) => up,
@@ -1104,13 +1147,15 @@ mod tests {
 
     #[test]
     fn synth_terminal_reason_picks_event_variant() {
-        let cancelled = synth_terminal(7, FinishReason::Cancelled, "why".to_string());
+        let cancelled = synth_terminal(7, 0, FinishReason::Cancelled, "why".to_string());
         assert!(matches!(&cancelled, WireEvent::Cancelled(r) if r.id == 7));
-        let failed = synth_terminal(8, FinishReason::Failed, "failed_over".to_string());
+        let failed =
+            synth_terminal(8, (0xfaceu64 << 48) | 2, FinishReason::Failed, "failed_over".to_string());
         match &failed {
             WireEvent::Failed(r) => {
                 assert_eq!(r.error.as_deref(), Some("failed_over"));
                 assert!(r.tokens.is_empty() && r.text.is_empty());
+                assert_eq!(r.trace_id, (0xfaceu64 << 48) | 2, "trace id echoed");
             }
             other => panic!("expected Failed, got {other:?}"),
         }

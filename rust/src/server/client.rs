@@ -180,6 +180,30 @@ impl Client {
         }
     }
 
+    /// Fetch the server's recorded span timeline for one trace id (see
+    /// [`crate::trace`]). `Json::Null` means the server holds no spans for
+    /// that id — evicted, never traced, or tracing disabled there. Against
+    /// a router this returns the router's own hops; ask the worker for the
+    /// engine-side half.
+    pub fn trace(&mut self, trace_id: u64) -> Result<Json> {
+        self.send(&ClientFrame::Trace { trace_id })?;
+        loop {
+            match self.recv()? {
+                ServerFrame::Trace { trace_id: got, spans } if got == trace_id => {
+                    return Ok(spans);
+                }
+                ServerFrame::Trace { trace_id: got, .. } => {
+                    bail!("trace answer for id {got}, expected {trace_id}")
+                }
+                // events of concurrent requests may interleave; skip them
+                ServerFrame::Event(_) => continue,
+                ServerFrame::Error(e) => bail!("trace failed: {} ({})", e.message,
+                                               e.kind.name()),
+                other => bail!("unexpected frame awaiting trace: {other:?}"),
+            }
+        }
+    }
+
     /// Ask the server to stop (graceful fleet-wide wind-down) and wait for
     /// its `bye`.
     pub fn shutdown_server(&mut self) -> Result<()> {

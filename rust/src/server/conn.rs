@@ -115,8 +115,8 @@ pub(crate) struct ConnContext {
 /// Wire id ↔ engine id session table for one connection.
 #[derive(Default)]
 struct Table {
-    /// engine id → (wire id, stream flag).
-    by_engine: HashMap<u64, (u64, bool)>,
+    /// engine id → (wire id, stream flag, trace id — 0 when untraced).
+    by_engine: HashMap<u64, (u64, bool, u64)>,
     /// wire id → engine id (cancel/duplicate lookups).
     by_wire: HashMap<u64, u64>,
 }
@@ -126,13 +126,13 @@ impl Table {
         self.by_engine.len()
     }
 
-    fn insert(&mut self, wire_id: u64, engine_id: u64, stream: bool) {
-        self.by_engine.insert(engine_id, (wire_id, stream));
+    fn insert(&mut self, wire_id: u64, engine_id: u64, stream: bool, trace_id: u64) {
+        self.by_engine.insert(engine_id, (wire_id, stream, trace_id));
         self.by_wire.insert(wire_id, engine_id);
     }
 
     fn remove_engine(&mut self, engine_id: u64) -> Option<u64> {
-        let (wire_id, _) = self.by_engine.remove(&engine_id)?;
+        let (wire_id, _, _) = self.by_engine.remove(&engine_id)?;
         self.by_wire.remove(&wire_id);
         Some(wire_id)
     }
@@ -248,7 +248,7 @@ pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
                         idle_polls = 0;
                         let engine_id = ev.id();
                         let routed = lock_unpoisoned(&table).by_engine.get(&engine_id).copied();
-                        let Some((wire_id, stream_events)) = routed else {
+                        let Some((wire_id, stream_events, trace_id)) = routed else {
                             // Unknown id: a rejected submit raced its table
                             // removal, or a stale event after cleanup.
                             continue;
@@ -271,6 +271,7 @@ pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
                         if stream_events || terminal {
                             // write failures are ignored: the reader owns
                             // disconnect detection and cleanup
+                            let _write_span = crate::trace_span!("conn_write", trace_id);
                             send(&writer, &dead, &ServerFrame::Event(WireEvent::from_event(
                                 &ev, wire_id,
                             )));
@@ -428,6 +429,14 @@ pub(crate) fn handle_conn(stream: TcpStream, ctx: ConnContext) {
                     )));
                 }
             },
+            ClientFrame::Trace { trace_id } => {
+                // Answer from this process's collector; `null` spans when
+                // the id is unknown here (evicted, never traced, or tracing
+                // disabled) — the client distinguishes "no data" from a
+                // protocol error.
+                let spans = crate::trace::timeline(trace_id).unwrap_or(Json::Null);
+                send(&writer, &dead, &ServerFrame::Trace { trace_id, spans });
+            }
             ClientFrame::Shutdown => {
                 // Graceful server stop: no new connections, every reader
                 // breaks at its next poll, live requests are cancelled with
@@ -469,9 +478,16 @@ fn handle_gen(
     writer: &Mutex<BufWriter<TcpStream>>,
     dead: &AtomicBool,
     sink: &EventSink,
-    wr: WireRequest,
+    mut wr: WireRequest,
 ) {
     let wire_id = wr.id;
+    // Trace-id stamping: honor an id minted upstream (the router's front
+    // door), else mint here at admission when tracing is on. Stamping
+    // before the table insert lets the pump attribute its conn_write spans
+    // without a second lookup.
+    if wr.trace_id == 0 && crate::trace::enabled() {
+        wr.trace_id = crate::trace::mint();
+    }
     // Decide rejection with the table lock, write without it (the pump
     // needs the table to keep routing other requests' events; a slow
     // socket must never stall them).
@@ -512,7 +528,7 @@ fn handle_gen(
     let engine_id = ctx.next_engine_id.fetch_add(1, Ordering::SeqCst) + 1;
     // Insert before submitting: the worker can emit (and the pump route)
     // this request's Queued event before submit() even returns.
-    lock_unpoisoned(table).insert(wire_id, engine_id, wr.stream);
+    lock_unpoisoned(table).insert(wire_id, engine_id, wr.stream, wr.trace_id);
     match ctx.handle.submit(wr.to_gen_request(engine_id), sink.clone()) {
         Ok(_) => {}
         Err(e) => {

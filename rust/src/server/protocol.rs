@@ -33,10 +33,11 @@
 //!   {"op":"hello","version":1}
 //!   {"op":"gen","id":"1","prompt":"...","max_new_tokens":24,
 //!    "temperature":0,"top_k":0,"seed":"0","priority":0,
-//!    "deadline_ms":"2000"?,"stream":true}
+//!    "deadline_ms":"2000"?,"stream":true,"trace_id":"281479271743489"?}
 //!   {"op":"cancel","id":"1"}
 //!   {"op":"ping","seq":"42"}
 //!   {"op":"metrics"}
+//!   {"op":"trace","trace_id":"281479271743489"}
 //!   {"op":"drain","worker":"127.0.0.1:4701"}   (router control; workers reject)
 //!   {"op":"shutdown"}
 //! server → client
@@ -51,6 +52,7 @@
 //!   {"op":"error","id":"1"?,"kind":"queue_full|too_large|shutting_down|
 //!    bad_frame|unsupported_version","message":"...",...}
 //!   {"op":"metrics","stats":{...}}
+//!   {"op":"trace","trace_id":"281479271743489","spans":[...]|null}
 //!   {"op":"bye"}
 //! ```
 
@@ -145,6 +147,12 @@ pub struct WireRequest {
     /// `false` suppresses progress frames (queued/prefilled/token); only
     /// the terminal event is delivered.
     pub stream: bool,
+    /// End-to-end trace id (see [`crate::trace`]); `0` means untraced and
+    /// is omitted from the encoded frame. The router stamps this when it
+    /// mints an id at the front door, and a worker honors a non-zero id
+    /// instead of minting its own — that shared id is what correlates the
+    /// router's and the worker's span files for one request.
+    pub trace_id: u64,
 }
 
 impl WireRequest {
@@ -159,6 +167,7 @@ impl WireRequest {
             priority: 0,
             deadline_ms: None,
             stream: true,
+            trace_id: 0,
         }
     }
 
@@ -171,6 +180,7 @@ impl WireRequest {
         req.sampling.seed = self.seed;
         req.priority = self.priority;
         req.deadline_ms = self.deadline_ms;
+        req.trace_id = self.trace_id;
         req
     }
 
@@ -188,6 +198,9 @@ impl WireRequest {
         ];
         if let Some(ms) = self.deadline_ms {
             pairs.push(("deadline_ms", u64_json(ms)));
+        }
+        if self.trace_id != 0 {
+            pairs.push(("trace_id", u64_json(self.trace_id)));
         }
         Json::obj(pairs)
     }
@@ -207,6 +220,7 @@ impl WireRequest {
                 None
             },
             stream: opt_bool_field(j, "stream")?.unwrap_or(true),
+            trace_id: if j.get("trace_id").is_some() { u64_field(j, "trace_id")? } else { 0 },
         })
     }
 }
@@ -228,6 +242,10 @@ pub struct WireResult {
     pub queue_wait_ms: f64,
     pub reason: FinishReason,
     pub error: Option<String>,
+    /// Echo of the request's trace id (`0` = untraced, omitted on the
+    /// wire): lets a client learn the id the server minted for it and
+    /// fetch the timeline afterwards with an `op:"trace"` frame.
+    pub trace_id: u64,
 }
 
 impl WireResult {
@@ -244,11 +262,12 @@ impl WireResult {
             queue_wait_ms: r.queue_wait_ms,
             reason: r.reason,
             error: r.error.clone(),
+            trace_id: r.trace_id,
         }
     }
 
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("tokens", Json::Arr(self.tokens.iter().map(|t| Json::Num(*t as f64)).collect())),
             ("text", Json::Str(self.text.clone())),
             ("forced_logprob", Json::Num(self.forced_logprob)),
@@ -265,7 +284,11 @@ impl WireResult {
                     None => Json::Null,
                 },
             ),
-        ])
+        ];
+        if self.trace_id != 0 {
+            pairs.push(("trace_id", u64_json(self.trace_id)));
+        }
+        Json::obj(pairs)
     }
 
     fn from_json(id: u64, j: &Json) -> Result<Self, String> {
@@ -291,6 +314,7 @@ impl WireResult {
             queue_wait_ms: f64_field(j, "queue_wait_ms")?,
             reason,
             error: j.get("error").and_then(Json::as_str).map(String::from),
+            trace_id: if j.get("trace_id").is_some() { u64_field(j, "trace_id")? } else { 0 },
         })
     }
 }
@@ -552,6 +576,13 @@ pub enum ClientFrame {
     /// connection is still being served between requests.
     Ping { seq: u64 },
     Metrics,
+    /// Fetch the recorded span timeline for one trace id (see
+    /// [`crate::trace`]). Answered with [`ServerFrame::Trace`]; `spans` is
+    /// `null` when the id is unknown (evicted, never traced, or tracing
+    /// disabled). Works on workers and on the router — each side answers
+    /// from its own collector, so the two timelines share the id but not a
+    /// clock.
+    Trace { trace_id: u64 },
     /// Router control frame: stop placing new requests on the named worker,
     /// let its live streams finish, then leave it detached. Answered with an
     /// aggregated `metrics` frame reflecting the new placement state. A
@@ -578,6 +609,11 @@ impl ClientFrame {
                 Json::obj(vec![("op", Json::Str("ping".into())), ("seq", u64_json(*seq))]).to_string()
             }
             ClientFrame::Metrics => Json::obj(vec![("op", Json::Str("metrics".into()))]).to_string(),
+            ClientFrame::Trace { trace_id } => Json::obj(vec![
+                ("op", Json::Str("trace".into())),
+                ("trace_id", u64_json(*trace_id)),
+            ])
+            .to_string(),
             ClientFrame::Drain { worker } => Json::obj(vec![
                 ("op", Json::Str("drain".into())),
                 ("worker", Json::Str(worker.clone())),
@@ -595,6 +631,7 @@ impl ClientFrame {
             "cancel" => Ok(ClientFrame::Cancel { id: u64_field(&j, "id")? }),
             "ping" => Ok(ClientFrame::Ping { seq: u64_field(&j, "seq")? }),
             "metrics" => Ok(ClientFrame::Metrics),
+            "trace" => Ok(ClientFrame::Trace { trace_id: u64_field(&j, "trace_id")? }),
             "drain" => Ok(ClientFrame::Drain { worker: str_field(&j, "worker")?.to_string() }),
             "shutdown" => Ok(ClientFrame::Shutdown),
             other => Err(format!("unknown op {other:?}")),
@@ -617,6 +654,12 @@ pub enum ServerFrame {
     /// adds a `server` section (`shed_requests`, `shed_conns`) and the live
     /// global `inflight` gauge.
     Metrics(Json),
+    /// Answers [`ClientFrame::Trace`]: the span timeline recorded for
+    /// `trace_id` on this process (an array of event objects, ordered by
+    /// record sequence), or `null` when the id is unknown. The timeline's
+    /// timestamps are microseconds since *this process's* trace epoch —
+    /// timelines from different processes correlate by id, never by clock.
+    Trace { trace_id: u64, spans: Json },
     /// Acknowledges a `shutdown` frame before the connection closes.
     Bye,
 }
@@ -640,6 +683,12 @@ impl ServerFrame {
                 ("stats", stats.clone()),
             ])
             .to_string(),
+            ServerFrame::Trace { trace_id, spans } => Json::obj(vec![
+                ("op", Json::Str("trace".into())),
+                ("trace_id", u64_json(*trace_id)),
+                ("spans", spans.clone()),
+            ])
+            .to_string(),
             ServerFrame::Bye => Json::obj(vec![("op", Json::Str("bye".into()))]).to_string(),
         }
     }
@@ -654,6 +703,10 @@ impl ServerFrame {
             "metrics" => {
                 Ok(ServerFrame::Metrics(j.get("stats").cloned().unwrap_or(Json::Null)))
             }
+            "trace" => Ok(ServerFrame::Trace {
+                trace_id: u64_field(&j, "trace_id")?,
+                spans: j.get("spans").cloned().unwrap_or(Json::Null),
+            }),
             "bye" => Ok(ServerFrame::Bye),
             other => Err(format!("unknown op {other:?}")),
         }
@@ -776,12 +829,14 @@ mod tests {
         req.priority = -2;
         req.deadline_ms = Some(u64::MAX - 1);
         req.stream = false;
+        req.trace_id = (0xbeefu64 << 48) | 17; // minted-id shape: always >2^53
         for f in [
             ClientFrame::Hello { version: PROTOCOL_VERSION },
             ClientFrame::Gen(req),
             ClientFrame::Cancel { id: 1 << 55 },
             ClientFrame::Ping { seq: u64::MAX }, // >2^53: exercises the string path
             ClientFrame::Metrics,
+            ClientFrame::Trace { trace_id: (0xbeefu64 << 48) | 17 },
             ClientFrame::Drain { worker: "127.0.0.1:4701".into() },
             ClientFrame::Shutdown,
         ] {
@@ -804,6 +859,7 @@ mod tests {
             queue_wait_ms: 0.125,
             reason: FinishReason::DeadlineExceeded,
             error: Some("deadline exceeded (5ms)".into()),
+            trace_id: (0xbeefu64 << 48) | 17,
         };
         for f in [
             ServerFrame::HelloOk { version: PROTOCOL_VERSION },
@@ -829,6 +885,11 @@ mod tests {
             )),
             ServerFrame::Pong { seq: (1 << 61) + 7 },
             ServerFrame::Metrics(Json::parse(r#"{"requests_completed":3}"#).unwrap()),
+            ServerFrame::Trace {
+                trace_id: (0xbeefu64 << 48) | 17,
+                spans: Json::parse(r#"[{"site":"prefill","t_us":12}]"#).unwrap(),
+            },
+            ServerFrame::Trace { trace_id: 9, spans: Json::Null },
             ServerFrame::Bye,
         ] {
             let enc = f.encode();
@@ -934,6 +995,25 @@ mod tests {
         ] {
             assert!(ClientFrame::decode(bad).is_err(), "accepted {bad:?}");
         }
+    }
+
+    #[test]
+    fn untraced_requests_omit_trace_id() {
+        // trace_id == 0 means "untraced": the field must vanish from the
+        // frame entirely (a pre-tracing peer never sees it), and decoding a
+        // frame without it must yield 0 — additive-field compatibility in
+        // both directions.
+        let req = WireRequest::new(1, "p", 4);
+        let enc = ClientFrame::Gen(req.clone()).encode();
+        assert!(!enc.contains("trace_id"), "zero trace_id leaked: {enc}");
+        let ClientFrame::Gen(back) = ClientFrame::decode(&enc).unwrap() else {
+            panic!("not a gen frame");
+        };
+        assert_eq!(back.trace_id, 0);
+        // a stamped id round-trips through to_gen_request onto the engine
+        let mut traced = req;
+        traced.trace_id = (0xabcdu64 << 48) | 3;
+        assert_eq!(traced.to_gen_request(9).trace_id, (0xabcdu64 << 48) | 3);
     }
 
     #[test]

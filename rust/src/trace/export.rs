@@ -1,0 +1,304 @@
+//! Trace-sink post-processing: load `--trace-out` JSONL files, export them
+//! as Chrome-trace JSON (`chrome://tracing` / Perfetto "JSON Array
+//! Format"), and assert the canonical request span chain — the `repro
+//! trace` subcommand and the check.sh trace smoke are thin wrappers over
+//! this module.
+
+use super::Kind;
+use crate::util::json::{u64_field, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One event re-read from a JSONL sink (the owned mirror of
+/// [`super::Event`], whose site is a `&'static str`).
+#[derive(Clone, Debug)]
+pub struct ParsedEvent {
+    pub trace_id: u64,
+    pub site: String,
+    pub kind: Kind,
+    pub t_us: u64,
+    pub dur_us: u64,
+    pub seq: u64,
+    pub args: Vec<u64>,
+}
+
+fn parse_event(line: &str, lineno: usize) -> Result<ParsedEvent, String> {
+    let j = Json::parse(line).map_err(|e| format!("line {lineno}: {e}"))?;
+    let num = |key: &str| {
+        u64_field(&j, key).ok_or_else(|| format!("line {lineno}: missing/invalid '{key}'"))
+    };
+    let kind_name = j
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("line {lineno}: missing 'kind'"))?;
+    Ok(ParsedEvent {
+        trace_id: num("trace_id")?,
+        site: j
+            .get("site")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("line {lineno}: missing 'site'"))?
+            .to_string(),
+        kind: Kind::parse(kind_name)
+            .ok_or_else(|| format!("line {lineno}: unknown kind '{kind_name}'"))?,
+        t_us: num("t_us")?,
+        dur_us: num("dur_us")?,
+        seq: num("seq")?,
+        args: j
+            .get("args")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|n| n as u64).collect())
+            .unwrap_or_default(),
+    })
+}
+
+/// Load a `--trace-out` JSONL file. Blank lines are skipped; any malformed
+/// line is an error (a truncated sink means the capture is unreliable).
+pub fn load(path: &Path) -> Result<Vec<ParsedEvent>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    text.lines()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty())
+        .map(|(i, l)| parse_event(l, i + 1))
+        .collect()
+}
+
+/// Convert a loaded sink to the Chrome-trace JSON Array Format: spans
+/// become complete (`"ph":"X"`) events, instants and faults become
+/// instant (`"ph":"i"`) events. One process row per source file; each
+/// trace id gets its own thread row (low 32 bits — the full decimal id
+/// rides in `args.trace_id`), so concurrent requests stack instead of
+/// interleaving.
+pub fn chrome_trace(events: &[ParsedEvent]) -> Json {
+    let rows = events
+        .iter()
+        .map(|ev| {
+            let mut args: Vec<(String, Json)> = vec![
+                ("trace_id".into(), Json::Str(ev.trace_id.to_string())),
+                ("seq".into(), Json::Num(ev.seq as f64)),
+            ];
+            if ev.site == "decode_step" && ev.args.len() >= 4 {
+                for (name, v) in
+                    ["stage_us", "graph_us", "sample_us", "append_us"].iter().zip(&ev.args)
+                {
+                    args.push(((*name).into(), Json::Num(*v as f64)));
+                }
+            } else if ev.kind == Kind::Fault {
+                args.push(("hit".into(), Json::Num(*ev.args.first().unwrap_or(&0) as f64)));
+            }
+            let mut row: Vec<(String, Json)> = vec![
+                ("name".into(), Json::Str(ev.site.clone())),
+                ("cat".into(), Json::Str(ev.kind.name().into())),
+                ("ts".into(), Json::Num(ev.t_us as f64)),
+                ("pid".into(), Json::Num(1.0)),
+                ("tid".into(), Json::Num((ev.trace_id & 0xffff_ffff) as f64)),
+                ("args".into(), Json::obj(args)),
+            ];
+            match ev.kind {
+                Kind::Span => {
+                    row.push(("ph".into(), Json::Str("X".into())));
+                    row.push(("dur".into(), Json::Num(ev.dur_us as f64)));
+                }
+                Kind::Instant | Kind::Fault => {
+                    row.push(("ph".into(), Json::Str("i".into())));
+                    // "t": thread-scoped instant marker
+                    row.push(("s".into(), Json::Str("t".into())));
+                }
+            }
+            Json::obj(row)
+        })
+        .collect();
+    Json::Arr(rows)
+}
+
+/// The canonical lifecycle chain every completed generation must leave in
+/// a worker's sink, in timeline order.
+pub const CHAIN: [&str; 4] = ["queue", "prefill", "decode_step", "finished"];
+
+/// Per-trace summary produced by [`check_chain`].
+#[derive(Debug)]
+pub struct ChainReport {
+    pub trace_id: u64,
+    pub decode_steps: usize,
+    pub in_router: bool,
+}
+
+fn by_trace(events: &[ParsedEvent]) -> BTreeMap<u64, Vec<&ParsedEvent>> {
+    let mut map: BTreeMap<u64, Vec<&ParsedEvent>> = BTreeMap::new();
+    for ev in events {
+        map.entry(ev.trace_id).or_default().push(ev);
+    }
+    for list in map.values_mut() {
+        list.sort_by_key(|e| (e.t_us, e.seq));
+    }
+    map
+}
+
+/// Assert the worker sink contains at least one complete
+/// `queue→prefill→decode_step→finished` chain with monotone (nondecreasing
+/// start) timestamps, and — when a router sink is given — that every
+/// complete chain's trace id also appears there (the cross-process
+/// correlation the additive `gen`-frame field exists for). Returns one
+/// report per complete chain; traces without the full chain (cancelled,
+/// still in flight) are ignored.
+pub fn check_chain(
+    worker: &[ParsedEvent],
+    router: Option<&[ParsedEvent]>,
+) -> Result<Vec<ChainReport>, String> {
+    let router_ids: Option<BTreeMap<u64, Vec<&ParsedEvent>>> = router.map(by_trace);
+    let mut reports = Vec::new();
+    for (trace_id, events) in by_trace(worker) {
+        let first_start = |site: &str| {
+            events.iter().find(|e| e.site == site).map(|e| e.t_us)
+        };
+        let Some(starts) = CHAIN
+            .iter()
+            .map(|s| first_start(s))
+            .collect::<Option<Vec<u64>>>()
+        else {
+            continue; // incomplete chain: not this checker's business
+        };
+        for (pair, w) in CHAIN.windows(2).zip(starts.windows(2)) {
+            if w[0] > w[1] {
+                return Err(format!(
+                    "trace {trace_id}: '{}' starts at {}us after '{}' at {}us",
+                    pair[0], w[0], pair[1], w[1]
+                ));
+            }
+        }
+        // every decode step belongs inside the [prefill, finished] window
+        // (conn_write / relay bookkeeping may legitimately trail finished)
+        let finished = *starts.last().unwrap_or(&0);
+        if let Some(stray) = events
+            .iter()
+            .find(|e| e.site == "decode_step" && (e.t_us < starts[1] || e.t_us > finished))
+        {
+            return Err(format!(
+                "trace {trace_id}: decode_step at {}us outside prefill..finished ({}..{finished}us)",
+                stray.t_us, starts[1]
+            ));
+        }
+        let in_router = match &router_ids {
+            None => false,
+            Some(ids) => {
+                if !ids.contains_key(&trace_id) {
+                    return Err(format!(
+                        "trace {trace_id}: complete on the worker but absent from the router sink"
+                    ));
+                }
+                true
+            }
+        };
+        reports.push(ChainReport {
+            trace_id,
+            decode_steps: events.iter().filter(|e| e.site == "decode_step").count(),
+            in_router,
+        });
+    }
+    if reports.is_empty() {
+        return Err(format!(
+            "no complete {} chain in {} events across {} traces",
+            CHAIN.join("→"),
+            worker.len(),
+            by_trace(worker).len()
+        ));
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(trace_id: u64, site: &str, kind: Kind, t_us: u64, dur_us: u64) -> ParsedEvent {
+        ParsedEvent {
+            trace_id,
+            site: site.to_string(),
+            kind,
+            t_us,
+            dur_us,
+            seq: t_us,
+            args: vec![1, 2, 3, 4],
+        }
+    }
+
+    fn full_chain(id: u64, base: u64) -> Vec<ParsedEvent> {
+        vec![
+            ev(id, "queue", Kind::Span, base, 50),
+            ev(id, "prefill", Kind::Span, base + 60, 200),
+            ev(id, "decode_step", Kind::Span, base + 300, 40),
+            ev(id, "decode_step", Kind::Span, base + 350, 40),
+            ev(id, "finished", Kind::Instant, base + 400, 0),
+        ]
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_load() {
+        let src = super::super::Event {
+            trace_id: (0x1234u64 << 48) | 7, // past 2^53: string spelling
+            site: "prefill",
+            kind: Kind::Span,
+            t_us: 10,
+            dur_us: 25,
+            seq: 3,
+            args: [9, 0, 0, 0],
+        };
+        let line = super::super::event_json(&src).to_string();
+        let parsed = parse_event(&line, 1).expect("parseable");
+        assert_eq!(parsed.trace_id, src.trace_id);
+        assert_eq!(parsed.site, "prefill");
+        assert_eq!(parsed.kind, Kind::Span);
+        assert_eq!((parsed.t_us, parsed.dur_us, parsed.seq), (10, 25, 3));
+        assert_eq!(parsed.args, vec![9, 0, 0, 0]);
+        assert!(parse_event("{\"kind\":\"span\"}", 2).is_err(), "missing fields rejected");
+    }
+
+    #[test]
+    fn chrome_rows_carry_phase_breakdown_and_full_id() {
+        let events = full_chain(5, 100);
+        let rows = chrome_trace(&events);
+        let rows = rows.as_arr().expect("array");
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[0].req("ph").as_str(), Some("X"));
+        assert_eq!(rows[0].req("dur").as_f64(), Some(50.0));
+        let decode = &rows[2];
+        assert_eq!(decode.req("args").req("stage_us").as_f64(), Some(1.0));
+        assert_eq!(decode.req("args").req("append_us").as_f64(), Some(4.0));
+        let fin = &rows[4];
+        assert_eq!(fin.req("ph").as_str(), Some("i"));
+        assert_eq!(fin.req("args").req("trace_id").as_str(), Some("5"));
+    }
+
+    #[test]
+    fn check_accepts_a_complete_monotone_chain() {
+        let mut worker = full_chain(9, 0);
+        worker.extend(full_chain(10, 1000));
+        worker.push(ev(11, "queue", Kind::Span, 0, 10)); // in flight: ignored
+        let reports = check_chain(&worker, None).expect("chains hold");
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].trace_id, 9);
+        assert_eq!(reports[0].decode_steps, 2);
+        assert!(!reports[0].in_router);
+    }
+
+    #[test]
+    fn check_rejects_timestamp_regression_and_missing_chain() {
+        let mut bad = full_chain(3, 500);
+        bad[1].t_us = 5; // prefill before queue
+        let err = check_chain(&bad, None).expect_err("regression must fail");
+        assert!(err.contains("'queue'"), "{err}");
+        let err = check_chain(&[ev(1, "queue", Kind::Span, 0, 1)], None)
+            .expect_err("incomplete chain must fail");
+        assert!(err.contains("no complete"), "{err}");
+    }
+
+    #[test]
+    fn check_correlates_trace_ids_across_router_and_worker() {
+        let worker = full_chain(21, 0);
+        let router = vec![ev(21, "relay_hop", Kind::Span, 40, 400)];
+        let reports = check_chain(&worker, Some(&router)).expect("correlated");
+        assert!(reports[0].in_router);
+        let other = vec![ev(99, "relay_hop", Kind::Span, 40, 400)];
+        let err = check_chain(&worker, Some(&other)).expect_err("uncorrelated must fail");
+        assert!(err.contains("absent from the router sink"), "{err}");
+    }
+}

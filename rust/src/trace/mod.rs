@@ -1,0 +1,728 @@
+//! End-to-end request tracing: deterministic spans across all six layers.
+//!
+//! Modeled on the [`crate::util::failpoint`] pattern: the **disabled cost
+//! is a single relaxed atomic load** ([`enabled`]) per site, so tracing can
+//! ride inside the serving hot loops without a measurable tax. When enabled
+//! (`repro serve --trace-out FILE`, `repro router --trace-out FILE`, or
+//! [`enable`] from tests), every request carries a **trace id** — minted at
+//! the router front door or at worker admission and propagated on the wire
+//! as an additive `gen`-frame field — and typed span events are recorded
+//! into fixed-capacity per-thread ring buffers with a lock-free record path
+//! and a mutex-serialized drain.
+//!
+//! # Site catalogue
+//!
+//! | site                | layer        | shape   | `args`                       |
+//! |---------------------|--------------|---------|------------------------------|
+//! | `queue`             | engine       | span    | —                            |
+//! | `admission`         | engine       | span    | —                            |
+//! | `prefix_attach`     | engine       | span    | —                            |
+//! | `prefill`           | engine       | span    | `[prompt_len]`               |
+//! | `decode_step`       | engine       | span    | `[stage, graph, sample, append]` µs |
+//! | `quantize`          | kvcache      | span    | —                            |
+//! | `finished`          | engine       | instant | —                            |
+//! | `conn_write`        | server       | span    | —                            |
+//! | `relay_hop`         | router       | span    | `[attempt]`                  |
+//! | `failover`          | router       | instant | `[attempt]`                  |
+//! | `breaker_transition`| router       | instant | `[closed=0/open=1/half=2]`   |
+//!
+//! Failpoint firings are recorded too ([`fault`], called from
+//! `failpoint::hit`), tagged with the thread's current trace id — so chaos
+//! tests can assert fault placement *inside* a request's timeline.
+//!
+//! `repro lint` rule 7 (`trace-hygiene`) keeps site names globally unique,
+//! bans span sites in `compress/` + `linalg/` inner kernels, and requires
+//! every `trace_span!` in `server/`/`coordinator/`/`router/` to be bound to
+//! a named RAII guard (`let g = trace_span!(...)`) so the span exit runs on
+//! every return path.
+//!
+//! # Timeline semantics
+//!
+//! Timestamps (`t_us`) are microseconds since this process's trace epoch
+//! (pinned at [`enable`]); they are comparable *within* one process's
+//! events, never across processes — the router/worker correlation key is
+//! the shared trace id, not the clock. `seq` is a process-global record
+//! counter giving a total order on events even when `t_us` ties.
+//!
+//! # Exposure
+//!
+//! 1. the `trace` wire frame: per-request span timeline as JSON
+//!    ([`timeline`]), mirrored by `repro client --trace <id>`;
+//! 2. the JSONL sink (`--trace-out FILE`, one event object per line) plus
+//!    the Chrome-trace exporter `repro trace --export chrome FILE`
+//!    ([`export`]);
+//! 3. the step-loop profiler (`repro serve --profile`): decode-step
+//!    sub-timings aggregated into the `metrics` frame (see
+//!    [`crate::coordinator::Metrics`]).
+
+pub mod export;
+
+use crate::util::json::Json;
+use crate::util::sync::lock_unpoisoned;
+use std::cell::{Cell, UnsafeCell};
+use std::collections::{HashMap, VecDeque};
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::mem::MaybeUninit;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Per-thread ring capacity, in events. A full ring drops new events (and
+/// counts them) instead of blocking or reallocating — the record path must
+/// never stall a serving thread.
+const RING_CAP: usize = 8192;
+/// In-memory store bound: timelines of the most recent this-many traces
+/// are queryable via the `trace` wire frame; older traces are evicted in
+/// insertion order (the JSONL sink, when open, has already persisted them).
+const STORE_TRACES: usize = 512;
+/// Per-trace event bound in the in-memory store (a long generation's
+/// `decode_step` chain dominates; past this the timeline is truncated).
+const TRACE_EVENT_CAP: usize = 8192;
+
+// ---------------------------------------------------------------------------
+// event model
+
+/// Shape of a recorded event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// An interval: `t_us` is the start, `dur_us` the length.
+    Span,
+    /// A point event (`dur_us` = 0).
+    Instant,
+    /// A failpoint firing ([`fault`]); `args[0]` is the site's hit index.
+    Fault,
+}
+
+impl Kind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kind::Span => "span",
+            Kind::Instant => "instant",
+            Kind::Fault => "fault",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Kind> {
+        match s {
+            "span" => Some(Kind::Span),
+            "instant" => Some(Kind::Instant),
+            "fault" => Some(Kind::Fault),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded trace event. `Copy` so the ring moves plain bits.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The request's trace id (0 = unattributed, e.g. a fault firing on a
+    /// thread with no current request).
+    pub trace_id: u64,
+    /// Static site name from the catalogue (lint-enforced unique).
+    pub site: &'static str,
+    pub kind: Kind,
+    /// Microseconds since this process's trace epoch.
+    pub t_us: u64,
+    /// Span length in microseconds (0 for instants and faults).
+    pub dur_us: u64,
+    /// Process-global record sequence number (total order).
+    pub seq: u64,
+    /// Site-specific payload (see the module-docs catalogue).
+    pub args: [u64; 4],
+}
+
+// ---------------------------------------------------------------------------
+// per-thread ring
+
+/// Fixed-capacity single-producer/single-consumer event queue. The
+/// producer is the owning thread (via the `LOCAL_RING` thread-local); the
+/// consumer is the drain path, serialized by the `COLLECTOR` mutex. The
+/// cursors are monotone; `head - tail` is the live occupancy.
+struct Ring {
+    slots: Box<[UnsafeCell<MaybeUninit<Event>>]>,
+    /// Monotone write cursor — advanced only by the producer thread.
+    head: AtomicUsize,
+    /// Monotone read cursor — advanced only by the serialized consumer.
+    tail: AtomicUsize,
+    /// Events discarded because the ring was full (drained into the
+    /// collector's `dropped` total).
+    dropped: AtomicU64,
+}
+
+// SAFETY: Ring is strictly single-producer/single-consumer: only the
+// owning thread writes slots and advances `head` (thread-local handle),
+// only the COLLECTOR-mutex-serialized drain reads slots and advances
+// `tail`. The producer's Release store of `head` happens-before the
+// consumer's Acquire load, so a slot is never read before its write is
+// published, and a slot in [tail, head) is never overwritten.
+unsafe impl Send for Ring {}
+// SAFETY: see the Send impl — all cross-thread slot access is mediated by
+// the acquire/release cursor pair; the same slot is never accessed from
+// two threads concurrently.
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring {
+            slots: (0..cap)
+                .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+                .collect::<Vec<_>>()
+                .into_boxed_slice(),
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Producer side: lock-free, wait-free. A full ring counts a drop and
+    /// returns — recording must never block a serving thread.
+    fn push(&self, ev: Event) {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head.wrapping_sub(tail) >= self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // SAFETY: only this (producer) thread advances `head`, and the
+        // occupancy check above proves slot `head % cap` is outside the
+        // consumer's readable [tail, head) window, so nothing else touches
+        // it until the Release store below publishes the write.
+        unsafe { (*self.slots[head % self.slots.len()].get()).write(ev) };
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+    }
+
+    /// Consumer side; callers must hold the `COLLECTOR` lock (the
+    /// single-consumer guarantee).
+    fn pop(&self) -> Option<Event> {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
+        if tail == head {
+            return None;
+        }
+        // SAFETY: tail != head means the producer's Release store of
+        // `head` (paired with the Acquire load above) already published
+        // the slot's write, and only this serialized consumer advances
+        // `tail`, so the read cannot race the producer.
+        let ev = unsafe { (*self.slots[tail % self.slots.len()].get()).assume_init() };
+        self.tail.store(tail.wrapping_add(1), Ordering::Release);
+        Some(ev)
+    }
+
+    fn is_empty(&self) -> bool {
+        self.tail.load(Ordering::Acquire) == self.head.load(Ordering::Acquire)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// globals
+
+// Fast-path flag plus monotone counters; all heavier coordination goes
+// through the RINGS/COLLECTOR/DRAINER mutexes, so Relaxed suffices on
+// every atomic in this module except the ring cursors (whose
+// acquire/release pair is the publication edge for slot contents).
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SEQ: AtomicU64 = AtomicU64::new(0);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+static EPOCH: OnceLock<std::time::Instant> = OnceLock::new();
+/// Every live thread's ring (registered on first record; pruned by the
+/// drain once a thread is gone and its ring is empty).
+static RINGS: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
+/// Consumer state: the JSONL sink and the bounded in-memory timeline
+/// store. Also the single-consumer gate — every drain holds this lock.
+static COLLECTOR: Mutex<Option<Collector>> = Mutex::new(None);
+/// Background drain thread handle (spawned by [`enable`], joined by
+/// [`shutdown`]).
+static DRAINER: Mutex<Option<std::thread::JoinHandle<()>>> = Mutex::new(None);
+
+thread_local! {
+    /// This thread's ring, registered globally on first use.
+    static LOCAL_RING: Arc<Ring> = {
+        let r = Arc::new(Ring::new(RING_CAP));
+        lock_unpoisoned(&RINGS).push(Arc::clone(&r));
+        r
+    };
+    /// The trace id the thread is currently working on behalf of —
+    /// lets deep layers (kvcache quantize, failpoint firings) attribute
+    /// events without plumbing an id through every signature.
+    static CURRENT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Fast-path guard: one relaxed atomic load. `false` (the default) means
+/// every trace site is a no-op.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Mint a fresh trace id: `(pid & 0xffff) << 48 | counter`, so ids from a
+/// router and its workers never collide and are **always non-zero**. Ids
+/// routinely exceed 2^53, hence the decimal-string spelling on the wire
+/// and in the JSONL sink (the PR-5 integer-fidelity convention).
+pub fn mint() -> u64 {
+    let pid = (std::process::id() as u64) & 0xffff;
+    (pid << 48) | (NEXT_ID.fetch_add(1, Ordering::Relaxed) & ((1 << 48) - 1))
+}
+
+/// Set the thread's current trace id (0 = none). The engine stamps this
+/// per request around admission and decode so [`fault`] firings and the
+/// kvcache `quantize` span attribute to the right timeline.
+pub fn set_current(id: u64) {
+    CURRENT.with(|c| c.set(id));
+}
+
+/// The thread's current trace id (0 = none).
+pub fn current() -> u64 {
+    CURRENT.with(|c| c.get())
+}
+
+fn epoch() -> std::time::Instant {
+    *EPOCH.get_or_init(std::time::Instant::now)
+}
+
+fn instant_us(t: std::time::Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_micros() as u64
+}
+
+fn now_us() -> u64 {
+    instant_us(std::time::Instant::now())
+}
+
+fn record(kind: Kind, site: &'static str, trace_id: u64, t_us: u64, dur_us: u64, args: [u64; 4]) {
+    let ev = Event {
+        trace_id,
+        site,
+        kind,
+        t_us,
+        dur_us,
+        seq: SEQ.fetch_add(1, Ordering::Relaxed),
+        args,
+    };
+    LOCAL_RING.with(|r| r.push(ev));
+}
+
+// ---------------------------------------------------------------------------
+// recording API
+
+/// RAII span: records one [`Kind::Span`] event on drop, covering the
+/// guard's construction-to-drop interval. Drop-on-every-path is the exit
+/// guarantee lint rule 7 leans on — bind the guard (`let g = ...`), never
+/// discard it. Disabled tracing constructs an inert guard (no clock read).
+pub struct SpanGuard {
+    site: &'static str,
+    trace_id: u64,
+    start: Option<std::time::Instant>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            record(
+                Kind::Span,
+                self.site,
+                self.trace_id,
+                instant_us(start),
+                start.elapsed().as_micros() as u64,
+                [0; 4],
+            );
+        }
+    }
+}
+
+/// Open a span (prefer the [`trace_span!`] macro, which the lint's
+/// site-name rules can see).
+pub fn span(site: &'static str, trace_id: u64) -> SpanGuard {
+    let start = enabled().then(std::time::Instant::now);
+    SpanGuard { site, trace_id, start }
+}
+
+/// Record a completed span whose interval was measured externally (the
+/// engine re-uses the `Instant`s it already takes for metrics, so tracing
+/// adds no extra clock reads to the step loop).
+#[inline]
+pub fn complete_at(
+    site: &'static str,
+    trace_id: u64,
+    start: std::time::Instant,
+    dur: std::time::Duration,
+    args: [u64; 4],
+) {
+    if !enabled() {
+        return;
+    }
+    record(Kind::Span, site, trace_id, instant_us(start), dur.as_micros() as u64, args);
+}
+
+/// Record a completed span from its start `Instant` to now.
+#[inline]
+pub fn complete_from(site: &'static str, trace_id: u64, start: std::time::Instant, args: [u64; 4]) {
+    complete_at(site, trace_id, start, start.elapsed(), args);
+}
+
+/// Record a point event.
+#[inline]
+pub fn instant(site: &'static str, trace_id: u64, args: [u64; 4]) {
+    if !enabled() {
+        return;
+    }
+    record(Kind::Instant, site, trace_id, now_us(), 0, args);
+}
+
+/// Record a failpoint firing (called from `failpoint::hit`), attributed to
+/// the thread's current trace id. `hit` is the site's 1-based hit index —
+/// chaos tests assert the scheduled hit count straight off the timeline.
+pub fn fault(site: &'static str, hit: u64) {
+    if !enabled() {
+        return;
+    }
+    record(Kind::Fault, site, current(), now_us(), 0, [hit, 0, 0, 0]);
+}
+
+/// Open a trace span tied to a request timeline.
+///
+/// * `trace_span!("site")` — uses the thread's [`current`] trace id.
+/// * `trace_span!("site", id)` — explicit trace id.
+///
+/// Returns a [`SpanGuard`]; **bind it** (`let g = trace_span!(...);`) so
+/// the span closes when the guard drops — on every return path. Lint rule
+/// 7 enforces the binding in `server/`/`coordinator/`/`router/`, keeps
+/// site literals unique, and bans sites in `compress/`/`linalg/`.
+#[macro_export]
+macro_rules! trace_span {
+    ($site:literal) => {
+        $crate::trace::span($site, $crate::trace::current())
+    };
+    ($site:literal, $id:expr) => {
+        $crate::trace::span($site, $id)
+    };
+}
+
+// ---------------------------------------------------------------------------
+// drain, sink, store
+
+struct Collector {
+    sink: Option<BufWriter<File>>,
+    /// Per-trace timelines, bounded to [`STORE_TRACES`] traces of
+    /// [`TRACE_EVENT_CAP`] events each.
+    store: HashMap<u64, Vec<Event>>,
+    /// Trace insertion order — the eviction queue.
+    order: VecDeque<u64>,
+    /// Ring-full drops absorbed from every ring so far.
+    dropped: u64,
+}
+
+impl Collector {
+    fn absorb(&mut self, ev: Event) {
+        if let Some(w) = self.sink.as_mut() {
+            let mut line = String::new();
+            event_json(&ev).write(&mut line);
+            line.push('\n');
+            let _ = w.write_all(line.as_bytes());
+        }
+        if !self.store.contains_key(&ev.trace_id) {
+            while self.store.len() >= STORE_TRACES {
+                match self.order.pop_front() {
+                    Some(old) => {
+                        self.store.remove(&old);
+                    }
+                    None => break,
+                }
+            }
+            self.order.push_back(ev.trace_id);
+            self.store.insert(ev.trace_id, Vec::new());
+        }
+        if let Some(events) = self.store.get_mut(&ev.trace_id) {
+            if events.len() < TRACE_EVENT_CAP {
+                events.push(ev);
+            }
+        }
+    }
+}
+
+/// One event as its JSONL/object form. `trace_id` is a decimal string
+/// (ids exceed 2^53 — see [`mint`]); everything else is numeric.
+pub fn event_json(ev: &Event) -> Json {
+    Json::obj(vec![
+        ("trace_id", Json::Str(ev.trace_id.to_string())),
+        ("site", Json::Str(ev.site.into())),
+        ("kind", Json::Str(ev.kind.name().into())),
+        ("t_us", Json::Num(ev.t_us as f64)),
+        ("dur_us", Json::Num(ev.dur_us as f64)),
+        ("seq", Json::Num(ev.seq as f64)),
+        ("args", Json::Arr(ev.args.iter().map(|a| Json::Num(*a as f64)).collect())),
+    ])
+}
+
+/// Drain every thread's ring into the sink and the in-memory store,
+/// synchronously. The background drainer calls this on a ~10ms cadence;
+/// [`timeline`] and tests call it directly for an up-to-date view.
+pub fn drain_now() {
+    let mut guard = lock_unpoisoned(&COLLECTOR);
+    let Some(col) = guard.as_mut() else { return };
+    let rings: Vec<Arc<Ring>> = lock_unpoisoned(&RINGS).clone();
+    let mut batch: Vec<Event> = Vec::new();
+    for r in &rings {
+        while let Some(ev) = r.pop() {
+            batch.push(ev);
+        }
+        col.dropped += r.dropped.swap(0, Ordering::Relaxed);
+    }
+    // seq order = record order: the JSONL sink stays a total order even
+    // though per-thread rings drain at different times
+    batch.sort_unstable_by_key(|e| e.seq);
+    for ev in batch {
+        col.absorb(ev);
+    }
+    if let Some(w) = col.sink.as_mut() {
+        let _ = w.flush();
+    }
+    drop(guard);
+    // prune rings of exited threads once they are empty (the Arc in RINGS
+    // is the only holder left)
+    lock_unpoisoned(&RINGS).retain(|r| Arc::strong_count(r) > 1 || !r.is_empty());
+}
+
+/// Turn tracing on, optionally with a JSONL sink (one event object per
+/// line). Pins the trace epoch, resets the in-memory store, and spawns the
+/// background drainer. Safe to call again after [`shutdown`].
+pub fn enable(sink: Option<&Path>) -> std::io::Result<()> {
+    let _ = epoch(); // pin the time origin before the first span opens
+    let writer = match sink {
+        Some(p) => Some(BufWriter::new(File::create(p)?)),
+        None => None,
+    };
+    *lock_unpoisoned(&COLLECTOR) = Some(Collector {
+        sink: writer,
+        store: HashMap::new(),
+        order: VecDeque::new(),
+        dropped: 0,
+    });
+    ENABLED.store(true, Ordering::Relaxed);
+    let mut d = lock_unpoisoned(&DRAINER);
+    if d.is_none() {
+        *d = Some(std::thread::spawn(drain_loop));
+    }
+    Ok(())
+}
+
+fn drain_loop() {
+    while ENABLED.load(Ordering::Relaxed) {
+        drain_now();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    drain_now();
+}
+
+/// Turn tracing off: stop recording, join the drainer, take a final drain,
+/// and flush the sink. The in-memory store stays queryable until the next
+/// [`enable`].
+pub fn shutdown() {
+    ENABLED.store(false, Ordering::Relaxed);
+    let handle = lock_unpoisoned(&DRAINER).take();
+    if let Some(h) = handle {
+        let _ = h.join();
+    }
+    drain_now();
+    if let Some(col) = lock_unpoisoned(&COLLECTOR).as_mut() {
+        if let Some(w) = col.sink.as_mut() {
+            let _ = w.flush();
+        }
+    }
+}
+
+/// The recorded timeline of one trace as a JSON array of event objects
+/// (sorted by start time, then record order), or `None` for unknown ids.
+/// Drains first, so the answer includes everything recorded so far — this
+/// is what the `trace` wire frame serves.
+pub fn timeline(trace_id: u64) -> Option<Json> {
+    drain_now();
+    let guard = lock_unpoisoned(&COLLECTOR);
+    let col = guard.as_ref()?;
+    let events = col.store.get(&trace_id)?;
+    let mut sorted = events.clone();
+    sorted.sort_by_key(|e| (e.t_us, e.seq));
+    Some(Json::Arr(sorted.iter().map(event_json).collect()))
+}
+
+/// Events lost to full rings since [`enable`] (visible after a drain).
+pub fn dropped_total() -> u64 {
+    lock_unpoisoned(&COLLECTOR).as_ref().map_or(0, |c| c.dropped)
+}
+
+#[cfg(test)]
+pub(crate) static TEST_GATE: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serialize tests that flip the process-global enable flag, and make
+    /// sure it is off (with a final drain) when each test ends.
+    struct TraceOff;
+    impl Drop for TraceOff {
+        fn drop(&mut self) {
+            shutdown();
+        }
+    }
+
+    fn with_tracing(sink: Option<&Path>, f: impl FnOnce()) {
+        let _gate = lock_unpoisoned(&TEST_GATE);
+        enable(sink).expect("enable trace");
+        let _off = TraceOff;
+        f();
+    }
+
+    #[test]
+    fn disabled_sites_are_inert() {
+        let _gate = lock_unpoisoned(&TEST_GATE);
+        assert!(!enabled());
+        let g = span("queue", 7);
+        assert!(g.start.is_none(), "disabled span must not read the clock");
+        drop(g);
+        instant("finished", 7, [0; 4]);
+        fault("prefix.attach", 1);
+        // nothing was recorded: this thread's ring stays empty
+        LOCAL_RING.with(|r| assert!(r.is_empty()));
+    }
+
+    #[test]
+    fn ring_push_pop_preserves_order_and_counts_drops() {
+        let r = Ring::new(4);
+        let ev = |seq| Event {
+            trace_id: 1,
+            site: "queue",
+            kind: Kind::Span,
+            t_us: seq,
+            dur_us: 0,
+            seq,
+            args: [0; 4],
+        };
+        for i in 0..6 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.dropped.load(Ordering::Relaxed), 2, "overflow must drop, not block");
+        let drained: Vec<u64> = std::iter::from_fn(|| r.pop()).map(|e| e.seq).collect();
+        assert_eq!(drained, vec![0, 1, 2, 3], "FIFO with the oldest kept");
+        assert!(r.is_empty());
+        // ring is reusable after a full drain
+        r.push(ev(9));
+        assert_eq!(r.pop().map(|e| e.seq), Some(9));
+    }
+
+    #[test]
+    fn spans_drain_into_the_timeline() {
+        with_tracing(None, || {
+            let id = mint();
+            assert_ne!(id, 0, "minted ids are never the unattributed 0");
+            {
+                let g = crate::trace_span!("queue", id);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                drop(g);
+            }
+            instant("finished", id, [3, 0, 0, 0]);
+            let tl = timeline(id).expect("trace recorded");
+            let events = tl.as_arr().expect("array").to_vec();
+            assert_eq!(events.len(), 2);
+            let sites: Vec<&str> =
+                events.iter().map(|e| e.req("site").as_str().unwrap_or("")).collect();
+            assert_eq!(sites, vec!["queue", "finished"]);
+            assert_eq!(events[0].req("kind").as_str(), Some("span"));
+            assert!(events[0].req("dur_us").as_f64().unwrap_or(0.0) >= 1000.0);
+            assert_eq!(events[1].req("kind").as_str(), Some("instant"));
+            assert_eq!(
+                events[1].req("trace_id").as_str(),
+                Some(id.to_string().as_str()),
+                "trace ids travel as decimal strings"
+            );
+            assert!(timeline(id ^ 1).is_none(), "unknown ids have no timeline");
+        });
+    }
+
+    #[test]
+    fn current_id_attributes_faults_and_bare_spans() {
+        with_tracing(None, || {
+            let id = mint();
+            set_current(id);
+            {
+                let _g = crate::trace_span!("quantize");
+            }
+            fault("prefix.attach", 2);
+            set_current(0);
+            let tl = timeline(id).expect("attributed via current()");
+            let events = tl.as_arr().expect("array").to_vec();
+            assert_eq!(events.len(), 2);
+            assert_eq!(events[0].req("site").as_str(), Some("quantize"));
+            assert_eq!(events[1].req("kind").as_str(), Some("fault"));
+            assert_eq!(events[1].req("site").as_str(), Some("prefix.attach"));
+            let args = events[1].req("args").as_arr().expect("args").to_vec();
+            assert_eq!(args[0].as_f64(), Some(2.0), "fault events carry the hit index");
+        });
+    }
+
+    #[test]
+    fn cross_thread_events_merge_in_seq_order() {
+        with_tracing(None, || {
+            let id = mint();
+            complete_from("prefill", id, std::time::Instant::now(), [8, 0, 0, 0]);
+            let handle = std::thread::spawn(move || {
+                complete_from("decode_step", id, std::time::Instant::now(), [1, 2, 3, 4]);
+            });
+            handle.join().expect("recorder thread");
+            let tl = timeline(id).expect("both threads' events recorded");
+            let events = tl.as_arr().expect("array").to_vec();
+            let mut sites: Vec<&str> =
+                events.iter().map(|e| e.req("site").as_str().unwrap_or("")).collect();
+            sites.sort_unstable();
+            assert_eq!(sites, vec!["decode_step", "prefill"]);
+            // dead thread's ring gets pruned once drained
+            drain_now();
+            assert_eq!(dropped_total(), 0);
+        });
+    }
+
+    #[test]
+    fn jsonl_sink_writes_one_parseable_event_per_line() {
+        let path = std::env::temp_dir()
+            .join(format!("repro-trace-test-{}.jsonl", std::process::id()));
+        with_tracing(Some(&path), || {
+            let id = mint();
+            complete_from("queue", id, std::time::Instant::now(), [0; 4]);
+            instant("finished", id, [0; 4]);
+            shutdown();
+            let text = std::fs::read_to_string(&path).expect("sink file");
+            let lines: Vec<&str> = text.lines().collect();
+            assert_eq!(lines.len(), 2, "one JSONL line per event: {text:?}");
+            for line in lines {
+                let j = Json::parse(line).expect("parseable line");
+                assert_eq!(j.req("trace_id").as_str(), Some(id.to_string().as_str()));
+                assert!(Kind::parse(j.req("kind").as_str().unwrap_or("")).is_some());
+            }
+        });
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn store_evicts_oldest_traces_at_capacity() {
+        with_tracing(None, || {
+            let first = mint();
+            instant("finished", first, [0; 4]);
+            drain_now();
+            for _ in 0..STORE_TRACES {
+                instant("finished", mint(), [0; 4]);
+            }
+            drain_now();
+            assert!(timeline(first).is_none(), "oldest trace must be evicted");
+        });
+    }
+
+    #[test]
+    fn minted_ids_are_unique_and_exceed_json_exact_range_shape() {
+        let a = mint();
+        let b = mint();
+        assert_ne!(a, b);
+        assert_eq!(a >> 48, b >> 48, "same process prefix");
+        // the string spelling is what goes on the wire; it must round-trip
+        let s = a.to_string();
+        assert_eq!(s.parse::<u64>().ok(), Some(a));
+    }
+}

@@ -194,6 +194,11 @@ pub fn hit(name: &'static str) -> Option<Fault> {
         if log.len() < FIRED_LOG_CAP {
             log.push((name, hit));
         }
+        drop(log);
+        // Mirror the firing into the request trace (attributed to the
+        // thread's current trace id), so chaos tests can assert fault
+        // placement inside a span timeline. No-op unless tracing is on.
+        crate::trace::fault(name, hit);
         match action {
             Action::Err => return Some(Fault { site: name, hit }),
             Action::Delay(d) => delay = d,

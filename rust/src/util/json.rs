@@ -94,6 +94,36 @@ impl Json {
     }
 }
 
+/// Largest integer exactly representable as an f64 (2^53). Counters past
+/// it must travel as decimal strings or they silently round on the wire.
+pub const U64_EXACT_F64: u64 = 1 << 53;
+
+/// Spell a `u64` as JSON: a plain number while exactly representable as
+/// f64 (keeps `grep '"field":[0-9]*'`-style consumers working), a decimal
+/// string once past 2^53 (the wire convention from the protocol layer).
+/// [`u64_field`] is the inverse.
+pub fn u64_json(x: u64) -> Json {
+    if x < U64_EXACT_F64 {
+        Json::Num(x as f64)
+    } else {
+        Json::Str(x.to_string())
+    }
+}
+
+/// Read a `u64` field that may be spelled either way (see [`u64_json`]):
+/// a non-negative integral number below 2^53, or a decimal string.
+/// Returns `None` for missing fields, lossy numbers, and non-numeric
+/// strings.
+pub fn u64_field(j: &Json, key: &str) -> Option<u64> {
+    match j.get(key)? {
+        Json::Str(s) => s.parse::<u64>().ok(),
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < U64_EXACT_F64 as f64 => {
+            Some(*n as u64)
+        }
+        _ => None,
+    }
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
@@ -357,6 +387,43 @@ mod tests {
             let printed = Json::Arr(vec![Json::Num(bad)]).to_string();
             assert_eq!(printed, "[null]");
             assert!(Json::parse(&printed).is_ok(), "printed form must stay parseable");
+        }
+    }
+
+    #[test]
+    fn u64_json_round_trips_across_the_2_53_boundary() {
+        for x in [
+            0u64,
+            1,
+            1 << 31,
+            U64_EXACT_F64 - 1, // largest exact number spelling
+            U64_EXACT_F64,     // first value forced onto the string path
+            U64_EXACT_F64 + 1, // would round as f64 — must be a string
+            u64::MAX,
+        ] {
+            let j = u64_json(x);
+            match &j {
+                Json::Num(_) => assert!(x < U64_EXACT_F64, "{x} must be a string"),
+                Json::Str(_) => assert!(x >= U64_EXACT_F64, "{x} should stay numeric"),
+                other => panic!("unexpected spelling {other:?}"),
+            }
+            let printed = Json::obj(vec![("v", j)]).to_string();
+            let back = Json::parse(&printed).unwrap();
+            assert_eq!(u64_field(&back, "v"), Some(x), "via {printed}");
+        }
+    }
+
+    #[test]
+    fn u64_field_rejects_lossy_spellings() {
+        let j = Json::obj(vec![
+            ("neg", Json::Num(-1.0)),
+            ("frac", Json::Num(0.5)),
+            ("big", Json::Num(9.3e18)), // past 2^53: numeric spelling is lossy
+            ("text", Json::Str("not a number".into())),
+            ("null", Json::Null),
+        ]);
+        for key in ["neg", "frac", "big", "text", "null", "missing"] {
+            assert_eq!(u64_field(&j, key), None, "{key} must be rejected");
         }
     }
 

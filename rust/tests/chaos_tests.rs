@@ -1159,6 +1159,111 @@ fn chaos_prefix_same_seed_rerun_injects_identical_fault_sequence() {
 }
 
 // ---------------------------------------------------------------------------
+// tracing under chaos: one id joins router and worker, faults land on the
+// request's timeline
+
+/// `trace_id` echoed on the terminal result of one finished request.
+fn finish_and_trace_id(c: &mut Client, id: u64, what: &str) -> u64 {
+    match c.generate(&WireRequest::new(id, PROMPT, 8)).expect("transport held") {
+        GenOutcome::Done { events } => match last_event(&events) {
+            WireEvent::Finished(r) => r.trace_id,
+            other => panic!("`{what}`: request {id} did not finish: {other:?}"),
+        },
+        GenOutcome::Rejected(e) => panic!("`{what}`: request {id} rejected: {e:?}"),
+    }
+}
+
+#[test]
+fn chaos_trace_one_id_joins_router_and_worker_and_records_the_fault() {
+    serialized(|| {
+        let Some(dir) = manifest_dir() else { return };
+        recalkv::trace::enable(None).expect("trace enable");
+        // small pages so the short PROMPT fills the trie and the second
+        // request actually reaches the prefix.attach seam
+        let ecfg = EngineConfig {
+            prefix_cache_pages: 256,
+            tokens_per_block: 4,
+            ..Default::default()
+        };
+        let (waddr, coord, worker) = spawn_server(dir, ecfg, ServerConfig::default());
+        let (raddr, rstop, rthread) = spawn_router(&[waddr.clone()], quiet_router_cfg());
+        let mut c = Client::connect(&raddr).expect("router connect");
+
+        // seed the trie; the router front door mints the id, the worker
+        // honors it off the wire and echoes it on the terminal
+        let seed_tid = finish_and_trace_id(&mut c, 1, "trace seed");
+        assert_ne!(seed_tid, 0, "router front door should have minted a trace id");
+
+        // the would-be prefix hit faults on its scheduled attach; the
+        // request degrades to a cold prefill and still finishes
+        failpoint::configure("prefix.attach=err:once").expect("chaos spec parses");
+        let tid = finish_and_trace_id(&mut c, 2, "prefix.attach once under tracing");
+        let injected = failpoint::injected_total();
+        failpoint::reset();
+        assert_eq!(injected, 1, "once fires exactly once");
+        assert_ne!(tid, 0);
+        assert_ne!(tid, seed_tid, "each request gets its own trace id");
+
+        // one id, both sides: the router recorded its relay_hop span and
+        // the worker its request chain under the SAME id (the id is the
+        // join key; in-process they share the store, over TCP they share
+        // only the wire field)
+        let tl = recalkv::trace::timeline(tid).expect("timeline recorded");
+        let events = tl.as_arr().expect("timeline is an array").to_vec();
+        let find = |site: &str, kind: &str| -> Option<(f64, f64, f64)> {
+            events.iter().find_map(|e| {
+                (e.req("site").as_str() == Some(site) && e.req("kind").as_str() == Some(kind))
+                    .then(|| {
+                        let args = e.req("args").as_arr().expect("args");
+                        (num(e, &["t_us"]), num(e, &["dur_us"]), num(&args[0], &[]))
+                    })
+            })
+        };
+        let (queue_t, _, _) = find("queue", "span").expect("queue span");
+        let (prefill_t, _, _) = find("prefill", "span").expect("prefill span");
+        let (decode_t, _, _) = find("decode_step", "span").expect("decode_step span");
+        let (fin_t, _, _) = find("finished", "instant").expect("finished instant");
+        let (hop_t, hop_dur, _) = find("relay_hop", "span").expect("router-side relay_hop span");
+
+        // the worker chain is monotone, and the router's hop span brackets
+        // it (same process epoch here, so the comparison is meaningful)
+        assert!(queue_t <= prefill_t, "queue after prefill: {events:?}");
+        assert!(prefill_t <= decode_t, "prefill after decode: {events:?}");
+        assert!(decode_t <= fin_t, "decode after finished: {events:?}");
+        assert!(hop_t <= queue_t, "hop opened after the worker queued: {events:?}");
+        assert!(hop_t + hop_dur >= fin_t, "hop closed before the worker finished: {events:?}");
+
+        // the injected fault landed on this request's timeline, at its
+        // scheduled (1-based) hit index
+        let (_, _, fault_hit) =
+            find("prefix.attach", "fault").expect("fault event on the faulted timeline");
+        assert_eq!(fault_hit, 1.0, "once fires on hit 1: {events:?}");
+        // ... and not on the clean seed request's
+        let seed_tl = recalkv::trace::timeline(seed_tid).expect("seed timeline");
+        let seed_events = seed_tl.as_arr().expect("seed timeline array").to_vec();
+        assert!(
+            !seed_events.iter().any(|e| e.req("kind").as_str() == Some("fault")),
+            "clean request grew a fault event: {seed_events:?}"
+        );
+
+        // the same timeline is served over the wire by the `trace` frame
+        let spans = c.trace(tid).expect("trace frame round-trip");
+        assert_eq!(
+            spans.as_arr().map(|a| a.len()),
+            Some(events.len()),
+            "wire timeline diverged from the in-process store"
+        );
+
+        drop(c);
+        stop_router(rstop, rthread);
+        let j = await_quiescence(&waddr, "traced fleet");
+        assert_prefix_leak_free(&j, "traced fleet");
+        stop_server(&waddr, coord, worker);
+        recalkv::trace::shutdown();
+    });
+}
+
+// ---------------------------------------------------------------------------
 // wire-level garbage (no failpoints: raw malformed traffic)
 
 #[test]

@@ -145,6 +145,53 @@ else
     echo "[skip] prefix smoke: artifacts/ not built"
 fi
 
+# Trace smoke (needs artifacts/): worker and router both run with
+# --trace-out, one streamed request goes through the fan-out, and after a
+# clean shutdown (which flushes the JSONL sinks) `repro trace --check`
+# asserts the worker timeline carries the full
+# queue -> prefill -> decode_step -> finished chain and that the router
+# file saw the same trace id (the id is minted once at the router front
+# door and rides the wire; clocks differ, the id is the join key).
+if [[ -f artifacts/manifest.json ]]; then
+    TW_LOG="$(mktemp)"; TR_LOG="$(mktemp)"
+    TW_TRACE="$(mktemp)"; TR_TRACE="$(mktemp)"
+    ./target/release/repro serve --listen 127.0.0.1:0 --queue-cap 8 \
+        --trace-out "$TW_TRACE" > "$TW_LOG" 2>&1 &
+    TW_PID=$!
+    TR_PID=""
+    trap 'kill "$TW_PID" $TR_PID 2>/dev/null || true' EXIT
+    TW_ADDR="$(wait_addr "$TW_LOG" "$TW_PID")"
+    ./target/release/repro router --listen 127.0.0.1:0 --workers "$TW_ADDR" \
+        --tick-ms 25 --trace-out "$TR_TRACE" > "$TR_LOG" 2>&1 &
+    TR_PID=$!
+    TR_ADDR="$(wait_addr "$TR_LOG" "$TR_PID")"
+    ./target/release/repro client --addr "$TR_ADDR" --connections 1 --requests 1 --max-new 8
+    ./target/release/repro client --addr "$TR_ADDR" --requests 0 --shutdown
+    wait "$TR_PID"
+    ./target/release/repro client --addr "$TW_ADDR" --requests 0 --shutdown
+    wait "$TW_PID"
+    trap - EXIT
+    ./target/release/repro trace --check "$TW_TRACE" --router-file "$TR_TRACE"
+    echo "trace smoke: OK (worker $TW_TRACE, router $TR_TRACE)"
+else
+    echo "[skip] trace smoke: artifacts/ not built"
+fi
+
+# Perf-trajectory staleness: the committed BENCH_*.json files are how
+# successive PRs compare throughput. Warn (never fail) when they are
+# missing or older than the crate sources they measure.
+BENCH_STALE=0
+for b in "$REPO_ROOT"/BENCH_*.json; do
+    [[ -e "$b" ]] || { BENCH_STALE=2; break; }
+    if [[ -n "$(find "$REPO_ROOT/rust/src" "$REPO_ROOT/rust/benches" -name '*.rs' -newer "$b" 2>/dev/null | head -1)" ]]; then
+        BENCH_STALE=1
+    fi
+done
+case "$BENCH_STALE" in
+    2) echo "[warn] no BENCH_*.json at the repo root — run scripts/bench_smoke.sh and commit the JSONs" ;;
+    1) echo "[warn] BENCH_*.json older than rust sources — re-run scripts/bench_smoke.sh to refresh the perf trajectory" ;;
+esac
+
 if [[ "${1:-}" == "--bench" ]]; then
     "$REPO_ROOT/scripts/bench_smoke.sh"
 fi
